@@ -1,0 +1,98 @@
+//! End-to-end driver (the repo's validation workload, see EXPERIMENTS.md):
+//! distributed synchronized-SGD training of the paper's convolutional NN
+//! on the 60k-vector synthetic-MNIST corpus with a heterogeneous simulated
+//! fleet — workstations, laptops, and phones on different link classes —
+//! for a few hundred iterations, with real PJRT gradient computation and
+//! the loss/test-error curve logged.
+//!
+//!     cargo run --release --example mnist_scaling -- \
+//!         --nodes 8 --iters 200 --track-every 20 --csv /tmp/run.csv
+//!
+//! Flags: --model, --nodes, --iters, --t-secs, --lr, --capacity,
+//!        --train-size, --test-size, --power-scale, --mix, --csv, --seed.
+
+use mlitb::cli::Args;
+use mlitb::client::DeviceClass;
+use mlitb::runtime::Engine;
+use mlitb::sim::{SimConfig, Simulation};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "mnist_conv").to_string();
+    let nodes = args.get_usize("nodes", 8)?;
+    let iters = args.get_u64("iters", 200)?;
+
+    let mut engine = Engine::from_default_artifacts()?;
+    engine.load_model(&model)?;
+    let spec = engine.spec(&model)?.clone();
+
+    let mut cfg = SimConfig::paper_scaling(nodes, &spec);
+    cfg.iterations = iters;
+    cfg.train_size = args.get_usize("train-size", 60_000)?;
+    cfg.test_size = args.get_usize("test-size", 2_000)?;
+    cfg.track_every = args.get_u64("track-every", 20)?;
+    cfg.master.learning_rate = args.get_f64("lr", 0.03)? as f32;
+    cfg.master.iter_duration_s = args.get_f64("t-secs", 4.0)?;
+    cfg.master.capacity = args.get_usize("capacity", 3000)?;
+    cfg.power_scale = args.get_f64("power-scale", 0.1)?;
+    cfg.seed = args.get_u64("seed", 1)?;
+
+    // Heterogeneous fleet (the paper's Fig 1 scenario): default mix is
+    // half workstations, a quarter laptops, a quarter mobiles.
+    if args.get_or("mix", "hetero") == "hetero" {
+        cfg.fleet = (0..nodes)
+            .map(|i| match i % 4 {
+                0 | 1 => DeviceClass::Workstation,
+                2 => DeviceClass::Laptop,
+                _ => DeviceClass::Mobile,
+            })
+            .collect();
+    }
+
+    println!(
+        "E2E driver: {model} ({} params) | {} clients | {} iterations | T={}s | lr={}",
+        spec.param_count,
+        nodes,
+        iters,
+        cfg.master.iter_duration_s,
+        cfg.master.learning_rate,
+    );
+    let mut sim = Simulation::new(cfg, spec, &mut engine);
+    println!(
+        "corpus coverage at start: {:.1}% ({} clients)",
+        sim.coverage() * 100.0,
+        sim.n_clients()
+    );
+
+    let t0 = std::time::Instant::now();
+    let report = sim.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    drop(sim); // release the engine borrow for the stats below
+
+    println!("\niter    loss    test_err  vectors  latency_ms");
+    for r in report.timeline.records() {
+        if r.iteration % 10 == 0 || r.test_error.is_some() {
+            println!(
+                "{:>5}  {:>7}  {:>8}  {:>7}  {:>8.1}",
+                r.iteration,
+                r.loss.map_or("-".into(), |l| format!("{l:.4}")),
+                r.test_error.map_or("-".into(), |e| format!("{e:.4}")),
+                r.vectors,
+                r.mean_latency_ms
+            );
+        }
+    }
+    println!("\n{}", report.summary());
+    println!(
+        "real wall {wall:.1}s for {:.0}s virtual ({:.1}x), {} PJRT executions",
+        report.virtual_secs,
+        report.virtual_secs / wall,
+        engine.executions()
+    );
+
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.timeline.to_csv())?;
+        println!("timeline written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: train the paper's convnet on a small synthetic-MNIST corpus
+//! with a handful of simulated browser clients, then evaluate.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the 60-second tour of the public API: load the AOT artifacts
+//! (`make artifacts` first), build a [`Simulation`] around the paper's
+//! master event loop, run it, and read the timeline.
+
+use mlitb::runtime::Engine;
+use mlitb::sim::{SimConfig, Simulation};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. PJRT engine over the AOT artifacts (HLO text compiled once).
+    let mut engine = Engine::from_default_artifacts()?;
+    engine.load_model("mnist_conv")?;
+    let spec = engine.spec("mnist_conv")?.clone();
+    println!(
+        "model {}: {} params, batch {}",
+        spec.name, spec.param_count, spec.batch_size
+    );
+
+    // 2. The paper's §3.5 setup, scaled down for a quick demo:
+    //    4 LAN workstations, T = 4 s iterations, AdaGrad reduce.
+    let mut cfg = SimConfig::paper_scaling(4, &spec);
+    cfg.train_size = 4_000;
+    cfg.test_size = 640;
+    cfg.iterations = 25;
+    cfg.track_every = 5; // tracker worker evaluates every 5 iterations
+    cfg.master.capacity = 500; // data-vector cap per client
+    cfg.master.learning_rate = 0.05;
+    cfg.power_scale = 0.25; // slow the virtual devices for demo runtime
+
+    // 3. Run the master event loop.
+    let mut sim = Simulation::new(cfg, spec, &mut engine);
+    println!(
+        "training on {} clients, coverage {:.0}% of the corpus",
+        sim.n_clients(),
+        sim.coverage() * 100.0
+    );
+    let report = sim.run()?;
+
+    // 4. Inspect the timeline (what Fig 5/8 are drawn from).
+    for r in report.timeline.records() {
+        if let Some(err) = r.test_error {
+            println!(
+                "iter {:>3}: loss {:.4}  test error {:.1}%  ({} vectors, {:.0} ms latency)",
+                r.iteration,
+                r.loss.unwrap_or(f64::NAN),
+                err * 100.0,
+                r.vectors,
+                r.mean_latency_ms
+            );
+        }
+    }
+    println!("summary: {}", report.summary());
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Research closures + tracking mode (paper §2.3, §3.6, Figs 6–8):
+//! train briefly, archive the model as a JSON research closure, reload it,
+//! verify bit-exact parameters, resume training, and run the tracking-mode
+//! prediction table of Fig 7 (class-probability ranking for one image).
+//!
+//!     cargo run --release --example research_closure
+
+use mlitb::model::ResearchClosure;
+use mlitb::runtime::Engine;
+use mlitb::sim::{SimConfig, Simulation};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let model = "cifar_conv";
+    let mut engine = Engine::from_default_artifacts()?;
+    engine.load_model(model)?;
+    let spec = engine.spec(model)?.clone();
+
+    // ---- phase 1: short training run (the "researcher" of Fig 1)
+    let mut cfg = SimConfig::paper_scaling(3, &spec);
+    cfg.train_size = 3_000;
+    cfg.test_size = 320;
+    cfg.iterations = 30;
+    cfg.master.capacity = 1000;
+    cfg.master.learning_rate = 0.05;
+    cfg.power_scale = 0.15;
+    cfg.seed = 11;
+    let (params, iteration, first_loss, last_loss) = {
+        let mut sim = Simulation::new(cfg.clone(), spec.clone(), &mut engine);
+        let report = sim.run()?;
+        let first = report.timeline.records()[0].loss.unwrap();
+        let last = report.timeline.records().iter().rev().find_map(|r| r.loss).unwrap();
+        (sim.master().params().to_vec(), sim.master().iteration(), first, last)
+    };
+    println!("phase 1: trained {iteration} iterations, loss {first_loss:.3} -> {last_loss:.3}");
+
+    // ---- phase 2: archive to a JSON research closure
+    let mut closure = ResearchClosure::new(&spec, &params);
+    closure.iteration = iteration;
+    closure.learning_rate = cfg.master.learning_rate;
+    closure.iter_duration_s = cfg.master.iter_duration_s;
+    closure.notes = "research_closure example, synthetic-CIFAR".into();
+    let path = std::env::temp_dir().join("mlitb_cifar_closure.json");
+    closure.save(&path)?;
+    let size = std::fs::metadata(&path)?.len();
+    println!(
+        "phase 2: archived to {} ({:.1} KB JSON, universally readable)",
+        path.display(),
+        size as f64 / 1024.0
+    );
+
+    // ---- phase 3: reload, verify, resume ("another researcher")
+    let loaded = ResearchClosure::load(&path)?;
+    loaded.check_compatible(&spec)?;
+    assert_eq!(loaded.params, params, "closure round trip must be bit-exact");
+    println!(
+        "phase 3: reloaded closure — model '{}', {} params, iteration {}, bit-exact ✓",
+        loaded.model_name, loaded.param_count, loaded.iteration
+    );
+    let mut cfg2 = cfg.clone();
+    cfg2.iterations = 5;
+    cfg2.master.learning_rate = 0.01; // resume with a cooler step size
+    let resumed_last = {
+        let mut sim = Simulation::new(cfg2, spec.clone(), &mut engine);
+        sim.load_params(loaded.params.clone());
+        let report = sim.run()?;
+        report.timeline.records().iter().rev().find_map(|r| r.loss).unwrap()
+    };
+    println!("         resumed 5 more iterations, loss {last_loss:.3} -> {resumed_last:.3}");
+
+    // ---- phase 4: tracking mode, Fig 7 — classify one image and print
+    //      the ranked class-probability table.
+    let synth = mlitb::data::Synthesizer::new(mlitb::data::SynthSpec::cifar(11 ^ 0xDA7A));
+    let true_label = 7u8;
+    let sample = synth.sample(true_label, 123_456);
+    let mut batch = mlitb::runtime::BatchBuilder::new(spec.batch_size, spec.input_len());
+    batch.fill_cyclic(&[std::sync::Arc::new(sample)], 0);
+    let probs = engine.predict(model, &loaded.params, batch.images())?;
+    let row = &probs[..spec.classes];
+    let mut ranked: Vec<(usize, f32)> = row.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\nphase 4: tracking mode — Fig 7 table (true class: {true_label})");
+    println!("  Index  Label     Probability");
+    for (idx, p) in ranked.iter().take(4) {
+        println!("  {:>5}  class_{:<3} {:.6}", idx, idx, p);
+    }
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

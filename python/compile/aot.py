@@ -1,0 +1,130 @@
+"""AOT compile path: lower the L2 models to HLO *text* + manifest.json.
+
+This is the only Python that ever runs; ``make artifacts`` invokes it once
+and the Rust binary is self-contained afterwards.  Interchange is HLO text,
+NOT a serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 (what the published ``xla`` crate
+binds) rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts per model variant (batch size fixed at compile time):
+    grad_<name>.hlo.txt     (flat[P], x[B,H,W,C], y[B] i32) -> (g[P], loss_sum, correct)
+    eval_<name>.hlo.txt     (flat[P], x, y)                 -> (loss_sum, correct)
+    predict_<name>.hlo.txt  (flat[P], x)                    -> (probs[B,classes],)
+plus ``manifest.json`` describing shapes, parameter layout and fan-in so the
+Rust side can allocate, initialize, and marshal buffers without Python.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(m: M.ModelDef, batch: int):
+    """Lower grad/eval/predict for one model; return {kind: hlo_text}."""
+    h, w, c = m.input_shape
+    flat_spec = jax.ShapeDtypeStruct((m.param_count,), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+    grad_fn = M.make_grad_fn(m)
+    eval_fn = M.make_eval_fn(m)
+    pred_fn = M.make_predict_fn(m)
+
+    return {
+        "grad": to_hlo_text(jax.jit(grad_fn).lower(flat_spec, x_spec, y_spec)),
+        "eval": to_hlo_text(jax.jit(eval_fn).lower(flat_spec, x_spec, y_spec)),
+        "predict": to_hlo_text(jax.jit(pred_fn).lower(flat_spec, x_spec)),
+    }
+
+
+# Extra microbatch sizes compiled for grad/eval: heterogeneous devices pick
+# their work quantum (§3.3d — the paper's mobiles compute "only a few
+# gradients per second"; a B=32-only artifact would force 16 s of compute
+# on them and blow the sync barrier).
+MICRO_BATCHES = [8, 1]
+
+
+def emit(out_dir: str, names, batch: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "batch_size": batch, "models": {}}
+    for name in names:
+        m = M.build(name)
+        entry = {
+            "param_count": m.param_count,
+            "batch_size": batch,
+            "micro_batches": [batch] + MICRO_BATCHES,
+            "input": list(m.input_shape),
+            "classes": m.classes,
+            "layers": m.layers,
+            "tensors": [
+                {
+                    "name": t.name,
+                    "shape": list(t.shape),
+                    "offset": t.offset,
+                    "size": t.size,
+                    "fan_in": t.fan_in,
+                }
+                for t in m.tensors
+            ],
+            "artifacts": {},
+        }
+
+        def write_artifact(kind_key: str, text: str):
+            fname = f"{kind_key}_{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry["artifacts"][kind_key] = {
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+            print(f"  wrote {fname}: {len(text)} chars")
+
+        for kind, text in lower_model(m, batch).items():
+            write_artifact(kind, text)
+        for b in MICRO_BATCHES:
+            arts = lower_model(m, b)
+            for kind in ("grad", "eval"):
+                write_artifact(f"{kind}_b{b}", arts[kind])
+        manifest["models"][name] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"wrote manifest.json ({len(names)} models, batches {[batch] + MICRO_BATCHES})"
+    )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="MLitB AOT artifact builder")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=M.DEFAULT_BATCH)
+    ap.add_argument(
+        "--models",
+        nargs="*",
+        default=list(M.MODELS.keys()),
+        choices=list(M.MODELS.keys()),
+    )
+    args = ap.parse_args()
+    emit(args.out_dir, args.models, args.batch)
+
+
+if __name__ == "__main__":
+    main()

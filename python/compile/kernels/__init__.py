@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the MLitB compute hot-spot (matmul / im2col conv).
+
+All kernels use ``interpret=True`` so the lowered HLO runs on the CPU PJRT
+client that the Rust runtime drives; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .conv2d import conv2d, maxpool2
+from .matmul import matmul
+
+__all__ = ["matmul", "conv2d", "maxpool2"]

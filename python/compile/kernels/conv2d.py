@@ -1,0 +1,55 @@
+"""L1 conv2d: im2col + the Pallas matmul kernel.
+
+The paper's use-case NN is ``28×28 input → 16 conv filters (with pooling) →
+fully-connected output`` (§3.5 footnote 6).  The paper found that "naive
+convolution implementations significantly slow performance" (§3.7); the
+classical fix — and the one GPU/TPU libraries use — is lowering convolution
+to a matrix product over extracted patches (im2col), which maps the hot
+loop onto the systolic-array matmul of ``matmul.py``.
+
+Patch extraction itself is plain JAX (cheap data movement, differentiable
+through the standard transpose rule); every FLOP-heavy contraction goes
+through the Pallas kernel, forward and backward.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _extract_patches(x, kh: int, kw: int):
+    """NHWC ``x`` → patches ``[B, H-kh+1, W-kw+1, kh*kw*C]`` (VALID, stride 1).
+
+    Implemented as a stack of shifted slices: for the 5×5 kernels used here
+    that is 25 static slices, which XLA fuses into a single gather-free
+    loop nest — considerably cheaper than a general gather.
+    """
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + oh, j : j + ow, :])
+    # [B, OH, OW, kh*kw, C] -> [B, OH, OW, kh*kw*C]
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d(x, w, b):
+    """VALID 2-D convolution, stride 1, NHWC × HWIO → NHWC.
+
+    ``x``: [B, H, W, C]; ``w``: [KH, KW, C, F]; ``b``: [F].
+    All contraction FLOPs run on the Pallas matmul kernel.
+    """
+    kh, kw, c, f = w.shape
+    patches = _extract_patches(x, kh, kw)
+    bsz, oh, ow, k = patches.shape
+    out = matmul(patches.reshape(bsz * oh * ow, k), w.reshape(kh * kw * c, f))
+    return out.reshape(bsz, oh, ow, f) + b
+
+
+def maxpool2(x):
+    """2×2 max pooling, stride 2, NHWC.  H and W must be even."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))

@@ -1,0 +1,115 @@
+"""L1 Pallas matmul kernel — the compute hot spot of MLitB's neural nets.
+
+The paper's §3.7 notes that "naive convolution implementations significantly
+slow performance" and §5 calls for near-native kernels.  This is the TPU
+rethink: a tiled matmul targeting the MXU systolic array, with BlockSpecs
+expressing the HBM→VMEM schedule.  It is used by both the fully-connected
+layers and the im2col formulation of the convolutional layers (see
+``conv2d.py``), in the forward *and* backward pass (via ``jax.custom_vjp``:
+Pallas calls are not auto-differentiable, so the VJP is written explicitly
+in terms of the same kernel).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime.  Real-TPU perf is *estimated* from the
+BlockSpec tiling in DESIGN.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size policy.  The K dimension is kept whole per block (our K's are
+# 16–25k floats), M is tiled only when it must be.  Two constraints:
+#   * VMEM: x-block (bm×K) + w-block (K×bn) + accumulator (bm×bn) must fit
+#     the ~16 MB VMEM budget — we allow the x-block up to 8 MB.
+#   * Grid size: every grid step is one HBM→VMEM round trip (and, under
+#     interpret=True, one dispatched outer-loop iteration — measured at
+#     ~2.3 ms/step on the CPU path, see EXPERIMENTS.md §Perf).  So the
+#     policy is: the largest M-block that fits the VMEM budget, i.e.
+#     grid=1 for every shape in the model zoo (the biggest, the CIFAR
+#     im2col at 25 088×75 f32, is a 7.5 MB block).  Tiling kicks in
+#     automatically beyond the budget.
+BLOCK_N = 128
+VMEM_X_BUDGET = 8 << 20  # bytes for the x-block
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_block_m(m: int, k: int) -> int:
+    """Largest M-block meeting the VMEM budget, 8-row sublane aligned."""
+    cap_vmem = max(8, (VMEM_X_BUDGET // 4) // max(k, 1))
+    bm = min(m, cap_vmem)
+    return max(8, _cdiv(bm, 8) * 8)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """One (BLOCK_M, K) × (K, BLOCK_N) tile product on the MXU.
+
+    ``preferred_element_type=float32`` pins the MXU accumulator to f32
+    regardless of input dtype (bf16 inputs would still accumulate in f32).
+    """
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n"))
+def _matmul_impl(x, w, block_m: int | None = None, block_n: int = BLOCK_N):
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N) in f32.
+
+    M and N are padded up to tile multiples (Pallas masking of partial
+    blocks is backend-dependent; explicit zero-padding is deterministic
+    and the pad/slice fuses away in XLA).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {k} vs {k2}"
+    bm = block_m if block_m is not None else pick_block_m(m, k)
+    bm = min(bm, _cdiv(m, 8) * 8)
+    bn = min(block_n, n) if n < block_n else block_n
+    mp = _cdiv(m, bm) * bm
+    np_ = _cdiv(n, bn) * bn
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    if mp != m or np_ != n:
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable Pallas matmul (f32): ``x @ w``.
+
+    Forward and both cotangent products run through the same tiled kernel,
+    so the backward pass is Pallas-accelerated too:
+        dX = dY @ Wᵀ,  dW = Xᵀ @ dY.
+    """
+    return _matmul_impl(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return _matmul_impl(g, w.T), _matmul_impl(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package must agree with its reference here to within
+float32 tolerance; ``python/tests/test_kernel.py`` sweeps shapes and dtypes
+with hypothesis and asserts ``allclose``.  These references are also the
+"naive implementation" baseline the paper complains about in §3.7 — the
+micro benches compare kernel-vs-ref structure.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain jnp matmul in f32."""
+    return jnp.matmul(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv2d_ref(x, w, b):
+    """VALID stride-1 NHWC conv via lax.conv_general_dilated."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def maxpool2_ref(x):
+    """2×2/2 max pool via reduce_window."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )

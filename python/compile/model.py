@@ -1,0 +1,278 @@
+"""L2: MLitB neural-network models in JAX, calling the L1 Pallas kernels.
+
+The paper's use-case model (§3.5, footnote 6) is a convolutional NN:
+``28×28 input → 16 conv filters (5×5, with 2×2 pooling) → fully-connected
+softmax output``.  We implement that exactly (``mnist_conv``), plus the
+CIFAR-shaped variant used by the tracking-mode experiment (``cifar_conv``,
+Figs 6–8), an MLP (``mnist_mlp``, the "without convolutions" configuration
+§3.7 measures on mobile devices), and a wider extension model.
+
+Design decisions shared with the Rust L3 layer:
+
+* **Flat parameter vector.**  All parameters live in one f32 vector, packed
+  in declaration order.  The paper broadcasts "an array of model
+  parameters" (§3.3e) and the reduce step sums gradient arrays — a flat
+  vector makes the Rust-side reduce/AdaGrad a dense axpy loop and the
+  research closure a single JSON array.  ``unpack`` slices are static, so
+  XLA fuses them away.
+* **Sum (not mean) losses.**  ``grad`` returns the *sum* of per-example
+  gradient contributions plus the example count; the master computes the
+  weighted average across heterogeneous client batch counts (§3.6
+  "weighted average of gradients from all workers").
+* **Fixed microbatch.**  Artifacts are compiled for a fixed batch B; a
+  client runs as many microbatches as fit its time budget (§3.3d: clients
+  have no batch size, they clock their own computation).
+
+Layer-spec schema (mirrored by ``rust/src/model``):
+    {"type": "conv",  "kh": 5, "kw": 5, "filters": 16}
+    {"type": "relu"} | {"type": "pool2"} | {"type": "flatten"}
+    {"type": "fc",   "units": 10}
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, matmul, maxpool2
+
+# --------------------------------------------------------------------------
+# Model zoo (paper §2.3 "model zoos"): name -> (input shape, classes, layers)
+# --------------------------------------------------------------------------
+
+MODELS = {
+    # The paper's scaling-experiment network (§3.5 footnote 6).
+    "mnist_conv": {
+        "input": (28, 28, 1),
+        "classes": 10,
+        "layers": [
+            {"type": "conv", "kh": 5, "kw": 5, "filters": 16},
+            {"type": "relu"},
+            {"type": "pool2"},
+            {"type": "flatten"},
+            {"type": "fc", "units": 10},
+        ],
+    },
+    # The tracking-mode CIFAR-10 network (Figs 6-8).
+    "cifar_conv": {
+        "input": (32, 32, 3),
+        "classes": 10,
+        "layers": [
+            {"type": "conv", "kh": 5, "kw": 5, "filters": 16},
+            {"type": "relu"},
+            {"type": "pool2"},
+            {"type": "flatten"},
+            {"type": "fc", "units": 10},
+        ],
+    },
+    # "Without convolutions" mobile configuration (§3.7).
+    "mnist_mlp": {
+        "input": (28, 28, 1),
+        "classes": 10,
+        "layers": [
+            {"type": "flatten"},
+            {"type": "fc", "units": 128},
+            {"type": "relu"},
+            {"type": "fc", "units": 10},
+        ],
+    },
+    # Extension: a deeper net exercising stacked conv + wider FC, used by
+    # the bandwidth/partial-gradient ablations (bigger parameter vector).
+    "convnet_wide": {
+        "input": (28, 28, 1),
+        "classes": 10,
+        "layers": [
+            {"type": "conv", "kh": 5, "kw": 5, "filters": 16},
+            {"type": "relu"},
+            {"type": "pool2"},
+            {"type": "conv", "kh": 3, "kw": 3, "filters": 32},
+            {"type": "relu"},
+            {"type": "pool2"},
+            {"type": "flatten"},
+            {"type": "fc", "units": 64},
+            {"type": "relu"},
+            {"type": "fc", "units": 10},
+        ],
+    },
+}
+
+DEFAULT_BATCH = 32
+
+
+@dataclass
+class TensorSpec:
+    """One parameter tensor inside the flat vector."""
+
+    name: str
+    shape: tuple
+    offset: int
+    fan_in: int  # for init scaling on the Rust side
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclass
+class ModelDef:
+    """A fully-resolved model: layer specs + parameter layout."""
+
+    name: str
+    input_shape: tuple
+    classes: int
+    layers: list
+    tensors: list = field(default_factory=list)
+
+    @property
+    def param_count(self) -> int:
+        return sum(t.size for t in self.tensors)
+
+
+def build(name: str) -> ModelDef:
+    """Resolve a model-zoo entry into a ModelDef with parameter layout."""
+    cfg = MODELS[name]
+    m = ModelDef(
+        name=name,
+        input_shape=tuple(cfg["input"]),
+        classes=cfg["classes"],
+        layers=cfg["layers"],
+    )
+    h, w, c = m.input_shape
+    offset = 0
+    flat = None
+    for i, layer in enumerate(m.layers):
+        t = layer["type"]
+        if t == "conv":
+            kh, kw, f = layer["kh"], layer["kw"], layer["filters"]
+            fan_in = kh * kw * c
+            for suffix, shape in (("w", (kh, kw, c, f)), ("b", (f,))):
+                ts = TensorSpec(f"l{i}_conv_{suffix}", shape, offset, fan_in)
+                m.tensors.append(ts)
+                offset += ts.size
+            h, w, c = h - kh + 1, w - kw + 1, f
+        elif t == "pool2":
+            assert h % 2 == 0 and w % 2 == 0, f"pool2 needs even dims, got {h}x{w}"
+            h, w = h // 2, w // 2
+        elif t == "flatten":
+            flat = h * w * c
+        elif t == "fc":
+            assert flat is not None, "fc requires a preceding flatten"
+            units = layer["units"]
+            for suffix, shape in (("w", (flat, units)), ("b", (units,))):
+                ts = TensorSpec(f"l{i}_fc_{suffix}", shape, offset, flat)
+                m.tensors.append(ts)
+                offset += ts.size
+            flat = units
+        elif t == "relu":
+            pass
+        else:
+            raise ValueError(f"unknown layer type {t!r}")
+    assert flat == m.classes, f"{name}: final width {flat} != classes {m.classes}"
+    return m
+
+
+def unpack(m: ModelDef, flat):
+    """Flat f32 vector -> dict of named parameter tensors (static slices)."""
+    out = {}
+    for t in m.tensors:
+        out[t.name] = jax.lax.slice(flat, (t.offset,), (t.offset + t.size,)).reshape(
+            t.shape
+        )
+    return out
+
+
+def forward(m: ModelDef, flat, x):
+    """Forward pass: NHWC batch -> logits [B, classes].
+
+    Conv and FC contractions run on the L1 Pallas matmul kernel.
+    """
+    p = unpack(m, flat)
+    act = x
+    feat = None  # flattened activation once past `flatten`
+    for i, layer in enumerate(m.layers):
+        t = layer["type"]
+        if t == "conv":
+            act = conv2d(act, p[f"l{i}_conv_w"], p[f"l{i}_conv_b"])
+        elif t == "relu":
+            if feat is None:
+                act = jnp.maximum(act, 0.0)
+            else:
+                feat = jnp.maximum(feat, 0.0)
+        elif t == "pool2":
+            act = maxpool2(act)
+        elif t == "flatten":
+            feat = act.reshape(act.shape[0], -1)
+        elif t == "fc":
+            feat = matmul(feat, p[f"l{i}_fc_w"]) + p[f"l{i}_fc_b"]
+    return feat
+
+
+def loss_and_stats(m: ModelDef, flat, x, y):
+    """Softmax cross-entropy.
+
+    Returns ``(loss_sum, correct)`` — *sums* over the batch so the master's
+    reduce step can weight heterogeneous client contributions by count.
+    """
+    logits = forward(m, flat, x)
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    loss_sum = jnp.sum(logz - picked)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss_sum, correct
+
+
+def make_grad_fn(m: ModelDef):
+    """(flat, x, y) -> (grad_flat, loss_sum, correct).  All f32."""
+
+    def loss_fn(flat, x, y):
+        loss_sum, correct = loss_and_stats(m, flat, x, y)
+        return loss_sum, correct
+
+    def grad_fn(flat, x, y):
+        (loss_sum, correct), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            flat, x, y
+        )
+        return g, loss_sum, correct
+
+    return grad_fn
+
+
+def make_eval_fn(m: ModelDef):
+    """(flat, x, y) -> (loss_sum, correct)."""
+
+    def eval_fn(flat, x, y):
+        return loss_and_stats(m, flat, x, y)
+
+    return eval_fn
+
+
+def make_predict_fn(m: ModelDef):
+    """(flat, x) -> class probabilities [B, classes]."""
+
+    def predict_fn(flat, x):
+        return (jax.nn.softmax(forward(m, flat, x), axis=1),)
+
+    return predict_fn
+
+
+def init_params(m: ModelDef, seed: int = 0):
+    """Reference initializer (LeCun normal for weights, zero biases).
+
+    The Rust side re-implements this layout-compatibly from the manifest
+    (same fan-in scaling); this version backs the python tests.
+    """
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for t in m.tensors:
+        key, sub = jax.random.split(key)
+        if t.name.endswith("_b"):
+            chunks.append(jnp.zeros((t.size,), jnp.float32))
+        else:
+            scale = 1.0 / jnp.sqrt(float(t.fan_in))
+            chunks.append(
+                jax.random.normal(sub, (t.size,), jnp.float32) * scale
+            )
+    return jnp.concatenate(chunks)

@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.  This is
+the CORE correctness signal for the compute layer — everything the Rust
+runtime executes flows through these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, matmul, maxpool2
+from compile.kernels.matmul import _matmul_impl
+from compile.kernels.ref import conv2d_ref, matmul_ref, maxpool2_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- matmul --
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul(x, w), matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (128, 128, 128),  # exactly one tile
+        (129, 64, 129),  # one row/col past a tile boundary
+        (127, 25, 10),  # partial tiles on both axes (conv shapes)
+        (32, 2304, 10),  # the FC layer of mnist_conv
+        (256, 17, 3),
+    ],
+)
+def test_matmul_tile_boundaries(m, k, n):
+    x = rand(0, (m, k))
+    w = rand(1, (k, n))
+    np.testing.assert_allclose(matmul(x, w), matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_m", [8, 64, 128])
+def test_matmul_explicit_small_blocks_force_grid(block_m):
+    """The multi-block grid path (used when shapes exceed the VMEM budget)
+    must agree with the reference even though the default policy picks
+    grid=1 for model-zoo shapes."""
+    x = rand(4, (300, 20))
+    w = rand(5, (20, 40))
+    out = _matmul_impl(x, w, block_m=block_m)
+    np.testing.assert_allclose(out, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_pick_block_m_policy():
+    from compile.kernels.matmul import pick_block_m, VMEM_X_BUDGET
+
+    # fits budget -> single block covering M (8-aligned)
+    assert pick_block_m(25088, 75) == 25088
+    assert pick_block_m(30, 10) == 32
+    # beyond budget -> capped by VMEM
+    big_k = 10_000
+    bm = pick_block_m(1_000_000, big_k)
+    assert bm * big_k * 4 <= VMEM_X_BUDGET + 8 * big_k * 4
+    assert bm % 8 == 0
+
+
+def test_matmul_zero_inputs():
+    x = jnp.zeros((33, 7))
+    w = jnp.zeros((7, 5))
+    np.testing.assert_array_equal(matmul(x, w), jnp.zeros((33, 5)))
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    x = rand(2, (64, 32)).astype(jnp.bfloat16)
+    w = rand(3, (32, 16)).astype(jnp.bfloat16)
+    out = _matmul_impl(x.astype(jnp.float32), w.astype(jnp.float32))
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, matmul_ref(x, w), rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 48), k=st.integers(1, 24), n=st.integers(1, 24))
+def test_matmul_gradients_match_ref(m, k, n):
+    """custom_vjp backward (Pallas) == autodiff of the jnp reference."""
+    x = rand(10, (m, k))
+    w = rand(11, (k, n))
+
+    def f_kernel(x, w):
+        return jnp.sum(jnp.sin(matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(matmul_ref(x, w)))
+
+    gx_k, gw_k = jax.grad(f_kernel, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gw_k, gw_r, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- conv2d --
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.integers(6, 16),
+    c=st.sampled_from([1, 3]),
+    f=st.sampled_from([4, 16]),
+    kk=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(b, hw, c, f, kk, seed):
+    x = rand(seed, (b, hw, hw, c))
+    w = rand(seed + 1, (kk, kk, c, f))
+    bias = rand(seed + 2, (f,))
+    np.testing.assert_allclose(
+        conv2d(x, w, bias), conv2d_ref(x, w, bias), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_conv2d_paper_shapes_mnist():
+    """The paper's exact layer: 28x28x1, 16 filters of 5x5."""
+    x = rand(7, (2, 28, 28, 1))
+    w = rand(8, (5, 5, 1, 16))
+    b = rand(9, (16,))
+    out = conv2d(x, w, b)
+    assert out.shape == (2, 24, 24, 16)
+    np.testing.assert_allclose(out, conv2d_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_gradients_match_ref():
+    x = rand(20, (2, 10, 10, 3))
+    w = rand(21, (3, 3, 3, 4))
+    b = rand(22, (4,))
+
+    def f_kernel(x, w, b):
+        return jnp.sum(conv2d(x, w, b) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(conv2d_ref(x, w, b) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- maxpool --
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([2, 4, 8, 12, 24]),
+    c=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(b, h, c, seed):
+    x = rand(seed, (b, h, h, c))
+    np.testing.assert_allclose(maxpool2(x), maxpool2_ref(x))
+
+
+def test_maxpool_selects_max():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    out = maxpool2(x)
+    np.testing.assert_array_equal(out[0, :, :, 0], jnp.array([[5.0, 7.0], [13.0, 15.0]]))

@@ -1,0 +1,138 @@
+"""L2 model correctness: layouts, shapes, gradients, and trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------- layout ----
+
+
+@pytest.mark.parametrize("name", list(M.MODELS.keys()))
+def test_param_layout_contiguous(name):
+    m = M.build(name)
+    offset = 0
+    for t in m.tensors:
+        assert t.offset == offset, f"{t.name} offset gap"
+        offset += t.size
+    assert m.param_count == offset
+
+
+def test_paper_model_param_count():
+    """mnist_conv: conv 5*5*1*16+16 = 416, fc 12*12*16*10+10 = 23050."""
+    m = M.build("mnist_conv")
+    assert m.param_count == 416 + 23050
+
+
+def test_cifar_model_param_count():
+    m = M.build("cifar_conv")
+    # conv 5*5*3*16+16 = 1216 ; fc 14*14*16*10+10 = 31370
+    assert m.param_count == 1216 + 31370
+
+
+def test_unpack_roundtrip():
+    m = M.build("mnist_mlp")
+    flat = jnp.arange(m.param_count, dtype=jnp.float32)
+    parts = M.unpack(m, flat)
+    rebuilt = jnp.concatenate(
+        [parts[t.name].reshape(-1) for t in m.tensors]
+    )
+    np.testing.assert_array_equal(rebuilt, flat)
+
+
+# ------------------------------------------------------------- forward ---
+
+
+@pytest.mark.parametrize("name", list(M.MODELS.keys()))
+def test_forward_shapes(name):
+    m = M.build(name)
+    flat = M.init_params(m, seed=0)
+    h, w, c = m.input_shape
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, h, w, c))
+    logits = M.forward(m, flat, x)
+    assert logits.shape == (4, m.classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_predict_probabilities_normalized():
+    m = M.build("mnist_conv")
+    flat = M.init_params(m, seed=3)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 28, 28, 1))
+    (probs,) = M.make_predict_fn(m)(flat, x)
+    np.testing.assert_allclose(jnp.sum(probs, axis=1), jnp.ones(5), rtol=1e-5)
+    assert bool(jnp.all(probs >= 0))
+
+
+def test_loss_at_init_near_log_classes():
+    """Random init → uniform-ish predictions → loss ≈ ln(10) per example."""
+    m = M.build("mnist_mlp")
+    flat = M.init_params(m, seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(4), (64, 28, 28, 1)) * 0.1
+    y = jnp.zeros((64,), jnp.int32)
+    loss_sum, _ = M.loss_and_stats(m, flat, x, y)
+    per_ex = float(loss_sum) / 64
+    assert abs(per_ex - np.log(10)) < 0.5
+
+
+# ------------------------------------------------------------ gradients --
+
+
+def test_grad_matches_finite_difference():
+    m = M.build("mnist_mlp")
+    flat = M.init_params(m, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 28, 28, 1))
+    y = jnp.array([3, 7], jnp.int32)
+    g, loss_sum, _ = M.make_grad_fn(m)(flat, x, y)
+    # probe a few coordinates with central differences
+    rng = np.random.RandomState(0)
+    idxs = rng.randint(0, m.param_count, size=6)
+    eps = 1e-3
+    for i in idxs:
+        e = jnp.zeros_like(flat).at[i].set(eps)
+        lp, _ = M.loss_and_stats(m, flat + e, x, y)
+        lm, _ = M.loss_and_stats(m, flat - e, x, y)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        assert abs(fd - float(g[i])) < 5e-2 * max(1.0, abs(fd)), (
+            f"coord {i}: fd={fd} grad={float(g[i])}"
+        )
+
+
+def test_grad_is_sum_over_batch():
+    """grad(batch) == grad(ex0) + grad(ex1): reduce-step weighting relies on it."""
+    m = M.build("mnist_mlp")
+    flat = M.init_params(m, seed=2)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 28, 28, 1))
+    y = jnp.array([1, 8], jnp.int32)
+    gfn = M.make_grad_fn(m)
+    g_both, loss_both, _ = gfn(flat, x, y)
+    g0, l0, _ = gfn(flat, x[:1], y[:1])
+    g1, l1, _ = gfn(flat, x[1:], y[1:])
+    np.testing.assert_allclose(g_both, g0 + g1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(loss_both), float(l0) + float(l1), rtol=1e-5)
+
+
+# ---------------------------------------------------------- trainability --
+
+
+@pytest.mark.parametrize("name", ["mnist_mlp", "mnist_conv"])
+def test_sgd_reduces_loss(name):
+    """A few plain-SGD steps on a fixed batch must reduce the loss."""
+    m = M.build(name)
+    flat = M.init_params(m, seed=0)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (16,) + m.input_shape) * 0.5
+    y = jax.random.randint(jax.random.PRNGKey(8), (16,), 0, m.classes)
+    gfn = jax.jit(M.make_grad_fn(m))
+    loss0 = None
+    for step in range(8):
+        g, loss_sum, _ = gfn(flat, x, y)
+        if loss0 is None:
+            loss0 = float(loss_sum)
+        flat = flat - 0.05 * g / 16.0
+    lossN, _ = M.loss_and_stats(m, flat, x, y)
+    assert float(lossN) < loss0 * 0.9, f"{loss0} -> {float(lossN)}"

@@ -1,0 +1,82 @@
+//! Fig 4 reproduction: effects of scaling on power and latency.
+//!
+//! "Power — measured as the number of data vectors processed per second —
+//! scales linearly until 64 nodes, when the increase in latency jumps."
+//! (§3.5).  The sweep doubles the fleet 1→96 and reports power (vectors/s)
+//! and mean slave↔master latency per node count, plus the ideal-linear
+//! column the paper draws in grey.
+//!
+//! Coordination throughput is what's under test, so gradients are modeled
+//! (see DESIGN.md); the latency knee comes from the calibrated master
+//! ingestion model (serial drain of ~94 KB gradient messages).
+//!
+//!     cargo bench --bench fig4_scaling            # paper sweep to 96
+//!     cargo bench --bench fig4_scaling -- --fast  # fewer points
+
+use mlitb::metrics::Table;
+use mlitb::model::Manifest;
+use mlitb::runtime::ModeledCompute;
+use mlitb::sim::{SimConfig, Simulation};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let nodes: Vec<usize> = if fast {
+        vec![1, 4, 16, 64, 96]
+    } else {
+        vec![1, 2, 4, 8, 16, 32, 48, 64, 80, 96]
+    };
+    let iters = if fast { 10 } else { 25 };
+
+    let manifest = Manifest::load_default().expect("run `make artifacts`");
+    let spec = manifest.model("mnist_conv").expect("mnist_conv").clone();
+    println!(
+        "Fig 4: paper scaling experiment — {} ({} params, {:.1} KB gradient msg), T=4s, {iters} iters/point\n",
+        spec.name,
+        spec.param_count,
+        spec.grad_message_bytes() as f64 / 1024.0
+    );
+
+    let mut table = Table::new(
+        "Fig 4 — power & latency vs fleet size",
+        &[
+            "nodes",
+            "power (vec/s)",
+            "ideal linear",
+            "efficiency",
+            "mean latency (ms)",
+            "max latency (ms)",
+        ],
+    );
+    let mut per_node_power = None;
+    for &n in &nodes {
+        let mut cfg = SimConfig::paper_scaling(n, &spec);
+        cfg.iterations = iters;
+        cfg.seed = 4;
+        let mut compute = ModeledCompute {
+            param_count: spec.param_count,
+        };
+        let mut sim = Simulation::new(cfg, spec.clone(), &mut compute);
+        let report = sim.run().expect("sim run");
+        let per_node = per_node_power.get_or_insert(report.power_vps / n as f64);
+        let ideal = *per_node * n as f64;
+        let max_lat = report
+            .timeline
+            .records()
+            .iter()
+            .map(|r| r.max_latency_ms)
+            .fold(0.0f64, f64::max);
+        table.row(vec![
+            n.to_string(),
+            format!("{:.0}", report.power_vps),
+            format!("{:.0}", ideal),
+            format!("{:.2}", report.power_vps / ideal),
+            format!("{:.1}", report.mean_latency_ms),
+            format!("{:.1}", max_lat),
+        ]);
+    }
+    table.print();
+    println!(
+        "expected shape (paper): efficiency ≈1.0 through 64 nodes, then latency jumps\n\
+         and power gains flatten as the single master saturates."
+    );
+}

@@ -1,0 +1,65 @@
+//! Fig 8 reproduction: tracking mode — classification error over updates.
+//!
+//! "A test dataset can be loaded and its classification error rate tracked
+//! over iterations; here using a NN trained on CIFAR-10." (§3.6, Fig 8).
+//! A tracker worker re-evaluates the test set after each broadcast; the
+//! bench prints the error series for the synthetic-CIFAR convnet — the
+//! same monotone-decreasing-with-noise curve the paper shows over its
+//! first ~600 updates (scaled here to keep the run in CI time).
+//!
+//!     cargo bench --bench fig8_tracking             # 120 iterations
+//!     cargo bench --bench fig8_tracking -- --fast   # 30 iterations
+
+use mlitb::metrics::Table;
+use mlitb::runtime::Engine;
+use mlitb::sim::{SimConfig, Simulation};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let iters: u64 = if fast { 30 } else { 120 };
+    let track_every: u64 = if fast { 5 } else { 10 };
+
+    let mut engine = Engine::from_default_artifacts().expect("run `make artifacts`");
+    engine.load_model("cifar_conv").expect("compile model");
+    let spec = engine.spec("cifar_conv").unwrap().clone();
+
+    println!(
+        "Fig 8: tracking-mode classification error, {} ({} params), {iters} updates\n",
+        spec.name, spec.param_count
+    );
+    let mut cfg = SimConfig::paper_scaling(4, &spec);
+    cfg.iterations = iters;
+    cfg.train_size = 8_000;
+    cfg.test_size = 640;
+    cfg.master.capacity = 2_000;
+    cfg.master.learning_rate = 0.05;
+    cfg.track_every = track_every;
+    cfg.power_scale = 0.12;
+    cfg.seed = 8;
+
+    let mut sim = Simulation::new(cfg, spec.clone(), &mut engine);
+    let report = sim.run().expect("sim run");
+
+    let mut table = Table::new(
+        "Fig 8 — test error vs parameter updates (tracker worker)",
+        &["iteration", "test error", "train loss"],
+    );
+    let mut series = Vec::new();
+    for r in report.timeline.records() {
+        if let Some(err) = r.test_error {
+            series.push(err);
+            table.row(vec![
+                r.iteration.to_string(),
+                format!("{err:.4}"),
+                r.loss.map_or("-".into(), |l| format!("{l:.4}")),
+            ]);
+        }
+    }
+    table.print();
+    let first = series.first().copied().unwrap_or(f64::NAN);
+    let last = series.last().copied().unwrap_or(f64::NAN);
+    println!(
+        "expected shape (paper): error decreases over updates; got {first:.3} -> {last:.3} ({})",
+        if last < first { "decreasing ✓" } else { "NOT decreasing ✗" }
+    );
+}

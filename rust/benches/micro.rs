@@ -1,0 +1,131 @@
+//! Micro benchmarks over the L3 hot paths (and the PJRT execution costs
+//! that calibrate the simulation's device model):
+//!
+//!   * reduce-step kernels: gradient merge (axpy), weighted average,
+//!     AdaGrad step — the per-iteration master cost behind the Fig 4 knee
+//!   * payload sparsification (partial gradients)
+//!   * JSON closure serialize/parse (research-closure cost)
+//!   * zip archive build/read + data-server serve
+//!   * PJRT grad/eval execution per model (the real per-batch cost)
+//!
+//!     cargo bench --bench micro             # everything
+//!     cargo bench --bench micro -- --fast   # skip PJRT section
+
+use mlitb::bench::{bench, black_box, fmt_ns};
+use mlitb::coordinator::Payload;
+use mlitb::data::{build_archive, read_archive, DataServer, SynthSpec, Synthesizer};
+use mlitb::model::{init_params, Manifest, ResearchClosure};
+use mlitb::params::{AdaGrad, GradAccumulator, Optimizer};
+use mlitb::rng::Pcg32;
+use mlitb::runtime::{BatchBuilder, Engine};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let manifest = Manifest::load_default().expect("run `make artifacts`");
+    let spec = manifest.model("mnist_conv").unwrap().clone();
+    let p = spec.param_count;
+
+    println!("== reduce-step kernels ({p} params ≙ mnist_conv) ==");
+    let mut rng = Pcg32::new(1);
+    let grad: Vec<f32> = (0..p).map(|_| rng.gen_f32() - 0.5).collect();
+    let mut acc = GradAccumulator::new(p);
+    let r = bench("grad merge (add, 1 worker msg)", 10, 200, || {
+        acc.add(&grad, 32);
+    });
+    println!("{}", r.report());
+    println!(
+        "    -> {:.2} ns/param (MasterModel.merge_ns_per_param calibration)",
+        r.median_ns() / p as f64
+    );
+    let mut avg = vec![0.0f32; p];
+    let r = bench("weighted average (into)", 10, 200, || {
+        acc.weighted_average_into(&mut avg);
+    });
+    println!("{}", r.report());
+    let mut opt = AdaGrad::new(p, 0.01, 1e-8);
+    let mut params: Vec<f32> = vec![0.0; p];
+    let r = bench("AdaGrad step", 10, 200, || {
+        opt.step(&mut params, &grad);
+    });
+    println!("{}", r.report());
+    let r = bench("sparsify top-10%", 5, 50, || {
+        black_box(Payload::sparsify(&grad, 0.1))
+    });
+    println!("{}", r.report());
+
+    println!("\n== research closure (JSON) ==");
+    let closure = ResearchClosure::new(&spec, &init_params(&spec, 1));
+    let r = bench("closure -> JSON string", 3, 20, || {
+        black_box(mlitb::json::to_string(&closure.to_json()))
+    });
+    println!("{}", r.report());
+    let text = mlitb::json::to_string(&closure.to_json());
+    println!("    closure size: {:.1} KB", text.len() as f64 / 1024.0);
+    let r = bench("JSON parse + validate closure", 3, 20, || {
+        black_box(ResearchClosure::from_json(&mlitb::json::parse(&text).unwrap()).unwrap())
+    });
+    println!("{}", r.report());
+
+    println!("\n== data path (zip archives, 100 samples of 28x28) ==");
+    let corpus = Synthesizer::new(SynthSpec::mnist(2)).corpus(100);
+    let r = bench("build_archive(100)", 2, 10, || {
+        black_box(build_archive(&corpus).unwrap())
+    });
+    println!("{}", r.report());
+    let bytes = build_archive(&corpus).unwrap();
+    println!("    archive size: {:.1} KB", bytes.len() as f64 / 1024.0);
+    let r = bench("read_archive(100)", 2, 10, || {
+        black_box(read_archive(&bytes).unwrap())
+    });
+    println!("{}", r.report());
+    let mut server = DataServer::new();
+    server.upload_samples(corpus);
+    let ids: Vec<u32> = (0..100).collect();
+    let r = bench("DataServer::serve(100 ids)", 5, 100, || {
+        black_box(server.serve(&ids))
+    });
+    println!("{}", r.report());
+
+    if fast {
+        println!("\n(--fast: skipping PJRT execution benches)");
+        return;
+    }
+
+    println!("\n== PJRT execution (per microbatch of 32) ==");
+    let mut engine = Engine::new(manifest).unwrap();
+    let synth = Synthesizer::new(SynthSpec::mnist(3));
+    let mnist_samples: Vec<_> = synth.corpus(64).into_iter().map(std::sync::Arc::new).collect();
+    let cifar_synth = Synthesizer::new(SynthSpec::cifar(3));
+    let cifar_samples: Vec<_> = cifar_synth
+        .corpus(64)
+        .into_iter()
+        .map(std::sync::Arc::new)
+        .collect();
+    for model in ["mnist_mlp", "mnist_conv", "cifar_conv", "convnet_wide"] {
+        engine.load_model(model).unwrap();
+        let spec = engine.spec(model).unwrap().clone();
+        let params = init_params(&spec, 0);
+        let mut batch = BatchBuilder::new(spec.batch_size, spec.input_len());
+        let samples = if spec.input == vec![32, 32, 3] {
+            &cifar_samples
+        } else {
+            &mnist_samples
+        };
+        batch.fill_cyclic(samples, 0);
+        let images = batch.images().to_vec();
+        let labels = batch.labels().to_vec();
+        let r = bench(&format!("{model}: grad batch"), 3, 15, || {
+            black_box(engine.grad(model, &params, &images, &labels).unwrap())
+        });
+        println!("{}", r.report());
+        let r = bench(&format!("{model}: eval batch"), 3, 15, || {
+            black_box(engine.eval(model, &params, &images, &labels).unwrap())
+        });
+        println!("{}", r.report());
+        let med = r.median_ns();
+        println!(
+            "    -> {} per vector (eval)",
+            fmt_ns(med / spec.batch_size as f64)
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Data-index allocation: balanced allocation + the paper's **pie-cutter**.
+//!
+//! The master "stores an allocated index (the worker that is allocated the
+//! id) and a cached index (the worker that has cached the id)" and "ensures
+//! that the data allocation is balanced amongst its clients" (§3.3a).  On
+//! join with no unallocated data, "a pie-cutter algorithm is used to remove
+//! allocated data from other clients and assign it to the new client. This
+//! prevents unnecessary data transfers" (§3.3b).  On loss, orphaned indices
+//! are re-allocated to the remaining clients "if possible, otherwise
+//! marked as to-be-allocated" (§3.2).
+//!
+//! The per-worker capacity limit reproduces the scaling experiment's
+//! "data allocation policy that limits the data vector capacity of each
+//! node to 3000 vectors" (§3.5) — the policy that makes Fig 5's error
+//! curve fall with node count until the full training set is covered.
+
+mod pie;
+
+pub use pie::Allocator;
+
+/// Worker identity within one project.
+pub type WorkerId = u64;
+
+/// Data-vector index within one project's dataset.
+pub type DataId = u32;
+
+/// Per-worker capacity used in the paper's scaling experiment (§3.5).
+pub const PAPER_CAPACITY: usize = 3000;
+
+/// What changed as the result of one allocation event; the coordinator
+/// turns this into data-download instructions for the affected clients.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Delta {
+    /// (worker, ids newly assigned to it — worker must fetch any not cached)
+    pub assigned: Vec<(WorkerId, Vec<DataId>)>,
+    /// (worker, ids revoked from it — stop training on these)
+    pub revoked: Vec<(WorkerId, Vec<DataId>)>,
+}
+
+impl Delta {
+    pub fn is_empty(&self) -> bool {
+        self.assigned.is_empty() && self.revoked.is_empty()
+    }
+
+    /// Total number of ids that must move (the transfer cost pie-cutting
+    /// minimizes; `benches/ablations.rs` compares against naive).
+    pub fn moved(&self) -> usize {
+        self.assigned.iter().map(|(_, v)| v.len()).sum()
+    }
+}

@@ -1,0 +1,562 @@
+//! The allocator state machine and pie-cutter rebalancing.
+
+use std::collections::BTreeMap;
+
+use super::{DataId, Delta, WorkerId};
+
+/// Index-level allocation state for one project.
+///
+/// Tracks, per data id, the owning worker (at most one — owners compute
+/// gradients on the id) and, per worker, the owned set plus a *cached* set
+/// (ids the client already holds locally; re-assigning a cached id costs no
+/// transfer, which is what the pie-cutter exploits).
+#[derive(Debug, Clone)]
+pub struct Allocator {
+    capacity: usize,
+    owner: Vec<Option<WorkerId>>,
+    workers: BTreeMap<WorkerId, WorkerState>,
+    unallocated: Vec<DataId>,
+    transfers: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct WorkerState {
+    owned: Vec<DataId>,
+    cached: Vec<bool>, // indexed by DataId; lazily grown
+}
+
+impl WorkerState {
+    fn is_cached(&self, id: DataId) -> bool {
+        self.cached.get(id as usize).copied().unwrap_or(false)
+    }
+    fn set_cached(&mut self, id: DataId) {
+        let idx = id as usize;
+        if self.cached.len() <= idx {
+            self.cached.resize(idx + 1, false);
+        }
+        self.cached[idx] = true;
+    }
+}
+
+impl Allocator {
+    /// New allocator with a per-worker capacity (paper: 3000).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity,
+            owner: Vec::new(),
+            workers: BTreeMap::new(),
+            unallocated: Vec::new(),
+            transfers: 0,
+        }
+    }
+
+    // ------------------------------------------------------------ queries
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn total_data(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn worker_ids(&self) -> Vec<WorkerId> {
+        self.workers.keys().copied().collect()
+    }
+
+    pub fn owned_by(&self, w: WorkerId) -> &[DataId] {
+        self.workers
+            .get(&w)
+            .map(|s| s.owned.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn owner_of(&self, id: DataId) -> Option<WorkerId> {
+        self.owner.get(id as usize).copied().flatten()
+    }
+
+    pub fn unallocated(&self) -> &[DataId] {
+        &self.unallocated
+    }
+
+    /// Cumulative ids moved to workers that did not have them cached.
+    pub fn transfer_count(&self) -> u64 {
+        self.transfers
+    }
+
+    /// Number of allocated (owned) ids.
+    pub fn allocated_count(&self) -> usize {
+        self.owner.len() - self.unallocated.len()
+    }
+
+    // ------------------------------------------------------------- events
+
+    /// §3.3a: a new dataset (or chunk) of `n` vectors is registered; ids are
+    /// appended and balanced across existing workers up to capacity.
+    pub fn add_data(&mut self, n: usize) -> Delta {
+        let start = self.owner.len() as DataId;
+        for i in 0..n {
+            self.owner.push(None);
+            self.unallocated.push(start + i as DataId);
+        }
+        self.fill_from_unallocated()
+    }
+
+    /// §3.3b: a new trainer joins.  Unallocated data first; if none (and
+    /// the fleet holds more than the fair share), pie-cut from the largest
+    /// holders.  Returns the ids the new worker must obtain.
+    pub fn worker_join(&mut self, w: WorkerId) -> Delta {
+        assert!(
+            self.workers.insert(w, WorkerState::default()).is_none(),
+            "worker {w} already joined"
+        );
+        let mut delta = self.fill_from_unallocated();
+        // Pie-cutter: equalize toward the fair share without exceeding it.
+        let fair = self.fair_share();
+        let have = self.workers[&w].owned.len();
+        if have < fair {
+            let mut need = fair - have;
+            let donors = self.donors_above(fair, w);
+            let mut steal: Vec<(WorkerId, Vec<DataId>)> = Vec::new();
+            for donor in donors {
+                if need == 0 {
+                    break;
+                }
+                let excess = self.workers[&donor].owned.len().saturating_sub(fair);
+                let take = excess.min(need);
+                if take == 0 {
+                    continue;
+                }
+                let ids = self.take_from(donor, take);
+                need -= ids.len();
+                steal.push((donor, ids));
+            }
+            let mut got: Vec<DataId> = Vec::new();
+            for (donor, ids) in steal {
+                delta.revoked.push((donor, ids.clone()));
+                got.extend(ids);
+            }
+            if !got.is_empty() {
+                self.assign(w, &got);
+                Self::push_assigned(&mut delta, w, got);
+            }
+        }
+        delta
+    }
+
+    /// §3.2: a worker is lost (tab closed, device gone).  Its data is
+    /// re-allocated to remaining workers if capacity allows, otherwise
+    /// marked to-be-allocated.
+    pub fn worker_leave(&mut self, w: WorkerId) -> Delta {
+        let Some(state) = self.workers.remove(&w) else {
+            return Delta::default();
+        };
+        for &id in &state.owned {
+            self.owner[id as usize] = None;
+        }
+        self.unallocated.extend(state.owned.iter().copied());
+        self.fill_from_unallocated()
+    }
+
+    /// §3.3d latency adaptation can also *shrink* a slow worker's share:
+    /// revoke `n` ids (returned to the unallocated pool, then re-spread).
+    pub fn shed_load(&mut self, w: WorkerId, n: usize) -> Delta {
+        if !self.workers.contains_key(&w) || n == 0 {
+            return Delta::default();
+        }
+        let ids = self.take_from(w, n);
+        if ids.is_empty() {
+            return Delta::default();
+        }
+        let mut delta = Delta {
+            revoked: vec![(w, ids.clone())],
+            ..Delta::default()
+        };
+        for &id in &ids {
+            self.unallocated.push(id);
+        }
+        let spread = self.fill_from_unallocated_excluding(Some(w));
+        delta.assigned.extend(spread.assigned);
+        delta.revoked.extend(spread.revoked);
+        delta
+    }
+
+    /// Mark an id as cached on a worker (client finished downloading it).
+    pub fn mark_cached(&mut self, w: WorkerId, id: DataId) {
+        if let Some(state) = self.workers.get_mut(&w) {
+            state.set_cached(id);
+        }
+    }
+
+    /// Naive alternative to pie-cutting used by `benches/ablations.rs`:
+    /// revoke *everything* and deal round-robin from scratch.
+    pub fn rebalance_naive(&mut self) -> Delta {
+        let mut delta = Delta::default();
+        let ids: Vec<WorkerId> = self.workers.keys().copied().collect();
+        if ids.is_empty() {
+            return delta;
+        }
+        // revoke all
+        let mut all: Vec<DataId> = Vec::new();
+        for w in &ids {
+            let state = self.workers.get_mut(w).unwrap();
+            if !state.owned.is_empty() {
+                let owned = std::mem::take(&mut state.owned);
+                for &id in &owned {
+                    self.owner[id as usize] = None;
+                }
+                all.extend(owned.iter().copied());
+                delta.revoked.push((*w, owned));
+            }
+        }
+        all.extend(self.unallocated.drain(..));
+        all.sort_unstable();
+        // deal round-robin up to capacity
+        let mut per: BTreeMap<WorkerId, Vec<DataId>> = BTreeMap::new();
+        let mut wi = 0usize;
+        for id in all {
+            let mut placed = false;
+            for _ in 0..ids.len() {
+                let w = ids[wi % ids.len()];
+                wi += 1;
+                if self.workers[&w].owned.len() + per.get(&w).map_or(0, |v| v.len())
+                    < self.capacity
+                {
+                    per.entry(w).or_default().push(id);
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                self.unallocated.push(id);
+            }
+        }
+        for (w, got) in per {
+            self.assign(w, &got);
+            Self::push_assigned(&mut delta, w, got);
+        }
+        delta
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    /// Fair share per worker given totals and capacity.
+    fn fair_share(&self) -> usize {
+        if self.workers.is_empty() {
+            return 0;
+        }
+        let total = self.owner.len();
+        (total / self.workers.len())
+            .max(1)
+            .min(self.capacity)
+    }
+
+    /// Workers (≠ `except`) sorted by owned count descending.
+    fn donors_above(&self, threshold: usize, except: WorkerId) -> Vec<WorkerId> {
+        let mut v: Vec<(usize, WorkerId)> = self
+            .workers
+            .iter()
+            .filter(|(w, s)| **w != except && s.owned.len() > threshold)
+            .map(|(w, s)| (s.owned.len(), *w))
+            .collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v.into_iter().map(|(_, w)| w).collect()
+    }
+
+    /// Remove up to `n` ids from the tail of `w`'s owned list.
+    fn take_from(&mut self, w: WorkerId, n: usize) -> Vec<DataId> {
+        let state = self.workers.get_mut(&w).unwrap();
+        let n = n.min(state.owned.len());
+        let ids: Vec<DataId> = state.owned.split_off(state.owned.len() - n);
+        for &id in &ids {
+            self.owner[id as usize] = None;
+        }
+        ids
+    }
+
+    fn assign(&mut self, w: WorkerId, ids: &[DataId]) {
+        let state = self.workers.get_mut(&w).unwrap();
+        for &id in ids {
+            debug_assert!(self.owner[id as usize].is_none());
+            self.owner[id as usize] = Some(w);
+            state.owned.push(id);
+            if !state.is_cached(id) {
+                self.transfers += 1;
+            }
+        }
+        debug_assert!(state.owned.len() <= self.capacity);
+    }
+
+    fn push_assigned(delta: &mut Delta, w: WorkerId, ids: Vec<DataId>) {
+        if let Some(slot) = delta.assigned.iter_mut().find(|(id, _)| *id == w) {
+            slot.1.extend(ids);
+        } else {
+            delta.assigned.push((w, ids));
+        }
+    }
+
+    fn fill_from_unallocated(&mut self) -> Delta {
+        self.fill_from_unallocated_excluding(None)
+    }
+
+    /// Spread unallocated ids across workers, least-loaded first, up to
+    /// capacity.  Balanced: repeatedly give to the minimum-loaded worker.
+    fn fill_from_unallocated_excluding(&mut self, except: Option<WorkerId>) -> Delta {
+        let mut delta = Delta::default();
+        if self.workers.is_empty() || self.unallocated.is_empty() {
+            return delta;
+        }
+        // load heap emulated with a sorted vec (fleet sizes are ≤ hundreds)
+        let mut loads: Vec<(usize, WorkerId)> = self
+            .workers
+            .iter()
+            .filter(|(w, _)| Some(**w) != except)
+            .map(|(w, s)| (s.owned.len(), *w))
+            .collect();
+        if loads.is_empty() {
+            return delta;
+        }
+        let mut grants: BTreeMap<WorkerId, Vec<DataId>> = BTreeMap::new();
+        while let Some(id) = self.unallocated.pop() {
+            loads.sort_unstable();
+            let Some(slot) = loads.iter_mut().find(|(load, _)| *load < self.capacity)
+            else {
+                self.unallocated.push(id);
+                break;
+            };
+            grants.entry(slot.1).or_default().push(id);
+            slot.0 += 1;
+        }
+        for (w, ids) in grants {
+            self.assign(w, &ids);
+            Self::push_assigned(&mut delta, w, ids);
+        }
+        delta
+    }
+
+    // --------------------------------------------------------- invariants
+
+    /// Structural invariants — called by tests after every event.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.owner.len()];
+        for (w, state) in &self.workers {
+            if state.owned.len() > self.capacity {
+                return Err(format!("worker {w} over capacity: {}", state.owned.len()));
+            }
+            for &id in &state.owned {
+                if self.owner.get(id as usize).copied().flatten() != Some(*w) {
+                    return Err(format!("id {id} owner map disagrees for worker {w}"));
+                }
+                if seen[id as usize] {
+                    return Err(format!("id {id} owned twice"));
+                }
+                seen[id as usize] = true;
+            }
+        }
+        for &id in &self.unallocated {
+            if self.owner[id as usize].is_some() {
+                return Err(format!("id {id} both unallocated and owned"));
+            }
+            if seen[id as usize] {
+                return Err(format!("id {id} duplicated in unallocated"));
+            }
+            seen[id as usize] = true;
+        }
+        if let Some(missing) = seen.iter().position(|s| !s) {
+            return Err(format!("id {missing} neither owned nor unallocated"));
+        }
+        Ok(())
+    }
+
+    /// Balance metric: max-owned − min-owned over workers.
+    pub fn imbalance(&self) -> usize {
+        let counts: Vec<usize> = self.workers.values().map(|s| s.owned.len()).collect();
+        match (counts.iter().max(), counts.iter().min()) {
+            (Some(mx), Some(mn)) => mx - mn,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checked(alloc: &Allocator) {
+        alloc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn data_then_workers() {
+        let mut a = Allocator::new(3000);
+        a.add_data(100);
+        checked(&a);
+        assert_eq!(a.unallocated().len(), 100);
+        let d = a.worker_join(1);
+        checked(&a);
+        assert_eq!(d.assigned.len(), 1);
+        assert_eq!(a.owned_by(1).len(), 100);
+    }
+
+    #[test]
+    fn capacity_is_respected() {
+        let mut a = Allocator::new(30);
+        a.add_data(100);
+        a.worker_join(1);
+        checked(&a);
+        assert_eq!(a.owned_by(1).len(), 30);
+        assert_eq!(a.unallocated().len(), 70);
+        a.worker_join(2);
+        a.worker_join(3);
+        a.worker_join(4);
+        checked(&a);
+        assert_eq!(a.allocated_count(), 100); // 30+30+30+10
+    }
+
+    #[test]
+    fn paper_policy_one_node_gets_3000_of_60000() {
+        // §3.5: "using only 1 slave node trains on 3/60 of the full set"
+        let mut a = Allocator::new(3000);
+        a.add_data(60_000);
+        a.worker_join(1);
+        assert_eq!(a.owned_by(1).len(), 3000);
+        // "With 20 nodes, the network is training on the full dataset."
+        for w in 2..=20 {
+            a.worker_join(w);
+        }
+        checked(&a);
+        assert_eq!(a.allocated_count(), 60_000);
+        assert_eq!(a.unallocated().len(), 0);
+    }
+
+    #[test]
+    fn pie_cutter_steals_from_largest() {
+        let mut a = Allocator::new(3000);
+        a.add_data(90);
+        a.worker_join(1); // takes all 90
+        let d = a.worker_join(2); // fair share 45: steal 45 from w1
+        checked(&a);
+        assert_eq!(a.owned_by(1).len(), 45);
+        assert_eq!(a.owned_by(2).len(), 45);
+        assert_eq!(d.revoked.len(), 1);
+        assert_eq!(d.revoked[0].0, 1);
+        assert_eq!(d.moved(), 45);
+    }
+
+    #[test]
+    fn pie_cutter_transfers_bounded_by_fair_share() {
+        // Joining the N-th worker moves only ~total/N ids, not O(total).
+        let mut a = Allocator::new(3000);
+        a.add_data(1000);
+        for w in 1..=4 {
+            a.worker_join(w);
+        }
+        let before = a.transfer_count();
+        let d = a.worker_join(5);
+        checked(&a);
+        assert!(d.moved() <= 1000 / 5 + 4, "moved {}", d.moved());
+        assert!(a.transfer_count() - before <= 204);
+        assert!(a.imbalance() <= 1 + 4, "imbalance {}", a.imbalance());
+    }
+
+    #[test]
+    fn leave_reallocates_to_survivors() {
+        let mut a = Allocator::new(3000);
+        a.add_data(100);
+        a.worker_join(1);
+        a.worker_join(2);
+        let d = a.worker_leave(1);
+        checked(&a);
+        assert_eq!(a.owned_by(2).len(), 100);
+        assert_eq!(d.assigned.len(), 1);
+        assert!(a.unallocated().is_empty());
+    }
+
+    #[test]
+    fn leave_with_no_survivors_marks_unallocated() {
+        let mut a = Allocator::new(3000);
+        a.add_data(50);
+        a.worker_join(1);
+        a.worker_leave(1);
+        checked(&a);
+        assert_eq!(a.unallocated().len(), 50);
+    }
+
+    #[test]
+    fn leave_overflow_goes_unallocated() {
+        let mut a = Allocator::new(60);
+        a.add_data(100);
+        a.worker_join(1);
+        a.worker_join(2); // 50/50
+        a.worker_leave(2); // w1 can only take 10 more
+        checked(&a);
+        assert_eq!(a.owned_by(1).len(), 60);
+        assert_eq!(a.unallocated().len(), 40);
+    }
+
+    #[test]
+    fn cached_ids_do_not_count_as_transfers() {
+        let mut a = Allocator::new(3000);
+        a.add_data(10);
+        a.worker_join(1);
+        let t0 = a.transfer_count();
+        assert_eq!(t0, 10);
+        for id in 0..10 {
+            a.mark_cached(1, id);
+        }
+        // churn: leave and rejoin — all ids still cached on w1
+        a.worker_leave(1);
+        // (cache survives on the client; allocator forgets workers on leave,
+        //  so a rejoin is a *new* worker id in this model)
+        let mut a2 = a.clone();
+        a2.worker_join(2); // uncached worker: 10 transfers
+        assert_eq!(a2.transfer_count(), 20);
+    }
+
+    #[test]
+    fn shed_load_moves_to_others() {
+        let mut a = Allocator::new(3000);
+        a.add_data(100);
+        a.worker_join(1);
+        a.worker_join(2);
+        let d = a.shed_load(1, 20);
+        checked(&a);
+        assert_eq!(a.owned_by(1).len(), 30);
+        assert_eq!(a.owned_by(2).len(), 70);
+        assert_eq!(d.revoked[0], (1, d.revoked[0].1.clone()));
+    }
+
+    #[test]
+    fn naive_rebalance_is_balanced_but_expensive() {
+        let mut a = Allocator::new(3000);
+        a.add_data(100);
+        a.worker_join(1);
+        let t_pie = {
+            let mut b = a.clone();
+            let d = b.worker_join(2);
+            d.moved()
+        };
+        let d = {
+            a.workers.insert(2, WorkerState::default());
+            a.rebalance_naive()
+        };
+        a.check_invariants().unwrap();
+        assert!(a.imbalance() <= 1);
+        assert!(d.moved() >= t_pie, "naive {} < pie {}", d.moved(), t_pie);
+    }
+
+    #[test]
+    fn empty_allocator_events_are_safe() {
+        let mut a = Allocator::new(10);
+        assert!(a.worker_leave(99).is_empty());
+        assert!(a.shed_load(1, 5).is_empty());
+        let d = a.worker_join(1);
+        assert!(d.is_empty());
+        checked(&a);
+    }
+}

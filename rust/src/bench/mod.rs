@@ -1,0 +1,117 @@
+//! Bench harness substrate (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with median/p95 reporting for the
+//! micro benches, and wall-clock helpers for the figure-level experiment
+//! drivers.  Benches are plain `harness = false` binaries under
+//! `rust/benches/`.
+
+use std::time::Instant;
+
+use crate::metrics::Summary;
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub summary_ns: Summary,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        self.summary_ns.median()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12} med  {:>12} p95  {:>12} min   ({} iters)",
+            self.name,
+            fmt_ns(self.summary_ns.median()),
+            fmt_ns(self.summary_ns.p95()),
+            fmt_ns(self.summary_ns.min()),
+            self.iterations
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns.is_nan() {
+        "-".into()
+    } else if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` `iters` times after `warmup` runs; returns per-call stats.
+/// The closure's return value is black-boxed to prevent dead-code
+/// elimination.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iterations: iters,
+        summary_ns: Summary::from(samples),
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Wall-clock a single run of `f`, returning (result, seconds).
+pub fn wall<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 10, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(r.iterations, 10);
+        assert!(r.median_ns() > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.00 s");
+    }
+
+    #[test]
+    fn wall_returns_result() {
+        let (v, secs) = wall(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

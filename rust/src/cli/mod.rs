@@ -1,0 +1,161 @@
+//! Tiny argument-parsing substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! accessors with defaults, and a generated usage string.  Used by the
+//! `mlitb` binary, the examples, and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest are positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.named.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.named.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1)).expect("argument parsing")
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.named.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated integer list (e.g. `--nodes 1,2,4,8`).
+    pub fn get_usize_list(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad element '{p}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn named_and_flags() {
+        let a = parse(&["--nodes", "8", "--fast", "--model=mlp", "train"]);
+        assert_eq!(a.get("nodes"), Some("8"));
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.positional(), &["train".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "42", "--lr", "0.5"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("lr", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse(&["--n", "x"]).get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_accessor() {
+        let a = parse(&["--nodes", "1,2, 4"]);
+        assert_eq!(a.get_usize_list("nodes", &[9]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_usize_list("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["--not-a-flag".to_string()]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["--delta", "-3.5"]);
+        assert_eq!(a.get_f64("delta", 0.0).unwrap(), -3.5);
+    }
+}

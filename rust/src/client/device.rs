@@ -1,0 +1,109 @@
+//! Device heterogeneity profiles.
+//!
+//! The paper's fleet spans workstations on a LAN (the §3.5 experiment:
+//! dual-core i3 desktops), laptops on wifi, and phones/tablets on cellular
+//! links (§3.3d: "it is possible to have mobile devices that compute only
+//! a few gradients per second and a powerful desktop machine that performs
+//! hundreds or thousands").  A profile is (compute rate, link class);
+//! rates are per-device samples around the class mean, so no two devices
+//! are identical.
+
+use crate::netsim::LinkProfile;
+use crate::rng::{Normal, Pcg32};
+
+/// Device class, defining compute-rate and link-class priors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// §3.5 grid workstation (LAN, the scaling experiment's node).
+    Workstation,
+    /// Volunteer desktop (LAN/ethernet).
+    Desktop,
+    /// Laptop on wifi.
+    Laptop,
+    /// Phone/tablet on cellular.
+    Mobile,
+}
+
+impl DeviceClass {
+    /// (mean vectors/sec on the reference conv model, std, link class).
+    /// The workstation rate is calibrated so a 4-second iteration
+    /// processes ~1000 vectors — the order the paper's Fig 4 implies
+    /// (power ≈ 250·N vectors/s up to the knee).
+    fn constants(self) -> (f64, f64, LinkProfile) {
+        match self {
+            // Identical grid SKUs (the paper's 32 i3 workstations): tight
+            // spread so fleet power normalizes cleanly in Fig 4.
+            DeviceClass::Workstation => (250.0, 6.0, LinkProfile::Lan),
+            DeviceClass::Desktop => (180.0, 30.0, LinkProfile::Lan),
+            DeviceClass::Laptop => (100.0, 25.0, LinkProfile::Wifi),
+            DeviceClass::Mobile => (20.0, 8.0, LinkProfile::Cellular),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "workstation" => Ok(Self::Workstation),
+            "desktop" => Ok(Self::Desktop),
+            "laptop" => Ok(Self::Laptop),
+            "mobile" => Ok(Self::Mobile),
+            _ => Err(format!(
+                "unknown device class '{s}' (workstation|desktop|laptop|mobile)"
+            )),
+        }
+    }
+
+    /// Sample a concrete device of this class.
+    pub fn sample_profile(self, rng: &mut Pcg32) -> DeviceProfile {
+        let (mean, std, link) = self.constants();
+        let power = Normal::new(mean, std).sample(rng).max(mean * 0.2);
+        DeviceProfile {
+            class: self,
+            power_vps: power,
+            link,
+        }
+    }
+}
+
+/// A concrete simulated device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    pub class: DeviceClass,
+    /// Gradient-computation rate, data vectors per second, on the
+    /// reference model (scaled by the model's relative cost at use sites).
+    pub power_vps: f64,
+    pub link: LinkProfile,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_ordered_by_power() {
+        let mut rng = Pcg32::new(1);
+        let mut mean = |class: DeviceClass| -> f64 {
+            (0..50)
+                .map(|_| class.sample_profile(&mut rng).power_vps)
+                .sum::<f64>()
+                / 50.0
+        };
+        let ws = mean(DeviceClass::Workstation);
+        let mob = mean(DeviceClass::Mobile);
+        assert!(ws > 5.0 * mob, "workstation {ws} vs mobile {mob}");
+    }
+
+    #[test]
+    fn power_is_positive() {
+        let mut rng = Pcg32::new(2);
+        for _ in 0..200 {
+            let p = DeviceClass::Mobile.sample_profile(&mut rng);
+            assert!(p.power_vps > 0.0);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(DeviceClass::parse("mobile").unwrap(), DeviceClass::Mobile);
+        assert!(DeviceClass::parse("toaster").is_err());
+    }
+}

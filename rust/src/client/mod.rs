@@ -1,0 +1,15 @@
+//! Simulated client fleet — the browsers of the paper.
+//!
+//! Each client mirrors the paper's worker decomposition (§3.2, Fig 3): a
+//! *boss* (UI worker) owning a data-download worker and slave workers
+//! (trainer / tracker).  Here the boss is a state machine driven by the
+//! discrete-event simulation: it manages the sample cache, the pending
+//! download queue (training may start before the full allocation is
+//! cached, §3.3a), and produces gradient submissions whose timing comes
+//! from the device's power and link models.
+
+mod device;
+mod sim_client;
+
+pub use device::{DeviceClass, DeviceProfile};
+pub use sim_client::{SimClient, TrainOutput};

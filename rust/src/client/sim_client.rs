@@ -1,0 +1,371 @@
+//! The simulated client: boss + data worker + trainer in one state machine.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::allocation::{DataId, WorkerId};
+use crate::data::{ClientCache, DataServer, SharedSample};
+use crate::model::ModelSpec;
+use crate::netsim::LinkModel;
+use crate::rng::Pcg32;
+use crate::runtime::{BatchBuilder, Compute};
+
+use super::DeviceProfile;
+
+/// Result of one trainer map-step on this client.
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    /// Σ gradient over all processed examples.
+    pub grad_sum: Vec<f32>,
+    pub examples: u64,
+    pub loss_sum: f64,
+    /// Compute time actually consumed (ms) — may exceed the budget by up
+    /// to one microbatch (the client only checks the clock between
+    /// batches, like the paper's JS trainer between gradient steps).
+    pub compute_ms: f64,
+}
+
+/// One simulated browser client.
+pub struct SimClient {
+    pub id: WorkerId,
+    pub profile: DeviceProfile,
+    pub link: LinkModel,
+    cache: ClientCache,
+    /// Current allocation (ids this worker trains on).
+    owned: Vec<DataId>,
+    /// Allocated ids not yet downloaded (§3.3a background caching).
+    pending: VecDeque<DataId>,
+    cursor: usize,
+    pub rng: Pcg32,
+    /// Reused gradient-accumulation buffer.
+    grad_buf: Vec<f32>,
+    /// Batch builders per microbatch size (lazily created).
+    builders: HashMap<usize, BatchBuilder>,
+}
+
+impl SimClient {
+    pub fn new(
+        id: WorkerId,
+        profile: DeviceProfile,
+        cache_budget_bytes: u64,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let mut rng = rng.fork(id);
+        let link = LinkModel::new(profile.link, &mut rng);
+        Self {
+            id,
+            profile,
+            link,
+            cache: ClientCache::new(cache_budget_bytes),
+            owned: Vec::new(),
+            pending: VecDeque::new(),
+            cursor: 0,
+            rng,
+            grad_buf: Vec::new(),
+            builders: HashMap::new(),
+        }
+    }
+
+    // -------------------------------------------------------- allocation
+
+    /// Assign ids (enqueue downloads for anything not already cached).
+    pub fn assign(&mut self, ids: &[DataId]) {
+        for &id in ids {
+            self.owned.push(id);
+            if self.cache.contains(id) {
+                self.cache.set_pinned(id, true);
+            } else {
+                self.pending.push_back(id);
+            }
+        }
+    }
+
+    /// Revoke ids (stop training on them; cached copies stay evictable —
+    /// the paper's redundant cache makes a later re-assignment free).
+    pub fn revoke(&mut self, ids: &[DataId]) {
+        self.owned.retain(|id| !ids.contains(id));
+        self.pending.retain(|id| !ids.contains(id));
+        for &id in ids {
+            self.cache.set_pinned(id, false);
+        }
+    }
+
+    pub fn owned(&self) -> &[DataId] {
+        &self.owned
+    }
+
+    pub fn cached_owned(&self) -> usize {
+        self.owned.iter().filter(|&&id| self.cache.contains(id)).count()
+    }
+
+    pub fn pending_downloads(&self) -> usize {
+        self.pending.len()
+    }
+
+    // ---------------------------------------------------------- data path
+
+    /// Data-worker step: download pending ids, limited by a byte budget
+    /// (one iteration of background XHR at the device's downlink rate).
+    /// Returns (ids fetched, wire bytes).  The master should be told via
+    /// `Allocator::mark_cached` for each returned id.
+    pub fn download_step(
+        &mut self,
+        server: &DataServer,
+        byte_budget: u64,
+    ) -> (Vec<DataId>, u64) {
+        let mut got = Vec::new();
+        let mut bytes = 0u64;
+        while let Some(&id) = self.pending.front() {
+            let (samples, stats) = server.serve(&[id]);
+            let Some((_, sample)) = samples.into_iter().next() else {
+                // unknown id: drop it
+                self.pending.pop_front();
+                continue;
+            };
+            if bytes + stats.bytes > byte_budget && !got.is_empty() {
+                break;
+            }
+            bytes += stats.bytes;
+            self.cache.insert(id, sample, true);
+            self.pending.pop_front();
+            got.push(id);
+            if bytes >= byte_budget {
+                break;
+            }
+        }
+        (got, bytes)
+    }
+
+    /// Samples this trainer can actually use right now (owned ∩ cached).
+    fn usable_samples(&mut self) -> Vec<SharedSample> {
+        let ids: Vec<DataId> = self
+            .owned
+            .iter()
+            .copied()
+            .filter(|&id| self.cache.contains(id))
+            .collect();
+        ids.iter().filter_map(|&id| self.cache.get(id)).collect()
+    }
+
+    // ------------------------------------------------------------ trainer
+
+    /// Map step (§3.6): run as many gradient microbatches as fit in
+    /// `budget_ms` at this device's rate, accumulating Σ-gradients.
+    ///
+    /// The work quantum adapts to the device: the largest compiled
+    /// microbatch whose compute time fits the budget (weak devices drop
+    /// to B=8 or B=1 — the paper's mobiles compute "only a few gradients
+    /// per second", §3.3d).  Returns None when no usable data is cached.
+    pub fn train(
+        &mut self,
+        compute: &mut dyn Compute,
+        spec: &ModelSpec,
+        params: &[f32],
+        budget_ms: f64,
+    ) -> Result<Option<TrainOutput>> {
+        let samples = self.usable_samples();
+        if samples.is_empty() {
+            return Ok(None);
+        }
+        let bsz = spec.pick_micro_batch(self.profile.power_vps, budget_ms);
+        let batch = self
+            .builders
+            .entry(bsz)
+            .or_insert_with(|| BatchBuilder::new(bsz, spec.input_len()));
+        let ms_per_batch = bsz as f64 / self.profile.power_vps * 1000.0;
+        // At least one batch (the clock is only checked between batches).
+        let n_batches = ((budget_ms / ms_per_batch).floor() as usize).max(1);
+
+        self.grad_buf.clear();
+        self.grad_buf.resize(params.len(), 0.0);
+        let mut examples = 0u64;
+        let mut loss_sum = 0.0f64;
+        for _ in 0..n_batches {
+            self.cursor = batch.fill_cyclic(&samples, self.cursor);
+            let out =
+                compute.grad_batch(&spec.name, bsz, params, batch.images(), batch.labels())?;
+            crate::params::add_assign(&mut self.grad_buf, &out.grads);
+            examples += bsz as u64;
+            loss_sum += out.loss_sum as f64;
+        }
+        Ok(Some(TrainOutput {
+            grad_sum: self.grad_buf.clone(),
+            examples,
+            loss_sum,
+            compute_ms: n_batches as f64 * ms_per_batch,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::DeviceClass;
+    use crate::data::{SynthSpec, Synthesizer};
+    use crate::runtime::ModeledCompute;
+
+    fn client(id: WorkerId) -> SimClient {
+        let mut rng = Pcg32::new(9);
+        let profile = DeviceClass::Workstation.sample_profile(&mut rng);
+        SimClient::new(id, profile, 100 << 20, &mut rng)
+    }
+
+    fn server(n: usize) -> DataServer {
+        let mut ds = DataServer::new();
+        ds.upload_samples(Synthesizer::new(SynthSpec::mnist(1)).corpus(n));
+        ds
+    }
+
+    fn spec(param_count: usize, batches: Vec<usize>) -> ModelSpec {
+        ModelSpec {
+            name: "m".into(),
+            param_count,
+            batch_size: batches[0],
+            micro_batches: batches,
+            input: vec![28, 28, 1],
+            classes: 10,
+            tensors: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn assign_download_train_cycle() {
+        let mut c = client(1);
+        let ds = server(50);
+        c.assign(&(0..50).collect::<Vec<_>>());
+        assert_eq!(c.pending_downloads(), 50);
+        let (got, bytes) = c.download_step(&ds, u64::MAX);
+        assert_eq!(got.len(), 50);
+        assert!(bytes > 0);
+        assert_eq!(c.cached_owned(), 50);
+
+        let mut compute = ModeledCompute { param_count: 4 };
+        let sp = spec(4, vec![8]);
+        let out = c
+            .train(&mut compute, &sp, &[0.0; 4], 1000.0)
+            .unwrap()
+            .unwrap();
+        assert!(out.examples >= 8);
+        assert!(out.compute_ms > 0.0);
+        assert_eq!(out.grad_sum.len(), 4);
+    }
+
+    #[test]
+    fn train_without_data_returns_none() {
+        let mut c = client(2);
+        let mut compute = ModeledCompute { param_count: 4 };
+        let sp = spec(4, vec![8]);
+        assert!(c
+            .train(&mut compute, &sp, &[0.0; 4], 1000.0)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn byte_budget_limits_downloads() {
+        let mut c = client(3);
+        let ds = server(50);
+        c.assign(&(0..50).collect::<Vec<_>>());
+        // Each sample ~2.8 KB compressed; budget ~5 samples
+        let (got, bytes) = c.download_step(&ds, 15_000);
+        assert!(got.len() < 50, "{}", got.len());
+        assert!(!got.is_empty());
+        assert!(bytes <= 16_000);
+        // rest still pending; next step continues
+        let before = c.pending_downloads();
+        c.download_step(&ds, 15_000);
+        assert!(c.pending_downloads() < before);
+    }
+
+    #[test]
+    fn training_starts_with_partial_cache() {
+        // §3.3a: "allowing projects to start training almost immediately
+        // while data gets cached in the background."
+        let mut c = client(4);
+        let ds = server(50);
+        c.assign(&(0..50).collect::<Vec<_>>());
+        c.download_step(&ds, 10_000); // only a few cached
+        let mut compute = ModeledCompute { param_count: 2 };
+        let sp = spec(2, vec![4]);
+        let out = c.train(&mut compute, &sp, &[0.0; 2], 500.0).unwrap();
+        assert!(out.is_some());
+    }
+
+    #[test]
+    fn revoke_stops_training_on_ids_but_keeps_cache() {
+        let mut c = client(5);
+        let ds = server(10);
+        c.assign(&(0..10).collect::<Vec<_>>());
+        c.download_step(&ds, u64::MAX);
+        c.revoke(&(0..5).collect::<Vec<_>>());
+        assert_eq!(c.owned().len(), 5);
+        assert_eq!(c.cached_owned(), 5);
+        // re-assign is free (cache hit, no pending)
+        c.assign(&[0, 1]);
+        assert_eq!(c.pending_downloads(), 0);
+    }
+
+    #[test]
+    fn budget_scales_batch_count() {
+        let mut c = client(6);
+        let ds = server(32);
+        c.assign(&(0..32).collect::<Vec<_>>());
+        c.download_step(&ds, u64::MAX);
+        let mut compute = ModeledCompute { param_count: 2 };
+        let sp = spec(2, vec![8]);
+        let small = c
+            .train(&mut compute, &sp, &[0.0; 2], 100.0)
+            .unwrap()
+            .unwrap();
+        let large = c
+            .train(&mut compute, &sp, &[0.0; 2], 4000.0)
+            .unwrap()
+            .unwrap();
+        assert!(large.examples > small.examples);
+    }
+
+    #[test]
+    fn weak_device_picks_small_quantum() {
+        // A mobile at ~2 vec/s must drop to the B=1 artifact instead of
+        // blowing the sync barrier with one 16-second B=32 batch (§3.3d).
+        let mut rng = Pcg32::new(4);
+        let mut profile = DeviceClass::Mobile.sample_profile(&mut rng);
+        profile.power_vps = 2.0;
+        let mut c = SimClient::new(7, profile, 100 << 20, &mut rng);
+        let ds = server(10);
+        c.assign(&(0..10).collect::<Vec<_>>());
+        c.download_step(&ds, u64::MAX);
+        let sp = spec(2, vec![32, 8, 1]);
+        let mut compute = ModeledCompute { param_count: 2 };
+        let out = c
+            .train(&mut compute, &sp, &[0.0; 2], 3900.0)
+            .unwrap()
+            .unwrap();
+        // 2 vec/s × 3.9 s budget → ~7 single-vector batches, ≤ budget+1
+        assert!(out.examples <= 8, "{}", out.examples);
+        assert!(
+            out.compute_ms <= 4000.0,
+            "compute {} ms blew the barrier",
+            out.compute_ms
+        );
+    }
+
+    #[test]
+    fn strong_device_keeps_large_quantum() {
+        let mut c = client(8); // workstation ~250 vps
+        let ds = server(64);
+        c.assign(&(0..64).collect::<Vec<_>>());
+        c.download_step(&ds, u64::MAX);
+        let sp = spec(2, vec![32, 8, 1]);
+        let mut compute = ModeledCompute { param_count: 2 };
+        let out = c
+            .train(&mut compute, &sp, &[0.0; 2], 3900.0)
+            .unwrap()
+            .unwrap();
+        // ~250 vec/s × 3.9 s ≈ 975 examples in B=32 quanta
+        assert!(out.examples >= 800, "{}", out.examples);
+        assert_eq!(out.examples % 32, 0, "should use the B=32 quantum");
+    }
+}

@@ -1,0 +1,128 @@
+//! Latency monitoring and adaptive work scheduling (§3.3d).
+//!
+//! "At each reduce step, the master node estimates the latency between the
+//! client and the master and informs the client worker how long it should
+//! run for.  A client does not need to have a batch size because it just
+//! clocks its own computation and returns results at the end of its
+//! scheduled work time. ... if the user's device slows or has increased
+//! latency, the master will decrease the load on the device for the next
+//! iteration."
+
+use std::collections::BTreeMap;
+
+use crate::allocation::WorkerId;
+
+/// Prior estimate for a worker we have not heard from yet (ms round trip).
+pub const DEFAULT_PRIOR_MS: f64 = 50.0;
+
+/// EWMA smoothing factor for latency updates.
+const ALPHA: f64 = 0.3;
+
+/// Per-worker round-trip latency estimates + work-budget computation.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyMonitor {
+    estimates: BTreeMap<WorkerId, f64>,
+}
+
+impl LatencyMonitor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an observed round-trip overhead for `worker` (everything the
+    /// master saw beyond the scheduled compute time: network + queueing).
+    pub fn observe(&mut self, worker: WorkerId, observed_ms: f64) {
+        let e = self.estimates.entry(worker).or_insert(observed_ms);
+        *e = (1.0 - ALPHA) * *e + ALPHA * observed_ms;
+    }
+
+    /// Current estimate (prior if unseen).
+    pub fn estimate(&self, worker: WorkerId) -> f64 {
+        self.estimates
+            .get(&worker)
+            .copied()
+            .unwrap_or(DEFAULT_PRIOR_MS)
+    }
+
+    pub fn forget(&mut self, worker: WorkerId) {
+        self.estimates.remove(&worker);
+    }
+
+    /// The compute budget the master schedules for `worker` so that its
+    /// result arrives by the sync point: T minus the latency estimate
+    /// (clamped to ≥10% of T so even very slow links do some work —
+    /// matching the paper's goal of keeping every device contributing).
+    pub fn work_budget_ms(&self, worker: WorkerId, iter_ms: f64) -> f64 {
+        (iter_ms - self.estimate(worker)).max(0.1 * iter_ms)
+    }
+
+    /// §3.3d data-allocation adjustment trigger: a worker whose latency
+    /// eats more than `frac` of the iteration should shed cached load.
+    pub fn is_overloaded(&self, worker: WorkerId, iter_ms: f64, frac: f64) -> bool {
+        self.estimate(worker) > frac * iter_ms
+    }
+
+    /// Mean estimate over known workers (Fig 4's latency axis).
+    pub fn mean_estimate(&self) -> f64 {
+        if self.estimates.is_empty() {
+            return 0.0;
+        }
+        self.estimates.values().sum::<f64>() / self.estimates.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_toward_observations() {
+        let mut m = LatencyMonitor::new();
+        assert_eq!(m.estimate(1), DEFAULT_PRIOR_MS);
+        for _ in 0..50 {
+            m.observe(1, 100.0);
+        }
+        assert!((m.estimate(1) - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn first_observation_replaces_prior() {
+        let mut m = LatencyMonitor::new();
+        m.observe(7, 10.0);
+        assert_eq!(m.estimate(7), 10.0);
+    }
+
+    #[test]
+    fn budget_shrinks_with_latency() {
+        let mut m = LatencyMonitor::new();
+        m.observe(1, 500.0);
+        m.observe(2, 50.0);
+        let b1 = m.work_budget_ms(1, 4000.0);
+        let b2 = m.work_budget_ms(2, 4000.0);
+        assert!(b1 < b2);
+        assert!((b1 - 3500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_floor_keeps_slow_devices_working() {
+        let mut m = LatencyMonitor::new();
+        m.observe(1, 10_000.0);
+        assert_eq!(m.work_budget_ms(1, 4000.0), 400.0);
+    }
+
+    #[test]
+    fn overload_detection() {
+        let mut m = LatencyMonitor::new();
+        m.observe(1, 3000.0);
+        assert!(m.is_overloaded(1, 4000.0, 0.5));
+        assert!(!m.is_overloaded(1, 10_000.0, 0.5));
+    }
+
+    #[test]
+    fn forget_restores_prior() {
+        let mut m = LatencyMonitor::new();
+        m.observe(1, 1.0);
+        m.forget(1);
+        assert_eq!(m.estimate(1), DEFAULT_PRIOR_MS);
+    }
+}

@@ -1,0 +1,493 @@
+//! The master state machine: projects, the five-step event loop, reduce.
+
+use crate::allocation::{Allocator, Delta, WorkerId};
+use crate::metrics::{IterationRecord, Timeline};
+use crate::netsim::MasterModel;
+use crate::params::{GradAccumulator, Optimizer, OptimizerKind};
+
+use super::{LatencyMonitor, Payload, ReducePolicy, Submission};
+
+/// Master/project configuration (one project ≙ one NN being trained; the
+/// paper's master hosts several — see `sim::Simulation` which can run
+/// multiple masters).
+#[derive(Debug, Clone)]
+pub struct MasterConfig {
+    pub param_count: usize,
+    /// Iteration duration T in seconds (paper: 1–30 s, experiment: 4 s).
+    pub iter_duration_s: f64,
+    pub optimizer: OptimizerKind,
+    pub learning_rate: f32,
+    /// Per-worker data capacity (paper experiment: 3000).
+    pub capacity: usize,
+    pub policy: ReducePolicy,
+    /// Master ingestion model (bandwidth, per-message cost, #processes).
+    pub master_model: MasterModel,
+    /// Latency fraction of T above which a worker sheds data (§3.3d).
+    pub shed_threshold: f64,
+}
+
+impl MasterConfig {
+    /// Optimizer name for closures/CLI output.
+    pub fn optimizer_name(&self) -> String {
+        match self.optimizer {
+            OptimizerKind::Sgd => "sgd".into(),
+            OptimizerKind::Momentum => "momentum".into(),
+            OptimizerKind::AdaGrad => "adagrad".into(),
+            OptimizerKind::RmsProp => "rmsprop".into(),
+        }
+    }
+}
+
+impl Default for MasterConfig {
+    fn default() -> Self {
+        Self {
+            param_count: 0,
+            iter_duration_s: 4.0,
+            optimizer: OptimizerKind::AdaGrad,
+            learning_rate: 0.01,
+            capacity: crate::allocation::PAPER_CAPACITY,
+            policy: ReducePolicy::Sync,
+            master_model: MasterModel::default(),
+            shed_threshold: 0.5,
+        }
+    }
+}
+
+/// What one master-loop iteration produced.
+#[derive(Debug, Clone)]
+pub struct IterationOutcome {
+    /// Wall-clock the iteration consumed (≥ T·1000 under Sync).
+    pub wall_ms: f64,
+    /// Mean/max observed per-submission completion latency beyond the
+    /// scheduled compute time (network + master queueing) — Fig 4's
+    /// latency metric.
+    pub mean_latency_ms: f64,
+    pub max_latency_ms: f64,
+    /// Vectors processed by merged submissions.
+    pub vectors: u64,
+    /// Allocation changes triggered by §3.3d shedding this iteration.
+    pub shed_deltas: Vec<(WorkerId, Delta)>,
+    /// Master ingress bytes this iteration.
+    pub bytes_up: u64,
+    /// Broadcast bytes (step e).
+    pub bytes_down: u64,
+    /// Weighted mean training loss of merged work (None if nothing came).
+    pub mean_loss: Option<f64>,
+}
+
+/// One training project's master state.
+pub struct Master {
+    cfg: MasterConfig,
+    params: Vec<f32>,
+    optimizer: Box<dyn Optimizer>,
+    allocator: Allocator,
+    accumulator: GradAccumulator,
+    latency: LatencyMonitor,
+    iteration: u64,
+    t_virtual_ms: f64,
+    timeline: Timeline,
+    /// Async policy: submissions that missed this iteration's close.
+    carryover: Vec<Submission>,
+    /// Test error reported by trackers since the last iteration record.
+    pending_test_error: Option<f64>,
+}
+
+impl Master {
+    pub fn new(cfg: MasterConfig, init_params: Vec<f32>) -> Self {
+        assert_eq!(init_params.len(), cfg.param_count, "param dim mismatch");
+        let optimizer = cfg.optimizer.build(cfg.param_count, cfg.learning_rate);
+        Self {
+            allocator: Allocator::new(cfg.capacity),
+            accumulator: GradAccumulator::new(cfg.param_count),
+            latency: LatencyMonitor::new(),
+            optimizer,
+            params: init_params,
+            iteration: 0,
+            t_virtual_ms: 0.0,
+            timeline: Timeline::new(),
+            carryover: Vec::new(),
+            pending_test_error: None,
+            cfg,
+        }
+    }
+
+    // ------------------------------------------------------------ access
+
+    pub fn config(&self) -> &MasterConfig {
+        &self.cfg
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn set_params(&mut self, params: Vec<f32>) {
+        assert_eq!(params.len(), self.cfg.param_count);
+        self.params = params;
+    }
+
+    pub fn iteration(&self) -> u64 {
+        self.iteration
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.t_virtual_ms
+    }
+
+    pub fn timeline(&self) -> &Timeline {
+        &self.timeline
+    }
+
+    pub fn allocator(&self) -> &Allocator {
+        &self.allocator
+    }
+
+    pub fn latency_monitor(&self) -> &LatencyMonitor {
+        &self.latency
+    }
+
+    pub fn iter_ms(&self) -> f64 {
+        self.cfg.iter_duration_s * 1000.0
+    }
+
+    // -------------------------------------------------- events (steps a/b)
+
+    /// Step (a): data registered by a boss after a data-server upload.
+    pub fn register_data(&mut self, n: usize) -> Delta {
+        self.allocator.add_data(n)
+    }
+
+    /// Step (b): new trainer joins; returns the allocation delta (ids the
+    /// worker must download + revokes to others).  The paper has joiners
+    /// wait for the iteration boundary — the sim enforces that by calling
+    /// this between iterations.
+    pub fn worker_join(&mut self, w: WorkerId) -> Delta {
+        self.allocator.worker_join(w)
+    }
+
+    /// A client's data worker finished downloading `id` (§3.3a cached
+    /// index bookkeeping).
+    pub fn mark_cached(&mut self, w: WorkerId, id: crate::allocation::DataId) {
+        self.allocator.mark_cached(w, id);
+    }
+
+    /// Lost client (tab closed / churn): reallocate its data.
+    pub fn worker_leave(&mut self, w: WorkerId) -> Delta {
+        self.latency.forget(w);
+        self.carryover.retain(|s| s.worker != w);
+        self.allocator.worker_leave(w)
+    }
+
+    /// Step (d) scheduling half: the compute budget (ms) the master tells
+    /// `worker` to run for next iteration.
+    pub fn work_budget_ms(&self, w: WorkerId) -> f64 {
+        self.latency.work_budget_ms(w, self.iter_ms())
+    }
+
+    /// Tracker workers report test error right after a broadcast (§3.6
+    /// tracking mode); attached to the just-closed iteration's record
+    /// (it was computed with that iteration's parameters).  Before the
+    /// first iteration it is held for the first record instead.
+    pub fn report_test_error(&mut self, error: f64) {
+        if self.timeline.is_empty() {
+            self.pending_test_error = Some(error);
+        } else {
+            self.timeline.set_last_test_error(error);
+        }
+    }
+
+    // ------------------------------------------------------ step c/d/e
+
+    /// Close the current iteration: ingest submissions (policy-dependent),
+    /// run the reduce + optimizer step, update latency estimates, shed
+    /// overloaded workers, account the broadcast.  Returns the outcome and
+    /// advances virtual time.
+    pub fn finish_iteration(&mut self, submissions: Vec<Submission>) -> IterationOutcome {
+        let iter_ms = self.iter_ms();
+
+        // ---- ingest: compute completion time per submission (step c)
+        let mut subs = std::mem::take(&mut self.carryover);
+        let carried = subs.len();
+        subs.extend(submissions);
+        let arrivals: Vec<(f64, u64, usize)> = subs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                // Carryover merges at iteration start (offset 0).
+                let offset = if i < carried { 0.0 } else { s.send_offset_ms };
+                (offset, s.bytes, self.cfg.param_count)
+            })
+            .collect();
+        let completions = self.cfg.master_model.drain_delays(&arrivals);
+
+        // ---- split on-time vs late under the async policy
+        let mut merged_idx: Vec<usize> = Vec::new();
+        let mut late_idx: Vec<usize> = Vec::new();
+        for (i, &done) in completions.iter().enumerate() {
+            match self.cfg.policy {
+                ReducePolicy::Async if done > iter_ms && i >= carried => late_idx.push(i),
+                _ => merged_idx.push(i),
+            }
+        }
+
+        // ---- reduce (step c)
+        self.accumulator.reset();
+        let mut vectors = 0u64;
+        let mut loss_sum = 0.0f64;
+        let mut loss_examples = 0u64;
+        let mut bytes_up = 0u64;
+        for &i in &merged_idx {
+            let s = &subs[i];
+            match &s.payload {
+                Payload::Dense(g) => self.accumulator.add(g, s.examples),
+                Payload::Sparse(e) => self.accumulator.add_sparse(e, s.examples),
+            }
+            vectors += s.vectors;
+            loss_sum += s.loss_sum;
+            loss_examples += s.examples;
+            bytes_up += s.bytes;
+        }
+        if !self.accumulator.is_empty() {
+            let avg = self.accumulator.weighted_average();
+            self.optimizer.step(&mut self.params, &avg);
+        }
+
+        // ---- latency estimates (step d).  The monitor learns the part
+        // the client is responsible for (compute overrun + network:
+        // arrival − scheduled end) — the master's own queue/merge delay is
+        // known to it and must not shrink budgets.  The *reported* latency
+        // (Fig 4's metric) is completion-based: what a slave experiences
+        // between sending and the reduce picking it up.
+        let mut latencies: Vec<f64> = Vec::new();
+        for (i, &done) in completions.iter().enumerate() {
+            if i < carried {
+                continue;
+            }
+            let s = &subs[i];
+            let scheduled_end = self.latency.work_budget_ms(s.worker, iter_ms);
+            let network = (s.send_offset_ms - scheduled_end).max(0.0);
+            self.latency.observe(s.worker, network);
+            latencies.push((done - scheduled_end).max(0.0));
+        }
+
+        // ---- data-allocation adjustment (step d)
+        let mut shed_deltas = Vec::new();
+        for w in self.allocator.worker_ids() {
+            if self.latency.is_overloaded(w, iter_ms, self.cfg.shed_threshold) {
+                let owned = self.allocator.owned_by(w).len();
+                if owned > 1 {
+                    let delta = self.allocator.shed_load(w, owned / 4);
+                    if !delta.is_empty() {
+                        shed_deltas.push((w, delta));
+                    }
+                }
+            }
+        }
+
+        // ---- queue late submissions for the next iteration (async)
+        // (reverse order so indices stay valid under swap_remove)
+        for &i in late_idx.iter().rev() {
+            let s = subs.swap_remove(i);
+            self.carryover.push(s);
+        }
+
+        // ---- broadcast accounting (step e).  Bytes are charged to the
+        // egress metric; the broadcast itself pipelines with the next map
+        // step (a client starts computing as soon as *its* parameters
+        // arrive, it does not wait for the other clients' transfers), so
+        // it does not extend the synchronous wall time.
+        let n_clients = self.allocator.n_workers() as u64;
+        let bytes_down = n_clients * (self.cfg.param_count as u64 * 4);
+
+        // ---- wall clock: the sync barrier waits for the slowest merged
+        // submission ("asynchronous reduction callback delay", §3.3d).
+        let slowest = merged_idx
+            .iter()
+            .map(|&i| completions[i])
+            .fold(0.0f64, f64::max);
+        let wall_ms = match self.cfg.policy {
+            ReducePolicy::Async => iter_ms,
+            _ => slowest.max(iter_ms),
+        };
+        self.t_virtual_ms += wall_ms;
+        self.iteration += 1;
+
+        let mean_latency_ms = if latencies.is_empty() {
+            0.0
+        } else {
+            latencies.iter().sum::<f64>() / latencies.len() as f64
+        };
+        let max_latency_ms = latencies.iter().fold(0.0f64, |a, &b| a.max(b));
+        let mean_loss = if loss_examples > 0 {
+            Some(loss_sum / loss_examples as f64)
+        } else {
+            None
+        };
+
+        self.timeline.push(IterationRecord {
+            iteration: self.iteration - 1,
+            t_virtual_ms: self.t_virtual_ms,
+            vectors,
+            workers: merged_idx.len() as u32,
+            mean_latency_ms,
+            max_latency_ms,
+            loss: mean_loss,
+            test_error: self.pending_test_error.take(),
+            bytes_up,
+            bytes_down,
+        });
+
+        IterationOutcome {
+            wall_ms,
+            mean_latency_ms,
+            max_latency_ms,
+            vectors,
+            shed_deltas,
+            bytes_up,
+            bytes_down,
+            mean_loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: ReducePolicy) -> MasterConfig {
+        MasterConfig {
+            param_count: 2,
+            iter_duration_s: 4.0,
+            learning_rate: 0.1,
+            policy,
+            ..Default::default()
+        }
+    }
+
+    fn sub(worker: WorkerId, offset: f64, g: Vec<f32>, n: u64) -> Submission {
+        Submission {
+            worker,
+            payload: Payload::Dense(g),
+            examples: n,
+            vectors: n,
+            loss_sum: n as f64,
+            send_offset_ms: offset,
+            bytes: 64,
+        }
+    }
+
+    #[test]
+    fn sync_waits_for_slowest() {
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]);
+        m.register_data(10);
+        m.worker_join(1);
+        m.worker_join(2);
+        let out =
+            m.finish_iteration(vec![sub(1, 3900.0, vec![1.0, 1.0], 1), sub(2, 6000.0, vec![1.0, 1.0], 1)]);
+        assert!(out.wall_ms > 6000.0, "{}", out.wall_ms);
+        assert_eq!(out.vectors, 2);
+    }
+
+    #[test]
+    fn async_closes_at_t_and_carries_late_work() {
+        let mut m = Master::new(cfg(ReducePolicy::Async), vec![0.0; 2]);
+        m.register_data(10);
+        m.worker_join(1);
+        m.worker_join(2);
+        let out = m.finish_iteration(vec![
+            sub(1, 1000.0, vec![1.0, 1.0], 1),
+            sub(2, 7000.0, vec![1.0, 1.0], 1), // late
+        ]);
+        assert_eq!(out.vectors, 1);
+        assert!(out.wall_ms < 4600.0, "{}", out.wall_ms);
+        // late gradient merges next iteration even with no new submissions
+        let out2 = m.finish_iteration(vec![]);
+        assert_eq!(out2.vectors, 1);
+    }
+
+    #[test]
+    fn empty_iteration_is_safe_and_advances_time() {
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.5, -0.5]);
+        let p0 = m.params().to_vec();
+        let out = m.finish_iteration(vec![]);
+        assert_eq!(m.params(), p0.as_slice());
+        assert_eq!(out.vectors, 0);
+        assert!(out.mean_loss.is_none());
+        assert_eq!(m.iteration(), 1);
+        assert!(m.now_ms() >= 4000.0);
+    }
+
+    #[test]
+    fn weighted_average_across_heterogeneous_workers() {
+        // worker 1: 1 example grad sum [1, 0]; worker 2: 3 examples [0, 6]
+        // avg = [0.25, 1.5]; SGD lr=0.1 → params -= [0.025, 0.15]
+        let mut c = cfg(ReducePolicy::Sync);
+        c.optimizer = OptimizerKind::Sgd;
+        let mut m = Master::new(c, vec![0.0; 2]);
+        m.register_data(4);
+        m.worker_join(1);
+        m.finish_iteration(vec![
+            sub(1, 100.0, vec![1.0, 0.0], 1),
+            sub(1, 100.0, vec![0.0, 6.0], 3),
+        ]);
+        let p = m.params();
+        assert!((p[0] + 0.025).abs() < 1e-6 && (p[1] + 0.15).abs() < 1e-6, "{p:?}");
+    }
+
+    #[test]
+    fn latency_estimates_update_and_budgets_shrink() {
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]);
+        m.register_data(10);
+        m.worker_join(1);
+        let b0 = m.work_budget_ms(1);
+        for _ in 0..5 {
+            m.finish_iteration(vec![sub(1, 5000.0, vec![0.0, 0.0], 1)]);
+        }
+        assert!(m.work_budget_ms(1) < b0);
+    }
+
+    #[test]
+    fn overloaded_worker_sheds_data() {
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]);
+        m.register_data(100);
+        m.worker_join(1);
+        m.worker_join(2);
+        // worker 1 is extremely slow for several iterations
+        let mut shed_seen = false;
+        for _ in 0..6 {
+            let out = m.finish_iteration(vec![
+                sub(1, 9000.0, vec![0.0, 0.0], 1),
+                sub(2, 100.0, vec![0.0, 0.0], 1),
+            ]);
+            if out.shed_deltas.iter().any(|(w, _)| *w == 1) {
+                shed_seen = true;
+            }
+        }
+        assert!(shed_seen, "slow worker never shed load");
+        assert!(m.allocator().owned_by(1).len() < 50);
+        m.allocator().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn leave_during_training_reallocates() {
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]);
+        m.register_data(60);
+        m.worker_join(1);
+        m.worker_join(2);
+        m.finish_iteration(vec![sub(1, 10.0, vec![1.0, 1.0], 1)]);
+        let delta = m.worker_leave(1);
+        assert!(!delta.is_empty());
+        assert_eq!(m.allocator().owned_by(2).len(), 60);
+        m.allocator().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn test_error_lands_on_next_record() {
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]);
+        m.report_test_error(0.42);
+        m.finish_iteration(vec![]);
+        assert_eq!(m.timeline().last().unwrap().test_error, Some(0.42));
+        m.finish_iteration(vec![]);
+        assert_eq!(m.timeline().last().unwrap().test_error, None);
+    }
+}

@@ -1,0 +1,66 @@
+//! The master server — MLitB's coordination contribution.
+//!
+//! Implements the paper's **master event loop** (§3.3): a synchronized
+//! map-reduce iteration of user-set duration `T` with five ordered steps —
+//! (a) data upload/allocation, (b) new-trainer init + allocation,
+//! (c) the reduce step (weighted gradient average + AdaGrad), (d) latency
+//! monitoring + adaptive work budgets, (e) parameter broadcast — plus the
+//! paper's §5 mitigations as first-class reduce policies (async updates,
+//! partial gradients, multiple master processes).
+//!
+//! The master is *pure coordination*: it consumes [`Submission`]s (whose
+//! arrival offsets the simulation computes from compute budgets and link
+//! models) and produces parameter updates, allocation deltas, and timeline
+//! records.  This keeps it unit-testable without the PJRT engine.
+
+mod latency;
+mod master;
+mod reduce;
+
+pub use latency::{LatencyMonitor, DEFAULT_PRIOR_MS};
+pub use master::{IterationOutcome, Master, MasterConfig};
+pub use reduce::{Payload, ReducePolicy, Submission};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::PAPER_CAPACITY;
+    use crate::params::OptimizerKind;
+
+    /// One full synchronized iteration end-to-end at the coordinator level.
+    #[test]
+    fn one_iteration_updates_params_and_timeline() {
+        let cfg = MasterConfig {
+            param_count: 4,
+            iter_duration_s: 4.0,
+            optimizer: OptimizerKind::AdaGrad,
+            learning_rate: 0.1,
+            capacity: PAPER_CAPACITY,
+            policy: ReducePolicy::Sync,
+            ..Default::default()
+        };
+        let mut m = Master::new(cfg, vec![0.0; 4]);
+        m.register_data(100);
+        m.worker_join(1);
+        let sub = Submission {
+            worker: 1,
+            payload: Payload::Dense(vec![4.0, 4.0, 4.0, 4.0]),
+            examples: 4,
+            vectors: 4,
+            loss_sum: 9.2,
+            send_offset_ms: 4000.0,
+            bytes: 1024,
+        };
+        let out = m.finish_iteration(vec![sub]);
+        assert_eq!(m.iteration(), 1);
+        assert!(out.wall_ms >= 4000.0);
+        // AdaGrad first step: -lr * sign(g)
+        for p in m.params() {
+            assert!((p + 0.1).abs() < 1e-4, "{:?}", m.params());
+        }
+        assert_eq!(m.timeline().len(), 1);
+        let rec = m.timeline().last().unwrap();
+        assert_eq!(rec.vectors, 4);
+        assert!((rec.loss.unwrap() - 2.3).abs() < 1e-6);
+    }
+}

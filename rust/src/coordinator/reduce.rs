@@ -1,0 +1,156 @@
+//! Reduce-step policies: the paper's synchronized reduce plus the §5
+//! mitigations (asynchronous updates, partial-gradient communication).
+
+use crate::allocation::WorkerId;
+
+/// Gradient payload from one trainer for one iteration.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Full Σ-gradient over the worker's processed examples.
+    Dense(Vec<f32>),
+    /// Top-k (index, Σ-value) pairs — partial-gradient communication.
+    Sparse(Vec<(u32, f32)>),
+}
+
+impl Payload {
+    /// Wire size of this payload (f32 values, u32 indices).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Payload::Dense(v) => (v.len() * 4) as u64,
+            Payload::Sparse(v) => (v.len() * 8) as u64,
+        }
+    }
+
+    /// Build a sparse payload keeping the `keep_fraction` largest-|g|
+    /// coordinates ("send the most informative", §5 Communication
+    /// Overhead).
+    pub fn sparsify(dense: &[f32], keep_fraction: f64) -> Payload {
+        let keep = ((dense.len() as f64 * keep_fraction).ceil() as usize)
+            .clamp(1, dense.len());
+        let mut idx: Vec<u32> = (0..dense.len() as u32).collect();
+        // Partial selection by |g| descending.
+        idx.select_nth_unstable_by(keep - 1, |&a, &b| {
+            dense[b as usize]
+                .abs()
+                .partial_cmp(&dense[a as usize].abs())
+                .unwrap()
+        });
+        let mut entries: Vec<(u32, f32)> = idx[..keep]
+            .iter()
+            .map(|&i| (i, dense[i as usize]))
+            .collect();
+        entries.sort_unstable_by_key(|e| e.0);
+        Payload::Sparse(entries)
+    }
+}
+
+/// One trainer's end-of-iteration message, as seen at the master.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub worker: WorkerId,
+    pub payload: Payload,
+    /// Examples behind the Σ-gradient (weighting for the reduce).
+    pub examples: u64,
+    /// Data vectors processed this iteration (power accounting; equals
+    /// `examples` for dense, also for sparse — sparsity drops coordinates,
+    /// not examples).
+    pub vectors: u64,
+    /// Σ loss over processed examples.
+    pub loss_sum: f64,
+    /// When the message reaches the master, relative to iteration start
+    /// (ms): scheduled compute end + uplink latency + transmit time.
+    pub send_offset_ms: f64,
+    /// Wire bytes (payload + envelope) for the master's ingest model.
+    pub bytes: u64,
+}
+
+/// Reduce policy (§3.3c baseline; §5 mitigations as ablations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReducePolicy {
+    /// Paper prototype: barrier until the slowest submission arrives and
+    /// is merged ("asynchronous reduction callback delay").
+    Sync,
+    /// §5 mitigation: the iteration closes at T; late submissions are
+    /// merged in the *next* iteration (bounded staleness 1).
+    Async,
+    /// Sync barrier but workers send only the top-|g| fraction.
+    PartialSync { keep_fraction: f64 },
+}
+
+impl ReducePolicy {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "sync" {
+            Ok(ReducePolicy::Sync)
+        } else if s == "async" {
+            Ok(ReducePolicy::Async)
+        } else if let Some(frac) = s.strip_prefix("partial:") {
+            let f: f64 = frac
+                .parse()
+                .map_err(|_| format!("bad partial fraction '{frac}'"))?;
+            if !(0.0..=1.0).contains(&f) || f == 0.0 {
+                return Err(format!("partial fraction {f} out of (0, 1]"));
+            }
+            Ok(ReducePolicy::PartialSync { keep_fraction: f })
+        } else {
+            Err(format!("unknown policy '{s}' (sync|async|partial:<f>)"))
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ReducePolicy::Sync => "sync".into(),
+            ReducePolicy::Async => "async".into(),
+            ReducePolicy::PartialSync { keep_fraction } => format!("partial:{keep_fraction}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparsify_keeps_largest_magnitudes() {
+        let dense = vec![0.1, -5.0, 0.0, 3.0, -0.2];
+        let Payload::Sparse(entries) = Payload::sparsify(&dense, 0.4) else {
+            panic!()
+        };
+        assert_eq!(entries, vec![(1, -5.0), (3, 3.0)]);
+    }
+
+    #[test]
+    fn sparsify_full_fraction_keeps_everything() {
+        let dense = vec![1.0, 2.0, 3.0];
+        let Payload::Sparse(entries) = Payload::sparsify(&dense, 1.0) else {
+            panic!()
+        };
+        assert_eq!(entries.len(), 3);
+    }
+
+    #[test]
+    fn sparsify_keeps_at_least_one() {
+        let Payload::Sparse(entries) = Payload::sparsify(&[0.5, 0.1], 1e-9) else {
+            panic!()
+        };
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, 0);
+    }
+
+    #[test]
+    fn payload_bytes() {
+        assert_eq!(Payload::Dense(vec![0.0; 10]).bytes(), 40);
+        assert_eq!(Payload::Sparse(vec![(0, 1.0); 10]).bytes(), 80);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(ReducePolicy::parse("sync").unwrap(), ReducePolicy::Sync);
+        assert_eq!(ReducePolicy::parse("async").unwrap(), ReducePolicy::Async);
+        assert_eq!(
+            ReducePolicy::parse("partial:0.1").unwrap(),
+            ReducePolicy::PartialSync { keep_fraction: 0.1 }
+        );
+        assert!(ReducePolicy::parse("partial:0").is_err());
+        assert!(ReducePolicy::parse("wat").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Zip dataset archives — the paper's upload format (§3.2: "the data
+//! server handles zipped image classification datasets (where
+//! sub-directory names define class labels)").
+//!
+//! Layout inside the archive (mirroring `/cifar10/apple/apple_s_000022.png`):
+//! `class_<label>/img_<index>.f32` where each entry is the raw
+//! little-endian f32 tensor (this sandbox has no PNG/JPEG codecs; the
+//! decode step in the client pipeline is a pass-through, with its CPU cost
+//! modeled in the client's compute budget instead).
+
+use std::io::{Cursor, Read, Write};
+
+use zip::result::ZipError;
+use zip::write::FileOptions;
+use zip::{CompressionMethod, ZipArchive, ZipWriter};
+
+use super::Sample;
+
+/// Archive build/read failure.
+#[derive(Debug, thiserror::Error)]
+pub enum ArchiveError {
+    #[error("zip error: {0}")]
+    Zip(#[from] ZipError),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed entry name: {0}")]
+    BadEntry(String),
+    #[error("entry payload not a whole number of f32s: {0}")]
+    BadPayload(String),
+}
+
+/// Serialize samples into a zip archive (deflate — the paper ships real
+/// zip files over XHR and we account their true compressed size).
+pub fn build_archive(samples: &[Sample]) -> Result<Vec<u8>, ArchiveError> {
+    let mut zw = ZipWriter::new(Cursor::new(Vec::new()));
+    let opts =
+        FileOptions::default().compression_method(CompressionMethod::Deflated);
+    for (i, s) in samples.iter().enumerate() {
+        zw.start_file(format!("class_{}/img_{:06}.f32", s.label, i), opts)?;
+        let mut bytes = Vec::with_capacity(s.pixels.len() * 4);
+        for p in &s.pixels {
+            bytes.extend_from_slice(&p.to_le_bytes());
+        }
+        zw.write_all(&bytes)?;
+    }
+    Ok(zw.finish()?.into_inner())
+}
+
+/// Parse an archive back into samples (entry order).  Labels come from the
+/// directory name, as in the paper.
+pub fn read_archive(bytes: &[u8]) -> Result<Vec<Sample>, ArchiveError> {
+    let mut za = ZipArchive::new(Cursor::new(bytes))?;
+    let mut out = Vec::with_capacity(za.len());
+    for i in 0..za.len() {
+        let mut entry = za.by_index(i)?;
+        if entry.is_dir() {
+            continue;
+        }
+        let name = entry.name().to_string();
+        let label = parse_label(&name)?;
+        let mut payload = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut payload)?;
+        if payload.len() % 4 != 0 {
+            return Err(ArchiveError::BadPayload(name));
+        }
+        let pixels = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(Sample { label, pixels });
+    }
+    Ok(out)
+}
+
+/// `class_<label>/...` → label.
+fn parse_label(name: &str) -> Result<u8, ArchiveError> {
+    let dir = name
+        .split('/')
+        .next()
+        .ok_or_else(|| ArchiveError::BadEntry(name.to_string()))?;
+    let digits = dir
+        .strip_prefix("class_")
+        .ok_or_else(|| ArchiveError::BadEntry(name.to_string()))?;
+    digits
+        .parse::<u8>()
+        .map_err(|_| ArchiveError::BadEntry(name.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthSpec, Synthesizer};
+
+    #[test]
+    fn roundtrip_preserves_samples() {
+        let synth = Synthesizer::new(SynthSpec::mnist(1));
+        let samples = synth.corpus(20);
+        let bytes = build_archive(&samples).unwrap();
+        let back = read_archive(&bytes).unwrap();
+        assert_eq!(samples, back);
+    }
+
+    #[test]
+    fn archive_compresses() {
+        let synth = Synthesizer::new(SynthSpec::mnist(2));
+        let samples = synth.corpus(50);
+        let raw: usize = samples.iter().map(|s| s.pixels.len() * 4).sum();
+        let bytes = build_archive(&samples).unwrap();
+        assert!(
+            bytes.len() < raw,
+            "zip {} >= raw {raw}",
+            bytes.len()
+        );
+    }
+
+    #[test]
+    fn rejects_bad_entry_names() {
+        let mut zw = ZipWriter::new(Cursor::new(Vec::new()));
+        let opts = FileOptions::default();
+        zw.start_file("nolabel.f32", opts).unwrap();
+        zw.write_all(&[0u8; 8]).unwrap();
+        let bytes = zw.finish().unwrap().into_inner();
+        assert!(matches!(
+            read_archive(&bytes),
+            Err(ArchiveError::BadEntry(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_misaligned_payload() {
+        let mut zw = ZipWriter::new(Cursor::new(Vec::new()));
+        let opts = FileOptions::default();
+        zw.start_file("class_1/x.f32", opts).unwrap();
+        zw.write_all(&[0u8; 5]).unwrap();
+        let bytes = zw.finish().unwrap().into_inner();
+        assert!(matches!(
+            read_archive(&bytes),
+            Err(ArchiveError::BadPayload(_))
+        ));
+    }
+
+    #[test]
+    fn empty_archive_is_empty_corpus() {
+        let bytes = build_archive(&[]).unwrap();
+        assert!(read_archive(&bytes).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,58 @@
+//! Data substrate: synthetic corpora, zip dataset archives, the data
+//! server, and the client-side cache.
+//!
+//! Mirrors the paper's data path (§3.2–3.3a): users upload **zip files**
+//! whose sub-directory names define class labels; the data server registers
+//! *indices* with the master; clients download their allocated ids as
+//! zipped chunks over XHR, unzip, decode, and cache them locally
+//! ("a redundant cache of data is stored locally in the client's browser's
+//! memory", practical limit ~100 MB §3.7).
+//!
+//! MNIST/CIFAR-10 are not downloadable in this sandbox; `synth` builds
+//! deterministic, learnable stand-ins with the same tensor shapes (see
+//! DESIGN.md §Substitutions).
+
+mod archive;
+mod cache;
+mod server;
+mod synth;
+
+pub use archive::{build_archive, read_archive, ArchiveError};
+pub use cache::{ClientCache, PRACTICAL_BUDGET};
+pub use server::{DataServer, ServeStats};
+pub use synth::{SynthSpec, Synthesizer};
+
+use std::sync::Arc;
+
+/// One data vector: an image tensor (HWC, f32 in [0,1]) plus its label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub label: u8,
+    pub pixels: Vec<f32>,
+}
+
+impl Sample {
+    /// Serialized payload size (f32 pixels + 1 label byte) — the unit the
+    /// bandwidth model charges for.
+    pub fn byte_size(&self) -> u64 {
+        (self.pixels.len() * 4 + 1) as u64
+    }
+}
+
+/// Shared-ownership sample (server and many client caches hold the same
+/// buffer; cloning a fleet of caches must not copy pixel data).
+pub type SharedSample = Arc<Sample>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_byte_size() {
+        let s = Sample {
+            label: 3,
+            pixels: vec![0.0; 784],
+        };
+        assert_eq!(s.byte_size(), 784 * 4 + 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! The data server — "an independent Node.js application" in the paper
+//! (§3.2), here an in-process store with the same contract: accept zip
+//! uploads, register indices + labels, and serve id-addressed chunks to
+//! client data workers (zip over XHR in the paper; we serve shared sample
+//! handles and account the compressed byte cost for the bandwidth model).
+
+use std::sync::Arc;
+
+use super::{archive, ArchiveError, Sample, SharedSample};
+
+/// Transfer accounting for one serve call (fed to `netsim`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeStats {
+    pub ids: usize,
+    /// Estimated on-the-wire bytes (compressed zip payload).
+    pub bytes: u64,
+}
+
+/// Id-addressed dataset store.
+#[derive(Debug, Default, Clone)]
+pub struct DataServer {
+    samples: Vec<SharedSample>,
+    /// Measured compression ratio from uploads (wire bytes / raw bytes),
+    /// reused to estimate serve sizes without re-zipping per request.
+    compression_ratio: f64,
+}
+
+impl DataServer {
+    pub fn new() -> Self {
+        Self {
+            samples: Vec::new(),
+            compression_ratio: 1.0,
+        }
+    }
+
+    /// §3.3a: upload a zip; returns (first id, labels of new samples) —
+    /// the index/label registration the boss forwards to the master.
+    pub fn upload_zip(&mut self, bytes: &[u8]) -> Result<(u32, Vec<u8>), ArchiveError> {
+        let samples = archive::read_archive(bytes)?;
+        let raw: usize = samples.iter().map(|s| s.byte_size() as usize).sum();
+        if raw > 0 {
+            self.compression_ratio = bytes.len() as f64 / raw as f64;
+        }
+        let first = self.samples.len() as u32;
+        let labels = samples.iter().map(|s| s.label).collect();
+        self.samples
+            .extend(samples.into_iter().map(Arc::new));
+        Ok((first, labels))
+    }
+
+    /// Direct ingestion path used by simulations (skips the zip encode —
+    /// the byte cost is still modeled via `estimate_serve_bytes`).
+    pub fn upload_samples(&mut self, samples: Vec<Sample>) -> (u32, Vec<u8>) {
+        let raw: usize = samples.iter().map(|s| s.byte_size() as usize).sum();
+        if raw > 0 && self.compression_ratio == 1.0 {
+            // default ratio for synthetic f32 imagery (measured ~0.9)
+            self.compression_ratio = 0.9;
+        }
+        let first = self.samples.len() as u32;
+        let labels = samples.iter().map(|s| s.label).collect();
+        self.samples.extend(samples.into_iter().map(Arc::new));
+        (first, labels)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn get(&self, id: u32) -> Option<&SharedSample> {
+        self.samples.get(id as usize)
+    }
+
+    /// Serve a set of ids: shared handles + wire-byte estimate.
+    pub fn serve(&self, ids: &[u32]) -> (Vec<(u32, SharedSample)>, ServeStats) {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut raw_bytes = 0u64;
+        for &id in ids {
+            if let Some(s) = self.samples.get(id as usize) {
+                raw_bytes += s.byte_size();
+                out.push((id, Arc::clone(s)));
+            }
+        }
+        let stats = ServeStats {
+            ids: out.len(),
+            bytes: (raw_bytes as f64 * self.compression_ratio).ceil() as u64,
+        };
+        (out, stats)
+    }
+
+    /// Serve as a real zip payload (integration tests / examples).
+    pub fn serve_zip(&self, ids: &[u32]) -> Result<Vec<u8>, ArchiveError> {
+        let samples: Vec<Sample> = ids
+            .iter()
+            .filter_map(|&id| self.samples.get(id as usize))
+            .map(|s| (**s).clone())
+            .collect();
+        archive::build_archive(&samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{build_archive, SynthSpec, Synthesizer};
+
+    fn corpus(n: usize) -> Vec<Sample> {
+        Synthesizer::new(SynthSpec::mnist(3)).corpus(n)
+    }
+
+    #[test]
+    fn upload_zip_registers_indices() {
+        let mut ds = DataServer::new();
+        let bytes = build_archive(&corpus(10)).unwrap();
+        let (first, labels) = ds.upload_zip(&bytes).unwrap();
+        assert_eq!(first, 0);
+        assert_eq!(labels.len(), 10);
+        assert_eq!(ds.len(), 10);
+        // second upload appends
+        let (first2, _) = ds.upload_zip(&bytes).unwrap();
+        assert_eq!(first2, 10);
+        assert_eq!(ds.len(), 20);
+    }
+
+    #[test]
+    fn serve_returns_requested_ids() {
+        let mut ds = DataServer::new();
+        ds.upload_samples(corpus(10));
+        let (got, stats) = ds.serve(&[1, 3, 5]);
+        assert_eq!(stats.ids, 3);
+        assert!(stats.bytes > 0);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[1].0, 3);
+    }
+
+    #[test]
+    fn serve_skips_unknown_ids() {
+        let mut ds = DataServer::new();
+        ds.upload_samples(corpus(5));
+        let (got, stats) = ds.serve(&[2, 99]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(stats.ids, 1);
+    }
+
+    #[test]
+    fn serve_zip_roundtrips() {
+        let mut ds = DataServer::new();
+        let samples = corpus(6);
+        ds.upload_samples(samples.clone());
+        let zip = ds.serve_zip(&[0, 2]).unwrap();
+        let back = crate::data::read_archive(&zip).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], samples[0]);
+        assert_eq!(back[1], samples[2]);
+    }
+
+    #[test]
+    fn wire_estimate_tracks_compression() {
+        let mut ds = DataServer::new();
+        let samples = corpus(20);
+        let bytes = build_archive(&samples).unwrap();
+        ds.upload_zip(&bytes).unwrap();
+        let (_, stats) = ds.serve(&(0..20).collect::<Vec<_>>());
+        let raw: u64 = samples.iter().map(|s| s.byte_size()).sum();
+        // estimate should be close to the actual zip size, below raw
+        assert!(stats.bytes <= raw);
+        let actual = ds.serve_zip(&(0..20).collect::<Vec<_>>()).unwrap().len() as u64;
+        let ratio = stats.bytes as f64 / actual as f64;
+        assert!((0.7..1.4).contains(&ratio), "estimate {} actual {actual}", stats.bytes);
+    }
+}

@@ -1,0 +1,55 @@
+//! JSON substrate: value model, parser, serializer.
+//!
+//! MLitB's reproducibility story (§2.3, §3.6 of the paper) rests on JSON:
+//! *research closures* — model spec + parameters in a single universally
+//! readable object — and the AOT `manifest.json` are both JSON documents.
+//! serde is unavailable offline, so this is a complete from-scratch
+//! implementation: a recursive-descent parser (UTF-8, escapes, nesting
+//! limit) and a serializer (compact + pretty), with round-trip property
+//! tests in `testing`.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+/// Convenience: parse a file.
+pub fn from_file(path: &std::path::Path) -> Result<Value, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+}
+
+/// Convenience: build an object from pairs.
+pub fn object(pairs: Vec<(&str, Value)>) -> Value {
+    let mut map = BTreeMap::new();
+    for (k, v) in pairs {
+        map.insert(k.to_string(), v);
+    }
+    Value::Object(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_roundtrip() {
+        let v = object(vec![
+            ("name", Value::from("mnist_conv")),
+            ("params", Value::Array(vec![1.5.into(), (-2.0).into(), 0.0.into()])),
+            ("meta", object(vec![("iter", 100.into()), ("ok", true.into())])),
+            ("none", Value::Null),
+        ]);
+        let s = to_string(&v);
+        let back = parse(&s).unwrap();
+        assert_eq!(v, back);
+        let sp = to_string_pretty(&v);
+        assert_eq!(parse(&sp).unwrap(), v);
+    }
+}

@@ -1,0 +1,187 @@
+//! JSON value model with typed accessors.
+
+use std::collections::BTreeMap;
+
+/// A JSON document node.  Numbers are f64 (JSON has one number type); the
+/// integer accessors check representability.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Number(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Array index lookup.
+    pub fn at(&self, idx: usize) -> Option<&Value> {
+        self.as_array().and_then(|a| a.get(idx))
+    }
+
+    /// Typed helpers that surface an error message with the key path —
+    /// manifest parsing uses these to fail loudly on schema drift.
+    pub fn req_str(&self, key: &str) -> Result<&str, String> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("missing/invalid string field '{key}'"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize, String> {
+        self.get(key)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| format!("missing/invalid integer field '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("missing/invalid number field '{key}'"))
+    }
+
+    pub fn req_array(&self, key: &str) -> Result<&[Value], String> {
+        self.get(key)
+            .and_then(Value::as_array)
+            .ok_or_else(|| format!("missing/invalid array field '{key}'"))
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Number(n)
+    }
+}
+impl From<f32> for Value {
+    fn from(n: f32) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<i32> for Value {
+    fn from(n: i32) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::String(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::String(s)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Array(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v: Value = 3.0.into();
+        assert_eq!(v.as_i64(), Some(3));
+        assert_eq!(v.as_f64(), Some(3.0));
+        let v: Value = 3.5.into();
+        assert_eq!(v.as_i64(), None);
+        let v: Value = "hi".into();
+        assert_eq!(v.as_str(), Some("hi"));
+        assert_eq!(v.as_f64(), None);
+    }
+
+    #[test]
+    fn nested_lookup() {
+        let v = crate::json::object(vec![(
+            "a",
+            crate::json::object(vec![("b", Value::from(vec![1i64, 2, 3]))]),
+        )]);
+        let arr = v.get("a").unwrap().get("b").unwrap();
+        assert_eq!(arr.at(2).unwrap().as_i64(), Some(3));
+        assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn req_helpers_error_messages() {
+        let v = crate::json::object(vec![("n", 1.into())]);
+        assert!(v.req_str("n").is_err());
+        assert_eq!(v.req_usize("n").unwrap(), 1);
+        assert!(v.req_usize("gone").unwrap_err().contains("gone"));
+    }
+
+    #[test]
+    fn negative_to_usize_fails() {
+        let v = crate::json::object(vec![("n", (-2i64).into())]);
+        assert!(v.req_usize("n").is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! JSON serializer (compact + pretty).  Float formatting uses the shortest
+//! representation that round-trips (Rust's `{}` for f64 is shortest-exact),
+//! so research closures preserve parameter values bit-for-bit through a
+//! save/load cycle.
+
+use super::Value;
+
+/// Compact serialization (no whitespace).
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out, None, 0);
+    out
+}
+
+/// Pretty serialization (2-space indent), for human-facing closures.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out, Some(2), 0);
+    out
+}
+
+fn write_value(v: &Value, out: &mut String, indent: Option<usize>, level: usize) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Number(n) => write_number(*n, out),
+        Value::String(s) => write_string(s, out),
+        Value::Array(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, level + 1);
+                write_value(item, out, indent, level + 1);
+            }
+            newline_indent(out, indent, level);
+            out.push(']');
+        }
+        Value::Object(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, level + 1);
+                write_string(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(val, out, indent, level + 1);
+            }
+            newline_indent(out, indent, level);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * level {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; closures must never contain them (params are
+        // checked upstream) — serialize as null to stay spec-valid.
+        out.push_str("null");
+    } else if n == n.trunc() && n.abs() < 9.0e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{object, parse};
+
+    #[test]
+    fn compact_format() {
+        let v = object(vec![("b", 1.into()), ("a", Value::from(vec![1i64, 2]))]);
+        // BTreeMap: keys sorted
+        assert_eq!(to_string(&v), r#"{"a":[1,2],"b":1}"#);
+    }
+
+    #[test]
+    fn numbers_roundtrip_exactly() {
+        for x in [0.1f64, 1.0 / 3.0, 1e-300, -2.5e17, 123456789.123456] {
+            let s = to_string(&Value::Number(x));
+            let back = parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back, x, "{s}");
+        }
+    }
+
+    #[test]
+    fn integers_have_no_decimal_point() {
+        assert_eq!(to_string(&Value::Number(42.0)), "42");
+        assert_eq!(to_string(&Value::Number(-3.0)), "-3");
+    }
+
+    #[test]
+    fn f32_params_roundtrip() {
+        // Research closures store f32 params via f64; check exactness.
+        for x in [0.123456789f32, -1.5e-30, 3.4e38] {
+            let s = to_string(&Value::Number(x as f64));
+            let back = parse(&s).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back, x);
+        }
+    }
+
+    #[test]
+    fn string_escaping() {
+        let v = Value::from("a\"b\\c\nd\u{1}");
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn nonfinite_serializes_as_null() {
+        assert_eq!(to_string(&Value::Number(f64::NAN)), "null");
+        assert_eq!(to_string(&Value::Number(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn pretty_parses_back() {
+        let v = object(vec![
+            ("xs", Value::from(vec![1.5f64, 2.5])),
+            ("o", object(vec![("k", "v".into())])),
+        ]);
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    }
+}

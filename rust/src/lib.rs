@@ -1,0 +1,41 @@
+//! # MLitB — Machine Learning in the Browser, reproduced as a Rust+JAX stack
+//!
+//! This crate reproduces the distributed-training system of *"MLitB:
+//! Machine Learning in the Browser"* (Meeds, Hendriks, Al Faraby, Bruntink,
+//! Welling; 2014): a master/slave **synchronized map-reduce** framework for
+//! training neural networks with distributed SGD over a dynamic fleet of
+//! heterogeneous, unreliable clients.
+//!
+//! The browser fleet of the paper is replaced by a simulated client fleet
+//! (discrete-event, virtual clock); the JavaScript NN (ConvNetJS) is
+//! replaced by JAX/Pallas models AOT-compiled to HLO and executed through
+//! the PJRT C API (`runtime`).  Coordination logic — the five-step master
+//! event loop, pie-cutter data allocation, latency-adaptive work budgets,
+//! AdaGrad reduce, JSON research closures — is implemented faithfully.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * L1/L2 — `python/compile/` (build time only; never on the run path).
+//! * L3 — this crate: [`coordinator`] (master server), [`client`]
+//!   (simulated fleet), [`data`] (data server), [`allocation`]
+//!   (pie-cutter), [`params`] (optimizers), [`runtime`] (PJRT engine),
+//!   plus the from-scratch substrates [`json`], [`rng`], [`netsim`],
+//!   [`metrics`], [`cli`], [`bench`], [`testing`].
+
+pub mod allocation;
+pub mod bench;
+pub mod cli;
+pub mod client;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod params;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+
+/// Crate version string used in research closures and CLI output.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

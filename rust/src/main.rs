@@ -1,0 +1,193 @@
+//! `mlitb` — leader entrypoint for the MLitB reproduction.
+//!
+//! Subcommands:
+//!   train     run a distributed-SGD training simulation (real gradients)
+//!   scale     run the Fig-4 style coordination sweep (modeled compute)
+//!   inspect   print manifest/model info
+//!   closure   save/load round-trip check on a research closure
+//!
+//! Example:
+//!   mlitb train --model mnist_conv --nodes 4 --iters 50 --track-every 10
+
+use mlitb::cli::Args;
+use mlitb::client::DeviceClass;
+use mlitb::coordinator::ReducePolicy;
+use mlitb::model::{init_params, Manifest, ResearchClosure};
+use mlitb::params::OptimizerKind;
+use mlitb::runtime::{Engine, ModeledCompute};
+use mlitb::sim::{SimConfig, Simulation};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "scale" => cmd_scale(&args),
+        "inspect" => cmd_inspect(&args),
+        "closure" => cmd_closure(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "mlitb {} — Machine Learning in the Browser, reproduced in Rust+JAX\n\n\
+         USAGE: mlitb <train|scale|inspect|closure> [options]\n\n\
+         train:   --model <name> --nodes N --iters N --t-secs F --lr F\n\
+                  --optimizer sgd|momentum|adagrad|rmsprop --policy sync|async|partial:<f>\n\
+                  --track-every N --train-size N --test-size N --power-scale F\n\
+                  --capacity N --seed N --save-closure <path> --csv <path>\n\
+         scale:   --nodes-list 1,2,4,...  --iters N  (modeled compute)\n\
+         inspect: [--model <name>]\n\
+         closure: --model <name> --out <path>",
+        mlitb::VERSION
+    );
+}
+
+fn build_sim_config(args: &Args, spec: &mlitb::model::ModelSpec) -> Result<SimConfig, String> {
+    let nodes = args.get_usize("nodes", 4)?;
+    let mut cfg = SimConfig::paper_scaling(nodes, spec);
+    cfg.iterations = args.get_u64("iters", 50)?;
+    cfg.train_size = args.get_usize("train-size", 60_000)?;
+    cfg.test_size = args.get_usize("test-size", 2_000)?;
+    cfg.track_every = args.get_u64("track-every", 0)?;
+    cfg.power_scale = args.get_f64("power-scale", 1.0)?;
+    cfg.seed = args.get_u64("seed", 1)?;
+    cfg.master.iter_duration_s = args.get_f64("t-secs", 4.0)?;
+    cfg.master.learning_rate = args.get_f64("lr", 0.01)? as f32;
+    cfg.master.capacity = args.get_usize("capacity", 3000)?;
+    cfg.master.optimizer = OptimizerKind::parse(args.get_or("optimizer", "adagrad"))?;
+    cfg.master.policy = ReducePolicy::parse(args.get_or("policy", "sync"))?;
+    cfg.master.master_model.processes = args.get_usize("master-processes", 1)?;
+    let device = DeviceClass::parse(args.get_or("device", "workstation"))?;
+    cfg.fleet = vec![device; nodes];
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let model = args.get_or("model", "mnist_conv").to_string();
+    let mut engine = Engine::from_default_artifacts().map_err(|e| e.to_string())?;
+    engine.load_model(&model).map_err(|e| e.to_string())?;
+    let spec = engine.spec(&model).map_err(|e| e.to_string())?.clone();
+    let cfg = build_sim_config(args, &spec)?;
+    println!(
+        "training {model}: {} nodes, {} iters, T={}s, {} params, policy={}",
+        cfg.fleet.len(),
+        cfg.iterations,
+        cfg.master.iter_duration_s,
+        spec.param_count,
+        cfg.master.policy.name()
+    );
+    let mut sim = Simulation::new(cfg, spec.clone(), &mut engine);
+    let report = sim.run().map_err(|e| e.to_string())?;
+    for r in report.timeline.records() {
+        if r.iteration % 10 == 0 || r.test_error.is_some() {
+            println!(
+                "  iter {:>4}  loss={}  vectors={}  latency={:.1} ms{}",
+                r.iteration,
+                r.loss.map_or("-".into(), |l| format!("{l:.4}")),
+                r.vectors,
+                r.mean_latency_ms,
+                r.test_error
+                    .map_or(String::new(), |e| format!("  test_err={e:.4}"))
+            );
+        }
+    }
+    println!("done: {}", report.summary());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.timeline.to_csv()).map_err(|e| e.to_string())?;
+        println!("wrote timeline to {path}");
+    }
+    if let Some(path) = args.get("save-closure") {
+        let mut closure = ResearchClosure::new(&spec, sim.master().params());
+        closure.iteration = sim.master().iteration();
+        closure.optimizer = sim.master().config().optimizer_name();
+        closure.learning_rate = sim.master().config().learning_rate;
+        closure.iter_duration_s = sim.master().config().iter_duration_s;
+        closure.notes = format!("mlitb train, {} nodes", report.workers);
+        closure.save(std::path::Path::new(path))?;
+        println!("saved research closure to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<(), String> {
+    let model = args.get_or("model", "mnist_conv").to_string();
+    let manifest = Manifest::load_default()?;
+    let spec = manifest.model(&model)?.clone();
+    let nodes_list = args.get_usize_list("nodes-list", &[1, 2, 4, 8, 16, 32, 64, 96])?;
+    let iters = args.get_u64("iters", 20)?;
+    let mut table = mlitb::metrics::Table::new(
+        "scaling (modeled compute)",
+        &["nodes", "power vec/s", "latency ms", "wall s/iter"],
+    );
+    for &n in &nodes_list {
+        let mut cfg = SimConfig::paper_scaling(n, &spec);
+        cfg.iterations = iters;
+        cfg.seed = args.get_u64("seed", 1)?;
+        let mut compute = ModeledCompute {
+            param_count: spec.param_count,
+        };
+        let mut sim = Simulation::new(cfg, spec.clone(), &mut compute);
+        let report = sim.run().map_err(|e| e.to_string())?;
+        table.row(vec![
+            n.to_string(),
+            format!("{:.0}", report.power_vps),
+            format!("{:.1}", report.mean_latency_ms),
+            format!("{:.2}", report.virtual_secs / iters as f64),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), String> {
+    let manifest = Manifest::load_default()?;
+    println!("artifacts: {}", manifest.dir.display());
+    for (name, spec) in &manifest.models {
+        if let Some(only) = args.get("model") {
+            if only != name {
+                continue;
+            }
+        }
+        println!(
+            "model {name}: {} params, batch {}, input {:?}, {} classes",
+            spec.param_count, spec.batch_size, spec.input, spec.classes
+        );
+        for t in &spec.tensors {
+            println!("    {:<16} shape {:?} offset {}", t.name, t.shape, t.offset);
+        }
+        for (kind, file) in &spec.artifacts {
+            println!("    artifact {kind}: {file}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_closure(args: &Args) -> Result<(), String> {
+    let model = args.get_or("model", "mnist_conv").to_string();
+    let out = args.get_or("out", "/tmp/mlitb_closure.json").to_string();
+    let manifest = Manifest::load_default()?;
+    let spec = manifest.model(&model)?.clone();
+    let params = init_params(&spec, args.get_u64("seed", 1)?);
+    let closure = ResearchClosure::new(&spec, &params);
+    closure.save(std::path::Path::new(&out))?;
+    let back = ResearchClosure::load(std::path::Path::new(&out))?;
+    back.check_compatible(&spec)?;
+    println!(
+        "closure round-trip OK: {} ({} params) -> {out}",
+        back.model_name, back.param_count
+    );
+    Ok(())
+}

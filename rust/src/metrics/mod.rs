@@ -1,0 +1,38 @@
+//! Metrics substrate: counters, per-iteration timelines, summary stats and
+//! CSV/markdown table output — the instrumentation behind Figs 4/5/8.
+
+mod series;
+mod stats;
+mod table;
+
+pub use series::{IterationRecord, Timeline};
+pub use stats::Summary;
+pub use table::{Cell, Table};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_to_table() {
+        let mut tl = Timeline::new();
+        for i in 0..3 {
+            tl.push(IterationRecord {
+                iteration: i,
+                t_virtual_ms: (i as f64) * 4000.0,
+                vectors: 100 * (i + 1) as u64,
+                workers: 2,
+                mean_latency_ms: 35.0,
+                max_latency_ms: 50.0,
+                loss: Some(2.3 - i as f64 * 0.1),
+                test_error: None,
+                bytes_up: 1,
+                bytes_down: 2,
+            });
+        }
+        assert_eq!(tl.len(), 3);
+        let csv = tl.to_csv();
+        assert!(csv.lines().count() == 4); // header + 3 rows
+        assert!(csv.starts_with("iteration,"));
+    }
+}

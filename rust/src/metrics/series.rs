@@ -1,0 +1,182 @@
+//! Per-iteration timeline of the master event loop — the raw series behind
+//! the power/latency (Fig 4), convergence (Fig 5) and tracking (Fig 8)
+//! plots.
+
+/// One master-loop iteration's measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationRecord {
+    pub iteration: u64,
+    /// Virtual wall-clock at the end of the iteration (ms).
+    pub t_virtual_ms: f64,
+    /// Data vectors processed by all workers this iteration.
+    pub vectors: u64,
+    /// Trainer workers that contributed to the reduce step.
+    pub workers: u32,
+    /// Mean / max slave↔master latency observed this iteration (ms).
+    pub mean_latency_ms: f64,
+    pub max_latency_ms: f64,
+    /// Weighted-average training loss per example (if any work arrived).
+    pub loss: Option<f64>,
+    /// Test error from tracker workers (if a tracker ran this iteration).
+    pub test_error: Option<f64>,
+    /// Master ingress/egress bytes this iteration (gradients / broadcast).
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+/// Append-only series of iteration records with CSV export.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    records: Vec<IterationRecord>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: IterationRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[IterationRecord] {
+        &self.records
+    }
+
+    pub fn last(&self) -> Option<&IterationRecord> {
+        self.records.last()
+    }
+
+    /// Attach a tracker-worker test error to the most recent record (the
+    /// evaluation runs right after that iteration's broadcast).
+    pub fn set_last_test_error(&mut self, error: f64) {
+        if let Some(last) = self.records.last_mut() {
+            last.test_error = Some(error);
+        }
+    }
+
+    /// Aggregate power over the whole run: total vectors / total seconds —
+    /// Fig 4's y-axis.
+    pub fn power_vectors_per_sec(&self) -> f64 {
+        let vectors: u64 = self.records.iter().map(|r| r.vectors).sum();
+        match (self.records.first(), self.records.last()) {
+            (Some(first), Some(last)) if last.t_virtual_ms > 0.0 => {
+                let dt_ms = last.t_virtual_ms
+                    - (first.t_virtual_ms - first.iter_duration_hint());
+                if dt_ms <= 0.0 {
+                    return 0.0;
+                }
+                vectors as f64 / (dt_ms / 1000.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Mean of per-iteration mean latencies — Fig 4's second axis.
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        self.records.iter().map(|r| r.mean_latency_ms).sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    /// Last recorded test error at or before `iteration` (Fig 5 readout).
+    pub fn test_error_at(&self, iteration: u64) -> Option<f64> {
+        self.records
+            .iter()
+            .take_while(|r| r.iteration <= iteration)
+            .filter_map(|r| r.test_error)
+            .last()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "iteration,t_virtual_ms,vectors,workers,mean_latency_ms,max_latency_ms,loss,test_error,bytes_up,bytes_down\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.3},{},{},{:.3},{:.3},{},{},{},{}\n",
+                r.iteration,
+                r.t_virtual_ms,
+                r.vectors,
+                r.workers,
+                r.mean_latency_ms,
+                r.max_latency_ms,
+                r.loss.map_or(String::new(), |v| format!("{v:.6}")),
+                r.test_error.map_or(String::new(), |v| format!("{v:.6}")),
+                r.bytes_up,
+                r.bytes_down,
+            ));
+        }
+        out
+    }
+}
+
+impl IterationRecord {
+    /// Rough duration of one iteration for power normalization: the spacing
+    /// to use when only a single record exists.
+    fn iter_duration_hint(&self) -> f64 {
+        if self.iteration == 0 {
+            self.t_virtual_ms
+        } else {
+            self.t_virtual_ms / (self.iteration + 1) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64, t: f64, vectors: u64) -> IterationRecord {
+        IterationRecord {
+            iteration: i,
+            t_virtual_ms: t,
+            vectors,
+            workers: 1,
+            mean_latency_ms: 10.0,
+            max_latency_ms: 20.0,
+            loss: None,
+            test_error: if i == 1 { Some(0.5) } else { None },
+            bytes_up: 0,
+            bytes_down: 0,
+        }
+    }
+
+    #[test]
+    fn power_is_vectors_per_second() {
+        let mut tl = Timeline::new();
+        tl.push(rec(0, 4000.0, 400));
+        tl.push(rec(1, 8000.0, 400));
+        // 800 vectors over 8 seconds
+        assert!((tl.power_vectors_per_sec() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn test_error_at_iteration() {
+        let mut tl = Timeline::new();
+        tl.push(rec(0, 4000.0, 1));
+        tl.push(rec(1, 8000.0, 1));
+        tl.push(rec(2, 12000.0, 1));
+        assert_eq!(tl.test_error_at(0), None);
+        assert_eq!(tl.test_error_at(1), Some(0.5));
+        assert_eq!(tl.test_error_at(2), Some(0.5));
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut tl = Timeline::new();
+        tl.push(rec(0, 1.0, 1));
+        let csv = tl.to_csv();
+        assert!(csv.contains("0,1.000,1,1"));
+    }
+}

@@ -1,0 +1,150 @@
+//! Aligned text/markdown table printer for bench output — the benches print
+//! the same rows/series the paper's figures report.
+
+/// Column-aligned table with a title, printed to stdout or rendered to
+/// markdown for EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(cell.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn render_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Shorthand cell formatters used by the benches.
+pub trait Cell {
+    fn cell(&self) -> String;
+}
+
+impl Cell for f64 {
+    fn cell(&self) -> String {
+        if self.is_nan() {
+            "-".into()
+        } else if self.abs() >= 1000.0 {
+            format!("{self:.0}")
+        } else {
+            format!("{self:.2}")
+        }
+    }
+}
+
+impl Cell for u64 {
+    fn cell(&self) -> String {
+        format!("{self}")
+    }
+}
+
+impl Cell for usize {
+    fn cell(&self) -> String {
+        format!("{self}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["nodes", "power"]);
+        t.row(vec!["1".into(), "250.0".into()]);
+        t.row(vec!["96".into(), "15000.0".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() == 5);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("m", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn cell_formats() {
+        assert_eq!(1234.6f64.cell(), "1235");
+        assert_eq!(12.345f64.cell(), "12.35");
+        assert_eq!(f64::NAN.cell(), "-");
+        assert_eq!(42u64.cell(), "42");
+    }
+}

@@ -1,0 +1,223 @@
+//! Research closures — the paper's reproducibility object (§2.3, §6.4):
+//! "a single object containing model and algorithm configuration plus
+//! code, along with model parameters".  The prototype's JSON archive
+//! stores the model spec + parameters; ours additionally records the
+//! training algorithm, hyper-parameters, iteration count and optimizer —
+//! everything needed to resume or verify a run (the AOT artifact hash
+//! stands in for "code").
+
+use std::path::Path;
+
+use crate::json::{self, object, Value};
+use crate::model::ModelSpec;
+
+/// Closure format version.
+pub const CLOSURE_FORMAT: u32 = 1;
+
+/// A saved training state: model identity + parameters + algorithm.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResearchClosure {
+    pub model_name: String,
+    pub param_count: usize,
+    pub params: Vec<f32>,
+    pub optimizer: String,
+    pub learning_rate: f32,
+    pub iteration: u64,
+    /// Iteration duration T (seconds) the run used (§3.3).
+    pub iter_duration_s: f64,
+    /// Free-form provenance notes (who trained it, on what corpus).
+    pub notes: String,
+}
+
+impl ResearchClosure {
+    /// Build from a live training state.
+    pub fn new(spec: &ModelSpec, params: &[f32]) -> Self {
+        Self {
+            model_name: spec.name.clone(),
+            param_count: spec.param_count,
+            params: params.to_vec(),
+            optimizer: "adagrad".into(),
+            learning_rate: 0.01,
+            iteration: 0,
+            iter_duration_s: 4.0,
+            notes: String::new(),
+        }
+    }
+
+    /// Serialize to the JSON object (compact; params dominate the size).
+    pub fn to_json(&self) -> Value {
+        object(vec![
+            ("format", (CLOSURE_FORMAT as i64).into()),
+            ("kind", "mlitb-research-closure".into()),
+            ("model", self.model_name.as_str().into()),
+            ("param_count", self.param_count.into()),
+            ("optimizer", self.optimizer.as_str().into()),
+            ("learning_rate", (self.learning_rate as f64).into()),
+            ("iteration", (self.iteration as i64).into()),
+            ("iter_duration_s", self.iter_duration_s.into()),
+            ("notes", self.notes.as_str().into()),
+            (
+                "params",
+                Value::Array(
+                    self.params
+                        .iter()
+                        .map(|&p| Value::Number(p as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse back from JSON, with structural validation.
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        let format = v.req_usize("format")?;
+        if format as u32 > CLOSURE_FORMAT {
+            return Err(format!("closure format {format} is newer than supported"));
+        }
+        if v.req_str("kind")? != "mlitb-research-closure" {
+            return Err("not a research closure".into());
+        }
+        let param_count = v.req_usize("param_count")?;
+        let arr = v.req_array("params")?;
+        if arr.len() != param_count {
+            return Err(format!(
+                "closure declares {param_count} params but carries {}",
+                arr.len()
+            ));
+        }
+        let mut params = Vec::with_capacity(arr.len());
+        for (i, x) in arr.iter().enumerate() {
+            let f = x
+                .as_f64()
+                .ok_or_else(|| format!("param {i} is not a number"))?;
+            if !f.is_finite() {
+                return Err(format!("param {i} is not finite"));
+            }
+            params.push(f as f32);
+        }
+        Ok(Self {
+            model_name: v.req_str("model")?.to_string(),
+            param_count,
+            params,
+            optimizer: v.req_str("optimizer")?.to_string(),
+            learning_rate: v.req_f64("learning_rate")? as f32,
+            iteration: v.req_usize("iteration")? as u64,
+            iter_duration_s: v.req_f64("iter_duration_s")?,
+            notes: v.req_str("notes")?.to_string(),
+        })
+    }
+
+    /// Save to a file (pretty JSON — human-readable as the paper intends).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        Self::from_json(&json::from_file(path)?)
+    }
+
+    /// Check compatibility against a manifest spec before resuming.
+    pub fn check_compatible(&self, spec: &ModelSpec) -> Result<(), String> {
+        if self.model_name != spec.name {
+            return Err(format!(
+                "closure is for model '{}', artifact is '{}'",
+                self.model_name, spec.name
+            ));
+        }
+        if self.param_count != spec.param_count {
+            return Err(format!(
+                "closure has {} params, artifact expects {}",
+                self.param_count, spec.param_count
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 4,
+            batch_size: 2,
+            micro_batches: vec![2],
+            input: vec![2, 1, 1],
+            classes: 2,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![4],
+                offset: 0,
+                size: 4,
+                fan_in: 2,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let mut c = ResearchClosure::new(&spec(), &[0.1, -0.25, 3.5e-8, 0.0]);
+        c.iteration = 42;
+        c.notes = "trained on synth-mnist".into();
+        let back = ResearchClosure::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = ResearchClosure::new(&spec(), &[1.0, 2.0, 3.0, 4.0]);
+        let path = std::env::temp_dir().join("mlitb_closure_test.json");
+        c.save(&path).unwrap();
+        let back = ResearchClosure::load(&path).unwrap();
+        assert_eq!(c, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let c = ResearchClosure::new(&spec(), &[1.0, 2.0, 3.0, 4.0]);
+        let mut v = c.to_json();
+        if let Value::Object(o) = &mut v {
+            o.insert("param_count".into(), 3.into());
+        }
+        assert!(ResearchClosure::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_kind() {
+        let v = crate::json::object(vec![("format", 1.into()), ("kind", "x".into())]);
+        assert!(ResearchClosure::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn compatibility_checks() {
+        let c = ResearchClosure::new(&spec(), &[0.0; 4]);
+        assert!(c.check_compatible(&spec()).is_ok());
+        let mut other = spec();
+        other.param_count = 8;
+        assert!(c.check_compatible(&other).is_err());
+        let mut renamed = spec();
+        renamed.name = "other".into();
+        assert!(c.check_compatible(&renamed).is_err());
+    }
+
+    #[test]
+    fn rejects_nonfinite_params() {
+        let c = ResearchClosure::new(&spec(), &[1.0, 2.0, 3.0, 4.0]);
+        let mut v = c.to_json();
+        if let Value::Object(o) = &mut v {
+            // NaN serializes as null → parse will reject as non-number
+            o.insert(
+                "params".into(),
+                Value::Array(vec![1.into(), 2.into(), Value::Null, 4.into()]),
+            );
+        }
+        assert!(ResearchClosure::from_json(&v).is_err());
+    }
+}

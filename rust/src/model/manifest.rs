@@ -1,0 +1,280 @@
+//! `artifacts/manifest.json` reader — the contract between the AOT
+//! compile path and the Rust runtime (shapes, parameter layout, artifact
+//! filenames + checksums).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Value};
+
+/// One parameter tensor inside the flat vector (mirror of the Python
+/// `TensorSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub fan_in: usize,
+}
+
+/// One compiled model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub param_count: usize,
+    pub batch_size: usize,
+    /// Microbatch sizes compiled for grad/eval, largest first (§3.3d:
+    /// weak devices pick a smaller work quantum).
+    pub micro_batches: Vec<usize>,
+    /// Input tensor shape [H, W, C].
+    pub input: Vec<usize>,
+    pub classes: usize,
+    pub tensors: Vec<TensorSpec>,
+    /// kind ("grad"/"eval"/"predict", "grad_b8", ...) → artifact filename.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelSpec {
+    /// Pixels per example.
+    pub fn input_len(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    /// Artifact key for a (kind, microbatch) pair: the default batch uses
+    /// the bare kind, variants are suffixed (`grad_b8`).
+    pub fn artifact_key(&self, kind: &str, batch: usize) -> String {
+        if batch == self.batch_size {
+            kind.to_string()
+        } else {
+            format!("{kind}_b{batch}")
+        }
+    }
+
+    /// Largest compiled microbatch whose compute time fits `budget_ms` at
+    /// `power_vps` vectors/sec (falls back to the smallest quantum — the
+    /// paper's mobiles compute "only a few gradients per second").
+    pub fn pick_micro_batch(&self, power_vps: f64, budget_ms: f64) -> usize {
+        for &b in &self.micro_batches {
+            if b as f64 / power_vps * 1000.0 <= budget_ms {
+                return b;
+            }
+        }
+        self.micro_batches.last().copied().unwrap_or(self.batch_size)
+    }
+
+    /// Gradient message payload (flat f32 grads + loss + count), the unit
+    /// the bandwidth model charges per §3.7 ("> 1MB for small NNs" in
+    /// JSON; ours is binary f32).
+    pub fn grad_message_bytes(&self) -> u64 {
+        (self.param_count * 4 + 8) as u64
+    }
+
+    /// Parameter broadcast payload.
+    pub fn broadcast_bytes(&self) -> u64 {
+        (self.param_count * 4) as u64
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_size: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let doc = json::from_file(&dir.join("manifest.json"))?;
+        Self::from_value(dir, &doc)
+    }
+
+    /// Default artifacts directory: `$MLITB_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self, String> {
+        let dir = std::env::var("MLITB_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn from_value(dir: &Path, doc: &Value) -> Result<Self, String> {
+        let batch_size = doc.req_usize("batch_size")?;
+        let models_v = doc
+            .get("models")
+            .and_then(Value::as_object)
+            .ok_or("missing 'models' object")?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in models_v {
+            let mut tensors = Vec::new();
+            for tv in mv.req_array("tensors")? {
+                tensors.push(TensorSpec {
+                    name: tv.req_str("name")?.to_string(),
+                    shape: usize_list(tv, "shape")?,
+                    offset: tv.req_usize("offset")?,
+                    size: tv.req_usize("size")?,
+                    fan_in: tv.req_usize("fan_in")?,
+                });
+            }
+            let mut artifacts = BTreeMap::new();
+            let arts = mv
+                .get("artifacts")
+                .and_then(Value::as_object)
+                .ok_or_else(|| format!("model {name}: missing artifacts"))?;
+            for (kind, av) in arts {
+                artifacts.insert(kind.clone(), av.req_str("file")?.to_string());
+            }
+            let batch_size = mv.req_usize("batch_size")?;
+            let micro_batches = if mv.get("micro_batches").is_some() {
+                let mut mb = usize_list(mv, "micro_batches")?;
+                mb.sort_unstable_by(|a, b| b.cmp(a));
+                mb
+            } else {
+                vec![batch_size]
+            };
+            let spec = ModelSpec {
+                name: name.clone(),
+                param_count: mv.req_usize("param_count")?,
+                batch_size,
+                micro_batches,
+                input: usize_list(mv, "input")?,
+                classes: mv.req_usize("classes")?,
+                tensors,
+                artifacts,
+            };
+            validate(&spec)?;
+            models.insert(name.clone(), spec);
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            batch_size,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec, String> {
+        self.models
+            .get(name)
+            .ok_or_else(|| format!("model '{name}' not in manifest (have: {:?})", self.models.keys()))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, spec: &ModelSpec, kind: &str) -> Result<PathBuf, String> {
+        let file = spec
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| format!("model {}: no '{kind}' artifact", spec.name))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+fn usize_list(v: &Value, key: &str) -> Result<Vec<usize>, String> {
+    v.req_array(key)?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| format!("field '{key}': non-integer element"))
+        })
+        .collect()
+}
+
+/// Structural checks: contiguous offsets, sizes match shapes, count sums.
+fn validate(spec: &ModelSpec) -> Result<(), String> {
+    let mut offset = 0;
+    for t in &spec.tensors {
+        if t.offset != offset {
+            return Err(format!("model {}: tensor {} offset gap", spec.name, t.name));
+        }
+        let prod: usize = t.shape.iter().product();
+        if prod != t.size {
+            return Err(format!("model {}: tensor {} size mismatch", spec.name, t.name));
+        }
+        offset += t.size;
+    }
+    if offset != spec.param_count {
+        return Err(format!(
+            "model {}: param_count {} != tensor sum {offset}",
+            spec.name, spec.param_count
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    fn manifest_doc() -> Value {
+        parse(
+            r#"{
+              "format": 1, "batch_size": 32,
+              "models": {
+                "toy": {
+                  "param_count": 6, "batch_size": 32,
+                  "input": [1, 2, 1], "classes": 2,
+                  "layers": [],
+                  "tensors": [
+                    {"name": "w", "shape": [2, 2], "offset": 0, "size": 4, "fan_in": 2},
+                    {"name": "b", "shape": [2], "offset": 4, "size": 2, "fan_in": 2}
+                  ],
+                  "artifacts": {"grad": {"file": "grad_toy.hlo.txt", "sha256": "x", "bytes": 1}}
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::from_value(Path::new("/tmp"), &manifest_doc()).unwrap();
+        let spec = m.model("toy").unwrap();
+        assert_eq!(spec.param_count, 6);
+        assert_eq!(spec.input_len(), 2);
+        assert_eq!(spec.tensors.len(), 2);
+        assert_eq!(
+            m.artifact_path(spec, "grad").unwrap(),
+            PathBuf::from("/tmp/grad_toy.hlo.txt")
+        );
+        assert!(m.artifact_path(spec, "predict").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_offset_gap() {
+        let doc = parse(
+            r#"{"batch_size": 1, "models": {"bad": {
+                "param_count": 4, "batch_size": 1, "input": [1], "classes": 1,
+                "tensors": [{"name": "w", "shape": [2], "offset": 2, "size": 2, "fan_in": 1}],
+                "artifacts": {}
+            }}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_value(Path::new("."), &doc)
+            .unwrap_err()
+            .contains("offset gap"));
+    }
+
+    #[test]
+    fn rejects_bad_param_count() {
+        let doc = parse(
+            r#"{"batch_size": 1, "models": {"bad": {
+                "param_count": 5, "batch_size": 1, "input": [1], "classes": 1,
+                "tensors": [{"name": "w", "shape": [4], "offset": 0, "size": 4, "fan_in": 1}],
+                "artifacts": {}
+            }}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_value(Path::new("."), &doc)
+            .unwrap_err()
+            .contains("param_count"));
+    }
+
+    #[test]
+    fn message_sizes() {
+        let m = Manifest::from_value(Path::new("."), &manifest_doc()).unwrap();
+        let spec = m.model("toy").unwrap();
+        assert_eq!(spec.grad_message_bytes(), 6 * 4 + 8);
+        assert_eq!(spec.broadcast_bytes(), 24);
+    }
+}

@@ -1,0 +1,83 @@
+//! Model metadata: the AOT manifest (mirror of `python/compile/model.py`)
+//! and the paper's JSON **research closures** (§2.3, §3.6: "users can
+//! download the entire model specification and current parameter values in
+//! JSON format ... and initialize a new training session by uploading it").
+
+mod closure;
+mod manifest;
+
+pub use closure::{ResearchClosure, CLOSURE_FORMAT};
+pub use manifest::{Manifest, ModelSpec, TensorSpec};
+
+use crate::rng::{Normal, Pcg32};
+
+/// Initialize a flat parameter vector from the manifest layout: LeCun
+/// normal (σ = 1/√fan_in) for weights, zeros for biases — matching
+/// `model.init_params` on the Python side so closures are interchangeable.
+pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<f32> {
+    let mut out = vec![0.0f32; spec.param_count];
+    let mut rng = Pcg32::new(seed ^ 0x1217);
+    for t in &spec.tensors {
+        if t.name.ends_with("_b") {
+            continue; // biases stay zero
+        }
+        let dist = Normal::new(0.0, 1.0 / (t.fan_in as f64).sqrt());
+        for slot in &mut out[t.offset..t.offset + t.size] {
+            *slot = dist.sample(&mut rng) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 30,
+            batch_size: 4,
+            micro_batches: vec![4],
+            input: vec![2, 2, 1],
+            classes: 2,
+            tensors: vec![
+                TensorSpec {
+                    name: "l0_fc_w".into(),
+                    shape: vec![4, 5],
+                    offset: 0,
+                    size: 20,
+                    fan_in: 4,
+                },
+                TensorSpec {
+                    name: "l0_fc_b".into(),
+                    shape: vec![5],
+                    offset: 20,
+                    size: 5,
+                    fan_in: 4,
+                },
+                TensorSpec {
+                    name: "l1_fc_w".into(),
+                    shape: vec![5, 1],
+                    offset: 25,
+                    size: 5,
+                    fan_in: 5,
+                },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_zeros_biases_and_scales_weights() {
+        let spec = toy_spec();
+        let p = init_params(&spec, 1);
+        assert_eq!(p.len(), 30);
+        assert!(p[20..25].iter().all(|&x| x == 0.0), "biases nonzero");
+        let w_norm: f32 = p[0..20].iter().map(|x| x * x).sum();
+        assert!(w_norm > 0.0);
+        // deterministic per seed
+        assert_eq!(p, init_params(&spec, 1));
+        assert_ne!(p, init_params(&spec, 2));
+    }
+}

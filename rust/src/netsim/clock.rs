@@ -1,0 +1,68 @@
+//! Virtual wall-clock for discrete-event simulation.
+//!
+//! The master event loop runs against this clock: iterations advance it by
+//! max(T, slowest-response time), exactly the paper's "asynchronous
+//! reduction callback delay" — the reduce runs only after the slowest
+//! slave has returned (§3.3d).
+
+/// Monotonic virtual time in milliseconds.
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    now_ms: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self { now_ms: 0.0 }
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    pub fn now_secs(&self) -> f64 {
+        self.now_ms / 1000.0
+    }
+
+    /// Advance by `dt_ms` (must be non-negative).
+    pub fn advance(&mut self, dt_ms: f64) {
+        assert!(dt_ms >= 0.0 && dt_ms.is_finite(), "bad dt {dt_ms}");
+        self.now_ms += dt_ms;
+    }
+
+    /// Advance to an absolute timestamp (no-op if already past it).
+    pub fn advance_to(&mut self, t_ms: f64) {
+        if t_ms > self.now_ms {
+            self.now_ms = t_ms;
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = VirtualClock::new();
+        c.advance(100.0);
+        c.advance(0.0);
+        assert_eq!(c.now_ms(), 100.0);
+        c.advance_to(50.0); // in the past: no-op
+        assert_eq!(c.now_ms(), 100.0);
+        c.advance_to(250.0);
+        assert_eq!(c.now_secs(), 0.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad dt")]
+    fn rejects_negative_dt() {
+        VirtualClock::new().advance(-1.0);
+    }
+}

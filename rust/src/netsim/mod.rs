@@ -1,0 +1,40 @@
+//! Network simulator: virtual clock, per-link latency models, bandwidth
+//! accounting.
+//!
+//! The paper's testbed is a LAN of workstations plus (conceptually)
+//! cellular-connected mobile devices; "devices with a cellular network
+//! connection communicate with longer delays than hardwired machines"
+//! (§3.3d), and the Fig 4 latency knee comes from "all clients
+//! simultaneously sending gradients to the server at the end of each
+//! iteration" (§3.5) saturating a single master.  This module provides the
+//! virtual time base and the latency/bandwidth models that let the
+//! simulated fleet reproduce those effects deterministically.
+
+mod clock;
+mod link;
+
+pub use clock::VirtualClock;
+pub use link::{LinkModel, LinkProfile, MasterModel};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn hardwired_is_faster_than_cellular() {
+        let mut rng = Pcg32::new(1);
+        let lan = LinkModel::new(LinkProfile::Lan, &mut rng);
+        let cell = LinkModel::new(LinkProfile::Cellular, &mut rng);
+        let mut rng2 = Pcg32::new(2);
+        let n = 200;
+        let lan_mean: f64 =
+            (0..n).map(|_| lan.sample_latency_ms(&mut rng2)).sum::<f64>() / n as f64;
+        let cell_mean: f64 =
+            (0..n).map(|_| cell.sample_latency_ms(&mut rng2)).sum::<f64>() / n as f64;
+        assert!(
+            cell_mean > 3.0 * lan_mean,
+            "cellular {cell_mean} vs lan {lan_mean}"
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! Flat parameter-vector math and optimizers.
+//!
+//! The paper's master broadcasts "an array of model parameters" (§3.3e) and
+//! its reduce step "computes a weighted average of gradients from all
+//! workers and takes a gradient step using AdaGrad" (§3.6).  The L2 JAX
+//! models pack all parameters into a single flat f32 vector, so the entire
+//! reduce/update path is dense vector arithmetic over `&[f32]` — this
+//! module is the L3 hot path measured in `benches/micro.rs`.
+
+mod optimizer;
+mod vecmath;
+
+pub use optimizer::{AdaGrad, Momentum, Optimizer, OptimizerKind, RmsProp, Sgd};
+pub use vecmath::{add_assign, axpy, dot, l2_norm, scale, GradAccumulator};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end: accumulate two weighted worker gradients, AdaGrad-step,
+    /// verify against a hand-computed update.
+    #[test]
+    fn reduce_then_adagrad_matches_hand_calculation() {
+        let mut acc = GradAccumulator::new(3);
+        acc.add(&[1.0, 2.0, 3.0], 2); // worker A: 2 examples (sum-grad)
+        acc.add(&[3.0, 2.0, 1.0], 2); // worker B: 2 examples
+        let g = acc.weighted_average().to_vec(); // (gA+gB)/4
+        assert_eq!(g, vec![1.0, 1.0, 1.0]);
+
+        let mut opt = AdaGrad::new(3, 0.1, 1e-8);
+        let mut params = vec![0.0f32; 3];
+        opt.step(&mut params, &g);
+        // h = g², update = lr * g / (sqrt(h)+eps) = 0.1 * 1/1
+        for p in &params {
+            assert!((p + 0.1).abs() < 1e-5, "{params:?}");
+        }
+    }
+}

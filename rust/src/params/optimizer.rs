@@ -1,0 +1,296 @@
+//! Optimizers applied by the master after the reduce step.
+//!
+//! The paper's prototype uses **AdaGrad** (§3.6, [31] Duchi et al.); plain
+//! SGD, momentum and RMSProp are included as baselines for the convergence
+//! ablations.  All operate in place on the flat parameter vector with
+//! per-coordinate state owned by the optimizer (master-side, never
+//! communicated — only parameters are broadcast).
+
+/// A gradient-step rule over flat parameter vectors.
+pub trait Optimizer: Send {
+    /// Apply one update given the weighted-average gradient.
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+    /// Learning rate accessor (UI-adjustable in the paper's client, §3.6).
+    fn learning_rate(&self) -> f32;
+    fn set_learning_rate(&mut self, lr: f32);
+    /// Name for closures/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Which optimizer to build (parsed from CLI / research closures).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum,
+    AdaGrad,
+    RmsProp,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "sgd" => Ok(Self::Sgd),
+            "momentum" => Ok(Self::Momentum),
+            "adagrad" => Ok(Self::AdaGrad),
+            "rmsprop" => Ok(Self::RmsProp),
+            _ => Err(format!("unknown optimizer '{s}' (sgd|momentum|adagrad|rmsprop)")),
+        }
+    }
+
+    /// Instantiate with standard hyper-parameters.
+    pub fn build(self, dim: usize, lr: f32) -> Box<dyn Optimizer> {
+        match self {
+            Self::Sgd => Box::new(Sgd::new(lr)),
+            Self::Momentum => Box::new(Momentum::new(dim, lr, 0.9)),
+            Self::AdaGrad => Box::new(AdaGrad::new(dim, lr, 1e-8)),
+            Self::RmsProp => Box::new(RmsProp::new(dim, lr, 0.99, 1e-8)),
+        }
+    }
+}
+
+/// Plain SGD: p ← p − lr·g.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Self { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        let lr = self.lr;
+        for (p, g) in params.iter_mut().zip(grad.iter()) {
+            *p -= lr * *g;
+        }
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Classical momentum: v ← μv + g; p ← p − lr·v.
+#[derive(Debug, Clone)]
+pub struct Momentum {
+    lr: f32,
+    mu: f32,
+    velocity: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(dim: usize, lr: f32, mu: f32) -> Self {
+        Self {
+            lr,
+            mu,
+            velocity: vec![0.0; dim],
+        }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        debug_assert_eq!(params.len(), self.velocity.len());
+        let (lr, mu) = (self.lr, self.mu);
+        for ((p, g), v) in params.iter_mut().zip(grad.iter()).zip(self.velocity.iter_mut()) {
+            *v = mu * *v + *g;
+            *p -= lr * *v;
+        }
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+}
+
+/// AdaGrad (Duchi et al. 2011) — the paper's update rule:
+/// h ← h + g²; p ← p − lr·g / (√h + ε).
+#[derive(Debug, Clone)]
+pub struct AdaGrad {
+    lr: f32,
+    eps: f32,
+    hist: Vec<f32>,
+}
+
+impl AdaGrad {
+    pub fn new(dim: usize, lr: f32, eps: f32) -> Self {
+        Self {
+            lr,
+            eps,
+            hist: vec![0.0; dim],
+        }
+    }
+
+    /// Accumulated squared-gradient state (inspectable for tests/closures).
+    pub fn history(&self) -> &[f32] {
+        &self.hist
+    }
+}
+
+impl Optimizer for AdaGrad {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        debug_assert_eq!(params.len(), self.hist.len());
+        let (lr, eps) = (self.lr, self.eps);
+        for ((p, g), h) in params.iter_mut().zip(grad.iter()).zip(self.hist.iter_mut()) {
+            *h += *g * *g;
+            *p -= lr * *g / (h.sqrt() + eps);
+        }
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+}
+
+/// RMSProp: h ← ρh + (1−ρ)g²; p ← p − lr·g / (√h + ε).
+#[derive(Debug, Clone)]
+pub struct RmsProp {
+    lr: f32,
+    rho: f32,
+    eps: f32,
+    hist: Vec<f32>,
+}
+
+impl RmsProp {
+    pub fn new(dim: usize, lr: f32, rho: f32, eps: f32) -> Self {
+        Self {
+            lr,
+            rho,
+            eps,
+            hist: vec![0.0; dim],
+        }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        let (lr, rho, eps) = (self.lr, self.rho, self.eps);
+        for ((p, g), h) in params.iter_mut().zip(grad.iter()).zip(self.hist.iter_mut()) {
+            *h = rho * *h + (1.0 - rho) * *g * *g;
+            *p -= lr * *g / (h.sqrt() + eps);
+        }
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn name(&self) -> &'static str {
+        "rmsprop"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step() {
+        let mut opt = Sgd::new(0.5);
+        let mut p = vec![1.0, -1.0];
+        opt.step(&mut p, &[2.0, -2.0]);
+        assert_eq!(p, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = Momentum::new(1, 0.1, 0.9);
+        let mut p = vec![0.0];
+        opt.step(&mut p, &[1.0]); // v=1,   p=-0.1
+        opt.step(&mut p, &[1.0]); // v=1.9, p=-0.29
+        assert!((p[0] + 0.29).abs() < 1e-6, "{p:?}");
+    }
+
+    #[test]
+    fn adagrad_shrinks_effective_lr() {
+        let mut opt = AdaGrad::new(1, 0.1, 0.0);
+        let mut p = vec![0.0];
+        opt.step(&mut p, &[1.0]);
+        let d1 = -p[0]; // 0.1 / sqrt(1)
+        let before = p[0];
+        opt.step(&mut p, &[1.0]);
+        let d2 = before - p[0]; // 0.1 / sqrt(2)
+        assert!(d2 < d1, "d1={d1} d2={d2}");
+        assert!((d2 - 0.1 / 2.0_f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adagrad_invariant_to_gradient_scale_direction() {
+        // AdaGrad's first step is lr * sign(g) (per coordinate, eps=0).
+        let mut a = AdaGrad::new(2, 0.1, 0.0);
+        let mut pa = vec![0.0, 0.0];
+        a.step(&mut pa, &[100.0, -0.001]);
+        assert!((pa[0] + 0.1).abs() < 1e-6);
+        assert!((pa[1] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsprop_converges_on_quadratic() {
+        // minimize f(p)=p² ; grad=2p
+        let mut opt = RmsProp::new(1, 0.05, 0.9, 1e-8);
+        let mut p = vec![5.0f32];
+        for _ in 0..300 {
+            let g = [2.0 * p[0]];
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].abs() < 0.1, "{p:?}");
+    }
+
+    #[test]
+    fn all_optimizers_reduce_quadratic_loss() {
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Momentum,
+            OptimizerKind::AdaGrad,
+            OptimizerKind::RmsProp,
+        ] {
+            let mut opt = kind.build(2, 0.05);
+            let mut p = vec![3.0f32, -2.0];
+            let f = |p: &[f32]| p[0] * p[0] + p[1] * p[1];
+            let f0 = f(&p);
+            for _ in 0..500 {
+                let g = [2.0 * p[0], 2.0 * p[1]];
+                opt.step(&mut p, &g);
+            }
+            // AdaGrad's effective lr decays as 1/√t, so it moves slowest;
+            // all must still cut the quadratic loss by ≥2×.
+            assert!(f(&p) < f0 * 0.5, "{} failed: {} -> {}", opt.name(), f0, f(&p));
+        }
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(OptimizerKind::parse("adagrad").unwrap(), OptimizerKind::AdaGrad);
+        assert!(OptimizerKind::parse("adam").is_err());
+    }
+
+    #[test]
+    fn learning_rate_is_adjustable() {
+        let mut opt = OptimizerKind::AdaGrad.build(1, 0.1);
+        opt.set_learning_rate(0.5);
+        assert_eq!(opt.learning_rate(), 0.5);
+    }
+}

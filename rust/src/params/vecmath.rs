@@ -1,0 +1,207 @@
+//! Dense f32 vector kernels for the reduce step.
+//!
+//! These loops are the master's per-iteration cost (the paper's latency
+//! knee at 64 nodes comes from the master serially processing gradient
+//! messages, §3.5).  They are written as straight slices-of-f32 loops that
+//! LLVM auto-vectorizes; `benches/micro.rs` tracks ns/param.
+
+/// y += a * x  (the gradient-merge kernel).
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// y += x.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += *xi;
+    }
+}
+
+/// x *= a.
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Dot product (f64 accumulator for stability in norms over ~100k params).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| *x as f64 * *y as f64)
+        .sum()
+}
+
+/// ‖x‖₂.
+#[inline]
+pub fn l2_norm(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Accumulates *sum* gradients from workers along with their example
+/// counts, producing the weighted average the paper's reduce step uses
+/// (§3.6: "a weighted average of gradients from all workers").
+///
+/// Workers return Σ-gradients over `n_k` examples; the weighted average is
+/// (Σ_k g_k) / (Σ_k n_k) — heterogeneous batch counts are weighted
+/// correctly for free.  The buffer is reused across iterations (zero
+/// allocation on the hot path).
+#[derive(Debug, Clone)]
+pub struct GradAccumulator {
+    sum: Vec<f32>,
+    count: u64,
+    contributions: u32,
+}
+
+impl GradAccumulator {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            sum: vec![0.0; dim],
+            count: 0,
+            contributions: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sum.len()
+    }
+
+    /// Merge one worker's sum-gradient over `examples` data vectors.
+    pub fn add(&mut self, grad_sum: &[f32], examples: u64) {
+        assert_eq!(grad_sum.len(), self.sum.len(), "gradient dim mismatch");
+        add_assign(&mut self.sum, grad_sum);
+        self.count += examples;
+        self.contributions += 1;
+    }
+
+    /// Merge a *sparse* partial gradient (index, value) pairs — the paper's
+    /// §5 "partial communication of gradients" mitigation.  Values are sums
+    /// over the worker's examples, same convention as `add`.
+    pub fn add_sparse(&mut self, entries: &[(u32, f32)], examples: u64) {
+        for &(i, v) in entries {
+            self.sum[i as usize] += v;
+        }
+        self.count += examples;
+        self.contributions += 1;
+    }
+
+    pub fn examples(&self) -> u64 {
+        self.count
+    }
+
+    pub fn contributions(&self) -> u32 {
+        self.contributions
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The weighted-average gradient; empty accumulator yields zeros.
+    pub fn weighted_average(&self) -> Vec<f32> {
+        let mut avg = self.sum.clone();
+        if self.count > 0 {
+            scale(&mut avg, 1.0 / self.count as f32);
+        }
+        avg
+    }
+
+    /// In-place variant writing into a caller-provided buffer (hot path).
+    pub fn weighted_average_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.sum.len());
+        let inv = if self.count > 0 {
+            1.0 / self.count as f32
+        } else {
+            0.0
+        };
+        for (o, s) in out.iter_mut().zip(self.sum.iter()) {
+            *o = *s * inv;
+        }
+    }
+
+    /// Reset for the next iteration without freeing the buffer.
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|x| *x = 0.0);
+        self.count = 0;
+        self.contributions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0]);
+        assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_average_respects_counts() {
+        let mut acc = GradAccumulator::new(2);
+        // worker A: 1 example with grad [1, 0]; worker B: 3 examples, sum [0, 6]
+        acc.add(&[1.0, 0.0], 1);
+        acc.add(&[0.0, 6.0], 3);
+        assert_eq!(acc.weighted_average(), vec![0.25, 1.5]);
+        assert_eq!(acc.examples(), 4);
+        assert_eq!(acc.contributions(), 2);
+    }
+
+    #[test]
+    fn empty_average_is_zero() {
+        let acc = GradAccumulator::new(3);
+        assert!(acc.is_empty());
+        assert_eq!(acc.weighted_average(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn sparse_equals_dense_on_support() {
+        let mut dense = GradAccumulator::new(4);
+        dense.add(&[0.0, 5.0, 0.0, -1.0], 2);
+        let mut sparse = GradAccumulator::new(4);
+        sparse.add_sparse(&[(1, 5.0), (3, -1.0)], 2);
+        assert_eq!(dense.weighted_average(), sparse.weighted_average());
+    }
+
+    #[test]
+    fn reset_reuses_buffer() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&[1.0, 1.0], 1);
+        acc.reset();
+        assert!(acc.is_empty());
+        assert_eq!(acc.weighted_average(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let mut acc = GradAccumulator::new(3);
+        acc.add(&[3.0, 6.0, 9.0], 3);
+        let mut out = vec![0.0; 3];
+        acc.weighted_average_into(&mut out);
+        assert_eq!(out, acc.weighted_average());
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn dim_mismatch_panics() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&[1.0], 1);
+    }
+}

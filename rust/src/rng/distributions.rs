@@ -1,0 +1,154 @@
+//! Sampling distributions over [`Pcg32`], used by the network simulator
+//! (latency models), the churn process, and synthetic-data generation.
+
+use super::Pcg32;
+
+/// Uniform over [lo, hi).
+#[derive(Debug, Clone, Copy)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo);
+        Self { lo, hi }
+    }
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.gen_f64()
+    }
+}
+
+/// Gaussian via Marsaglia polar method (no cached spare: simpler, still fast
+/// enough for simulation workloads).
+#[derive(Debug, Clone, Copy)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0);
+        Self { mean, std }
+    }
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        loop {
+            let u = 2.0 * rng.gen_f64() - 1.0;
+            let v = 2.0 * rng.gen_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let factor = (-2.0 * s.ln() / s).sqrt();
+                return self.mean + self.std * u * factor;
+            }
+        }
+    }
+}
+
+/// Exponential with rate λ (mean 1/λ): inter-arrival times of churn events.
+#[derive(Debug, Clone, Copy)]
+pub struct Exp {
+    pub rate: f64,
+}
+
+impl Exp {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        Self { rate }
+    }
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        // Inverse CDF; 1-u in (0,1] avoids ln(0).
+        -(1.0 - rng.gen_f64()).ln() / self.rate
+    }
+}
+
+/// Log-normal — heavy-tailed latency jitter (the paper's cellular links
+/// "communicate with longer delays"; heavy tails model stragglers).
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        Self { mu, sigma }
+    }
+    /// Construct from the desired median and a tail factor σ.
+    pub fn from_median(median: f64, sigma: f64) -> Self {
+        Self {
+            mu: median.ln(),
+            sigma,
+        }
+    }
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        let n = Normal::new(self.mu, self.sigma).sample(rng);
+        n.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_of(mut f: impl FnMut(&mut Pcg32) -> f64, n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| f(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let d = Uniform::new(2.0, 6.0);
+        let m = mean_of(|r| d.sample(r), 50_000, 1);
+        assert!((m - 4.0).abs() < 0.05, "{m}");
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let d = Uniform::new(-1.0, 1.0);
+        let mut rng = Pcg32::new(2);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((-1.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_mean_and_std() {
+        let d = Normal::new(10.0, 3.0);
+        let mut rng = Pcg32::new(3);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean={mean}");
+        assert!((var.sqrt() - 3.0).abs() < 0.05, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn exp_mean_matches_rate() {
+        let d = Exp::new(0.5); // mean 2
+        let m = mean_of(|r| d.sample(r), 100_000, 4);
+        assert!((m - 2.0).abs() < 0.05, "{m}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let d = LogNormal::from_median(50.0, 0.5);
+        let mut rng = Pcg32::new(5);
+        let mut xs: Vec<f64> = (0..50_001).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[25_000];
+        assert!((median - 50.0).abs() < 2.0, "median={median}");
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let d = LogNormal::from_median(10.0, 1.0);
+        let mut rng = Pcg32::new(6);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) > 0.0);
+        }
+    }
+}

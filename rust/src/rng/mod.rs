@@ -1,0 +1,83 @@
+//! Deterministic PRNG substrate (PCG32) + distributions.
+//!
+//! The `rand` crate family is not available in this offline environment, so
+//! the simulation's randomness — device heterogeneity, latency jitter,
+//! churn, data synthesis, parameter init — is built on a small,
+//! well-understood generator: PCG-XSH-RR 64/32 (O'Neill 2014).  Everything
+//! in the repo that draws randomness takes an explicit seed, making every
+//! experiment bit-reproducible (the paper's §2.3 reproducibility goal).
+
+mod distributions;
+mod pcg;
+
+pub use distributions::{Exp, LogNormal, Normal, Uniform};
+pub use pcg::Pcg32;
+
+/// Fisher–Yates shuffle with an explicit generator.
+pub fn shuffle<T>(rng: &mut Pcg32, xs: &mut [T]) {
+    if xs.is_empty() {
+        return;
+    }
+    for i in (1..xs.len()).rev() {
+        let j = rng.gen_range_usize(i + 1);
+        xs.swap(i, j);
+    }
+}
+
+/// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+pub fn sample_indices(rng: &mut Pcg32, n: usize, k: usize) -> Vec<usize> {
+    let k = k.min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.gen_range_usize(n - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(42);
+        let mut xs: Vec<u32> = (0..100).collect();
+        shuffle(&mut rng, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn shuffle_deterministic_per_seed() {
+        let run = |seed| {
+            let mut rng = Pcg32::new(seed);
+            let mut xs: Vec<u32> = (0..32).collect();
+            shuffle(&mut rng, &mut xs);
+            xs
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg32::new(1);
+        let s = sample_indices(&mut rng, 50, 20);
+        assert_eq!(s.len(), 20);
+        let mut d = s.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn sample_indices_k_exceeding_n_clamps() {
+        let mut rng = Pcg32::new(1);
+        assert_eq!(sample_indices(&mut rng, 3, 10).len(), 3);
+    }
+}

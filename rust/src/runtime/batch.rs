@@ -1,0 +1,105 @@
+//! Microbatch assembly from cached samples.
+//!
+//! Artifacts are compiled for a fixed batch size B; trainers cycle through
+//! their allocated ids producing full batches (the paper's client "performs
+//! as many gradient computations as possible within the iteration duration
+//! T", §3.6 — there is no data-defined batch size).
+
+use crate::data::SharedSample;
+
+/// Reusable flat buffers for one model's batch shape (zero allocation per
+/// microbatch on the hot path).
+#[derive(Debug, Clone)]
+pub struct BatchBuilder {
+    batch_size: usize,
+    input_len: usize,
+    images: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+impl BatchBuilder {
+    pub fn new(batch_size: usize, input_len: usize) -> Self {
+        Self {
+            batch_size,
+            input_len,
+            images: vec![0.0; batch_size * input_len],
+            labels: vec![0; batch_size],
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Fill from `samples`, starting at `cursor`, wrapping around.  Returns
+    /// the advanced cursor.  Panics if `samples` is empty or a sample has
+    /// the wrong pixel count.
+    pub fn fill_cyclic(&mut self, samples: &[SharedSample], mut cursor: usize) -> usize {
+        assert!(!samples.is_empty(), "cannot batch from empty sample set");
+        for slot in 0..self.batch_size {
+            let s = &samples[cursor % samples.len()];
+            assert_eq!(
+                s.pixels.len(),
+                self.input_len,
+                "sample pixel count mismatch"
+            );
+            self.images[slot * self.input_len..(slot + 1) * self.input_len]
+                .copy_from_slice(&s.pixels);
+            self.labels[slot] = s.label as i32;
+            cursor += 1;
+        }
+        cursor
+    }
+
+    pub fn images(&self) -> &[f32] {
+        &self.images
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Sample;
+    use std::sync::Arc;
+
+    fn samples(n: usize, input_len: usize) -> Vec<SharedSample> {
+        (0..n)
+            .map(|i| {
+                Arc::new(Sample {
+                    label: (i % 10) as u8,
+                    pixels: vec![i as f32; input_len],
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fills_in_order_and_wraps() {
+        let mut b = BatchBuilder::new(4, 2);
+        let ss = samples(3, 2);
+        let cursor = b.fill_cyclic(&ss, 0);
+        assert_eq!(cursor, 4);
+        assert_eq!(b.labels(), &[0, 1, 2, 0]);
+        assert_eq!(b.images(), &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 0.0, 0.0]);
+        // continue from the cursor
+        b.fill_cyclic(&ss, cursor);
+        assert_eq!(b.labels(), &[1, 2, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample set")]
+    fn empty_samples_panics() {
+        BatchBuilder::new(2, 2).fill_cyclic(&[], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pixel count mismatch")]
+    fn wrong_shape_panics() {
+        let mut b = BatchBuilder::new(1, 3);
+        b.fill_cyclic(&samples(1, 2), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! The compute abstraction behind the simulated fleet.
+//!
+//! `Engine` executes the *real* AOT-compiled gradients (Fig 5/8 need true
+//! convergence).  `ModeledCompute` skips the numerics and only accounts
+//! work — the Fig 4 power/latency sweep to 96 nodes is about coordination
+//! throughput, where gradient *values* are irrelevant; this mirrors how
+//! the paper separates its "power" metric (vectors/s) from correctness
+//! (test error).
+
+use anyhow::Result;
+
+use super::{Engine, EvalResult, GradResult};
+
+/// Gradient/eval execution for one microbatch of an explicit compiled
+/// batch size (`batch` must be one of the model's `micro_batches`).
+pub trait Compute {
+    fn grad_batch(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<GradResult>;
+
+    fn eval_batch(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalResult>;
+
+    /// True when gradients are real (trainable); false for modeled compute.
+    fn is_real(&self) -> bool;
+}
+
+impl Compute for Engine {
+    fn grad_batch(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<GradResult> {
+        self.grad_b(model, batch, params, images, labels)
+    }
+
+    fn eval_batch(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalResult> {
+        self.eval_b(model, batch, params, images, labels)
+    }
+
+    fn is_real(&self) -> bool {
+        true
+    }
+}
+
+/// Work-accounting stand-in: zero gradients, fixed per-example loss.
+#[derive(Debug, Clone)]
+pub struct ModeledCompute {
+    pub param_count: usize,
+}
+
+impl Compute for ModeledCompute {
+    fn grad_batch(
+        &mut self,
+        _model: &str,
+        _batch: usize,
+        _params: &[f32],
+        _images: &[f32],
+        labels: &[i32],
+    ) -> Result<GradResult> {
+        Ok(GradResult {
+            grads: vec![0.0; self.param_count],
+            loss_sum: 2.30 * labels.len() as f32, // ln(10): init-level loss
+            correct: labels.len() as f32 * 0.1,
+        })
+    }
+
+    fn eval_batch(
+        &mut self,
+        _model: &str,
+        _batch: usize,
+        _params: &[f32],
+        _images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalResult> {
+        Ok(EvalResult {
+            loss_sum: 2.30 * labels.len() as f32,
+            correct: labels.len() as f32 * 0.1,
+        })
+    }
+
+    fn is_real(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_compute_accounts_without_values() {
+        let mut c = ModeledCompute { param_count: 8 };
+        let g = c
+            .grad_batch("any", 2, &[0.0; 8], &[0.0; 4], &[0, 1])
+            .unwrap();
+        assert_eq!(g.grads.len(), 8);
+        assert!(g.grads.iter().all(|&x| x == 0.0));
+        assert!((g.loss_sum - 4.6).abs() < 1e-5);
+        assert!(!c.is_real());
+    }
+}

@@ -1,0 +1,258 @@
+//! The PJRT engine: HLO text → compiled executables → typed execution.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{Manifest, ModelSpec};
+
+/// Output of one gradient microbatch (sums over the batch — see L2 docs).
+#[derive(Debug, Clone)]
+pub struct GradResult {
+    pub grads: Vec<f32>,
+    pub loss_sum: f32,
+    pub correct: f32,
+}
+
+/// Output of one eval microbatch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss_sum: f32,
+    pub correct: f32,
+}
+
+/// Compiled-executable registry over one PJRT CPU client.
+///
+/// Each model variant compiles every artifact in its manifest entry —
+/// including the `grad_b8`/`grad_b1` microbatch variants weak devices use
+/// (§3.3d).  Executables are keyed by (model, artifact key).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: HashMap<(String, String), xla::PjRtLoadedExecutable>,
+    /// Cumulative executions, for metrics/EXPERIMENTS.md.
+    exec_count: u64,
+}
+
+impl Engine {
+    /// Create a CPU engine over a manifest (does not compile anything yet).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            execs: HashMap::new(),
+            exec_count: 0,
+        })
+    }
+
+    /// Convenience: engine over the default artifacts directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        let manifest = Manifest::load_default().map_err(|e| anyhow!(e))?;
+        Self::new(manifest)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        self.manifest.model(model).map_err(|e| anyhow!(e))
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.exec_count
+    }
+
+    /// Compile all artifacts for `model` (idempotent).
+    pub fn load_model(&mut self, model: &str) -> Result<()> {
+        let spec = self.manifest.model(model).map_err(|e| anyhow!(e))?.clone();
+        for kind in spec.artifacts.keys() {
+            if self.execs.contains_key(&(model.to_string(), kind.clone())) {
+                continue;
+            }
+            let path = self
+                .manifest
+                .artifact_path(&spec, kind)
+                .map_err(|e| anyhow!(e))?;
+            let exe = self.compile_artifact(&path)?;
+            self.execs.insert((model.to_string(), kind.clone()), exe);
+        }
+        Ok(())
+    }
+
+    fn compile_artifact(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+    fn exec(&self, model: &str, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.execs
+            .get(&(model.to_string(), key.to_string()))
+            .ok_or_else(|| {
+                anyhow!("model '{model}' artifact '{key}' not loaded — call load_model first")
+            })
+    }
+
+    fn check_batch_inputs(
+        spec: &ModelSpec,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        labels: Option<&[i32]>,
+    ) -> Result<()> {
+        if params.len() != spec.param_count {
+            bail!(
+                "params len {} != {} for model {}",
+                params.len(),
+                spec.param_count,
+                spec.name
+            );
+        }
+        let expect = batch * spec.input_len();
+        if images.len() != expect {
+            bail!("images len {} != {expect} (batch {batch})", images.len());
+        }
+        if let Some(labels) = labels {
+            if labels.len() != batch {
+                bail!("labels len {} != {batch}", labels.len());
+            }
+            if let Some(&bad) = labels.iter().find(|&&l| l < 0 || l as usize >= spec.classes) {
+                bail!("label {bad} out of range 0..{}", spec.classes);
+            }
+        }
+        Ok(())
+    }
+
+    fn image_literal(&self, spec: &ModelSpec, batch: usize, images: &[f32]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = std::iter::once(batch as i64)
+            .chain(spec.input.iter().map(|&d| d as i64))
+            .collect();
+        xla::Literal::vec1(images)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape images: {e:?}"))
+    }
+
+    /// Gradient microbatch at the default batch size.
+    pub fn grad(
+        &mut self,
+        model: &str,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<GradResult> {
+        let b = self.spec(model)?.batch_size;
+        self.grad_b(model, b, params, images, labels)
+    }
+
+    /// Gradient microbatch at an explicit compiled batch size:
+    /// (params, images[b·HWC], labels[b]) → (Σgrads, Σloss, #correct).
+    pub fn grad_b(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<GradResult> {
+        let spec = self.spec(model)?.clone();
+        Self::check_batch_inputs(&spec, batch, params, images, Some(labels))?;
+        let key = spec.artifact_key("grad", batch);
+        let p = xla::Literal::vec1(params);
+        let x = self.image_literal(&spec, batch, images)?;
+        let y = xla::Literal::vec1(labels);
+        let exe = self.exec(model, &key)?;
+        let result = exe
+            .execute::<xla::Literal>(&[p, x, y])
+            .map_err(|e| anyhow!("execute {key}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {key} result: {e:?}"))?;
+        self.exec_count += 1;
+        let (g, loss, correct) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("{key} output tuple: {e:?}"))?;
+        Ok(GradResult {
+            grads: g.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            loss_sum: scalar_f32(&loss)?,
+            correct: scalar_f32(&correct)?,
+        })
+    }
+
+    /// Eval microbatch at the default batch size.
+    pub fn eval(
+        &mut self,
+        model: &str,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalResult> {
+        let b = self.spec(model)?.batch_size;
+        self.eval_b(model, b, params, images, labels)
+    }
+
+    /// Eval microbatch at an explicit compiled batch size → (Σloss, #correct).
+    pub fn eval_b(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalResult> {
+        let spec = self.spec(model)?.clone();
+        Self::check_batch_inputs(&spec, batch, params, images, Some(labels))?;
+        let key = spec.artifact_key("eval", batch);
+        let p = xla::Literal::vec1(params);
+        let x = self.image_literal(&spec, batch, images)?;
+        let y = xla::Literal::vec1(labels);
+        let exe = self.exec(model, &key)?;
+        let result = exe
+            .execute::<xla::Literal>(&[p, x, y])
+            .map_err(|e| anyhow!("execute {key}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {key} result: {e:?}"))?;
+        self.exec_count += 1;
+        let (loss, correct) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("{key} output tuple: {e:?}"))?;
+        Ok(EvalResult {
+            loss_sum: scalar_f32(&loss)?,
+            correct: scalar_f32(&correct)?,
+        })
+    }
+
+    /// Predict microbatch (default batch size) → probabilities [B×classes].
+    pub fn predict(&mut self, model: &str, params: &[f32], images: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.spec(model)?.clone();
+        let batch = spec.batch_size;
+        Self::check_batch_inputs(&spec, batch, params, images, None)?;
+        let p = xla::Literal::vec1(params);
+        let x = self.image_literal(&spec, batch, images)?;
+        let exe = self.exec(model, "predict")?;
+        let result = exe
+            .execute::<xla::Literal>(&[p, x])
+            .map_err(|e| anyhow!("execute predict: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch predict result: {e:?}"))?;
+        self.exec_count += 1;
+        let probs = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("predict output tuple: {e:?}"))?;
+        probs
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("predict to_vec: {e:?}"))
+            .context("predict output")
+    }
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("scalar: {e:?}"))?;
+    v.first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar literal"))
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once per model
+//! variant, execute grad/eval/predict from the coordinator's hot path.
+//!
+//! This replaces the paper's in-browser JavaScript NN execution: the same
+//! compute the ConvNetJS trainer did per client is done here by XLA CPU
+//! executables produced from the JAX/Pallas L2/L1 layers.  Python never
+//! runs at this point — artifacts are plain text files on disk.
+//!
+//! Note: `PjRtClient` is `Rc`-backed (not `Send`); the engine lives on the
+//! simulation thread and all client compute is serialized through it —
+//! which is also what makes simulated-fleet runs deterministic.
+
+mod batch;
+mod compute;
+mod engine;
+
+pub use batch::BatchBuilder;
+pub use compute::{Compute, ModeledCompute};
+pub use engine::{Engine, EvalResult, GradResult};

@@ -1,0 +1,14 @@
+//! Discrete-event simulation binding master + fleet + data server + netsim.
+//!
+//! Replaces the paper's physical testbed (32 LAN workstations + phones)
+//! with a deterministic virtual-clock driver — see DESIGN.md
+//! §Substitutions.  Gradient computation can be *real* (PJRT engine; used
+//! for Fig 5/8 convergence) or *modeled* (work accounting only; used for
+//! the Fig 4 coordination sweep to 96 nodes).  The coordination logic is
+//! identical in both modes — it is the same [`Master`].
+
+mod report;
+mod simulation;
+
+pub use report::RunReport;
+pub use simulation::{ChurnEvent, SimConfig, Simulation};

@@ -1,0 +1,72 @@
+//! Experiment run summaries.
+
+use crate::metrics::Timeline;
+
+/// Summary of one simulated training run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub timeline: Timeline,
+    /// Aggregate power — the paper's Fig 4 y-axis (vectors/second).
+    pub power_vps: f64,
+    /// Mean slave↔master latency across iterations (Fig 4 second axis).
+    pub mean_latency_ms: f64,
+    /// Final fleet size.
+    pub workers: usize,
+    /// Final test error (if tracking ran).
+    pub final_test_error: Option<f64>,
+    /// Total master ingress/egress bytes.
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Virtual duration of the run (seconds).
+    pub virtual_secs: f64,
+    /// Total data vectors processed.
+    pub total_vectors: u64,
+}
+
+impl RunReport {
+    pub fn from_timeline(timeline: Timeline, workers: usize) -> Self {
+        let power_vps = timeline.power_vectors_per_sec();
+        let mean_latency_ms = timeline.mean_latency_ms();
+        let final_test_error = timeline
+            .records()
+            .iter()
+            .filter_map(|r| r.test_error)
+            .last();
+        let bytes_up = timeline.records().iter().map(|r| r.bytes_up).sum();
+        let bytes_down = timeline.records().iter().map(|r| r.bytes_down).sum();
+        let virtual_secs = timeline.last().map(|r| r.t_virtual_ms / 1000.0).unwrap_or(0.0);
+        let total_vectors = timeline.records().iter().map(|r| r.vectors).sum();
+        Self {
+            timeline,
+            power_vps,
+            mean_latency_ms,
+            workers,
+            final_test_error,
+            bytes_up,
+            bytes_down,
+            virtual_secs,
+            total_vectors,
+        }
+    }
+
+    /// Test error at (or before) a given iteration — Fig 5's readout.
+    pub fn test_error_at(&self, iteration: u64) -> Option<f64> {
+        self.timeline.test_error_at(iteration)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "workers={} power={:.1} vec/s latency={:.1} ms vectors={} virtual={:.0}s{}",
+            self.workers,
+            self.power_vps,
+            self.mean_latency_ms,
+            self.total_vectors,
+            self.virtual_secs,
+            match self.final_test_error {
+                Some(e) => format!(" test_err={e:.4}"),
+                None => String::new(),
+            }
+        )
+    }
+}

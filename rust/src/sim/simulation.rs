@@ -1,0 +1,439 @@
+//! The simulation driver: the master event loop over a simulated fleet.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::allocation::WorkerId;
+use crate::client::{DeviceClass, SimClient};
+use crate::coordinator::{Master, MasterConfig, Payload, ReducePolicy, Submission};
+use crate::data::{DataServer, Sample, SynthSpec, Synthesizer};
+use crate::model::ModelSpec;
+use crate::rng::Pcg32;
+use crate::runtime::{BatchBuilder, Compute};
+
+use super::RunReport;
+
+/// Scripted fleet-membership events (churn).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnEvent {
+    /// A new device of this class joins at the given iteration boundary.
+    Join(DeviceClass),
+    /// The given worker closes its tab at the iteration boundary.
+    Leave(WorkerId),
+}
+
+/// Simulation configuration for one training run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Model name from the manifest (`mnist_conv`, ...).
+    pub model: String,
+    /// Initial fleet (all join at iteration 0).
+    pub fleet: Vec<DeviceClass>,
+    /// Corpus sizes (paper: MNIST 60k train / 10k test).
+    pub train_size: usize,
+    pub test_size: usize,
+    pub iterations: u64,
+    pub master: MasterConfig,
+    /// Evaluate the test set every k iterations (0 = never) — the paper's
+    /// tracker worker cadence.
+    pub track_every: u64,
+    /// Global compute-rate multiplier (scales every device's vectors/sec;
+    /// used to trade sim fidelity against sandbox runtime — the shape of
+    /// the figures is invariant to it, see DESIGN.md).
+    pub power_scale: f64,
+    /// Client cache budget bytes (paper practical limit: 100 MB).
+    pub cache_budget: u64,
+    pub seed: u64,
+    /// Scripted churn: iteration → events applied at its start.
+    pub churn: BTreeMap<u64, Vec<ChurnEvent>>,
+}
+
+impl SimConfig {
+    /// The paper's §3.5 scaling-experiment setup: N LAN workstations,
+    /// T = 4 s, synthetic-MNIST 60k/10k, AdaGrad, capacity 3000.
+    pub fn paper_scaling(n_workstations: usize, spec: &ModelSpec) -> Self {
+        Self {
+            model: spec.name.clone(),
+            fleet: vec![DeviceClass::Workstation; n_workstations],
+            train_size: 60_000,
+            test_size: 10_000,
+            iterations: 100,
+            master: MasterConfig {
+                param_count: spec.param_count,
+                iter_duration_s: 4.0,
+                ..Default::default()
+            },
+            track_every: 0,
+            power_scale: 1.0,
+            cache_budget: 100 << 20,
+            seed: 1,
+            churn: BTreeMap::new(),
+        }
+    }
+}
+
+/// A running simulation.
+pub struct Simulation<'c> {
+    cfg: SimConfig,
+    spec: ModelSpec,
+    compute: &'c mut dyn Compute,
+    master: Master,
+    clients: BTreeMap<WorkerId, SimClient>,
+    server: DataServer,
+    test_set: Vec<Sample>,
+    batch: BatchBuilder,
+    rng: Pcg32,
+    next_worker_id: WorkerId,
+}
+
+impl<'c> Simulation<'c> {
+    /// Build the world: synthesize the corpora, upload the training set to
+    /// the data server, register its indices with the master, spawn the
+    /// initial fleet.
+    pub fn new(cfg: SimConfig, spec: ModelSpec, compute: &'c mut dyn Compute) -> Self {
+        assert_eq!(spec.param_count, cfg.master.param_count, "spec/master dim");
+        let rng = Pcg32::new(cfg.seed);
+
+        // Corpus (shape per model input).
+        let synth_spec = match spec.input.as_slice() {
+            [32, 32, 3] => SynthSpec::cifar(cfg.seed ^ 0xDA7A),
+            _ => SynthSpec::mnist(cfg.seed ^ 0xDA7A),
+        };
+        let synth = Synthesizer::new(synth_spec);
+        let mut server = DataServer::new();
+        server.upload_samples(synth.corpus(cfg.train_size));
+        // Test corpus: disjoint sample indices (offset stream).
+        let test_set: Vec<Sample> = (0..cfg.test_size)
+            .map(|i| {
+                synth.sample(
+                    (i % synth_spec.classes as usize) as u8,
+                    (cfg.train_size + i) as u64,
+                )
+            })
+            .collect();
+
+        let params = crate::model::init_params(&spec, cfg.seed);
+        let mut master = Master::new(cfg.master.clone(), params);
+        master.register_data(cfg.train_size);
+
+        let batch = BatchBuilder::new(spec.batch_size, spec.input_len());
+        let mut sim = Self {
+            cfg,
+            spec,
+            compute,
+            master,
+            clients: BTreeMap::new(),
+            server,
+            test_set,
+            batch,
+            rng,
+            next_worker_id: 1,
+        };
+        let fleet = sim.cfg.fleet.clone();
+        for class in fleet {
+            sim.spawn_client(class);
+        }
+        sim.rng = Pcg32::new(sim.cfg.seed ^ 0x5EED);
+        sim
+    }
+
+    pub fn master(&self) -> &Master {
+        &self.master
+    }
+
+    /// Mutable master access (closure-resume paths and tests).
+    pub fn master_mut_for_test(&mut self) -> &mut Master {
+        &mut self.master
+    }
+
+    /// Resume from a research closure: replace the parameter vector.
+    pub fn load_params(&mut self, params: Vec<f32>) {
+        self.master.set_params(params);
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Join a new device: master allocation + client-side assignment.
+    pub fn spawn_client(&mut self, class: DeviceClass) -> WorkerId {
+        let id = self.next_worker_id;
+        self.next_worker_id += 1;
+        let mut profile = class.sample_profile(&mut self.rng);
+        profile.power_vps *= self.cfg.power_scale;
+        let mut client = SimClient::new(id, profile, self.cfg.cache_budget, &mut self.rng);
+        let delta = self.master.worker_join(id);
+        for (w, ids) in &delta.assigned {
+            if *w == id {
+                client.assign(ids);
+            } else if let Some(c) = self.clients.get_mut(w) {
+                c.assign(ids);
+            }
+        }
+        for (w, ids) in &delta.revoked {
+            if let Some(c) = self.clients.get_mut(w) {
+                c.revoke(ids);
+            }
+        }
+        self.clients.insert(id, client);
+        id
+    }
+
+    /// A client closes its tab: master reallocates, survivors pick up ids.
+    pub fn remove_client(&mut self, id: WorkerId) {
+        if self.clients.remove(&id).is_none() {
+            return;
+        }
+        let delta = self.master.worker_leave(id);
+        for (w, ids) in &delta.assigned {
+            if let Some(c) = self.clients.get_mut(w) {
+                c.assign(ids);
+            }
+        }
+    }
+
+    /// Run `iterations` master-loop iterations; returns the report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        for _ in 0..self.cfg.iterations {
+            self.step()?;
+        }
+        Ok(RunReport::from_timeline(
+            self.master.timeline().clone(),
+            self.clients.len(),
+        ))
+    }
+
+    /// One full master-loop iteration (steps a–e of §3.3).
+    pub fn step(&mut self) -> Result<()> {
+        let iter = self.master.iteration();
+
+        // -- scripted churn at the iteration boundary (new clients "must
+        //    wait until the end of an iteration before joining", §3.2)
+        if let Some(events) = self.cfg.churn.remove(&iter) {
+            for ev in events {
+                match ev {
+                    ChurnEvent::Join(class) => {
+                        self.spawn_client(class);
+                    }
+                    ChurnEvent::Leave(w) => self.remove_client(w),
+                }
+            }
+        }
+
+        // -- step a: background data downloads (one iteration's worth of
+        //    XHR at each client's downlink rate)
+        let iter_ms = self.master.iter_ms();
+        for (id, client) in self.clients.iter_mut() {
+            let budget = (client.link.bandwidth_bytes_per_ms() * iter_ms) as u64;
+            let (got, _bytes) = client.download_step(&self.server, budget);
+            for data_id in got {
+                self.master.mark_cached(*id, data_id);
+            }
+        }
+
+        // -- map step: every trainer computes under its scheduled budget
+        let params = self.master.params().to_vec();
+        let policy = self.master.config().policy;
+        let mut submissions = Vec::with_capacity(self.clients.len());
+        for (id, client) in self.clients.iter_mut() {
+            let budget_ms = self.master.work_budget_ms(*id);
+            let Some(out) = client.train(self.compute, &self.spec, &params, budget_ms)? else {
+                continue;
+            };
+            let payload = match policy {
+                ReducePolicy::PartialSync { keep_fraction } => {
+                    Payload::sparsify(&out.grad_sum, keep_fraction)
+                }
+                _ => Payload::Dense(out.grad_sum),
+            };
+            let bytes = payload.bytes() + 96; // envelope: ids, counts, framing
+            let uplink = client.link.sample_latency_ms(&mut client.rng)
+                + client.link.transmit_ms(bytes);
+            submissions.push(Submission {
+                worker: *id,
+                payload,
+                examples: out.examples,
+                vectors: out.examples,
+                loss_sum: out.loss_sum,
+                send_offset_ms: out.compute_ms + uplink,
+                bytes,
+            });
+        }
+
+        // -- steps c/d/e at the master
+        let outcome = self.master.finish_iteration(submissions);
+        for (w, delta) in &outcome.shed_deltas {
+            if let Some(c) = self.clients.get_mut(w) {
+                for (dw, ids) in &delta.revoked {
+                    debug_assert_eq!(dw, w);
+                    c.revoke(ids);
+                }
+            }
+            for (aw, ids) in &delta.assigned {
+                if let Some(c) = self.clients.get_mut(aw) {
+                    c.assign(ids);
+                }
+            }
+        }
+
+        // -- tracking mode (§3.6): tracker worker evaluates the test set
+        //    with the freshly broadcast parameters
+        if self.cfg.track_every > 0 && (iter + 1) % self.cfg.track_every == 0 {
+            let err = self.evaluate_test_error()?;
+            self.master.report_test_error(err);
+        }
+        Ok(())
+    }
+
+    /// Tracker-mode evaluation: full pass over the test set (wrap-around
+    /// padding to whole microbatches).
+    pub fn evaluate_test_error(&mut self) -> Result<f64> {
+        let params = self.master.params().to_vec();
+        let shared: Vec<crate::data::SharedSample> = self
+            .test_set
+            .iter()
+            .map(|s| std::sync::Arc::new(s.clone()))
+            .collect();
+        if shared.is_empty() {
+            return Ok(f64::NAN);
+        }
+        let bsz = self.batch.batch_size();
+        let n_batches = self.test_set.len().div_ceil(bsz);
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        let mut cursor = 0usize;
+        for _ in 0..n_batches {
+            cursor = self.batch.fill_cyclic(&shared, cursor);
+            let out = self.compute.eval_batch(
+                &self.spec.name,
+                bsz,
+                &params,
+                self.batch.images(),
+                self.batch.labels(),
+            )?;
+            correct += out.correct as f64;
+            total += bsz;
+        }
+        Ok(1.0 - correct / total as f64)
+    }
+
+    /// Current training-set coverage: fraction of registered ids allocated
+    /// to some worker (the §3.5 capacity-policy effect behind Fig 5).
+    pub fn coverage(&self) -> f64 {
+        let total = self.master.allocator().total_data();
+        if total == 0 {
+            return 0.0;
+        }
+        self.master.allocator().allocated_count() as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+    use crate::runtime::ModeledCompute;
+
+    fn toy_spec(batch: usize) -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 8,
+            batch_size: batch,
+            micro_batches: vec![batch],
+            input: vec![28, 28, 1],
+            classes: 10,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![8],
+                offset: 0,
+                size: 8,
+                fan_in: 4,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn base_cfg(n: usize, spec: &ModelSpec) -> SimConfig {
+        let mut cfg = SimConfig::paper_scaling(n, spec);
+        cfg.train_size = 500;
+        cfg.test_size = 64;
+        cfg.iterations = 5;
+        cfg.master.capacity = 100;
+        cfg
+    }
+
+    #[test]
+    fn end_to_end_modeled_run() {
+        let spec = toy_spec(16);
+        let cfg = base_cfg(4, &spec);
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        assert_eq!(sim.n_clients(), 4);
+        let report = sim.run().unwrap();
+        assert_eq!(report.timeline.len(), 5);
+        assert!(report.power_vps > 0.0, "{}", report.summary());
+        assert!(report.total_vectors > 0);
+        sim.master().allocator().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coverage_grows_with_fleet() {
+        let spec = toy_spec(16);
+        let mut compute = ModeledCompute { param_count: 8 };
+        let cfg = base_cfg(2, &spec); // 2 × 100 capacity of 500 ids
+        let sim = Simulation::new(cfg, spec.clone(), &mut compute);
+        assert!((sim.coverage() - 0.4).abs() < 1e-9);
+        let mut compute2 = ModeledCompute { param_count: 8 };
+        let cfg = base_cfg(5, &spec);
+        let sim = Simulation::new(cfg, spec, &mut compute2);
+        assert!((sim.coverage() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn churn_join_and_leave_mid_run() {
+        let spec = toy_spec(16);
+        let mut cfg = base_cfg(2, &spec);
+        cfg.iterations = 6;
+        cfg.churn
+            .insert(2, vec![ChurnEvent::Join(DeviceClass::Mobile)]);
+        cfg.churn.insert(4, vec![ChurnEvent::Leave(1)]);
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let report = sim.run().unwrap();
+        assert_eq!(sim.n_clients(), 2); // 2 + 1 - 1
+        assert_eq!(report.timeline.len(), 6);
+        sim.master().allocator().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tracking_produces_test_error() {
+        let spec = toy_spec(16);
+        let mut cfg = base_cfg(2, &spec);
+        cfg.track_every = 2;
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let report = sim.run().unwrap();
+        // modeled compute: 10% correct → 0.9 error
+        let err = report.final_test_error.unwrap();
+        assert!((err - 0.9).abs() < 1e-6, "{err}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = toy_spec(16);
+        let run = |seed: u64| {
+            let mut cfg = base_cfg(3, &spec);
+            // cellular devices: latency jitter shows up in the timeline,
+            // making seed-sensitivity observable
+            cfg.fleet = vec![DeviceClass::Mobile; 3];
+            cfg.seed = seed;
+            let mut compute = ModeledCompute { param_count: 8 };
+            let mut sim = Simulation::new(cfg, spec.clone(), &mut compute);
+            let r = sim.run().unwrap();
+            (r.timeline.to_csv(), r.total_vectors)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

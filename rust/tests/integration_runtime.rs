@@ -1,0 +1,154 @@
+//! Integration: PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+//! These tests verify the L1/L2 → HLO-text → L3 bridge end to end:
+//! numerics (gradient descent direction, eval/predict consistency) and
+//! the manifest contract.
+
+use mlitb::model::{init_params, Manifest};
+use mlitb::runtime::{BatchBuilder, Engine};
+
+fn engine_with(model: &str) -> Engine {
+    let manifest = Manifest::load_default().expect("artifacts present (run `make artifacts`)");
+    let mut engine = Engine::new(manifest).expect("PJRT cpu client");
+    engine.load_model(model).expect("compile artifacts");
+    engine
+}
+
+fn toy_batch(spec: &mlitb::model::ModelSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    use mlitb::rng::Pcg32;
+    let mut rng = Pcg32::new(seed);
+    let n = spec.batch_size * spec.input_len();
+    let images: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+    let labels: Vec<i32> = (0..spec.batch_size)
+        .map(|_| rng.gen_range_usize(spec.classes) as i32)
+        .collect();
+    (images, labels)
+}
+
+#[test]
+fn grad_output_shapes_and_finiteness() {
+    let mut engine = engine_with("mnist_conv");
+    let spec = engine.spec("mnist_conv").unwrap().clone();
+    let params = init_params(&spec, 0);
+    let (images, labels) = toy_batch(&spec, 1);
+    let out = engine.grad("mnist_conv", &params, &images, &labels).unwrap();
+    assert_eq!(out.grads.len(), spec.param_count);
+    assert!(out.grads.iter().all(|g| g.is_finite()));
+    assert!(out.loss_sum.is_finite() && out.loss_sum > 0.0);
+    assert!((0.0..=spec.batch_size as f32).contains(&out.correct));
+    // loss near batch * ln(10) at init
+    let per_ex = out.loss_sum / spec.batch_size as f32;
+    assert!((per_ex - 2.302).abs() < 0.7, "per-example loss {per_ex}");
+}
+
+#[test]
+fn gradient_points_downhill() {
+    // A small step against the gradient must reduce the loss — validates
+    // sign conventions across the whole AOT bridge.
+    let mut engine = engine_with("mnist_mlp");
+    let spec = engine.spec("mnist_mlp").unwrap().clone();
+    let mut params = init_params(&spec, 3);
+    let (images, labels) = toy_batch(&spec, 2);
+    let out0 = engine.grad("mnist_mlp", &params, &images, &labels).unwrap();
+    for (p, g) in params.iter_mut().zip(out0.grads.iter()) {
+        *p -= 0.01 * g / spec.batch_size as f32;
+    }
+    let out1 = engine.eval("mnist_mlp", &params, &images, &labels).unwrap();
+    assert!(
+        out1.loss_sum < out0.loss_sum,
+        "loss went up: {} -> {}",
+        out0.loss_sum,
+        out1.loss_sum
+    );
+}
+
+#[test]
+fn eval_matches_grad_loss() {
+    // eval and grad lower the same loss graph; on identical inputs the
+    // loss sums must agree to f32 tolerance.
+    let mut engine = engine_with("mnist_mlp");
+    let spec = engine.spec("mnist_mlp").unwrap().clone();
+    let params = init_params(&spec, 5);
+    let (images, labels) = toy_batch(&spec, 7);
+    let g = engine.grad("mnist_mlp", &params, &images, &labels).unwrap();
+    let e = engine.eval("mnist_mlp", &params, &images, &labels).unwrap();
+    assert!(
+        (g.loss_sum - e.loss_sum).abs() < 1e-2 * g.loss_sum.abs().max(1.0),
+        "grad loss {} vs eval loss {}",
+        g.loss_sum,
+        e.loss_sum
+    );
+    assert_eq!(g.correct, e.correct);
+}
+
+#[test]
+fn predict_rows_are_distributions() {
+    let mut engine = engine_with("mnist_conv");
+    let spec = engine.spec("mnist_conv").unwrap().clone();
+    let params = init_params(&spec, 1);
+    let (images, _) = toy_batch(&spec, 3);
+    let probs = engine.predict("mnist_conv", &params, &images).unwrap();
+    assert_eq!(probs.len(), spec.batch_size * spec.classes);
+    for row in probs.chunks(spec.classes) {
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row sum {sum}");
+        assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let mut engine = engine_with("mnist_mlp");
+    let spec = engine.spec("mnist_mlp").unwrap().clone();
+    let params = init_params(&spec, 0);
+    let (images, labels) = toy_batch(&spec, 1);
+    // wrong param len
+    assert!(engine
+        .grad("mnist_mlp", &params[1..], &images, &labels)
+        .is_err());
+    // wrong image len
+    assert!(engine
+        .grad("mnist_mlp", &params, &images[1..], &labels)
+        .is_err());
+    // label out of range
+    let mut bad = labels.clone();
+    bad[0] = 99;
+    assert!(engine.grad("mnist_mlp", &params, &images, &bad).is_err());
+    // unknown model
+    assert!(engine.grad("nope", &params, &images, &labels).is_err());
+}
+
+#[test]
+fn batch_builder_matches_engine_contract() {
+    let mut engine = engine_with("mnist_conv");
+    let spec = engine.spec("mnist_conv").unwrap().clone();
+    let params = init_params(&spec, 0);
+    let mut batch = BatchBuilder::new(spec.batch_size, spec.input_len());
+    let synth = mlitb::data::Synthesizer::new(mlitb::data::SynthSpec::mnist(4));
+    let samples: Vec<_> = synth
+        .corpus(10)
+        .into_iter()
+        .map(std::sync::Arc::new)
+        .collect();
+    batch.fill_cyclic(&samples, 0);
+    let out = engine
+        .grad("mnist_conv", &params, batch.images(), batch.labels())
+        .unwrap();
+    assert!(out.loss_sum.is_finite());
+}
+
+#[test]
+fn all_manifest_models_compile_and_run() {
+    let manifest = Manifest::load_default().unwrap();
+    let names: Vec<String> = manifest.models.keys().cloned().collect();
+    let mut engine = Engine::new(manifest).unwrap();
+    for name in names {
+        engine.load_model(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let spec = engine.spec(&name).unwrap().clone();
+        let params = init_params(&spec, 0);
+        let (images, labels) = toy_batch(&spec, 9);
+        let out = engine.grad(&name, &params, &images, &labels).unwrap();
+        assert_eq!(out.grads.len(), spec.param_count, "{name}");
+    }
+}

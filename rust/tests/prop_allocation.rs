@@ -1,0 +1,217 @@
+//! Property tests over the allocation and coordinator state machines,
+//! using the in-repo seeded property harness (`mlitb::testing`).
+
+use mlitb::allocation::{Allocator, WorkerId};
+use mlitb::testing::{check, gen};
+
+/// Drive an allocator through a random event sequence, checking the
+/// structural invariants after every step.
+fn fuzz_allocator(capacity: usize, events: &[gen::AllocEvent]) -> Result<Allocator, String> {
+    let mut alloc = Allocator::new(capacity);
+    let mut next_id: WorkerId = 1;
+    let mut live: Vec<WorkerId> = Vec::new();
+    for (step, ev) in events.iter().enumerate() {
+        match *ev {
+            gen::AllocEvent::AddData(n) => {
+                alloc.add_data(n);
+            }
+            gen::AllocEvent::Join => {
+                alloc.worker_join(next_id);
+                live.push(next_id);
+                next_id += 1;
+            }
+            gen::AllocEvent::Leave => {
+                if let Some(w) = live.pop() {
+                    alloc.worker_leave(w);
+                }
+            }
+            gen::AllocEvent::Shed(n) => {
+                if let Some(&w) = live.first() {
+                    alloc.shed_load(w, n);
+                }
+            }
+        }
+        alloc
+            .check_invariants()
+            .map_err(|e| format!("step {step} ({ev:?}): {e}"))?;
+    }
+    Ok(alloc)
+}
+
+#[test]
+fn prop_invariants_hold_under_arbitrary_churn() {
+    check("alloc-churn-invariants", |rng| {
+        let capacity = gen::usize_in(rng, 1, 500);
+        let events = gen::alloc_events(rng, 60);
+        fuzz_allocator(capacity, &events).map(|_| ())
+    });
+}
+
+#[test]
+fn prop_no_data_lost_ever() {
+    // Every registered id is owned by exactly one worker or unallocated —
+    // after ANY event sequence (the §3.2 robustness requirement).
+    check("alloc-no-data-loss", |rng| {
+        let capacity = gen::usize_in(rng, 10, 2000);
+        let events = gen::alloc_events(rng, 40);
+        let alloc = fuzz_allocator(capacity, &events)?;
+        let total = alloc.total_data();
+        let owned: usize = alloc
+            .worker_ids()
+            .iter()
+            .map(|&w| alloc.owned_by(w).len())
+            .sum();
+        if owned + alloc.unallocated().len() != total {
+            return Err(format!(
+                "{} owned + {} unallocated != {total}",
+                owned,
+                alloc.unallocated().len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocation_is_balanced_when_capacity_allows() {
+    // With all data fitting (total ≤ workers × capacity) and no shed
+    // events, imbalance after a join storm is bounded by the pie-cutter
+    // tolerance (fair share rounding).
+    check("alloc-balance", |rng| {
+        let n_workers = gen::usize_in(rng, 1, 12);
+        let per = gen::usize_in(rng, 10, 300);
+        let total = n_workers * per;
+        let mut alloc = Allocator::new(per * 2);
+        alloc.add_data(total);
+        for w in 0..n_workers {
+            alloc.worker_join(w as WorkerId);
+        }
+        alloc.check_invariants()?;
+        if alloc.unallocated().len() > 0 {
+            return Err(format!("{} ids unallocated", alloc.unallocated().len()));
+        }
+        // Pie-cutter guarantee: every worker ends within fair_share ±
+        // (n_workers) of the mean (integer rounding per join round).
+        let mean = total / n_workers;
+        for w in alloc.worker_ids() {
+            let got = alloc.owned_by(w).len();
+            if got + n_workers < mean || got > mean + total {
+                return Err(format!("worker {w} has {got}, mean {mean}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_join_transfer_cost_bounded_by_fair_share() {
+    // The pie-cutter promise (§3.3b): adding the (k+1)-th worker moves
+    // O(total/(k+1)) ids, never O(total).
+    check("alloc-pie-cost", |rng| {
+        let total = gen::usize_in(rng, 100, 5000);
+        let k = gen::usize_in(rng, 1, 10);
+        let mut alloc = Allocator::new(usize::MAX >> 1);
+        alloc.add_data(total);
+        for w in 0..k {
+            alloc.worker_join(w as WorkerId);
+        }
+        let delta = alloc.worker_join(999);
+        alloc.check_invariants()?;
+        let fair = total / (k + 1);
+        if delta.moved() > fair + k + 1 {
+            return Err(format!(
+                "join moved {} ids, fair share is {fair} (k={k}, total={total})",
+                delta.moved()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_leave_reallocates_up_to_capacity() {
+    check("alloc-leave-realloc", |rng| {
+        let capacity = gen::usize_in(rng, 5, 100);
+        let n_workers = gen::usize_in(rng, 2, 8);
+        let total = gen::usize_in(rng, 10, capacity * n_workers);
+        let mut alloc = Allocator::new(capacity);
+        alloc.add_data(total);
+        for w in 0..n_workers {
+            alloc.worker_join(w as WorkerId);
+        }
+        alloc.worker_leave(0);
+        alloc.check_invariants()?;
+        // survivors can hold (n-1)·capacity; anything beyond is unallocated
+        let survivors_cap = (n_workers - 1) * capacity;
+        let expect_unallocated = total.saturating_sub(survivors_cap);
+        if alloc.unallocated().len() < expect_unallocated {
+            return Err(format!(
+                "unallocated {} < expected {expect_unallocated}",
+                alloc.unallocated().len()
+            ));
+        }
+        if expect_unallocated == 0 && !alloc.unallocated().is_empty() {
+            return Err(format!(
+                "capacity allows full reallocation but {} ids stranded",
+                alloc.unallocated().len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    use mlitb::json::{parse, to_string, Value};
+
+    fn random_value(rng: &mut mlitb::rng::Pcg32, depth: usize) -> Value {
+        match if depth > 3 { rng.gen_range_usize(4) } else { rng.gen_range_usize(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.gen_bool(0.5)),
+            2 => {
+                // mix of integer-valued and fractional numbers
+                if rng.gen_bool(0.5) {
+                    Value::Number(rng.gen_range_u32(1_000_000) as f64)
+                } else {
+                    Value::Number(rng.gen_f64() * 2e6 - 1e6)
+                }
+            }
+            3 => {
+                let len = rng.gen_range_usize(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.gen_range_u32(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\\'
+                        }
+                    })
+                    .collect();
+                Value::String(s)
+            }
+            4 => Value::Array(
+                (0..rng.gen_range_usize(5))
+                    .map(|_| random_value(rng, depth + 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut map = std::collections::BTreeMap::new();
+                for i in 0..rng.gen_range_usize(5) {
+                    map.insert(format!("k{i}"), random_value(rng, depth + 1));
+                }
+                Value::Object(map)
+            }
+        }
+    }
+
+    check("json-roundtrip", |rng| {
+        let v = random_value(rng, 0);
+        let s = to_string(&v);
+        let back = parse(&s).map_err(|e| format!("{e} in {s}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {s}"));
+        }
+        Ok(())
+    });
+}
