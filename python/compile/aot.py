@@ -101,7 +101,10 @@ def emit(out_dir: str, names, batch: int) -> dict:
             write_artifact(kind, text)
         for b in MICRO_BATCHES:
             arts = lower_model(m, b)
-            for kind in ("grad", "eval"):
+            # predict_b{n} serves the micro-batching prediction endpoint
+            # (rust serve::BatchExecutor) the same way grad_b{n}/eval_b{n}
+            # serve weak trainers.
+            for kind in ("grad", "eval", "predict"):
                 write_artifact(f"{kind}_b{b}", arts[kind])
         manifest["models"][name] = entry
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:

@@ -52,6 +52,8 @@ def test_emit_writes_manifest_and_artifacts(tmp_path):
     for b in aot.MICRO_BATCHES:
         assert f"grad_b{b}" in kinds
         assert f"eval_b{b}" in kinds
+        # serving's micro-batch executor keys predict the same way
+        assert f"predict_b{b}" in kinds
     for art in entry["artifacts"].values():
         assert (tmp_path / art["file"]).exists()
         assert art["bytes"] > 0

@@ -418,6 +418,43 @@ mod tests {
     }
 
     #[test]
+    fn zero_worker_iteration_is_safe() {
+        // An iteration may close with no workers registered at all (fleet
+        // fully churned out): no reduce, no shed, time still advances.
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.25, -0.25]);
+        m.register_data(50);
+        let p0 = m.params().to_vec();
+        let out = m.finish_iteration(vec![]);
+        assert_eq!(m.params(), p0.as_slice());
+        assert_eq!(out.vectors, 0);
+        assert!(out.shed_deltas.is_empty());
+        assert_eq!(out.bytes_down, 0, "no clients → no broadcast bytes");
+        assert!(out.wall_ms >= 4000.0);
+        assert!(m.params().iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn zero_example_submission_does_not_step_or_nan() {
+        // A trainer can legitimately report zero examples (joined late,
+        // nothing cached yet).  The weighted average would divide by the
+        // example count — the master must not step on a 0-count reduce.
+        let mut c = cfg(ReducePolicy::Sync);
+        c.optimizer = OptimizerKind::Sgd;
+        let mut m = Master::new(c, vec![0.5, 0.5]);
+        m.register_data(10);
+        m.worker_join(1);
+        let out = m.finish_iteration(vec![sub(1, 100.0, vec![3.0, -3.0], 0)]);
+        assert_eq!(m.params(), &[0.5, 0.5], "0-example gradient must not step");
+        assert!(m.params().iter().all(|p| p.is_finite()));
+        assert_eq!(out.vectors, 0);
+        assert!(out.mean_loss.is_none(), "no examples → no loss average");
+        // A later real submission still works.
+        let out2 = m.finish_iteration(vec![sub(1, 100.0, vec![1.0, 1.0], 1)]);
+        assert_eq!(out2.vectors, 1);
+        assert!(m.params()[0] < 0.5);
+    }
+
+    #[test]
     fn weighted_average_across_heterogeneous_workers() {
         // worker 1: 1 example grad sum [1, 0]; worker 2: 3 examples [0, 6]
         // avg = [0.25, 1.5]; SGD lr=0.1 → params -= [0.025, 0.15]

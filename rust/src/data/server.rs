@@ -126,6 +126,36 @@ mod tests {
     }
 
     #[test]
+    fn serve_size_estimation_before_any_upload() {
+        // The compression ratio is measured from uploads; before any
+        // upload it must hold its neutral default (never 0/0) and serve
+        // calls must produce finite, zero-byte estimates.
+        let ds = DataServer::new();
+        assert!(ds.is_empty());
+        let (got, stats) = ds.serve(&[0, 1, 2]);
+        assert!(got.is_empty());
+        assert_eq!(stats.ids, 0);
+        assert_eq!(stats.bytes, 0);
+    }
+
+    #[test]
+    fn empty_upload_keeps_ratio_sane() {
+        // A zero-sample upload has raw size 0 — the ratio update must not
+        // divide by zero, and later estimates must still be finite.
+        let mut ds = DataServer::new();
+        let (first, labels) = ds.upload_samples(Vec::new());
+        assert_eq!(first, 0);
+        assert!(labels.is_empty());
+        assert!(ds.is_empty());
+        ds.upload_samples(corpus(4));
+        let (got, stats) = ds.serve(&[0, 1, 2, 3]);
+        assert_eq!(got.len(), 4);
+        assert!(stats.bytes > 0);
+        let raw: u64 = got.iter().map(|(_, s)| s.byte_size()).sum();
+        assert!(stats.bytes <= raw, "estimate {} vs raw {raw}", stats.bytes);
+    }
+
+    #[test]
     fn serve_returns_requested_ids() {
         let mut ds = DataServer::new();
         ds.upload_samples(corpus(10));

@@ -13,13 +13,19 @@
 //! event loop, pie-cutter data allocation, latency-adaptive work budgets,
 //! AdaGrad reduce, JSON research closures — is implemented faithfully.
 //!
+//! The paper's second pillar — ML *prediction* "to the public at large" —
+//! is the [`serve`] subsystem: a snapshot registry fed by research
+//! closures, admission + micro-batching over the same compiled artifacts,
+//! an LRU prediction cache, and a simulated open-loop request fleet.
+//!
 //! Layer map (see `DESIGN.md`):
 //! * L1/L2 — `python/compile/` (build time only; never on the run path).
 //! * L3 — this crate: [`coordinator`] (master server), [`client`]
 //!   (simulated fleet), [`data`] (data server), [`allocation`]
 //!   (pie-cutter), [`params`] (optimizers), [`runtime`] (PJRT engine),
-//!   plus the from-scratch substrates [`json`], [`rng`], [`netsim`],
-//!   [`metrics`], [`cli`], [`bench`], [`testing`].
+//!   [`serve`] (prediction serving), plus the from-scratch substrates
+//!   [`json`], [`rng`], [`netsim`], [`metrics`], [`cli`], [`bench`],
+//!   [`testing`].
 
 pub mod allocation;
 pub mod bench;
@@ -34,6 +40,7 @@ pub mod netsim;
 pub mod params;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testing;
 

@@ -1,20 +1,27 @@
 //! `mlitb` — leader entrypoint for the MLitB reproduction.
 //!
 //! Subcommands:
-//!   train     run a distributed-SGD training simulation (real gradients)
-//!   scale     run the Fig-4 style coordination sweep (modeled compute)
-//!   inspect   print manifest/model info
-//!   closure   save/load round-trip check on a research closure
+//!   train      run a distributed-SGD training simulation (real gradients)
+//!   scale      run the Fig-4 style coordination sweep (modeled compute)
+//!   serve-sim  run a prediction-serving simulation under request load
+//!   inspect    print manifest/model info
+//!   closure    save/load round-trip check on a research closure
 //!
 //! Example:
 //!   mlitb train --model mnist_conv --nodes 4 --iters 50 --track-every 10
+//!   mlitb serve-sim --clients 16 --rate 8 --duration 20 --link mixed
 
 use mlitb::cli::Args;
 use mlitb::client::DeviceClass;
 use mlitb::coordinator::ReducePolicy;
-use mlitb::model::{init_params, Manifest, ResearchClosure};
+use mlitb::model::{init_params, Manifest, ModelSpec, ResearchClosure};
+use mlitb::netsim::LinkProfile;
 use mlitb::params::OptimizerKind;
-use mlitb::runtime::{Engine, ModeledCompute};
+use mlitb::runtime::{Compute, Engine, ModeledCompute};
+use mlitb::serve::{
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, ServeConfig, ServeReport, ServeSim,
+    ServerProfile, SnapshotRegistry,
+};
 use mlitb::sim::{SimConfig, Simulation};
 
 fn main() {
@@ -27,6 +34,7 @@ fn main() {
     let result = match cmd {
         "train" => cmd_train(&args),
         "scale" => cmd_scale(&args),
+        "serve-sim" => cmd_serve_sim(&args),
         "inspect" => cmd_inspect(&args),
         "closure" => cmd_closure(&args),
         _ => {
@@ -43,12 +51,16 @@ fn main() {
 fn print_help() {
     println!(
         "mlitb {} — Machine Learning in the Browser, reproduced in Rust+JAX\n\n\
-         USAGE: mlitb <train|scale|inspect|closure> [options]\n\n\
+         USAGE: mlitb <train|scale|serve-sim|inspect|closure> [options]\n\n\
          train:   --model <name> --nodes N --iters N --t-secs F --lr F\n\
                   --optimizer sgd|momentum|adagrad|rmsprop --policy sync|async|partial:<f>\n\
                   --track-every N --train-size N --test-size N --power-scale F\n\
                   --capacity N --seed N --save-closure <path> --csv <path>\n\
          scale:   --nodes-list 1,2,4,...  --iters N  (modeled compute)\n\
+         serve-sim: --model <name> --closure <path> --clients N --rate F\n\
+                  --duration F --link lan|wifi|cellular|mixed --batch N\n\
+                  --max-wait F --queue-depth N --cache N --input-pool N\n\
+                  --seed N --csv <path>\n\
          inspect: [--model <name>]\n\
          closure: --model <name> --out <path>",
         mlitb::VERSION
@@ -150,6 +162,160 @@ fn cmd_scale(args: &Args) -> Result<(), String> {
     }
     table.print();
     Ok(())
+}
+
+/// Artifacts manifest path, if one exists on disk.
+fn manifest_on_disk() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("MLITB_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let path = std::path::Path::new(&dir).join("manifest.json");
+    path.exists().then_some(path)
+}
+
+/// Serving model spec: the manifest's entry when artifacts exist, else the
+/// built-in demo spec (serving runs anywhere; only predictions' realism
+/// depends on the PJRT artifacts).  Only a *missing* manifest falls back —
+/// a present-but-broken one is a real error the user must see.
+fn serve_spec(args: &Args) -> Result<ModelSpec, String> {
+    let Some(manifest_path) = manifest_on_disk() else {
+        let spec = demo_spec();
+        println!(
+            "note: no artifacts manifest on disk — using the built-in '{}' spec",
+            spec.name
+        );
+        return Ok(spec);
+    };
+    let dir = manifest_path.parent().expect("manifest path has a parent");
+    let manifest = Manifest::load(dir)?;
+    let model = args.get_or("model", "mnist_conv");
+    manifest.model(model).map(Clone::clone)
+}
+
+fn cmd_serve_sim(args: &Args) -> Result<(), String> {
+    let spec = serve_spec(args)?;
+    let seed = args.get_u64("seed", 1)?;
+
+    // Snapshot: a saved research closure, or fresh init parameters.
+    let mut registry = SnapshotRegistry::new(spec.clone());
+    if let Some(path) = args.get("closure") {
+        let closure = ResearchClosure::load(std::path::Path::new(path))?;
+        let id = registry.publish_closure(&closure, 0.0)?;
+        println!(
+            "published snapshot v{id} from {path} (iteration {}, optimizer {})",
+            closure.iteration, closure.optimizer
+        );
+    } else {
+        registry.publish_params(init_params(&spec, seed), 0, "init".into(), 0.0)?;
+        println!("published snapshot v1 (fresh init parameters, seed {seed})");
+    }
+
+    // Request fleet.
+    let clients = args.get_usize("clients", 16)?;
+    let rate = args.get_f64("rate", 8.0)?;
+    let groups = match args.get_or("link", "mixed") {
+        "mixed" => {
+            let lan = clients / 3;
+            let wifi = clients / 3;
+            let cellular = clients - lan - wifi;
+            vec![
+                ClientSpec { link: LinkProfile::Lan, rate_rps: rate, count: lan },
+                ClientSpec { link: LinkProfile::Wifi, rate_rps: rate, count: wifi },
+                ClientSpec { link: LinkProfile::Cellular, rate_rps: rate, count: cellular },
+            ]
+        }
+        other => vec![ClientSpec {
+            link: LinkProfile::parse(other)?,
+            rate_rps: rate,
+            count: clients,
+        }],
+    };
+
+    let largest = spec
+        .micro_batches
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(spec.batch_size);
+    let cfg = ServeConfig {
+        fleet: FleetConfig {
+            groups,
+            duration_s: args.get_f64("duration", 20.0)?,
+            input_pool: args.get_usize("input-pool", 200)?,
+            seed,
+        },
+        policy: BatchPolicy {
+            max_batch: args.get_usize("batch", largest)?,
+            max_wait_ms: args.get_f64("max-wait", 5.0)?,
+            queue_depth: args.get_usize("queue-depth", 256)?,
+        },
+        server: ServerProfile::default(),
+        cache_capacity: args.get_usize("cache", 1024)?,
+        response_bytes: 256,
+    };
+    println!(
+        "serving {}: {} clients, {:.1} rps each, {}s horizon, batch ≤{}, wait ≤{} ms",
+        spec.name,
+        clients,
+        rate,
+        cfg.fleet.duration_s,
+        cfg.policy.max_batch,
+        cfg.policy.max_wait_ms
+    );
+
+    // Compute backend.  A PJRT build with artifacts on disk must use them
+    // — and must FAIL loudly if they don't compile, rather than silently
+    // serving modeled predictions that look plausible but are fake.
+    // Without the feature (or without artifacts) the deterministic
+    // modeled predictor is the expected configuration.
+    let report = if cfg!(feature = "pjrt") && manifest_on_disk().is_some() {
+        let mut engine = Engine::from_default_artifacts().map_err(|e| e.to_string())?;
+        engine.load_model(&spec.name).map_err(|e| e.to_string())?;
+        println!("compute: PJRT engine over AOT artifacts");
+        run_serve(cfg, registry, &mut engine)?
+    } else {
+        let why = if cfg!(feature = "pjrt") {
+            "no AOT artifacts on disk"
+        } else {
+            "built without the `pjrt` feature"
+        };
+        println!("compute: modeled predictor ({why}; deterministic linear-softmax)");
+        let mut modeled = ModeledCompute { param_count: spec.param_count };
+        run_serve(cfg, registry, &mut modeled)?
+    };
+
+    let lat = report.latency();
+    let mut table = mlitb::metrics::Table::new(
+        "serve-sim results",
+        &["metric", "value"],
+    );
+    table.row(vec!["offered requests".into(), report.offered.to_string()]);
+    table.row(vec!["completed".into(), report.completed.to_string()]);
+    table.row(vec!["rejected (shed)".into(), report.rejected.to_string()]);
+    table.row(vec!["cache hit rate".into(), format!("{:.3}", report.hit_rate())]);
+    table.row(vec!["batches executed".into(), report.batches.to_string()]);
+    table.row(vec!["mean batch size".into(), format!("{:.2}", report.mean_batch())]);
+    table.row(vec!["throughput (rps)".into(), format!("{:.1}", report.throughput_rps())]);
+    table.row(vec!["latency p50 (ms)".into(), format!("{:.2}", lat.median())]);
+    table.row(vec!["latency p95 (ms)".into(), format!("{:.2}", lat.p95())]);
+    table.row(vec!["latency p99 (ms)".into(), format!("{:.2}", lat.quantile(0.99))]);
+    table.row(vec!["latency max (ms)".into(), format!("{:.2}", lat.max())]);
+    table.print();
+    println!("done: {}", report.summary());
+
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.log.to_csv()).map_err(|e| e.to_string())?;
+        println!("wrote request log to {path}");
+    }
+    Ok(())
+}
+
+fn run_serve(
+    cfg: ServeConfig,
+    registry: SnapshotRegistry,
+    compute: &mut dyn Compute,
+) -> Result<ServeReport, String> {
+    ServeSim::new(cfg, registry, compute)
+        .run()
+        .map_err(|e| e.to_string())
 }
 
 fn cmd_inspect(args: &Args) -> Result<(), String> {

@@ -1,6 +1,9 @@
 //! Per-iteration timeline of the master event loop — the raw series behind
 //! the power/latency (Fig 4), convergence (Fig 5) and tracking (Fig 8)
-//! plots.
+//! plots — plus the serving subsystem's per-request log ([`RequestLog`]),
+//! the series behind throughput/latency-percentile tables.
+
+use super::stats::Summary;
 
 /// One master-loop iteration's measurements.
 #[derive(Debug, Clone, PartialEq)]
@@ -121,6 +124,90 @@ impl Timeline {
     }
 }
 
+/// One served prediction request — the serving path's analogue of
+/// [`IterationRecord`] (training iterates; serving answers requests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub client: u32,
+    /// Client send / client receive timestamps (virtual ms).
+    pub sent_ms: f64,
+    pub done_ms: f64,
+    /// End-to-end latency the client experienced (ms).
+    pub latency_ms: f64,
+    /// Requests in the executed batch (0 for cache hits).
+    pub batch_size: u32,
+    pub cache_hit: bool,
+    /// Argmax class served — lets log-level checks verify that batching
+    /// and caching never change the answer.
+    pub class: u32,
+}
+
+/// Append-only per-request series with percentile summaries + CSV export.
+#[derive(Debug, Clone, Default)]
+pub struct RequestLog {
+    records: Vec<RequestRecord>,
+}
+
+impl RequestLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// End-to-end latency distribution (feed to `quantile`/`p95`).
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from(self.records.iter().map(|r| r.latency_ms).collect())
+    }
+
+    /// Completed requests per virtual second over [0, horizon].
+    pub fn throughput_rps(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / horizon_s
+    }
+
+    /// Latest completion time (ms); 0 when empty.
+    pub fn span_ms(&self) -> f64 {
+        self.records.iter().map(|r| r.done_ms).fold(0.0, f64::max)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("id,client,sent_ms,done_ms,latency_ms,batch_size,cache_hit,class\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.3},{:.3},{:.3},{},{},{}\n",
+                r.id,
+                r.client,
+                r.sent_ms,
+                r.done_ms,
+                r.latency_ms,
+                r.batch_size,
+                r.cache_hit as u8,
+                r.class,
+            ));
+        }
+        out
+    }
+}
+
 impl IterationRecord {
     /// Rough duration of one iteration for power normalization: the spacing
     /// to use when only a single record exists.
@@ -178,5 +265,43 @@ mod tests {
         tl.push(rec(0, 1.0, 1));
         let csv = tl.to_csv();
         assert!(csv.contains("0,1.000,1,1"));
+    }
+
+    fn req(id: u64, sent: f64, done: f64, hit: bool) -> RequestRecord {
+        RequestRecord {
+            id,
+            client: 1,
+            sent_ms: sent,
+            done_ms: done,
+            latency_ms: done - sent,
+            batch_size: if hit { 0 } else { 8 },
+            cache_hit: hit,
+            class: 3,
+        }
+    }
+
+    #[test]
+    fn request_log_percentiles_and_throughput() {
+        let mut log = RequestLog::new();
+        for i in 0..10 {
+            log.push(req(i, i as f64, i as f64 + 10.0 + i as f64, i % 2 == 0));
+        }
+        assert_eq!(log.len(), 10);
+        let lat = log.latency_summary();
+        assert_eq!(lat.min(), 10.0);
+        assert_eq!(lat.max(), 19.0);
+        // 10 requests completing within 28 ms of virtual time.
+        assert!((log.throughput_rps(2.0) - 5.0).abs() < 1e-12);
+        assert_eq!(log.throughput_rps(0.0), 0.0);
+        assert_eq!(log.span_ms(), 28.0);
+    }
+
+    #[test]
+    fn request_log_csv_shape() {
+        let mut log = RequestLog::new();
+        log.push(req(7, 1.0, 3.5, true));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("id,client,"));
+        assert!(csv.contains("7,1,1.000,3.500,2.500,0,1,3"));
     }
 }

@@ -22,6 +22,23 @@ pub enum LinkProfile {
 }
 
 impl LinkProfile {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "lan" => Ok(Self::Lan),
+            "wifi" => Ok(Self::Wifi),
+            "cellular" => Ok(Self::Cellular),
+            _ => Err(format!("unknown link profile '{s}' (lan|wifi|cellular)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Lan => "lan",
+            Self::Wifi => "wifi",
+            Self::Cellular => "cellular",
+        }
+    }
+
     /// (median one-way latency ms, lognormal sigma, bandwidth bytes/ms)
     fn constants(self) -> (f64, f64, f64) {
         match self {
@@ -176,6 +193,14 @@ impl MasterModel {
 mod tests {
     use super::*;
     use crate::rng::Pcg32;
+
+    #[test]
+    fn profile_parse_roundtrip() {
+        for p in [LinkProfile::Lan, LinkProfile::Wifi, LinkProfile::Cellular] {
+            assert_eq!(LinkProfile::parse(p.name()).unwrap(), p);
+        }
+        assert!(LinkProfile::parse("carrier-pigeon").is_err());
+    }
 
     #[test]
     fn transmit_time_scales_with_bytes() {

@@ -7,12 +7,13 @@
 //! the paper separates its "power" metric (vectors/s) from correctness
 //! (test error).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::{Engine, EvalResult, GradResult};
 
-/// Gradient/eval execution for one microbatch of an explicit compiled
-/// batch size (`batch` must be one of the model's `micro_batches`).
+/// Gradient/eval/predict execution for one microbatch of an explicit
+/// compiled batch size (`batch` must be one of the model's
+/// `micro_batches`).
 pub trait Compute {
     fn grad_batch(
         &mut self,
@@ -31,6 +32,19 @@ pub trait Compute {
         images: &[f32],
         labels: &[i32],
     ) -> Result<EvalResult>;
+
+    /// Class-probability inference for one microbatch → row-major
+    /// probabilities `[batch × classes]`.  The serving subsystem's
+    /// micro-batch executor runs on this; implementations must be
+    /// per-example pure so batch composition cannot change predictions.
+    fn predict_batch(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        classes: usize,
+    ) -> Result<Vec<f32>>;
 
     /// True when gradients are real (trainable); false for modeled compute.
     fn is_real(&self) -> bool;
@@ -59,12 +73,34 @@ impl Compute for Engine {
         self.eval_b(model, batch, params, images, labels)
     }
 
+    fn predict_batch(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        classes: usize,
+    ) -> Result<Vec<f32>> {
+        let expect = self.spec(model)?.classes;
+        if expect != classes {
+            bail!("model {model} has {expect} classes, caller expected {classes}");
+        }
+        self.predict_b(model, batch, params, images)
+    }
+
     fn is_real(&self) -> bool {
         true
     }
 }
 
 /// Work-accounting stand-in: zero gradients, fixed per-example loss.
+///
+/// Prediction, unlike grad/eval, is *input-dependent* even in modeled
+/// mode: a deterministic linear scorer + softmax over the actual pixels
+/// and parameter vector.  Serving experiments need outputs that change
+/// with the input (cache keys, batching-invariance checks) without
+/// requiring the PJRT feature; the scorer is per-example pure, so
+/// batched and unbatched execution produce bit-identical probabilities.
 #[derive(Debug, Clone)]
 pub struct ModeledCompute {
     pub param_count: usize,
@@ -100,6 +136,44 @@ impl Compute for ModeledCompute {
         })
     }
 
+    fn predict_batch(
+        &mut self,
+        _model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        classes: usize,
+    ) -> Result<Vec<f32>> {
+        if batch == 0 || classes == 0 {
+            return Ok(Vec::new());
+        }
+        if images.len() % batch != 0 {
+            bail!("images len {} not divisible by batch {batch}", images.len());
+        }
+        let input_len = images.len() / batch;
+        let mut out = Vec::with_capacity(batch * classes);
+        for example in images.chunks_exact(input_len) {
+            // Per-class score: dot of the pixels with a class-strided view
+            // of the parameter vector — cheap, deterministic, and distinct
+            // per (input, snapshot) pair.
+            let mut scores = vec![0.0f64; classes];
+            if !params.is_empty() {
+                for (c, s) in scores.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for (i, &x) in example.iter().enumerate() {
+                        acc += x as f64 * params[(i + c * 131) % params.len()] as f64;
+                    }
+                    *s = acc;
+                }
+            }
+            let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> = scores.iter().map(|s| (s - max).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            out.extend(exps.iter().map(|&e| (e / z) as f32));
+        }
+        Ok(out)
+    }
+
     fn is_real(&self) -> bool {
         false
     }
@@ -119,5 +193,39 @@ mod tests {
         assert!(g.grads.iter().all(|&x| x == 0.0));
         assert!((g.loss_sum - 4.6).abs() < 1e-5);
         assert!(!c.is_real());
+    }
+
+    #[test]
+    fn modeled_predict_is_normalized_and_input_dependent() {
+        let mut c = ModeledCompute { param_count: 8 };
+        let params: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.1).collect();
+        let images = vec![0.1, 0.9, 0.4, 0.2, 0.8, 0.3]; // 2 examples × 3 px
+        let probs = c.predict_batch("m", 2, &params, &images, 4).unwrap();
+        assert_eq!(probs.len(), 8);
+        for row in probs.chunks(4) {
+            let z: f32 = row.iter().sum();
+            assert!((z - 1.0).abs() < 1e-5, "{row:?}");
+            assert!(row.iter().all(|p| *p > 0.0));
+        }
+        assert_ne!(probs[..4], probs[4..], "distinct inputs, distinct probs");
+    }
+
+    #[test]
+    fn modeled_predict_batching_invariant() {
+        // The serving acceptance criterion at the compute level: executing
+        // two examples together or separately yields identical rows.
+        let mut c = ModeledCompute { param_count: 16 };
+        let params: Vec<f32> = (0..16).map(|i| ((i * 7 % 5) as f32 - 2.0) * 0.3).collect();
+        let a = vec![0.25f32; 6];
+        let b: Vec<f32> = (0..6).map(|i| i as f32 / 6.0).collect();
+        let together = {
+            let mut images = a.clone();
+            images.extend_from_slice(&b);
+            c.predict_batch("m", 2, &params, &images, 10).unwrap()
+        };
+        let alone_a = c.predict_batch("m", 1, &params, &a, 10).unwrap();
+        let alone_b = c.predict_batch("m", 1, &params, &b, 10).unwrap();
+        assert_eq!(together[..10], alone_a[..]);
+        assert_eq!(together[10..], alone_b[..]);
     }
 }

@@ -5,22 +5,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::{EvalResult, GradResult};
 use crate::model::{Manifest, ModelSpec};
-
-/// Output of one gradient microbatch (sums over the batch — see L2 docs).
-#[derive(Debug, Clone)]
-pub struct GradResult {
-    pub grads: Vec<f32>,
-    pub loss_sum: f32,
-    pub correct: f32,
-}
-
-/// Output of one eval microbatch.
-#[derive(Debug, Clone, Copy)]
-pub struct EvalResult {
-    pub loss_sum: f32,
-    pub correct: f32,
-}
 
 /// Compiled-executable registry over one PJRT CPU client.
 ///
@@ -228,12 +214,39 @@ impl Engine {
 
     /// Predict microbatch (default batch size) → probabilities [B×classes].
     pub fn predict(&mut self, model: &str, params: &[f32], images: &[f32]) -> Result<Vec<f32>> {
+        let b = self.spec(model)?.batch_size;
+        self.predict_b(model, b, params, images)
+    }
+
+    /// Predict at an explicit compiled batch size → probabilities
+    /// [b×classes] — the serving path's micro-batch executor uses the
+    /// `predict_b{n}` artifact variants the same way training uses
+    /// `grad_b{n}`.  Artifact sets built before the AOT layer emitted
+    /// those variants fall back transparently: pad up to the default
+    /// compiled batch and slice the real rows back out.
+    pub fn predict_b(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+    ) -> Result<Vec<f32>> {
         let spec = self.spec(model)?.clone();
-        let batch = spec.batch_size;
         Self::check_batch_inputs(&spec, batch, params, images, None)?;
+        let key = spec.artifact_key("predict", batch);
+        if !spec.artifacts.contains_key(&key) && batch > 0 && batch < spec.batch_size {
+            let input_len = spec.input_len();
+            let mut padded = Vec::with_capacity(spec.batch_size * input_len);
+            padded.extend_from_slice(images);
+            for _ in batch..spec.batch_size {
+                padded.extend_from_slice(&images[..input_len]);
+            }
+            let full = self.predict_b(model, spec.batch_size, params, &padded)?;
+            return Ok(full[..batch * spec.classes].to_vec());
+        }
         let p = xla::Literal::vec1(params);
         let x = self.image_literal(&spec, batch, images)?;
-        let exe = self.exec(model, "predict")?;
+        let exe = self.exec(model, &key)?;
         let result = exe
             .execute::<xla::Literal>(&[p, x])
             .map_err(|e| anyhow!("execute predict: {e:?}"))?[0][0]

@@ -1,0 +1,153 @@
+//! API-compatible `Engine` stub for builds without the `pjrt` feature.
+//!
+//! Manifest handling (specs, artifact paths) works normally so CLI
+//! commands like `inspect` and the serving registry stay usable; anything
+//! that would execute a compiled artifact returns an error directing the
+//! user to rebuild with `--features pjrt`.  Keeping the API identical lets
+//! every call site (simulation, benches, examples) compile unchanged.
+
+use anyhow::{anyhow, Result};
+
+use super::{EvalResult, GradResult};
+use crate::model::{Manifest, ModelSpec};
+
+/// Compiled-executable registry — stubbed: holds the manifest only.
+pub struct Engine {
+    manifest: Manifest,
+    exec_count: u64,
+}
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow!(
+        "{what} needs the PJRT runtime, but mlitb was built without the \
+         `pjrt` feature (rebuild with `cargo build --features pjrt`)"
+    )
+}
+
+impl Engine {
+    /// Create an engine over a manifest (no PJRT client in stub builds).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        Ok(Self {
+            manifest,
+            exec_count: 0,
+        })
+    }
+
+    /// Convenience: engine over the default artifacts directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        let manifest = Manifest::load_default().map_err(|e| anyhow!(e))?;
+        Self::new(manifest)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        self.manifest.model(model).map_err(|e| anyhow!(e))
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.exec_count
+    }
+
+    /// Compiling artifacts requires PJRT; fail early with a clear message.
+    pub fn load_model(&mut self, model: &str) -> Result<()> {
+        // Validate the manifest entry first so unknown-model errors read
+        // the same as in real builds.
+        self.manifest.model(model).map_err(|e| anyhow!(e))?;
+        Err(unavailable(&format!("loading model '{model}'")))
+    }
+
+    pub fn grad(
+        &mut self,
+        model: &str,
+        _params: &[f32],
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<GradResult> {
+        Err(unavailable(&format!("grad on '{model}'")))
+    }
+
+    pub fn grad_b(
+        &mut self,
+        model: &str,
+        _batch: usize,
+        _params: &[f32],
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<GradResult> {
+        Err(unavailable(&format!("grad on '{model}'")))
+    }
+
+    pub fn eval(
+        &mut self,
+        model: &str,
+        _params: &[f32],
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<EvalResult> {
+        Err(unavailable(&format!("eval on '{model}'")))
+    }
+
+    pub fn eval_b(
+        &mut self,
+        model: &str,
+        _batch: usize,
+        _params: &[f32],
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<EvalResult> {
+        Err(unavailable(&format!("eval on '{model}'")))
+    }
+
+    pub fn predict(&mut self, model: &str, _params: &[f32], _images: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable(&format!("predict on '{model}'")))
+    }
+
+    pub fn predict_b(
+        &mut self,
+        model: &str,
+        _batch: usize,
+        _params: &[f32],
+        _images: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(unavailable(&format!("predict on '{model}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let doc = parse(
+            r#"{"batch_size": 2, "models": {"toy": {
+                "param_count": 2, "batch_size": 2, "input": [1], "classes": 2,
+                "tensors": [{"name": "w", "shape": [2], "offset": 0, "size": 2, "fan_in": 1}],
+                "artifacts": {"grad": {"file": "g.hlo.txt"}}
+            }}}"#,
+        )
+        .unwrap();
+        Manifest::from_value(Path::new("/tmp"), &doc).unwrap()
+    }
+
+    #[test]
+    fn manifest_paths_work_without_pjrt() {
+        let engine = Engine::new(manifest()).unwrap();
+        assert_eq!(engine.spec("toy").unwrap().param_count, 2);
+        assert!(engine.spec("nope").is_err());
+        assert_eq!(engine.executions(), 0);
+    }
+
+    #[test]
+    fn execution_paths_error_with_guidance() {
+        let mut engine = Engine::new(manifest()).unwrap();
+        let err = engine.load_model("toy").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(engine.grad("toy", &[], &[], &[]).is_err());
+        assert!(engine.predict_b("toy", 2, &[], &[]).is_err());
+    }
+}

@@ -6,14 +6,40 @@
 //! executables produced from the JAX/Pallas L2/L1 layers.  Python never
 //! runs at this point — artifacts are plain text files on disk.
 //!
+//! The PJRT bindings are gated behind the `pjrt` cargo feature: the `xla`
+//! crate needs the XLA C library at build time, which offline/CI
+//! environments lack.  Without the feature [`Engine`] is an API-compatible
+//! stub that loads manifests but fails at execution time; coordination,
+//! serving and the modeled benches are unaffected (they run on
+//! [`ModeledCompute`]).
+//!
 //! Note: `PjRtClient` is `Rc`-backed (not `Send`); the engine lives on the
 //! simulation thread and all client compute is serialized through it —
 //! which is also what makes simulated-fleet runs deterministic.
 
 mod batch;
 mod compute;
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 
 pub use batch::BatchBuilder;
 pub use compute::{Compute, ModeledCompute};
-pub use engine::{Engine, EvalResult, GradResult};
+pub use engine::Engine;
+
+/// Output of one gradient microbatch (sums over the batch — see L2 docs).
+#[derive(Debug, Clone)]
+pub struct GradResult {
+    pub grads: Vec<f32>,
+    pub loss_sum: f32,
+    pub correct: f32,
+}
+
+/// Output of one eval microbatch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss_sum: f32,
+    pub correct: f32,
+}

@@ -1,0 +1,249 @@
+//! Prediction LRU cache.
+//!
+//! "Prediction to the public at large" traffic has heavy-hitter inputs:
+//! the same image is submitted by many clients (and retried by the same
+//! one).  A hit skips admission, batching and execution entirely and is
+//! served at lookup cost.  Keys are exact-match: FNV-1a over the snapshot
+//! id and the input's f32 bit pattern — a new snapshot version invalidates
+//! the whole cache by construction, with no epoch bookkeeping.  Hashing
+//! alone is not trusted: each entry keeps its input (a shared handle, not
+//! a copy) and a hit compares it, so a 64-bit collision degrades to a
+//! miss instead of silently serving another input's answer.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::executor::Prediction;
+use super::registry::SnapshotId;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Cache key for (snapshot, input): FNV-1a over the version id and the
+/// pixel bit patterns (exact match; no float tolerance).
+pub fn input_key(snapshot: SnapshotId, pixels: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in snapshot.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for px in pixels {
+        for b in px.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// The exact input this prediction answers (collision guard).
+    input: Arc<Vec<f32>>,
+    prediction: Prediction,
+    last_used: u64,
+}
+
+/// Entry-capacity-bounded LRU of served predictions.
+///
+/// A `tick → key` recency index rides alongside the entry map so
+/// eviction picks the LRU victim in O(log n) instead of scanning the
+/// whole map — the cache sits on the serving hot path and the load
+/// sweeps insert tens of thousands of entries per run.
+#[derive(Debug, Clone)]
+pub struct PredictionCache {
+    capacity: usize,
+    entries: HashMap<u64, Entry>,
+    /// last_used tick → key (ticks are unique; first entry is the LRU).
+    recency: std::collections::BTreeMap<u64, u64>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl PredictionCache {
+    /// `capacity` in entries; 0 disables caching (every get misses).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            entries: HashMap::new(),
+            recency: std::collections::BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a key for `input`, refreshing recency and counting
+    /// hit/miss.  A key match with a different stored input (64-bit hash
+    /// collision) is a miss.
+    pub fn get(&mut self, key: u64, input: &[f32]) -> Option<Prediction> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.get_mut(&key) {
+            Some(e) if e.input.as_slice() == input => {
+                self.recency.remove(&e.last_used);
+                e.last_used = tick;
+                self.recency.insert(tick, key);
+                self.hits += 1;
+                Some(e.prediction.clone())
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a served prediction, evicting LRU entries beyond capacity.
+    pub fn insert(&mut self, key: u64, input: Arc<Vec<f32>>, prediction: Prediction) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if let Some(prev) = self.entries.insert(
+            key,
+            Entry {
+                input,
+                prediction,
+                last_used: self.tick,
+            },
+        ) {
+            self.recency.remove(&prev.last_used);
+        }
+        self.recency.insert(self.tick, key);
+        while self.entries.len() > self.capacity {
+            let Some((&lru_tick, &victim)) = self.recency.iter().next() else {
+                break;
+            };
+            self.recency.remove(&lru_tick);
+            self.entries.remove(&victim);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Hit fraction of all lookups (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred(class: usize) -> Prediction {
+        Prediction {
+            class,
+            confidence: 0.9,
+            probs: vec![0.1, 0.9],
+        }
+    }
+
+    fn input(v: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![v])
+    }
+
+    #[test]
+    fn key_is_exact_and_snapshot_scoped() {
+        let a = input_key(1, &[0.1, 0.2]);
+        assert_eq!(a, input_key(1, &[0.1, 0.2]));
+        assert_ne!(a, input_key(2, &[0.1, 0.2]), "new snapshot, new keyspace");
+        assert_ne!(a, input_key(1, &[0.2, 0.1]), "order matters");
+        // -0.0 and 0.0 have different bit patterns: exact-match semantics.
+        assert_ne!(input_key(1, &[0.0]), input_key(1, &[-0.0]));
+    }
+
+    #[test]
+    fn get_insert_roundtrip_counts() {
+        let mut c = PredictionCache::new(4);
+        let k = input_key(1, &[0.5]);
+        assert!(c.get(k, &[0.5]).is_none());
+        c.insert(k, Arc::new(vec![0.5]), pred(3));
+        assert_eq!(c.get(k, &[0.5]).unwrap().class, 3);
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hash_collision_degrades_to_miss() {
+        // Same key, different input bits: the stored-input comparison must
+        // refuse to serve the other input's answer.
+        let mut c = PredictionCache::new(4);
+        c.insert(42, input(1.0), pred(3));
+        assert!(c.get(42, &[2.0]).is_none(), "collision must miss");
+        assert_eq!(c.get(42, &[1.0]).unwrap().class, 3);
+    }
+
+    #[test]
+    fn evicts_lru_beyond_capacity() {
+        let mut c = PredictionCache::new(2);
+        c.insert(1, input(1.0), pred(1));
+        c.insert(2, input(2.0), pred(2));
+        c.get(1, &[1.0]); // refresh 1 → 2 becomes LRU
+        c.insert(3, input(3.0), pred(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(2, &[2.0]).is_none(), "LRU entry should be evicted");
+        assert!(c.get(1, &[1.0]).is_some());
+        assert!(c.get(3, &[3.0]).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = PredictionCache::new(0);
+        c.insert(1, input(1.0), pred(1));
+        assert!(c.is_empty());
+        assert!(c.get(1, &[1.0]).is_none());
+        assert_eq!(c.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn reinsert_updates_value() {
+        let mut c = PredictionCache::new(2);
+        c.insert(1, input(1.0), pred(1));
+        c.insert(1, input(1.0), pred(7));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(1, &[1.0]).unwrap().class, 7);
+    }
+
+    #[test]
+    fn recency_index_survives_churn() {
+        // Interleave inserts, refreshes and reinserts well past capacity:
+        // the recency index and entry map must stay in lockstep.
+        let mut c = PredictionCache::new(3);
+        for k in 0..50u64 {
+            c.insert(k, input(k as f32), pred(k as usize));
+            let probe = k.saturating_sub(1);
+            c.get(probe, &[probe as f32]);
+            c.insert(k / 2, input((k / 2) as f32), pred(99));
+        }
+        assert_eq!(c.len(), 3);
+        c.insert(100, input(100.0), pred(1));
+        assert_eq!(c.len(), 3);
+        assert!(
+            c.get(100, &[100.0]).is_some(),
+            "most recent insert must be resident"
+        );
+    }
+}

@@ -1,0 +1,348 @@
+//! Micro-batch prediction executor.
+//!
+//! A flushed batch of admitted requests is padded up to the smallest
+//! compiled micro-batch variant (the same `_b{n}` artifact family training
+//! uses, §3.3d) and executed once through [`Compute::predict_batch`];
+//! per-request rows are then sliced back out.  Padding rows repeat the
+//! first input — a valid example whose output is discarded — so the
+//! executable always sees its compiled shape.
+//!
+//! Invariant (the serving correctness criterion): prediction is
+//! per-example pure, so executing a request in a batch of 32 yields
+//! bit-identical probabilities to executing it alone.  `tests` pin this.
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelSpec;
+use crate::runtime::Compute;
+
+/// The served answer for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    /// Argmax class (first index on exact ties — deterministic).
+    pub class: usize,
+    /// Probability of the argmax class.
+    pub confidence: f32,
+    /// Full class-probability row.
+    pub probs: Vec<f32>,
+}
+
+impl Prediction {
+    /// Build from one probability row (must be non-empty).
+    pub fn from_row(row: &[f32]) -> Self {
+        let mut class = 0;
+        for (i, &p) in row.iter().enumerate() {
+            if p > row[class] {
+                class = i;
+            }
+        }
+        Self {
+            class,
+            confidence: row[class],
+            probs: row.to_vec(),
+        }
+    }
+}
+
+/// Server-side hardware model for service-time accounting: the endpoint
+/// runs on the master's machine, not a volunteer browser.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerProfile {
+    /// Forward-pass rate (data vectors per second) at full batch.
+    pub power_vps: f64,
+    /// Fixed per-batch dispatch cost (ms): request framing, buffer
+    /// assembly, executable invocation — the part micro-batching
+    /// amortizes across requests.
+    pub per_batch_overhead_ms: f64,
+    /// Service time of a prediction-cache hit (hash + map lookup, ms).
+    pub cache_lookup_ms: f64,
+}
+
+impl Default for ServerProfile {
+    fn default() -> Self {
+        Self {
+            // A workstation-class server runs the forward pass roughly an
+            // order of magnitude faster than the §3.5 grad+backprop rate.
+            power_vps: 4_000.0,
+            per_batch_overhead_ms: 2.5,
+            cache_lookup_ms: 0.05,
+        }
+    }
+}
+
+/// Stateful executor: one served model, cumulative batch statistics.
+#[derive(Debug, Clone)]
+pub struct BatchExecutor {
+    spec: ModelSpec,
+    profile: ServerProfile,
+    batches: u64,
+    examples: u64,
+    padded: u64,
+}
+
+impl BatchExecutor {
+    pub fn new(spec: ModelSpec, profile: ServerProfile) -> Self {
+        Self {
+            spec,
+            profile,
+            batches: 0,
+            examples: 0,
+            padded: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn profile(&self) -> &ServerProfile {
+        &self.profile
+    }
+
+    /// Batches executed so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Real (non-padding) examples executed so far.
+    pub fn examples(&self) -> u64 {
+        self.examples
+    }
+
+    /// Padding examples executed so far.
+    pub fn padded(&self) -> u64 {
+        self.padded
+    }
+
+    /// Fraction of executed rows that were real requests (1.0 = perfectly
+    /// full batches).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.examples + self.padded;
+        if total == 0 {
+            return 1.0;
+        }
+        self.examples as f64 / total as f64
+    }
+
+    /// Largest compiled micro-batch (order-independent; the manifest
+    /// normally sorts descending, hand-built specs may not).
+    fn largest_batch(&self) -> usize {
+        self.spec
+            .micro_batches
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(self.spec.batch_size)
+    }
+
+    /// Smallest compiled micro-batch that fits `n` requests; oversized
+    /// `n` falls back to the largest variant (callers then chunk).
+    /// Order-independent over `micro_batches`.
+    fn pick_batch(&self, n: usize) -> usize {
+        let mut best: Option<usize> = None;
+        for &b in &self.spec.micro_batches {
+            if b >= n {
+                best = Some(match best {
+                    Some(cur) => cur.min(b),
+                    None => b,
+                });
+            }
+        }
+        best.unwrap_or_else(|| self.largest_batch())
+    }
+
+    /// Execute one flushed batch of request inputs against a parameter
+    /// snapshot.  Returns per-request predictions (input order) and the
+    /// modeled service time (ms).  Inputs beyond the largest compiled
+    /// variant are chunked into consecutive executions.
+    pub fn execute(
+        &mut self,
+        compute: &mut dyn Compute,
+        params: &[f32],
+        inputs: &[&[f32]],
+    ) -> Result<(Vec<Prediction>, f64)> {
+        if inputs.is_empty() {
+            return Ok((Vec::new(), 0.0));
+        }
+        let input_len = self.spec.input_len();
+        let classes = self.spec.classes;
+        if classes == 0 {
+            bail!("model '{}' declares zero classes", self.spec.name);
+        }
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() != input_len {
+                bail!(
+                    "request {i}: input has {} values, model '{}' expects {input_len}",
+                    x.len(),
+                    self.spec.name
+                );
+            }
+        }
+        let largest = self.largest_batch().max(1);
+        let mut preds = Vec::with_capacity(inputs.len());
+        let mut service_ms = 0.0;
+        for chunk in inputs.chunks(largest) {
+            let b = self.pick_batch(chunk.len());
+            let mut images = Vec::with_capacity(b * input_len);
+            for x in chunk {
+                images.extend_from_slice(x);
+            }
+            for _ in chunk.len()..b {
+                images.extend_from_slice(chunk[0]);
+            }
+            let probs = compute.predict_batch(&self.spec.name, b, params, &images, classes)?;
+            if probs.len() != b * classes {
+                bail!(
+                    "predict returned {} values, expected {} (batch {b} × {classes} classes)",
+                    probs.len(),
+                    b * classes
+                );
+            }
+            for row in probs.chunks(classes).take(chunk.len()) {
+                preds.push(Prediction::from_row(row));
+            }
+            self.batches += 1;
+            self.examples += chunk.len() as u64;
+            self.padded += (b - chunk.len()) as u64;
+            service_ms +=
+                self.profile.per_batch_overhead_ms + b as f64 / self.profile.power_vps * 1000.0;
+        }
+        Ok((preds, service_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+    use crate::runtime::ModeledCompute;
+
+    fn spec(micro_batches: Vec<usize>) -> ModelSpec {
+        let batch_size = micro_batches[0];
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 12,
+            batch_size,
+            micro_batches,
+            input: vec![3, 1, 1],
+            classes: 4,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![12],
+                offset: 0,
+                size: 12,
+                fan_in: 3,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn params() -> Vec<f32> {
+        (0..12).map(|i| (i as f32 - 6.0) * 0.2).collect()
+    }
+
+    fn inputs(n: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| (0..3).map(|j| ((i * 3 + j) as f32 * 0.37).sin().abs()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn batched_equals_unbatched() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let xs = inputs(5);
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        let mut batched = BatchExecutor::new(spec(vec![8, 4, 1]), ServerProfile::default());
+        let (together, _) = batched.execute(&mut compute, &params(), &refs).unwrap();
+        let mut single = BatchExecutor::new(spec(vec![8, 4, 1]), ServerProfile::default());
+        for (x, expect) in refs.iter().zip(&together) {
+            let (alone, _) = single.execute(&mut compute, &params(), &[x]).unwrap();
+            assert_eq!(&alone[0], expect, "batching changed a prediction");
+        }
+    }
+
+    #[test]
+    fn pads_to_smallest_compiled_variant() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let xs = inputs(5);
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        let mut ex = BatchExecutor::new(spec(vec![8, 4, 1]), ServerProfile::default());
+        ex.execute(&mut compute, &params(), &refs).unwrap();
+        // 5 requests → compiled batch 8: 3 padding rows.
+        assert_eq!(ex.batches(), 1);
+        assert_eq!(ex.examples(), 5);
+        assert_eq!(ex.padded(), 3);
+        assert!((ex.occupancy() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_batches_chunk() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let xs = inputs(9);
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        let mut ex = BatchExecutor::new(spec(vec![4, 1]), ServerProfile::default());
+        let (preds, ms) = ex.execute(&mut compute, &params(), &refs).unwrap();
+        assert_eq!(preds.len(), 9);
+        // 4 + 4 + 1 → three executions, the last on the b=1 variant.
+        assert_eq!(ex.batches(), 3);
+        assert_eq!(ex.padded(), 0);
+        assert!(ms > 0.0);
+    }
+
+    #[test]
+    fn per_batch_overhead_amortizes() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let xs = inputs(8);
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        let mut ex = BatchExecutor::new(spec(vec![8, 1]), ServerProfile::default());
+        let (_, one_batch_ms) = ex.execute(&mut compute, &params(), &refs).unwrap();
+        let mut singles_ms = 0.0;
+        for x in &refs {
+            let (_, ms) = ex.execute(&mut compute, &params(), &[x]).unwrap();
+            singles_ms += ms;
+        }
+        assert!(
+            one_batch_ms < singles_ms / 2.0,
+            "batched {one_batch_ms} ms vs serial {singles_ms} ms"
+        );
+    }
+
+    #[test]
+    fn unsorted_micro_batches_still_pick_smallest_fit() {
+        // A hand-built (or ascending) variant list must not inflate the
+        // padded batch: 3 requests over [4, 8, 1] pick 4, not 8.
+        let mut compute = ModeledCompute { param_count: 12 };
+        let xs = inputs(3);
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        let mut ex = BatchExecutor::new(spec(vec![4, 8, 1]), ServerProfile::default());
+        ex.execute(&mut compute, &params(), &refs).unwrap();
+        assert_eq!(ex.batches(), 1);
+        assert_eq!(ex.padded(), 1, "3 → b=4 pads one row, not five");
+    }
+
+    #[test]
+    fn rejects_wrong_input_len() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let mut ex = BatchExecutor::new(spec(vec![4]), ServerProfile::default());
+        let bad = vec![0.0f32; 2];
+        assert!(ex.execute(&mut compute, &params(), &[&bad]).is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let mut ex = BatchExecutor::new(spec(vec![4]), ServerProfile::default());
+        let (preds, ms) = ex.execute(&mut compute, &params(), &[]).unwrap();
+        assert!(preds.is_empty());
+        assert_eq!(ms, 0.0);
+        assert_eq!(ex.batches(), 0);
+        assert_eq!(ex.occupancy(), 1.0);
+    }
+
+    #[test]
+    fn prediction_from_row_ties_break_low() {
+        let p = Prediction::from_row(&[0.2, 0.4, 0.4]);
+        assert_eq!(p.class, 1);
+        assert_eq!(p.confidence, 0.4);
+    }
+}

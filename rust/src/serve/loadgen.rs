@@ -1,0 +1,277 @@
+//! Open-loop request-load generation.
+//!
+//! The serving fleet mirrors the training fleet's heterogeneity (§3.3d):
+//! groups of simulated clients on Lan/Wifi/Cellular [`LinkProfile`]s each
+//! fire prediction requests as an independent Poisson process at a
+//! configured per-client rate — open-loop, so offered load does not slow
+//! down when the server queues (the regime where admission control and
+//! micro-batching earn their keep).  Inputs are drawn from a shared pool
+//! of synthetic samples; pool size dials the repeat rate the prediction
+//! cache sees.
+
+use std::sync::Arc;
+
+use crate::data::{SynthSpec, Synthesizer};
+use crate::model::ModelSpec;
+use crate::netsim::{LinkModel, LinkProfile};
+use crate::rng::{Exp, Pcg32};
+
+/// A homogeneous group of simulated request clients.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientSpec {
+    pub link: LinkProfile,
+    /// Open-loop arrival rate per client (requests/second).
+    pub rate_rps: f64,
+    /// Clients in the group.
+    pub count: usize,
+}
+
+/// The whole request fleet for one serving run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub groups: Vec<ClientSpec>,
+    /// Emission horizon (virtual seconds): requests are *sent* within
+    /// [0, duration); responses may complete after it.
+    pub duration_s: f64,
+    /// Distinct inputs the fleet draws from (smaller pool ⇒ more repeats
+    /// ⇒ higher cache hit rate).
+    pub input_pool: usize,
+    pub seed: u64,
+}
+
+/// One request on the wire; the uplink (client → server) is resolved at
+/// generation time, the downlink at response time.
+#[derive(Debug, Clone)]
+pub struct RequestEvent {
+    pub id: u64,
+    pub client: u32,
+    /// When the client sent it (virtual ms).
+    pub sent_ms: f64,
+    /// When it reaches the server: sent + uplink latency + transmission.
+    pub arrival_ms: f64,
+    pub input: Arc<Vec<f32>>,
+}
+
+/// Generated fleet: per-client links (for response timing) plus the
+/// time-ordered server-arrival schedule.
+#[derive(Debug, Clone)]
+pub struct RequestFleet {
+    pub links: Vec<LinkModel>,
+    pub events: Vec<RequestEvent>,
+    /// Modeled request payload (f32 pixels + envelope).
+    pub input_bytes: u64,
+}
+
+impl RequestFleet {
+    /// Build the fleet and its full arrival schedule, deterministically
+    /// from `cfg.seed`.
+    pub fn generate(cfg: &FleetConfig, spec: &ModelSpec) -> Self {
+        let mut rng = Pcg32::new(cfg.seed ^ 0x5E47E);
+        let pool = input_pool(cfg, spec, &mut rng);
+        let input_bytes = (spec.input_len() * 4 + 64) as u64;
+        let horizon_ms = cfg.duration_s * 1000.0;
+
+        let mut links = Vec::new();
+        let mut events = Vec::new();
+        let mut id = 0u64;
+        let mut client = 0u32;
+        for group in &cfg.groups {
+            for _ in 0..group.count {
+                let mut crng = rng.fork(client as u64 + 1);
+                let link = LinkModel::new(group.link, &mut crng);
+                if group.rate_rps > 0.0 {
+                    let gap = Exp::new(group.rate_rps / 1000.0); // per-ms rate
+                    let mut t = gap.sample(&mut crng);
+                    while t < horizon_ms {
+                        let input = Arc::clone(&pool[crng.gen_range_usize(pool.len())]);
+                        let uplink =
+                            link.sample_latency_ms(&mut crng) + link.transmit_ms(input_bytes);
+                        events.push(RequestEvent {
+                            id,
+                            client,
+                            sent_ms: t,
+                            arrival_ms: t + uplink,
+                            input,
+                        });
+                        id += 1;
+                        t += gap.sample(&mut crng);
+                    }
+                }
+                links.push(link);
+                client += 1;
+            }
+        }
+        events.sort_by(|a, b| {
+            a.arrival_ms
+                .partial_cmp(&b.arrival_ms)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        Self {
+            links,
+            events,
+            input_bytes,
+        }
+    }
+
+    /// Total requests offered to the server.
+    pub fn offered(&self) -> u64 {
+        self.events.len() as u64
+    }
+}
+
+/// Shared input pool: synthetic corpus samples when the model's input
+/// shape matches a known corpus, uniform noise tensors otherwise (toy
+/// specs in tests).
+fn input_pool(cfg: &FleetConfig, spec: &ModelSpec, rng: &mut Pcg32) -> Vec<Arc<Vec<f32>>> {
+    let n = cfg.input_pool.max(1);
+    let synth_spec = match spec.input.as_slice() {
+        [32, 32, 3] => SynthSpec::cifar(cfg.seed ^ 0xD00D),
+        _ => SynthSpec::mnist(cfg.seed ^ 0xD00D),
+    };
+    if synth_spec.pixels() == spec.input_len() {
+        let synth = Synthesizer::new(synth_spec);
+        (0..n)
+            .map(|i| {
+                Arc::new(
+                    synth
+                        .sample((i % synth_spec.classes as usize) as u8, i as u64)
+                        .pixels,
+                )
+            })
+            .collect()
+    } else {
+        (0..n)
+            .map(|_| Arc::new((0..spec.input_len()).map(|_| rng.gen_f32()).collect()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 6,
+            batch_size: 4,
+            micro_batches: vec![4, 1],
+            input: vec![3, 2, 1],
+            classes: 2,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![6],
+                offset: 0,
+                size: 6,
+                fan_in: 3,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn cfg(rate: f64, clients: usize, duration_s: f64) -> FleetConfig {
+        FleetConfig {
+            groups: vec![ClientSpec {
+                link: LinkProfile::Lan,
+                rate_rps: rate,
+                count: clients,
+            }],
+            duration_s,
+            input_pool: 8,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn event_count_tracks_offered_load() {
+        let fleet_lo = RequestFleet::generate(&cfg(2.0, 4, 10.0), &spec());
+        let fleet_hi = RequestFleet::generate(&cfg(20.0, 4, 10.0), &spec());
+        // Poisson: expect ~80 vs ~800; allow wide slack.
+        assert!(fleet_lo.offered() > 30 && fleet_lo.offered() < 200, "{}", fleet_lo.offered());
+        assert!(
+            fleet_hi.offered() > 5 * fleet_lo.offered(),
+            "hi {} lo {}",
+            fleet_hi.offered(),
+            fleet_lo.offered()
+        );
+        assert_eq!(fleet_hi.links.len(), 4);
+    }
+
+    #[test]
+    fn events_sorted_by_arrival_and_after_send() {
+        let fleet = RequestFleet::generate(&cfg(10.0, 3, 5.0), &spec());
+        for w in fleet.events.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+        for e in &fleet.events {
+            assert!(e.arrival_ms > e.sent_ms, "uplink takes time");
+            assert!(e.sent_ms < 5_000.0, "sent within the horizon");
+            assert_eq!(e.input.len(), 6);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = RequestFleet::generate(&cfg(5.0, 2, 5.0), &spec());
+        let b = RequestFleet::generate(&cfg(5.0, 2, 5.0), &spec());
+        assert_eq!(a.offered(), b.offered());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+        }
+        let mut other = cfg(5.0, 2, 5.0);
+        other.seed = 4;
+        let c = RequestFleet::generate(&other, &spec());
+        assert!(
+            a.events.len() != c.events.len()
+                || a.events
+                    .iter()
+                    .zip(&c.events)
+                    .any(|(x, y)| x.arrival_ms != y.arrival_ms)
+        );
+    }
+
+    #[test]
+    fn cellular_uplinks_are_slower_than_lan() {
+        let mut lan_cfg = cfg(10.0, 4, 10.0);
+        let mut cell_cfg = cfg(10.0, 4, 10.0);
+        cell_cfg.groups[0].link = LinkProfile::Cellular;
+        lan_cfg.seed = 9;
+        cell_cfg.seed = 9;
+        let mean_uplink = |fleet: &RequestFleet| {
+            fleet
+                .events
+                .iter()
+                .map(|e| e.arrival_ms - e.sent_ms)
+                .sum::<f64>()
+                / fleet.events.len() as f64
+        };
+        let lan = mean_uplink(&RequestFleet::generate(&lan_cfg, &spec()));
+        let cell = mean_uplink(&RequestFleet::generate(&cell_cfg, &spec()));
+        assert!(cell > 3.0 * lan, "cellular {cell} vs lan {lan}");
+    }
+
+    #[test]
+    fn zero_rate_or_zero_clients_offer_nothing() {
+        let none = RequestFleet::generate(&cfg(0.0, 4, 10.0), &spec());
+        assert_eq!(none.offered(), 0);
+        assert_eq!(none.links.len(), 4);
+        let empty = RequestFleet::generate(&cfg(5.0, 0, 10.0), &spec());
+        assert_eq!(empty.offered(), 0);
+        assert!(empty.links.is_empty());
+    }
+
+    #[test]
+    fn pool_inputs_repeat_across_requests() {
+        let mut c = cfg(50.0, 2, 10.0);
+        c.input_pool = 2;
+        let fleet = RequestFleet::generate(&c, &spec());
+        let first = &fleet.events[0].input;
+        assert!(
+            fleet.events[1..].iter().any(|e| Arc::ptr_eq(&e.input, first)),
+            "a 2-entry pool must produce repeats"
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Prediction serving — MLitB's second pillar, as a simulated subsystem.
+//!
+//! The paper's goal is not only distributed *training* but bringing
+//! "sophisticated machine learning … **and prediction** to the public at
+//! large": trained models are saved in universally readable formats
+//! (research closures, §2.3/§3.6) and downloaded by any device for
+//! inference.  Where `coordinator`/`sim` reproduce the training side,
+//! this module opens the inference-under-load workload the ROADMAP's
+//! "heavy traffic from millions of users" north star demands:
+//!
+//! * [`SnapshotRegistry`] — versioned parameter snapshots ingested from
+//!   research closures or live training masters, with activation/rollback
+//!   and retention GC.
+//! * [`AdmissionQueue`] + [`BatchPolicy`] — bounded admission and
+//!   deadline-bounded micro-batching (flush on full batch or oldest-wait
+//!   deadline), the serving latency/throughput dial.
+//! * [`PredictionCache`] — LRU over (snapshot, input) exact-match keys;
+//!   hits skip the queue entirely.
+//! * [`BatchExecutor`] — pads flushed batches to the compiled micro-batch
+//!   variants and runs them through [`crate::runtime::Compute`];
+//!   per-example purity guarantees batching never changes a prediction.
+//! * [`RequestFleet`] — open-loop Poisson request generators over
+//!   heterogeneous `netsim` link profiles (Lan/Wifi/Cellular).
+//! * [`ServeSim`] — the discrete-event driver binding the above; emits a
+//!   [`ServeReport`] with per-request latency percentiles and throughput
+//!   via `metrics`.
+//!
+//! Entry points: the `mlitb serve-sim` CLI subcommand,
+//! `benches/fig_serving.rs` (throughput/latency vs offered load), and
+//! `examples/serving.rs`.
+
+mod cache;
+mod executor;
+mod loadgen;
+mod queue;
+mod registry;
+mod sim;
+
+pub use cache::{input_key, PredictionCache};
+pub use executor::{BatchExecutor, Prediction, ServerProfile};
+pub use loadgen::{ClientSpec, FleetConfig, RequestEvent, RequestFleet};
+pub use queue::{AdmissionQueue, BatchPolicy, PredictRequest};
+pub use registry::{Snapshot, SnapshotId, SnapshotRegistry};
+pub use sim::{ServeConfig, ServeReport, ServeSim};
+
+use crate::model::{ModelSpec, TensorSpec};
+
+/// A manifest-free MNIST-shaped MLP spec (784→16→10) so serving demos,
+/// benches and the CLI run end-to-end without compiled AOT artifacts —
+/// predictions then come from `ModeledCompute`'s deterministic scorer.
+pub fn demo_spec() -> ModelSpec {
+    let tensors = vec![
+        TensorSpec {
+            name: "l0_fc_w".into(),
+            shape: vec![784, 16],
+            offset: 0,
+            size: 12_544,
+            fan_in: 784,
+        },
+        TensorSpec {
+            name: "l0_fc_b".into(),
+            shape: vec![16],
+            offset: 12_544,
+            size: 16,
+            fan_in: 784,
+        },
+        TensorSpec {
+            name: "l1_fc_w".into(),
+            shape: vec![16, 10],
+            offset: 12_560,
+            size: 160,
+            fan_in: 16,
+        },
+        TensorSpec {
+            name: "l1_fc_b".into(),
+            shape: vec![10],
+            offset: 12_720,
+            size: 10,
+            fan_in: 16,
+        },
+    ];
+    ModelSpec {
+        name: "demo_mlp".into(),
+        param_count: 12_730,
+        batch_size: 32,
+        micro_batches: vec![32, 8, 1],
+        input: vec![28, 28, 1],
+        classes: 10,
+        tensors,
+        artifacts: Default::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_spec_is_structurally_valid() {
+        let spec = demo_spec();
+        assert_eq!(spec.input_len(), 784);
+        let sum: usize = spec.tensors.iter().map(|t| t.size).sum();
+        assert_eq!(sum, spec.param_count);
+        let mut offset = 0;
+        for t in &spec.tensors {
+            assert_eq!(t.offset, offset, "tensor {} offset gap", t.name);
+            offset += t.size;
+        }
+        // init_params works on it (biases stay zero).
+        let params = crate::model::init_params(&spec, 1);
+        assert_eq!(params.len(), spec.param_count);
+        assert!(params[12_544..12_560].iter().all(|&b| b == 0.0));
+    }
+}

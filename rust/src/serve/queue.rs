@@ -1,0 +1,213 @@
+//! Admission control + deadline-bounded micro-batching.
+//!
+//! The serving analogue of the master's gradient-ingestion queue: requests
+//! arriving from the fleet are admitted into a bounded FIFO and coalesced
+//! into batches.  A batch flushes as soon as the executor is free and
+//! either (a) a full `max_batch` is waiting, or (b) the oldest admitted
+//! request has waited `max_wait_ms` — the latency/throughput dial every
+//! serving system exposes.  When the queue is at `queue_depth` the request
+//! is rejected (open-loop load shedding: the client sees a fast error
+//! rather than an unbounded tail, the counterpart of §3.3d work-shedding
+//! on the training side).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// One admitted prediction request waiting for a batch slot.
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub id: u64,
+    pub client: u32,
+    /// When the client sent it (virtual ms).
+    pub sent_ms: f64,
+    /// When it reached the server (virtual ms).
+    pub arrival_ms: f64,
+    /// Shared input tensor (HWC f32, same pool the load generator draws
+    /// from — no per-request pixel copies).
+    pub input: Arc<Vec<f32>>,
+    /// Prediction-cache key (computed at admission).
+    pub key: u64,
+}
+
+/// Batching/admission knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch one flush forms.  `ServeSim` clamps it to the
+    /// model's largest compiled micro-batch so one flush is always one
+    /// execution.
+    pub max_batch: usize,
+    /// Deadline: a partial batch waits at most this long past its oldest
+    /// member's arrival before flushing.
+    pub max_wait_ms: f64,
+    /// Admission bound: requests beyond this many pending are rejected.
+    pub queue_depth: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait_ms: 5.0,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Bounded FIFO of admitted requests with flush-time computation.
+#[derive(Debug, Clone)]
+pub struct AdmissionQueue {
+    policy: BatchPolicy,
+    pending: VecDeque<PredictRequest>,
+    admitted: u64,
+    rejected: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            pending: VecDeque::new(),
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Admit a request, or shed it when the queue is full.  Returns
+    /// whether it was admitted.
+    pub fn offer(&mut self, req: PredictRequest) -> bool {
+        if self.pending.len() >= self.policy.queue_depth.max(1) {
+            self.rejected += 1;
+            return false;
+        }
+        self.pending.push_back(req);
+        self.admitted += 1;
+        true
+    }
+
+    /// Arrival time of the oldest pending request.
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.pending.front().map(|r| r.arrival_ms)
+    }
+
+    /// Earliest time the next batch may flush, given the executor frees at
+    /// `free_at`: a full batch goes as soon as the executor is free; a
+    /// partial batch additionally waits for the oldest member's deadline.
+    /// `None` when nothing is pending.  Callers clamp to "now" — pending
+    /// requests arrived in the past, so the returned time may precede the
+    /// caller's clock.
+    pub fn next_flush_at(&self, free_at: f64) -> Option<f64> {
+        let oldest = self.oldest_arrival()?;
+        let ready = if self.pending.len() >= self.policy.max_batch {
+            oldest
+        } else {
+            oldest + self.policy.max_wait_ms
+        };
+        Some(ready.max(free_at))
+    }
+
+    /// Pop up to `max_batch` requests, FIFO.
+    pub fn take_batch(&mut self) -> Vec<PredictRequest> {
+        let n = self.pending.len().min(self.policy.max_batch.max(1));
+        self.pending.drain(..n).collect()
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_ms: f64) -> PredictRequest {
+        PredictRequest {
+            id,
+            client: 0,
+            sent_ms: arrival_ms - 1.0,
+            arrival_ms,
+            input: Arc::new(vec![0.0; 4]),
+            key: id,
+        }
+    }
+
+    fn queue(max_batch: usize, max_wait_ms: f64, depth: usize) -> AdmissionQueue {
+        AdmissionQueue::new(BatchPolicy {
+            max_batch,
+            max_wait_ms,
+            queue_depth: depth,
+        })
+    }
+
+    #[test]
+    fn empty_queue_has_no_flush() {
+        let q = queue(4, 5.0, 16);
+        assert!(q.next_flush_at(0.0).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut q = queue(4, 5.0, 16);
+        q.offer(req(1, 10.0));
+        q.offer(req(2, 11.0));
+        // Oldest arrived at 10, so the partial batch flushes at 15.
+        assert_eq!(q.next_flush_at(0.0), Some(15.0));
+        // A busy executor pushes the flush later.
+        assert_eq!(q.next_flush_at(20.0), Some(20.0));
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut q = queue(2, 50.0, 16);
+        q.offer(req(1, 10.0));
+        q.offer(req(2, 12.0));
+        // Full: no deadline wait; only executor availability matters.
+        assert_eq!(q.next_flush_at(0.0), Some(10.0));
+        assert_eq!(q.next_flush_at(13.0), Some(13.0));
+    }
+
+    #[test]
+    fn take_batch_is_fifo_and_bounded() {
+        let mut q = queue(2, 5.0, 16);
+        for i in 0..5 {
+            q.offer(req(i, i as f64));
+        }
+        let b1 = q.take_batch();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.len(), 3);
+        let b2 = q.take_batch();
+        assert_eq!(b2[0].id, 2);
+        assert_eq!(q.take_batch().len(), 1);
+        assert!(q.take_batch().is_empty());
+    }
+
+    #[test]
+    fn overflow_is_rejected_and_counted() {
+        let mut q = queue(4, 5.0, 2);
+        assert!(q.offer(req(1, 0.0)));
+        assert!(q.offer(req(2, 0.0)));
+        assert!(!q.offer(req(3, 0.0)), "queue at depth must shed");
+        assert_eq!(q.admitted(), 2);
+        assert_eq!(q.rejected(), 1);
+        // Draining frees capacity again.
+        q.take_batch();
+        assert!(q.offer(req(4, 1.0)));
+    }
+}

@@ -1,0 +1,249 @@
+//! Snapshot registry — versioned parameter vectors behind the serving
+//! endpoint.
+//!
+//! The paper's prediction story (§2.3, §3.6): trained models are saved in
+//! a universally readable format — the JSON research closure — and "any
+//! device" downloads them for inference.  The registry is the server side
+//! of that hand-off: it ingests closures (or live parameter vectors from a
+//! training master), validates them against the model's manifest spec,
+//! assigns monotonically increasing version ids, and designates the
+//! *active* snapshot new prediction requests are served from.  Publishing
+//! activates the new version; `set_active` rolls back.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::model::{ModelSpec, ResearchClosure};
+
+/// Monotonic snapshot version (1-based; 0 is never assigned).
+pub type SnapshotId = u64;
+
+/// One servable model version.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub id: SnapshotId,
+    pub model: String,
+    /// Training iteration the parameters were captured at.
+    pub iteration: u64,
+    /// Shared parameter vector (the executor and cache key off it without
+    /// copying ~100k f32 per request batch).
+    pub params: Arc<Vec<f32>>,
+    /// Free-form provenance (mirrors the closure's notes).
+    pub notes: String,
+    /// Virtual publish time (ms) — input to retention policies.
+    pub published_ms: f64,
+}
+
+/// Versioned snapshot store for one served model.
+#[derive(Debug, Clone)]
+pub struct SnapshotRegistry {
+    spec: ModelSpec,
+    next_id: SnapshotId,
+    snapshots: BTreeMap<SnapshotId, Snapshot>,
+    active: Option<SnapshotId>,
+}
+
+impl SnapshotRegistry {
+    pub fn new(spec: ModelSpec) -> Self {
+        Self {
+            spec,
+            next_id: 1,
+            snapshots: BTreeMap::new(),
+            active: None,
+        }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Ingest a research closure (the paper's download/upload object);
+    /// validates model identity and parameter count before versioning.
+    pub fn publish_closure(
+        &mut self,
+        closure: &ResearchClosure,
+        now_ms: f64,
+    ) -> Result<SnapshotId, String> {
+        closure.check_compatible(&self.spec)?;
+        self.publish_params(
+            closure.params.clone(),
+            closure.iteration,
+            closure.notes.clone(),
+            now_ms,
+        )
+    }
+
+    /// Publish a raw parameter vector (live hand-off from a training
+    /// master).  The new snapshot becomes active.
+    pub fn publish_params(
+        &mut self,
+        params: Vec<f32>,
+        iteration: u64,
+        notes: String,
+        now_ms: f64,
+    ) -> Result<SnapshotId, String> {
+        if params.len() != self.spec.param_count {
+            return Err(format!(
+                "snapshot has {} params, model '{}' expects {}",
+                params.len(),
+                self.spec.name,
+                self.spec.param_count
+            ));
+        }
+        if let Some(bad) = params.iter().position(|p| !p.is_finite()) {
+            return Err(format!("snapshot param {bad} is not finite"));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.snapshots.insert(
+            id,
+            Snapshot {
+                id,
+                model: self.spec.name.clone(),
+                iteration,
+                params: Arc::new(params),
+                notes,
+                published_ms: now_ms,
+            },
+        );
+        self.active = Some(id);
+        Ok(id)
+    }
+
+    pub fn get(&self, id: SnapshotId) -> Option<&Snapshot> {
+        self.snapshots.get(&id)
+    }
+
+    /// The snapshot new requests are served from.
+    pub fn active(&self) -> Option<&Snapshot> {
+        self.active.and_then(|id| self.snapshots.get(&id))
+    }
+
+    /// Pin serving to an existing version (rollback / canary-undo).
+    pub fn set_active(&mut self, id: SnapshotId) -> Result<(), String> {
+        if !self.snapshots.contains_key(&id) {
+            return Err(format!("snapshot v{id} not in registry"));
+        }
+        self.active = Some(id);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snapshots.is_empty()
+    }
+
+    /// Version ids, oldest first.
+    pub fn ids(&self) -> Vec<SnapshotId> {
+        self.snapshots.keys().copied().collect()
+    }
+
+    /// Retention: keep the newest `keep` versions (the active snapshot is
+    /// always kept, even when older).  Returns the ids dropped.
+    pub fn gc_keep_latest(&mut self, keep: usize) -> Vec<SnapshotId> {
+        let ids = self.ids();
+        let cutoff = ids.len().saturating_sub(keep);
+        let mut dropped = Vec::new();
+        for id in &ids[..cutoff] {
+            if Some(*id) == self.active {
+                continue;
+            }
+            self.snapshots.remove(id);
+            dropped.push(*id);
+        }
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 4,
+            batch_size: 2,
+            micro_batches: vec![2, 1],
+            input: vec![2, 1, 1],
+            classes: 2,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![4],
+                offset: 0,
+                size: 4,
+                fan_in: 2,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn publish_versions_and_activates_latest() {
+        let mut reg = SnapshotRegistry::new(spec());
+        assert!(reg.active().is_none());
+        let v1 = reg.publish_params(vec![0.0; 4], 10, "a".into(), 0.0).unwrap();
+        let v2 = reg.publish_params(vec![1.0; 4], 20, "b".into(), 5.0).unwrap();
+        assert_eq!((v1, v2), (1, 2));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.active().unwrap().id, v2);
+        assert_eq!(reg.get(v1).unwrap().iteration, 10);
+        assert_eq!(*reg.get(v2).unwrap().params, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn publish_closure_validates_against_spec() {
+        let mut reg = SnapshotRegistry::new(spec());
+        let mut c = ResearchClosure::new(&spec(), &[0.5; 4]);
+        c.iteration = 7;
+        let id = reg.publish_closure(&c, 1.0).unwrap();
+        assert_eq!(reg.get(id).unwrap().iteration, 7);
+
+        // Wrong model name is rejected before versioning.
+        let mut other = spec();
+        other.name = "other".into();
+        let bad = ResearchClosure::new(&other, &[0.5; 4]);
+        assert!(reg.publish_closure(&bad, 1.0).is_err());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_param_vectors() {
+        let mut reg = SnapshotRegistry::new(spec());
+        assert!(reg.publish_params(vec![0.0; 3], 0, String::new(), 0.0).is_err());
+        assert!(reg
+            .publish_params(vec![0.0, f32::NAN, 0.0, 0.0], 0, String::new(), 0.0)
+            .is_err());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn rollback_pins_older_version() {
+        let mut reg = SnapshotRegistry::new(spec());
+        let v1 = reg.publish_params(vec![0.0; 4], 1, String::new(), 0.0).unwrap();
+        let v2 = reg.publish_params(vec![1.0; 4], 2, String::new(), 0.0).unwrap();
+        reg.set_active(v1).unwrap();
+        assert_eq!(reg.active().unwrap().id, v1);
+        assert!(reg.set_active(99).is_err());
+        assert_eq!(reg.active().unwrap().id, v1);
+        let _ = v2;
+    }
+
+    #[test]
+    fn gc_keeps_newest_and_active() {
+        let mut reg = SnapshotRegistry::new(spec());
+        for i in 0..5 {
+            reg.publish_params(vec![i as f32; 4], i, String::new(), i as f64)
+                .unwrap();
+        }
+        reg.set_active(1).unwrap(); // pin the oldest
+        let dropped = reg.gc_keep_latest(2);
+        assert_eq!(dropped, vec![2, 3]);
+        assert_eq!(reg.ids(), vec![1, 4, 5]);
+        assert_eq!(reg.active().unwrap().id, 1);
+    }
+}

@@ -1,0 +1,493 @@
+//! Discrete-event serving simulation: admission → cache → micro-batch →
+//! execute → respond, over a snapshot registry and a simulated request
+//! fleet.
+//!
+//! The counterpart of [`crate::sim::Simulation`] for the prediction
+//! workload.  Two timelines interleave on one virtual clock: request
+//! arrivals (precomputed by the load generator) and batch flushes (decided
+//! by the admission queue against the executor's availability).  The
+//! executor is serial — one serving process, matching the training
+//! master's single-server model (§3.5) — so queueing delay is what the
+//! latency percentiles measure under load.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{RequestLog, RequestRecord, Summary};
+use crate::netsim::LinkModel;
+use crate::rng::Pcg32;
+use crate::runtime::Compute;
+
+use super::cache::{input_key, PredictionCache};
+use super::executor::{BatchExecutor, Prediction, ServerProfile};
+use super::loadgen::{FleetConfig, RequestFleet};
+use super::queue::{AdmissionQueue, BatchPolicy, PredictRequest};
+use super::registry::SnapshotRegistry;
+
+/// Everything one serving run needs besides the registry and compute.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub fleet: FleetConfig,
+    pub policy: BatchPolicy,
+    pub server: ServerProfile,
+    /// Prediction-cache capacity in entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Response payload on the downlink (class + confidence + envelope).
+    pub response_bytes: u64,
+}
+
+/// Outcome of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub log: RequestLog,
+    pub offered: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub cache_hits: u64,
+    pub batches: u64,
+    /// Real requests executed in batches (excludes cache hits + padding).
+    pub batch_examples: u64,
+    pub padded_examples: u64,
+    /// Emission horizon (s) — offered-load normalizer.
+    pub duration_s: f64,
+    /// Virtual time of the last response (s).
+    pub span_s: f64,
+}
+
+impl ServeReport {
+    /// Completed requests per second of emission horizon.
+    pub fn throughput_rps(&self) -> f64 {
+        self.log.throughput_rps(self.duration_s.max(self.span_s))
+    }
+
+    /// End-to-end latency distribution.
+    pub fn latency(&self) -> Summary {
+        self.log.latency_summary()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.completed as f64
+    }
+
+    /// Mean executed-batch size (real requests per flush).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batch_examples as f64 / self.batches as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let lat = self.latency();
+        format!(
+            "offered={} completed={} rejected={} hit_rate={:.2} mean_batch={:.1} \
+             p50={:.1}ms p95={:.1}ms p99={:.1}ms throughput={:.1} rps",
+            self.offered,
+            self.completed,
+            self.rejected,
+            self.hit_rate(),
+            self.mean_batch(),
+            lat.median(),
+            lat.p95(),
+            lat.quantile(0.99),
+            self.throughput_rps(),
+        )
+    }
+}
+
+/// A configured serving run over one registry + compute backend.
+pub struct ServeSim<'c> {
+    cfg: ServeConfig,
+    registry: SnapshotRegistry,
+    compute: &'c mut dyn Compute,
+}
+
+impl<'c> ServeSim<'c> {
+    pub fn new(cfg: ServeConfig, registry: SnapshotRegistry, compute: &'c mut dyn Compute) -> Self {
+        Self {
+            cfg,
+            registry,
+            compute,
+        }
+    }
+
+    pub fn registry(&self) -> &SnapshotRegistry {
+        &self.registry
+    }
+
+    /// Run the full request schedule to completion.
+    pub fn run(&mut self) -> Result<ServeReport> {
+        let snapshot = self
+            .registry
+            .active()
+            .ok_or_else(|| anyhow!("no snapshot published — registry is empty"))?
+            .clone();
+        let spec = self.registry.spec().clone();
+        let fleet = RequestFleet::generate(&self.cfg.fleet, &spec);
+        // Clamp the flush size to the largest compiled micro-batch so
+        // every flushed batch is exactly one execution — `batch_size` in
+        // the log then always names a real executed batch.
+        let largest = spec
+            .micro_batches
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(spec.batch_size)
+            .max(1);
+        let mut policy = self.cfg.policy;
+        policy.max_batch = policy.max_batch.clamp(1, largest);
+        let mut queue = AdmissionQueue::new(policy);
+        let mut cache = PredictionCache::new(self.cfg.cache_capacity);
+        let mut executor = BatchExecutor::new(spec, self.cfg.server);
+        let mut log = RequestLog::new();
+        // Cache fills only when a batch's computation *completes*: entries
+        // queued here become visible once virtual time passes `ready_ms`.
+        // A duplicate arriving while its twin is still in flight misses
+        // and executes too (request coalescing is a ROADMAP follow-on).
+        let mut pending_inserts: VecDeque<PendingInsert> = VecDeque::new();
+        // Downlink jitter draws; separate stream from the load generator
+        // so admission decisions cannot perturb arrival schedules.
+        let mut rng = Pcg32::new(self.cfg.fleet.seed ^ 0x5E12E);
+
+        let mut now = 0.0f64;
+        let mut free_at = 0.0f64;
+        let mut next = 0usize;
+        loop {
+            let arrival = fleet.events.get(next).map(|e| e.arrival_ms);
+            let flush = queue.next_flush_at(free_at).map(|t| t.max(now));
+            // Arrivals win ties so a request landing exactly at flush time
+            // still joins the batch.
+            let take_arrival = match (arrival, flush) {
+                (None, None) => break,
+                (Some(a), Some(f)) => a <= f,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+            };
+            if take_arrival {
+                let ev = &fleet.events[next];
+                next += 1;
+                now = ev.arrival_ms;
+                // With the cache disabled, skip hashing ~KB of pixels per
+                // request — nothing would ever consume the key.
+                let caching = cache.capacity() > 0;
+                let key = if caching {
+                    apply_ready_inserts(&mut cache, &mut pending_inserts, now);
+                    input_key(snapshot.id, &ev.input)
+                } else {
+                    0
+                };
+                let hit = if caching { cache.get(key, &ev.input) } else { None };
+                if let Some(pred) = hit {
+                    let done = now
+                        + self.cfg.server.cache_lookup_ms
+                        + respond_ms(&fleet.links, ev.client, self.cfg.response_bytes, &mut rng);
+                    log.push(RequestRecord {
+                        id: ev.id,
+                        client: ev.client,
+                        sent_ms: ev.sent_ms,
+                        done_ms: done,
+                        latency_ms: done - ev.sent_ms,
+                        batch_size: 0,
+                        cache_hit: true,
+                        class: pred.class as u32,
+                    });
+                } else {
+                    // Shedding is silent from the log's perspective: the
+                    // client gets a fast error, not a prediction.
+                    queue.offer(PredictRequest {
+                        id: ev.id,
+                        client: ev.client,
+                        sent_ms: ev.sent_ms,
+                        arrival_ms: ev.arrival_ms,
+                        input: Arc::clone(&ev.input),
+                        key,
+                    });
+                }
+            } else if let Some(f) = flush {
+                now = f;
+                apply_ready_inserts(&mut cache, &mut pending_inserts, now);
+                let batch = queue.take_batch();
+                let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
+                let (preds, service_ms) =
+                    executor.execute(self.compute, &snapshot.params, &inputs)?;
+                let computed_at = now + service_ms;
+                free_at = computed_at;
+                for (req, pred) in batch.iter().zip(&preds) {
+                    if cache.capacity() > 0 {
+                        pending_inserts.push_back(PendingInsert {
+                            ready_ms: computed_at,
+                            key: req.key,
+                            input: Arc::clone(&req.input),
+                            prediction: pred.clone(),
+                        });
+                    }
+                    let done = computed_at
+                        + respond_ms(&fleet.links, req.client, self.cfg.response_bytes, &mut rng);
+                    log.push(RequestRecord {
+                        id: req.id,
+                        client: req.client,
+                        sent_ms: req.sent_ms,
+                        done_ms: done,
+                        latency_ms: done - req.sent_ms,
+                        batch_size: batch.len() as u32,
+                        cache_hit: false,
+                        class: pred.class as u32,
+                    });
+                }
+            }
+        }
+
+        let span_s = log.span_ms() / 1000.0;
+        Ok(ServeReport {
+            offered: fleet.offered(),
+            completed: log.len() as u64,
+            rejected: queue.rejected(),
+            cache_hits: cache.hits(),
+            batches: executor.batches(),
+            batch_examples: executor.examples(),
+            padded_examples: executor.padded(),
+            duration_s: self.cfg.fleet.duration_s,
+            span_s,
+            log,
+        })
+    }
+}
+
+/// Downlink time for a response to `client`: latency jitter + transmission.
+fn respond_ms(links: &[LinkModel], client: u32, bytes: u64, rng: &mut Pcg32) -> f64 {
+    let link = &links[client as usize];
+    link.sample_latency_ms(rng) + link.transmit_ms(bytes)
+}
+
+/// A computed prediction awaiting cache visibility at its completion time.
+struct PendingInsert {
+    ready_ms: f64,
+    key: u64,
+    input: Arc<Vec<f32>>,
+    prediction: Prediction,
+}
+
+/// Publish pending cache entries whose computation completed by `t`
+/// (completions are monotone — the executor is serial — so the deque is
+/// time-ordered and a front-drain suffices).
+fn apply_ready_inserts(
+    cache: &mut PredictionCache,
+    pending: &mut VecDeque<PendingInsert>,
+    t: f64,
+) {
+    while pending.front().is_some_and(|p| p.ready_ms <= t) {
+        let p = pending.pop_front().expect("front checked");
+        cache.insert(p.key, p.input, p.prediction);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelSpec, TensorSpec};
+    use crate::netsim::LinkProfile;
+    use crate::runtime::ModeledCompute;
+    use crate::serve::loadgen::ClientSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 24,
+            batch_size: 8,
+            micro_batches: vec![8, 4, 1],
+            input: vec![4, 1, 1],
+            classes: 3,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![24],
+                offset: 0,
+                size: 24,
+                fan_in: 4,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn config(rate: f64, clients: usize, cache: usize) -> ServeConfig {
+        ServeConfig {
+            fleet: FleetConfig {
+                groups: vec![ClientSpec {
+                    link: LinkProfile::Lan,
+                    rate_rps: rate,
+                    count: clients,
+                }],
+                duration_s: 5.0,
+                input_pool: 16,
+                seed: 11,
+            },
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait_ms: 5.0,
+                queue_depth: 64,
+            },
+            server: ServerProfile::default(),
+            cache_capacity: cache,
+            response_bytes: 256,
+        }
+    }
+
+    fn registry() -> SnapshotRegistry {
+        let mut reg = SnapshotRegistry::new(spec());
+        let params: Vec<f32> = (0..24).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.2).collect();
+        reg.publish_params(params, 5, "test".into(), 0.0).unwrap();
+        reg
+    }
+
+    #[test]
+    fn accounts_for_every_request() {
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut sim = ServeSim::new(config(20.0, 4, 0), registry(), &mut compute);
+        let report = sim.run().unwrap();
+        assert!(report.offered > 0);
+        assert_eq!(report.completed + report.rejected, report.offered);
+        assert_eq!(report.batch_examples, report.completed - report.cache_hits);
+        for r in report.log.records() {
+            assert!(r.latency_ms > 0.0, "{r:?}");
+            assert!(r.done_ms > r.sent_ms);
+        }
+    }
+
+    #[test]
+    fn no_snapshot_is_an_error() {
+        let mut compute = ModeledCompute { param_count: 24 };
+        let empty = SnapshotRegistry::new(spec());
+        let mut sim = ServeSim::new(config(5.0, 1, 0), empty, &mut compute);
+        assert!(sim.run().is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut compute = ModeledCompute { param_count: 24 };
+            let mut cfg = config(10.0, 3, 32);
+            cfg.fleet.seed = seed;
+            let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+            sim.run().unwrap().log.to_csv()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn small_input_pool_drives_cache_hits() {
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut cfg = config(40.0, 4, 256);
+        cfg.fleet.input_pool = 4;
+        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+        let report = sim.run().unwrap();
+        assert!(
+            report.hit_rate() > 0.5,
+            "4-input pool should mostly hit: {}",
+            report.summary()
+        );
+        assert!(report.cache_hits > 0 && report.batch_examples > 0);
+        // Cache hits skip the executor, so executed examples + hits must
+        // still account for every completed request.
+        assert_eq!(report.batch_examples + report.cache_hits, report.completed);
+    }
+
+    #[test]
+    fn overload_sheds_and_stays_bounded() {
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut cfg = config(2_000.0, 8, 0);
+        cfg.policy.queue_depth = 16;
+        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+        let report = sim.run().unwrap();
+        assert!(report.rejected > 0, "{}", report.summary());
+        assert_eq!(report.completed + report.rejected, report.offered);
+    }
+
+    #[test]
+    fn batching_is_transparent_to_predictions() {
+        // Same seed, same fleet; batch of 1 vs batch of 8 must serve the
+        // same class for every request id — the acceptance criterion.
+        let classes = |max_batch: usize| {
+            let mut compute = ModeledCompute { param_count: 24 };
+            let mut cfg = config(30.0, 4, 0); // cache off: everything executes
+            cfg.policy.max_batch = max_batch;
+            cfg.policy.max_wait_ms = if max_batch == 1 { 0.0 } else { 5.0 };
+            let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+            let report = sim.run().unwrap();
+            let mut by_id: Vec<(u64, u32)> = report
+                .log
+                .records()
+                .iter()
+                .map(|r| (r.id, r.class))
+                .collect();
+            by_id.sort_unstable();
+            by_id
+        };
+        let unbatched = classes(1);
+        let batched = classes(8);
+        assert_eq!(unbatched, batched, "batching changed served predictions");
+        assert!(!unbatched.is_empty());
+    }
+
+    #[test]
+    fn oversized_policy_batch_clamps_to_compiled_largest() {
+        // --batch 1000 on a model whose largest compiled variant is 8:
+        // every executed batch (and so every logged batch_size) must be a
+        // real compiled batch, never the raw policy number.
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut cfg = config(200.0, 8, 0);
+        cfg.policy.max_batch = 1000;
+        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+        let report = sim.run().unwrap();
+        assert!(report.batches > 0);
+        for r in report.log.records() {
+            assert!(r.batch_size <= 8, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn cache_entries_become_visible_only_after_completion() {
+        // A duplicate input arriving while its twin is still being
+        // computed must execute too (no answer can be served before the
+        // computation that produced it finishes).
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut cfg = config(400.0, 4, 4096);
+        cfg.fleet.input_pool = 2;
+        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+        let report = sim.run().unwrap();
+        // A flush-time cache would serve ~2 misses total (one per distinct
+        // input); completion-time visibility forces every duplicate that
+        // arrives during the first in-flight batch to execute as well.
+        assert!(report.batch_examples > 2, "{}", report.summary());
+        assert!(report.cache_hits > 0, "{}", report.summary());
+        assert_eq!(report.batch_examples + report.cache_hits, report.completed);
+    }
+
+    #[test]
+    fn batching_amortizes_under_load() {
+        // At high offered load, allowing batches must serve strictly more
+        // requests within the horizon than single-request execution.
+        let completed = |max_batch: usize| {
+            let mut compute = ModeledCompute { param_count: 24 };
+            let mut cfg = config(200.0, 8, 0);
+            cfg.policy.max_batch = max_batch;
+            cfg.policy.queue_depth = 32;
+            let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+            sim.run().unwrap()
+        };
+        let single = completed(1);
+        let batched = completed(8);
+        assert!(
+            batched.completed > single.completed,
+            "batched {} vs single {}",
+            batched.summary(),
+            single.summary()
+        );
+        assert!(batched.mean_batch() > 1.5, "{}", batched.summary());
+    }
+}

@@ -378,6 +378,25 @@ mod tests {
     }
 
     #[test]
+    fn zero_worker_fleet_runs_to_completion() {
+        // A project can exist with data registered but no volunteer ever
+        // joining: every iteration is a zero-worker iteration.
+        let spec = toy_spec(16);
+        let mut cfg = base_cfg(0, &spec);
+        cfg.fleet = vec![];
+        cfg.iterations = 3;
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        assert_eq!(sim.n_clients(), 0);
+        assert_eq!(sim.coverage(), 0.0);
+        let report = sim.run().unwrap();
+        assert_eq!(report.timeline.len(), 3);
+        assert_eq!(report.total_vectors, 0);
+        assert!(report.virtual_secs >= 12.0, "time must still advance");
+        sim.master().allocator().check_invariants().unwrap();
+    }
+
+    #[test]
     fn coverage_grows_with_fleet() {
         let spec = toy_spec(16);
         let mut compute = ModeledCompute { param_count: 8 };

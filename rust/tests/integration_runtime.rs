@@ -4,6 +4,10 @@
 //! These tests verify the L1/L2 → HLO-text → L3 bridge end to end:
 //! numerics (gradient descent direction, eval/predict consistency) and
 //! the manifest contract.
+//!
+//! Needs the compiled AOT artifacts, so the whole file is gated on the
+//! `pjrt` feature: `cargo test --features pjrt` after `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use mlitb::model::{init_params, Manifest};
 use mlitb::runtime::{BatchBuilder, Engine};

@@ -1,0 +1,119 @@
+//! Integration: the serving subsystem end-to-end — closure → registry →
+//! admission/batching → execution → per-request log — on the modeled
+//! predictor (no artifacts needed; the path is `Compute`-generic).
+
+use mlitb::model::{init_params, ResearchClosure};
+use mlitb::netsim::LinkProfile;
+use mlitb::runtime::ModeledCompute;
+use mlitb::serve::{
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, ServeConfig, ServeReport, ServeSim,
+    ServerProfile, SnapshotRegistry,
+};
+
+fn registry_from_closure() -> SnapshotRegistry {
+    let spec = demo_spec();
+    let mut closure = ResearchClosure::new(&spec, &init_params(&spec, 3));
+    closure.iteration = 500;
+    closure.notes = "integration".into();
+    let mut registry = SnapshotRegistry::new(spec);
+    registry.publish_closure(&closure, 0.0).expect("publish");
+    registry
+}
+
+fn config(max_batch: usize, cache: usize) -> ServeConfig {
+    ServeConfig {
+        fleet: FleetConfig {
+            groups: vec![
+                ClientSpec { link: LinkProfile::Lan, rate_rps: 6.0, count: 3 },
+                ClientSpec { link: LinkProfile::Wifi, rate_rps: 4.0, count: 3 },
+                ClientSpec { link: LinkProfile::Cellular, rate_rps: 2.0, count: 2 },
+            ],
+            duration_s: 8.0,
+            input_pool: 48,
+            seed: 21,
+        },
+        policy: BatchPolicy {
+            max_batch,
+            max_wait_ms: if max_batch == 1 { 0.0 } else { 5.0 },
+            queue_depth: 256,
+        },
+        server: ServerProfile::default(),
+        cache_capacity: cache,
+        response_bytes: 256,
+    }
+}
+
+fn run(cfg: ServeConfig) -> ServeReport {
+    let mut compute = ModeledCompute {
+        param_count: demo_spec().param_count,
+    };
+    let mut sim = ServeSim::new(cfg, registry_from_closure(), &mut compute);
+    sim.run().expect("serve run")
+}
+
+#[test]
+fn closure_to_served_requests_end_to_end() {
+    let report = run(config(32, 256));
+    assert!(report.offered > 50, "{}", report.summary());
+    assert_eq!(report.completed + report.rejected, report.offered);
+    assert_eq!(report.rejected, 0, "no shedding at this load");
+    assert!(report.span_s >= report.duration_s * 0.5);
+    assert!(report.throughput_rps() > 0.0);
+    // Every record is causally sane.
+    for r in report.log.records() {
+        assert!(r.done_ms > r.sent_ms, "{r:?}");
+        assert!((r.latency_ms - (r.done_ms - r.sent_ms)).abs() < 1e-9);
+        assert!((r.class as usize) < demo_spec().classes);
+    }
+    // CSV export carries one line per request + header.
+    assert_eq!(
+        report.log.to_csv().lines().count(),
+        report.completed as usize + 1
+    );
+}
+
+#[test]
+fn batched_serving_matches_unbatched_predictions() {
+    // The PR's acceptance criterion: identical per-request answers with
+    // micro-batching on (≤32) and off (=1).  Cache disabled so every
+    // request actually executes.
+    let collect = |max_batch: usize| {
+        let report = run(config(max_batch, 0));
+        assert_eq!(report.rejected, 0);
+        let mut by_id: Vec<(u64, u32)> = report
+            .log
+            .records()
+            .iter()
+            .map(|r| (r.id, r.class))
+            .collect();
+        by_id.sort_unstable();
+        by_id
+    };
+    let unbatched = collect(1);
+    let batched = collect(32);
+    assert!(!unbatched.is_empty());
+    assert_eq!(unbatched, batched, "micro-batching changed served answers");
+}
+
+#[test]
+fn cached_answers_match_executed_ones() {
+    // With a cache, a repeated input's hit must serve the same class its
+    // original execution did — compare against a cache-off run.
+    let with_cache = run(config(32, 1024));
+    let without = run(config(32, 0));
+    assert!(with_cache.cache_hits > 0, "{}", with_cache.summary());
+    let classes = |r: &ServeReport| {
+        let mut v: Vec<(u64, u32)> = r.log.records().iter().map(|x| (x.id, x.class)).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(classes(&with_cache), classes(&without));
+}
+
+#[test]
+fn serving_is_deterministic_per_seed() {
+    let a = run(config(32, 128));
+    let b = run(config(32, 128));
+    assert_eq!(a.log.to_csv(), b.log.to_csv());
+    assert_eq!(a.summary(), b.summary());
+}

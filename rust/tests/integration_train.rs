@@ -1,6 +1,10 @@
 //! Integration: full distributed training through the coordinator with the
 //! real PJRT engine — the system's core claim (distributed synchronized
 //! SGD with real gradients converges) at test scale.
+//!
+//! Needs the compiled AOT artifacts, so the whole file is gated on the
+//! `pjrt` feature: `cargo test --features pjrt` after `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use mlitb::client::DeviceClass;
 use mlitb::coordinator::ReducePolicy;

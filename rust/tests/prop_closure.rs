@@ -1,0 +1,106 @@
+//! Property: research closures survive a JSON round-trip exactly —
+//! `from_json` ∘ `parse` ∘ `write` ∘ `to_json` is the identity over
+//! randomized closures (the paper's §2.3 reproducibility object must not
+//! drift through save/load).  Uses the in-repo seeded property harness
+//! and PRNG; replay failures with `MLITB_PROP_SEED=<seed>`.
+
+use mlitb::json;
+use mlitb::model::{ModelSpec, ResearchClosure, TensorSpec};
+use mlitb::rng::Pcg32;
+use mlitb::testing::{check, gen};
+
+/// Random model spec whose param_count matches a single tensor.
+fn random_spec(rng: &mut Pcg32) -> ModelSpec {
+    let param_count = gen::usize_in(rng, 0, 64);
+    ModelSpec {
+        name: format!("model_{}", gen::usize_in(rng, 0, 9)),
+        param_count,
+        batch_size: 4,
+        micro_batches: vec![4, 1],
+        input: vec![2, 2, 1],
+        classes: 10,
+        tensors: vec![TensorSpec {
+            name: "w".into(),
+            shape: vec![param_count],
+            offset: 0,
+            size: param_count,
+            fan_in: 2,
+        }],
+        artifacts: Default::default(),
+    }
+}
+
+/// Random provenance notes exercising the string escaper: quotes,
+/// backslashes, newlines, control chars, non-ASCII.
+fn random_notes(rng: &mut Pcg32) -> String {
+    const POOL: &[char] = &[
+        'a', 'Z', '9', ' ', '"', '\\', '\n', '\r', '\t', '\u{1}', 'é', '→', '{', '}',
+    ];
+    (0..gen::usize_in(rng, 0, 24))
+        .map(|_| POOL[rng.gen_range_usize(POOL.len())])
+        .collect()
+}
+
+fn random_closure(rng: &mut Pcg32) -> ResearchClosure {
+    let spec = random_spec(rng);
+    // f32 params in [-1, 1]; scale some to extreme-but-finite magnitudes
+    // so shortest-round-trip float printing is actually exercised.
+    let mut params = gen::f32_vec(rng, spec.param_count);
+    for p in params.iter_mut() {
+        if rng.gen_bool(0.2) {
+            *p *= 1.0e30;
+        } else if rng.gen_bool(0.2) {
+            *p *= 1.0e-30;
+        }
+    }
+    let mut c = ResearchClosure::new(&spec, &params);
+    c.optimizer = ["sgd", "momentum", "adagrad", "rmsprop"][rng.gen_range_usize(4)].into();
+    c.learning_rate = rng.gen_f32() * 0.5;
+    c.iteration = rng.next_u32() as u64;
+    c.iter_duration_s = rng.gen_f64() * 30.0;
+    c.notes = random_notes(rng);
+    c
+}
+
+#[test]
+fn prop_closure_compact_json_roundtrip_is_identity() {
+    check("closure-compact-roundtrip", |rng| {
+        let c = random_closure(rng);
+        let text = json::to_string(&c.to_json());
+        let value = json::parse(&text).map_err(|e| format!("parse: {e:?}"))?;
+        let back = ResearchClosure::from_json(&value)?;
+        if back != c {
+            return Err(format!("closure drifted through JSON:\n{c:?}\nvs\n{back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_closure_pretty_json_roundtrip_is_identity() {
+    check("closure-pretty-roundtrip", |rng| {
+        let c = random_closure(rng);
+        let text = json::to_string_pretty(&c.to_json());
+        let value = json::parse(&text).map_err(|e| format!("parse: {e:?}"))?;
+        let back = ResearchClosure::from_json(&value)?;
+        if back != c {
+            return Err("pretty-printed closure drifted through JSON".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_closure_value_tree_roundtrips_before_typing() {
+    // The weaker layer-by-layer property: the serializer/parser pair is
+    // the identity on the closure's raw value tree (catches float/string
+    // formatting bugs independently of `from_json` validation).
+    check("closure-value-roundtrip", |rng| {
+        let v = random_closure(rng).to_json();
+        let back = json::parse(&json::to_string(&v)).map_err(|e| format!("{e:?}"))?;
+        if back != v {
+            return Err("value tree changed through write+parse".into());
+        }
+        Ok(())
+    });
+}
