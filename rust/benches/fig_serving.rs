@@ -22,8 +22,8 @@ use mlitb::model::init_params;
 use mlitb::netsim::LinkProfile;
 use mlitb::runtime::ModeledCompute;
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, ServeConfig, ServeSim, ServerProfile,
-    SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, ServeConfig, ServeSim,
+    ServerProfile, SnapshotRegistry,
 };
 
 fn main() {
@@ -75,6 +75,9 @@ fn main() {
                 },
                 policy: BatchPolicy::default(),
                 server: ServerProfile::default(),
+                // Single PR-1-style endpoint: this sweep isolates
+                // batching/caching; routing gets its own fig_routing.
+                router: RouterConfig::single(),
                 cache_capacity: 2048,
                 response_bytes: 256,
             };

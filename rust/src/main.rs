@@ -19,8 +19,8 @@ use mlitb::netsim::LinkProfile;
 use mlitb::params::OptimizerKind;
 use mlitb::runtime::{Compute, Engine, ModeledCompute};
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, ServeConfig, ServeReport, ServeSim,
-    ServerProfile, SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
+    ServeReport, ServeSim, ServerProfile, SnapshotRegistry,
 };
 use mlitb::sim::{SimConfig, Simulation};
 
@@ -60,7 +60,8 @@ fn print_help() {
          serve-sim: --model <name> --closure <path> --clients N --rate F\n\
                   --duration F --link lan|wifi|cellular|mixed --batch N\n\
                   --max-wait F --queue-depth N --cache N --input-pool N\n\
-                  --seed N --csv <path>\n\
+                  --shards N --router rr|jsq|affinity --no-coalesce\n\
+                  --autotune --jitter F --seed N --csv <path>\n\
          inspect: [--model <name>]\n\
          closure: --model <name> --out <path>",
         mlitb::VERSION
@@ -235,6 +236,15 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         .copied()
         .max()
         .unwrap_or(spec.batch_size);
+    let router = RouterConfig {
+        shards: args.get_usize("shards", 1)?.max(1),
+        policy: RoutingPolicy::parse(args.get_or("router", "jsq"))?,
+        // Coalescing duplicate in-flight inputs is the production
+        // default; `--no-coalesce` reproduces the PR-1 miss-twice tier.
+        coalesce: !args.flag("no-coalesce"),
+        autotune: args.flag("autotune"),
+        window_ms: 1_000.0,
+    };
     let cfg = ServeConfig {
         fleet: FleetConfig {
             groups,
@@ -247,18 +257,29 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
             max_wait_ms: args.get_f64("max-wait", 5.0)?,
             queue_depth: args.get_usize("queue-depth", 256)?,
         },
-        server: ServerProfile::default(),
+        server: ServerProfile {
+            // Straggler spread on batch service times (0 = idealized
+            // deterministic server; ~0.5 is a realistic endpoint).
+            jitter: args.get_f64("jitter", 0.0)?,
+            ..ServerProfile::default()
+        },
+        router,
         cache_capacity: args.get_usize("cache", 1024)?,
         response_bytes: 256,
     };
     println!(
-        "serving {}: {} clients, {:.1} rps each, {}s horizon, batch ≤{}, wait ≤{} ms",
+        "serving {}: {} clients, {:.1} rps each, {}s horizon, batch ≤{}, wait ≤{} ms, \
+         {} shard(s) [{}]{}{}",
         spec.name,
         clients,
         rate,
         cfg.fleet.duration_s,
         cfg.policy.max_batch,
-        cfg.policy.max_wait_ms
+        cfg.policy.max_wait_ms,
+        router.shards,
+        router.policy.name(),
+        if router.coalesce { ", coalescing" } else { "" },
+        if router.autotune { ", autotune" } else { "" },
     );
 
     // Compute backend.  A PJRT build with artifacts on disk must use them
@@ -290,20 +311,57 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     table.row(vec!["offered requests".into(), report.offered.to_string()]);
     table.row(vec!["completed".into(), report.completed.to_string()]);
     table.row(vec!["rejected (shed)".into(), report.rejected.to_string()]);
+    table.row(vec!["shed rate".into(), format!("{:.3}", report.shed_rate())]);
+    table.row(vec!["coalesced".into(), report.coalesced.to_string()]);
     table.row(vec!["cache hit rate".into(), format!("{:.3}", report.hit_rate())]);
     table.row(vec!["batches executed".into(), report.batches.to_string()]);
     table.row(vec!["mean batch size".into(), format!("{:.2}", report.mean_batch())]);
     table.row(vec!["throughput (rps)".into(), format!("{:.1}", report.throughput_rps())]);
-    table.row(vec!["latency p50 (ms)".into(), format!("{:.2}", lat.median())]);
-    table.row(vec!["latency p95 (ms)".into(), format!("{:.2}", lat.p95())]);
-    table.row(vec!["latency p99 (ms)".into(), format!("{:.2}", lat.quantile(0.99))]);
-    table.row(vec!["latency max (ms)".into(), format!("{:.2}", lat.max())]);
+    // Zero completions (e.g. --queue-depth 0 sheds everything) leave the
+    // latency distribution empty — print n/a, not NaN.
+    let fmt_ms = |v: f64| if v.is_finite() { format!("{v:.2}") } else { "n/a".into() };
+    table.row(vec!["latency p50 (ms)".into(), fmt_ms(lat.median())]);
+    table.row(vec!["latency p95 (ms)".into(), fmt_ms(lat.p95())]);
+    table.row(vec!["latency p99 (ms)".into(), fmt_ms(lat.quantile(0.99))]);
+    table.row(vec!["latency max (ms)".into(), fmt_ms(lat.max())]);
     table.print();
+
+    if report.per_shard.len() > 1 {
+        let mut shard_table = mlitb::metrics::Table::new(
+            "per-shard stats",
+            &[
+                "shard", "routed", "completed", "shed", "hits", "coalesced", "batches",
+                "mean batch", "wait ms",
+            ],
+        );
+        for s in &report.per_shard {
+            shard_table.row(vec![
+                s.shard.to_string(),
+                s.routed.to_string(),
+                s.completed().to_string(),
+                s.rejected.to_string(),
+                s.cache_hits.to_string(),
+                s.coalesced.to_string(),
+                s.batches.to_string(),
+                format!("{:.1}", s.mean_batch()),
+                format!("{:.2}", s.max_wait_ms),
+            ]);
+        }
+        shard_table.print();
+    }
     println!("done: {}", report.summary());
 
     if let Some(path) = args.get("csv") {
         std::fs::write(path, report.log.to_csv()).map_err(|e| e.to_string())?;
         println!("wrote request log to {path}");
+        // Always written (header-only when nothing shed) so a rerun at a
+        // lighter load can't leave a stale shed log beside a fresh CSV.
+        let rej_path = format!("{path}.rejections");
+        std::fs::write(&rej_path, report.log.rejections_to_csv()).map_err(|e| e.to_string())?;
+        println!(
+            "wrote shed log to {rej_path} ({} rejections)",
+            report.log.rejections().len()
+        );
     }
     Ok(())
 }

@@ -5,7 +5,7 @@ mod series;
 mod stats;
 mod table;
 
-pub use series::{IterationRecord, RequestLog, RequestRecord, Timeline};
+pub use series::{IterationRecord, RejectionRecord, RequestLog, RequestRecord, Timeline};
 pub use stats::Summary;
 pub use table::{Cell, Table};
 

@@ -135,18 +135,40 @@ pub struct RequestRecord {
     pub done_ms: f64,
     /// End-to-end latency the client experienced (ms).
     pub latency_ms: f64,
-    /// Requests in the executed batch (0 for cache hits).
+    /// Serving shard that answered (0 on a single-endpoint run).
+    pub shard: u32,
+    /// Requests in the executed batch (0 for cache hits and coalesced
+    /// waiters — neither occupies an executed batch slot).
     pub batch_size: u32,
     pub cache_hit: bool,
-    /// Argmax class served — lets log-level checks verify that batching
-    /// and caching never change the answer.
+    /// Answered by piggybacking on a duplicate's in-flight computation.
+    pub coalesced: bool,
+    /// Argmax class served — lets log-level checks verify that batching,
+    /// caching, routing and coalescing never change the answer.
     pub class: u32,
 }
 
+/// One shed request: the client got a fast error instead of a prediction.
+/// Recording these makes `offered − completed − rejected` reconcilable
+/// per client (shedding used to be invisible to the log).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RejectionRecord {
+    pub id: u64,
+    pub client: u32,
+    /// Client send / server arrival timestamps (virtual ms).
+    pub sent_ms: f64,
+    pub arrival_ms: f64,
+    /// Shard whose admission queue shed it.
+    pub shard: u32,
+}
+
 /// Append-only per-request series with percentile summaries + CSV export.
+/// Completions and rejections are separate streams: `len()` counts
+/// completions only (a shed request never produced an answer).
 #[derive(Debug, Clone, Default)]
 pub struct RequestLog {
     records: Vec<RequestRecord>,
+    rejections: Vec<RejectionRecord>,
 }
 
 impl RequestLog {
@@ -170,6 +192,25 @@ impl RequestLog {
         &self.records
     }
 
+    /// Record a shed request (admission-queue overflow).
+    pub fn push_rejection(&mut self, r: RejectionRecord) {
+        self.rejections.push(r);
+    }
+
+    pub fn rejections(&self) -> &[RejectionRecord] {
+        &self.rejections
+    }
+
+    /// Shed count per client id — the attribution the bench sweeps roll
+    /// up into per-link-profile shed rates.
+    pub fn rejections_by_client(&self) -> std::collections::BTreeMap<u32, u64> {
+        let mut by_client = std::collections::BTreeMap::new();
+        for r in &self.rejections {
+            *by_client.entry(r.client).or_insert(0) += 1;
+        }
+        by_client
+    }
+
     /// End-to-end latency distribution (feed to `quantile`/`p95`).
     pub fn latency_summary(&self) -> Summary {
         Summary::from(self.records.iter().map(|r| r.latency_ms).collect())
@@ -189,19 +230,34 @@ impl RequestLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out =
-            String::from("id,client,sent_ms,done_ms,latency_ms,batch_size,cache_hit,class\n");
+        let mut out = String::from(
+            "id,client,sent_ms,done_ms,latency_ms,shard,batch_size,cache_hit,coalesced,class\n",
+        );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.3},{:.3},{:.3},{},{},{}\n",
+                "{},{},{:.3},{:.3},{:.3},{},{},{},{},{}\n",
                 r.id,
                 r.client,
                 r.sent_ms,
                 r.done_ms,
                 r.latency_ms,
+                r.shard,
                 r.batch_size,
                 r.cache_hit as u8,
+                r.coalesced as u8,
                 r.class,
+            ));
+        }
+        out
+    }
+
+    /// The shed stream as CSV (one line per rejected request + header).
+    pub fn rejections_to_csv(&self) -> String {
+        let mut out = String::from("id,client,sent_ms,arrival_ms,shard\n");
+        for r in &self.rejections {
+            out.push_str(&format!(
+                "{},{},{:.3},{:.3},{}\n",
+                r.id, r.client, r.sent_ms, r.arrival_ms, r.shard,
             ));
         }
         out
@@ -274,8 +330,10 @@ mod tests {
             sent_ms: sent,
             done_ms: done,
             latency_ms: done - sent,
+            shard: 2,
             batch_size: if hit { 0 } else { 8 },
             cache_hit: hit,
+            coalesced: false,
             class: 3,
         }
     }
@@ -302,6 +360,35 @@ mod tests {
         log.push(req(7, 1.0, 3.5, true));
         let csv = log.to_csv();
         assert!(csv.starts_with("id,client,"));
-        assert!(csv.contains("7,1,1.000,3.500,2.500,0,1,3"));
+        assert!(csv.contains("7,1,1.000,3.500,2.500,2,0,1,0,3"));
+    }
+
+    #[test]
+    fn rejections_are_recorded_and_attributed() {
+        let mut log = RequestLog::new();
+        log.push(req(1, 0.0, 5.0, false));
+        log.push_rejection(RejectionRecord {
+            id: 2,
+            client: 4,
+            sent_ms: 1.0,
+            arrival_ms: 2.5,
+            shard: 1,
+        });
+        log.push_rejection(RejectionRecord {
+            id: 3,
+            client: 4,
+            sent_ms: 1.2,
+            arrival_ms: 2.7,
+            shard: 0,
+        });
+        // Completions and rejections are separate streams.
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.rejections().len(), 2);
+        assert_eq!(log.rejections_by_client().get(&4), Some(&2));
+        assert_eq!(log.rejections_by_client().get(&1), None);
+        let csv = log.rejections_to_csv();
+        assert!(csv.starts_with("id,client,sent_ms,arrival_ms,shard\n"));
+        assert!(csv.contains("2,4,1.000,2.500,1"));
+        assert_eq!(csv.lines().count(), 3);
     }
 }

@@ -56,6 +56,14 @@ pub struct ServerProfile {
     pub per_batch_overhead_ms: f64,
     /// Service time of a prediction-cache hit (hash + map lookup, ms).
     pub cache_lookup_ms: f64,
+    /// Service-time spread: each executed batch takes
+    /// `base × (1 + jitter × Exp(1))` — straggler batches from GC pauses,
+    /// contention, thermal throttling.  0 (the default) is the idealized
+    /// deterministic server; realistic endpoints are ~0.3–0.5, and the
+    /// spread is what makes backlog-aware routing (JSQ) beat oblivious
+    /// round-robin on tail latency.  Applied by `ServeSim`, not here —
+    /// the executor's own accounting stays deterministic.
+    pub jitter: f64,
 }
 
 impl Default for ServerProfile {
@@ -66,6 +74,7 @@ impl Default for ServerProfile {
             power_vps: 4_000.0,
             per_batch_overhead_ms: 2.5,
             cache_lookup_ms: 0.05,
+            jitter: 0.0,
         }
     }
 }
@@ -78,6 +87,10 @@ pub struct BatchExecutor {
     batches: u64,
     examples: u64,
     padded: u64,
+    /// Flush-assembly buffer, reused across flushes: once grown to the
+    /// largest compiled batch it never reallocates (ROADMAP perf item —
+    /// this used to be a fresh `Vec` per flush on the serving hot path).
+    scratch: Vec<f32>,
 }
 
 impl BatchExecutor {
@@ -88,6 +101,7 @@ impl BatchExecutor {
             batches: 0,
             examples: 0,
             padded: 0,
+            scratch: Vec::new(),
         }
     }
 
@@ -122,6 +136,12 @@ impl BatchExecutor {
             return 1.0;
         }
         self.examples as f64 / total as f64
+    }
+
+    /// Current capacity of the flush-assembly scratch buffer (test hook:
+    /// pins the no-per-flush-allocation-growth invariant).
+    pub fn scratch_capacity(&self) -> usize {
+        self.scratch.capacity()
     }
 
     /// Largest compiled micro-batch (order-independent; the manifest
@@ -183,14 +203,16 @@ impl BatchExecutor {
         let mut service_ms = 0.0;
         for chunk in inputs.chunks(largest) {
             let b = self.pick_batch(chunk.len());
-            let mut images = Vec::with_capacity(b * input_len);
+            self.scratch.clear();
+            self.scratch.reserve(b * input_len);
             for x in chunk {
-                images.extend_from_slice(x);
+                self.scratch.extend_from_slice(x);
             }
             for _ in chunk.len()..b {
-                images.extend_from_slice(chunk[0]);
+                self.scratch.extend_from_slice(chunk[0]);
             }
-            let probs = compute.predict_batch(&self.spec.name, b, params, &images, classes)?;
+            let probs =
+                compute.predict_batch(&self.spec.name, b, params, &self.scratch, classes)?;
             if probs.len() != b * classes {
                 bail!(
                     "predict returned {} values, expected {} (batch {b} × {classes} classes)",
@@ -318,6 +340,30 @@ mod tests {
         ex.execute(&mut compute, &params(), &refs).unwrap();
         assert_eq!(ex.batches(), 1);
         assert_eq!(ex.padded(), 1, "3 → b=4 pads one row, not five");
+    }
+
+    #[test]
+    fn scratch_buffer_does_not_grow_per_flush() {
+        // ROADMAP perf item: flush assembly must reuse one buffer, not
+        // allocate per flush.  Warm up at the largest compiled variant,
+        // then hammer mixed sizes and assert zero capacity growth.
+        let mut compute = ModeledCompute { param_count: 12 };
+        let mut ex = BatchExecutor::new(spec(vec![8, 4, 1]), ServerProfile::default());
+        let xs = inputs(8);
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        ex.execute(&mut compute, &params(), &refs).unwrap();
+        let warm = ex.scratch_capacity();
+        assert!(warm >= 8 * 3, "warmed to the largest compiled batch");
+        for n in [1usize, 3, 5, 8, 2, 8, 7] {
+            for _ in 0..20 {
+                ex.execute(&mut compute, &params(), &refs[..n]).unwrap();
+            }
+        }
+        assert_eq!(
+            ex.scratch_capacity(),
+            warm,
+            "per-flush allocation growth on the serving hot path"
+        );
     }
 
     #[test]

@@ -21,12 +21,20 @@
 //!   per-example purity guarantees batching never changes a prediction.
 //! * [`RequestFleet`] — open-loop Poisson request generators over
 //!   heterogeneous `netsim` link profiles (Lan/Wifi/Cellular).
+//! * [`RoutingPolicy`] + [`RouterConfig`] — N replicated shard endpoints
+//!   (each its own queue + executor + cache) behind round-robin,
+//!   join-shortest-queue or input-key-affinity routing, with in-flight
+//!   request coalescing (duplicates dedupe before admission; one
+//!   computation, one cache fill, the answer fanned out to every waiter)
+//!   and per-shard batching autotune (`max_wait_ms` re-derived from the
+//!   observed admission rate).
 //! * [`ServeSim`] — the discrete-event driver binding the above; emits a
-//!   [`ServeReport`] with per-request latency percentiles and throughput
-//!   via `metrics`.
+//!   [`ServeReport`] with per-request latency percentiles, throughput,
+//!   shed attribution and per-shard stats via `metrics`.
 //!
-//! Entry points: the `mlitb serve-sim` CLI subcommand,
-//! `benches/fig_serving.rs` (throughput/latency vs offered load), and
+//! Entry points: the `mlitb serve-sim` CLI subcommand (`--shards`,
+//! `--router`), `benches/fig_serving.rs` (throughput/latency vs offered
+//! load), `benches/fig_routing.rs` (shards × routing policy × rate), and
 //! `examples/serving.rs`.
 
 mod cache;
@@ -34,6 +42,7 @@ mod executor;
 mod loadgen;
 mod queue;
 mod registry;
+mod router;
 mod sim;
 
 pub use cache::{input_key, PredictionCache};
@@ -41,6 +50,7 @@ pub use executor::{BatchExecutor, Prediction, ServerProfile};
 pub use loadgen::{ClientSpec, FleetConfig, RequestEvent, RequestFleet};
 pub use queue::{AdmissionQueue, BatchPolicy, PredictRequest};
 pub use registry::{Snapshot, SnapshotId, SnapshotRegistry};
+pub use router::{tuned_wait_ms, RateWindow, RouterConfig, RoutingPolicy, ShardStats};
 pub use sim::{ServeConfig, ServeReport, ServeSim};
 
 use crate::model::{ModelSpec, TensorSpec};

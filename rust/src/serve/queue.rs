@@ -40,6 +40,8 @@ pub struct BatchPolicy {
     /// member's arrival before flushing.
     pub max_wait_ms: f64,
     /// Admission bound: requests beyond this many pending are rejected.
+    /// A depth of 0 is a closed endpoint — **every** request is shed
+    /// (useful for draining a shard); it is not rounded up to 1.
     pub queue_depth: usize,
 }
 
@@ -76,6 +78,12 @@ impl AdmissionQueue {
         &self.policy
     }
 
+    /// Retune the partial-batch deadline (the autotuning router re-derives
+    /// it per shard from the observed arrival rate).  Clamped at zero.
+    pub fn set_max_wait_ms(&mut self, wait_ms: f64) {
+        self.policy.max_wait_ms = wait_ms.max(0.0);
+    }
+
     pub fn len(&self) -> usize {
         self.pending.len()
     }
@@ -85,9 +93,11 @@ impl AdmissionQueue {
     }
 
     /// Admit a request, or shed it when the queue is full.  Returns
-    /// whether it was admitted.
+    /// whether it was admitted.  `queue_depth: 0` sheds everything — a
+    /// zero-capacity queue is closed, not depth-1 (the `.max(1)` rounding
+    /// this used to do silently admitted through a "closed" endpoint).
     pub fn offer(&mut self, req: PredictRequest) -> bool {
-        if self.pending.len() >= self.policy.queue_depth.max(1) {
+        if self.pending.len() >= self.policy.queue_depth {
             self.rejected += 1;
             return false;
         }
@@ -196,6 +206,30 @@ mod tests {
         assert_eq!(b2[0].id, 2);
         assert_eq!(q.take_batch().len(), 1);
         assert!(q.take_batch().is_empty());
+    }
+
+    #[test]
+    fn zero_depth_sheds_everything() {
+        // Regression: `offer` used to round depth 0 up to 1 and admit one
+        // request through a closed endpoint.
+        let mut q = queue(4, 5.0, 0);
+        assert!(!q.offer(req(1, 0.0)), "closed queue must shed");
+        assert!(!q.offer(req(2, 1.0)));
+        assert_eq!(q.admitted(), 0);
+        assert_eq!(q.rejected(), 2);
+        assert!(q.is_empty());
+        assert!(q.next_flush_at(0.0).is_none());
+    }
+
+    #[test]
+    fn retuned_wait_moves_the_flush_deadline() {
+        let mut q = queue(4, 5.0, 16);
+        q.offer(req(1, 10.0));
+        assert_eq!(q.next_flush_at(0.0), Some(15.0));
+        q.set_max_wait_ms(0.0);
+        assert_eq!(q.next_flush_at(0.0), Some(10.0), "no-wait flushes now");
+        q.set_max_wait_ms(-3.0);
+        assert_eq!(q.policy().max_wait_ms, 0.0, "negative clamps to zero");
     }
 
     #[test]

@@ -1,0 +1,737 @@
+//! Request routing across replicated serving endpoints.
+//!
+//! PR 1's serving tier was the paper's §3.5 single-master model: one
+//! serial endpoint.  This module turns it into a fleet: N [`Shard`]s —
+//! each its own [`AdmissionQueue`] + [`BatchExecutor`] + per-shard
+//! [`PredictionCache`] — behind a pluggable [`RoutingPolicy`]:
+//!
+//! * `rr` — round-robin: cyclic deal, oblivious to backlog.
+//! * `jsq` — join-shortest-queue: route to the shard with the least
+//!   outstanding *work* — pending requests plus the batch still executing
+//!   ([`Shard::depth`]; queue length alone goes blind the instant a
+//!   batch is taken).  Ties break to the lowest index.  Approximates a
+//!   pooled multi-server queue, which is what cuts tail latency at high
+//!   load when service times vary (`ServerProfile::jitter` stragglers).
+//! * `affinity` — input-key affinity: `key mod shards`, so duplicate
+//!   inputs always land on the shard whose cache (and in-flight table)
+//!   already knows them — per-shard caches then partition the keyspace
+//!   instead of replicating it.
+//!
+//! Two per-shard mechanisms ride along:
+//!
+//! * **Request coalescing** ([`Shard::coalesce_join`]): a duplicate of an
+//!   input that is already queued or executing does not execute again —
+//!   it attaches as a waiter and the single computed answer fans out to
+//!   every waiter at completion time.  The cache fills once, by the
+//!   leader.  (Removes the miss-twice window `serve::sim` documented.)
+//! * **Batching autotune** ([`tuned_wait_ms`]): each shard re-derives its
+//!   partial-batch deadline from the queue-feeding (admission) rate
+//!   observed over a sliding [`RateWindow`] — hits and waiters are
+//!   excluded, they never fill a batch slot; the configured
+//!   `max_wait_ms` becomes a latency budget ceiling, not a fixed stall.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::model::ModelSpec;
+
+use super::cache::PredictionCache;
+use super::executor::{BatchExecutor, Prediction, ServerProfile};
+use super::queue::{AdmissionQueue, BatchPolicy, PredictRequest};
+
+/// How arriving requests are spread across shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cyclic deal, backlog-oblivious.
+    RoundRobin,
+    /// Least outstanding work (pending + executing) wins; ties break to
+    /// the lowest index.
+    JoinShortestQueue,
+    /// `input key mod shards` — duplicates share a shard's cache.
+    InputAffinity,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "rr" | "round-robin" => Ok(Self::RoundRobin),
+            "jsq" | "shortest-queue" => Ok(Self::JoinShortestQueue),
+            "affinity" | "hash" => Ok(Self::InputAffinity),
+            other => Err(format!("unknown routing policy '{other}' (rr|jsq|affinity)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RoundRobin => "rr",
+            Self::JoinShortestQueue => "jsq",
+            Self::InputAffinity => "affinity",
+        }
+    }
+}
+
+/// Fleet shape + per-shard mechanisms for one serving run.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Replicated endpoints (0 is treated as 1).
+    pub shards: usize,
+    pub policy: RoutingPolicy,
+    /// Dedupe duplicate in-flight inputs before admission and fan the one
+    /// computed answer out to every waiter.
+    pub coalesce: bool,
+    /// Re-derive each shard's `max_wait_ms` from its observed arrival
+    /// rate (the configured value becomes the ceiling).
+    pub autotune: bool,
+    /// Sliding window backing the arrival-rate estimate (ms).
+    pub window_ms: f64,
+}
+
+impl RouterConfig {
+    /// PR-1 behavior: one endpoint, no coalescing, fixed deadline.
+    pub fn single() -> Self {
+        Self {
+            shards: 1,
+            policy: RoutingPolicy::RoundRobin,
+            coalesce: false,
+            autotune: false,
+            window_ms: 1_000.0,
+        }
+    }
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+/// The routing decision state (round-robin cursor).
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutingPolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Self {
+        Self { policy, rr_next: 0 }
+    }
+
+    /// Pick the shard for a request with cache key `key`, arriving at
+    /// `now`.  Deterministic: equal depths break to the lowest index.
+    pub fn route(&mut self, key: u64, shards: &[Shard], now: f64) -> usize {
+        let n = shards.len().max(1);
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = self.rr_next % n;
+                self.rr_next = (self.rr_next + 1) % n;
+                i
+            }
+            RoutingPolicy::JoinShortestQueue => shards
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, s)| (s.depth(now), i))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+            RoutingPolicy::InputAffinity => (key % n as u64) as usize,
+        }
+    }
+}
+
+/// Sliding-window arrival counter for the rate estimate behind autotune.
+#[derive(Debug, Clone)]
+pub struct RateWindow {
+    window_ms: f64,
+    arrivals: VecDeque<f64>,
+}
+
+impl RateWindow {
+    pub fn new(window_ms: f64) -> Self {
+        Self {
+            window_ms: window_ms.max(1.0),
+            arrivals: VecDeque::new(),
+        }
+    }
+
+    /// Record an arrival at `now_ms` and drop those older than the window.
+    pub fn observe(&mut self, now_ms: f64) {
+        self.arrivals.push_back(now_ms);
+        while self
+            .arrivals
+            .front()
+            .is_some_and(|&t| t < now_ms - self.window_ms)
+        {
+            self.arrivals.pop_front();
+        }
+    }
+
+    /// Observed arrival rate (per ms) over the window span, or `None`
+    /// until two arrivals landed inside it.
+    pub fn rate_per_ms(&self) -> Option<f64> {
+        if self.arrivals.len() < 2 {
+            return None;
+        }
+        let span = self.arrivals.back().expect("len checked")
+            - self.arrivals.front().expect("len checked");
+        if span <= 0.0 {
+            return None;
+        }
+        Some((self.arrivals.len() - 1) as f64 / span)
+    }
+}
+
+/// Pick a shard's partial-batch deadline from its observed arrival rate.
+///
+/// The configured `max_wait_ms` is the latency budget ceiling.  When the
+/// rate is so low that not even one extra request is expected within the
+/// whole budget (`rate × budget < 1`), waiting buys no batching — flush
+/// immediately.  Otherwise wait just long enough for a full batch to
+/// accumulate (`(max_batch − 1) / rate`), capped by the budget.  With no
+/// estimate yet, fall back to the configured deadline.
+pub fn tuned_wait_ms(rate_per_ms: Option<f64>, base: &BatchPolicy) -> f64 {
+    let cap = base.max_wait_ms;
+    let Some(rate) = rate_per_ms else {
+        return cap;
+    };
+    if rate <= 0.0 || rate * cap < 1.0 {
+        0.0
+    } else {
+        (base.max_batch.saturating_sub(1) as f64 / rate).min(cap)
+    }
+}
+
+/// One request waiting on a duplicate's in-flight computation.
+#[derive(Debug, Clone, Copy)]
+pub struct Waiter {
+    pub id: u64,
+    pub client: u32,
+    pub sent_ms: f64,
+}
+
+/// Outcome of a coalescing attempt for an arriving request.
+#[derive(Debug)]
+pub enum Join {
+    /// No duplicate in flight — admit normally.
+    Admit,
+    /// Joined a pending computation; the answer fans out when the
+    /// leader's batch completes.
+    Queued,
+    /// The duplicate already computed (completes at `.0`) — serve `.1`.
+    Ready(f64, Prediction),
+}
+
+/// In-flight table entry: the leader's input (collision guard), attached
+/// waiters, and — once the leader's batch flushed — the completion time
+/// and answer.
+#[derive(Debug)]
+struct Inflight {
+    input: Arc<Vec<f32>>,
+    waiters: Vec<Waiter>,
+    done: Option<(f64, Prediction)>,
+}
+
+/// A computed prediction awaiting cache visibility at its completion time.
+#[derive(Debug)]
+struct PendingInsert {
+    ready_ms: f64,
+    key: u64,
+    input: Arc<Vec<f32>>,
+    prediction: Prediction,
+}
+
+/// One replicated serving endpoint: bounded admission, per-shard cache,
+/// serial micro-batch executor, and the coalescing in-flight table.
+#[derive(Debug)]
+pub struct Shard {
+    /// Stable index; tags `RequestRecord.shard` and the stats row.
+    pub id: u32,
+    pub queue: AdmissionQueue,
+    pub cache: PredictionCache,
+    pub executor: BatchExecutor,
+    /// Virtual time this shard's serial executor frees up.
+    pub free_at: f64,
+    /// Requests in the batch currently executing (meaningful while
+    /// `free_at` is in the future) — the in-flight half of [`Self::depth`].
+    pub executing: usize,
+    routed: u64,
+    coalesced: u64,
+    autotune: bool,
+    base_policy: BatchPolicy,
+    window: RateWindow,
+    /// Cache entries queued until their computation completes.
+    pending_inserts: VecDeque<PendingInsert>,
+    /// key → in-flight entry (leader queued/executing, or resolved and
+    /// awaiting its completion instant).
+    inflight: HashMap<u64, Inflight>,
+    /// (completion time, key) of resolved entries — completions are
+    /// monotone per shard (serial executor), so a front-drain retires
+    /// them in order.
+    resolved: VecDeque<(f64, u64)>,
+}
+
+impl Shard {
+    pub fn new(
+        id: u32,
+        policy: BatchPolicy,
+        cache_capacity: usize,
+        spec: ModelSpec,
+        profile: ServerProfile,
+        router: &RouterConfig,
+    ) -> Self {
+        Self {
+            id,
+            queue: AdmissionQueue::new(policy),
+            cache: PredictionCache::new(cache_capacity),
+            executor: BatchExecutor::new(spec, profile),
+            free_at: 0.0,
+            executing: 0,
+            routed: 0,
+            coalesced: 0,
+            autotune: router.autotune,
+            base_policy: policy,
+            window: RateWindow::new(router.window_ms),
+            pending_inserts: VecDeque::new(),
+            inflight: HashMap::new(),
+            resolved: VecDeque::new(),
+        }
+    }
+
+    /// Advance shard-local state to `now`: publish cache entries whose
+    /// computation completed, retire resolved in-flight entries.  Callers
+    /// invoke this before any cache lookup or coalescing decision at
+    /// `now`, so a request never sees a stale in-flight entry for an
+    /// already-finished computation.
+    pub fn tick(&mut self, now: f64) {
+        while self
+            .pending_inserts
+            .front()
+            .is_some_and(|p| p.ready_ms <= now)
+        {
+            let p = self.pending_inserts.pop_front().expect("front checked");
+            self.cache.insert(p.key, p.input, p.prediction);
+        }
+        while self.resolved.front().is_some_and(|&(t, _)| t <= now) {
+            let (_, key) = self.resolved.pop_front().expect("front checked");
+            self.inflight.remove(&key);
+        }
+    }
+
+    /// Outstanding work at `now`: pending requests plus the batch still
+    /// executing.  The JSQ signal — queue length alone reads zero the
+    /// moment a batch is taken, while the shard stays busy for the whole
+    /// service time.
+    pub fn depth(&self, now: f64) -> usize {
+        let busy = if self.free_at > now { self.executing } else { 0 };
+        self.queue.len() + busy
+    }
+
+    /// Count a routed arrival (all of them: hits, waiters, admissions).
+    pub fn note_routed(&mut self) {
+        self.routed += 1;
+    }
+
+    /// Observe a queue-feeding arrival (one that reached admission); with
+    /// autotune on, re-derive the partial-batch deadline from the updated
+    /// rate estimate.  Cache hits and coalesced waiters are deliberately
+    /// excluded: they never occupy a batch slot, so counting them would
+    /// overestimate how fast a batch fills and under-batch hot caches.
+    pub fn observe_admission(&mut self, now: f64) {
+        if self.autotune {
+            self.window.observe(now);
+            let wait = tuned_wait_ms(self.window.rate_per_ms(), &self.base_policy);
+            self.queue.set_max_wait_ms(wait);
+        }
+    }
+
+    /// Try to piggyback on an in-flight duplicate of `input`.  A key match
+    /// with a different stored input (64-bit hash collision) does not
+    /// coalesce — the arrival admits normally and executes.  Pool
+    /// duplicates share one `Arc`, so the pointer test short-circuits the
+    /// O(input_len) collision-guard compare on the hot path.
+    pub fn coalesce_join(&mut self, key: u64, input: &Arc<Vec<f32>>, w: Waiter) -> Join {
+        let Some(e) = self.inflight.get_mut(&key) else {
+            return Join::Admit;
+        };
+        if !Arc::ptr_eq(&e.input, input) && e.input.as_slice() != input.as_slice() {
+            return Join::Admit;
+        }
+        self.coalesced += 1;
+        match &e.done {
+            Some((t, pred)) => Join::Ready(*t, pred.clone()),
+            None => {
+                e.waiters.push(w);
+                Join::Queued
+            }
+        }
+    }
+
+    /// Offer to the admission queue; when admitted and coalescing is on,
+    /// register the in-flight entry duplicates attach to.  A key already
+    /// owned by a collided entry keeps its owner (the new leader simply
+    /// isn't coalescable).  Returns whether the request was admitted.
+    pub fn admit(&mut self, req: PredictRequest, coalesce: bool) -> bool {
+        let key = req.key;
+        let input = Arc::clone(&req.input);
+        if !self.queue.offer(req) {
+            return false;
+        }
+        if coalesce {
+            self.inflight.entry(key).or_insert_with(|| Inflight {
+                input,
+                waiters: Vec::new(),
+                done: None,
+            });
+        }
+        true
+    }
+
+    /// Mark an executed leader's computation finished at `computed_at`;
+    /// returns the waiters to fan the answer out to.  The entry stays
+    /// visible (as `Join::Ready`) until virtual time passes
+    /// `computed_at`, closing the window where a duplicate arrives after
+    /// the flush but before the result exists.
+    pub fn resolve_inflight(
+        &mut self,
+        req: &PredictRequest,
+        computed_at: f64,
+        prediction: &Prediction,
+    ) -> Vec<Waiter> {
+        let Some(e) = self.inflight.get_mut(&req.key) else {
+            return Vec::new();
+        };
+        if !Arc::ptr_eq(&e.input, &req.input) && e.input.as_slice() != req.input.as_slice() {
+            // Collided entry owned by another input; leave it alone.
+            return Vec::new();
+        }
+        e.done = Some((computed_at, prediction.clone()));
+        self.resolved.push_back((computed_at, req.key));
+        std::mem::take(&mut e.waiters)
+    }
+
+    /// Queue a cache fill that becomes visible once virtual time passes
+    /// `ready_ms` (the computation's completion).
+    pub fn schedule_insert(
+        &mut self,
+        ready_ms: f64,
+        key: u64,
+        input: Arc<Vec<f32>>,
+        prediction: Prediction,
+    ) {
+        self.pending_inserts.push_back(PendingInsert {
+            ready_ms,
+            key,
+            input,
+            prediction,
+        });
+    }
+
+    /// End-of-run (or point-in-time) counters for the report.
+    pub fn stats(&self) -> ShardStats {
+        ShardStats {
+            shard: self.id,
+            routed: self.routed,
+            admitted: self.queue.admitted(),
+            rejected: self.queue.rejected(),
+            cache_hits: self.cache.hits(),
+            coalesced: self.coalesced,
+            batches: self.executor.batches(),
+            batch_examples: self.executor.examples(),
+            padded_examples: self.executor.padded(),
+            max_wait_ms: self.queue.policy().max_wait_ms,
+        }
+    }
+}
+
+/// Per-shard counters surfaced in [`super::ServeReport`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStats {
+    pub shard: u32,
+    /// Arrivals routed here (hits + coalesced + admitted + rejected).
+    pub routed: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub cache_hits: u64,
+    pub coalesced: u64,
+    pub batches: u64,
+    /// Real requests executed in batches (excludes hits/waiters/padding).
+    pub batch_examples: u64,
+    pub padded_examples: u64,
+    /// The partial-batch deadline at end of run (autotune moves it).
+    pub max_wait_ms: f64,
+}
+
+impl ShardStats {
+    /// Requests this shard answered (every routed, non-shed request
+    /// completes once the run drains).
+    pub fn completed(&self) -> u64 {
+        self.routed - self.rejected
+    }
+
+    /// Mean executed-batch size (real requests per flush).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batch_examples as f64 / self.batches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 8,
+            batch_size: 4,
+            micro_batches: vec![4, 1],
+            input: vec![2, 1, 1],
+            classes: 2,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![8],
+                offset: 0,
+                size: 8,
+                fan_in: 2,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_ms: 5.0,
+            queue_depth: 16,
+        }
+    }
+
+    fn shard(id: u32) -> Shard {
+        Shard::new(
+            id,
+            policy(),
+            8,
+            spec(),
+            ServerProfile::default(),
+            &RouterConfig::single(),
+        )
+    }
+
+    fn req(id: u64, key: u64, input: Arc<Vec<f32>>) -> PredictRequest {
+        PredictRequest {
+            id,
+            client: 0,
+            sent_ms: 0.0,
+            arrival_ms: 1.0,
+            input,
+            key,
+        }
+    }
+
+    fn pred(class: usize) -> Prediction {
+        Prediction {
+            class,
+            confidence: 1.0,
+            probs: vec![0.0, 1.0],
+        }
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::JoinShortestQueue,
+            RoutingPolicy::InputAffinity,
+        ] {
+            assert_eq!(RoutingPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RoutingPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let shards: Vec<Shard> = (0..3).map(shard).collect();
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(0, &shards, 0.0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_min_depth_tie_low() {
+        let mut shards: Vec<Shard> = (0..3).map(shard).collect();
+        let mut r = Router::new(RoutingPolicy::JoinShortestQueue);
+        // All empty → lowest index.
+        assert_eq!(r.route(9, &shards, 0.0), 0);
+        // Load shard 0 and 1; shard 2 becomes shortest.
+        let input = Arc::new(vec![0.0; 2]);
+        shards[0].admit(req(1, 1, Arc::clone(&input)), false);
+        shards[1].admit(req(2, 2, Arc::clone(&input)), false);
+        assert_eq!(r.route(9, &shards, 0.0), 2);
+    }
+
+    #[test]
+    fn jsq_counts_in_flight_work_not_just_queue_length() {
+        let mut shards: Vec<Shard> = (0..2).map(shard).collect();
+        // Shard 0: empty queue but a batch of 4 executing until t=10.
+        shards[0].executing = 4;
+        shards[0].free_at = 10.0;
+        // Shard 1: one request pending, executor idle.
+        let input = Arc::new(vec![0.0; 2]);
+        shards[1].admit(req(1, 1, Arc::clone(&input)), false);
+        assert_eq!(shards[0].depth(5.0), 4);
+        assert_eq!(shards[1].depth(5.0), 1);
+        let mut r = Router::new(RoutingPolicy::JoinShortestQueue);
+        assert_eq!(r.route(9, &shards, 5.0), 1, "busy shard is not 'empty'");
+        // Once shard 0's execution completes, its depth drops back to 0.
+        assert_eq!(shards[0].depth(10.0), 0);
+        assert_eq!(r.route(9, &shards, 10.0), 0);
+    }
+
+    #[test]
+    fn affinity_is_deterministic_mod_shards() {
+        let shards: Vec<Shard> = (0..4).map(shard).collect();
+        let mut r = Router::new(RoutingPolicy::InputAffinity);
+        for key in [0u64, 1, 5, 17, u64::MAX] {
+            let first = r.route(key, &shards, 0.0);
+            assert_eq!(first, (key % 4) as usize);
+            assert_eq!(r.route(key, &shards, 0.0), first, "same key, same shard");
+        }
+    }
+
+    #[test]
+    fn rate_window_slides() {
+        let mut w = RateWindow::new(100.0);
+        assert!(w.rate_per_ms().is_none());
+        w.observe(0.0);
+        assert!(w.rate_per_ms().is_none(), "one arrival is not a rate");
+        for t in [10.0, 20.0, 30.0, 40.0] {
+            w.observe(t);
+        }
+        // 5 arrivals over 40 ms → 0.1/ms.
+        assert!((w.rate_per_ms().unwrap() - 0.1).abs() < 1e-9);
+        // A much later arrival evicts the old ones.
+        w.observe(1_000.0);
+        assert!(w.rate_per_ms().is_none(), "window slid past old arrivals");
+    }
+
+    #[test]
+    fn tuned_wait_tracks_rate() {
+        let base = policy(); // max_batch 4, cap 5 ms
+        assert_eq!(tuned_wait_ms(None, &base), 5.0, "no estimate → configured");
+        // 0.01/ms (10 rps): 0.05 expected arrivals per budget → don't wait.
+        assert_eq!(tuned_wait_ms(Some(0.01), &base), 0.0);
+        // 3/ms: a full batch accumulates in 1 ms — wait just that long.
+        assert!((tuned_wait_ms(Some(3.0), &base) - 1.0).abs() < 1e-9);
+        // 0.3/ms: fill time 10 ms clamps to the 5 ms budget.
+        assert_eq!(tuned_wait_ms(Some(0.3), &base), 5.0);
+    }
+
+    #[test]
+    fn coalesce_join_dedupes_and_fans_out() {
+        let mut s = shard(0);
+        let input = Arc::new(vec![0.5, 0.25]);
+        let leader = req(1, 7, Arc::clone(&input));
+        assert!(s.admit(leader.clone(), true));
+        // Duplicate while the leader is queued: joins as a waiter.
+        let w = Waiter { id: 2, client: 1, sent_ms: 0.5 };
+        assert!(matches!(s.coalesce_join(7, &input, w), Join::Queued));
+        assert_eq!(s.stats().coalesced, 1);
+        // Leader's batch completes at t=10: waiters drain once.
+        let waiters = s.resolve_inflight(&leader, 10.0, &pred(1));
+        assert_eq!(waiters.len(), 1);
+        assert_eq!(waiters[0].id, 2);
+        // A duplicate arriving before t=10 sees the computed answer.
+        let w2 = Waiter { id: 3, client: 2, sent_ms: 8.0 };
+        match s.coalesce_join(7, &input, w2) {
+            Join::Ready(t, p) => {
+                assert_eq!(t, 10.0);
+                assert_eq!(p.class, 1);
+            }
+            other => panic!("expected Ready, got {other:?}"),
+        }
+        // Past t=10 the entry retires; the next duplicate admits afresh.
+        s.tick(10.0);
+        let w3 = Waiter { id: 4, client: 3, sent_ms: 11.0 };
+        assert!(matches!(s.coalesce_join(7, &input, w3), Join::Admit));
+    }
+
+    #[test]
+    fn hash_collision_does_not_coalesce() {
+        let mut s = shard(0);
+        let a = Arc::new(vec![1.0, 0.0]);
+        let b = Arc::new(vec![0.0, 1.0]);
+        assert!(s.admit(req(1, 7, Arc::clone(&a)), true));
+        // Same key, different input: must NOT attach to a's computation.
+        let w = Waiter { id: 2, client: 0, sent_ms: 0.0 };
+        assert!(matches!(s.coalesce_join(7, &b, w), Join::Admit));
+        assert_eq!(s.stats().coalesced, 0);
+        // b admits under the same key; a's entry keeps its owner, and
+        // resolving b must not release a's waiters or answer.
+        let rb = req(2, 7, Arc::clone(&b));
+        assert!(s.admit(rb.clone(), true));
+        assert!(s.resolve_inflight(&rb, 5.0, &pred(0)).is_empty());
+        let w2 = Waiter { id: 3, client: 0, sent_ms: 1.0 };
+        assert!(
+            matches!(s.coalesce_join(7, &a, w2), Join::Queued),
+            "a's entry must still be live for a-duplicates"
+        );
+    }
+
+    #[test]
+    fn pending_inserts_publish_at_tick() {
+        let mut s = shard(0);
+        let input = Arc::new(vec![0.5, 0.25]);
+        s.schedule_insert(10.0, 3, Arc::clone(&input), pred(1));
+        s.tick(9.0);
+        assert!(s.cache.get(3, &input).is_none(), "not visible before ready");
+        s.tick(10.0);
+        assert_eq!(s.cache.get(3, &input).unwrap().class, 1);
+    }
+
+    #[test]
+    fn observe_admission_retunes_queue_wait() {
+        let mut s = Shard::new(
+            0,
+            policy(),
+            0,
+            spec(),
+            ServerProfile::default(),
+            &RouterConfig {
+                autotune: true,
+                ..RouterConfig::single()
+            },
+        );
+        assert_eq!(s.queue.policy().max_wait_ms, 5.0);
+        // Sparse arrivals (10 ms apart → 0.1/ms × 5 ms budget = 0.5 < 1):
+        // the tuned deadline drops to zero.
+        s.observe_admission(0.0);
+        s.observe_admission(10.0);
+        assert_eq!(s.queue.policy().max_wait_ms, 0.0);
+        // A dense burst (0.2 ms apart → 5/ms) brings a fill-time wait
+        // back: (4−1)/5 = 0.6 ms.
+        for i in 0..50 {
+            s.observe_admission(10.0 + 0.2 * (i + 1) as f64);
+        }
+        let wait = s.queue.policy().max_wait_ms;
+        assert!(wait > 0.0 && wait < 5.0, "fill-time wait, got {wait}");
+    }
+
+    #[test]
+    fn stats_reconcile() {
+        let mut s = shard(0);
+        let input = Arc::new(vec![0.5, 0.25]);
+        s.note_routed();
+        assert!(s.admit(req(1, 7, Arc::clone(&input)), true));
+        s.note_routed();
+        let w = Waiter { id: 2, client: 0, sent_ms: 1.5 };
+        assert!(matches!(s.coalesce_join(7, &input, w), Join::Queued));
+        let st = s.stats();
+        assert_eq!(st.routed, 2);
+        assert_eq!(st.admitted, 1);
+        assert_eq!(st.coalesced, 1);
+        assert_eq!(st.rejected, 0);
+        assert_eq!(st.completed(), 2);
+    }
+}

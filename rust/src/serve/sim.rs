@@ -1,30 +1,37 @@
-//! Discrete-event serving simulation: admission → cache → micro-batch →
-//! execute → respond, over a snapshot registry and a simulated request
-//! fleet.
+//! Discrete-event serving simulation: route → admission → cache →
+//! coalesce → micro-batch → execute → respond, over a snapshot registry
+//! and a simulated request fleet.
 //!
 //! The counterpart of [`crate::sim::Simulation`] for the prediction
-//! workload.  Two timelines interleave on one virtual clock: request
-//! arrivals (precomputed by the load generator) and batch flushes (decided
-//! by the admission queue against the executor's availability).  The
-//! executor is serial — one serving process, matching the training
-//! master's single-server model (§3.5) — so queueing delay is what the
-//! latency percentiles measure under load.
+//! workload.  Arrivals (precomputed by the load generator) and batch
+//! flushes (one per shard, decided by each admission queue against its
+//! executor's availability) interleave on one virtual clock.  PR 1's
+//! single serial endpoint — the paper's §3.5 single-master model — is now
+//! the `shards = 1` special case of a routed fleet ([`super::router`]):
+//! each shard is its own serial endpoint, so per-shard queueing delay is
+//! what the latency percentiles measure under load, and the routing
+//! policy decides how evenly that delay spreads.
+//!
+//! Duplicate in-flight inputs coalesce before admission (one execution,
+//! one cache fill, the answer fanned out to every waiter) — the
+//! miss-twice window PR 1 documented here is gone when
+//! `RouterConfig::coalesce` is on.
 
-use std::collections::VecDeque;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::metrics::{RequestLog, RequestRecord, Summary};
+use crate::metrics::{RejectionRecord, RequestLog, RequestRecord, Summary};
 use crate::netsim::LinkModel;
-use crate::rng::Pcg32;
+use crate::rng::{Exp, Pcg32};
 use crate::runtime::Compute;
 
-use super::cache::{input_key, PredictionCache};
-use super::executor::{BatchExecutor, Prediction, ServerProfile};
+use super::cache::input_key;
+use super::executor::ServerProfile;
 use super::loadgen::{FleetConfig, RequestFleet};
-use super::queue::{AdmissionQueue, BatchPolicy, PredictRequest};
+use super::queue::{BatchPolicy, PredictRequest};
 use super::registry::SnapshotRegistry;
+use super::router::{Join, Router, RouterConfig, RoutingPolicy, Shard, ShardStats, Waiter};
 
 /// Everything one serving run needs besides the registry and compute.
 #[derive(Debug, Clone)]
@@ -32,7 +39,9 @@ pub struct ServeConfig {
     pub fleet: FleetConfig,
     pub policy: BatchPolicy,
     pub server: ServerProfile,
-    /// Prediction-cache capacity in entries (0 disables caching).
+    /// Fleet shape: shard count, routing policy, coalescing, autotune.
+    pub router: RouterConfig,
+    /// Per-shard prediction-cache capacity in entries (0 disables).
     pub cache_capacity: usize,
     /// Response payload on the downlink (class + confidence + envelope).
     pub response_bytes: u64,
@@ -46,10 +55,17 @@ pub struct ServeReport {
     pub completed: u64,
     pub rejected: u64,
     pub cache_hits: u64,
+    /// Requests answered by piggybacking on an in-flight duplicate.
+    pub coalesced: u64,
     pub batches: u64,
-    /// Real requests executed in batches (excludes cache hits + padding).
+    /// Real requests executed in batches (excludes cache hits, coalesced
+    /// waiters and padding).
     pub batch_examples: u64,
     pub padded_examples: u64,
+    /// The fleet shape the run used.
+    pub router: RouterConfig,
+    /// Per-shard counters (one entry per endpoint, index order).
+    pub per_shard: Vec<ShardStats>,
     /// Emission horizon (s) — offered-load normalizer.
     pub duration_s: f64,
     /// Virtual time of the last response (s).
@@ -74,6 +90,14 @@ impl ServeReport {
         self.cache_hits as f64 / self.completed as f64
     }
 
+    /// Fraction of offered requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.offered as f64
+    }
+
     /// Mean executed-batch size (real requests per flush).
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
@@ -82,20 +106,32 @@ impl ServeReport {
         self.batch_examples as f64 / self.batches as f64
     }
 
-    /// One-line human summary.
+    /// One-line human summary.  Percentiles print as `-` when nothing
+    /// completed (a closed endpoint sheds everything).
     pub fn summary(&self) -> String {
         let lat = self.latency();
+        let ms = |v: f64| {
+            if v.is_finite() {
+                format!("{v:.1}")
+            } else {
+                "-".into()
+            }
+        };
         format!(
-            "offered={} completed={} rejected={} hit_rate={:.2} mean_batch={:.1} \
-             p50={:.1}ms p95={:.1}ms p99={:.1}ms throughput={:.1} rps",
+            "shards={} router={} offered={} completed={} rejected={} coalesced={} \
+             hit_rate={:.2} mean_batch={:.1} p50={}ms p95={}ms p99={}ms \
+             throughput={:.1} rps",
+            self.per_shard.len(),
+            self.router.policy.name(),
             self.offered,
             self.completed,
             self.rejected,
+            self.coalesced,
             self.hit_rate(),
             self.mean_batch(),
-            lat.median(),
-            lat.p95(),
-            lat.quantile(0.99),
+            ms(lat.median()),
+            ms(lat.p95()),
+            ms(lat.quantile(0.99)),
             self.throughput_rps(),
         )
     }
@@ -142,30 +178,46 @@ impl<'c> ServeSim<'c> {
             .max(1);
         let mut policy = self.cfg.policy;
         policy.max_batch = policy.max_batch.clamp(1, largest);
-        let mut queue = AdmissionQueue::new(policy);
-        let mut cache = PredictionCache::new(self.cfg.cache_capacity);
-        let mut executor = BatchExecutor::new(spec, self.cfg.server);
+
+        let router_cfg = self.cfg.router;
+        let coalesce = router_cfg.coalesce;
+        let caching = self.cfg.cache_capacity > 0;
+        let affinity = router_cfg.policy == RoutingPolicy::InputAffinity;
+        // Hashing ~KB of pixels per request only pays off when something
+        // consumes the key: a cache, the in-flight table, or the
+        // affinity router.
+        let need_key = caching || coalesce || affinity;
+        let mut shards: Vec<Shard> = (0..router_cfg.shards.max(1))
+            .map(|i| {
+                Shard::new(
+                    i as u32,
+                    policy,
+                    self.cfg.cache_capacity,
+                    spec.clone(),
+                    self.cfg.server,
+                    &router_cfg,
+                )
+            })
+            .collect();
+        let mut router = Router::new(router_cfg.policy);
         let mut log = RequestLog::new();
-        // Cache fills only when a batch's computation *completes*: entries
-        // queued here become visible once virtual time passes `ready_ms`.
-        // A duplicate arriving while its twin is still in flight misses
-        // and executes too (request coalescing is a ROADMAP follow-on).
-        let mut pending_inserts: VecDeque<PendingInsert> = VecDeque::new();
-        // Downlink jitter draws; separate stream from the load generator
-        // so admission decisions cannot perturb arrival schedules.
+        // Downlink + service jitter draws; separate stream from the load
+        // generator so admission decisions cannot perturb arrivals.
         let mut rng = Pcg32::new(self.cfg.fleet.seed ^ 0x5E12E);
+        // Straggler spread for executed batches (GC pauses, contention);
+        // standard exponential scaled by `ServerProfile::jitter`.
+        let straggler = Exp::new(1.0);
 
         let mut now = 0.0f64;
-        let mut free_at = 0.0f64;
         let mut next = 0usize;
         loop {
             let arrival = fleet.events.get(next).map(|e| e.arrival_ms);
-            let flush = queue.next_flush_at(free_at).map(|t| t.max(now));
-            // Arrivals win ties so a request landing exactly at flush time
-            // still joins the batch.
+            let flush = next_flush(&shards, now);
+            // Arrivals win ties so a request landing exactly at a flush
+            // time still joins that batch.
             let take_arrival = match (arrival, flush) {
                 (None, None) => break,
-                (Some(a), Some(f)) => a <= f,
+                (Some(a), Some((f, _))) => a <= f,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
             };
@@ -173,16 +225,20 @@ impl<'c> ServeSim<'c> {
                 let ev = &fleet.events[next];
                 next += 1;
                 now = ev.arrival_ms;
-                // With the cache disabled, skip hashing ~KB of pixels per
-                // request — nothing would ever consume the key.
-                let caching = cache.capacity() > 0;
-                let key = if caching {
-                    apply_ready_inserts(&mut cache, &mut pending_inserts, now);
+                let key = if need_key {
                     input_key(snapshot.id, &ev.input)
                 } else {
                     0
                 };
-                let hit = if caching { cache.get(key, &ev.input) } else { None };
+                let si = router.route(key, &shards, now);
+                let shard = &mut shards[si];
+                shard.tick(now);
+                shard.note_routed();
+                let hit = if caching {
+                    shard.cache.get(key, &ev.input)
+                } else {
+                    None
+                };
                 if let Some(pred) = hit {
                     let done = now
                         + self.cfg.server.cache_lookup_ms
@@ -193,39 +249,135 @@ impl<'c> ServeSim<'c> {
                         sent_ms: ev.sent_ms,
                         done_ms: done,
                         latency_ms: done - ev.sent_ms,
+                        shard: si as u32,
                         batch_size: 0,
                         cache_hit: true,
+                        coalesced: false,
                         class: pred.class as u32,
                     });
-                } else {
-                    // Shedding is silent from the log's perspective: the
-                    // client gets a fast error, not a prediction.
-                    queue.offer(PredictRequest {
-                        id: ev.id,
-                        client: ev.client,
-                        sent_ms: ev.sent_ms,
-                        arrival_ms: ev.arrival_ms,
-                        input: Arc::clone(&ev.input),
-                        key,
-                    });
+                    continue;
                 }
-            } else if let Some(f) = flush {
-                now = f;
-                apply_ready_inserts(&mut cache, &mut pending_inserts, now);
-                let batch = queue.take_batch();
-                let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
-                let (preds, service_ms) =
-                    executor.execute(self.compute, &snapshot.params, &inputs)?;
-                let computed_at = now + service_ms;
-                free_at = computed_at;
-                for (req, pred) in batch.iter().zip(&preds) {
-                    if cache.capacity() > 0 {
-                        pending_inserts.push_back(PendingInsert {
-                            ready_ms: computed_at,
-                            key: req.key,
-                            input: Arc::clone(&req.input),
-                            prediction: pred.clone(),
+                let waiter = Waiter {
+                    id: ev.id,
+                    client: ev.client,
+                    sent_ms: ev.sent_ms,
+                };
+                let join = if coalesce {
+                    shard.coalesce_join(key, &ev.input, waiter)
+                } else {
+                    Join::Admit
+                };
+                match join {
+                    // The duplicate's computation already finished but is
+                    // not yet visible as a cache entry: share its answer.
+                    Join::Ready(computed_at, pred) => {
+                        let done = computed_at
+                            + respond_ms(&fleet.links, ev.client, self.cfg.response_bytes, &mut rng);
+                        log.push(RequestRecord {
+                            id: ev.id,
+                            client: ev.client,
+                            sent_ms: ev.sent_ms,
+                            done_ms: done,
+                            latency_ms: done - ev.sent_ms,
+                            shard: si as u32,
+                            batch_size: 0,
+                            cache_hit: false,
+                            coalesced: true,
+                            class: pred.class as u32,
                         });
+                    }
+                    // Attached as a waiter; answered at the leader's
+                    // completion in the flush branch below.
+                    Join::Queued => {}
+                    Join::Admit => {
+                        let admitted = shard.admit(
+                            PredictRequest {
+                                id: ev.id,
+                                client: ev.client,
+                                sent_ms: ev.sent_ms,
+                                arrival_ms: ev.arrival_ms,
+                                input: Arc::clone(&ev.input),
+                                key,
+                            },
+                            coalesce,
+                        );
+                        if admitted {
+                            // Only arrivals that actually entered the
+                            // queue drive the autotune rate estimate —
+                            // hits, waiters and sheds never fill a batch
+                            // slot, so counting them would mistune the
+                            // deadline.
+                            shard.observe_admission(now);
+                        } else {
+                            // The client sees a fast error; the log sees
+                            // the shed (offered − completed − rejected
+                            // reconciles per client).
+                            log.push_rejection(RejectionRecord {
+                                id: ev.id,
+                                client: ev.client,
+                                sent_ms: ev.sent_ms,
+                                arrival_ms: ev.arrival_ms,
+                                shard: si as u32,
+                            });
+                        }
+                    }
+                }
+            } else if let Some((f, si)) = flush {
+                now = f;
+                let shard = &mut shards[si];
+                shard.tick(now);
+                let batch = shard.queue.take_batch();
+                let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
+                let (preds, base_service_ms) =
+                    shard
+                        .executor
+                        .execute(self.compute, &snapshot.params, &inputs)?;
+                // Straggler batches: multiplicative spread on the modeled
+                // service time.  Zero jitter draws nothing, so idealized
+                // runs keep their exact PR-1 timelines.
+                let service_ms = if self.cfg.server.jitter > 0.0 {
+                    base_service_ms * (1.0 + self.cfg.server.jitter * straggler.sample(&mut rng))
+                } else {
+                    base_service_ms
+                };
+                let computed_at = now + service_ms;
+                shard.free_at = computed_at;
+                shard.executing = batch.len();
+                for (req, pred) in batch.iter().zip(&preds) {
+                    if coalesce {
+                        // Fan the one computed answer out to every waiter
+                        // that coalesced onto this leader.
+                        for w in shard.resolve_inflight(req, computed_at, pred) {
+                            let done = computed_at
+                                + respond_ms(
+                                    &fleet.links,
+                                    w.client,
+                                    self.cfg.response_bytes,
+                                    &mut rng,
+                                );
+                            log.push(RequestRecord {
+                                id: w.id,
+                                client: w.client,
+                                sent_ms: w.sent_ms,
+                                done_ms: done,
+                                latency_ms: done - w.sent_ms,
+                                shard: si as u32,
+                                batch_size: 0,
+                                cache_hit: false,
+                                coalesced: true,
+                                class: pred.class as u32,
+                            });
+                        }
+                    }
+                    if caching {
+                        // One fill per computation — waiters never insert.
+                        // Visible once virtual time passes `computed_at`.
+                        shard.schedule_insert(
+                            computed_at,
+                            req.key,
+                            Arc::clone(&req.input),
+                            pred.clone(),
+                        );
                     }
                     let done = computed_at
                         + respond_ms(&fleet.links, req.client, self.cfg.response_bytes, &mut rng);
@@ -235,8 +387,10 @@ impl<'c> ServeSim<'c> {
                         sent_ms: req.sent_ms,
                         done_ms: done,
                         latency_ms: done - req.sent_ms,
+                        shard: si as u32,
                         batch_size: batch.len() as u32,
                         cache_hit: false,
+                        coalesced: false,
                         class: pred.class as u32,
                     });
                 }
@@ -244,14 +398,18 @@ impl<'c> ServeSim<'c> {
         }
 
         let span_s = log.span_ms() / 1000.0;
+        let per_shard: Vec<ShardStats> = shards.iter().map(Shard::stats).collect();
         Ok(ServeReport {
             offered: fleet.offered(),
             completed: log.len() as u64,
-            rejected: queue.rejected(),
-            cache_hits: cache.hits(),
-            batches: executor.batches(),
-            batch_examples: executor.examples(),
-            padded_examples: executor.padded(),
+            rejected: per_shard.iter().map(|s| s.rejected).sum(),
+            cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
+            coalesced: per_shard.iter().map(|s| s.coalesced).sum(),
+            batches: per_shard.iter().map(|s| s.batches).sum(),
+            batch_examples: per_shard.iter().map(|s| s.batch_examples).sum(),
+            padded_examples: per_shard.iter().map(|s| s.padded_examples).sum(),
+            router: router_cfg,
+            per_shard,
             duration_s: self.cfg.fleet.duration_s,
             span_s,
             log,
@@ -259,32 +417,25 @@ impl<'c> ServeSim<'c> {
     }
 }
 
+/// Earliest pending flush across the fleet: `(time, shard)`, ties to the
+/// lowest shard index.  `None` when every queue is empty.
+fn next_flush(shards: &[Shard], now: f64) -> Option<(f64, usize)> {
+    let mut best: Option<(f64, usize)> = None;
+    for (i, s) in shards.iter().enumerate() {
+        if let Some(t) = s.queue.next_flush_at(s.free_at) {
+            let t = t.max(now);
+            if best.is_none_or(|(bt, _)| t < bt) {
+                best = Some((t, i));
+            }
+        }
+    }
+    best
+}
+
 /// Downlink time for a response to `client`: latency jitter + transmission.
 fn respond_ms(links: &[LinkModel], client: u32, bytes: u64, rng: &mut Pcg32) -> f64 {
     let link = &links[client as usize];
     link.sample_latency_ms(rng) + link.transmit_ms(bytes)
-}
-
-/// A computed prediction awaiting cache visibility at its completion time.
-struct PendingInsert {
-    ready_ms: f64,
-    key: u64,
-    input: Arc<Vec<f32>>,
-    prediction: Prediction,
-}
-
-/// Publish pending cache entries whose computation completed by `t`
-/// (completions are monotone — the executor is serial — so the deque is
-/// time-ordered and a front-drain suffices).
-fn apply_ready_inserts(
-    cache: &mut PredictionCache,
-    pending: &mut VecDeque<PendingInsert>,
-    t: f64,
-) {
-    while pending.front().is_some_and(|p| p.ready_ms <= t) {
-        let p = pending.pop_front().expect("front checked");
-        cache.insert(p.key, p.input, p.prediction);
-    }
 }
 
 #[cfg(test)]
@@ -332,6 +483,7 @@ mod tests {
                 queue_depth: 64,
             },
             server: ServerProfile::default(),
+            router: RouterConfig::single(),
             cache_capacity: cache,
             response_bytes: 256,
         }
@@ -344,11 +496,27 @@ mod tests {
         reg
     }
 
+    fn run_cfg(cfg: ServeConfig) -> ServeReport {
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+        sim.run().unwrap()
+    }
+
+    /// Sorted (id, class) pairs — the answer-identity fingerprint.
+    fn classes_by_id(report: &ServeReport) -> Vec<(u64, u32)> {
+        let mut v: Vec<(u64, u32)> = report
+            .log
+            .records()
+            .iter()
+            .map(|r| (r.id, r.class))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
     #[test]
     fn accounts_for_every_request() {
-        let mut compute = ModeledCompute { param_count: 24 };
-        let mut sim = ServeSim::new(config(20.0, 4, 0), registry(), &mut compute);
-        let report = sim.run().unwrap();
+        let report = run_cfg(config(20.0, 4, 0));
         assert!(report.offered > 0);
         assert_eq!(report.completed + report.rejected, report.offered);
         assert_eq!(report.batch_examples, report.completed - report.cache_hits);
@@ -369,11 +537,9 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let run = |seed: u64| {
-            let mut compute = ModeledCompute { param_count: 24 };
             let mut cfg = config(10.0, 3, 32);
             cfg.fleet.seed = seed;
-            let mut sim = ServeSim::new(cfg, registry(), &mut compute);
-            sim.run().unwrap().log.to_csv()
+            run_cfg(cfg).log.to_csv()
         };
         assert_eq!(run(7), run(7));
         assert_ne!(run(7), run(8));
@@ -381,11 +547,9 @@ mod tests {
 
     #[test]
     fn small_input_pool_drives_cache_hits() {
-        let mut compute = ModeledCompute { param_count: 24 };
         let mut cfg = config(40.0, 4, 256);
         cfg.fleet.input_pool = 4;
-        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
-        let report = sim.run().unwrap();
+        let report = run_cfg(cfg);
         assert!(
             report.hit_rate() > 0.5,
             "4-input pool should mostly hit: {}",
@@ -393,19 +557,41 @@ mod tests {
         );
         assert!(report.cache_hits > 0 && report.batch_examples > 0);
         // Cache hits skip the executor, so executed examples + hits must
-        // still account for every completed request.
+        // still account for every completed request (coalescing off).
         assert_eq!(report.batch_examples + report.cache_hits, report.completed);
     }
 
     #[test]
     fn overload_sheds_and_stays_bounded() {
-        let mut compute = ModeledCompute { param_count: 24 };
         let mut cfg = config(2_000.0, 8, 0);
         cfg.policy.queue_depth = 16;
-        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
-        let report = sim.run().unwrap();
+        let report = run_cfg(cfg);
         assert!(report.rejected > 0, "{}", report.summary());
         assert_eq!(report.completed + report.rejected, report.offered);
+        // Shedding is visible: one rejection record per shed request,
+        // each attributed to a client and a shard.
+        assert_eq!(report.log.rejections().len() as u64, report.rejected);
+        let by_client: u64 = report.log.rejections_by_client().values().sum();
+        assert_eq!(by_client, report.rejected);
+        for r in report.log.rejections() {
+            assert!(r.client < 8);
+            assert_eq!(r.shard, 0);
+            assert!(r.arrival_ms > r.sent_ms);
+        }
+    }
+
+    #[test]
+    fn zero_depth_policy_sheds_every_request() {
+        // Regression for the `.max(1)` rounding: a closed endpoint must
+        // answer nothing and shed everything, fully accounted.
+        let mut cfg = config(50.0, 2, 0);
+        cfg.policy.queue_depth = 0;
+        let report = run_cfg(cfg);
+        assert!(report.offered > 0);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.rejected, report.offered);
+        assert_eq!(report.log.rejections().len() as u64, report.offered);
+        assert_eq!(report.batches, 0);
     }
 
     #[test]
@@ -413,20 +599,10 @@ mod tests {
         // Same seed, same fleet; batch of 1 vs batch of 8 must serve the
         // same class for every request id — the acceptance criterion.
         let classes = |max_batch: usize| {
-            let mut compute = ModeledCompute { param_count: 24 };
             let mut cfg = config(30.0, 4, 0); // cache off: everything executes
             cfg.policy.max_batch = max_batch;
             cfg.policy.max_wait_ms = if max_batch == 1 { 0.0 } else { 5.0 };
-            let mut sim = ServeSim::new(cfg, registry(), &mut compute);
-            let report = sim.run().unwrap();
-            let mut by_id: Vec<(u64, u32)> = report
-                .log
-                .records()
-                .iter()
-                .map(|r| (r.id, r.class))
-                .collect();
-            by_id.sort_unstable();
-            by_id
+            classes_by_id(&run_cfg(cfg))
         };
         let unbatched = classes(1);
         let batched = classes(8);
@@ -439,11 +615,9 @@ mod tests {
         // --batch 1000 on a model whose largest compiled variant is 8:
         // every executed batch (and so every logged batch_size) must be a
         // real compiled batch, never the raw policy number.
-        let mut compute = ModeledCompute { param_count: 24 };
         let mut cfg = config(200.0, 8, 0);
         cfg.policy.max_batch = 1000;
-        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
-        let report = sim.run().unwrap();
+        let report = run_cfg(cfg);
         assert!(report.batches > 0);
         for r in report.log.records() {
             assert!(r.batch_size <= 8, "{r:?}");
@@ -452,14 +626,12 @@ mod tests {
 
     #[test]
     fn cache_entries_become_visible_only_after_completion() {
-        // A duplicate input arriving while its twin is still being
-        // computed must execute too (no answer can be served before the
-        // computation that produced it finishes).
-        let mut compute = ModeledCompute { param_count: 24 };
+        // With coalescing OFF, a duplicate input arriving while its twin
+        // is still being computed must execute too (no answer can be
+        // served before the computation that produced it finishes).
         let mut cfg = config(400.0, 4, 4096);
         cfg.fleet.input_pool = 2;
-        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
-        let report = sim.run().unwrap();
+        let report = run_cfg(cfg);
         // A flush-time cache would serve ~2 misses total (one per distinct
         // input); completion-time visibility forces every duplicate that
         // arrives during the first in-flight batch to execute as well.
@@ -469,16 +641,162 @@ mod tests {
     }
 
     #[test]
+    fn coalescing_dedupes_inflight_duplicates() {
+        // Cache off, tiny input pool: without coalescing every request
+        // executes; with it, in-flight duplicates ride along.  Answers
+        // must be identical either way.
+        let mut base = config(400.0, 4, 0);
+        base.fleet.input_pool = 2;
+        base.policy.queue_depth = 4096; // no shedding: compare full runs
+        let off = run_cfg(base.clone());
+        let mut on_cfg = base;
+        on_cfg.router.coalesce = true;
+        let on = run_cfg(on_cfg);
+        assert_eq!(off.rejected, 0);
+        assert_eq!(on.rejected, 0);
+        assert_eq!(off.completed, on.completed);
+        assert!(on.coalesced > 0, "{}", on.summary());
+        assert!(
+            on.batch_examples < off.batch_examples,
+            "coalescing must shrink executed examples: on {} vs off {}",
+            on.summary(),
+            off.summary()
+        );
+        // Every completed request is a hit, a waiter, or executed.
+        assert_eq!(
+            on.batch_examples + on.cache_hits + on.coalesced,
+            on.completed
+        );
+        assert_eq!(classes_by_id(&off), classes_by_id(&on));
+        // Waiters never occupy an executed batch slot, and their answers
+        // exist only after the leader's computation completes.
+        for r in on.log.records().iter().filter(|r| r.coalesced) {
+            assert_eq!(r.batch_size, 0, "{r:?}");
+            assert!(!r.cache_hit, "{r:?}");
+            assert!(r.done_ms > r.sent_ms, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn multi_shard_run_reconciles_and_spreads_load() {
+        let mut cfg = config(300.0, 8, 0);
+        cfg.policy.queue_depth = 4096;
+        cfg.router = RouterConfig {
+            shards: 3,
+            policy: RoutingPolicy::JoinShortestQueue,
+            coalesce: true,
+            autotune: false,
+            window_ms: 1_000.0,
+        };
+        let report = run_cfg(cfg);
+        assert_eq!(report.completed + report.rejected, report.offered);
+        assert_eq!(report.per_shard.len(), 3);
+        let routed: u64 = report.per_shard.iter().map(|s| s.routed).sum();
+        assert_eq!(routed, report.offered, "every arrival routed exactly once");
+        for s in &report.per_shard {
+            assert_eq!(
+                s.routed,
+                s.admitted + s.rejected + s.cache_hits + s.coalesced,
+                "shard {} counters must reconcile",
+                s.shard
+            );
+            assert!(s.routed > 0, "JSQ at this load spills onto every shard");
+        }
+        assert!(
+            report.per_shard.iter().filter(|s| s.batch_examples > 0).count() >= 2,
+            "backlog must spread execution beyond one shard: {}",
+            report.summary()
+        );
+        for r in report.log.records() {
+            assert!(r.shard < 3, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn affinity_pins_duplicate_inputs_to_one_shard() {
+        let mut cfg = config(100.0, 4, 0);
+        cfg.fleet.input_pool = 1; // one distinct input → one key
+        cfg.router = RouterConfig {
+            shards: 4,
+            policy: RoutingPolicy::InputAffinity,
+            coalesce: false,
+            autotune: false,
+            window_ms: 1_000.0,
+        };
+        let report = run_cfg(cfg);
+        let active: Vec<&ShardStats> =
+            report.per_shard.iter().filter(|s| s.routed > 0).collect();
+        assert_eq!(active.len(), 1, "one key must route to exactly one shard");
+        assert_eq!(active[0].routed, report.offered);
+    }
+
+    #[test]
+    fn autotune_cuts_partial_batch_wait_at_low_load() {
+        // At 8 rps aggregate, a 5 ms deadline is pure added latency: the
+        // expected extra arrivals within the budget are ~0.04.  Autotune
+        // should flush (nearly) immediately once the rate estimate forms.
+        let mut fixed_cfg = config(2.0, 4, 0);
+        fixed_cfg.fleet.duration_s = 10.0;
+        let fixed = run_cfg(fixed_cfg.clone());
+        let mut auto_cfg = fixed_cfg;
+        auto_cfg.router.autotune = true;
+        let auto = run_cfg(auto_cfg);
+        assert_eq!(fixed.rejected, 0);
+        assert_eq!(auto.rejected, 0);
+        let (p50_fixed, p50_auto) = (fixed.latency().median(), auto.latency().median());
+        assert!(
+            p50_auto + 2.0 < p50_fixed,
+            "autotune should shed most of the 5 ms deadline: auto {p50_auto:.2} vs fixed {p50_fixed:.2}"
+        );
+        // The report surfaces the retuned deadline.
+        assert!(auto.per_shard[0].max_wait_ms < 5.0);
+        // Identical answers — tuning the deadline is timing-only.
+        assert_eq!(classes_by_id(&fixed), classes_by_id(&auto));
+    }
+
+    #[test]
+    fn jsq_beats_rr_on_tail_latency_at_high_load() {
+        // With straggler jitter (real servers stall: GC, contention), a
+        // round-robin deal keeps feeding a stalled shard while its twin
+        // idles; work-aware JSQ routes around the backlog.  Toy-spec
+        // effective capacity ≈ 8/(4.5 ms × 1.5 mean straggler factor) ≈
+        // 1185 rps/shard; 2 shards at ~0.85 occupancy.  Deep queues so
+        // no shed truncates the tail.  (With zero jitter and identical
+        // deterministic shards RR is near-optimal and the two tie — the
+        // spread is what state-aware routing is for.)
+        let p99 = |policy: RoutingPolicy| {
+            let mut cfg = config(126.0, 16, 0);
+            cfg.server.jitter = 0.5;
+            cfg.policy.queue_depth = 8192;
+            cfg.fleet.input_pool = 4096;
+            cfg.router = RouterConfig {
+                shards: 2,
+                policy,
+                coalesce: false,
+                autotune: false,
+                window_ms: 1_000.0,
+            };
+            let report = run_cfg(cfg);
+            assert_eq!(report.rejected, 0, "{}", report.summary());
+            report.latency().quantile(0.99)
+        };
+        let rr = p99(RoutingPolicy::RoundRobin);
+        let jsq = p99(RoutingPolicy::JoinShortestQueue);
+        assert!(
+            jsq < rr,
+            "join-shortest-queue should cut the tail: jsq p99 {jsq:.1} ms vs rr p99 {rr:.1} ms"
+        );
+    }
+
+    #[test]
     fn batching_amortizes_under_load() {
         // At high offered load, allowing batches must serve strictly more
         // requests within the horizon than single-request execution.
         let completed = |max_batch: usize| {
-            let mut compute = ModeledCompute { param_count: 24 };
             let mut cfg = config(200.0, 8, 0);
             cfg.policy.max_batch = max_batch;
             cfg.policy.queue_depth = 32;
-            let mut sim = ServeSim::new(cfg, registry(), &mut compute);
-            sim.run().unwrap()
+            run_cfg(cfg)
         };
         let single = completed(1);
         let batched = completed(8);

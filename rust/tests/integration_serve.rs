@@ -1,13 +1,14 @@
 //! Integration: the serving subsystem end-to-end — closure → registry →
-//! admission/batching → execution → per-request log — on the modeled
-//! predictor (no artifacts needed; the path is `Compute`-generic).
+//! routing → admission/coalescing/batching → execution → per-request log
+//! — on the modeled predictor (no artifacts needed; the path is
+//! `Compute`-generic).
 
 use mlitb::model::{init_params, ResearchClosure};
 use mlitb::netsim::LinkProfile;
 use mlitb::runtime::ModeledCompute;
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, ServeConfig, ServeReport, ServeSim,
-    ServerProfile, SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RequestFleet, RouterConfig, RoutingPolicy,
+    ServeConfig, ServeReport, ServeSim, ServerProfile, SnapshotRegistry,
 };
 
 fn registry_from_closure() -> SnapshotRegistry {
@@ -38,6 +39,7 @@ fn config(max_batch: usize, cache: usize) -> ServeConfig {
             queue_depth: 256,
         },
         server: ServerProfile::default(),
+        router: RouterConfig::single(),
         cache_capacity: cache,
         response_bytes: 256,
     }
@@ -49,6 +51,13 @@ fn run(cfg: ServeConfig) -> ServeReport {
     };
     let mut sim = ServeSim::new(cfg, registry_from_closure(), &mut compute);
     sim.run().expect("serve run")
+}
+
+/// Sorted (id, class) pairs — the answer-identity fingerprint.
+fn classes(r: &ServeReport) -> Vec<(u64, u32)> {
+    let mut v: Vec<(u64, u32)> = r.log.records().iter().map(|x| (x.id, x.class)).collect();
+    v.sort_unstable();
+    v
 }
 
 #[test]
@@ -74,20 +83,13 @@ fn closure_to_served_requests_end_to_end() {
 
 #[test]
 fn batched_serving_matches_unbatched_predictions() {
-    // The PR's acceptance criterion: identical per-request answers with
+    // The PR-1 acceptance criterion: identical per-request answers with
     // micro-batching on (≤32) and off (=1).  Cache disabled so every
     // request actually executes.
     let collect = |max_batch: usize| {
         let report = run(config(max_batch, 0));
         assert_eq!(report.rejected, 0);
-        let mut by_id: Vec<(u64, u32)> = report
-            .log
-            .records()
-            .iter()
-            .map(|r| (r.id, r.class))
-            .collect();
-        by_id.sort_unstable();
-        by_id
+        classes(&report)
     };
     let unbatched = collect(1);
     let batched = collect(32);
@@ -102,12 +104,112 @@ fn cached_answers_match_executed_ones() {
     let with_cache = run(config(32, 1024));
     let without = run(config(32, 0));
     assert!(with_cache.cache_hits > 0, "{}", with_cache.summary());
-    let classes = |r: &ServeReport| {
-        let mut v: Vec<(u64, u32)> = r.log.records().iter().map(|x| (x.id, x.class)).collect();
-        v.sort_unstable();
-        v
-    };
     assert_eq!(classes(&with_cache), classes(&without));
+}
+
+#[test]
+fn routed_and_coalesced_answers_match_single_shard_baseline() {
+    // This PR's acceptance criterion (answer-preserving routing): for the
+    // same fleet seed, every combination of shard count, routing policy
+    // and coalescing serves exactly the same (id → class) map as the
+    // single-shard uncoalesced baseline — and completes the same request
+    // set (no shedding at this load).
+    let mut base_cfg = config(32, 0);
+    base_cfg.fleet.input_pool = 12; // duplicate-heavy: coalescing engages
+    let baseline = run(base_cfg.clone());
+    assert_eq!(baseline.rejected, 0);
+    let expect = classes(&baseline);
+    assert!(!expect.is_empty());
+    for policy in [
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::JoinShortestQueue,
+        RoutingPolicy::InputAffinity,
+    ] {
+        for coalesce in [false, true] {
+            for cache in [0usize, 512] {
+                let mut cfg = base_cfg.clone();
+                cfg.cache_capacity = cache;
+                cfg.router = RouterConfig {
+                    shards: 3,
+                    policy,
+                    coalesce,
+                    autotune: coalesce, // exercise autotune on half the grid
+                    window_ms: 1_000.0,
+                };
+                let routed = run(cfg);
+                assert_eq!(routed.rejected, 0, "{}", routed.summary());
+                assert_eq!(
+                    classes(&routed),
+                    expect,
+                    "policy {} coalesce {coalesce} cache {cache} changed answers",
+                    policy.name()
+                );
+                // Full accounting: hits + waiters + executed = completed.
+                assert_eq!(
+                    routed.batch_examples + routed.cache_hits + routed.coalesced,
+                    routed.completed,
+                    "{}",
+                    routed.summary()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn coalescing_reduces_executed_examples_on_duplicates() {
+    let mut cfg = config(32, 0);
+    cfg.fleet.input_pool = 4;
+    cfg.fleet.groups[0].rate_rps = 60.0; // push duplicates into flight
+    let off = run(cfg.clone());
+    cfg.router.coalesce = true;
+    let on = run(cfg);
+    assert_eq!(off.rejected, 0);
+    assert_eq!(on.rejected, 0);
+    assert_eq!(on.completed, off.completed);
+    assert!(on.coalesced > 0, "{}", on.summary());
+    assert!(
+        on.batch_examples < off.batch_examples,
+        "coalescing must cut executions: on {} vs off {}",
+        on.summary(),
+        off.summary()
+    );
+    assert_eq!(classes(&on), classes(&off));
+}
+
+#[test]
+fn shedding_reconciles_per_client() {
+    // Overload a tiny queue and check the previously-invisible sheds are
+    // fully attributed: per client, offered = completed + rejected.
+    let mut cfg = config(32, 0);
+    for g in &mut cfg.fleet.groups {
+        g.rate_rps = 400.0;
+    }
+    cfg.policy.queue_depth = 8;
+    cfg.fleet.duration_s = 1.5; // overload: keep the executed volume modest
+    let fleet = RequestFleet::generate(&cfg.fleet, &demo_spec());
+    let report = run(cfg);
+    assert!(report.rejected > 0, "{}", report.summary());
+    assert_eq!(report.completed + report.rejected, report.offered);
+    assert_eq!(report.log.rejections().len() as u64, report.rejected);
+    let n_clients = fleet.links.len() as u32;
+    let mut offered_by_client = vec![0u64; n_clients as usize];
+    for e in &fleet.events {
+        offered_by_client[e.client as usize] += 1;
+    }
+    let mut completed_by_client = vec![0u64; n_clients as usize];
+    for r in report.log.records() {
+        completed_by_client[r.client as usize] += 1;
+    }
+    let rejected_by_client = report.log.rejections_by_client();
+    for c in 0..n_clients {
+        let rejected = rejected_by_client.get(&c).copied().unwrap_or(0);
+        assert_eq!(
+            completed_by_client[c as usize] + rejected,
+            offered_by_client[c as usize],
+            "client {c} does not reconcile"
+        );
+    }
 }
 
 #[test]
