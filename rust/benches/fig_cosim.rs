@@ -1,0 +1,196 @@
+//! Cosim sweep: the staleness-vs-latency frontier — publication cadence ×
+//! shard count under live training traffic.
+//!
+//! Two claims, one table + verdicts:
+//!
+//! 1. **Staleness tracks cadence.**  Served-prediction staleness (the
+//!    age, in training iterations, of the snapshot behind each answer)
+//!    decreases monotonically as the master publishes more often; the
+//!    prediction delta against the live parameters shrinks with it.
+//! 2. **Freshness is (nearly) free at these loads.**  Hot-swapping
+//!    versions mid-traffic keeps p99 latency within the serving-only
+//!    baseline envelope (the publish-never run) — swaps cost cache
+//!    warmth, not answer latency.
+//!
+//!     cargo bench --bench fig_cosim            # full sweep
+//!     cargo bench --bench fig_cosim -- --fast  # fewer points
+//!
+//! Training runs on `DriftingCompute` (deterministic parameter motion —
+//! zero-gradient modeled compute would make every snapshot identical and
+//! the staleness delta trivially zero).
+
+use mlitb::cosim::{run_cosim, CosimConfig, PublicationPolicy};
+use mlitb::metrics::Table;
+use mlitb::netsim::LinkProfile;
+use mlitb::runtime::{DriftingCompute, ModeledCompute};
+use mlitb::serve::{
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
+    ServerProfile,
+};
+use mlitb::sim::SimConfig;
+
+const CLIENTS: usize = 12;
+const RATE_RPS: f64 = 20.0; // per client → 240 rps offered
+
+fn config(iters: u64, shards: usize, publish_every: u64) -> CosimConfig {
+    let spec = demo_spec();
+    let mut train = SimConfig::paper_scaling(3, &spec);
+    train.iterations = iters;
+    train.train_size = 1_500;
+    train.test_size = 256;
+    train.track_every = 4;
+    train.master.iter_duration_s = 1.0;
+    train.seed = 5;
+    let serve = ServeConfig {
+        fleet: FleetConfig {
+            groups: vec![ClientSpec {
+                link: LinkProfile::Wifi,
+                rate_rps: RATE_RPS,
+                count: CLIENTS,
+            }],
+            duration_s: iters as f64 * train.master.iter_duration_s,
+            input_pool: 256,
+            seed: 23,
+        },
+        policy: BatchPolicy::default(),
+        server: ServerProfile::default(),
+        router: RouterConfig {
+            shards,
+            policy: RoutingPolicy::JoinShortestQueue,
+            coalesce: true,
+            autotune: false,
+            window_ms: 1_000.0,
+        },
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
+        cache_capacity: 2_048,
+        response_bytes: 256,
+    };
+    CosimConfig {
+        train,
+        serve,
+        publish: PublicationPolicy::every(publish_every),
+        retain: 3,
+        measure_delta: true,
+    }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let iters: u64 = if fast { 12 } else { 24 };
+    let shard_counts: &[usize] = if fast { &[2] } else { &[1, 2] };
+    let cadences: &[u64] = if fast { &[1, 6] } else { &[1, 4, 12] };
+    let spec = demo_spec();
+    println!(
+        "cosim sweep — {} ({} params), {CLIENTS} clients × {RATE_RPS:.0} rps, {iters} iterations \
+         of live training (drifting modeled gradients)\n",
+        spec.name, spec.param_count
+    );
+
+    let mut table = Table::new(
+        "staleness vs latency — publication cadence × shards",
+        &[
+            "shards", "publish every", "pubs", "gc evicted", "age p50 it", "age p99 it",
+            "age p50 ms", "delta mean", "class flips", "lat p50 ms", "lat p99 ms", "completed",
+        ],
+    );
+    struct Verdict {
+        shards: usize,
+        /// (cadence, mean snapshot age in iterations) per run.
+        ages: Vec<(u64, f64)>,
+        p99s: Vec<f64>,
+        base_p99: f64,
+    }
+    let mut verdicts: Vec<Verdict> = Vec::new();
+    for &shards in shard_counts {
+        // Baseline: publish once, never swap — the serving-only envelope.
+        let baseline = {
+            let cfg = config(iters, shards, 0);
+            let mut train_c = DriftingCompute { param_count: spec.param_count };
+            let mut serve_c = ModeledCompute { param_count: spec.param_count };
+            run_cosim(&cfg, &spec, &mut train_c, &mut serve_c).expect("cosim baseline")
+        };
+        let base_p99 = baseline.serve.latency().quantile(0.99);
+        let mut ages: Vec<(u64, f64)> = Vec::new();
+        let mut p99s: Vec<f64> = Vec::new();
+        for &cadence in cadences {
+            let cfg = config(iters, shards, cadence);
+            let mut train_c = DriftingCompute { param_count: spec.param_count };
+            let mut serve_c = ModeledCompute { param_count: spec.param_count };
+            let report = run_cosim(&cfg, &spec, &mut train_c, &mut serve_c).expect("cosim run");
+            let age_it = report.staleness.age_iters_summary();
+            let age_ms = report.staleness.age_ms_summary();
+            let lat = report.serve.latency();
+            table.row(vec![
+                shards.to_string(),
+                cadence.to_string(),
+                report.publications.len().to_string(),
+                report.evicted.to_string(),
+                format!("{:.1}", age_it.median()),
+                format!("{:.1}", age_it.quantile(0.99)),
+                format!("{:.0}", age_ms.median()),
+                format!("{:.4}", report.staleness.delta_summary().mean()),
+                format!("{:.3}", report.staleness.stale_class_rate()),
+                format!("{:.1}", lat.median()),
+                format!("{:.1}", lat.quantile(0.99)),
+                report.serve.completed.to_string(),
+            ]);
+            ages.push((cadence, age_it.mean()));
+            p99s.push(lat.quantile(0.99));
+        }
+        // Baseline row (staleness unbounded: the master keeps training).
+        let age_it = baseline.staleness.age_iters_summary();
+        table.row(vec![
+            shards.to_string(),
+            "never".into(),
+            baseline.publications.len().to_string(),
+            baseline.evicted.to_string(),
+            format!("{:.1}", age_it.median()),
+            format!("{:.1}", age_it.quantile(0.99)),
+            format!("{:.0}", baseline.staleness.age_ms_summary().median()),
+            format!("{:.4}", baseline.staleness.delta_summary().mean()),
+            format!("{:.3}", baseline.staleness.stale_class_rate()),
+            format!("{:.1}", baseline.serve.latency().median()),
+            format!("{base_p99:.1}"),
+            baseline.serve.completed.to_string(),
+        ]);
+        verdicts.push(Verdict {
+            shards,
+            ages,
+            p99s,
+            base_p99,
+        });
+    }
+    table.print();
+
+    for v in &verdicts {
+        let monotone = v.ages.windows(2).all(|w| w[0].1 <= w[1].1);
+        let mark = if monotone { "✓" } else { "✗" };
+        let pairs: Vec<String> = v
+            .ages
+            .iter()
+            .map(|(k, a)| format!("k={k}: {a:.2} it"))
+            .collect();
+        println!(
+            "  {mark} {} shard(s): mean staleness rises monotonically with cadence ({})",
+            v.shards,
+            pairs.join(", ")
+        );
+        // Envelope: publishing must not blow up tail latency vs never
+        // publishing (swaps cost cache warmth only).
+        let envelope = v.base_p99 * 1.5 + 2.0;
+        let within = v.p99s.iter().all(|&p| p <= envelope);
+        let mark = if within { "✓" } else { "✗" };
+        println!(
+            "  {mark} {} shard(s): p99 under publication stays within the serving-only \
+             envelope ({:.1} ms vs baseline {:.1} ms)",
+            v.shards,
+            v.p99s.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            v.base_p99
+        );
+    }
+    println!(
+        "\n  faster publication ⇒ fresher answers (smaller age + delta) at the cost of cache\n\
+         warmth per swap; the frontier above is what `--publish-every` trades."
+    );
+}

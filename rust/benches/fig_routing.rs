@@ -71,6 +71,8 @@ fn run(
             ..ServerProfile::default()
         },
         router,
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
         cache_capacity: cache,
         response_bytes: 256,
     };

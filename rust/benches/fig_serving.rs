@@ -78,6 +78,8 @@ fn main() {
                 // Single PR-1-style endpoint: this sweep isolates
                 // batching/caching; routing gets its own fig_routing.
                 router: RouterConfig::single(),
+                shard_profiles: Vec::new(),
+                drained_shards: Vec::new(),
                 cache_capacity: 2048,
                 response_bytes: 256,
             };

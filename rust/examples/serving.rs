@@ -67,6 +67,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         policy: BatchPolicy { max_batch: 32, max_wait_ms: 5.0, queue_depth: 128 },
         server: ServerProfile::default(),
         router: RouterConfig::single(),
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
         cache_capacity: 512,
         response_bytes: 256,
     };

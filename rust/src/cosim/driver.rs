@@ -1,0 +1,368 @@
+//! The co-simulation driver: training master and serving tier stepping
+//! one shared virtual clock.
+//!
+//! Loop shape (one training iteration = one serving window):
+//!
+//! 1. Capture the master's live parameters — they are what the fleet's
+//!    broadcast installed at the window's opening boundary, and what the
+//!    staleness probe compares served answers against.
+//! 2. `Simulation::step()` advances the clock to the next iteration
+//!    boundary (`wall_ms` includes the sync barrier's slowest-worker
+//!    wait, so serving load sees the *real* cadence, stragglers and all).
+//! 3. `ServeEngine::pump(Some(boundary))` serves every request arrival
+//!    and batch flush inside the window against the registry as-is.
+//! 4. At the boundary, the [`PublicationPolicy`] may publish the freshly
+//!    reduced parameters — a hot swap for all subsequent admissions —
+//!    and traffic-driven GC reclaims unpinned stale versions.
+//!
+//! After the last iteration a final unbounded pump drains the remaining
+//! schedule (open-loop arrivals may outlast training).
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::StalenessLog;
+use crate::model::ModelSpec;
+use crate::runtime::Compute;
+use crate::serve::{ServeConfig, ServeEngine, ServeReport, SnapshotRegistry};
+use crate::sim::{RunReport, SimConfig, Simulation};
+
+use super::probe::StalenessProbe;
+use super::publish::{PublicationPolicy, PublicationRecord, PublishTrigger};
+
+/// Everything one co-simulation run needs besides the compute backends.
+#[derive(Debug, Clone)]
+pub struct CosimConfig {
+    pub train: SimConfig,
+    pub serve: ServeConfig,
+    pub publish: PublicationPolicy,
+    /// Registry retention: keep the newest N versions (the active version
+    /// and pinned versions always survive).
+    pub retain: usize,
+    /// Re-predict each served answer against the live master parameters
+    /// (prediction delta + class flips).  Costs one extra execution per
+    /// distinct input per iteration.
+    pub measure_delta: bool,
+}
+
+/// Outcome of one co-simulation run.
+#[derive(Debug, Clone)]
+pub struct CosimReport {
+    pub train: RunReport,
+    pub serve: ServeReport,
+    pub staleness: StalenessLog,
+    /// Every publication, in order (index 0 is the initial snapshot).
+    pub publications: Vec<PublicationRecord>,
+    /// Versions reclaimed by traffic-driven GC over the run.
+    pub evicted: u64,
+    /// Versions resident in the registry at end of run.
+    pub resident: usize,
+}
+
+impl CosimReport {
+    /// One-line human summary: staleness beside latency.  Quantiles and
+    /// the probe's delta print as `-` when unmeasured (empty run, or the
+    /// delta probe disabled).
+    pub fn summary(&self) -> String {
+        let age = self.staleness.age_iters_summary();
+        let lat = self.serve.latency();
+        let ms = |v: f64| {
+            if v.is_finite() {
+                format!("{v:.1}")
+            } else {
+                "-".into()
+            }
+        };
+        let delta = self.staleness.delta_summary();
+        let delta_mean = if delta.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.4}", delta.mean())
+        };
+        format!(
+            "pubs={} evicted={} resident={} age_iters p50={} p99={} \
+             delta_mean={delta_mean} stale_class={:.3} latency p50={}ms p99={}ms completed={}",
+            self.publications.len(),
+            self.evicted,
+            self.resident,
+            ms(age.median()),
+            ms(age.quantile(0.99)),
+            self.staleness.stale_class_rate(),
+            ms(lat.median()),
+            ms(lat.quantile(0.99)),
+            self.serve.completed,
+        )
+    }
+}
+
+/// Run the co-simulation to completion.  `train_compute` backs the
+/// master's gradient/eval work, `serve_compute` the prediction tier (two
+/// backends because each side holds its own mutable borrow for the whole
+/// run; modeled runs pass two instances of the same scorer).
+pub fn run_cosim(
+    cfg: &CosimConfig,
+    spec: &ModelSpec,
+    train_compute: &mut dyn Compute,
+    serve_compute: &mut dyn Compute,
+) -> Result<CosimReport> {
+    let mut sim = Simulation::new(cfg.train.clone(), spec.clone(), train_compute);
+    let mut registry = SnapshotRegistry::new(spec.clone());
+    let mut engine = ServeEngine::new(&cfg.serve, spec);
+    let mut probe = StalenessProbe::new(spec.clone(), cfg.measure_delta);
+    let retain = cfg.retain.max(1);
+
+    // The run starts serving the iteration-0 parameters.
+    let v0 = registry
+        .publish_params(
+            sim.master().params().to_vec(),
+            0,
+            "cosim: initial".into(),
+            0.0,
+        )
+        .map_err(|e| anyhow!(e))?;
+    let mut publications = vec![PublicationRecord {
+        snapshot: v0,
+        iteration: 0,
+        t_ms: 0.0,
+        trigger: PublishTrigger::Initial,
+        evicted: Vec::new(),
+    }];
+    let mut last_pub_iter = 0u64;
+    let mut best_pub_error: Option<f64> = None;
+    let mut evicted_total = 0u64;
+
+    for _ in 0..cfg.train.iterations {
+        // Live parameters for the upcoming window: what the boundary
+        // broadcast installed (training recomputes *during* the window
+        // and applies at its close).
+        probe.set_master(sim.master().iteration(), sim.master().params());
+        sim.step()?;
+        let boundary_ms = sim.master().now_ms();
+        engine.pump(Some(boundary_ms), &mut registry, serve_compute, &mut probe)?;
+
+        let iteration = sim.master().iteration();
+        let test_error = sim.master().timeline().last().and_then(|r| r.test_error);
+        if let Some(trigger) =
+            cfg.publish
+                .decide(iteration, last_pub_iter, test_error, best_pub_error)
+        {
+            let id = registry
+                .publish_params(
+                    sim.master().params().to_vec(),
+                    iteration,
+                    format!("cosim: {} @ iter {iteration}", trigger.name()),
+                    boundary_ms,
+                )
+                .map_err(|e| anyhow!(e))?;
+            last_pub_iter = iteration;
+            if let Some(err) = test_error {
+                best_pub_error = Some(best_pub_error.map_or(err, |b| b.min(err)));
+            }
+            // Traffic-driven GC: retention and reader refcounts must both
+            // agree before a version goes.
+            let evicted = registry.gc_keep_latest(retain);
+            evicted_total += evicted.len() as u64;
+            publications.push(PublicationRecord {
+                snapshot: id,
+                iteration,
+                t_ms: boundary_ms,
+                trigger,
+                evicted,
+            });
+        }
+    }
+
+    // Drain the serving tail: arrivals after the last boundary plus any
+    // batches still queued, against the final published state.
+    probe.set_master(sim.master().iteration(), sim.master().params());
+    engine.pump(None, &mut registry, serve_compute, &mut probe)?;
+    debug_assert_eq!(
+        registry.total_readers(),
+        0,
+        "drained run must release every reader pin"
+    );
+
+    let train = RunReport::from_timeline(sim.master().timeline().clone(), sim.n_clients());
+    Ok(CosimReport {
+        train,
+        serve: engine.into_report(),
+        staleness: probe.into_log(),
+        publications,
+        evicted: evicted_total,
+        resident: registry.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::DeviceClass;
+    use crate::metrics::StalenessRecord;
+    use crate::model::TensorSpec;
+    use crate::netsim::LinkProfile;
+    use crate::runtime::ModeledCompute;
+    use crate::serve::{
+        BatchPolicy, ClientSpec, FleetConfig, RouterConfig, ServerProfile,
+    };
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 8,
+            batch_size: 16,
+            micro_batches: vec![16, 4, 1],
+            input: vec![28, 28, 1],
+            classes: 10,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![8],
+                offset: 0,
+                size: 8,
+                fan_in: 4,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn cfg(iterations: u64, publish_every: u64) -> CosimConfig {
+        let spec = spec();
+        let mut train = SimConfig::paper_scaling(2, &spec);
+        train.train_size = 300;
+        train.test_size = 32;
+        train.iterations = iterations;
+        train.master.capacity = 100;
+        train.track_every = 2;
+        let serve = ServeConfig {
+            fleet: FleetConfig {
+                groups: vec![ClientSpec {
+                    link: LinkProfile::Lan,
+                    rate_rps: 5.0,
+                    count: 3,
+                }],
+                duration_s: iterations as f64 * 4.0,
+                input_pool: 8,
+                seed: 13,
+            },
+            policy: BatchPolicy {
+                max_batch: 16,
+                max_wait_ms: 5.0,
+                queue_depth: 256,
+            },
+            server: ServerProfile::default(),
+            router: RouterConfig::single(),
+            shard_profiles: Vec::new(),
+            drained_shards: Vec::new(),
+            cache_capacity: 0,
+            response_bytes: 256,
+        };
+        CosimConfig {
+            train,
+            serve,
+            publish: PublicationPolicy::every(publish_every),
+            retain: 2,
+            measure_delta: true,
+        }
+    }
+
+    fn run(cfg: &CosimConfig) -> CosimReport {
+        let mut train_compute = ModeledCompute { param_count: 8 };
+        let mut serve_compute = ModeledCompute { param_count: 8 };
+        run_cosim(cfg, &spec(), &mut train_compute, &mut serve_compute).unwrap()
+    }
+
+    #[test]
+    fn cosim_reconciles_and_publishes_on_cadence() {
+        let report = run(&cfg(6, 2));
+        // Serving accounting holds under the shared clock.
+        assert!(report.serve.offered > 0);
+        assert_eq!(
+            report.serve.completed + report.serve.rejected,
+            report.serve.offered
+        );
+        // One staleness record per completed request.
+        assert_eq!(report.staleness.len() as u64, report.serve.completed);
+        // Initial + cadence at iterations 2, 4, 6.
+        assert_eq!(report.publications.len(), 4);
+        assert_eq!(report.publications[0].trigger, PublishTrigger::Initial);
+        assert_eq!(
+            report
+                .publications
+                .iter()
+                .skip(1)
+                .map(|p| p.iteration)
+                .collect::<Vec<_>>(),
+            vec![2, 4, 6]
+        );
+        // Training really ran on the same clock.
+        assert_eq!(report.train.timeline.len(), 6);
+        assert!(report.train.virtual_secs >= 24.0);
+        // Retention (2) bounds the registry; pins all released.
+        assert!(report.resident <= 2);
+        assert_eq!(report.evicted, 2, "4 published − 2 retained");
+        // Every served request names a published version, and its age in
+        // iterations is bounded by the run.
+        let published: Vec<u64> = report.publications.iter().map(|p| p.snapshot).collect();
+        for r in report.staleness.records() {
+            assert!(published.contains(&r.snapshot), "{r:?}");
+            assert!(r.age_iters() <= 6, "{r:?}");
+            assert!(r.age_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn cosim_is_deterministic() {
+        let a = run(&cfg(4, 2));
+        let b = run(&cfg(4, 2));
+        assert_eq!(a.staleness.to_csv(), b.staleness.to_csv());
+        assert_eq!(a.serve.log.to_csv(), b.serve.log.to_csv());
+        assert_eq!(a.summary(), b.summary());
+    }
+
+    #[test]
+    fn publish_every_iteration_keeps_answers_fresh() {
+        let report = run(&cfg(6, 1));
+        // With a snapshot at every boundary, no served answer can lag by
+        // more than the one-iteration publication pipeline.
+        let max_age = report
+            .staleness
+            .records()
+            .iter()
+            .map(StalenessRecord::age_iters)
+            .max()
+            .unwrap_or(0);
+        assert!(max_age <= 1, "cadence-1 run saw age {max_age}");
+        // ModeledCompute training never moves the parameters, so stale
+        // answers equal fresh ones exactly.
+        assert!(report.staleness.delta_summary().max() < 1e-9);
+        assert_eq!(report.staleness.stale_class_rate(), 0.0);
+    }
+
+    #[test]
+    fn publish_never_means_growing_staleness() {
+        let report = run(&cfg(6, 0));
+        assert_eq!(report.publications.len(), 1, "initial only");
+        assert_eq!(report.evicted, 0);
+        // Ages grow with the master: late responses lag by many
+        // iterations.
+        let max_age = report
+            .staleness
+            .records()
+            .iter()
+            .map(StalenessRecord::age_iters)
+            .max()
+            .unwrap_or(0);
+        assert!(max_age >= 4, "never-publish run saw max age {max_age}");
+    }
+
+    #[test]
+    fn churn_and_cosim_compose() {
+        // The shared clock must survive fleet churn mid-run.
+        let mut config = cfg(5, 2);
+        config
+            .train
+            .churn
+            .insert(2, vec![crate::sim::ChurnEvent::Join(DeviceClass::Mobile)]);
+        let report = run(&config);
+        assert_eq!(report.train.timeline.len(), 5);
+        assert!(report.serve.completed > 0);
+    }
+}

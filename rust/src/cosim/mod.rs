@@ -1,0 +1,38 @@
+//! Serve × train co-simulation — MLitB's two pillars on one clock.
+//!
+//! The paper's deployment story is *one* system: the master trains with
+//! its volunteer fleet **while** the public queries the current model
+//! (§2.3's "prediction to the public at large" is served by the same
+//! master that runs §3.3's event loop).  This repo grew those pillars as
+//! two disconnected discrete-event simulations — [`crate::sim`] for
+//! training, [`crate::serve`] for prediction.  This module couples them:
+//!
+//! * [`run_cosim`] drives both on one **shared virtual clock**: each
+//!   training iteration advances the clock by its wall time, then the
+//!   serving engine ([`crate::serve::ServeEngine`]) pumps every request
+//!   arrival and batch flush inside that window.
+//! * At iteration boundaries a [`PublicationPolicy`] decides whether the
+//!   master publishes its live parameters into the serving registry —
+//!   every k iterations, and/or when the tracked test error improves by
+//!   δ.  Publication **hot-swaps** the active version mid-traffic with
+//!   answer-consistency guarantees: a request is computed entirely
+//!   against the snapshot it was admitted under (version-stamped
+//!   requests, version-pure batches, per-version registry reader pins),
+//!   and traffic-driven GC reclaims versions only once retention *and*
+//!   zero in-flight readers agree.
+//! * A [`StalenessProbe`] tags every served answer with the age of the
+//!   snapshot that produced it (iterations + virtual ms) and, when
+//!   enabled, the prediction delta against the live master parameters —
+//!   the [`crate::metrics::StalenessLog`] behind the `fig_cosim`
+//!   staleness-vs-latency frontier.
+//!
+//! Entry points: `mlitb cosim`, `benches/fig_cosim.rs`,
+//! `examples/cosim.rs`, `tests/integration_cosim.rs`.
+
+mod driver;
+mod probe;
+mod publish;
+
+pub use driver::{run_cosim, CosimConfig, CosimReport};
+pub use probe::StalenessProbe;
+pub use publish::{PublicationPolicy, PublicationRecord, PublishTrigger};

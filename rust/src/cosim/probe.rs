@@ -1,0 +1,274 @@
+//! The staleness probe — a [`ServeObserver`] that measures how far each
+//! served answer lags the live master.
+//!
+//! At every response it records the snapshot's age (iterations and
+//! virtual ms behind the master).  With `measure_delta` on, it also
+//! re-predicts the same input against the master's *current* parameters
+//! and records the L1 probability delta and whether the argmax class
+//! flipped — the "how wrong was the stale answer" axis of `fig_cosim`.
+//! Fresh predictions are memoized per (input, master window): pool inputs
+//! are shared `Arc`s, so pointer identity keys the memo and the probe
+//! costs one extra execution per *distinct* input per iteration, not per
+//! request.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::metrics::{RequestRecord, StalenessLog, StalenessRecord};
+use crate::model::ModelSpec;
+use crate::runtime::Compute;
+use crate::serve::{Prediction, ServeObserver, SnapshotMeta};
+
+/// Observer wiring staleness measurement into the serving engine.
+pub struct StalenessProbe {
+    spec: ModelSpec,
+    measure_delta: bool,
+    master_iteration: u64,
+    master_params: Vec<f32>,
+    log: StalenessLog,
+    /// input-Arc pointer → (fresh probability row, fresh argmax); cleared
+    /// whenever the master window advances.
+    memo: HashMap<usize, (Vec<f32>, u32)>,
+    /// Smallest compiled micro-batch — the probe's execution shape
+    /// (padded by repeating the input).
+    probe_batch: usize,
+    scratch: Vec<f32>,
+}
+
+impl StalenessProbe {
+    pub fn new(spec: ModelSpec, measure_delta: bool) -> Self {
+        let probe_batch = spec.micro_batches.iter().copied().min().unwrap_or(1).max(1);
+        Self {
+            spec,
+            measure_delta,
+            master_iteration: 0,
+            master_params: Vec::new(),
+            log: StalenessLog::new(),
+            memo: HashMap::new(),
+            probe_batch,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Install the parameters live for the upcoming serving window (the
+    /// ones broadcast at the window's opening iteration boundary).  The
+    /// copy is skipped when the delta probe is off — age bookkeeping only
+    /// needs the iteration number.
+    pub fn set_master(&mut self, iteration: u64, params: &[f32]) {
+        self.master_iteration = iteration;
+        if self.measure_delta {
+            self.master_params.clear();
+            self.master_params.extend_from_slice(params);
+        }
+        self.memo.clear();
+    }
+
+    pub fn log(&self) -> &StalenessLog {
+        &self.log
+    }
+
+    pub fn into_log(self) -> StalenessLog {
+        self.log
+    }
+
+    /// Fresh prediction for `input` under the live master parameters,
+    /// memoized per master window.
+    fn fresh(
+        &mut self,
+        input: &Arc<Vec<f32>>,
+        compute: &mut dyn Compute,
+    ) -> Result<(Vec<f32>, u32)> {
+        let key = Arc::as_ptr(input) as usize;
+        if let Some(hit) = self.memo.get(&key) {
+            return Ok(hit.clone());
+        }
+        self.scratch.clear();
+        for _ in 0..self.probe_batch {
+            self.scratch.extend_from_slice(input);
+        }
+        let probs = compute.predict_batch(
+            &self.spec.name,
+            self.probe_batch,
+            &self.master_params,
+            &self.scratch,
+            self.spec.classes,
+        )?;
+        let row = probs[..self.spec.classes].to_vec();
+        let class = Prediction::from_row(&row).class as u32;
+        let out = (row, class);
+        self.memo.insert(key, out.clone());
+        Ok(out)
+    }
+}
+
+impl ServeObserver for StalenessProbe {
+    fn on_response(
+        &mut self,
+        record: &RequestRecord,
+        input: &Arc<Vec<f32>>,
+        served: &Prediction,
+        snapshot: SnapshotMeta,
+        compute: &mut dyn Compute,
+    ) -> Result<()> {
+        let (delta, fresh_class) = if self.measure_delta {
+            let (fresh_row, fresh_class) = self.fresh(input, compute)?;
+            let delta: f64 = fresh_row
+                .iter()
+                .zip(&served.probs)
+                .map(|(f, s)| (f - s).abs() as f64)
+                .sum();
+            (Some(delta), Some(fresh_class))
+        } else {
+            (None, None)
+        };
+        self.log.push(StalenessRecord {
+            id: record.id,
+            client: record.client,
+            done_ms: record.done_ms,
+            snapshot: snapshot.id,
+            snapshot_iteration: snapshot.iteration,
+            master_iteration: self.master_iteration,
+            age_ms: (record.done_ms - snapshot.published_ms).max(0.0),
+            delta,
+            fresh_class,
+            class: record.class,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+    use crate::runtime::ModeledCompute;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 12,
+            batch_size: 4,
+            micro_batches: vec![4, 2],
+            input: vec![3, 1, 1],
+            classes: 4,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![12],
+                offset: 0,
+                size: 12,
+                fan_in: 3,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn record(id: u64, class: u32) -> RequestRecord {
+        RequestRecord {
+            id,
+            client: 0,
+            sent_ms: 0.0,
+            done_ms: 10.0,
+            latency_ms: 10.0,
+            shard: 0,
+            snapshot: 1,
+            batch_size: 1,
+            cache_hit: false,
+            coalesced: false,
+            class,
+        }
+    }
+
+    fn meta() -> SnapshotMeta {
+        SnapshotMeta {
+            id: 1,
+            iteration: 2,
+            published_ms: 4.0,
+        }
+    }
+
+    #[test]
+    fn identical_params_give_zero_delta() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let params: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.1).collect();
+        let mut probe = StalenessProbe::new(spec(), true);
+        probe.set_master(5, &params);
+        let input = Arc::new(vec![0.3f32, 0.7, 0.1]);
+        // Serve the same answer the live params would give.
+        let row = crate::runtime::modeled_predict(1, &params, &input, 4).unwrap();
+        let served = Prediction::from_row(&row);
+        probe
+            .on_response(&record(1, served.class as u32), &input, &served, meta(), &mut compute)
+            .unwrap();
+        let log = probe.into_log();
+        assert_eq!(log.len(), 1);
+        let r = &log.records()[0];
+        assert_eq!(r.age_iters(), 3);
+        assert_eq!(r.age_ms, 6.0);
+        assert!(r.delta.unwrap() < 1e-6, "same params, same probs");
+        assert_eq!(r.class_changed(), Some(false));
+    }
+
+    #[test]
+    fn diverged_params_show_a_delta() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let stale: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.1).collect();
+        let live: Vec<f32> = stale.iter().map(|p| -p).collect();
+        let mut probe = StalenessProbe::new(spec(), true);
+        probe.set_master(9, &live);
+        let input = Arc::new(vec![0.9f32, 0.2, 0.4]);
+        let row = crate::runtime::modeled_predict(1, &stale, &input, 4).unwrap();
+        let served = Prediction::from_row(&row);
+        probe
+            .on_response(&record(1, served.class as u32), &input, &served, meta(), &mut compute)
+            .unwrap();
+        let r = &probe.log().records()[0];
+        assert!(r.delta.unwrap() > 1e-3, "sign-flipped params must diverge");
+    }
+
+    #[test]
+    fn probe_disabled_records_ages_only() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let mut probe = StalenessProbe::new(spec(), false);
+        probe.set_master(4, &[0.0; 12]);
+        let input = Arc::new(vec![0.1f32, 0.2, 0.3]);
+        let served = Prediction {
+            class: 1,
+            confidence: 1.0,
+            probs: vec![0.0, 1.0, 0.0, 0.0],
+        };
+        probe
+            .on_response(&record(7, 1), &input, &served, meta(), &mut compute)
+            .unwrap();
+        let r = &probe.log().records()[0];
+        assert_eq!(r.delta, None);
+        assert_eq!(r.fresh_class, None);
+        assert_eq!(r.age_iters(), 2);
+    }
+
+    #[test]
+    fn memo_resets_when_the_master_window_advances() {
+        let mut compute = ModeledCompute { param_count: 12 };
+        let p1: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        let p2: Vec<f32> = (0..12).map(|i| -(i as f32) * 0.1).collect();
+        let mut probe = StalenessProbe::new(spec(), true);
+        let input = Arc::new(vec![0.5f32, 0.5, 0.5]);
+        let served = {
+            let row = crate::runtime::modeled_predict(1, &p1, &input, 4).unwrap();
+            Prediction::from_row(&row)
+        };
+        probe.set_master(1, &p1);
+        probe
+            .on_response(&record(1, served.class as u32), &input, &served, meta(), &mut compute)
+            .unwrap();
+        assert!(probe.log().records()[0].delta.unwrap() < 1e-6);
+        // New window with different live params: the memo must not serve
+        // the old fresh row.
+        probe.set_master(2, &p2);
+        probe
+            .on_response(&record(2, served.class as u32), &input, &served, meta(), &mut compute)
+            .unwrap();
+        assert!(probe.log().records()[1].delta.unwrap() > 1e-3);
+    }
+}

@@ -1,0 +1,147 @@
+//! When does the live master push a snapshot to the serving tier?
+//!
+//! Two triggers, combinable: a fixed cadence (every k iterations — the
+//! predictable freshness floor), and an error-improvement trigger (the
+//! tracker's test error beat the best-yet-published model by δ — publish
+//! good models early, skip publishing plateau noise).  The cadence is
+//! checked first so a run with both configured attributes each
+//! publication to one deterministic cause.
+
+use crate::serve::SnapshotId;
+
+/// Why a snapshot was published.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishTrigger {
+    /// The iteration-0 parameters the run starts serving from.
+    Initial,
+    /// The every-k-iterations cadence came due.
+    Cadence,
+    /// Tracked test error improved on the best published model by ≥ δ.
+    ErrorImprovement,
+}
+
+impl PublishTrigger {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Initial => "initial",
+            Self::Cadence => "cadence",
+            Self::ErrorImprovement => "error",
+        }
+    }
+}
+
+/// Publication decision knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PublicationPolicy {
+    /// Publish every k iterations (0 disables the cadence trigger).
+    pub every: u64,
+    /// Publish when the tracked test error improves on the best published
+    /// model by at least this much (0.0 disables; requires the training
+    /// run to track test error at all).
+    pub min_improvement: f64,
+}
+
+impl PublicationPolicy {
+    /// Cadence-only policy (the common `--publish-every k` shape).
+    pub fn every(k: u64) -> Self {
+        Self {
+            every: k,
+            min_improvement: 0.0,
+        }
+    }
+
+    /// Decide at an iteration boundary.  `best_published_error` is the
+    /// lowest tracked error among published snapshots so far (`None`
+    /// until an error-triggered or error-observed publication happened —
+    /// the first tracked error then always counts as an improvement).
+    pub fn decide(
+        &self,
+        iteration: u64,
+        last_published_iteration: u64,
+        test_error: Option<f64>,
+        best_published_error: Option<f64>,
+    ) -> Option<PublishTrigger> {
+        if self.every > 0 && iteration.saturating_sub(last_published_iteration) >= self.every {
+            return Some(PublishTrigger::Cadence);
+        }
+        if self.min_improvement > 0.0 {
+            if let Some(err) = test_error {
+                let improved = match best_published_error {
+                    Some(best) => best - err >= self.min_improvement,
+                    None => true,
+                };
+                if improved {
+                    return Some(PublishTrigger::ErrorImprovement);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// One publication event in a co-simulation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PublicationRecord {
+    /// Version assigned by the registry.
+    pub snapshot: SnapshotId,
+    /// Training iteration the parameters captured.
+    pub iteration: u64,
+    /// Virtual publish time (ms).
+    pub t_ms: f64,
+    pub trigger: PublishTrigger,
+    /// Versions traffic-driven GC reclaimed at this publication.
+    pub evicted: Vec<SnapshotId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_fires_every_k() {
+        let p = PublicationPolicy::every(5);
+        assert_eq!(p.decide(4, 0, None, None), None);
+        assert_eq!(p.decide(5, 0, None, None), Some(PublishTrigger::Cadence));
+        assert_eq!(p.decide(9, 5, None, None), None);
+        assert_eq!(p.decide(10, 5, None, None), Some(PublishTrigger::Cadence));
+    }
+
+    #[test]
+    fn zero_cadence_never_fires() {
+        let p = PublicationPolicy::every(0);
+        assert_eq!(p.decide(1_000, 0, None, None), None);
+    }
+
+    #[test]
+    fn error_trigger_requires_delta_improvement() {
+        let p = PublicationPolicy {
+            every: 0,
+            min_improvement: 0.05,
+        };
+        // No tracked error → nothing to trigger on.
+        assert_eq!(p.decide(3, 0, None, None), None);
+        // First tracked error beats "nothing published yet".
+        assert_eq!(
+            p.decide(3, 0, Some(0.9), None),
+            Some(PublishTrigger::ErrorImprovement)
+        );
+        // 0.9 → 0.87 is under δ; 0.9 → 0.8 clears it.
+        assert_eq!(p.decide(4, 3, Some(0.87), Some(0.9)), None);
+        assert_eq!(
+            p.decide(5, 3, Some(0.8), Some(0.9)),
+            Some(PublishTrigger::ErrorImprovement)
+        );
+    }
+
+    #[test]
+    fn cadence_wins_attribution_when_both_fire() {
+        let p = PublicationPolicy {
+            every: 2,
+            min_improvement: 0.01,
+        };
+        assert_eq!(
+            p.decide(2, 0, Some(0.5), Some(0.9)),
+            Some(PublishTrigger::Cadence)
+        );
+    }
+}

@@ -17,13 +17,18 @@
 //! is the [`serve`] subsystem: a snapshot registry fed by research
 //! closures, admission + micro-batching over the same compiled artifacts,
 //! an LRU prediction cache, and a simulated open-loop request fleet.
+//! [`cosim`] couples the two pillars on one shared virtual clock: the
+//! live master publishes snapshots mid-traffic (hot swap with
+//! answer-consistency guarantees and traffic-driven registry GC) while a
+//! staleness probe measures how far served answers lag the master.
 //!
 //! Layer map (see `DESIGN.md`):
 //! * L1/L2 — `python/compile/` (build time only; never on the run path).
 //! * L3 — this crate: [`coordinator`] (master server), [`client`]
 //!   (simulated fleet), [`data`] (data server), [`allocation`]
 //!   (pie-cutter), [`params`] (optimizers), [`runtime`] (PJRT engine),
-//!   [`serve`] (prediction serving), plus the from-scratch substrates
+//!   [`serve`] (prediction serving), [`cosim`] (serve × train
+//!   co-simulation), plus the from-scratch substrates
 //!   [`json`], [`rng`], [`netsim`], [`metrics`], [`cli`], [`bench`],
 //!   [`testing`].
 
@@ -32,6 +37,7 @@ pub mod bench;
 pub mod cli;
 pub mod client;
 pub mod coordinator;
+pub mod cosim;
 pub mod data;
 pub mod json;
 pub mod metrics;

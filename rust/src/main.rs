@@ -4,20 +4,23 @@
 //!   train      run a distributed-SGD training simulation (real gradients)
 //!   scale      run the Fig-4 style coordination sweep (modeled compute)
 //!   serve-sim  run a prediction-serving simulation under request load
+//!   cosim      co-simulate training + serving on one shared clock
 //!   inspect    print manifest/model info
 //!   closure    save/load round-trip check on a research closure
 //!
 //! Example:
 //!   mlitb train --model mnist_conv --nodes 4 --iters 50 --track-every 10
 //!   mlitb serve-sim --clients 16 --rate 8 --duration 20 --link mixed
+//!   mlitb cosim --publish-every 5 --shards 2
 
 use mlitb::cli::Args;
 use mlitb::client::DeviceClass;
 use mlitb::coordinator::ReducePolicy;
+use mlitb::cosim::{run_cosim, CosimConfig, PublicationPolicy};
 use mlitb::model::{init_params, Manifest, ModelSpec, ResearchClosure};
 use mlitb::netsim::LinkProfile;
 use mlitb::params::OptimizerKind;
-use mlitb::runtime::{Compute, Engine, ModeledCompute};
+use mlitb::runtime::{Compute, DriftingCompute, Engine, ModeledCompute};
 use mlitb::serve::{
     demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
     ServeReport, ServeSim, ServerProfile, SnapshotRegistry,
@@ -35,6 +38,7 @@ fn main() {
         "train" => cmd_train(&args),
         "scale" => cmd_scale(&args),
         "serve-sim" => cmd_serve_sim(&args),
+        "cosim" => cmd_cosim(&args),
         "inspect" => cmd_inspect(&args),
         "closure" => cmd_closure(&args),
         _ => {
@@ -51,7 +55,7 @@ fn main() {
 fn print_help() {
     println!(
         "mlitb {} — Machine Learning in the Browser, reproduced in Rust+JAX\n\n\
-         USAGE: mlitb <train|scale|serve-sim|inspect|closure> [options]\n\n\
+         USAGE: mlitb <train|scale|serve-sim|cosim|inspect|closure> [options]\n\n\
          train:   --model <name> --nodes N --iters N --t-secs F --lr F\n\
                   --optimizer sgd|momentum|adagrad|rmsprop --policy sync|async|partial:<f>\n\
                   --track-every N --train-size N --test-size N --power-scale F\n\
@@ -62,6 +66,11 @@ fn print_help() {
                   --max-wait F --queue-depth N --cache N --input-pool N\n\
                   --shards N --router rr|jsq|affinity --no-coalesce\n\
                   --autotune --jitter F --seed N --csv <path>\n\
+         cosim:   --model <name> --nodes N --iters N --t-secs F --track-every N\n\
+                  --train-size N --test-size N --publish-every K --publish-delta F\n\
+                  --retain N --no-delta --clients N --rate F --link <profile>\n\
+                  --shards N --router rr|jsq|affinity --batch N --queue-depth N\n\
+                  --cache N --input-pool N --seed N --csv <path>\n\
          inspect: [--model <name>]\n\
          closure: --model <name> --out <path>",
         mlitb::VERSION
@@ -165,6 +174,29 @@ fn cmd_scale(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Request-fleet client groups for one link-profile argument (`mixed`
+/// splits the fleet across lan/wifi/cellular like the paper's volunteer
+/// population; anything else is a homogeneous group).
+fn client_groups(link: &str, clients: usize, rate: f64) -> Result<Vec<ClientSpec>, String> {
+    Ok(match link {
+        "mixed" => {
+            let lan = clients / 3;
+            let wifi = clients / 3;
+            let cellular = clients - lan - wifi;
+            vec![
+                ClientSpec { link: LinkProfile::Lan, rate_rps: rate, count: lan },
+                ClientSpec { link: LinkProfile::Wifi, rate_rps: rate, count: wifi },
+                ClientSpec { link: LinkProfile::Cellular, rate_rps: rate, count: cellular },
+            ]
+        }
+        other => vec![ClientSpec {
+            link: LinkProfile::parse(other)?,
+            rate_rps: rate,
+            count: clients,
+        }],
+    })
+}
+
 /// Artifacts manifest path, if one exists on disk.
 fn manifest_on_disk() -> Option<std::path::PathBuf> {
     let dir = std::env::var("MLITB_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -212,23 +244,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     // Request fleet.
     let clients = args.get_usize("clients", 16)?;
     let rate = args.get_f64("rate", 8.0)?;
-    let groups = match args.get_or("link", "mixed") {
-        "mixed" => {
-            let lan = clients / 3;
-            let wifi = clients / 3;
-            let cellular = clients - lan - wifi;
-            vec![
-                ClientSpec { link: LinkProfile::Lan, rate_rps: rate, count: lan },
-                ClientSpec { link: LinkProfile::Wifi, rate_rps: rate, count: wifi },
-                ClientSpec { link: LinkProfile::Cellular, rate_rps: rate, count: cellular },
-            ]
-        }
-        other => vec![ClientSpec {
-            link: LinkProfile::parse(other)?,
-            rate_rps: rate,
-            count: clients,
-        }],
-    };
+    let groups = client_groups(args.get_or("link", "mixed"), clients, rate)?;
 
     let largest = spec
         .micro_batches
@@ -264,6 +280,8 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
             ..ServerProfile::default()
         },
         router,
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
         cache_capacity: args.get_usize("cache", 1024)?,
         response_bytes: 256,
     };
@@ -331,7 +349,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
             "per-shard stats",
             &[
                 "shard", "routed", "completed", "shed", "hits", "coalesced", "batches",
-                "mean batch", "wait ms",
+                "mean batch", "batch<=", "wait ms",
             ],
         );
         for s in &report.per_shard {
@@ -344,6 +362,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
                 s.coalesced.to_string(),
                 s.batches.to_string(),
                 format!("{:.1}", s.mean_batch()),
+                s.max_batch.to_string(),
                 format!("{:.2}", s.max_wait_ms),
             ]);
         }
@@ -374,6 +393,184 @@ fn run_serve(
     ServeSim::new(cfg, registry, compute)
         .run()
         .map_err(|e| e.to_string())
+}
+
+/// Co-simulate training and serving on one shared virtual clock: the
+/// master publishes snapshots mid-traffic (every k iterations and/or on
+/// test-error improvement), the router hot-swaps versions with
+/// answer-consistency guarantees, and the staleness log correlates each
+/// served request with the age of the snapshot that answered it.
+fn cmd_cosim(args: &Args) -> Result<(), String> {
+    let spec = serve_spec(args)?;
+    let seed = args.get_u64("seed", 1)?;
+    let iters = args.get_u64("iters", 20)?;
+    let nodes = args.get_usize("nodes", 4)?;
+
+    let mut train = SimConfig::paper_scaling(nodes, &spec);
+    train.iterations = iters;
+    train.train_size = args.get_usize("train-size", 2_000)?;
+    train.test_size = args.get_usize("test-size", 512)?;
+    train.track_every = args.get_u64("track-every", 5)?;
+    train.power_scale = args.get_f64("power-scale", 1.0)?;
+    train.seed = seed;
+    train.master.iter_duration_s = args.get_f64("t-secs", 4.0)?;
+    train.master.capacity = args.get_usize("capacity", 3000)?;
+
+    let clients = args.get_usize("clients", 8)?;
+    let rate = args.get_f64("rate", 4.0)?;
+    let horizon = iters as f64 * train.master.iter_duration_s;
+    let largest = spec
+        .micro_batches
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(spec.batch_size);
+    let serve = ServeConfig {
+        fleet: FleetConfig {
+            groups: client_groups(args.get_or("link", "lan"), clients, rate)?,
+            duration_s: args.get_f64("duration", horizon)?,
+            input_pool: args.get_usize("input-pool", 200)?,
+            seed: seed ^ 0xC0517,
+        },
+        policy: BatchPolicy {
+            max_batch: args.get_usize("batch", largest)?,
+            max_wait_ms: args.get_f64("max-wait", 5.0)?,
+            queue_depth: args.get_usize("queue-depth", 256)?,
+        },
+        server: ServerProfile::default(),
+        router: RouterConfig {
+            shards: args.get_usize("shards", 2)?.max(1),
+            policy: RoutingPolicy::parse(args.get_or("router", "jsq"))?,
+            coalesce: !args.flag("no-coalesce"),
+            autotune: args.flag("autotune"),
+            window_ms: 1_000.0,
+        },
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
+        cache_capacity: args.get_usize("cache", 1024)?,
+        response_bytes: 256,
+    };
+    let cfg = CosimConfig {
+        train,
+        serve,
+        publish: PublicationPolicy {
+            every: args.get_u64("publish-every", 5)?,
+            min_improvement: args.get_f64("publish-delta", 0.0)?,
+        },
+        retain: args.get_usize("retain", 4)?,
+        measure_delta: !args.flag("no-delta"),
+    };
+    println!(
+        "cosim {}: {} trainer nodes × {} iters (T={}s) + {} request clients at {:.1} rps \
+         over {} shard(s); publish every {} iter(s), delta {}, retain {}",
+        spec.name,
+        nodes,
+        iters,
+        cfg.train.master.iter_duration_s,
+        clients,
+        rate,
+        cfg.serve.router.shards,
+        cfg.publish.every,
+        cfg.publish.min_improvement,
+        cfg.retain,
+    );
+
+    // Training runs on the drifting modeled backend (parameters actually
+    // move, so snapshot staleness is measurable); serving and the probe
+    // share the deterministic modeled predictor.
+    let mut train_compute = DriftingCompute { param_count: spec.param_count };
+    let mut serve_compute = ModeledCompute { param_count: spec.param_count };
+    let report = run_cosim(&cfg, &spec, &mut train_compute, &mut serve_compute)
+        .map_err(|e| e.to_string())?;
+
+    let mut pub_table = mlitb::metrics::Table::new(
+        "publications",
+        &["version", "iteration", "t (s)", "trigger", "gc evicted"],
+    );
+    for p in &report.publications {
+        pub_table.row(vec![
+            format!("v{}", p.snapshot),
+            p.iteration.to_string(),
+            format!("{:.1}", p.t_ms / 1000.0),
+            p.trigger.name().to_string(),
+            if p.evicted.is_empty() {
+                "-".into()
+            } else {
+                p.evicted
+                    .iter()
+                    .map(|v| format!("v{v}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            },
+        ]);
+    }
+    pub_table.print();
+
+    let age_iters = report.staleness.age_iters_summary();
+    let age_ms = report.staleness.age_ms_summary();
+    let lat = report.serve.latency();
+    let fmt = |v: f64| if v.is_finite() { format!("{v:.2}") } else { "n/a".into() };
+    let mut table = mlitb::metrics::Table::new(
+        "cosim results — staleness beside latency",
+        &["metric", "p50", "p95", "p99", "mean"],
+    );
+    table.row(vec![
+        "snapshot age (iters)".into(),
+        fmt(age_iters.median()),
+        fmt(age_iters.p95()),
+        fmt(age_iters.quantile(0.99)),
+        fmt(age_iters.mean()),
+    ]);
+    table.row(vec![
+        "snapshot age (ms)".into(),
+        fmt(age_ms.median()),
+        fmt(age_ms.p95()),
+        fmt(age_ms.quantile(0.99)),
+        fmt(age_ms.mean()),
+    ]);
+    table.row(vec![
+        "latency (ms)".into(),
+        fmt(lat.median()),
+        fmt(lat.p95()),
+        fmt(lat.quantile(0.99)),
+        fmt(lat.mean()),
+    ]);
+    if cfg.measure_delta {
+        let delta = report.staleness.delta_summary();
+        table.row(vec![
+            "prediction delta (L1)".into(),
+            fmt(delta.median()),
+            fmt(delta.p95()),
+            fmt(delta.quantile(0.99)),
+            fmt(delta.mean()),
+        ]);
+    }
+    table.print();
+
+    let mut counts = mlitb::metrics::Table::new("traffic by version", &["version", "requests"]);
+    for (version, n) in report.staleness.by_snapshot() {
+        counts.row(vec![format!("v{version}"), n.to_string()]);
+    }
+    counts.print();
+
+    if cfg.measure_delta {
+        println!(
+            "stale-class rate: {:.4} (served argmax the live master would flip)",
+            report.staleness.stale_class_rate()
+        );
+    }
+    println!("train: {}", report.train.summary());
+    println!("serve: {}", report.serve.summary());
+    println!("done:  {}", report.summary());
+
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.staleness.to_csv()).map_err(|e| e.to_string())?;
+        println!("wrote staleness log to {path}");
+        let req_path = format!("{path}.requests");
+        std::fs::write(&req_path, report.serve.log.to_csv()).map_err(|e| e.to_string())?;
+        println!("wrote request log to {req_path}");
+    }
+    Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> Result<(), String> {

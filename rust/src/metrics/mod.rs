@@ -1,11 +1,14 @@
-//! Metrics substrate: counters, per-iteration timelines, summary stats and
-//! CSV/markdown table output — the instrumentation behind Figs 4/5/8.
+//! Metrics substrate: counters, per-iteration timelines, per-request and
+//! staleness logs, summary stats and CSV/markdown table output — the
+//! instrumentation behind Figs 4/5/8 and the serving/cosim frontiers.
 
 mod series;
+mod staleness;
 mod stats;
 mod table;
 
 pub use series::{IterationRecord, RejectionRecord, RequestLog, RequestRecord, Timeline};
+pub use staleness::{StalenessLog, StalenessRecord};
 pub use stats::Summary;
 pub use table::{Cell, Table};
 

@@ -137,6 +137,9 @@ pub struct RequestRecord {
     pub latency_ms: f64,
     /// Serving shard that answered (0 on a single-endpoint run).
     pub shard: u32,
+    /// Snapshot version that answered — under a live-training hot swap
+    /// the log shows exactly which parameters served each request.
+    pub snapshot: u64,
     /// Requests in the executed batch (0 for cache hits and coalesced
     /// waiters — neither occupies an executed batch slot).
     pub batch_size: u32,
@@ -231,17 +234,18 @@ impl RequestLog {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "id,client,sent_ms,done_ms,latency_ms,shard,batch_size,cache_hit,coalesced,class\n",
+            "id,client,sent_ms,done_ms,latency_ms,shard,snapshot,batch_size,cache_hit,coalesced,class\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.3},{:.3},{:.3},{},{},{},{},{}\n",
+                "{},{},{:.3},{:.3},{:.3},{},{},{},{},{},{}\n",
                 r.id,
                 r.client,
                 r.sent_ms,
                 r.done_ms,
                 r.latency_ms,
                 r.shard,
+                r.snapshot,
                 r.batch_size,
                 r.cache_hit as u8,
                 r.coalesced as u8,
@@ -331,6 +335,7 @@ mod tests {
             done_ms: done,
             latency_ms: done - sent,
             shard: 2,
+            snapshot: 5,
             batch_size: if hit { 0 } else { 8 },
             cache_hit: hit,
             coalesced: false,
@@ -360,7 +365,7 @@ mod tests {
         log.push(req(7, 1.0, 3.5, true));
         let csv = log.to_csv();
         assert!(csv.starts_with("id,client,"));
-        assert!(csv.contains("7,1,1.000,3.500,2.500,2,0,1,0,3"));
+        assert!(csv.contains("7,1,1.000,3.500,2.500,2,5,0,1,0,3"));
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Staleness instrumentation for the serve × train co-simulation.
+//!
+//! When a live master publishes snapshots mid-traffic, every served
+//! answer is computed against parameters some number of iterations (and
+//! virtual milliseconds) behind the master's current state.  The
+//! [`StalenessLog`] correlates each served request with the age of the
+//! snapshot that answered it and — when the probe is enabled — the
+//! prediction delta against the live master parameters: the L1 distance
+//! between the served probability row and the row the freshest
+//! parameters would have produced, plus whether the argmax class flipped.
+//! This is the raw series behind the `fig_cosim` staleness-vs-latency
+//! frontier.
+
+use std::collections::BTreeMap;
+
+use super::stats::Summary;
+
+/// One served request's staleness measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StalenessRecord {
+    /// Request id (joins against [`super::RequestRecord`]).
+    pub id: u64,
+    pub client: u32,
+    /// Client receive time (virtual ms).
+    pub done_ms: f64,
+    /// Snapshot version that answered.
+    pub snapshot: u64,
+    /// Training iteration the snapshot captured.
+    pub snapshot_iteration: u64,
+    /// Master iteration live while the request was served.
+    pub master_iteration: u64,
+    /// Virtual ms between the snapshot's publication and the response.
+    pub age_ms: f64,
+    /// L1 distance between served and fresh probability rows (`None`
+    /// when the probe was disabled).
+    pub delta: Option<f64>,
+    /// Argmax class under the live master parameters (`None` when the
+    /// probe was disabled).
+    pub fresh_class: Option<u32>,
+    /// Argmax class actually served.
+    pub class: u32,
+}
+
+impl StalenessRecord {
+    /// Snapshot age in training iterations at serve time.
+    pub fn age_iters(&self) -> u64 {
+        self.master_iteration.saturating_sub(self.snapshot_iteration)
+    }
+
+    /// Did staleness flip the served argmax class?  `None` when the
+    /// probe was disabled.
+    pub fn class_changed(&self) -> Option<bool> {
+        self.fresh_class.map(|fresh| fresh != self.class)
+    }
+}
+
+/// Append-only per-request staleness series with summaries + CSV export.
+#[derive(Debug, Clone, Default)]
+pub struct StalenessLog {
+    records: Vec<StalenessRecord>,
+}
+
+impl StalenessLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StalenessRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[StalenessRecord] {
+        &self.records
+    }
+
+    /// Snapshot-age distribution in training iterations.
+    pub fn age_iters_summary(&self) -> Summary {
+        Summary::from(self.records.iter().map(|r| r.age_iters() as f64).collect())
+    }
+
+    /// Snapshot-age distribution in virtual milliseconds.
+    pub fn age_ms_summary(&self) -> Summary {
+        Summary::from(self.records.iter().map(|r| r.age_ms).collect())
+    }
+
+    /// Prediction-delta distribution over probed records (empty when the
+    /// probe was disabled).
+    pub fn delta_summary(&self) -> Summary {
+        Summary::from(self.records.iter().filter_map(|r| r.delta).collect())
+    }
+
+    /// Fraction of probed answers whose argmax class the live parameters
+    /// would have flipped (0 when nothing was probed).
+    pub fn stale_class_rate(&self) -> f64 {
+        let probed: Vec<bool> = self
+            .records
+            .iter()
+            .filter_map(StalenessRecord::class_changed)
+            .collect();
+        if probed.is_empty() {
+            return 0.0;
+        }
+        probed.iter().filter(|&&flipped| flipped).count() as f64 / probed.len() as f64
+    }
+
+    /// Requests answered per snapshot version (which versions actually
+    /// carried traffic — GC should be reclaiming the zeros).
+    pub fn by_snapshot(&self) -> BTreeMap<u64, u64> {
+        let mut by = BTreeMap::new();
+        for r in &self.records {
+            *by.entry(r.snapshot).or_insert(0) += 1;
+        }
+        by
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "id,client,done_ms,snapshot,snapshot_iteration,master_iteration,age_iters,age_ms,delta,fresh_class,class\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.3},{},{},{},{},{:.3},{},{},{}\n",
+                r.id,
+                r.client,
+                r.done_ms,
+                r.snapshot,
+                r.snapshot_iteration,
+                r.master_iteration,
+                r.age_iters(),
+                r.age_ms,
+                r.delta.map_or(String::new(), |d| format!("{d:.6}")),
+                r.fresh_class.map_or(String::new(), |c| c.to_string()),
+                r.class,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, snap: u64, snap_iter: u64, master_iter: u64, delta: Option<f64>) -> StalenessRecord {
+        StalenessRecord {
+            id,
+            client: 0,
+            done_ms: id as f64 * 10.0,
+            snapshot: snap,
+            snapshot_iteration: snap_iter,
+            master_iteration: master_iter,
+            age_ms: (master_iter - snap_iter) as f64 * 4_000.0,
+            delta,
+            fresh_class: delta.map(|d| if d > 0.5 { 1 } else { 0 }),
+            class: 0,
+        }
+    }
+
+    #[test]
+    fn ages_and_summaries() {
+        let mut log = StalenessLog::new();
+        log.push(rec(1, 1, 0, 0, Some(0.0)));
+        log.push(rec(2, 1, 0, 2, Some(0.2)));
+        log.push(rec(3, 2, 2, 6, Some(0.8)));
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.records()[2].age_iters(), 4);
+        let ages = log.age_iters_summary();
+        assert_eq!(ages.min(), 0.0);
+        assert_eq!(ages.max(), 4.0);
+        assert_eq!(log.age_ms_summary().max(), 16_000.0);
+        assert!((log.delta_summary().mean() - (1.0 / 3.0)).abs() < 1e-9);
+        // One of three probed answers flipped class.
+        assert!((log.stale_class_rate() - (1.0 / 3.0)).abs() < 1e-9);
+        assert_eq!(log.by_snapshot().get(&1), Some(&2));
+        assert_eq!(log.by_snapshot().get(&2), Some(&1));
+    }
+
+    #[test]
+    fn unprobed_records_have_no_delta() {
+        let mut log = StalenessLog::new();
+        log.push(rec(1, 1, 0, 3, None));
+        assert_eq!(log.records()[0].class_changed(), None);
+        assert!(log.delta_summary().is_empty());
+        assert_eq!(log.stale_class_rate(), 0.0);
+        // CSV leaves the probe columns empty, ages intact.
+        let csv = log.to_csv();
+        assert!(csv.starts_with("id,client,done_ms,snapshot,"));
+        assert!(csv.contains("1,0,10.000,1,0,3,3,12000.000,,,0"));
+    }
+
+    #[test]
+    fn csv_has_one_line_per_record() {
+        let mut log = StalenessLog::new();
+        for i in 0..5 {
+            log.push(rec(i, 1, 0, 1, Some(0.1)));
+        }
+        assert_eq!(log.to_csv().lines().count(), 6);
+    }
+}

@@ -144,34 +144,143 @@ impl Compute for ModeledCompute {
         images: &[f32],
         classes: usize,
     ) -> Result<Vec<f32>> {
-        if batch == 0 || classes == 0 {
-            return Ok(Vec::new());
-        }
-        if images.len() % batch != 0 {
-            bail!("images len {} not divisible by batch {batch}", images.len());
-        }
-        let input_len = images.len() / batch;
-        let mut out = Vec::with_capacity(batch * classes);
-        for example in images.chunks_exact(input_len) {
-            // Per-class score: dot of the pixels with a class-strided view
-            // of the parameter vector — cheap, deterministic, and distinct
-            // per (input, snapshot) pair.
-            let mut scores = vec![0.0f64; classes];
-            if !params.is_empty() {
-                for (c, s) in scores.iter_mut().enumerate() {
-                    let mut acc = 0.0f64;
-                    for (i, &x) in example.iter().enumerate() {
-                        acc += x as f64 * params[(i + c * 131) % params.len()] as f64;
-                    }
-                    *s = acc;
+        modeled_predict(batch, params, images, classes)
+    }
+
+    fn is_real(&self) -> bool {
+        false
+    }
+}
+
+/// The deterministic linear-softmax predictor both modeled backends
+/// share.  Per-example pure, so batch composition cannot change a row.
+pub fn modeled_predict(
+    batch: usize,
+    params: &[f32],
+    images: &[f32],
+    classes: usize,
+) -> Result<Vec<f32>> {
+    if batch == 0 || classes == 0 {
+        return Ok(Vec::new());
+    }
+    if images.len() % batch != 0 {
+        bail!("images len {} not divisible by batch {batch}", images.len());
+    }
+    let input_len = images.len() / batch;
+    let mut out = Vec::with_capacity(batch * classes);
+    for example in images.chunks_exact(input_len) {
+        // Per-class score: dot of the pixels with a class-strided view
+        // of the parameter vector — cheap, deterministic, and distinct
+        // per (input, snapshot) pair.
+        let mut scores = vec![0.0f64; classes];
+        if !params.is_empty() {
+            for (c, s) in scores.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for (i, &x) in example.iter().enumerate() {
+                    acc += x as f64 * params[(i + c * 131) % params.len()] as f64;
                 }
+                *s = acc;
             }
-            let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let exps: Vec<f64> = scores.iter().map(|s| (s - max).exp()).collect();
-            let z: f64 = exps.iter().sum();
-            out.extend(exps.iter().map(|&e| (e / z) as f32));
         }
-        Ok(out)
+        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|s| (s - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        out.extend(exps.iter().map(|&e| (e / z) as f32));
+    }
+    Ok(out)
+}
+
+/// Modeled compute whose gradients *move the parameters*: each call
+/// reports the gradient of ½‖p − h‖² toward a fixed pseudo-random target
+/// vector `h`, so the master's optimizer produces a deterministic
+/// parameter trajectory and a decreasing test error.
+///
+/// [`ModeledCompute`] returns zero gradients — right for coordination
+/// sweeps, useless for the co-simulation, whose whole point is that the
+/// live master *drifts away* from published snapshots.  Training against
+/// this backend makes snapshot staleness measurable (prediction deltas,
+/// error-triggered publication) without the PJRT feature; the trajectory
+/// is seedless and identical across runs, keeping cosim byte-determinism.
+#[derive(Debug, Clone)]
+pub struct DriftingCompute {
+    pub param_count: usize,
+}
+
+impl DriftingCompute {
+    /// The fixed target for parameter index `i`, in [-0.5, 0.5] —
+    /// FNV-mixed so neighboring indices decorrelate.
+    fn target(i: usize) -> f32 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in (i as u64).to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        (h >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+    }
+
+    /// Mean |p − h| over the vector — the drift "loss" (and error proxy).
+    fn mean_gap(&self, params: &[f32]) -> f64 {
+        if params.is_empty() {
+            return 0.0;
+        }
+        params
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p - Self::target(i)).abs() as f64)
+            .sum::<f64>()
+            / params.len() as f64
+    }
+}
+
+impl Compute for DriftingCompute {
+    fn grad_batch(
+        &mut self,
+        _model: &str,
+        _batch: usize,
+        params: &[f32],
+        _images: &[f32],
+        labels: &[i32],
+    ) -> Result<GradResult> {
+        let n = labels.len() as f32;
+        let grads: Vec<f32> = params
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| n * (p - Self::target(i)))
+            .collect();
+        Ok(GradResult {
+            grads,
+            loss_sum: self.mean_gap(params) as f32 * n,
+            correct: n * (1.0 - self.mean_gap(params).min(1.0)) as f32,
+        })
+    }
+
+    fn eval_batch(
+        &mut self,
+        _model: &str,
+        _batch: usize,
+        params: &[f32],
+        _images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalResult> {
+        // Accuracy rises as the parameters approach the target, so the
+        // tracker's test error *decreases* over the run — exercising the
+        // cosim's error-triggered publication path.
+        let n = labels.len() as f32;
+        let gap = self.mean_gap(params).min(1.0);
+        Ok(EvalResult {
+            loss_sum: self.mean_gap(params) as f32 * n,
+            correct: n * (1.0 - gap) as f32,
+        })
+    }
+
+    fn predict_batch(
+        &mut self,
+        _model: &str,
+        batch: usize,
+        params: &[f32],
+        images: &[f32],
+        classes: usize,
+    ) -> Result<Vec<f32>> {
+        modeled_predict(batch, params, images, classes)
     }
 
     fn is_real(&self) -> bool {
@@ -208,6 +317,42 @@ mod tests {
             assert!(row.iter().all(|p| *p > 0.0));
         }
         assert_ne!(probs[..4], probs[4..], "distinct inputs, distinct probs");
+    }
+
+    #[test]
+    fn drifting_compute_moves_parameters_toward_its_target() {
+        let mut c = DriftingCompute { param_count: 4 };
+        let params = vec![0.0f32; 4];
+        let g = c.grad_batch("m", 2, &params, &[0.0; 4], &[0, 1]).unwrap();
+        assert_eq!(g.grads.len(), 4);
+        assert!(g.grads.iter().any(|&x| x != 0.0), "drift must be nonzero");
+        // One SGD step down the reported gradient shrinks the gap, and
+        // the eval error tracks it.
+        let stepped: Vec<f32> = params
+            .iter()
+            .zip(&g.grads)
+            .map(|(&p, &gr)| p - 0.1 * gr / 2.0)
+            .collect();
+        let e0 = c.eval_batch("m", 2, &params, &[0.0; 4], &[0, 1]).unwrap();
+        let e1 = c.eval_batch("m", 2, &stepped, &[0.0; 4], &[0, 1]).unwrap();
+        assert!(e1.correct > e0.correct, "error must decrease as params drift");
+        assert!(!c.is_real());
+        // Deterministic: same call, same gradient.
+        let g2 = c.grad_batch("m", 2, &params, &[0.0; 4], &[0, 1]).unwrap();
+        assert_eq!(g.grads, g2.grads);
+    }
+
+    #[test]
+    fn drifting_and_modeled_predict_agree() {
+        // Both modeled backends share one scorer: serving through either
+        // gives identical probability rows for identical params.
+        let params: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.1).collect();
+        let images = vec![0.3f32, 0.7, 0.1, 0.9, 0.2, 0.5];
+        let mut a = ModeledCompute { param_count: 12 };
+        let mut b = DriftingCompute { param_count: 12 };
+        let pa = a.predict_batch("m", 2, &params, &images, 4).unwrap();
+        let pb = b.predict_batch("m", 2, &params, &images, 4).unwrap();
+        assert_eq!(pa, pb);
     }
 
     #[test]

@@ -26,7 +26,7 @@ mod engine;
 mod engine;
 
 pub use batch::BatchBuilder;
-pub use compute::{Compute, ModeledCompute};
+pub use compute::{modeled_predict, Compute, DriftingCompute, ModeledCompute};
 pub use engine::Engine;
 
 /// Output of one gradient microbatch (sums over the batch — see L2 docs).

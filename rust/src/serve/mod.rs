@@ -22,19 +22,30 @@
 //! * [`RequestFleet`] — open-loop Poisson request generators over
 //!   heterogeneous `netsim` link profiles (Lan/Wifi/Cellular).
 //! * [`RoutingPolicy`] + [`RouterConfig`] — N replicated shard endpoints
-//!   (each its own queue + executor + cache) behind round-robin,
-//!   join-shortest-queue or input-key-affinity routing, with in-flight
-//!   request coalescing (duplicates dedupe before admission; one
-//!   computation, one cache fill, the answer fanned out to every waiter)
-//!   and per-shard batching autotune (`max_wait_ms` re-derived from the
-//!   observed admission rate).
-//! * [`ServeSim`] — the discrete-event driver binding the above; emits a
-//!   [`ServeReport`] with per-request latency percentiles, throughput,
-//!   shed attribution and per-shard stats via `metrics`.
+//!   (each its own queue + executor + cache; profiles may be mixed)
+//!   behind round-robin, join-shortest-queue (weighing outstanding work
+//!   in estimated *milliseconds*) or input-key-affinity routing, with
+//!   in-flight request coalescing (duplicates dedupe before admission;
+//!   one computation, one cache fill, the answer fanned out to every
+//!   waiter), router-level failover (a refused arrival re-offers to the
+//!   other shards; shed only when all refuse) and per-shard batching
+//!   autotune (`max_wait_ms` *and* `max_batch` re-derived from the
+//!   observed admission rate, the flush size snapped to a compiled
+//!   `predict_b{n}` variant).
+//! * [`ServeEngine`] + [`ServeSim`] — the discrete-event loop binding the
+//!   above.  The engine is incrementally pumpable to a virtual-time
+//!   horizon (what [`crate::cosim`] interleaves with training iterations;
+//!   requests are version-stamped at arrival, batches never mix
+//!   versions, and admitted requests hold registry reader pins so GC
+//!   can't evict a version with in-flight work); `ServeSim` wraps it for
+//!   serving-only runs and emits a [`ServeReport`] with per-request
+//!   latency percentiles, throughput, shed attribution and per-shard
+//!   stats via `metrics`.
 //!
-//! Entry points: the `mlitb serve-sim` CLI subcommand (`--shards`,
-//! `--router`), `benches/fig_serving.rs` (throughput/latency vs offered
-//! load), `benches/fig_routing.rs` (shards × routing policy × rate), and
+//! Entry points: the `mlitb serve-sim` and `mlitb cosim` CLI subcommands,
+//! `benches/fig_serving.rs` (throughput/latency vs offered load),
+//! `benches/fig_routing.rs` (shards × routing policy × rate),
+//! `benches/fig_cosim.rs` (staleness vs latency), and
 //! `examples/serving.rs`.
 
 mod cache;
@@ -49,9 +60,12 @@ pub use cache::{input_key, PredictionCache};
 pub use executor::{BatchExecutor, Prediction, ServerProfile};
 pub use loadgen::{ClientSpec, FleetConfig, RequestEvent, RequestFleet};
 pub use queue::{AdmissionQueue, BatchPolicy, PredictRequest};
-pub use registry::{Snapshot, SnapshotId, SnapshotRegistry};
-pub use router::{tuned_wait_ms, RateWindow, RouterConfig, RoutingPolicy, ShardStats};
-pub use sim::{ServeConfig, ServeReport, ServeSim};
+pub use registry::{Snapshot, SnapshotId, SnapshotMeta, SnapshotRegistry};
+pub use router::{
+    failover_order, tuned_max_batch, tuned_wait_ms, RateWindow, RouterConfig, RoutingPolicy,
+    Shard, ShardStats,
+};
+pub use sim::{NoopObserver, ServeConfig, ServeEngine, ServeObserver, ServeReport, ServeSim};
 
 use crate::model::{ModelSpec, TensorSpec};
 

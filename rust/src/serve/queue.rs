@@ -13,6 +13,8 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use super::registry::SnapshotId;
+
 /// One admitted prediction request waiting for a batch slot.
 #[derive(Debug, Clone)]
 pub struct PredictRequest {
@@ -27,6 +29,11 @@ pub struct PredictRequest {
     pub input: Arc<Vec<f32>>,
     /// Prediction-cache key (computed at admission).
     pub key: u64,
+    /// Snapshot version active when the request was admitted.  The
+    /// answer-consistency guarantee: the request is computed entirely
+    /// against this version, even if newer versions activate before its
+    /// batch flushes.
+    pub snapshot: SnapshotId,
 }
 
 /// Batching/admission knobs.
@@ -84,12 +91,40 @@ impl AdmissionQueue {
         self.policy.max_wait_ms = wait_ms.max(0.0);
     }
 
+    /// Retune the flush size (autotune picks a compiled variant from the
+    /// observed arrival rate).  Clamped to at least one.
+    pub fn set_max_batch(&mut self, max_batch: usize) {
+        self.policy.max_batch = max_batch.max(1);
+    }
+
+    /// Re-bound admission.  A depth of 0 closes the endpoint (drain mode:
+    /// every subsequent offer is shed).
+    pub fn set_queue_depth(&mut self, depth: usize) {
+        self.policy.queue_depth = depth;
+    }
+
+    /// Whether one more request would be admitted right now.  The router
+    /// probes this before committing an arrival to a shard, so failover
+    /// can try another endpoint instead of shedding.
+    pub fn can_admit(&self) -> bool {
+        self.pending.len() < self.policy.queue_depth
+    }
+
     pub fn len(&self) -> usize {
         self.pending.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Count a shed decided at the router level: every candidate shard
+    /// refused the arrival, and this (the originally routed) queue takes
+    /// the rejection on its books.  Keeps `rejected` the single shed
+    /// counter without constructing a request for a queue that cannot
+    /// take it.
+    pub fn note_shed(&mut self) {
+        self.rejected += 1;
     }
 
     /// Admit a request, or shed it when the queue is full.  Returns
@@ -127,9 +162,23 @@ impl AdmissionQueue {
         Some(ready.max(free_at))
     }
 
-    /// Pop up to `max_batch` requests, FIFO.
+    /// Pop up to `max_batch` requests, FIFO — stopping at a snapshot
+    /// boundary.  When a hot-swap lands mid-traffic the queue can hold
+    /// requests admitted under two versions; a flushed batch executes
+    /// against exactly one parameter vector, so the batch is cut where
+    /// the version changes (the newer requests flush next round).
     pub fn take_batch(&mut self) -> Vec<PredictRequest> {
-        let n = self.pending.len().min(self.policy.max_batch.max(1));
+        let max = self.policy.max_batch.max(1);
+        let Some(first) = self.pending.front() else {
+            return Vec::new();
+        };
+        let version = first.snapshot;
+        let n = self
+            .pending
+            .iter()
+            .take(max)
+            .take_while(|r| r.snapshot == version)
+            .count();
         self.pending.drain(..n).collect()
     }
 
@@ -147,6 +196,10 @@ mod tests {
     use super::*;
 
     fn req(id: u64, arrival_ms: f64) -> PredictRequest {
+        req_v(id, arrival_ms, 1)
+    }
+
+    fn req_v(id: u64, arrival_ms: f64, snapshot: SnapshotId) -> PredictRequest {
         PredictRequest {
             id,
             client: 0,
@@ -154,6 +207,7 @@ mod tests {
             arrival_ms,
             input: Arc::new(vec![0.0; 4]),
             key: id,
+            snapshot,
         }
     }
 
@@ -230,6 +284,63 @@ mod tests {
         assert_eq!(q.next_flush_at(0.0), Some(10.0), "no-wait flushes now");
         q.set_max_wait_ms(-3.0);
         assert_eq!(q.policy().max_wait_ms, 0.0, "negative clamps to zero");
+    }
+
+    #[test]
+    fn take_batch_never_mixes_snapshot_versions() {
+        // Hot-swap mid-traffic: v1 requests queued before the swap, v2
+        // after.  One flush must carry one version only — even when a
+        // full max_batch of mixed requests is pending.
+        let mut q = queue(4, 5.0, 16);
+        q.offer(req_v(1, 0.0, 1));
+        q.offer(req_v(2, 1.0, 1));
+        q.offer(req_v(3, 2.0, 2));
+        q.offer(req_v(4, 3.0, 2));
+        let b1 = q.take_batch();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(b1.iter().all(|r| r.snapshot == 1));
+        let b2 = q.take_batch();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(b2.iter().all(|r| r.snapshot == 2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn note_shed_counts_without_touching_the_queue() {
+        let mut q = queue(4, 5.0, 2);
+        q.offer(req(1, 0.0));
+        q.note_shed();
+        assert_eq!(q.rejected(), 1);
+        assert_eq!(q.admitted(), 1);
+        assert_eq!(q.len(), 1, "a router-level shed never enqueues");
+    }
+
+    #[test]
+    fn can_admit_mirrors_offer() {
+        let mut q = queue(4, 5.0, 2);
+        assert!(q.can_admit());
+        q.offer(req(1, 0.0));
+        q.offer(req(2, 0.0));
+        assert!(!q.can_admit(), "at depth: the probe must refuse");
+        q.take_batch();
+        assert!(q.can_admit());
+        q.set_queue_depth(0);
+        assert!(!q.can_admit(), "a drained endpoint admits nothing");
+    }
+
+    #[test]
+    fn retuned_max_batch_changes_flush_threshold() {
+        let mut q = queue(4, 50.0, 16);
+        q.offer(req(1, 10.0));
+        q.offer(req(2, 11.0));
+        // Partial under max_batch 4: waits for the 50 ms deadline.
+        assert_eq!(q.next_flush_at(0.0), Some(60.0));
+        q.set_max_batch(2);
+        // Now a full batch: flushes as soon as the executor allows.
+        assert_eq!(q.next_flush_at(0.0), Some(10.0));
+        assert_eq!(q.take_batch().len(), 2);
+        q.set_max_batch(0);
+        assert_eq!(q.policy().max_batch, 1, "zero clamps to one");
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //! assigns monotonically increasing version ids, and designates the
 //! *active* snapshot new prediction requests are served from.  Publishing
 //! activates the new version; `set_active` rolls back.
+//!
+//! **Traffic-driven GC.**  Under the co-simulation a live master publishes
+//! mid-traffic, so a retention policy alone is unsafe: a request admitted
+//! under version v must execute against v even if three newer versions
+//! land before its batch flushes.  Each admitted request takes a *reader
+//! pin* ([`SnapshotRegistry::pin_reader`]) released after its batch
+//! executes; [`SnapshotRegistry::gc_keep_latest`] evicts a version only
+//! when the retention policy *and* a zero reader count agree (the active
+//! snapshot is always kept too).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -17,6 +26,17 @@ use crate::model::{ModelSpec, ResearchClosure};
 
 /// Monotonic snapshot version (1-based; 0 is never assigned).
 pub type SnapshotId = u64;
+
+/// Copyable identity/provenance of a snapshot — what the serving path
+/// threads through records without holding a registry borrow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnapshotMeta {
+    pub id: SnapshotId,
+    /// Training iteration the parameters were captured at.
+    pub iteration: u64,
+    /// Virtual publish time (ms).
+    pub published_ms: f64,
+}
 
 /// One servable model version.
 #[derive(Debug, Clone)]
@@ -34,6 +54,17 @@ pub struct Snapshot {
     pub published_ms: f64,
 }
 
+impl Snapshot {
+    /// Copyable identity for records and observers.
+    pub fn meta(&self) -> SnapshotMeta {
+        SnapshotMeta {
+            id: self.id,
+            iteration: self.iteration,
+            published_ms: self.published_ms,
+        }
+    }
+}
+
 /// Versioned snapshot store for one served model.
 #[derive(Debug, Clone)]
 pub struct SnapshotRegistry {
@@ -41,6 +72,9 @@ pub struct SnapshotRegistry {
     next_id: SnapshotId,
     snapshots: BTreeMap<SnapshotId, Snapshot>,
     active: Option<SnapshotId>,
+    /// In-flight reader pins per version (admitted-but-not-yet-executed
+    /// requests); a pinned version survives retention GC.
+    readers: BTreeMap<SnapshotId, u64>,
 }
 
 impl SnapshotRegistry {
@@ -50,6 +84,7 @@ impl SnapshotRegistry {
             next_id: 1,
             snapshots: BTreeMap::new(),
             active: None,
+            readers: BTreeMap::new(),
         }
     }
 
@@ -141,14 +176,50 @@ impl SnapshotRegistry {
         self.snapshots.keys().copied().collect()
     }
 
-    /// Retention: keep the newest `keep` versions (the active snapshot is
-    /// always kept, even when older).  Returns the ids dropped.
+    // ------------------------------------------------- reader refcounts
+
+    /// Take a reader pin on a version (a request was admitted under it and
+    /// its batch has not executed yet).  A pinned version cannot be
+    /// GC-evicted.  Errors if the version is not resident.
+    pub fn pin_reader(&mut self, id: SnapshotId) -> Result<(), String> {
+        if !self.snapshots.contains_key(&id) {
+            return Err(format!("cannot pin snapshot v{id}: not in registry"));
+        }
+        *self.readers.entry(id).or_insert(0) += 1;
+        Ok(())
+    }
+
+    /// Release a reader pin (the request's batch executed).
+    pub fn unpin_reader(&mut self, id: SnapshotId) {
+        match self.readers.get_mut(&id) {
+            Some(n) if *n > 1 => *n -= 1,
+            Some(_) => {
+                self.readers.remove(&id);
+            }
+            None => debug_assert!(false, "unpin without pin on v{id}"),
+        }
+    }
+
+    /// Outstanding reader pins on one version.
+    pub fn reader_count(&self, id: SnapshotId) -> u64 {
+        self.readers.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Outstanding reader pins across all versions (0 once traffic drains).
+    pub fn total_readers(&self) -> u64 {
+        self.readers.values().sum()
+    }
+
+    /// Retention: keep the newest `keep` versions.  The active snapshot
+    /// and any version with outstanding reader pins are always kept — a
+    /// version is evicted only when the retention policy *and* zero
+    /// in-flight readers agree.  Returns the ids dropped.
     pub fn gc_keep_latest(&mut self, keep: usize) -> Vec<SnapshotId> {
         let ids = self.ids();
         let cutoff = ids.len().saturating_sub(keep);
         let mut dropped = Vec::new();
         for id in &ids[..cutoff] {
-            if Some(*id) == self.active {
+            if Some(*id) == self.active || self.reader_count(*id) > 0 {
                 continue;
             }
             self.snapshots.remove(id);
@@ -245,5 +316,49 @@ mod tests {
         assert_eq!(dropped, vec![2, 3]);
         assert_eq!(reg.ids(), vec![1, 4, 5]);
         assert_eq!(reg.active().unwrap().id, 1);
+    }
+
+    #[test]
+    fn gc_never_evicts_a_snapshot_with_inflight_readers() {
+        // The co-simulation acceptance criterion: hold a reader across a
+        // GC call and the pinned version must survive retention.
+        let mut reg = SnapshotRegistry::new(spec());
+        for i in 0..4 {
+            reg.publish_params(vec![i as f32; 4], i, String::new(), i as f64)
+                .unwrap();
+        }
+        reg.pin_reader(1).unwrap();
+        reg.pin_reader(1).unwrap();
+        assert_eq!(reg.reader_count(1), 2);
+        let dropped = reg.gc_keep_latest(1);
+        assert_eq!(dropped, vec![2, 3], "pinned v1 and active v4 survive");
+        assert!(reg.get(1).is_some());
+        // One release is not enough — the second reader still holds it.
+        reg.unpin_reader(1);
+        assert!(reg.gc_keep_latest(1).is_empty());
+        // Last reader gone: retention finally wins.
+        reg.unpin_reader(1);
+        assert_eq!(reg.total_readers(), 0);
+        assert_eq!(reg.gc_keep_latest(1), vec![1]);
+        assert_eq!(reg.ids(), vec![4]);
+    }
+
+    #[test]
+    fn pin_requires_a_resident_version() {
+        let mut reg = SnapshotRegistry::new(spec());
+        assert!(reg.pin_reader(1).is_err());
+        reg.publish_params(vec![0.0; 4], 0, String::new(), 0.0).unwrap();
+        assert!(reg.pin_reader(1).is_ok());
+        assert_eq!(reg.reader_count(2), 0);
+    }
+
+    #[test]
+    fn meta_mirrors_snapshot_identity() {
+        let mut reg = SnapshotRegistry::new(spec());
+        reg.publish_params(vec![0.0; 4], 7, "m".into(), 3.5).unwrap();
+        let m = reg.active().unwrap().meta();
+        assert_eq!(m.id, 1);
+        assert_eq!(m.iteration, 7);
+        assert_eq!(m.published_ms, 3.5);
     }
 }

@@ -7,11 +7,12 @@
 //!
 //! * `rr` — round-robin: cyclic deal, oblivious to backlog.
 //! * `jsq` — join-shortest-queue: route to the shard with the least
-//!   outstanding *work* — pending requests plus the batch still executing
-//!   ([`Shard::depth`]; queue length alone goes blind the instant a
-//!   batch is taken).  Ties break to the lowest index.  Approximates a
-//!   pooled multi-server queue, which is what cuts tail latency at high
-//!   load when service times vary (`ServerProfile::jitter` stragglers).
+//!   outstanding work in estimated *milliseconds* ([`Shard::work_ms`]) —
+//!   remaining execution time of the in-flight batch plus the pending
+//!   requests costed at the shard's own speed.  Counting requests goes
+//!   blind twice: the instant a batch is taken, and whenever shard
+//!   profiles are mixed (two pending requests on a 10× slower shard are
+//!   ten times the work).  Ties break to the lowest index.
 //! * `affinity` — input-key affinity: `key mod shards`, so duplicate
 //!   inputs always land on the shard whose cache (and in-flight table)
 //!   already knows them — per-shard caches then partition the keyspace
@@ -44,8 +45,8 @@ use super::queue::{AdmissionQueue, BatchPolicy, PredictRequest};
 pub enum RoutingPolicy {
     /// Cyclic deal, backlog-oblivious.
     RoundRobin,
-    /// Least outstanding work (pending + executing) wins; ties break to
-    /// the lowest index.
+    /// Least outstanding work in estimated milliseconds wins; ties break
+    /// to the lowest index.
     JoinShortestQueue,
     /// `input key mod shards` — duplicates share a shard's cache.
     InputAffinity,
@@ -118,7 +119,7 @@ impl Router {
     }
 
     /// Pick the shard for a request with cache key `key`, arriving at
-    /// `now`.  Deterministic: equal depths break to the lowest index.
+    /// `now`.  Deterministic: equal work breaks to the lowest index.
     pub fn route(&mut self, key: u64, shards: &[Shard], now: f64) -> usize {
         let n = shards.len().max(1);
         match self.policy {
@@ -127,15 +128,37 @@ impl Router {
                 self.rr_next = (self.rr_next + 1) % n;
                 i
             }
-            RoutingPolicy::JoinShortestQueue => shards
-                .iter()
-                .enumerate()
-                .min_by_key(|&(i, s)| (s.depth(now), i))
-                .map(|(i, _)| i)
-                .unwrap_or(0),
+            RoutingPolicy::JoinShortestQueue => {
+                // Least estimated milliseconds of outstanding work; strict
+                // `<` keeps the lowest index on exact ties.
+                let mut best = 0usize;
+                let mut best_ms = f64::INFINITY;
+                for (i, s) in shards.iter().enumerate() {
+                    let w = s.work_ms(now);
+                    if w < best_ms {
+                        best_ms = w;
+                        best = i;
+                    }
+                }
+                best
+            }
             RoutingPolicy::InputAffinity => (key % n as u64) as usize,
         }
     }
+}
+
+/// Failover candidate order for an arrival the routed shard refused:
+/// every other shard, least outstanding work first (ties to the lowest
+/// index).  Deterministic.
+pub fn failover_order(routed: usize, shards: &[Shard], now: f64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..shards.len()).filter(|&j| j != routed).collect();
+    order.sort_by(|&a, &b| {
+        shards[a]
+            .work_ms(now)
+            .total_cmp(&shards[b].work_ms(now))
+            .then(a.cmp(&b))
+    });
+    order
 }
 
 /// Sliding-window arrival counter for the rate estimate behind autotune.
@@ -200,6 +223,38 @@ pub fn tuned_wait_ms(rate_per_ms: Option<f64>, base: &BatchPolicy) -> f64 {
     }
 }
 
+/// Pick a shard's flush size from its observed arrival rate, clamped to
+/// the compiled `predict_b{n}` variants.
+///
+/// The expected batch fill within the latency budget is the request that
+/// opens the batch plus the arrivals the rate predicts during the
+/// configured deadline.  Flushing bigger than that just waits for
+/// requests that won't come; flushing at the smallest compiled variant
+/// that covers the expected fill converts the full-batch flush path from
+/// "wait for a 32 that never fills" into "go as soon as the realistic
+/// batch is here".  The configured `max_batch` stays the ceiling; with no
+/// rate estimate the configured value is used.
+pub fn tuned_max_batch(rate_per_ms: Option<f64>, base: &BatchPolicy, variants: &[usize]) -> usize {
+    let cap = base.max_batch.max(1);
+    let Some(rate) = rate_per_ms else {
+        return cap;
+    };
+    if rate <= 0.0 {
+        return cap;
+    }
+    let expected = (1.0 + rate * base.max_wait_ms).floor() as usize;
+    let target = expected.max(1);
+    if target >= cap {
+        return cap;
+    }
+    variants
+        .iter()
+        .copied()
+        .filter(|&v| v <= cap && v >= target)
+        .min()
+        .unwrap_or(cap)
+}
+
 /// One request waiting on a duplicate's in-flight computation.
 #[derive(Debug, Clone, Copy)]
 pub struct Waiter {
@@ -257,6 +312,9 @@ pub struct Shard {
     coalesced: u64,
     autotune: bool,
     base_policy: BatchPolicy,
+    /// Compiled micro-batch variants (ascending, deduped) — the sizes
+    /// `tuned_max_batch` may pick from.
+    variants: Vec<usize>,
     window: RateWindow,
     /// Cache entries queued until their computation completes.
     pending_inserts: VecDeque<PendingInsert>,
@@ -278,6 +336,10 @@ impl Shard {
         profile: ServerProfile,
         router: &RouterConfig,
     ) -> Self {
+        let mut variants: Vec<usize> =
+            spec.micro_batches.iter().copied().filter(|&b| b >= 1).collect();
+        variants.sort_unstable();
+        variants.dedup();
         Self {
             id,
             queue: AdmissionQueue::new(policy),
@@ -289,11 +351,18 @@ impl Shard {
             coalesced: 0,
             autotune: router.autotune,
             base_policy: policy,
+            variants,
             window: RateWindow::new(router.window_ms),
             pending_inserts: VecDeque::new(),
             inflight: HashMap::new(),
             resolved: VecDeque::new(),
         }
+    }
+
+    /// Close this shard's admission queue (drain mode): every subsequent
+    /// arrival is refused here and fails over to another endpoint.
+    pub fn drain(&mut self) {
+        self.queue.set_queue_depth(0);
     }
 
     /// Advance shard-local state to `now`: publish cache entries whose
@@ -316,13 +385,32 @@ impl Shard {
         }
     }
 
-    /// Outstanding work at `now`: pending requests plus the batch still
-    /// executing.  The JSQ signal — queue length alone reads zero the
-    /// moment a batch is taken, while the shard stays busy for the whole
-    /// service time.
+    /// Outstanding work at `now` in request counts: pending plus the
+    /// batch still executing.  Reported in stats; the JSQ signal is
+    /// [`Self::work_ms`], which weighs these by the shard's speed.
     pub fn depth(&self, now: f64) -> usize {
         let busy = if self.free_at > now { self.executing } else { 0 };
         self.queue.len() + busy
+    }
+
+    /// Outstanding work at `now` in estimated *milliseconds*: the
+    /// remaining service time of the in-flight batch, plus the pending
+    /// requests costed at this shard's own forward rate and per-batch
+    /// overhead.  With mixed [`ServerProfile`]s behind one router, two
+    /// pending requests on a 10× slower shard are ten times the work —
+    /// request counts can't see that, milliseconds can.
+    pub fn work_ms(&self, now: f64) -> f64 {
+        let busy_ms = (self.free_at - now).max(0.0);
+        let pending = self.queue.len();
+        if pending == 0 {
+            return busy_ms;
+        }
+        let profile = self.executor.profile();
+        let per_example_ms = 1000.0 / profile.power_vps;
+        let batches = pending.div_ceil(self.queue.policy().max_batch.max(1));
+        busy_ms
+            + pending as f64 * per_example_ms
+            + batches as f64 * profile.per_batch_overhead_ms
     }
 
     /// Count a routed arrival (all of them: hits, waiters, admissions).
@@ -331,15 +419,24 @@ impl Shard {
     }
 
     /// Observe a queue-feeding arrival (one that reached admission); with
-    /// autotune on, re-derive the partial-batch deadline from the updated
-    /// rate estimate.  Cache hits and coalesced waiters are deliberately
-    /// excluded: they never occupy a batch slot, so counting them would
-    /// overestimate how fast a batch fills and under-batch hot caches.
+    /// autotune on, re-derive the flush size *and* the partial-batch
+    /// deadline from the updated rate estimate — the flush size snaps to
+    /// a compiled variant covering the expected fill, the deadline to
+    /// that batch's fill time.  Cache hits and coalesced waiters are
+    /// deliberately excluded: they never occupy a batch slot, so counting
+    /// them would overestimate how fast a batch fills and under-batch hot
+    /// caches.
     pub fn observe_admission(&mut self, now: f64) {
         if self.autotune {
             self.window.observe(now);
-            let wait = tuned_wait_ms(self.window.rate_per_ms(), &self.base_policy);
-            self.queue.set_max_wait_ms(wait);
+            let rate = self.window.rate_per_ms();
+            let batch = tuned_max_batch(rate, &self.base_policy, &self.variants);
+            self.queue.set_max_batch(batch);
+            let basis = BatchPolicy {
+                max_batch: batch,
+                ..self.base_policy
+            };
+            self.queue.set_max_wait_ms(tuned_wait_ms(rate, &basis));
         }
     }
 
@@ -438,6 +535,7 @@ impl Shard {
             batch_examples: self.executor.examples(),
             padded_examples: self.executor.padded(),
             max_wait_ms: self.queue.policy().max_wait_ms,
+            max_batch: self.queue.policy().max_batch,
         }
     }
 }
@@ -458,6 +556,9 @@ pub struct ShardStats {
     pub padded_examples: u64,
     /// The partial-batch deadline at end of run (autotune moves it).
     pub max_wait_ms: f64,
+    /// The flush size at end of run (autotune snaps it to a compiled
+    /// variant).
+    pub max_batch: usize,
 }
 
 impl ShardStats {
@@ -527,6 +628,7 @@ mod tests {
             arrival_ms: 1.0,
             input,
             key,
+            snapshot: 1,
         }
     }
 
@@ -587,6 +689,94 @@ mod tests {
         // Once shard 0's execution completes, its depth drops back to 0.
         assert_eq!(shards[0].depth(10.0), 0);
         assert_eq!(r.route(9, &shards, 10.0), 0);
+    }
+
+    #[test]
+    fn jsq_weighs_work_in_milliseconds_under_mixed_profiles() {
+        // The ROADMAP satellite: a shard fleet with mixed speeds.  Shard 0
+        // is 10× slower than shard 1; both hold the same *number* of
+        // pending requests, so a count-based JSQ would tie and pick shard
+        // 0 — the worst choice.  Milliseconds see through it.
+        let slow = ServerProfile {
+            power_vps: 400.0,
+            ..ServerProfile::default()
+        };
+        let fast = ServerProfile {
+            power_vps: 4_000.0,
+            ..ServerProfile::default()
+        };
+        let mk = |id: u32, profile: ServerProfile| {
+            Shard::new(id, policy(), 0, spec(), profile, &RouterConfig::single())
+        };
+        let mut shards = vec![mk(0, slow), mk(1, fast)];
+        let input = Arc::new(vec![0.0; 2]);
+        for i in 0..2 {
+            shards[0].admit(req(i, i, Arc::clone(&input)), false);
+            shards[1].admit(req(10 + i, 10 + i, Arc::clone(&input)), false);
+        }
+        assert_eq!(shards[0].depth(0.0), shards[1].depth(0.0), "counts tie");
+        assert!(
+            shards[0].work_ms(0.0) > shards[1].work_ms(0.0),
+            "same count, more milliseconds on the slow shard"
+        );
+        let mut r = Router::new(RoutingPolicy::JoinShortestQueue);
+        assert_eq!(r.route(9, &shards, 0.0), 1, "route to the fast shard");
+    }
+
+    #[test]
+    fn work_ms_counts_remaining_execution_and_pending_cost() {
+        let mut s = shard(0);
+        assert_eq!(s.work_ms(0.0), 0.0);
+        // In-flight batch until t=10: remaining time shrinks as now moves.
+        s.free_at = 10.0;
+        s.executing = 4;
+        assert_eq!(s.work_ms(4.0), 6.0);
+        assert_eq!(s.work_ms(12.0), 0.0);
+        // Pending work: default profile = 0.25 ms/example + 2.5 ms/batch.
+        let input = Arc::new(vec![0.0; 2]);
+        s.admit(req(1, 1, Arc::clone(&input)), false);
+        s.admit(req(2, 2, Arc::clone(&input)), false);
+        let w = s.work_ms(12.0);
+        assert!((w - (2.0 * 0.25 + 2.5)).abs() < 1e-9, "got {w}");
+    }
+
+    #[test]
+    fn failover_order_prefers_least_loaded_and_skips_routed() {
+        let mut shards: Vec<Shard> = (0..3).map(shard).collect();
+        let input = Arc::new(vec![0.0; 2]);
+        shards[1].admit(req(1, 1, Arc::clone(&input)), false);
+        // Routed shard 0 excluded; empty shard 2 before loaded shard 1.
+        assert_eq!(failover_order(0, &shards, 0.0), vec![2, 1]);
+        // Ties break to the lowest index.
+        assert_eq!(failover_order(1, &shards, 0.0), vec![0, 2]);
+    }
+
+    #[test]
+    fn drained_shard_refuses_admission() {
+        let mut s = shard(0);
+        assert!(s.queue.can_admit());
+        s.drain();
+        assert!(!s.queue.can_admit());
+        let input = Arc::new(vec![0.0; 2]);
+        assert!(!s.admit(req(1, 1, input), false));
+        assert_eq!(s.stats().rejected, 1);
+    }
+
+    #[test]
+    fn tuned_max_batch_snaps_to_compiled_variants() {
+        let base = policy(); // max_batch 4, wait 5 ms
+        let variants = [1usize, 4, 8, 32];
+        // No estimate → configured ceiling.
+        assert_eq!(tuned_max_batch(None, &base, &variants), 4);
+        // 0.1/ms × 5 ms budget → expected fill 1.5 → variant 1.
+        assert_eq!(tuned_max_batch(Some(0.1), &base, &variants), 1);
+        // 0.5/ms → expected 3.5 → smallest covering variant is 4.
+        assert_eq!(tuned_max_batch(Some(0.5), &base, &variants), 4);
+        // 10/ms → expected 51 — capped at the configured ceiling, never
+        // the larger compiled variants.
+        assert_eq!(tuned_max_batch(Some(10.0), &base, &variants), 4);
+        // No variant covers the target but stays under the cap → cap.
+        assert_eq!(tuned_max_batch(Some(0.5), &base, &[1, 32]), 4);
     }
 
     #[test]

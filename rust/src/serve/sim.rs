@@ -1,21 +1,29 @@
-//! Discrete-event serving simulation: route → admission → cache →
-//! coalesce → micro-batch → execute → respond, over a snapshot registry
-//! and a simulated request fleet.
+//! Discrete-event serving: route → admission → cache → coalesce →
+//! micro-batch → execute → respond, over a snapshot registry and a
+//! simulated request fleet.
 //!
-//! The counterpart of [`crate::sim::Simulation`] for the prediction
-//! workload.  Arrivals (precomputed by the load generator) and batch
-//! flushes (one per shard, decided by each admission queue against its
-//! executor's availability) interleave on one virtual clock.  PR 1's
-//! single serial endpoint — the paper's §3.5 single-master model — is now
-//! the `shards = 1` special case of a routed fleet ([`super::router`]):
-//! each shard is its own serial endpoint, so per-shard queueing delay is
-//! what the latency percentiles measure under load, and the routing
-//! policy decides how evenly that delay spreads.
+//! The core is [`ServeEngine`], an *incrementally pumpable* event loop:
+//! `pump(horizon)` processes every arrival and batch flush up to a
+//! virtual-time horizon and then returns, leaving queued work pending.
+//! That is what the serve × train co-simulation ([`crate::cosim`]) needs
+//! — the training master advances the shared clock one iteration at a
+//! time and the serving tier fills in the window between boundaries,
+//! with snapshot publications (hot swaps) landing at the boundaries.
+//! [`ServeSim`] is the closed-loop wrapper the serving-only paths use:
+//! one `pump(None)` to drain the whole schedule.
 //!
-//! Duplicate in-flight inputs coalesce before admission (one execution,
-//! one cache fill, the answer fanned out to every waiter) — the
-//! miss-twice window PR 1 documented here is gone when
-//! `RouterConfig::coalesce` is on.
+//! Version consistency under hot swap: each request is stamped with the
+//! snapshot version active at its arrival, carries it through admission,
+//! and is computed entirely against that version — the queue cuts batches
+//! at version boundaries and the registry holds a reader pin per admitted
+//! request so traffic-driven GC cannot evict a version with in-flight
+//! work.  Cache keys include the version, so a swap invalidates the cache
+//! by construction (and a rollback revalidates the old entries).
+//!
+//! Failover: when the routed shard refuses admission (queue full, or
+//! drained via `queue_depth: 0`), the arrival is re-offered to the other
+//! shards in least-outstanding-work order; it is shed only when every
+//! endpoint refuses.
 
 use std::sync::Arc;
 
@@ -27,11 +35,13 @@ use crate::rng::{Exp, Pcg32};
 use crate::runtime::Compute;
 
 use super::cache::input_key;
-use super::executor::ServerProfile;
-use super::loadgen::{FleetConfig, RequestFleet};
+use super::executor::{Prediction, ServerProfile};
+use super::loadgen::{FleetConfig, RequestEvent, RequestFleet};
 use super::queue::{BatchPolicy, PredictRequest};
-use super::registry::SnapshotRegistry;
-use super::router::{Join, Router, RouterConfig, RoutingPolicy, Shard, ShardStats, Waiter};
+use super::registry::{SnapshotMeta, SnapshotRegistry};
+use super::router::{
+    failover_order, Join, Router, RouterConfig, RoutingPolicy, Shard, ShardStats, Waiter,
+};
 
 /// Everything one serving run needs besides the registry and compute.
 #[derive(Debug, Clone)]
@@ -41,6 +51,12 @@ pub struct ServeConfig {
     pub server: ServerProfile,
     /// Fleet shape: shard count, routing policy, coalescing, autotune.
     pub router: RouterConfig,
+    /// Heterogeneous fleet: profile overrides per shard index (shorter
+    /// than the shard count → remaining shards use `server`).
+    pub shard_profiles: Vec<ServerProfile>,
+    /// Shards whose admission queue starts closed (`queue_depth: 0`) —
+    /// drained endpoints the router fails over around.
+    pub drained_shards: Vec<usize>,
     /// Per-shard prediction-cache capacity in entries (0 disables).
     pub cache_capacity: usize,
     /// Response payload on the downlink (class + confidence + envelope).
@@ -57,6 +73,8 @@ pub struct ServeReport {
     pub cache_hits: u64,
     /// Requests answered by piggybacking on an in-flight duplicate.
     pub coalesced: u64,
+    /// Requests the routed shard refused that another shard served.
+    pub failovers: u64,
     pub batches: u64,
     /// Real requests executed in batches (excludes cache hits, coalesced
     /// waiters and padding).
@@ -119,7 +137,7 @@ impl ServeReport {
         };
         format!(
             "shards={} router={} offered={} completed={} rejected={} coalesced={} \
-             hit_rate={:.2} mean_batch={:.1} p50={}ms p95={}ms p99={}ms \
+             failover={} hit_rate={:.2} mean_batch={:.1} p50={}ms p95={}ms p99={}ms \
              throughput={:.1} rps",
             self.per_shard.len(),
             self.router.policy.name(),
@@ -127,6 +145,7 @@ impl ServeReport {
             self.completed,
             self.rejected,
             self.coalesced,
+            self.failovers,
             self.hit_rate(),
             self.mean_batch(),
             ms(lat.median()),
@@ -134,6 +153,447 @@ impl ServeReport {
             ms(lat.quantile(0.99)),
             self.throughput_rps(),
         )
+    }
+}
+
+/// Hook invoked for every served response, with the snapshot that
+/// answered it and compute access (the co-simulation's staleness probe
+/// re-predicts against the live master parameters here).  The record has
+/// not yet been pushed to the log when the hook runs.
+pub trait ServeObserver {
+    fn on_response(
+        &mut self,
+        record: &RequestRecord,
+        input: &Arc<Vec<f32>>,
+        served: &Prediction,
+        snapshot: SnapshotMeta,
+        compute: &mut dyn Compute,
+    ) -> Result<()>;
+}
+
+/// Observer that records nothing (plain serving runs).
+pub struct NoopObserver;
+
+impl ServeObserver for NoopObserver {
+    fn on_response(
+        &mut self,
+        _record: &RequestRecord,
+        _input: &Arc<Vec<f32>>,
+        _served: &Prediction,
+        _snapshot: SnapshotMeta,
+        _compute: &mut dyn Compute,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Did a shard handle the arrival, or refuse it for lack of queue space?
+enum ArrivalOutcome {
+    Handled,
+    Refused,
+}
+
+/// The incrementally pumpable serving event loop: shards + router +
+/// request schedule on one virtual clock.  See the module docs.
+pub struct ServeEngine {
+    router_cfg: RouterConfig,
+    coalesce: bool,
+    caching: bool,
+    need_key: bool,
+    response_bytes: u64,
+    duration_s: f64,
+    shards: Vec<Shard>,
+    router: Router,
+    fleet: RequestFleet,
+    /// Arrival cursor into `fleet.events`.
+    next: usize,
+    now: f64,
+    log: RequestLog,
+    /// Downlink + service jitter draws; separate stream from the load
+    /// generator so admission decisions cannot perturb arrivals.
+    rng: Pcg32,
+    /// Straggler spread for executed batches (GC pauses, contention);
+    /// standard exponential scaled by each shard's `ServerProfile::jitter`.
+    straggler: Exp,
+    failovers: u64,
+}
+
+impl ServeEngine {
+    /// Build shards, router and the full arrival schedule.  `spec` is the
+    /// served model (the registry's spec on the serving paths).
+    pub fn new(cfg: &ServeConfig, spec: &crate::model::ModelSpec) -> Self {
+        let fleet = RequestFleet::generate(&cfg.fleet, spec);
+        // Clamp the flush size to the largest compiled micro-batch so
+        // every flushed batch is exactly one execution — `batch_size` in
+        // the log then always names a real executed batch.
+        let largest = spec
+            .micro_batches
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(spec.batch_size)
+            .max(1);
+        let mut policy = cfg.policy;
+        policy.max_batch = policy.max_batch.clamp(1, largest);
+
+        let router_cfg = cfg.router;
+        let coalesce = router_cfg.coalesce;
+        let caching = cfg.cache_capacity > 0;
+        let affinity = router_cfg.policy == RoutingPolicy::InputAffinity;
+        // Hashing ~KB of pixels per request only pays off when something
+        // consumes the key: a cache, the in-flight table, or the
+        // affinity router.
+        let need_key = caching || coalesce || affinity;
+        let mut shards: Vec<Shard> = (0..router_cfg.shards.max(1))
+            .map(|i| {
+                let profile = cfg.shard_profiles.get(i).copied().unwrap_or(cfg.server);
+                Shard::new(
+                    i as u32,
+                    policy,
+                    cfg.cache_capacity,
+                    spec.clone(),
+                    profile,
+                    &router_cfg,
+                )
+            })
+            .collect();
+        for &i in &cfg.drained_shards {
+            if let Some(s) = shards.get_mut(i) {
+                s.drain();
+            }
+        }
+        Self {
+            router_cfg,
+            coalesce,
+            caching,
+            need_key,
+            response_bytes: cfg.response_bytes,
+            duration_s: cfg.fleet.duration_s,
+            router: Router::new(router_cfg.policy),
+            rng: Pcg32::new(cfg.fleet.seed ^ 0x5E12E),
+            straggler: Exp::new(1.0),
+            shards,
+            fleet,
+            next: 0,
+            now: 0.0,
+            log: RequestLog::new(),
+            failovers: 0,
+        }
+    }
+
+    /// The per-request log so far.
+    pub fn log(&self) -> &RequestLog {
+        &self.log
+    }
+
+    /// Arrivals not yet processed (those after the last pump horizon).
+    pub fn remaining_arrivals(&self) -> usize {
+        self.fleet.events.len() - self.next
+    }
+
+    /// Process every arrival and flush with event time ≤ `horizon`
+    /// (`None` = drain the whole schedule).  The registry supplies the
+    /// active version for new arrivals and holds reader pins for admitted
+    /// ones; callers may publish / roll back / GC between pumps — never
+    /// during one.
+    pub fn pump(
+        &mut self,
+        horizon: Option<f64>,
+        registry: &mut SnapshotRegistry,
+        compute: &mut dyn Compute,
+        observer: &mut dyn ServeObserver,
+    ) -> Result<()> {
+        loop {
+            let arrival = self
+                .fleet
+                .events
+                .get(self.next)
+                .map(|e| e.arrival_ms)
+                .filter(|&t| horizon.is_none_or(|h| t <= h));
+            let flush = next_flush(&self.shards, self.now)
+                .filter(|&(t, _)| horizon.is_none_or(|h| t <= h));
+            // Arrivals win ties so a request landing exactly at a flush
+            // time still joins that batch.
+            let take_arrival = match (arrival, flush) {
+                (None, None) => return Ok(()),
+                (Some(a), Some((f, _))) => a <= f,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+            };
+            if take_arrival {
+                let ev = self.fleet.events[self.next].clone();
+                self.next += 1;
+                self.now = ev.arrival_ms;
+                let meta = registry
+                    .active()
+                    .ok_or_else(|| anyhow!("no snapshot published — registry is empty"))?
+                    .meta();
+                let key = if self.need_key {
+                    input_key(meta.id, &ev.input)
+                } else {
+                    0
+                };
+                let si = self.router.route(key, &self.shards, self.now);
+                let mut outcome = self.offer_to_shard(si, &ev, key, meta, registry, compute, observer)?;
+                if matches!(outcome, ArrivalOutcome::Refused) && self.shards.len() > 1 {
+                    // Router-level failover: re-offer to the other shards,
+                    // least outstanding work first.
+                    for j in failover_order(si, &self.shards, self.now) {
+                        outcome = self.offer_to_shard(j, &ev, key, meta, registry, compute, observer)?;
+                        if matches!(outcome, ArrivalOutcome::Handled) {
+                            self.failovers += 1;
+                            break;
+                        }
+                    }
+                }
+                if matches!(outcome, ArrivalOutcome::Refused) {
+                    // Every candidate refused: shed, attributed to the
+                    // originally routed shard.
+                    let shard = &mut self.shards[si];
+                    shard.note_routed();
+                    shard.queue.note_shed();
+                    self.log.push_rejection(RejectionRecord {
+                        id: ev.id,
+                        client: ev.client,
+                        sent_ms: ev.sent_ms,
+                        arrival_ms: self.now,
+                        shard: si as u32,
+                    });
+                }
+            } else if let Some((f, si)) = flush {
+                self.now = f;
+                self.shards[si].tick(f);
+                let batch = self.shards[si].queue.take_batch();
+                let Some(first) = batch.first() else { continue };
+                // Answer consistency: a flushed batch carries exactly one
+                // version (the queue cuts at version boundaries) and is
+                // computed entirely against it.
+                let vid = first.snapshot;
+                debug_assert!(
+                    batch.iter().all(|r| r.snapshot == vid),
+                    "a flushed batch mixed snapshot versions"
+                );
+                let snap = registry.get(vid).ok_or_else(|| {
+                    anyhow!("snapshot v{vid} evicted with {} in-flight request(s)", batch.len())
+                })?;
+                let meta = snap.meta();
+                let params = Arc::clone(&snap.params);
+                let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
+                let (preds, base_service_ms) =
+                    self.shards[si]
+                        .executor
+                        .execute(compute, &params, &inputs)?;
+                // Straggler batches: multiplicative spread on the modeled
+                // service time, per this shard's own profile.  Zero jitter
+                // draws nothing, so idealized runs keep exact timelines.
+                let jitter = self.shards[si].executor.profile().jitter;
+                let service_ms = if jitter > 0.0 {
+                    base_service_ms * (1.0 + jitter * self.straggler.sample(&mut self.rng))
+                } else {
+                    base_service_ms
+                };
+                let computed_at = self.now + service_ms;
+                self.shards[si].free_at = computed_at;
+                self.shards[si].executing = batch.len();
+                for (req, pred) in batch.iter().zip(&preds) {
+                    if self.coalesce {
+                        // Fan the one computed answer out to every waiter
+                        // that coalesced onto this leader.
+                        let waiters =
+                            self.shards[si].resolve_inflight(req, computed_at, pred);
+                        for w in waiters {
+                            let done = computed_at
+                                + respond_ms(
+                                    &self.fleet.links,
+                                    w.client,
+                                    self.response_bytes,
+                                    &mut self.rng,
+                                );
+                            let rec = RequestRecord {
+                                id: w.id,
+                                client: w.client,
+                                sent_ms: w.sent_ms,
+                                done_ms: done,
+                                latency_ms: done - w.sent_ms,
+                                shard: si as u32,
+                                snapshot: vid,
+                                batch_size: 0,
+                                cache_hit: false,
+                                coalesced: true,
+                                class: pred.class as u32,
+                            };
+                            observer.on_response(&rec, &req.input, pred, meta, compute)?;
+                            self.log.push(rec);
+                        }
+                    }
+                    if self.caching {
+                        // One fill per computation — waiters never insert.
+                        // Visible once virtual time passes `computed_at`.
+                        self.shards[si].schedule_insert(
+                            computed_at,
+                            req.key,
+                            Arc::clone(&req.input),
+                            pred.clone(),
+                        );
+                    }
+                    let done = computed_at
+                        + respond_ms(
+                            &self.fleet.links,
+                            req.client,
+                            self.response_bytes,
+                            &mut self.rng,
+                        );
+                    let rec = RequestRecord {
+                        id: req.id,
+                        client: req.client,
+                        sent_ms: req.sent_ms,
+                        done_ms: done,
+                        latency_ms: done - req.sent_ms,
+                        shard: si as u32,
+                        snapshot: vid,
+                        batch_size: batch.len() as u32,
+                        cache_hit: false,
+                        coalesced: false,
+                        class: pred.class as u32,
+                    };
+                    observer.on_response(&rec, &req.input, pred, meta, compute)?;
+                    self.log.push(rec);
+                    // The computation ran: release the admission-time
+                    // reader pin so GC can reclaim the version.
+                    registry.unpin_reader(vid);
+                }
+            }
+        }
+    }
+
+    /// Offer one arrival to one shard: cache hit, coalesce join, or
+    /// admission (with a reader pin on the admitted version).  Returns
+    /// `Refused` when the shard's queue has no room — the caller then
+    /// fails over or sheds.
+    #[allow(clippy::too_many_arguments)]
+    fn offer_to_shard(
+        &mut self,
+        si: usize,
+        ev: &RequestEvent,
+        key: u64,
+        meta: SnapshotMeta,
+        registry: &mut SnapshotRegistry,
+        compute: &mut dyn Compute,
+        observer: &mut dyn ServeObserver,
+    ) -> Result<ArrivalOutcome> {
+        let now = self.now;
+        self.shards[si].tick(now);
+        if self.caching {
+            let hit = self.shards[si].cache.get(key, &ev.input);
+            if let Some(pred) = hit {
+                let done = now
+                    + self.shards[si].executor.profile().cache_lookup_ms
+                    + respond_ms(&self.fleet.links, ev.client, self.response_bytes, &mut self.rng);
+                let rec = RequestRecord {
+                    id: ev.id,
+                    client: ev.client,
+                    sent_ms: ev.sent_ms,
+                    done_ms: done,
+                    latency_ms: done - ev.sent_ms,
+                    shard: si as u32,
+                    snapshot: meta.id,
+                    batch_size: 0,
+                    cache_hit: true,
+                    coalesced: false,
+                    class: pred.class as u32,
+                };
+                observer.on_response(&rec, &ev.input, &pred, meta, compute)?;
+                self.log.push(rec);
+                self.shards[si].note_routed();
+                return Ok(ArrivalOutcome::Handled);
+            }
+        }
+        let waiter = Waiter {
+            id: ev.id,
+            client: ev.client,
+            sent_ms: ev.sent_ms,
+        };
+        if self.coalesce {
+            match self.shards[si].coalesce_join(key, &ev.input, waiter) {
+                // The duplicate's computation already finished but is not
+                // yet visible as a cache entry: share its answer.
+                Join::Ready(computed_at, pred) => {
+                    let done = computed_at
+                        + respond_ms(&self.fleet.links, ev.client, self.response_bytes, &mut self.rng);
+                    let rec = RequestRecord {
+                        id: ev.id,
+                        client: ev.client,
+                        sent_ms: ev.sent_ms,
+                        done_ms: done,
+                        latency_ms: done - ev.sent_ms,
+                        shard: si as u32,
+                        snapshot: meta.id,
+                        batch_size: 0,
+                        cache_hit: false,
+                        coalesced: true,
+                        class: pred.class as u32,
+                    };
+                    observer.on_response(&rec, &ev.input, &pred, meta, compute)?;
+                    self.log.push(rec);
+                    self.shards[si].note_routed();
+                    return Ok(ArrivalOutcome::Handled);
+                }
+                // Attached as a waiter; answered at the leader's
+                // completion in the flush branch.
+                Join::Queued => {
+                    self.shards[si].note_routed();
+                    return Ok(ArrivalOutcome::Handled);
+                }
+                Join::Admit => {}
+            }
+        }
+        if !self.shards[si].queue.can_admit() {
+            return Ok(ArrivalOutcome::Refused);
+        }
+        let admitted = self.shards[si].admit(
+            PredictRequest {
+                id: ev.id,
+                client: ev.client,
+                sent_ms: ev.sent_ms,
+                arrival_ms: now,
+                input: Arc::clone(&ev.input),
+                key,
+                snapshot: meta.id,
+            },
+            self.coalesce,
+        );
+        debug_assert!(admitted, "can_admit probe and offer disagree");
+        // The admitted request will execute against this version: pin it
+        // so traffic-driven GC cannot evict it first.
+        registry.pin_reader(meta.id).map_err(|e| anyhow!(e))?;
+        // Only arrivals that actually entered the queue drive the autotune
+        // rate estimate — hits, waiters and sheds never fill a batch slot,
+        // so counting them would mistune the deadline and flush size.
+        self.shards[si].observe_admission(now);
+        self.shards[si].note_routed();
+        Ok(ArrivalOutcome::Handled)
+    }
+
+    /// End-of-run accounting.
+    pub fn into_report(self) -> ServeReport {
+        let span_s = self.log.span_ms() / 1000.0;
+        let per_shard: Vec<ShardStats> = self.shards.iter().map(Shard::stats).collect();
+        ServeReport {
+            offered: self.fleet.offered(),
+            completed: self.log.len() as u64,
+            rejected: per_shard.iter().map(|s| s.rejected).sum(),
+            cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
+            coalesced: per_shard.iter().map(|s| s.coalesced).sum(),
+            failovers: self.failovers,
+            batches: per_shard.iter().map(|s| s.batches).sum(),
+            batch_examples: per_shard.iter().map(|s| s.batch_examples).sum(),
+            padded_examples: per_shard.iter().map(|s| s.padded_examples).sum(),
+            router: self.router_cfg,
+            per_shard,
+            duration_s: self.duration_s,
+            span_s,
+            log: self.log,
+        }
     }
 }
 
@@ -159,261 +619,13 @@ impl<'c> ServeSim<'c> {
 
     /// Run the full request schedule to completion.
     pub fn run(&mut self) -> Result<ServeReport> {
-        let snapshot = self
-            .registry
+        self.registry
             .active()
-            .ok_or_else(|| anyhow!("no snapshot published — registry is empty"))?
-            .clone();
+            .ok_or_else(|| anyhow!("no snapshot published — registry is empty"))?;
         let spec = self.registry.spec().clone();
-        let fleet = RequestFleet::generate(&self.cfg.fleet, &spec);
-        // Clamp the flush size to the largest compiled micro-batch so
-        // every flushed batch is exactly one execution — `batch_size` in
-        // the log then always names a real executed batch.
-        let largest = spec
-            .micro_batches
-            .iter()
-            .copied()
-            .max()
-            .unwrap_or(spec.batch_size)
-            .max(1);
-        let mut policy = self.cfg.policy;
-        policy.max_batch = policy.max_batch.clamp(1, largest);
-
-        let router_cfg = self.cfg.router;
-        let coalesce = router_cfg.coalesce;
-        let caching = self.cfg.cache_capacity > 0;
-        let affinity = router_cfg.policy == RoutingPolicy::InputAffinity;
-        // Hashing ~KB of pixels per request only pays off when something
-        // consumes the key: a cache, the in-flight table, or the
-        // affinity router.
-        let need_key = caching || coalesce || affinity;
-        let mut shards: Vec<Shard> = (0..router_cfg.shards.max(1))
-            .map(|i| {
-                Shard::new(
-                    i as u32,
-                    policy,
-                    self.cfg.cache_capacity,
-                    spec.clone(),
-                    self.cfg.server,
-                    &router_cfg,
-                )
-            })
-            .collect();
-        let mut router = Router::new(router_cfg.policy);
-        let mut log = RequestLog::new();
-        // Downlink + service jitter draws; separate stream from the load
-        // generator so admission decisions cannot perturb arrivals.
-        let mut rng = Pcg32::new(self.cfg.fleet.seed ^ 0x5E12E);
-        // Straggler spread for executed batches (GC pauses, contention);
-        // standard exponential scaled by `ServerProfile::jitter`.
-        let straggler = Exp::new(1.0);
-
-        let mut now = 0.0f64;
-        let mut next = 0usize;
-        loop {
-            let arrival = fleet.events.get(next).map(|e| e.arrival_ms);
-            let flush = next_flush(&shards, now);
-            // Arrivals win ties so a request landing exactly at a flush
-            // time still joins that batch.
-            let take_arrival = match (arrival, flush) {
-                (None, None) => break,
-                (Some(a), Some((f, _))) => a <= f,
-                (Some(_), None) => true,
-                (None, Some(_)) => false,
-            };
-            if take_arrival {
-                let ev = &fleet.events[next];
-                next += 1;
-                now = ev.arrival_ms;
-                let key = if need_key {
-                    input_key(snapshot.id, &ev.input)
-                } else {
-                    0
-                };
-                let si = router.route(key, &shards, now);
-                let shard = &mut shards[si];
-                shard.tick(now);
-                shard.note_routed();
-                let hit = if caching {
-                    shard.cache.get(key, &ev.input)
-                } else {
-                    None
-                };
-                if let Some(pred) = hit {
-                    let done = now
-                        + self.cfg.server.cache_lookup_ms
-                        + respond_ms(&fleet.links, ev.client, self.cfg.response_bytes, &mut rng);
-                    log.push(RequestRecord {
-                        id: ev.id,
-                        client: ev.client,
-                        sent_ms: ev.sent_ms,
-                        done_ms: done,
-                        latency_ms: done - ev.sent_ms,
-                        shard: si as u32,
-                        batch_size: 0,
-                        cache_hit: true,
-                        coalesced: false,
-                        class: pred.class as u32,
-                    });
-                    continue;
-                }
-                let waiter = Waiter {
-                    id: ev.id,
-                    client: ev.client,
-                    sent_ms: ev.sent_ms,
-                };
-                let join = if coalesce {
-                    shard.coalesce_join(key, &ev.input, waiter)
-                } else {
-                    Join::Admit
-                };
-                match join {
-                    // The duplicate's computation already finished but is
-                    // not yet visible as a cache entry: share its answer.
-                    Join::Ready(computed_at, pred) => {
-                        let done = computed_at
-                            + respond_ms(&fleet.links, ev.client, self.cfg.response_bytes, &mut rng);
-                        log.push(RequestRecord {
-                            id: ev.id,
-                            client: ev.client,
-                            sent_ms: ev.sent_ms,
-                            done_ms: done,
-                            latency_ms: done - ev.sent_ms,
-                            shard: si as u32,
-                            batch_size: 0,
-                            cache_hit: false,
-                            coalesced: true,
-                            class: pred.class as u32,
-                        });
-                    }
-                    // Attached as a waiter; answered at the leader's
-                    // completion in the flush branch below.
-                    Join::Queued => {}
-                    Join::Admit => {
-                        let admitted = shard.admit(
-                            PredictRequest {
-                                id: ev.id,
-                                client: ev.client,
-                                sent_ms: ev.sent_ms,
-                                arrival_ms: ev.arrival_ms,
-                                input: Arc::clone(&ev.input),
-                                key,
-                            },
-                            coalesce,
-                        );
-                        if admitted {
-                            // Only arrivals that actually entered the
-                            // queue drive the autotune rate estimate —
-                            // hits, waiters and sheds never fill a batch
-                            // slot, so counting them would mistune the
-                            // deadline.
-                            shard.observe_admission(now);
-                        } else {
-                            // The client sees a fast error; the log sees
-                            // the shed (offered − completed − rejected
-                            // reconciles per client).
-                            log.push_rejection(RejectionRecord {
-                                id: ev.id,
-                                client: ev.client,
-                                sent_ms: ev.sent_ms,
-                                arrival_ms: ev.arrival_ms,
-                                shard: si as u32,
-                            });
-                        }
-                    }
-                }
-            } else if let Some((f, si)) = flush {
-                now = f;
-                let shard = &mut shards[si];
-                shard.tick(now);
-                let batch = shard.queue.take_batch();
-                let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
-                let (preds, base_service_ms) =
-                    shard
-                        .executor
-                        .execute(self.compute, &snapshot.params, &inputs)?;
-                // Straggler batches: multiplicative spread on the modeled
-                // service time.  Zero jitter draws nothing, so idealized
-                // runs keep their exact PR-1 timelines.
-                let service_ms = if self.cfg.server.jitter > 0.0 {
-                    base_service_ms * (1.0 + self.cfg.server.jitter * straggler.sample(&mut rng))
-                } else {
-                    base_service_ms
-                };
-                let computed_at = now + service_ms;
-                shard.free_at = computed_at;
-                shard.executing = batch.len();
-                for (req, pred) in batch.iter().zip(&preds) {
-                    if coalesce {
-                        // Fan the one computed answer out to every waiter
-                        // that coalesced onto this leader.
-                        for w in shard.resolve_inflight(req, computed_at, pred) {
-                            let done = computed_at
-                                + respond_ms(
-                                    &fleet.links,
-                                    w.client,
-                                    self.cfg.response_bytes,
-                                    &mut rng,
-                                );
-                            log.push(RequestRecord {
-                                id: w.id,
-                                client: w.client,
-                                sent_ms: w.sent_ms,
-                                done_ms: done,
-                                latency_ms: done - w.sent_ms,
-                                shard: si as u32,
-                                batch_size: 0,
-                                cache_hit: false,
-                                coalesced: true,
-                                class: pred.class as u32,
-                            });
-                        }
-                    }
-                    if caching {
-                        // One fill per computation — waiters never insert.
-                        // Visible once virtual time passes `computed_at`.
-                        shard.schedule_insert(
-                            computed_at,
-                            req.key,
-                            Arc::clone(&req.input),
-                            pred.clone(),
-                        );
-                    }
-                    let done = computed_at
-                        + respond_ms(&fleet.links, req.client, self.cfg.response_bytes, &mut rng);
-                    log.push(RequestRecord {
-                        id: req.id,
-                        client: req.client,
-                        sent_ms: req.sent_ms,
-                        done_ms: done,
-                        latency_ms: done - req.sent_ms,
-                        shard: si as u32,
-                        batch_size: batch.len() as u32,
-                        cache_hit: false,
-                        coalesced: false,
-                        class: pred.class as u32,
-                    });
-                }
-            }
-        }
-
-        let span_s = log.span_ms() / 1000.0;
-        let per_shard: Vec<ShardStats> = shards.iter().map(Shard::stats).collect();
-        Ok(ServeReport {
-            offered: fleet.offered(),
-            completed: log.len() as u64,
-            rejected: per_shard.iter().map(|s| s.rejected).sum(),
-            cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
-            coalesced: per_shard.iter().map(|s| s.coalesced).sum(),
-            batches: per_shard.iter().map(|s| s.batches).sum(),
-            batch_examples: per_shard.iter().map(|s| s.batch_examples).sum(),
-            padded_examples: per_shard.iter().map(|s| s.padded_examples).sum(),
-            router: router_cfg,
-            per_shard,
-            duration_s: self.cfg.fleet.duration_s,
-            span_s,
-            log,
-        })
+        let mut engine = ServeEngine::new(&self.cfg, &spec);
+        engine.pump(None, &mut self.registry, &mut *self.compute, &mut NoopObserver)?;
+        Ok(engine.into_report())
     }
 }
 
@@ -484,6 +696,8 @@ mod tests {
             },
             server: ServerProfile::default(),
             router: RouterConfig::single(),
+            shard_profiles: Vec::new(),
+            drained_shards: Vec::new(),
             cache_capacity: cache,
             response_bytes: 256,
         }
@@ -523,6 +737,7 @@ mod tests {
         for r in report.log.records() {
             assert!(r.latency_ms > 0.0, "{r:?}");
             assert!(r.done_ms > r.sent_ms);
+            assert_eq!(r.snapshot, 1, "single-version run");
         }
     }
 
@@ -568,6 +783,7 @@ mod tests {
         let report = run_cfg(cfg);
         assert!(report.rejected > 0, "{}", report.summary());
         assert_eq!(report.completed + report.rejected, report.offered);
+        assert_eq!(report.failovers, 0, "one shard: nowhere to fail over");
         // Shedding is visible: one rejection record per shed request,
         // each attributed to a client and a shard.
         assert_eq!(report.log.rejections().len() as u64, report.rejected);
@@ -748,10 +964,138 @@ mod tests {
             p50_auto + 2.0 < p50_fixed,
             "autotune should shed most of the 5 ms deadline: auto {p50_auto:.2} vs fixed {p50_fixed:.2}"
         );
-        // The report surfaces the retuned deadline.
+        // The report surfaces the retuned knobs.
         assert!(auto.per_shard[0].max_wait_ms < 5.0);
+        assert!(auto.per_shard[0].max_batch <= 8);
         // Identical answers — tuning the deadline is timing-only.
         assert_eq!(classes_by_id(&fixed), classes_by_id(&auto));
+    }
+
+    #[test]
+    fn autotune_snaps_flush_size_to_a_compiled_variant() {
+        // ~400 rps aggregate → ~0.4 arrivals/ms → expected fill within
+        // the 5 ms budget ≈ 3: the flush size should settle on the
+        // compiled 4-variant, not the configured 8 — and answers must not
+        // change (batch composition is answer-invariant).
+        let mut fixed_cfg = config(50.0, 8, 0);
+        fixed_cfg.policy.queue_depth = 4096;
+        let fixed = run_cfg(fixed_cfg.clone());
+        let mut auto_cfg = fixed_cfg;
+        auto_cfg.router.autotune = true;
+        let auto = run_cfg(auto_cfg);
+        assert_eq!(auto.rejected, 0, "{}", auto.summary());
+        let tuned = auto.per_shard[0].max_batch;
+        assert!(
+            tuned < 8 && [1usize, 4].contains(&tuned),
+            "flush size must land on a smaller compiled variant, got {tuned}"
+        );
+        assert_eq!(classes_by_id(&fixed), classes_by_id(&auto));
+    }
+
+    #[test]
+    fn failover_reroutes_around_a_drained_shard() {
+        // ROADMAP satellite: `queue_depth: 0` models a closed endpoint.
+        // With a second healthy shard behind the router, drained traffic
+        // must be re-routed, not shed.
+        let mut cfg = config(50.0, 4, 0);
+        cfg.router = RouterConfig {
+            shards: 2,
+            policy: RoutingPolicy::RoundRobin,
+            coalesce: false,
+            autotune: false,
+            window_ms: 1_000.0,
+        };
+        cfg.drained_shards = vec![0];
+        let report = run_cfg(cfg);
+        assert!(report.offered > 0);
+        assert_eq!(report.rejected, 0, "{}", report.summary());
+        assert_eq!(report.completed, report.offered);
+        assert!(report.failovers > 0, "{}", report.summary());
+        assert_eq!(report.per_shard[0].batch_examples, 0, "drained shard idle");
+        for r in report.log.records() {
+            assert_eq!(r.shard, 1, "everything lands on the healthy shard");
+        }
+    }
+
+    #[test]
+    fn shed_only_when_every_shard_refuses() {
+        let mut cfg = config(50.0, 4, 0);
+        cfg.router = RouterConfig {
+            shards: 2,
+            policy: RoutingPolicy::RoundRobin,
+            coalesce: false,
+            autotune: false,
+            window_ms: 1_000.0,
+        };
+        cfg.drained_shards = vec![0, 1];
+        let report = run_cfg(cfg);
+        assert!(report.offered > 0);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.rejected, report.offered);
+        assert_eq!(report.failovers, 0);
+        assert_eq!(report.log.rejections().len() as u64, report.offered);
+    }
+
+    #[test]
+    fn failover_spills_overflow_and_reconciles() {
+        // A tiny per-shard queue under burst: overflow from the routed
+        // shard spills to its peer before anything is shed, and the
+        // per-shard counters still reconcile exactly.
+        let mut cfg = config(1_200.0, 8, 0);
+        cfg.policy.queue_depth = 8;
+        cfg.router = RouterConfig {
+            shards: 2,
+            policy: RoutingPolicy::RoundRobin,
+            coalesce: false,
+            autotune: false,
+            window_ms: 1_000.0,
+        };
+        let report = run_cfg(cfg);
+        assert!(report.failovers > 0, "{}", report.summary());
+        assert_eq!(report.completed + report.rejected, report.offered);
+        let routed: u64 = report.per_shard.iter().map(|s| s.routed).sum();
+        assert_eq!(routed, report.offered);
+        for s in &report.per_shard {
+            assert_eq!(
+                s.routed,
+                s.admitted + s.rejected + s.cache_hits + s.coalesced,
+                "shard {} counters must reconcile",
+                s.shard
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_profiles_shift_execution_to_the_fast_shard() {
+        // Satellite: heterogeneous shard profiles behind one router.
+        // Shard 1 is 8× slower; millisecond-weighted JSQ must push the
+        // bulk of execution onto shard 0 while both keep reconciling.
+        let mut cfg = config(150.0, 8, 0);
+        cfg.policy.queue_depth = 4096;
+        cfg.router = RouterConfig {
+            shards: 2,
+            policy: RoutingPolicy::JoinShortestQueue,
+            coalesce: false,
+            autotune: false,
+            window_ms: 1_000.0,
+        };
+        cfg.shard_profiles = vec![
+            ServerProfile::default(),
+            ServerProfile {
+                power_vps: 500.0,
+                ..ServerProfile::default()
+            },
+        ];
+        let report = run_cfg(cfg);
+        assert_eq!(report.rejected, 0, "{}", report.summary());
+        let fast = &report.per_shard[0];
+        let slow = &report.per_shard[1];
+        assert!(
+            fast.batch_examples > slow.batch_examples,
+            "work-in-ms routing must favor the fast shard: fast {} vs slow {}",
+            fast.batch_examples,
+            slow.batch_examples
+        );
     }
 
     #[test]

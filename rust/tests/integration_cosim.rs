@@ -1,0 +1,312 @@
+//! Integration: the serve × train co-simulation end-to-end — shared
+//! clock, live snapshot publication, hot-swap answer consistency,
+//! traffic-driven GC, and the staleness-vs-cadence relationship — on the
+//! modeled backends (no artifacts needed; the path is `Compute`-generic).
+
+use std::collections::BTreeMap;
+
+use mlitb::cosim::{run_cosim, CosimConfig, PublicationPolicy, PublishTrigger};
+use mlitb::netsim::LinkProfile;
+use mlitb::runtime::{DriftingCompute, ModeledCompute};
+use mlitb::serve::{
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, NoopObserver, RouterConfig, RoutingPolicy,
+    ServeConfig, ServeEngine, ServerProfile, SnapshotRegistry,
+};
+use mlitb::sim::SimConfig;
+
+fn serve_config(duration_s: f64, seed: u64) -> ServeConfig {
+    ServeConfig {
+        fleet: FleetConfig {
+            groups: vec![
+                ClientSpec { link: LinkProfile::Lan, rate_rps: 8.0, count: 3 },
+                ClientSpec { link: LinkProfile::Wifi, rate_rps: 5.0, count: 3 },
+            ],
+            duration_s,
+            input_pool: 32,
+            seed,
+        },
+        policy: BatchPolicy {
+            max_batch: 32,
+            max_wait_ms: 5.0,
+            queue_depth: 512,
+        },
+        server: ServerProfile::default(),
+        router: RouterConfig {
+            shards: 2,
+            policy: RoutingPolicy::JoinShortestQueue,
+            coalesce: true,
+            autotune: false,
+            window_ms: 1_000.0,
+        },
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
+        cache_capacity: 256,
+        response_bytes: 256,
+    }
+}
+
+fn cosim_config(iterations: u64, publish: PublicationPolicy, seed: u64) -> CosimConfig {
+    let spec = demo_spec();
+    let mut train = SimConfig::paper_scaling(2, &spec);
+    train.iterations = iterations;
+    train.train_size = 600;
+    train.test_size = 128;
+    train.track_every = 1;
+    train.master.iter_duration_s = 2.0;
+    train.seed = seed;
+    CosimConfig {
+        serve: serve_config(iterations as f64 * 2.0, seed ^ 0xC0517),
+        train,
+        publish,
+        retain: 2,
+        measure_delta: true,
+    }
+}
+
+fn run(cfg: &CosimConfig) -> mlitb::cosim::CosimReport {
+    let spec = demo_spec();
+    let mut train_compute = DriftingCompute { param_count: spec.param_count };
+    let mut serve_compute = ModeledCompute { param_count: spec.param_count };
+    run_cosim(cfg, &spec, &mut train_compute, &mut serve_compute).expect("cosim run")
+}
+
+#[test]
+fn cosim_is_byte_deterministic_per_seed() {
+    // The acceptance criterion: equal seeds ⇒ byte-identical StalenessLog
+    // (and request log); a different seed diverges.
+    let cfg = cosim_config(6, PublicationPolicy::every(2), 7);
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert!(!a.staleness.is_empty());
+    assert_eq!(a.staleness.to_csv(), b.staleness.to_csv());
+    assert_eq!(a.serve.log.to_csv(), b.serve.log.to_csv());
+    assert_eq!(a.summary(), b.summary());
+    let c = run(&cosim_config(6, PublicationPolicy::every(2), 8));
+    assert_ne!(a.staleness.to_csv(), c.staleness.to_csv());
+}
+
+#[test]
+fn staleness_decreases_with_publication_cadence() {
+    // Faster cadence ⇒ fresher served answers: smaller snapshot age and
+    // (with drifting training) smaller prediction delta vs the live
+    // master.
+    let fresh = run(&cosim_config(8, PublicationPolicy::every(1), 11));
+    let stale = run(&cosim_config(8, PublicationPolicy::every(6), 11));
+    assert!(fresh.serve.completed > 0 && stale.serve.completed > 0);
+    let fresh_age = fresh.staleness.age_iters_summary().mean();
+    let stale_age = stale.staleness.age_iters_summary().mean();
+    assert!(
+        fresh_age < stale_age,
+        "cadence-1 age {fresh_age:.2} must undercut cadence-6 age {stale_age:.2}"
+    );
+    let fresh_delta = fresh.staleness.delta_summary().mean();
+    let stale_delta = stale.staleness.delta_summary().mean();
+    assert!(
+        fresh_delta < stale_delta,
+        "cadence-1 delta {fresh_delta:.5} must undercut cadence-6 delta {stale_delta:.5}"
+    );
+    // Drifting parameters really diverge: staleness shows up as nonzero
+    // prediction deltas under the slow cadence.
+    assert!(stale_delta > 1e-6, "drifting master must move predictions");
+}
+
+#[test]
+fn error_improvement_triggers_publication() {
+    // δ-triggered publication: the drifting trainer's tracked test error
+    // improves steadily, so publications fire without any cadence.
+    let cfg = cosim_config(
+        6,
+        PublicationPolicy {
+            every: 0,
+            min_improvement: 1e-4,
+        },
+        13,
+    );
+    let report = run(&cfg);
+    assert!(
+        report.publications.len() > 2,
+        "expected repeated error-triggered publications, got {:?}",
+        report.publications
+    );
+    assert!(report
+        .publications
+        .iter()
+        .skip(1)
+        .all(|p| p.trigger == PublishTrigger::ErrorImprovement));
+    // The training error really decreased over the run.
+    let errs: Vec<f64> = report
+        .train
+        .timeline
+        .records()
+        .iter()
+        .filter_map(|r| r.test_error)
+        .collect();
+    assert!(errs.len() >= 2);
+    assert!(
+        errs.last().unwrap() < errs.first().unwrap(),
+        "drifting training must reduce test error: {errs:?}"
+    );
+}
+
+#[test]
+fn every_answer_names_a_published_version_and_reconciles() {
+    let cfg = cosim_config(6, PublicationPolicy::every(2), 17);
+    let report = run(&cfg);
+    assert_eq!(
+        report.serve.completed + report.serve.rejected,
+        report.serve.offered
+    );
+    assert_eq!(report.staleness.len() as u64, report.serve.completed);
+    let published: Vec<u64> = report.publications.iter().map(|p| p.snapshot).collect();
+    // The staleness log and the request log agree on the serving version.
+    let by_id: BTreeMap<u64, u64> = report
+        .staleness
+        .records()
+        .iter()
+        .map(|r| (r.id, r.snapshot))
+        .collect();
+    for r in report.serve.log.records() {
+        assert!(published.contains(&r.snapshot), "{r:?}");
+        assert_eq!(by_id.get(&r.id), Some(&r.snapshot), "{r:?}");
+    }
+    // Conservation: published = evicted + resident.
+    assert_eq!(
+        report.publications.len() as u64,
+        report.evicted + report.resident as u64
+    );
+}
+
+/// (id → class) for records served under `version`.
+fn classes_under(
+    log: &mlitb::metrics::RequestLog,
+    version: u64,
+) -> BTreeMap<u64, u32> {
+    log.records()
+        .iter()
+        .filter(|r| r.snapshot == version)
+        .map(|r| (r.id, r.class))
+        .collect()
+}
+
+#[test]
+fn hot_swap_is_answer_consistent_and_rollback_is_byte_identical() {
+    // Engine-level: the same request schedule served three ways.
+    //   A: v1 for the whole run (the reference).
+    //   B: v1 → hot-swap to v2 mid-traffic → roll back to v1.
+    //   C: v2 for the whole run (the v2 reference).
+    // Every B answer must be byte-identical to the reference of the
+    // version that served it — a swap never leaks the other version's
+    // parameters into a request (and batches admitted under v1 that
+    // flush after the swap still execute against v1; the debug assert in
+    // the engine checks no batch mixes versions).
+    let spec = demo_spec();
+    let mut cfg = serve_config(4.0, 31);
+    cfg.cache_capacity = 0; // every answer executes: pure version identity
+    cfg.router.coalesce = false;
+    cfg.router.shards = 1;
+    let p1 = mlitb::model::init_params(&spec, 42);
+    let p2: Vec<f32> = p1.iter().map(|x| -x).collect();
+
+    let full_run = |params: Vec<f32>| {
+        let mut reg = SnapshotRegistry::new(spec.clone());
+        reg.publish_params(params, 0, "ref".into(), 0.0).unwrap();
+        let mut compute = ModeledCompute { param_count: spec.param_count };
+        let mut eng = ServeEngine::new(&cfg, &spec);
+        eng.pump(None, &mut reg, &mut compute, &mut NoopObserver).unwrap();
+        eng.into_report()
+    };
+    let ref_v1 = full_run(p1.clone());
+    let ref_v2 = full_run(p2.clone());
+
+    let mut reg = SnapshotRegistry::new(spec.clone());
+    reg.publish_params(p1.clone(), 0, "v1".into(), 0.0).unwrap();
+    let mut compute = ModeledCompute { param_count: spec.param_count };
+    let mut eng = ServeEngine::new(&cfg, &spec);
+    // Phase 1: v1 traffic.
+    eng.pump(Some(1_500.0), &mut reg, &mut compute, &mut NoopObserver).unwrap();
+    // Hot swap to v2 mid-traffic (pending v1 admissions still drain as v1).
+    reg.publish_params(p2, 10, "v2".into(), 1_500.0).unwrap();
+    eng.pump(Some(3_000.0), &mut reg, &mut compute, &mut NoopObserver).unwrap();
+    // Rollback: pin serving back to v1.
+    reg.set_active(1).unwrap();
+    eng.pump(None, &mut reg, &mut compute, &mut NoopObserver).unwrap();
+    let swapped = eng.into_report();
+
+    assert_eq!(swapped.completed, ref_v1.completed, "same schedule");
+    let under_v1 = classes_under(&swapped.log, 1);
+    let under_v2 = classes_under(&swapped.log, 2);
+    assert!(!under_v1.is_empty() && !under_v2.is_empty(), "both versions served");
+    let ref1 = classes_under(&ref_v1.log, 1);
+    let ref2 = classes_under(&ref_v2.log, 1);
+    for (id, class) in &under_v1 {
+        assert_eq!(
+            ref1.get(id),
+            Some(class),
+            "request {id}: v1 answer (incl. post-rollback) must match the v1 reference"
+        );
+    }
+    for (id, class) in &under_v2 {
+        assert_eq!(
+            ref2.get(id),
+            Some(class),
+            "request {id}: v2 answer must match the v2 reference"
+        );
+    }
+    // The swap was observable: the two parameter vectors disagree on at
+    // least some of the schedule's answers.
+    let differs = under_v2
+        .iter()
+        .filter(|(id, class)| ref1.get(id) != Some(class))
+        .count();
+    assert!(differs > 0, "sign-flipped parameters must change some answers");
+    // Rollback really happened: v1 answers exist after the v2 window.
+    let last_v2_done = swapped
+        .log
+        .records()
+        .iter()
+        .filter(|r| r.snapshot == 2)
+        .map(|r| r.done_ms)
+        .fold(0.0f64, f64::max);
+    assert!(
+        swapped
+            .log
+            .records()
+            .iter()
+            .any(|r| r.snapshot == 1 && r.done_ms > last_v2_done),
+        "post-rollback traffic must serve v1 again"
+    );
+}
+
+#[test]
+fn gc_waits_for_inflight_readers_under_live_traffic() {
+    // Slow shards + fast publication: batches regularly straddle
+    // publication boundaries, so GC sees pinned versions.  The run must
+    // complete (an evicted-while-pinned version would error the flush),
+    // release every pin, and still reclaim old versions eventually.
+    let spec = demo_spec();
+    let mut cfg = cosim_config(8, PublicationPolicy::every(1), 19);
+    cfg.retain = 1;
+    cfg.serve.shard_profiles = vec![
+        ServerProfile {
+            power_vps: 800.0,
+            ..ServerProfile::default()
+        },
+        ServerProfile {
+            power_vps: 800.0,
+            ..ServerProfile::default()
+        },
+    ];
+    let mut train_compute = DriftingCompute { param_count: spec.param_count };
+    let mut serve_compute = ModeledCompute { param_count: spec.param_count };
+    let report =
+        run_cosim(&cfg, &spec, &mut train_compute, &mut serve_compute).expect("cosim with GC");
+    assert!(report.evicted > 0, "retention 1 must reclaim versions");
+    assert_eq!(
+        report.publications.len() as u64,
+        report.evicted + report.resident as u64
+    );
+    assert_eq!(
+        report.serve.completed + report.serve.rejected,
+        report.serve.offered
+    );
+}

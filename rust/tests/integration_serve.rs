@@ -40,6 +40,8 @@ fn config(max_batch: usize, cache: usize) -> ServeConfig {
         },
         server: ServerProfile::default(),
         router: RouterConfig::single(),
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
         cache_capacity: cache,
         response_bytes: 256,
     }
