@@ -19,10 +19,10 @@
 //! zero-gradient modeled compute would make every snapshot identical and
 //! the staleness delta trivially zero).
 
-use mlitb::cosim::{run_cosim, CosimConfig, PublicationPolicy};
+use mlitb::cosim::{run_cosim, CosimConfig, CosimProject, PublicationPolicy};
 use mlitb::metrics::Table;
 use mlitb::netsim::LinkProfile;
-use mlitb::runtime::{DriftingCompute, ModeledCompute};
+use mlitb::runtime::{Compute, DriftingCompute, ModeledCompute};
 use mlitb::serve::{
     demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
     ServerProfile,
@@ -42,7 +42,7 @@ fn config(iters: u64, shards: usize, publish_every: u64) -> CosimConfig {
     train.master.iter_duration_s = 1.0;
     train.seed = 5;
     let serve = ServeConfig {
-        fleet: FleetConfig {
+        fleets: vec![FleetConfig {
             groups: vec![ClientSpec {
                 link: LinkProfile::Wifi,
                 rate_rps: RATE_RPS,
@@ -51,15 +51,14 @@ fn config(iters: u64, shards: usize, publish_every: u64) -> CosimConfig {
             duration_s: iters as f64 * train.master.iter_duration_s,
             input_pool: 256,
             seed: 23,
-        },
+        }],
         policy: BatchPolicy::default(),
         server: ServerProfile::default(),
         router: RouterConfig {
             shards,
             policy: RoutingPolicy::JoinShortestQueue,
             coalesce: true,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         },
         shard_profiles: Vec::new(),
         drained_shards: Vec::new(),
@@ -67,10 +66,15 @@ fn config(iters: u64, shards: usize, publish_every: u64) -> CosimConfig {
         response_bytes: 256,
     };
     CosimConfig {
-        train,
+        projects: vec![CosimProject {
+            spec,
+            train,
+            publish: PublicationPolicy::every(publish_every),
+            retain: 3,
+            weight: 1.0,
+        }],
         serve,
-        publish: PublicationPolicy::every(publish_every),
-        retain: 3,
+        egress_bytes_per_min: 0.0,
         measure_delta: true,
     }
 }
@@ -108,7 +112,8 @@ fn main() {
             let cfg = config(iters, shards, 0);
             let mut train_c = DriftingCompute { param_count: spec.param_count };
             let mut serve_c = ModeledCompute { param_count: spec.param_count };
-            run_cosim(&cfg, &spec, &mut train_c, &mut serve_c).expect("cosim baseline")
+            run_cosim(&cfg, vec![&mut train_c as &mut dyn Compute], &mut serve_c)
+                .expect("cosim baseline")
         };
         let base_p99 = baseline.serve.latency().quantile(0.99);
         let mut ages: Vec<(u64, f64)> = Vec::new();
@@ -117,7 +122,8 @@ fn main() {
             let cfg = config(iters, shards, cadence);
             let mut train_c = DriftingCompute { param_count: spec.param_count };
             let mut serve_c = ModeledCompute { param_count: spec.param_count };
-            let report = run_cosim(&cfg, &spec, &mut train_c, &mut serve_c).expect("cosim run");
+            let report = run_cosim(&cfg, vec![&mut train_c as &mut dyn Compute], &mut serve_c)
+                .expect("cosim run");
             let age_it = report.staleness.age_iters_summary();
             let age_ms = report.staleness.age_ms_summary();
             let lat = report.serve.latency();

@@ -1,0 +1,273 @@
+//! Multi-tenant sweep: projects × offered rate × publication budget —
+//! the control-plane PR's acceptance figure.
+//!
+//! Three claims, one table each:
+//!
+//! 1. **Fair share holds.**  A hot project overloading the shared tier
+//!    is shed at its own weighted cap; the cold project riding the same
+//!    shards keeps a bounded (near-zero) shed rate.  With fair share
+//!    disabled the hot backlog fills every queue and the cold project
+//!    sheds at nearly the hot rate.
+//! 2. **Publication is byte-accounted.**  Snapshots charge master-egress
+//!    bytes and activate only when their transfer completes: shrinking
+//!    the shared bytes/min budget grows the activation lag (iterations
+//!    between the publish decision and the hot swap) and with it the
+//!    served staleness — concurrent publishers queue on one link.
+//! 3. **Isolation.**  Per-project staleness percentiles come from
+//!    per-project traces; one project's publications never stamp the
+//!    other's answers.
+//!
+//!     cargo bench --bench fig_multitenant            # full sweep
+//!     cargo bench --bench fig_multitenant -- --fast  # fewer points
+//!
+//! Everything runs on the modeled backends (no artifacts needed).
+
+use mlitb::cosim::{run_cosim, CosimConfig, CosimProject, PublicationPolicy};
+use mlitb::metrics::Table;
+use mlitb::netsim::LinkProfile;
+use mlitb::runtime::{Compute, DriftingCompute, ModeledCompute};
+use mlitb::serve::{
+    demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId, RouterConfig,
+    RoutingPolicy, ServeConfig, ServeReport, ServeSim, ServerProfile,
+};
+use mlitb::sim::SimConfig;
+
+fn fleet(rate_rps: f64, clients: usize, duration_s: f64, seed: u64) -> FleetConfig {
+    FleetConfig {
+        groups: vec![ClientSpec {
+            link: LinkProfile::Lan,
+            rate_rps,
+            count: clients,
+        }],
+        duration_s,
+        input_pool: 512,
+        seed,
+    }
+}
+
+/// Two projects behind one shared tier: project 0 hot, project 1 cold.
+fn serve_cfg(hot_rps: f64, cold_rps: f64, duration_s: f64, fair_share: bool) -> ServeConfig {
+    ServeConfig {
+        fleets: vec![
+            fleet(hot_rps, 12, duration_s, 7),
+            fleet(cold_rps, 4, duration_s, 8),
+        ],
+        policy: BatchPolicy {
+            queue_depth: 64,
+            ..BatchPolicy::default()
+        },
+        server: ServerProfile::default(),
+        router: RouterConfig {
+            shards: 2,
+            policy: RoutingPolicy::JoinShortestQueue,
+            fair_share,
+            ..RouterConfig::single()
+        },
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
+        cache_capacity: 0,
+        response_bytes: 256,
+    }
+}
+
+fn serve_run(cfg: ServeConfig) -> ServeReport {
+    let spec = demo_spec();
+    let mut plane = ControlPlane::new();
+    for seed in [41u64, 42] {
+        let p = plane.register(spec.clone(), 1.0);
+        plane
+            .registry_mut(p)
+            .publish_params(mlitb::model::init_params(&spec, seed), 0, "bench".into(), 0.0)
+            .expect("publish");
+    }
+    let mut compute = ModeledCompute {
+        param_count: spec.param_count,
+    };
+    ServeSim::new(cfg, plane, &mut compute)
+        .run()
+        .expect("serve sim")
+}
+
+fn cosim_cfg(iters: u64, egress_bytes_per_min: f64) -> CosimConfig {
+    let spec = demo_spec();
+    let duration_s = iters as f64 * 1.0;
+    let project = |seed: u64| {
+        let mut train = SimConfig::paper_scaling(2, &spec);
+        train.iterations = iters;
+        train.train_size = 800;
+        train.test_size = 128;
+        train.track_every = 4;
+        train.master.iter_duration_s = 1.0;
+        train.seed = seed;
+        CosimProject {
+            spec: spec.clone(),
+            train,
+            publish: PublicationPolicy::every(2),
+            retain: 3,
+            weight: 1.0,
+        }
+    };
+    CosimConfig {
+        projects: vec![project(5), project(6)],
+        serve: ServeConfig {
+            fleets: vec![
+                fleet(12.0, 8, duration_s, 23),
+                fleet(12.0, 8, duration_s, 24),
+            ],
+            policy: BatchPolicy::default(),
+            server: ServerProfile::default(),
+            router: RouterConfig {
+                shards: 2,
+                policy: RoutingPolicy::JoinShortestQueue,
+                coalesce: true,
+                ..RouterConfig::single()
+            },
+            shard_profiles: Vec::new(),
+            drained_shards: Vec::new(),
+            cache_capacity: 1_024,
+            response_bytes: 256,
+        },
+        egress_bytes_per_min,
+        measure_delta: true,
+    }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let spec = demo_spec();
+    let snapshot_kb = spec.param_count as f64 * 4.0 / 1000.0;
+    println!(
+        "multitenant sweep — {} ({} params, {snapshot_kb:.0} KB/snapshot), 2 projects \
+         behind one shared tier\n",
+        spec.name, spec.param_count
+    );
+
+    // ── 1. fair-share admission under a hot/cold split ────────────────
+    // Hot project ≈ 2× one shard's service rate; cold project trickles.
+    let duration_s = if fast { 5.0 } else { 10.0 };
+    let hot_rps = 500.0; // × 12 clients = 6000 rps over ~3000 rps of tier
+    let cold_rps = 10.0; // × 4 clients = 40 rps
+    let mut fair_table = Table::new(
+        "fair share — hot project overload, cold project trickle (2 shards jsq, depth 64)",
+        &[
+            "fair share", "project", "offered", "completed", "shed", "shed rate",
+        ],
+    );
+    let mut verdict_fair: Vec<(bool, f64, f64)> = Vec::new(); // (fair, hot shed, cold shed)
+    for fair_share in [true, false] {
+        let report = serve_run(serve_cfg(hot_rps, cold_rps, duration_s, fair_share));
+        let hot = report.project(ProjectId::new(0));
+        let cold = report.project(ProjectId::new(1));
+        for stats in [hot, cold] {
+            fair_table.row(vec![
+                if fair_share { "on".into() } else { "off".into() },
+                stats.project.to_string(),
+                stats.offered.to_string(),
+                stats.completed.to_string(),
+                stats.rejected.to_string(),
+                format!("{:.3}", stats.shed_rate()),
+            ]);
+        }
+        verdict_fair.push((fair_share, hot.shed_rate(), cold.shed_rate()));
+    }
+    fair_table.print();
+    for (fair, hot_shed, cold_shed) in &verdict_fair {
+        if *fair {
+            let mark = if *cold_shed < 0.05 && *hot_shed > 0.2 { "✓" } else { "✗" };
+            println!(
+                "  {mark} fair share on: hot sheds {hot_shed:.3} at its cap, cold stays \
+                 bounded at {cold_shed:.3}"
+            );
+        } else {
+            let mark = if *cold_shed > 0.1 { "✓" } else { "✗" };
+            println!(
+                "  {mark} fair share off: the hot backlog starves the cold project \
+                 (cold shed {cold_shed:.3})"
+            );
+        }
+    }
+    println!();
+
+    // ── 2. publication budget: egress bytes delay activation ──────────
+    let iters: u64 = if fast { 8 } else { 16 };
+    // ~51 KB/snapshot at T=1s: 12 MB/min ≈ instant, 1 MB/min ≈ 3
+    // iterations on the link, 0.5 MB/min ≈ 6 — and the two projects'
+    // transfers queue behind each other.
+    let budgets: &[(f64, &str)] = if fast {
+        &[(0.0, "∞"), (1.0e6, "1.0")]
+    } else {
+        &[(0.0, "∞"), (12.0e6, "12.0"), (1.0e6, "1.0"), (0.5e6, "0.5")]
+    };
+    let mut pub_table = Table::new(
+        "publication budget — activation lag & staleness vs egress MB/min (2 projects, publish every 2)",
+        &[
+            "egress MB/min", "pubs", "egress KB", "mean lag (iters)", "max lag",
+            "p0 age p50", "p1 age p50", "completed",
+        ],
+    );
+    let mut lags: Vec<(String, f64)> = Vec::new();
+    for &(budget, label) in budgets {
+        let cfg = cosim_cfg(iters, budget);
+        let mut train_a = DriftingCompute { param_count: spec.param_count };
+        let mut train_b = DriftingCompute { param_count: spec.param_count };
+        let mut serve_c = ModeledCompute { param_count: spec.param_count };
+        let report = run_cosim(
+            &cfg,
+            vec![
+                &mut train_a as &mut dyn Compute,
+                &mut train_b as &mut dyn Compute,
+            ],
+            &mut serve_c,
+        )
+        .expect("cosim run");
+        let live: Vec<_> = report
+            .publications
+            .iter()
+            .filter(|p| p.bytes > 0)
+            .collect();
+        let mean_lag = if live.is_empty() {
+            0.0
+        } else {
+            live.iter().map(|p| p.activation_lag_iters() as f64).sum::<f64>() / live.len() as f64
+        };
+        let max_lag = live
+            .iter()
+            .map(|p| p.activation_lag_iters())
+            .max()
+            .unwrap_or(0);
+        let age = |i: u32| {
+            report
+                .staleness
+                .for_project(ProjectId::new(i))
+                .age_iters_summary()
+                .median()
+        };
+        pub_table.row(vec![
+            label.to_string(),
+            report.publications.len().to_string(),
+            format!("{:.0}", report.egress_bytes as f64 / 1000.0),
+            format!("{mean_lag:.1}"),
+            max_lag.to_string(),
+            format!("{:.1}", age(0)),
+            format!("{:.1}", age(1)),
+            report.serve.completed.to_string(),
+        ]);
+        lags.push((label.to_string(), mean_lag));
+    }
+    pub_table.print();
+    let monotone = lags.windows(2).all(|w| w[0].1 <= w[1].1 + 1e-9);
+    let mark = if monotone { "✓" } else { "✗" };
+    let pairs: Vec<String> = lags
+        .iter()
+        .map(|(label, lag)| format!("{label} MB/min: {lag:.1} it"))
+        .collect();
+    println!(
+        "  {mark} activation lag grows as the egress budget shrinks ({})",
+        pairs.join(", ")
+    );
+    println!(
+        "\n  a publication is no longer free: its bytes queue on the shared egress link,\n\
+         activation waits for the transfer, and a starved budget turns straight into\n\
+         staleness — the dial `--egress-mb-min` trades."
+    );
+}

@@ -25,8 +25,8 @@ use mlitb::model::init_params;
 use mlitb::netsim::LinkProfile;
 use mlitb::runtime::ModeledCompute;
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
-    ServeReport, ServeSim, ServerProfile, SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId, RouterConfig,
+    RoutingPolicy, ServeConfig, ServeReport, ServeSim, ServerProfile,
 };
 
 /// Nominal single-shard service capacity (rps) at full batch for the demo
@@ -61,7 +61,7 @@ fn run(
 ) -> ServeReport {
     let spec = demo_spec();
     let cfg = ServeConfig {
-        fleet,
+        fleets: vec![fleet],
         policy: BatchPolicy {
             queue_depth,
             ..BatchPolicy::default()
@@ -76,14 +76,15 @@ fn run(
         cache_capacity: cache,
         response_bytes: 256,
     };
-    let mut registry = SnapshotRegistry::new(spec.clone());
-    registry
+    let mut plane = ControlPlane::single(spec.clone());
+    plane
+        .registry_mut(ProjectId::new(0))
         .publish_params(init_params(&spec, 1), 0, "bench".into(), 0.0)
         .expect("publish snapshot");
     let mut compute = ModeledCompute {
         param_count: spec.param_count,
     };
-    let mut sim = ServeSim::new(cfg, registry, &mut compute);
+    let mut sim = ServeSim::new(cfg, plane, &mut compute);
     sim.run().expect("serve sim")
 }
 
@@ -91,9 +92,7 @@ fn router(shards: usize, policy: RoutingPolicy) -> RouterConfig {
     RouterConfig {
         shards,
         policy,
-        coalesce: false,
-        autotune: false,
-        window_ms: 1_000.0,
+        ..RouterConfig::single()
     }
 }
 

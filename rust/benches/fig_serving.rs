@@ -22,8 +22,8 @@ use mlitb::model::init_params;
 use mlitb::netsim::LinkProfile;
 use mlitb::runtime::ModeledCompute;
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, ServeConfig, ServeSim,
-    ServerProfile, SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId, RouterConfig,
+    ServeConfig, ServeSim, ServerProfile,
 };
 
 fn main() {
@@ -63,7 +63,7 @@ fn main() {
     for &link in &links {
         for &rate in rates {
             let cfg = ServeConfig {
-                fleet: FleetConfig {
+                fleets: vec![FleetConfig {
                     groups: vec![ClientSpec {
                         link,
                         rate_rps: rate / clients as f64,
@@ -72,7 +72,7 @@ fn main() {
                     duration_s,
                     input_pool: 400,
                     seed: 7,
-                },
+                }],
                 policy: BatchPolicy::default(),
                 server: ServerProfile::default(),
                 // Single PR-1-style endpoint: this sweep isolates
@@ -83,14 +83,15 @@ fn main() {
                 cache_capacity: 2048,
                 response_bytes: 256,
             };
-            let mut registry = SnapshotRegistry::new(spec.clone());
-            registry
+            let mut plane = ControlPlane::single(spec.clone());
+            plane
+                .registry_mut(ProjectId::new(0))
                 .publish_params(params.clone(), 0, "bench".into(), 0.0)
                 .expect("publish snapshot");
             let mut compute = ModeledCompute {
                 param_count: spec.param_count,
             };
-            let mut sim = ServeSim::new(cfg, registry, &mut compute);
+            let mut sim = ServeSim::new(cfg, plane, &mut compute);
             let report = sim.run().expect("serve sim");
             let lat = report.latency();
             table.row(vec![

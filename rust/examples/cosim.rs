@@ -1,6 +1,6 @@
-//! Co-simulation walkthrough: a live training master publishing
-//! snapshots into a sharded serving tier mid-traffic, on one shared
-//! virtual clock.
+//! Co-simulation walkthrough: two live training masters (two hosted
+//! projects, §3.1) publishing byte-accounted snapshots into one shared
+//! sharded serving tier mid-traffic, on one virtual clock.
 //!
 //!     cargo run --release --example cosim
 //!
@@ -8,74 +8,102 @@
 //! backend (parameters actually move, so staleness is measurable),
 //! serving the deterministic modeled predictor.
 
-use mlitb::cosim::{run_cosim, CosimConfig, PublicationPolicy};
+use mlitb::cosim::{run_cosim, CosimConfig, CosimProject, PublicationPolicy};
 use mlitb::netsim::LinkProfile;
-use mlitb::runtime::{DriftingCompute, ModeledCompute};
+use mlitb::runtime::{Compute, DriftingCompute, ModeledCompute};
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
-    ServerProfile,
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, ProjectId, RouterConfig, RoutingPolicy,
+    ServeConfig, ServerProfile,
 };
 use mlitb::sim::SimConfig;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let spec = demo_spec();
-    let mut train = SimConfig::paper_scaling(3, &spec);
-    train.iterations = 12;
-    train.train_size = 1_000;
-    train.test_size = 256;
-    train.track_every = 3;
-    train.master.iter_duration_s = 2.0;
+    let iters = 12u64;
+    let project = |seed: u64, publish_every: u64| {
+        let mut train = SimConfig::paper_scaling(3, &spec);
+        train.iterations = iters;
+        train.train_size = 1_000;
+        train.test_size = 256;
+        train.track_every = 3;
+        train.master.iter_duration_s = 2.0;
+        train.seed = seed;
+        CosimProject {
+            spec: spec.clone(),
+            train,
+            publish: PublicationPolicy {
+                every: publish_every,
+                min_improvement: 0.0,
+                hysteresis: 0,
+            },
+            retain: 2,
+            weight: 1.0,
+        }
+    };
+    let fleet = |rate_rps: f64, seed: u64| FleetConfig {
+        groups: vec![ClientSpec {
+            link: LinkProfile::Wifi,
+            rate_rps,
+            count: 6,
+        }],
+        duration_s: iters as f64 * 2.0,
+        input_pool: 64,
+        seed,
+    };
 
     let cfg = CosimConfig {
+        // Project 0 publishes fast, project 1 slowly — two freshness
+        // policies behind one tier.
+        projects: vec![project(1, 3), project(2, 6)],
         serve: ServeConfig {
-            fleet: FleetConfig {
-                groups: vec![ClientSpec {
-                    link: LinkProfile::Wifi,
-                    rate_rps: 10.0,
-                    count: 6,
-                }],
-                duration_s: train.iterations as f64 * train.master.iter_duration_s,
-                input_pool: 64,
-                seed: 9,
-            },
+            fleets: vec![fleet(10.0, 9), fleet(6.0, 10)],
             policy: BatchPolicy::default(),
             server: ServerProfile::default(),
             router: RouterConfig {
                 shards: 2,
                 policy: RoutingPolicy::JoinShortestQueue,
                 coalesce: true,
-                autotune: false,
-                window_ms: 1_000.0,
+                ..RouterConfig::single()
             },
             shard_profiles: Vec::new(),
             drained_shards: Vec::new(),
             cache_capacity: 512,
             response_bytes: 256,
         },
-        train,
-        publish: PublicationPolicy {
-            every: 3,
-            min_improvement: 0.0,
-        },
-        retain: 2,
+        // ~51 KB per snapshot at 2 MB/min: transfers take ~1.5 s of the
+        // 2 s iteration window — activation visibly trails publication.
+        egress_bytes_per_min: 2.0e6,
         measure_delta: true,
     };
 
-    let mut train_compute = DriftingCompute { param_count: spec.param_count };
+    let mut train_a = DriftingCompute { param_count: spec.param_count };
+    let mut train_b = DriftingCompute { param_count: spec.param_count };
     let mut serve_compute = ModeledCompute { param_count: spec.param_count };
-    let report = run_cosim(&cfg, &spec, &mut train_compute, &mut serve_compute)?;
+    let report = run_cosim(
+        &cfg,
+        vec![
+            &mut train_a as &mut dyn Compute,
+            &mut train_b as &mut dyn Compute,
+        ],
+        &mut serve_compute,
+    )?;
 
-    println!("one shared clock, two pillars:");
-    println!("  train: {}", report.train.summary());
+    println!("one shared clock, two projects, two pillars:");
+    for (i, train) in report.train.iter().enumerate() {
+        println!("  train p{i}: {}", train.summary());
+    }
     println!("  serve: {}", report.serve.summary());
-    println!("\npublications (hot-swapped mid-traffic):");
+    println!("\npublications (byte-accounted, hot-swapped mid-traffic):");
     for p in &report.publications {
         println!(
-            "  v{} at iteration {} (t={:.1}s, {}){}",
-            p.snapshot,
+            "  {} at iteration {} (t={:.1}s, {}, {} KB) → active t={:.1}s iter {}{}",
+            p.version,
             p.iteration,
             p.t_ms / 1000.0,
             p.trigger.name(),
+            p.bytes / 1000,
+            p.activated_ms / 1000.0,
+            p.activated_iteration,
             if p.evicted.is_empty() {
                 String::new()
             } else {
@@ -83,26 +111,35 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     " — GC reclaimed {}",
                     p.evicted
                         .iter()
-                        .map(|v| format!("v{v}"))
+                        .map(ToString::to_string)
                         .collect::<Vec<_>>()
                         .join(", ")
                 )
             }
         );
     }
-    println!("\ntraffic by version (every answer names its snapshot):");
-    for (version, n) in report.staleness.by_snapshot() {
-        println!("  v{version}: {n} requests");
-    }
-    let ages = report.staleness.age_iters_summary();
     println!(
-        "\nstaleness: p50 {:.1} / p99 {:.1} iterations behind the live master \
-         (mean prediction delta {:.4}, class flips {:.3})",
-        ages.median(),
-        ages.quantile(0.99),
-        report.staleness.delta_summary().mean(),
-        report.staleness.stale_class_rate(),
+        "\negress: {:.0} KB of snapshots crossed the master link",
+        report.egress_bytes as f64 / 1000.0
     );
+    println!("\ntraffic by version (every answer names its project's snapshot):");
+    for (version, n) in report.staleness.by_version() {
+        println!("  {version}: {n} requests");
+    }
+    for i in 0..2u32 {
+        let project = ProjectId::new(i);
+        let stale = report.staleness.for_project(project);
+        let ages = stale.age_iters_summary();
+        println!(
+            "{project} staleness: p50 {:.1} / p99 {:.1} iterations behind its master \
+             (mean delta {:.4}, class flips {:.3}) over {} answers",
+            ages.median(),
+            ages.quantile(0.99),
+            stale.delta_summary().mean(),
+            stale.stale_class_rate(),
+            stale.len(),
+        );
+    }
     println!("done: {}", report.summary());
     Ok(())
 }

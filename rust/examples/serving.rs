@@ -13,8 +13,8 @@ use mlitb::model::{init_params, ResearchClosure};
 use mlitb::netsim::LinkProfile;
 use mlitb::runtime::{Compute, ModeledCompute};
 use mlitb::serve::{
-    demo_spec, BatchExecutor, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy,
-    ServeConfig, ServeSim, ServerProfile, SnapshotRegistry,
+    demo_spec, BatchExecutor, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId,
+    RouterConfig, RoutingPolicy, ServeConfig, ServeSim, ServerProfile,
 };
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -25,11 +25,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     closure.iteration = 1_000;
     closure.notes = "demo: pretend this finished training".into();
 
-    // 2. The snapshot registry versions it and makes it servable.
-    let mut registry = SnapshotRegistry::new(spec.clone());
-    let v1 = registry.publish_closure(&closure, 0.0)?;
+    // 2. The control plane hosts the project; its registry versions the
+    //    closure and makes it servable under a typed ModelVersion.
+    let mut plane = ControlPlane::single(spec.clone());
+    let project = ProjectId::new(0);
+    let v1 = plane.registry_mut(project).publish_closure(&closure, 0.0)?;
     println!(
-        "published {} snapshot v{v1} ({} params, iteration {})",
+        "published {} snapshot {v1} ({} params, iteration {})",
         spec.name, spec.param_count, closure.iteration
     );
 
@@ -37,7 +39,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     //    through a full batch and alone, compare.
     let mut compute = ModeledCompute { param_count: spec.param_count };
     let mut executor = BatchExecutor::new(spec.clone(), ServerProfile::default());
-    let snapshot = registry.active().unwrap().clone();
+    let snapshot = plane.active(project).unwrap().clone();
     let inputs: Vec<Vec<f32>> = (0..8)
         .map(|i| (0..spec.input_len()).map(|j| ((i * 97 + j) % 255) as f32 / 255.0).collect())
         .collect();
@@ -54,7 +56,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 4. Simulated production: 12 clients across LAN/wifi/cellular firing
     //    open-loop requests for 10 virtual seconds.
     let cfg = ServeConfig {
-        fleet: FleetConfig {
+        fleets: vec![FleetConfig {
             groups: vec![
                 ClientSpec { link: LinkProfile::Lan, rate_rps: 12.0, count: 4 },
                 ClientSpec { link: LinkProfile::Wifi, rate_rps: 8.0, count: 4 },
@@ -63,7 +65,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             duration_s: 10.0,
             input_pool: 64, // small pool → repeated inputs → cache hits
             seed: 7,
-        },
+        }],
         policy: BatchPolicy { max_batch: 32, max_wait_ms: 5.0, queue_depth: 128 },
         server: ServerProfile::default(),
         router: RouterConfig::single(),
@@ -72,7 +74,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         cache_capacity: 512,
         response_bytes: 256,
     };
-    let mut sim = ServeSim::new(cfg.clone(), registry.clone(), &mut compute as &mut dyn Compute);
+    let mut sim = ServeSim::new(cfg.clone(), plane.clone(), &mut compute as &mut dyn Compute);
     let report = sim.run()?;
     println!("\nserve-sim (single endpoint): {}", report.summary());
     let lat = report.latency();
@@ -98,9 +100,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         policy: RoutingPolicy::JoinShortestQueue,
         coalesce: true,
         autotune: true,
-        window_ms: 1_000.0,
+        ..RouterConfig::single()
     };
-    let mut routed_sim = ServeSim::new(routed_cfg, registry, &mut compute as &mut dyn Compute);
+    let mut routed_sim = ServeSim::new(routed_cfg, plane, &mut compute as &mut dyn Compute);
     let routed = routed_sim.run()?;
     println!("\nserve-sim (routed fleet): {}", routed.summary());
     for s in &routed.per_shard {

@@ -1,64 +1,109 @@
-//! The co-simulation driver: training master and serving tier stepping
-//! one shared virtual clock.
+//! The co-simulation driver: N training masters (one per hosted project)
+//! and one shared serving tier stepping a single virtual clock.
 //!
-//! Loop shape (one training iteration = one serving window):
+//! Per project, the loop shape is unchanged from the single-tenant
+//! driver (one training iteration = one serving window):
 //!
-//! 1. Capture the master's live parameters — they are what the fleet's
-//!    broadcast installed at the window's opening boundary, and what the
-//!    staleness probe compares served answers against.
-//! 2. `Simulation::step()` advances the clock to the next iteration
+//! 1. Capture the project master's live parameters — they are what the
+//!    fleet's broadcast installed at the window's opening boundary, and
+//!    what the staleness probe compares served answers against.
+//! 2. `Simulation::step()` advances that master to its next iteration
 //!    boundary (`wall_ms` includes the sync barrier's slowest-worker
 //!    wait, so serving load sees the *real* cadence, stragglers and all).
-//! 3. `ServeEngine::pump(Some(boundary))` serves every request arrival
-//!    and batch flush inside the window against the registry as-is.
-//! 4. At the boundary, the [`PublicationPolicy`] may publish the freshly
-//!    reduced parameters — a hot swap for all subsequent admissions —
-//!    and traffic-driven GC reclaims unpinned stale versions.
+//! 3. The serving engine pumps every request arrival and batch flush up
+//!    to the boundary against the control plane as-is.
+//! 4. At the boundary, the project's [`PublicationPolicy`] may publish
+//!    the freshly reduced parameters.
 //!
-//! After the last iteration a final unbounded pump drains the remaining
-//! schedule (open-loop arrivals may outlast training).
+//! Across projects the boundaries interleave: the driver processes them
+//! in global time order (each master has its own iteration wall time), so
+//! one project's publications land exactly between the serving windows
+//! they belong to — never retroactively.
+//!
+//! **Byte-accounted publication.**  A publication *stages* the snapshot
+//! (`param_count × 4` bytes) and queues its transfer on the shared
+//! [`EgressBudget`]; the version activates only when the transfer
+//! completes — the engine is pumped exactly to each completion instant,
+//! so requests arriving mid-transfer still serve the previous version.
+//! Concurrent publishers (several projects, or one fast-publishing
+//! project) serialize on the link, and a large model visibly delays its
+//! own activation (`activated_iteration > iteration`).
+//!
+//! After the last boundary a final unbounded pump drains the remaining
+//! schedule and any in-flight transfers (open-loop arrivals may outlast
+//! training).
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::StalenessLog;
 use crate::model::ModelSpec;
 use crate::runtime::Compute;
-use crate::serve::{ServeConfig, ServeEngine, ServeReport, SnapshotRegistry};
+use crate::serve::{ControlPlane, ModelVersion, ProjectId, ServeConfig, ServeEngine, ServeReport};
 use crate::sim::{RunReport, SimConfig, Simulation};
 
 use super::probe::StalenessProbe;
-use super::publish::{PublicationPolicy, PublicationRecord, PublishTrigger};
+use super::publish::{
+    EgressBudget, PublicationPolicy, PublicationRecord, PublicationState, PublishTrigger,
+};
+
+/// One hosted project's side of the co-simulation: its model, training
+/// run, publication policy and serving weight.  The project's request
+/// fleet lives in `CosimConfig::serve.fleets` at the same index.
+#[derive(Debug, Clone)]
+pub struct CosimProject {
+    pub spec: ModelSpec,
+    pub train: SimConfig,
+    pub publish: PublicationPolicy,
+    /// Registry retention: keep the newest N versions (active, pinned and
+    /// staged versions always survive).
+    pub retain: usize,
+    /// Fair-share admission weight on the shared serving tier.
+    pub weight: f64,
+}
 
 /// Everything one co-simulation run needs besides the compute backends.
 #[derive(Debug, Clone)]
 pub struct CosimConfig {
-    pub train: SimConfig,
+    /// The hosted projects (index = `ProjectId`).
+    pub projects: Vec<CosimProject>,
+    /// The shared serving tier; `serve.fleets[i]` is project i's fleet.
     pub serve: ServeConfig,
-    pub publish: PublicationPolicy,
-    /// Registry retention: keep the newest N versions (the active version
-    /// and pinned versions always survive).
-    pub retain: usize,
-    /// Re-predict each served answer against the live master parameters
-    /// (prediction delta + class flips).  Costs one extra execution per
-    /// distinct input per iteration.
+    /// Shared master-egress budget for snapshot publication (bytes/min;
+    /// ≤ 0 = unthrottled, transfers are instant but still accounted).
+    pub egress_bytes_per_min: f64,
+    /// Re-predict each served answer against its project's live master
+    /// parameters (prediction delta + class flips).  Costs one extra
+    /// execution per distinct input per iteration per project.
     pub measure_delta: bool,
 }
 
 /// Outcome of one co-simulation run.
 #[derive(Debug, Clone)]
 pub struct CosimReport {
-    pub train: RunReport,
+    /// One training report per project (index = `ProjectId`).
+    pub train: Vec<RunReport>,
     pub serve: ServeReport,
     pub staleness: StalenessLog,
-    /// Every publication, in order (index 0 is the initial snapshot).
+    /// Every publication across every project, in decision order (the
+    /// first `projects.len()` entries are the initial snapshots).
     pub publications: Vec<PublicationRecord>,
+    /// Master-egress bytes charged for snapshot transfers.
+    pub egress_bytes: u64,
     /// Versions reclaimed by traffic-driven GC over the run.
     pub evicted: u64,
-    /// Versions resident in the registry at end of run.
+    /// Versions resident across every registry at end of run.
     pub resident: usize,
 }
 
 impl CosimReport {
+    /// Publications of one project, decision order.
+    pub fn publications_for(&self, project: ProjectId) -> Vec<&PublicationRecord> {
+        self.publications
+            .iter()
+            .filter(|p| p.project() == project)
+            .collect()
+    }
+
     /// One-line human summary: staleness beside latency.  Quantiles and
     /// the probe's delta print as `-` when unmeasured (empty run, or the
     /// delta probe disabled).
@@ -79,9 +124,12 @@ impl CosimReport {
             format!("{:.4}", delta.mean())
         };
         format!(
-            "pubs={} evicted={} resident={} age_iters p50={} p99={} \
-             delta_mean={delta_mean} stale_class={:.3} latency p50={}ms p99={}ms completed={}",
+            "projects={} pubs={} egress_mb={:.1} evicted={} resident={} age_iters p50={} \
+             p99={} delta_mean={delta_mean} stale_class={:.3} latency p50={}ms p99={}ms \
+             completed={}",
+            self.train.len(),
             self.publications.len(),
+            self.egress_bytes as f64 / 1.0e6,
             self.evicted,
             self.resident,
             ms(age.median()),
@@ -94,101 +142,247 @@ impl CosimReport {
     }
 }
 
-/// Run the co-simulation to completion.  `train_compute` backs the
-/// master's gradient/eval work, `serve_compute` the prediction tier (two
-/// backends because each side holds its own mutable borrow for the whole
-/// run; modeled runs pass two instances of the same scorer).
-pub fn run_cosim(
+/// A staged snapshot whose bytes are still crossing the egress link.
+#[derive(Debug, Clone, Copy)]
+struct PendingTransfer {
+    done_ms: f64,
+    version: ModelVersion,
+    /// Index into the publications vec (to stamp activation facts).
+    record: usize,
+}
+
+/// Pump the serving engine to `horizon`, activating every staged
+/// transfer that completes on the way — the engine is pumped exactly to
+/// each completion instant first, so requests arriving mid-transfer
+/// still serve the previous version.
+#[allow(clippy::too_many_arguments)]
+fn pump_through(
+    engine: &mut ServeEngine,
+    plane: &mut ControlPlane,
+    pending: &mut Vec<PendingTransfer>,
+    publications: &mut [PublicationRecord],
+    live_iter: &[u64],
+    horizon: Option<f64>,
+    compute: &mut dyn Compute,
+    probe: &mut StalenessProbe,
+) -> Result<()> {
+    while pending
+        .first()
+        .is_some_and(|t| horizon.is_none_or(|h| t.done_ms <= h))
+    {
+        let t = pending.remove(0);
+        engine.pump(Some(t.done_ms), plane, compute, probe)?;
+        plane
+            .registry_mut(t.version.project)
+            .activate(t.version)
+            .map_err(|e| anyhow!(e))?;
+        publications[t.record].activated_ms = t.done_ms;
+        publications[t.record].activated_iteration = live_iter[t.version.project.index()];
+    }
+    engine.pump(horizon, plane, compute, probe)?;
+    Ok(())
+}
+
+/// Earliest unprocessed iteration boundary: `(project index, time)`,
+/// ties to the lowest index.  `None` when every master is done.
+fn next_boundary(boundaries: &[Option<f64>]) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, ob) in boundaries.iter().enumerate() {
+        if let Some(b) = *ob {
+            if best.is_none_or(|(_, bb)| b < bb) {
+                best = Some((i, b));
+            }
+        }
+    }
+    best
+}
+
+/// Run the co-simulation to completion.  `train_computes` backs each
+/// project master's gradient/eval work (one per project, id order);
+/// `serve_compute` the shared prediction tier (separate backends because
+/// each side holds its own mutable borrow for the whole run; modeled
+/// runs pass instances of the same scorer).
+pub fn run_cosim<'c>(
     cfg: &CosimConfig,
-    spec: &ModelSpec,
-    train_compute: &mut dyn Compute,
+    train_computes: Vec<&'c mut dyn Compute>,
     serve_compute: &mut dyn Compute,
 ) -> Result<CosimReport> {
-    let mut sim = Simulation::new(cfg.train.clone(), spec.clone(), train_compute);
-    let mut registry = SnapshotRegistry::new(spec.clone());
-    let mut engine = ServeEngine::new(&cfg.serve, spec);
-    let mut probe = StalenessProbe::new(spec.clone(), cfg.measure_delta);
-    let retain = cfg.retain.max(1);
+    let n = cfg.projects.len();
+    if n == 0 {
+        bail!("cosim needs at least one project");
+    }
+    if train_computes.len() != n {
+        bail!(
+            "{} train compute backend(s) for {} project(s)",
+            train_computes.len(),
+            n
+        );
+    }
+    if cfg.serve.fleets.len() != n {
+        bail!(
+            "{} serve fleet(s) for {} project(s)",
+            cfg.serve.fleets.len(),
+            n
+        );
+    }
 
-    // The run starts serving the iteration-0 parameters.
-    let v0 = registry
-        .publish_params(
-            sim.master().params().to_vec(),
-            0,
-            "cosim: initial".into(),
-            0.0,
-        )
-        .map_err(|e| anyhow!(e))?;
-    let mut publications = vec![PublicationRecord {
-        snapshot: v0,
-        iteration: 0,
-        t_ms: 0.0,
-        trigger: PublishTrigger::Initial,
-        evicted: Vec::new(),
-    }];
-    let mut last_pub_iter = 0u64;
-    let mut best_pub_error: Option<f64> = None;
+    let mut plane = ControlPlane::new();
+    let pids: Vec<ProjectId> = cfg
+        .projects
+        .iter()
+        .map(|p| plane.register(p.spec.clone(), p.weight))
+        .collect();
+    let specs: Vec<ModelSpec> = cfg.projects.iter().map(|p| p.spec.clone()).collect();
+    let mut engine = ServeEngine::new(&cfg.serve, &plane)?;
+    let mut probe = StalenessProbe::new(&specs, cfg.measure_delta);
+    let mut egress = EgressBudget::new(cfg.egress_bytes_per_min);
+
+    let mut sims: Vec<Simulation> = cfg
+        .projects
+        .iter()
+        .zip(train_computes)
+        .map(|(p, compute)| Simulation::new(p.train.clone(), p.spec.clone(), compute))
+        .collect();
+    let mut states: Vec<PublicationState> = vec![PublicationState::default(); n];
+    let mut publications: Vec<PublicationRecord> = Vec::new();
+    let mut pending: Vec<PendingTransfer> = Vec::new();
+    // The master iteration live for each project's current serving
+    // window (what activation records stamp as their landing iteration).
+    let mut live_iter: Vec<u64> = vec![0; n];
     let mut evicted_total = 0u64;
 
-    for _ in 0..cfg.train.iterations {
-        // Live parameters for the upcoming window: what the boundary
-        // broadcast installed (training recomputes *during* the window
-        // and applies at its close).
-        probe.set_master(sim.master().iteration(), sim.master().params());
-        sim.step()?;
-        let boundary_ms = sim.master().now_ms();
-        engine.pump(Some(boundary_ms), &mut registry, serve_compute, &mut probe)?;
+    // Initial snapshots: the run serves every project's iteration-0
+    // parameters from t=0.  Free and instant — egress accounting begins
+    // with the first live publication.
+    for (i, &pid) in pids.iter().enumerate() {
+        probe.set_master(pid, 0, sims[i].master().params());
+        let version = plane
+            .registry_mut(pid)
+            .publish_params(
+                sims[i].master().params().to_vec(),
+                0,
+                "cosim: initial".into(),
+                0.0,
+            )
+            .map_err(|e| anyhow!(e))?;
+        publications.push(PublicationRecord {
+            version,
+            iteration: 0,
+            t_ms: 0.0,
+            bytes: 0,
+            activated_ms: 0.0,
+            activated_iteration: 0,
+            trigger: PublishTrigger::Initial,
+            evicted: Vec::new(),
+        });
+    }
 
-        let iteration = sim.master().iteration();
-        let test_error = sim.master().timeline().last().and_then(|r| r.test_error);
-        if let Some(trigger) =
-            cfg.publish
-                .decide(iteration, last_pub_iter, test_error, best_pub_error)
+    // Seed: one step per project establishes its first boundary.
+    let mut remaining: Vec<u64> = cfg.projects.iter().map(|p| p.train.iterations).collect();
+    let mut boundaries: Vec<Option<f64>> = vec![None; n];
+    for i in 0..n {
+        if remaining[i] > 0 {
+            sims[i].step()?;
+            remaining[i] -= 1;
+            boundaries[i] = Some(sims[i].master().now_ms());
+        }
+    }
+
+    // Process boundaries in global time order; each project's
+    // publications land at its own boundaries, activations at their
+    // transfer-completion instants.
+    while let Some((i, boundary_ms)) = next_boundary(&boundaries) {
+        pump_through(
+            &mut engine,
+            &mut plane,
+            &mut pending,
+            &mut publications,
+            &live_iter,
+            Some(boundary_ms),
+            serve_compute,
+            &mut probe,
+        )?;
+        boundaries[i] = None;
+        let pid = pids[i];
+        let iteration = sims[i].master().iteration();
+        let test_error = sims[i].master().timeline().last().and_then(|r| r.test_error);
+        if let Some(trigger) = cfg.projects[i].publish.decide(&mut states[i], iteration, test_error)
         {
-            let id = registry
-                .publish_params(
-                    sim.master().params().to_vec(),
+            let bytes = (cfg.projects[i].spec.param_count * 4) as u64;
+            let version = plane
+                .registry_mut(pid)
+                .stage_params(
+                    sims[i].master().params().to_vec(),
                     iteration,
                     format!("cosim: {} @ iter {iteration}", trigger.name()),
                     boundary_ms,
                 )
                 .map_err(|e| anyhow!(e))?;
-            last_pub_iter = iteration;
-            if let Some(err) = test_error {
-                best_pub_error = Some(best_pub_error.map_or(err, |b| b.min(err)));
-            }
-            // Traffic-driven GC: retention and reader refcounts must both
-            // agree before a version goes.
-            let evicted = registry.gc_keep_latest(retain);
+            let done_ms = egress.schedule(boundary_ms, bytes);
+            // Traffic-driven GC at publication time: retention, reader
+            // pins and staged-transfer immunity must all agree.
+            let evicted = plane
+                .registry_mut(pid)
+                .gc_keep_latest(cfg.projects[i].retain.max(1));
             evicted_total += evicted.len() as u64;
+            pending.push(PendingTransfer {
+                done_ms,
+                version,
+                record: publications.len(),
+            });
+            pending.sort_by(|a, b| a.done_ms.total_cmp(&b.done_ms).then(a.version.cmp(&b.version)));
             publications.push(PublicationRecord {
-                snapshot: id,
+                version,
                 iteration,
                 t_ms: boundary_ms,
+                bytes,
+                activated_ms: done_ms,
+                activated_iteration: iteration,
                 trigger,
                 evicted,
             });
         }
+        // Open the project's next window: its live params and iteration
+        // for the traffic between this boundary and the next.
+        live_iter[i] = iteration;
+        probe.set_master(pid, iteration, sims[i].master().params());
+        if remaining[i] > 0 {
+            sims[i].step()?;
+            remaining[i] -= 1;
+            boundaries[i] = Some(sims[i].master().now_ms());
+        }
     }
 
-    // Drain the serving tail: arrivals after the last boundary plus any
-    // batches still queued, against the final published state.
-    probe.set_master(sim.master().iteration(), sim.master().params());
-    engine.pump(None, &mut registry, serve_compute, &mut probe)?;
+    // Drain the serving tail: arrivals after the last boundary, batches
+    // still queued, and transfers still in flight.
+    pump_through(
+        &mut engine,
+        &mut plane,
+        &mut pending,
+        &mut publications,
+        &live_iter,
+        None,
+        serve_compute,
+        &mut probe,
+    )?;
     debug_assert_eq!(
-        registry.total_readers(),
+        plane.total_readers(),
         0,
         "drained run must release every reader pin"
     );
 
-    let train = RunReport::from_timeline(sim.master().timeline().clone(), sim.n_clients());
+    let train: Vec<RunReport> = sims
+        .iter()
+        .map(|s| RunReport::from_timeline(s.master().timeline().clone(), s.n_clients()))
+        .collect();
     Ok(CosimReport {
         train,
         serve: engine.into_report(),
         staleness: probe.into_log(),
         publications,
+        egress_bytes: egress.bytes_sent(),
         evicted: evicted_total,
-        resident: registry.len(),
+        resident: plane.resident(),
     })
 }
 
@@ -232,7 +426,7 @@ mod tests {
         train.master.capacity = 100;
         train.track_every = 2;
         let serve = ServeConfig {
-            fleet: FleetConfig {
+            fleets: vec![FleetConfig {
                 groups: vec![ClientSpec {
                     link: LinkProfile::Lan,
                     rate_rps: 5.0,
@@ -241,7 +435,7 @@ mod tests {
                 duration_s: iterations as f64 * 4.0,
                 input_pool: 8,
                 seed: 13,
-            },
+            }],
             policy: BatchPolicy {
                 max_batch: 16,
                 max_wait_ms: 5.0,
@@ -255,10 +449,15 @@ mod tests {
             response_bytes: 256,
         };
         CosimConfig {
-            train,
+            projects: vec![CosimProject {
+                spec,
+                train,
+                publish: PublicationPolicy::every(publish_every),
+                retain: 2,
+                weight: 1.0,
+            }],
             serve,
-            publish: PublicationPolicy::every(publish_every),
-            retain: 2,
+            egress_bytes_per_min: 0.0,
             measure_delta: true,
         }
     }
@@ -266,7 +465,7 @@ mod tests {
     fn run(cfg: &CosimConfig) -> CosimReport {
         let mut train_compute = ModeledCompute { param_count: 8 };
         let mut serve_compute = ModeledCompute { param_count: 8 };
-        run_cosim(cfg, &spec(), &mut train_compute, &mut serve_compute).unwrap()
+        run_cosim(cfg, vec![&mut train_compute], &mut serve_compute).unwrap()
     }
 
     #[test]
@@ -292,17 +491,27 @@ mod tests {
                 .collect::<Vec<_>>(),
             vec![2, 4, 6]
         );
+        // Unthrottled egress: transfers are instant (no activation lag)
+        // but the bytes are accounted (param_count × 4 per live publish).
+        assert_eq!(report.egress_bytes, 3 * 8 * 4);
+        for p in report.publications.iter().skip(1) {
+            assert_eq!(p.bytes, 32);
+            assert_eq!(p.activated_ms, p.t_ms);
+            assert_eq!(p.activation_lag_iters(), 0);
+        }
         // Training really ran on the same clock.
-        assert_eq!(report.train.timeline.len(), 6);
-        assert!(report.train.virtual_secs >= 24.0);
+        assert_eq!(report.train.len(), 1);
+        assert_eq!(report.train[0].timeline.len(), 6);
+        assert!(report.train[0].virtual_secs >= 24.0);
         // Retention (2) bounds the registry; pins all released.
         assert!(report.resident <= 2);
         assert_eq!(report.evicted, 2, "4 published − 2 retained");
         // Every served request names a published version, and its age in
         // iterations is bounded by the run.
-        let published: Vec<u64> = report.publications.iter().map(|p| p.snapshot).collect();
+        let published: Vec<ModelVersion> =
+            report.publications.iter().map(|p| p.version).collect();
         for r in report.staleness.records() {
-            assert!(published.contains(&r.snapshot), "{r:?}");
+            assert!(published.contains(&r.version), "{r:?}");
             assert!(r.age_iters() <= 6, "{r:?}");
             assert!(r.age_ms >= 0.0);
         }
@@ -341,6 +550,7 @@ mod tests {
         let report = run(&cfg(6, 0));
         assert_eq!(report.publications.len(), 1, "initial only");
         assert_eq!(report.evicted, 0);
+        assert_eq!(report.egress_bytes, 0, "nothing crossed the link");
         // Ages grow with the master: late responses lag by many
         // iterations.
         let max_age = report
@@ -354,15 +564,66 @@ mod tests {
     }
 
     #[test]
+    fn throttled_egress_delays_activation() {
+        // 8 params × 4 B = 32 B per snapshot; at 120 bytes/min (2 B/s) a
+        // transfer takes 16 s = 4 iteration windows (T = 4 s).  Cadence-2
+        // publications must activate strictly after their decision
+        // iteration, and the queued transfers serialize on the link.
+        let mut config = cfg(6, 2);
+        config.egress_bytes_per_min = 120.0;
+        let report = run(&config);
+        let live: Vec<&PublicationRecord> = report
+            .publications
+            .iter()
+            .filter(|p| p.trigger != PublishTrigger::Initial)
+            .collect();
+        assert_eq!(live.len(), 3);
+        assert!(report.egress_bytes >= 96);
+        for p in &live {
+            assert!(p.transfer_ms() >= 16_000.0 - 1e-6, "{p:?}");
+        }
+        // Transfers that complete while the master is still training land
+        // iterations late (the last one finishes only in the tail drain,
+        // where the master has already stopped at its final iteration, so
+        // its *iteration* lag collapses even though its ms lag is huge).
+        for p in &live[..2] {
+            assert!(
+                p.activated_iteration > p.iteration,
+                "transfer must outlive the publication window: {p:?}"
+            );
+        }
+        // Serialized: each queued transfer completes after its
+        // predecessor.
+        for w in live.windows(2) {
+            assert!(w[1].activated_ms >= w[0].activated_ms + 16_000.0 - 1e-6);
+        }
+        // Requests arriving mid-transfer keep serving the previous
+        // version: nothing may be served by a version before it
+        // activated.
+        let activated_at: std::collections::BTreeMap<ModelVersion, f64> = report
+            .publications
+            .iter()
+            .map(|p| (p.version, p.activated_ms))
+            .collect();
+        for r in report.serve.log.records() {
+            let act = activated_at.get(&r.version).copied().unwrap_or(0.0);
+            assert!(
+                r.done_ms >= act,
+                "request finished before its version activated: {r:?}"
+            );
+        }
+    }
+
+    #[test]
     fn churn_and_cosim_compose() {
         // The shared clock must survive fleet churn mid-run.
         let mut config = cfg(5, 2);
-        config
+        config.projects[0]
             .train
             .churn
             .insert(2, vec![crate::sim::ChurnEvent::Join(DeviceClass::Mobile)]);
         let report = run(&config);
-        assert_eq!(report.train.timeline.len(), 5);
+        assert_eq!(report.train[0].timeline.len(), 5);
         assert!(report.serve.completed > 0);
     }
 }

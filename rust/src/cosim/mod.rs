@@ -1,38 +1,51 @@
-//! Serve × train co-simulation — MLitB's two pillars on one clock.
+//! Serve × train co-simulation — MLitB's two pillars on one clock, for
+//! the paper's multi-tenant master (§3.1: one master hosts *several
+//! projects*, each with its own model, data and clients).
 //!
-//! The paper's deployment story is *one* system: the master trains with
-//! its volunteer fleet **while** the public queries the current model
-//! (§2.3's "prediction to the public at large" is served by the same
-//! master that runs §3.3's event loop).  This repo grew those pillars as
-//! two disconnected discrete-event simulations — [`crate::sim`] for
+//! The paper's deployment story is *one* system: masters train with
+//! their volunteer fleets **while** the public queries the current
+//! models (§2.3's "prediction to the public at large" is served by the
+//! same master that runs §3.3's event loop).  This repo grew those
+//! pillars as two discrete-event simulations — [`crate::sim`] for
 //! training, [`crate::serve`] for prediction.  This module couples them:
 //!
-//! * [`run_cosim`] drives both on one **shared virtual clock**: each
-//!   training iteration advances the clock by its wall time, then the
-//!   serving engine ([`crate::serve::ServeEngine`]) pumps every request
-//!   arrival and batch flush inside that window.
-//! * At iteration boundaries a [`PublicationPolicy`] decides whether the
-//!   master publishes its live parameters into the serving registry —
-//!   every k iterations, and/or when the tracked test error improves by
-//!   δ.  Publication **hot-swaps** the active version mid-traffic with
-//!   answer-consistency guarantees: a request is computed entirely
-//!   against the snapshot it was admitted under (version-stamped
-//!   requests, version-pure batches, per-version registry reader pins),
-//!   and traffic-driven GC reclaims versions only once retention *and*
-//!   zero in-flight readers agree.
+//! * [`run_cosim`] drives N project masters and one shared serving tier
+//!   on one **shared virtual clock**: each master's training iteration
+//!   advances its own boundary by its wall time; the driver processes
+//!   boundaries in global time order and the serving engine
+//!   ([`crate::serve::ServeEngine`]) pumps every request arrival and
+//!   batch flush between them.
+//! * At its own boundaries each project's [`PublicationPolicy`] decides
+//!   whether to publish the live parameters — every k iterations, and/or
+//!   when the tracked test error improves by δ for m consecutive
+//!   evaluations (hysteresis: eval noise cannot flap versions).
+//!   Publication is **byte-accounted**: the snapshot stages, its
+//!   `param_count × 4` bytes queue on the shared [`EgressBudget`], and
+//!   the version activates only when the transfer completes — concurrent
+//!   publishers serialize, and a large model visibly delays its own
+//!   activation.  Hot swaps keep the answer-consistency guarantees:
+//!   a request is computed entirely against the typed `ModelVersion`
+//!   it was admitted under (version-stamped requests,
+//!   version-pure — and so project-pure — batches, per-version registry
+//!   reader pins), and traffic-driven GC reclaims versions only once
+//!   retention, zero in-flight readers *and* no staged transfer agree.
 //! * A [`StalenessProbe`] tags every served answer with the age of the
-//!   snapshot that produced it (iterations + virtual ms) and, when
-//!   enabled, the prediction delta against the live master parameters —
-//!   the [`crate::metrics::StalenessLog`] behind the `fig_cosim`
-//!   staleness-vs-latency frontier.
+//!   snapshot that produced it relative to **its own project's** master
+//!   (iterations + virtual ms) and, when enabled, the prediction delta
+//!   against that master's live parameters — the
+//!   [`crate::metrics::StalenessLog`] behind the `fig_cosim`
+//!   staleness-vs-latency frontier and the `fig_multitenant` tables.
 //!
-//! Entry points: `mlitb cosim`, `benches/fig_cosim.rs`,
-//! `examples/cosim.rs`, `tests/integration_cosim.rs`.
+//! Entry points: `mlitb cosim [--projects N]`, `benches/fig_cosim.rs`,
+//! `benches/fig_multitenant.rs`, `examples/cosim.rs`,
+//! `tests/integration_cosim.rs`.
 
 mod driver;
 mod probe;
 mod publish;
 
-pub use driver::{run_cosim, CosimConfig, CosimReport};
+pub use driver::{run_cosim, CosimConfig, CosimProject, CosimReport};
 pub use probe::StalenessProbe;
-pub use publish::{PublicationPolicy, PublicationRecord, PublishTrigger};
+pub use publish::{
+    EgressBudget, PublicationPolicy, PublicationRecord, PublicationState, PublishTrigger,
+};

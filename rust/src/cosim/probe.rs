@@ -1,15 +1,17 @@
 //! The staleness probe — a [`ServeObserver`] that measures how far each
-//! served answer lags the live master.
+//! served answer lags its own project's live master.
 //!
 //! At every response it records the snapshot's age (iterations and
-//! virtual ms behind the master).  With `measure_delta` on, it also
-//! re-predicts the same input against the master's *current* parameters
-//! and records the L1 probability delta and whether the argmax class
-//! flipped — the "how wrong was the stale answer" axis of `fig_cosim`.
-//! Fresh predictions are memoized per (input, master window): pool inputs
-//! are shared `Arc`s, so pointer identity keys the memo and the probe
-//! costs one extra execution per *distinct* input per iteration, not per
-//! request.
+//! virtual ms behind the owning project's master).  With `measure_delta`
+//! on, it also re-predicts the same input against that master's *current*
+//! parameters and records the L1 probability delta and whether the argmax
+//! class flipped — the "how wrong was the stale answer" axis of
+//! `fig_cosim`.  Fresh predictions are memoized per (project, input,
+//! master window): pool inputs are shared `Arc`s, so pointer identity
+//! keys the memo and the probe costs one extra execution per *distinct*
+//! input per iteration, not per request.  Each project keeps its own
+//! master state and memo — interleaved multi-project traffic never
+//! cross-contaminates (the `StalenessLog` isolation property).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -19,50 +21,63 @@ use anyhow::Result;
 use crate::metrics::{RequestRecord, StalenessLog, StalenessRecord};
 use crate::model::ModelSpec;
 use crate::runtime::Compute;
-use crate::serve::{Prediction, ServeObserver, SnapshotMeta};
+use crate::serve::{Prediction, ProjectId, ServeObserver, SnapshotMeta};
 
-/// Observer wiring staleness measurement into the serving engine.
-pub struct StalenessProbe {
+/// One project's live-master mirror inside the probe.
+struct ProjectProbe {
     spec: ModelSpec,
-    measure_delta: bool,
     master_iteration: u64,
     master_params: Vec<f32>,
-    log: StalenessLog,
     /// input-Arc pointer → (fresh probability row, fresh argmax); cleared
-    /// whenever the master window advances.
+    /// whenever this project's master window advances.
     memo: HashMap<usize, (Vec<f32>, u32)>,
     /// Smallest compiled micro-batch — the probe's execution shape
     /// (padded by repeating the input).
     probe_batch: usize,
+}
+
+/// Observer wiring staleness measurement into the serving engine, one
+/// master mirror per hosted project.
+pub struct StalenessProbe {
+    projects: Vec<ProjectProbe>,
+    measure_delta: bool,
+    log: StalenessLog,
     scratch: Vec<f32>,
 }
 
 impl StalenessProbe {
-    pub fn new(spec: ModelSpec, measure_delta: bool) -> Self {
-        let probe_batch = spec.micro_batches.iter().copied().min().unwrap_or(1).max(1);
+    /// `specs` in project-id order (one per registered project).
+    pub fn new(specs: &[ModelSpec], measure_delta: bool) -> Self {
+        let projects = specs
+            .iter()
+            .map(|spec| ProjectProbe {
+                probe_batch: spec.micro_batches.iter().copied().min().unwrap_or(1).max(1),
+                spec: spec.clone(),
+                master_iteration: 0,
+                master_params: Vec::new(),
+                memo: HashMap::new(),
+            })
+            .collect();
         Self {
-            spec,
+            projects,
             measure_delta,
-            master_iteration: 0,
-            master_params: Vec::new(),
             log: StalenessLog::new(),
-            memo: HashMap::new(),
-            probe_batch,
             scratch: Vec::new(),
         }
     }
 
-    /// Install the parameters live for the upcoming serving window (the
-    /// ones broadcast at the window's opening iteration boundary).  The
-    /// copy is skipped when the delta probe is off — age bookkeeping only
-    /// needs the iteration number.
-    pub fn set_master(&mut self, iteration: u64, params: &[f32]) {
-        self.master_iteration = iteration;
+    /// Install one project's parameters live for its upcoming serving
+    /// window (the ones broadcast at the window's opening iteration
+    /// boundary).  The copy is skipped when the delta probe is off — age
+    /// bookkeeping only needs the iteration number.
+    pub fn set_master(&mut self, project: ProjectId, iteration: u64, params: &[f32]) {
+        let p = &mut self.projects[project.index()];
+        p.master_iteration = iteration;
         if self.measure_delta {
-            self.master_params.clear();
-            self.master_params.extend_from_slice(params);
+            p.master_params.clear();
+            p.master_params.extend_from_slice(params);
         }
-        self.memo.clear();
+        p.memo.clear();
     }
 
     pub fn log(&self) -> &StalenessLog {
@@ -73,32 +88,35 @@ impl StalenessProbe {
         self.log
     }
 
-    /// Fresh prediction for `input` under the live master parameters,
-    /// memoized per master window.
+    /// Fresh prediction for `input` under one project's live master
+    /// parameters, memoized per master window.
     fn fresh(
         &mut self,
+        pi: usize,
         input: &Arc<Vec<f32>>,
         compute: &mut dyn Compute,
     ) -> Result<(Vec<f32>, u32)> {
         let key = Arc::as_ptr(input) as usize;
-        if let Some(hit) = self.memo.get(&key) {
+        if let Some(hit) = self.projects[pi].memo.get(&key) {
             return Ok(hit.clone());
         }
+        let probe_batch = self.projects[pi].probe_batch;
+        let classes = self.projects[pi].spec.classes;
         self.scratch.clear();
-        for _ in 0..self.probe_batch {
+        for _ in 0..probe_batch {
             self.scratch.extend_from_slice(input);
         }
         let probs = compute.predict_batch(
-            &self.spec.name,
-            self.probe_batch,
-            &self.master_params,
+            &self.projects[pi].spec.name,
+            probe_batch,
+            &self.projects[pi].master_params,
             &self.scratch,
-            self.spec.classes,
+            classes,
         )?;
-        let row = probs[..self.spec.classes].to_vec();
+        let row = probs[..classes].to_vec();
         let class = Prediction::from_row(&row).class as u32;
         let out = (row, class);
-        self.memo.insert(key, out.clone());
+        self.projects[pi].memo.insert(key, out.clone());
         Ok(out)
     }
 }
@@ -112,8 +130,9 @@ impl ServeObserver for StalenessProbe {
         snapshot: SnapshotMeta,
         compute: &mut dyn Compute,
     ) -> Result<()> {
+        let pi = snapshot.version.project.index();
         let (delta, fresh_class) = if self.measure_delta {
-            let (fresh_row, fresh_class) = self.fresh(input, compute)?;
+            let (fresh_row, fresh_class) = self.fresh(pi, input, compute)?;
             let delta: f64 = fresh_row
                 .iter()
                 .zip(&served.probs)
@@ -127,9 +146,9 @@ impl ServeObserver for StalenessProbe {
             id: record.id,
             client: record.client,
             done_ms: record.done_ms,
-            snapshot: snapshot.id,
+            version: snapshot.version,
             snapshot_iteration: snapshot.iteration,
-            master_iteration: self.master_iteration,
+            master_iteration: self.projects[pi].master_iteration,
             age_ms: (record.done_ms - snapshot.published_ms).max(0.0),
             delta,
             fresh_class,
@@ -144,6 +163,7 @@ mod tests {
     use super::*;
     use crate::model::TensorSpec;
     use crate::runtime::ModeledCompute;
+    use crate::serve::ModelVersion;
 
     fn spec() -> ModelSpec {
         ModelSpec {
@@ -164,6 +184,15 @@ mod tests {
         }
     }
 
+    const P0: ProjectId = ProjectId::new(0);
+
+    fn v(project: u32, version: u64) -> ModelVersion {
+        ModelVersion {
+            project: ProjectId::new(project),
+            version,
+        }
+    }
+
     fn record(id: u64, class: u32) -> RequestRecord {
         RequestRecord {
             id,
@@ -172,7 +201,7 @@ mod tests {
             done_ms: 10.0,
             latency_ms: 10.0,
             shard: 0,
-            snapshot: 1,
+            version: v(0, 1),
             batch_size: 1,
             cache_hit: false,
             coalesced: false,
@@ -181,8 +210,12 @@ mod tests {
     }
 
     fn meta() -> SnapshotMeta {
+        meta_p(0)
+    }
+
+    fn meta_p(project: u32) -> SnapshotMeta {
         SnapshotMeta {
-            id: 1,
+            version: v(project, 1),
             iteration: 2,
             published_ms: 4.0,
         }
@@ -192,8 +225,8 @@ mod tests {
     fn identical_params_give_zero_delta() {
         let mut compute = ModeledCompute { param_count: 12 };
         let params: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.1).collect();
-        let mut probe = StalenessProbe::new(spec(), true);
-        probe.set_master(5, &params);
+        let mut probe = StalenessProbe::new(&[spec()], true);
+        probe.set_master(P0, 5, &params);
         let input = Arc::new(vec![0.3f32, 0.7, 0.1]);
         // Serve the same answer the live params would give.
         let row = crate::runtime::modeled_predict(1, &params, &input, 4).unwrap();
@@ -215,8 +248,8 @@ mod tests {
         let mut compute = ModeledCompute { param_count: 12 };
         let stale: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.1).collect();
         let live: Vec<f32> = stale.iter().map(|p| -p).collect();
-        let mut probe = StalenessProbe::new(spec(), true);
-        probe.set_master(9, &live);
+        let mut probe = StalenessProbe::new(&[spec()], true);
+        probe.set_master(P0, 9, &live);
         let input = Arc::new(vec![0.9f32, 0.2, 0.4]);
         let row = crate::runtime::modeled_predict(1, &stale, &input, 4).unwrap();
         let served = Prediction::from_row(&row);
@@ -230,8 +263,8 @@ mod tests {
     #[test]
     fn probe_disabled_records_ages_only() {
         let mut compute = ModeledCompute { param_count: 12 };
-        let mut probe = StalenessProbe::new(spec(), false);
-        probe.set_master(4, &[0.0; 12]);
+        let mut probe = StalenessProbe::new(&[spec()], false);
+        probe.set_master(P0, 4, &[0.0; 12]);
         let input = Arc::new(vec![0.1f32, 0.2, 0.3]);
         let served = Prediction {
             class: 1,
@@ -252,23 +285,65 @@ mod tests {
         let mut compute = ModeledCompute { param_count: 12 };
         let p1: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
         let p2: Vec<f32> = (0..12).map(|i| -(i as f32) * 0.1).collect();
-        let mut probe = StalenessProbe::new(spec(), true);
+        let mut probe = StalenessProbe::new(&[spec()], true);
         let input = Arc::new(vec![0.5f32, 0.5, 0.5]);
         let served = {
             let row = crate::runtime::modeled_predict(1, &p1, &input, 4).unwrap();
             Prediction::from_row(&row)
         };
-        probe.set_master(1, &p1);
+        probe.set_master(P0, 1, &p1);
         probe
             .on_response(&record(1, served.class as u32), &input, &served, meta(), &mut compute)
             .unwrap();
         assert!(probe.log().records()[0].delta.unwrap() < 1e-6);
         // New window with different live params: the memo must not serve
         // the old fresh row.
-        probe.set_master(2, &p2);
+        probe.set_master(P0, 2, &p2);
         probe
             .on_response(&record(2, served.class as u32), &input, &served, meta(), &mut compute)
             .unwrap();
         assert!(probe.log().records()[1].delta.unwrap() > 1e-3);
+    }
+
+    #[test]
+    fn projects_keep_independent_masters_and_memos() {
+        // Two projects, same input Arc, opposite master parameters: each
+        // project's delta must be computed against its *own* master, and
+        // advancing one project's window must not clear the other's memo.
+        let mut compute = ModeledCompute { param_count: 12 };
+        let pa: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        let pb: Vec<f32> = pa.iter().map(|x| -x).collect();
+        let mut probe = StalenessProbe::new(&[spec(), spec()], true);
+        probe.set_master(P0, 3, &pa);
+        probe.set_master(ProjectId::new(1), 8, &pb);
+        let input = Arc::new(vec![0.5f32, 0.2, 0.8]);
+        // Serve project 0's live answer through both projects.
+        let row = crate::runtime::modeled_predict(1, &pa, &input, 4).unwrap();
+        let served = Prediction::from_row(&row);
+        let mut rec0 = record(1, served.class as u32);
+        rec0.version = v(0, 1);
+        probe
+            .on_response(&rec0, &input, &served, meta_p(0), &mut compute)
+            .unwrap();
+        let mut rec1 = record(2, served.class as u32);
+        rec1.version = v(1, 1);
+        probe
+            .on_response(&rec1, &input, &served, meta_p(1), &mut compute)
+            .unwrap();
+        let r0 = &probe.log().records()[0];
+        let r1 = &probe.log().records()[1];
+        assert!(r0.delta.unwrap() < 1e-6, "matches project 0's master");
+        assert!(r1.delta.unwrap() > 1e-3, "diverges from project 1's master");
+        assert_eq!(r0.master_iteration, 3);
+        assert_eq!(r1.master_iteration, 8);
+        // Advancing project 1's window leaves project 0's memo warm: the
+        // same input re-probed under project 0 still matches.
+        probe.set_master(ProjectId::new(1), 9, &pb);
+        let mut rec2 = record(3, served.class as u32);
+        rec2.version = v(0, 1);
+        probe
+            .on_response(&rec2, &input, &served, meta_p(0), &mut compute)
+            .unwrap();
+        assert!(probe.log().records()[2].delta.unwrap() < 1e-6);
     }
 }

@@ -1,13 +1,24 @@
-//! When does the live master push a snapshot to the serving tier?
+//! When — and at what byte cost — does a live master push a snapshot to
+//! the serving tier?
 //!
-//! Two triggers, combinable: a fixed cadence (every k iterations — the
-//! predictable freshness floor), and an error-improvement trigger (the
-//! tracker's test error beat the best-yet-published model by δ — publish
-//! good models early, skip publishing plateau noise).  The cadence is
-//! checked first so a run with both configured attributes each
-//! publication to one deterministic cause.
+//! **Triggers**, combinable per project: a fixed cadence (every k
+//! iterations — the predictable freshness floor), and an
+//! error-improvement trigger (the tracker's test error beat the best-yet
+//! published model by δ — publish good models early, skip publishing
+//! plateau noise).  The cadence is checked first so a run with both
+//! configured attributes each publication to one deterministic cause.
+//! The error trigger carries **hysteresis**: the improvement must
+//! persist for m consecutive evaluations before a publish fires, so
+//! eval-error noise cannot flap versions (ROADMAP throttling item).
+//!
+//! **Cost** ([`EgressBudget`]): a snapshot is `param_count × 4` bytes
+//! that must cross the master-egress link before activation.  The budget
+//! is shared across every publishing project (the paper's one master
+//! hosts several projects, §3.1): transfers serialize at `bytes_per_min`,
+//! so two projects publishing in the same window queue behind each other
+//! and a 100 MB-param model visibly delays its own activation.
 
-use crate::serve::SnapshotId;
+use crate::serve::{ModelVersion, ProjectId};
 
 /// Why a snapshot was published.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,7 +27,8 @@ pub enum PublishTrigger {
     Initial,
     /// The every-k-iterations cadence came due.
     Cadence,
-    /// Tracked test error improved on the best published model by ≥ δ.
+    /// Tracked test error improved on the best published model by ≥ δ,
+    /// for the policy's hysteresis streak.
     ErrorImprovement,
 }
 
@@ -30,7 +42,7 @@ impl PublishTrigger {
     }
 }
 
-/// Publication decision knobs.
+/// Publication decision knobs (per project).
 #[derive(Debug, Clone, Copy)]
 pub struct PublicationPolicy {
     /// Publish every k iterations (0 disables the cadence trigger).
@@ -39,6 +51,11 @@ pub struct PublicationPolicy {
     /// model by at least this much (0.0 disables; requires the training
     /// run to track test error at all).
     pub min_improvement: f64,
+    /// Hysteresis: the δ improvement must persist for this many
+    /// *consecutive evaluations* before the error trigger fires (0 and 1
+    /// both mean "publish on the first improved evaluation").  Untracked
+    /// iterations neither extend nor break the streak.
+    pub hysteresis: u64,
 }
 
 impl PublicationPolicy {
@@ -47,69 +64,213 @@ impl PublicationPolicy {
         Self {
             every: k,
             min_improvement: 0.0,
+            hysteresis: 0,
+        }
+    }
+}
+
+/// Mutable per-project decision state the policy folds over: last
+/// publication, best published error, and the hysteresis streak.
+#[derive(Debug, Clone, Default)]
+pub struct PublicationState {
+    last_published_iteration: u64,
+    best_published_error: Option<f64>,
+    /// Lowest tracked error seen so far — the improvement reference while
+    /// nothing has been published yet (without it, every pre-publish
+    /// evaluation would count as "improved" and a regression could not
+    /// break the streak).
+    best_seen_error: Option<f64>,
+    /// Consecutive evaluations that cleared the δ bar since the last
+    /// publication (or last regression).
+    streak: u64,
+}
+
+impl PublicationState {
+    pub fn last_published_iteration(&self) -> u64 {
+        self.last_published_iteration
+    }
+
+    pub fn best_published_error(&self) -> Option<f64> {
+        self.best_published_error
+    }
+
+    pub fn streak(&self) -> u64 {
+        self.streak
+    }
+}
+
+impl PublicationPolicy {
+    /// Decide at an iteration boundary, folding the observation into
+    /// `state`.  When a trigger fires, `state` is updated as-published
+    /// (streak reset, best error absorbed) — the caller just stages the
+    /// snapshot.
+    pub fn decide(
+        &self,
+        state: &mut PublicationState,
+        iteration: u64,
+        test_error: Option<f64>,
+    ) -> Option<PublishTrigger> {
+        // Hysteresis bookkeeping happens on every *evaluation*, whatever
+        // ends up triggering: an improved eval extends the streak, a
+        // regressed one breaks it.  The improvement reference is the best
+        // *published* error once something shipped, and the best error
+        // *seen* before that (the very first evaluation always counts).
+        if self.min_improvement > 0.0 {
+            if let Some(err) = test_error {
+                let reference = state.best_published_error.or(state.best_seen_error);
+                let improved = reference.is_none_or(|best| best - err >= self.min_improvement);
+                if improved {
+                    state.streak += 1;
+                } else {
+                    state.streak = 0;
+                }
+                state.best_seen_error =
+                    Some(state.best_seen_error.map_or(err, |b| b.min(err)));
+            }
+        }
+        let cadence_due = self.every > 0
+            && iteration.saturating_sub(state.last_published_iteration) >= self.every;
+        let error_due = self.min_improvement > 0.0
+            && test_error.is_some()
+            && state.streak >= self.hysteresis.max(1);
+        let trigger = if cadence_due {
+            Some(PublishTrigger::Cadence)
+        } else if error_due {
+            Some(PublishTrigger::ErrorImprovement)
+        } else {
+            None
+        };
+        if trigger.is_some() {
+            state.last_published_iteration = iteration;
+            if let Some(err) = test_error {
+                state.best_published_error =
+                    Some(state.best_published_error.map_or(err, |b| b.min(err)));
+            }
+            state.streak = 0;
+        }
+        trigger
+    }
+}
+
+/// The shared master-egress budget: snapshot transfers serialize at
+/// `bytes_per_min` across every publishing project.  `bytes_per_min ≤ 0`
+/// means unthrottled (transfers complete instantly) — bytes are still
+/// accounted.
+#[derive(Debug, Clone)]
+pub struct EgressBudget {
+    bytes_per_min: f64,
+    free_at_ms: f64,
+    bytes_sent: u64,
+}
+
+impl EgressBudget {
+    pub fn new(bytes_per_min: f64) -> Self {
+        Self {
+            bytes_per_min,
+            free_at_ms: 0.0,
+            bytes_sent: 0,
         }
     }
 
-    /// Decide at an iteration boundary.  `best_published_error` is the
-    /// lowest tracked error among published snapshots so far (`None`
-    /// until an error-triggered or error-observed publication happened —
-    /// the first tracked error then always counts as an improvement).
-    pub fn decide(
-        &self,
-        iteration: u64,
-        last_published_iteration: u64,
-        test_error: Option<f64>,
-        best_published_error: Option<f64>,
-    ) -> Option<PublishTrigger> {
-        if self.every > 0 && iteration.saturating_sub(last_published_iteration) >= self.every {
-            return Some(PublishTrigger::Cadence);
-        }
-        if self.min_improvement > 0.0 {
-            if let Some(err) = test_error {
-                let improved = match best_published_error {
-                    Some(best) => best - err >= self.min_improvement,
-                    None => true,
-                };
-                if improved {
-                    return Some(PublishTrigger::ErrorImprovement);
-                }
-            }
-        }
-        None
+    /// Schedule a transfer of `bytes` requested at `now_ms`; returns its
+    /// completion (= activation) time.  Transfers queue: a second
+    /// publisher starts only when the link frees up.
+    pub fn schedule(&mut self, now_ms: f64, bytes: u64) -> f64 {
+        self.bytes_sent += bytes;
+        let start = self.free_at_ms.max(now_ms);
+        let done = if self.bytes_per_min <= 0.0 {
+            start
+        } else {
+            start + bytes as f64 * 60_000.0 / self.bytes_per_min
+        };
+        self.free_at_ms = done;
+        done
+    }
+
+    /// Master-egress bytes charged so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
     }
 }
 
 /// One publication event in a co-simulation run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PublicationRecord {
-    /// Version assigned by the registry.
-    pub snapshot: SnapshotId,
-    /// Training iteration the parameters captured.
+    /// Typed version handle the registry assigned (names the project).
+    pub version: ModelVersion,
+    /// Training iteration the parameters captured (publication decision).
     pub iteration: u64,
-    /// Virtual publish time (ms).
+    /// Virtual publish-decision time (ms) — when the transfer was queued.
     pub t_ms: f64,
+    /// Snapshot bytes charged to master egress (`param_count × 4`; 0 for
+    /// the free initial publication).
+    pub bytes: u64,
+    /// Transfer completion = activation time (== `t_ms` when the budget
+    /// is unthrottled and the link idle).
+    pub activated_ms: f64,
+    /// The owning project's master iteration when activation landed —
+    /// strictly greater than `iteration` when the transfer outlived the
+    /// publication window.
+    pub activated_iteration: u64,
     pub trigger: PublishTrigger,
     /// Versions traffic-driven GC reclaimed at this publication.
-    pub evicted: Vec<SnapshotId>,
+    pub evicted: Vec<ModelVersion>,
+}
+
+impl PublicationRecord {
+    pub fn project(&self) -> ProjectId {
+        self.version.project
+    }
+
+    /// How long the snapshot spent on the egress link (ms).
+    pub fn transfer_ms(&self) -> f64 {
+        self.activated_ms - self.t_ms
+    }
+
+    /// Iterations between the publication decision and activation.
+    pub fn activation_lag_iters(&self) -> u64 {
+        self.activated_iteration.saturating_sub(self.iteration)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn decide_seq(
+        policy: &PublicationPolicy,
+        observations: &[(u64, Option<f64>)],
+    ) -> Vec<Option<PublishTrigger>> {
+        let mut state = PublicationState::default();
+        observations
+            .iter()
+            .map(|&(iter, err)| policy.decide(&mut state, iter, err))
+            .collect()
+    }
+
     #[test]
     fn cadence_fires_every_k() {
         let p = PublicationPolicy::every(5);
-        assert_eq!(p.decide(4, 0, None, None), None);
-        assert_eq!(p.decide(5, 0, None, None), Some(PublishTrigger::Cadence));
-        assert_eq!(p.decide(9, 5, None, None), None);
-        assert_eq!(p.decide(10, 5, None, None), Some(PublishTrigger::Cadence));
+        let fired = decide_seq(
+            &p,
+            &[(4, None), (5, None), (9, None), (10, None)],
+        );
+        assert_eq!(
+            fired,
+            vec![
+                None,
+                Some(PublishTrigger::Cadence),
+                None,
+                Some(PublishTrigger::Cadence)
+            ]
+        );
     }
 
     #[test]
     fn zero_cadence_never_fires() {
         let p = PublicationPolicy::every(0);
-        assert_eq!(p.decide(1_000, 0, None, None), None);
+        let mut state = PublicationState::default();
+        assert_eq!(p.decide(&mut state, 1_000, None), None);
     }
 
     #[test]
@@ -117,20 +278,25 @@ mod tests {
         let p = PublicationPolicy {
             every: 0,
             min_improvement: 0.05,
+            hysteresis: 0,
         };
+        let mut state = PublicationState::default();
         // No tracked error → nothing to trigger on.
-        assert_eq!(p.decide(3, 0, None, None), None);
+        assert_eq!(p.decide(&mut state, 3, None), None);
         // First tracked error beats "nothing published yet".
         assert_eq!(
-            p.decide(3, 0, Some(0.9), None),
+            p.decide(&mut state, 3, Some(0.9)),
             Some(PublishTrigger::ErrorImprovement)
         );
+        assert_eq!(state.best_published_error(), Some(0.9));
         // 0.9 → 0.87 is under δ; 0.9 → 0.8 clears it.
-        assert_eq!(p.decide(4, 3, Some(0.87), Some(0.9)), None);
+        assert_eq!(p.decide(&mut state, 4, Some(0.87)), None);
         assert_eq!(
-            p.decide(5, 3, Some(0.8), Some(0.9)),
+            p.decide(&mut state, 5, Some(0.8)),
             Some(PublishTrigger::ErrorImprovement)
         );
+        assert_eq!(state.best_published_error(), Some(0.8));
+        assert_eq!(state.last_published_iteration(), 5);
     }
 
     #[test]
@@ -138,10 +304,127 @@ mod tests {
         let p = PublicationPolicy {
             every: 2,
             min_improvement: 0.01,
+            hysteresis: 0,
         };
+        let mut state = PublicationState::default();
         assert_eq!(
-            p.decide(2, 0, Some(0.5), Some(0.9)),
+            p.decide(&mut state, 2, Some(0.5)),
             Some(PublishTrigger::Cadence)
         );
+        // The cadence publish still absorbed the error as best-published.
+        assert_eq!(state.best_published_error(), Some(0.5));
+    }
+
+    #[test]
+    fn hysteresis_requires_persistent_improvement() {
+        // m = 3: three consecutive improved evaluations before a publish.
+        let p = PublicationPolicy {
+            every: 0,
+            min_improvement: 0.05,
+            hysteresis: 3,
+        };
+        let mut state = PublicationState::default();
+        assert_eq!(p.decide(&mut state, 1, Some(0.9)), None);
+        assert_eq!(state.streak(), 1);
+        // Untracked iterations neither extend nor break the streak.
+        assert_eq!(p.decide(&mut state, 2, None), None);
+        assert_eq!(state.streak(), 1);
+        assert_eq!(p.decide(&mut state, 3, Some(0.85)), None);
+        assert_eq!(
+            p.decide(&mut state, 4, Some(0.8)),
+            Some(PublishTrigger::ErrorImprovement)
+        );
+        assert_eq!(state.streak(), 0, "publish resets the streak");
+        // A regression mid-streak starts the count over.
+        assert_eq!(p.decide(&mut state, 5, Some(0.7)), None); // streak 1
+        assert_eq!(p.decide(&mut state, 6, Some(0.9)), None); // regressed: 0
+        assert_eq!(p.decide(&mut state, 7, Some(0.7)), None); // streak 1
+        assert_eq!(p.decide(&mut state, 8, Some(0.65)), None); // streak 2
+        assert_eq!(
+            p.decide(&mut state, 9, Some(0.6)),
+            Some(PublishTrigger::ErrorImprovement)
+        );
+    }
+
+    #[test]
+    fn hysteresis_stops_version_flapping() {
+        // The flap-count regression: a noisily descending error — every
+        // even eval dips below the best by ≥ δ, every odd eval spikes
+        // back up.  With m ≤ 1 each dip publishes (versions flap on eval
+        // noise); with m = 2 the improvement never *persists* two evals
+        // in a row, so nothing publishes.
+        let noisy: Vec<(u64, Option<f64>)> = (0u64..20)
+            .map(|i| {
+                let err = if i % 2 == 0 {
+                    0.40 - 0.06 * (i / 2) as f64
+                } else {
+                    0.9
+                };
+                (i, Some(err))
+            })
+            .collect();
+        let flappy = PublicationPolicy {
+            every: 0,
+            min_improvement: 0.05,
+            hysteresis: 1,
+        };
+        let steady = PublicationPolicy {
+            every: 0,
+            min_improvement: 0.05,
+            hysteresis: 2,
+        };
+        let flaps = decide_seq(&flappy, &noisy)
+            .iter()
+            .filter(|t| t.is_some())
+            .count();
+        let publishes = decide_seq(&steady, &noisy)
+            .iter()
+            .filter(|t| t.is_some())
+            .count();
+        assert!(flaps >= 5, "noise must flap the no-hysteresis policy: {flaps}");
+        assert_eq!(publishes, 0, "hysteresis 2 must ride out alternating noise");
+    }
+
+    #[test]
+    fn egress_budget_serializes_concurrent_transfers() {
+        // 600 KB/min = 10 KB/s.  Two 20 KB snapshots queued at t=0: the
+        // first takes 2 s, the second starts only when the link frees.
+        let mut budget = EgressBudget::new(600_000.0);
+        let first = budget.schedule(0.0, 20_000);
+        assert!((first - 2_000.0).abs() < 1e-6, "{first}");
+        let second = budget.schedule(0.0, 20_000);
+        assert!((second - 4_000.0).abs() < 1e-6, "{second}");
+        // A later request on an idle link starts at its own time.
+        let third = budget.schedule(10_000.0, 10_000);
+        assert!((third - 11_000.0).abs() < 1e-6, "{third}");
+        assert_eq!(budget.bytes_sent(), 50_000);
+    }
+
+    #[test]
+    fn unthrottled_budget_is_instant_but_accounted() {
+        let mut budget = EgressBudget::new(0.0);
+        assert_eq!(budget.schedule(5.0, 1_000_000), 5.0);
+        assert_eq!(budget.schedule(7.0, 1_000_000), 7.0);
+        assert_eq!(budget.bytes_sent(), 2_000_000);
+    }
+
+    #[test]
+    fn publication_record_lag_helpers() {
+        let rec = PublicationRecord {
+            version: ModelVersion {
+                project: ProjectId::new(1),
+                version: 3,
+            },
+            iteration: 4,
+            t_ms: 8_000.0,
+            bytes: 50_920,
+            activated_ms: 14_000.0,
+            activated_iteration: 7,
+            trigger: PublishTrigger::Cadence,
+            evicted: Vec::new(),
+        };
+        assert_eq!(rec.project(), ProjectId::new(1));
+        assert_eq!(rec.transfer_ms(), 6_000.0);
+        assert_eq!(rec.activation_lag_iters(), 3);
     }
 }

@@ -14,13 +14,17 @@
 //! AdaGrad reduce, JSON research closures — is implemented faithfully.
 //!
 //! The paper's second pillar — ML *prediction* "to the public at large" —
-//! is the [`serve`] subsystem: a snapshot registry fed by research
-//! closures, admission + micro-batching over the same compiled artifacts,
-//! an LRU prediction cache, and a simulated open-loop request fleet.
-//! [`cosim`] couples the two pillars on one shared virtual clock: the
-//! live master publishes snapshots mid-traffic (hot swap with
-//! answer-consistency guarantees and traffic-driven registry GC) while a
-//! staleness probe measures how far served answers lag the master.
+//! is the [`serve`] subsystem, grown into §3.1's multi-tenant shape: a
+//! `ControlPlane` hosting several projects (typed `ProjectId` /
+//! `ModelVersion` handles, one snapshot registry per project, weighted
+//! fair-share admission), admission + micro-batching over the same
+//! compiled artifacts, an LRU prediction cache, and simulated open-loop
+//! request fleets.  [`cosim`] couples the two pillars on one shared
+//! virtual clock: live masters publish byte-accounted snapshots
+//! mid-traffic (transfers cross a shared egress budget before
+//! activation; hot swap with answer-consistency guarantees and
+//! traffic-driven registry GC) while a staleness probe measures how far
+//! served answers lag each project's master.
 //!
 //! Layer map (see `DESIGN.md`):
 //! * L1/L2 — `python/compile/` (build time only; never on the run path).

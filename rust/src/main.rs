@@ -16,16 +16,17 @@
 use mlitb::cli::Args;
 use mlitb::client::DeviceClass;
 use mlitb::coordinator::ReducePolicy;
-use mlitb::cosim::{run_cosim, CosimConfig, PublicationPolicy};
+use mlitb::cosim::{run_cosim, CosimConfig, CosimProject, PublicationPolicy};
 use mlitb::model::{init_params, Manifest, ModelSpec, ResearchClosure};
 use mlitb::netsim::LinkProfile;
 use mlitb::params::OptimizerKind;
 use mlitb::runtime::{Compute, DriftingCompute, Engine, ModeledCompute};
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
-    ServeReport, ServeSim, ServerProfile, SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId, RouterConfig,
+    RoutingPolicy, ServeConfig, ServeReport, ServeSim, ServerProfile,
 };
-use mlitb::sim::{SimConfig, Simulation};
+use mlitb::sim::SimConfig;
+use mlitb::sim::Simulation;
 
 fn main() {
     let args = Args::from_env();
@@ -66,11 +67,12 @@ fn print_help() {
                   --max-wait F --queue-depth N --cache N --input-pool N\n\
                   --shards N --router rr|jsq|affinity --no-coalesce\n\
                   --autotune --jitter F --seed N --csv <path>\n\
-         cosim:   --model <name> --nodes N --iters N --t-secs F --track-every N\n\
-                  --train-size N --test-size N --publish-every K --publish-delta F\n\
-                  --retain N --no-delta --clients N --rate F --link <profile>\n\
-                  --shards N --router rr|jsq|affinity --batch N --queue-depth N\n\
-                  --cache N --input-pool N --seed N --csv <path>\n\
+         cosim:   --model <name> --projects N --nodes N --iters N --t-secs F\n\
+                  --track-every N --train-size N --test-size N --publish-every K\n\
+                  --publish-delta F --publish-hysteresis M --egress-mb-min F\n\
+                  --retain N --no-delta --clients N --rate F --hot-rate F\n\
+                  --link <profile> --shards N --router rr|jsq|affinity --batch N\n\
+                  --queue-depth N --cache N --input-pool N --seed N --csv <path>\n\
          inspect: [--model <name>]\n\
          closure: --model <name> --out <path>",
         mlitb::VERSION
@@ -227,18 +229,22 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     let spec = serve_spec(args)?;
     let seed = args.get_u64("seed", 1)?;
 
-    // Snapshot: a saved research closure, or fresh init parameters.
-    let mut registry = SnapshotRegistry::new(spec.clone());
+    // Single-project control plane; the snapshot comes from a saved
+    // research closure, or fresh init parameters.
+    let mut plane = ControlPlane::single(spec.clone());
+    let project = ProjectId::new(0);
     if let Some(path) = args.get("closure") {
         let closure = ResearchClosure::load(std::path::Path::new(path))?;
-        let id = registry.publish_closure(&closure, 0.0)?;
+        let id = plane.registry_mut(project).publish_closure(&closure, 0.0)?;
         println!(
-            "published snapshot v{id} from {path} (iteration {}, optimizer {})",
+            "published snapshot {id} from {path} (iteration {}, optimizer {})",
             closure.iteration, closure.optimizer
         );
     } else {
-        registry.publish_params(init_params(&spec, seed), 0, "init".into(), 0.0)?;
-        println!("published snapshot v1 (fresh init parameters, seed {seed})");
+        plane
+            .registry_mut(project)
+            .publish_params(init_params(&spec, seed), 0, "init".into(), 0.0)?;
+        println!("published snapshot p0v1 (fresh init parameters, seed {seed})");
     }
 
     // Request fleet.
@@ -260,14 +266,15 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         coalesce: !args.flag("no-coalesce"),
         autotune: args.flag("autotune"),
         window_ms: 1_000.0,
+        fair_share: true,
     };
     let cfg = ServeConfig {
-        fleet: FleetConfig {
+        fleets: vec![FleetConfig {
             groups,
             duration_s: args.get_f64("duration", 20.0)?,
             input_pool: args.get_usize("input-pool", 200)?,
             seed,
-        },
+        }],
         policy: BatchPolicy {
             max_batch: args.get_usize("batch", largest)?,
             max_wait_ms: args.get_f64("max-wait", 5.0)?,
@@ -291,7 +298,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         spec.name,
         clients,
         rate,
-        cfg.fleet.duration_s,
+        cfg.fleets[0].duration_s,
         cfg.policy.max_batch,
         cfg.policy.max_wait_ms,
         router.shards,
@@ -309,7 +316,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         let mut engine = Engine::from_default_artifacts().map_err(|e| e.to_string())?;
         engine.load_model(&spec.name).map_err(|e| e.to_string())?;
         println!("compute: PJRT engine over AOT artifacts");
-        run_serve(cfg, registry, &mut engine)?
+        run_serve(cfg, plane, &mut engine)?
     } else {
         let why = if cfg!(feature = "pjrt") {
             "no AOT artifacts on disk"
@@ -318,7 +325,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         };
         println!("compute: modeled predictor ({why}; deterministic linear-softmax)");
         let mut modeled = ModeledCompute { param_count: spec.param_count };
-        run_serve(cfg, registry, &mut modeled)?
+        run_serve(cfg, plane, &mut modeled)?
     };
 
     let lat = report.latency();
@@ -387,24 +394,28 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
 
 fn run_serve(
     cfg: ServeConfig,
-    registry: SnapshotRegistry,
+    plane: ControlPlane,
     compute: &mut dyn Compute,
 ) -> Result<ServeReport, String> {
-    ServeSim::new(cfg, registry, compute)
+    ServeSim::new(cfg, plane, compute)
         .run()
         .map_err(|e| e.to_string())
 }
 
-/// Co-simulate training and serving on one shared virtual clock: the
-/// master publishes snapshots mid-traffic (every k iterations and/or on
-/// test-error improvement), the router hot-swaps versions with
-/// answer-consistency guarantees, and the staleness log correlates each
-/// served request with the age of the snapshot that answered it.
+/// Co-simulate training and serving on one shared virtual clock: N
+/// project masters (`--projects`, §3.1's multi-tenant hosting) publish
+/// snapshots mid-traffic (every k iterations and/or on persistent
+/// test-error improvement), each publication charges master-egress bytes
+/// and activates only when its transfer completes, the router hot-swaps
+/// versions with answer-consistency guarantees, and the staleness log
+/// correlates each served request with the age of the snapshot that
+/// answered it — per project.
 fn cmd_cosim(args: &Args) -> Result<(), String> {
     let spec = serve_spec(args)?;
     let seed = args.get_u64("seed", 1)?;
     let iters = args.get_u64("iters", 20)?;
     let nodes = args.get_usize("nodes", 4)?;
+    let projects = args.get_usize("projects", 1)?.max(1);
 
     let mut train = SimConfig::paper_scaling(nodes, &spec);
     train.iterations = iters;
@@ -418,6 +429,9 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
 
     let clients = args.get_usize("clients", 8)?;
     let rate = args.get_f64("rate", 4.0)?;
+    // Project 0 may run hot (`--hot-rate` per-client rps) while the rest
+    // stay at `--rate` — the fair-share demonstration knob.
+    let hot_rate = args.get_f64("hot-rate", rate)?;
     let horizon = iters as f64 * train.master.iter_duration_s;
     let largest = spec
         .micro_batches
@@ -425,13 +439,29 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         .copied()
         .max()
         .unwrap_or(spec.batch_size);
+    let publish = PublicationPolicy {
+        every: args.get_u64("publish-every", 5)?,
+        min_improvement: args.get_f64("publish-delta", 0.0)?,
+        hysteresis: args.get_u64("publish-hysteresis", 0)?,
+    };
+    let retain = args.get_usize("retain", 4)?;
+    let link = args.get_or("link", "lan").to_string();
+    let duration_s = args.get_f64("duration", horizon)?;
+    let input_pool = args.get_usize("input-pool", 200)?;
+
+    let fleets: Result<Vec<FleetConfig>, String> = (0..projects)
+        .map(|i| {
+            let project_rate = if i == 0 { hot_rate } else { rate };
+            Ok(FleetConfig {
+                groups: client_groups(&link, clients, project_rate)?,
+                duration_s,
+                input_pool,
+                seed: seed ^ 0xC0517 ^ ((i as u64) << 17),
+            })
+        })
+        .collect();
     let serve = ServeConfig {
-        fleet: FleetConfig {
-            groups: client_groups(args.get_or("link", "lan"), clients, rate)?,
-            duration_s: args.get_f64("duration", horizon)?,
-            input_pool: args.get_usize("input-pool", 200)?,
-            seed: seed ^ 0xC0517,
-        },
+        fleets: fleets?,
         policy: BatchPolicy {
             max_batch: args.get_usize("batch", largest)?,
             max_wait_ms: args.get_f64("max-wait", 5.0)?,
@@ -444,6 +474,7 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
             coalesce: !args.flag("no-coalesce"),
             autotune: args.flag("autotune"),
             window_ms: 1_000.0,
+            fair_share: !args.flag("no-fair-share"),
         },
         shard_profiles: Vec::new(),
         drained_shards: Vec::new(),
@@ -451,54 +482,83 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         response_bytes: 256,
     };
     let cfg = CosimConfig {
-        train,
+        projects: (0..projects)
+            .map(|i| {
+                let mut project_train = train.clone();
+                // Decorrelate the project masters: same shape, own seed.
+                project_train.seed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9);
+                CosimProject {
+                    spec: spec.clone(),
+                    train: project_train,
+                    publish,
+                    retain,
+                    weight: 1.0,
+                }
+            })
+            .collect(),
         serve,
-        publish: PublicationPolicy {
-            every: args.get_u64("publish-every", 5)?,
-            min_improvement: args.get_f64("publish-delta", 0.0)?,
-        },
-        retain: args.get_usize("retain", 4)?,
+        // Megabytes/min on the CLI; 0 = unthrottled.
+        egress_bytes_per_min: args.get_f64("egress-mb-min", 0.0)? * 1.0e6,
         measure_delta: !args.flag("no-delta"),
     };
     println!(
-        "cosim {}: {} trainer nodes × {} iters (T={}s) + {} request clients at {:.1} rps \
-         over {} shard(s); publish every {} iter(s), delta {}, retain {}",
+        "cosim {}: {} project(s) × ({} trainer nodes × {} iters, T={}s) + {} request \
+         clients/project at {:.1} rps (project 0: {:.1}) over {} shard(s); publish every {} \
+         iter(s), delta {} (hysteresis {}), retain {retain}, egress {} MB/min",
         spec.name,
+        projects,
         nodes,
         iters,
-        cfg.train.master.iter_duration_s,
+        train.master.iter_duration_s,
         clients,
         rate,
+        hot_rate,
         cfg.serve.router.shards,
-        cfg.publish.every,
-        cfg.publish.min_improvement,
-        cfg.retain,
+        publish.every,
+        publish.min_improvement,
+        publish.hysteresis,
+        if cfg.egress_bytes_per_min > 0.0 {
+            format!("{:.1}", cfg.egress_bytes_per_min / 1.0e6)
+        } else {
+            "∞".into()
+        },
     );
 
     // Training runs on the drifting modeled backend (parameters actually
     // move, so snapshot staleness is measurable); serving and the probe
     // share the deterministic modeled predictor.
-    let mut train_compute = DriftingCompute { param_count: spec.param_count };
+    let mut train_computes: Vec<DriftingCompute> = (0..projects)
+        .map(|_| DriftingCompute { param_count: spec.param_count })
+        .collect();
+    let train_refs: Vec<&mut dyn Compute> = train_computes
+        .iter_mut()
+        .map(|c| c as &mut dyn Compute)
+        .collect();
     let mut serve_compute = ModeledCompute { param_count: spec.param_count };
-    let report = run_cosim(&cfg, &spec, &mut train_compute, &mut serve_compute)
-        .map_err(|e| e.to_string())?;
+    let report = run_cosim(&cfg, train_refs, &mut serve_compute).map_err(|e| e.to_string())?;
 
     let mut pub_table = mlitb::metrics::Table::new(
         "publications",
-        &["version", "iteration", "t (s)", "trigger", "gc evicted"],
+        &[
+            "version", "iteration", "t (s)", "trigger", "kb", "active (s)", "act iter",
+            "gc evicted",
+        ],
     );
     for p in &report.publications {
         pub_table.row(vec![
-            format!("v{}", p.snapshot),
+            p.version.to_string(),
             p.iteration.to_string(),
             format!("{:.1}", p.t_ms / 1000.0),
             p.trigger.name().to_string(),
+            format!("{:.1}", p.bytes as f64 / 1000.0),
+            format!("{:.1}", p.activated_ms / 1000.0),
+            p.activated_iteration.to_string(),
             if p.evicted.is_empty() {
                 "-".into()
             } else {
                 p.evicted
                     .iter()
-                    .map(|v| format!("v{v}"))
+                    .map(ToString::to_string)
                     .collect::<Vec<_>>()
                     .join(" ")
             },
@@ -506,50 +566,70 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
     }
     pub_table.print();
 
-    let age_iters = report.staleness.age_iters_summary();
-    let age_ms = report.staleness.age_ms_summary();
-    let lat = report.serve.latency();
     let fmt = |v: f64| if v.is_finite() { format!("{v:.2}") } else { "n/a".into() };
     let mut table = mlitb::metrics::Table::new(
-        "cosim results — staleness beside latency",
+        "cosim results — per-project staleness beside latency",
         &["metric", "p50", "p95", "p99", "mean"],
     );
+    for project in (0..projects).map(|i| ProjectId::new(i as u32)) {
+        let stale = report.staleness.for_project(project);
+        let age_iters = stale.age_iters_summary();
+        let age_ms = stale.age_ms_summary();
+        table.row(vec![
+            format!("{project} snapshot age (iters)"),
+            fmt(age_iters.median()),
+            fmt(age_iters.p95()),
+            fmt(age_iters.quantile(0.99)),
+            fmt(age_iters.mean()),
+        ]);
+        table.row(vec![
+            format!("{project} snapshot age (ms)"),
+            fmt(age_ms.median()),
+            fmt(age_ms.p95()),
+            fmt(age_ms.quantile(0.99)),
+            fmt(age_ms.mean()),
+        ]);
+        if cfg.measure_delta {
+            let delta = stale.delta_summary();
+            table.row(vec![
+                format!("{project} prediction delta (L1)"),
+                fmt(delta.median()),
+                fmt(delta.p95()),
+                fmt(delta.quantile(0.99)),
+                fmt(delta.mean()),
+            ]);
+        }
+    }
+    let lat = report.serve.latency();
     table.row(vec![
-        "snapshot age (iters)".into(),
-        fmt(age_iters.median()),
-        fmt(age_iters.p95()),
-        fmt(age_iters.quantile(0.99)),
-        fmt(age_iters.mean()),
-    ]);
-    table.row(vec![
-        "snapshot age (ms)".into(),
-        fmt(age_ms.median()),
-        fmt(age_ms.p95()),
-        fmt(age_ms.quantile(0.99)),
-        fmt(age_ms.mean()),
-    ]);
-    table.row(vec![
-        "latency (ms)".into(),
+        "latency, all projects (ms)".into(),
         fmt(lat.median()),
         fmt(lat.p95()),
         fmt(lat.quantile(0.99)),
         fmt(lat.mean()),
     ]);
-    if cfg.measure_delta {
-        let delta = report.staleness.delta_summary();
-        table.row(vec![
-            "prediction delta (L1)".into(),
-            fmt(delta.median()),
-            fmt(delta.p95()),
-            fmt(delta.quantile(0.99)),
-            fmt(delta.mean()),
-        ]);
-    }
     table.print();
 
+    let mut per_project = mlitb::metrics::Table::new(
+        "per-project serving",
+        &["project", "offered", "completed", "shed", "shed rate", "p50 ms"],
+    );
+    for stats in &report.serve.per_project {
+        let lat = report.serve.log.for_project(stats.project).latency_summary();
+        per_project.row(vec![
+            stats.project.to_string(),
+            stats.offered.to_string(),
+            stats.completed.to_string(),
+            stats.rejected.to_string(),
+            format!("{:.3}", stats.shed_rate()),
+            fmt(lat.median()),
+        ]);
+    }
+    per_project.print();
+
     let mut counts = mlitb::metrics::Table::new("traffic by version", &["version", "requests"]);
-    for (version, n) in report.staleness.by_snapshot() {
-        counts.row(vec![format!("v{version}"), n.to_string()]);
+    for (version, n) in report.staleness.by_version() {
+        counts.row(vec![version.to_string(), n.to_string()]);
     }
     counts.print();
 
@@ -559,7 +639,9 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
             report.staleness.stale_class_rate()
         );
     }
-    println!("train: {}", report.train.summary());
+    for (i, train_report) in report.train.iter().enumerate() {
+        println!("train p{i}: {}", train_report.summary());
+    }
     println!("serve: {}", report.serve.summary());
     println!("done:  {}", report.summary());
 

@@ -3,6 +3,8 @@
 //! plots — plus the serving subsystem's per-request log ([`RequestLog`]),
 //! the series behind throughput/latency-percentile tables.
 
+use crate::serve::{ModelVersion, ProjectId};
+
 use super::stats::Summary;
 
 /// One master-loop iteration's measurements.
@@ -137,9 +139,10 @@ pub struct RequestRecord {
     pub latency_ms: f64,
     /// Serving shard that answered (0 on a single-endpoint run).
     pub shard: u32,
-    /// Snapshot version that answered — under a live-training hot swap
-    /// the log shows exactly which parameters served each request.
-    pub snapshot: u64,
+    /// Typed model version (project + snapshot) that answered — under a
+    /// live-training hot swap the log shows exactly which project's
+    /// parameters, at which version, served each request.
+    pub version: ModelVersion,
     /// Requests in the executed batch (0 for cache hits and coalesced
     /// waiters — neither occupies an executed batch slot).
     pub batch_size: u32,
@@ -158,6 +161,8 @@ pub struct RequestRecord {
 pub struct RejectionRecord {
     pub id: u64,
     pub client: u32,
+    /// The hosted project whose request was shed.
+    pub project: ProjectId,
     /// Client send / server arrival timestamps (virtual ms).
     pub sent_ms: f64,
     pub arrival_ms: f64,
@@ -219,6 +224,25 @@ impl RequestLog {
         Summary::from(self.records.iter().map(|r| r.latency_ms).collect())
     }
 
+    /// This log restricted to one project's completions and rejections —
+    /// per-project percentiles and reconciliation on a multi-tenant tier.
+    pub fn for_project(&self, project: ProjectId) -> RequestLog {
+        RequestLog {
+            records: self
+                .records
+                .iter()
+                .filter(|r| r.version.project == project)
+                .cloned()
+                .collect(),
+            rejections: self
+                .rejections
+                .iter()
+                .filter(|r| r.project == project)
+                .cloned()
+                .collect(),
+        }
+    }
+
     /// Completed requests per virtual second over [0, horizon].
     pub fn throughput_rps(&self, horizon_s: f64) -> f64 {
         if horizon_s <= 0.0 {
@@ -234,18 +258,19 @@ impl RequestLog {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "id,client,sent_ms,done_ms,latency_ms,shard,snapshot,batch_size,cache_hit,coalesced,class\n",
+            "id,client,sent_ms,done_ms,latency_ms,shard,project,snapshot,batch_size,cache_hit,coalesced,class\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.3},{:.3},{:.3},{},{},{},{},{},{}\n",
+                "{},{},{:.3},{:.3},{:.3},{},{},{},{},{},{},{}\n",
                 r.id,
                 r.client,
                 r.sent_ms,
                 r.done_ms,
                 r.latency_ms,
                 r.shard,
-                r.snapshot,
+                r.version.project.as_u32(),
+                r.version.version,
                 r.batch_size,
                 r.cache_hit as u8,
                 r.coalesced as u8,
@@ -257,11 +282,16 @@ impl RequestLog {
 
     /// The shed stream as CSV (one line per rejected request + header).
     pub fn rejections_to_csv(&self) -> String {
-        let mut out = String::from("id,client,sent_ms,arrival_ms,shard\n");
+        let mut out = String::from("id,client,project,sent_ms,arrival_ms,shard\n");
         for r in &self.rejections {
             out.push_str(&format!(
-                "{},{},{:.3},{:.3},{}\n",
-                r.id, r.client, r.sent_ms, r.arrival_ms, r.shard,
+                "{},{},{},{:.3},{:.3},{}\n",
+                r.id,
+                r.client,
+                r.project.as_u32(),
+                r.sent_ms,
+                r.arrival_ms,
+                r.shard,
             ));
         }
         out
@@ -328,6 +358,10 @@ mod tests {
     }
 
     fn req(id: u64, sent: f64, done: f64, hit: bool) -> RequestRecord {
+        req_p(id, sent, done, hit, 0)
+    }
+
+    fn req_p(id: u64, sent: f64, done: f64, hit: bool, project: u32) -> RequestRecord {
         RequestRecord {
             id,
             client: 1,
@@ -335,7 +369,10 @@ mod tests {
             done_ms: done,
             latency_ms: done - sent,
             shard: 2,
-            snapshot: 5,
+            version: ModelVersion {
+                project: ProjectId::new(project),
+                version: 5,
+            },
             batch_size: if hit { 0 } else { 8 },
             cache_hit: hit,
             coalesced: false,
@@ -365,7 +402,7 @@ mod tests {
         log.push(req(7, 1.0, 3.5, true));
         let csv = log.to_csv();
         assert!(csv.starts_with("id,client,"));
-        assert!(csv.contains("7,1,1.000,3.500,2.500,2,5,0,1,0,3"));
+        assert!(csv.contains("7,1,1.000,3.500,2.500,2,0,5,0,1,0,3"));
     }
 
     #[test]
@@ -375,6 +412,7 @@ mod tests {
         log.push_rejection(RejectionRecord {
             id: 2,
             client: 4,
+            project: ProjectId::new(0),
             sent_ms: 1.0,
             arrival_ms: 2.5,
             shard: 1,
@@ -382,6 +420,7 @@ mod tests {
         log.push_rejection(RejectionRecord {
             id: 3,
             client: 4,
+            project: ProjectId::new(1),
             sent_ms: 1.2,
             arrival_ms: 2.7,
             shard: 0,
@@ -392,8 +431,41 @@ mod tests {
         assert_eq!(log.rejections_by_client().get(&4), Some(&2));
         assert_eq!(log.rejections_by_client().get(&1), None);
         let csv = log.rejections_to_csv();
-        assert!(csv.starts_with("id,client,sent_ms,arrival_ms,shard\n"));
-        assert!(csv.contains("2,4,1.000,2.500,1"));
+        assert!(csv.starts_with("id,client,project,sent_ms,arrival_ms,shard\n"));
+        assert!(csv.contains("2,4,0,1.000,2.500,1"));
         assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn for_project_isolates_streams() {
+        // Interleave two projects' completions and rejections: the
+        // per-project view must carry exactly that project's records, and
+        // its summaries must match a log built from those records alone.
+        let mut log = RequestLog::new();
+        let mut only_b = RequestLog::new();
+        for i in 0..8 {
+            let p = (i % 2) as u32;
+            let r = req_p(i, i as f64, i as f64 + 5.0 + p as f64, false, p);
+            if p == 1 {
+                only_b.push(r.clone());
+            }
+            log.push(r);
+        }
+        log.push_rejection(RejectionRecord {
+            id: 99,
+            client: 1,
+            project: ProjectId::new(1),
+            sent_ms: 0.0,
+            arrival_ms: 1.0,
+            shard: 0,
+        });
+        let a = log.for_project(ProjectId::new(0));
+        let b = log.for_project(ProjectId::new(1));
+        assert_eq!(a.len() + b.len(), log.len());
+        assert_eq!(a.rejections().len(), 0);
+        assert_eq!(b.rejections().len(), 1);
+        assert_eq!(b.to_csv(), only_b.to_csv());
+        assert_eq!(a.latency_summary().max(), 5.0);
+        assert_eq!(b.latency_summary().min(), 6.0);
     }
 }

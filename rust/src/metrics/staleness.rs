@@ -1,17 +1,25 @@
 //! Staleness instrumentation for the serve × train co-simulation.
 //!
-//! When a live master publishes snapshots mid-traffic, every served
-//! answer is computed against parameters some number of iterations (and
-//! virtual milliseconds) behind the master's current state.  The
-//! [`StalenessLog`] correlates each served request with the age of the
-//! snapshot that answered it and — when the probe is enabled — the
-//! prediction delta against the live master parameters: the L1 distance
-//! between the served probability row and the row the freshest
-//! parameters would have produced, plus whether the argmax class flipped.
-//! This is the raw series behind the `fig_cosim` staleness-vs-latency
-//! frontier.
+//! When live masters publish snapshots mid-traffic, every served answer
+//! is computed against parameters some number of iterations (and virtual
+//! milliseconds) behind its own project's master.  The [`StalenessLog`]
+//! correlates each served request with the typed [`ModelVersion`] that
+//! answered it, the age of that snapshot relative to **its project's**
+//! master, and — when the probe is enabled — the prediction delta
+//! against the live master parameters: the L1 distance between the
+//! served probability row and the row the freshest parameters would have
+//! produced, plus whether the argmax class flipped.  This is the raw
+//! series behind the `fig_cosim` staleness-vs-latency frontier and the
+//! `fig_multitenant` per-project tables.
+//!
+//! **Isolation.**  Projects interleave in one log but never mix in the
+//! statistics: [`StalenessLog::for_project`] restricts the series, and
+//! the per-project percentiles of an interleaved log equal those of a
+//! log holding only that project's trace (pinned by tests).
 
 use std::collections::BTreeMap;
+
+use crate::serve::{ModelVersion, ProjectId};
 
 use super::stats::Summary;
 
@@ -23,11 +31,12 @@ pub struct StalenessRecord {
     pub client: u32,
     /// Client receive time (virtual ms).
     pub done_ms: f64,
-    /// Snapshot version that answered.
-    pub snapshot: u64,
+    /// Model version (project + snapshot) that answered.
+    pub version: ModelVersion,
     /// Training iteration the snapshot captured.
     pub snapshot_iteration: u64,
-    /// Master iteration live while the request was served.
+    /// The owning project's master iteration live while the request was
+    /// served.
     pub master_iteration: u64,
     /// Virtual ms between the snapshot's publication and the response.
     pub age_ms: f64,
@@ -42,7 +51,8 @@ pub struct StalenessRecord {
 }
 
 impl StalenessRecord {
-    /// Snapshot age in training iterations at serve time.
+    /// Snapshot age in training iterations at serve time (relative to the
+    /// owning project's master).
     pub fn age_iters(&self) -> u64 {
         self.master_iteration.saturating_sub(self.snapshot_iteration)
     }
@@ -81,6 +91,19 @@ impl StalenessLog {
         &self.records
     }
 
+    /// This log restricted to one project's answers (record order
+    /// preserved) — the isolation view behind per-project percentiles.
+    pub fn for_project(&self, project: ProjectId) -> StalenessLog {
+        StalenessLog {
+            records: self
+                .records
+                .iter()
+                .filter(|r| r.version.project == project)
+                .cloned()
+                .collect(),
+        }
+    }
+
     /// Snapshot-age distribution in training iterations.
     pub fn age_iters_summary(&self) -> Summary {
         Summary::from(self.records.iter().map(|r| r.age_iters() as f64).collect())
@@ -111,27 +134,29 @@ impl StalenessLog {
         probed.iter().filter(|&&flipped| flipped).count() as f64 / probed.len() as f64
     }
 
-    /// Requests answered per snapshot version (which versions actually
-    /// carried traffic — GC should be reclaiming the zeros).
-    pub fn by_snapshot(&self) -> BTreeMap<u64, u64> {
+    /// Requests answered per model version (which versions of which
+    /// projects actually carried traffic — GC should be reclaiming the
+    /// zeros).
+    pub fn by_version(&self) -> BTreeMap<ModelVersion, u64> {
         let mut by = BTreeMap::new();
         for r in &self.records {
-            *by.entry(r.snapshot).or_insert(0) += 1;
+            *by.entry(r.version).or_insert(0) += 1;
         }
         by
     }
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "id,client,done_ms,snapshot,snapshot_iteration,master_iteration,age_iters,age_ms,delta,fresh_class,class\n",
+            "id,client,done_ms,project,snapshot,snapshot_iteration,master_iteration,age_iters,age_ms,delta,fresh_class,class\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.3},{},{},{},{},{:.3},{},{},{}\n",
+                "{},{},{:.3},{},{},{},{},{},{:.3},{},{},{}\n",
                 r.id,
                 r.client,
                 r.done_ms,
-                r.snapshot,
+                r.version.project.as_u32(),
+                r.version.version,
                 r.snapshot_iteration,
                 r.master_iteration,
                 r.age_iters(),
@@ -149,12 +174,22 @@ impl StalenessLog {
 mod tests {
     use super::*;
 
-    fn rec(id: u64, snap: u64, snap_iter: u64, master_iter: u64, delta: Option<f64>) -> StalenessRecord {
+    fn rec_p(
+        id: u64,
+        project: u32,
+        snap: u64,
+        snap_iter: u64,
+        master_iter: u64,
+        delta: Option<f64>,
+    ) -> StalenessRecord {
         StalenessRecord {
             id,
             client: 0,
             done_ms: id as f64 * 10.0,
-            snapshot: snap,
+            version: ModelVersion {
+                project: ProjectId::new(project),
+                version: snap,
+            },
             snapshot_iteration: snap_iter,
             master_iteration: master_iter,
             age_ms: (master_iter - snap_iter) as f64 * 4_000.0,
@@ -162,6 +197,10 @@ mod tests {
             fresh_class: delta.map(|d| if d > 0.5 { 1 } else { 0 }),
             class: 0,
         }
+    }
+
+    fn rec(id: u64, snap: u64, snap_iter: u64, master_iter: u64, delta: Option<f64>) -> StalenessRecord {
+        rec_p(id, 0, snap, snap_iter, master_iter, delta)
     }
 
     #[test]
@@ -179,8 +218,12 @@ mod tests {
         assert!((log.delta_summary().mean() - (1.0 / 3.0)).abs() < 1e-9);
         // One of three probed answers flipped class.
         assert!((log.stale_class_rate() - (1.0 / 3.0)).abs() < 1e-9);
-        assert_eq!(log.by_snapshot().get(&1), Some(&2));
-        assert_eq!(log.by_snapshot().get(&2), Some(&1));
+        let v = |s: u64| ModelVersion {
+            project: ProjectId::new(0),
+            version: s,
+        };
+        assert_eq!(log.by_version().get(&v(1)), Some(&2));
+        assert_eq!(log.by_version().get(&v(2)), Some(&1));
     }
 
     #[test]
@@ -192,8 +235,8 @@ mod tests {
         assert_eq!(log.stale_class_rate(), 0.0);
         // CSV leaves the probe columns empty, ages intact.
         let csv = log.to_csv();
-        assert!(csv.starts_with("id,client,done_ms,snapshot,"));
-        assert!(csv.contains("1,0,10.000,1,0,3,3,12000.000,,,0"));
+        assert!(csv.starts_with("id,client,done_ms,project,snapshot,"));
+        assert!(csv.contains("1,0,10.000,0,1,0,3,3,12000.000,,,0"));
     }
 
     #[test]
@@ -203,5 +246,69 @@ mod tests {
             log.push(rec(i, 1, 0, 1, Some(0.1)));
         }
         assert_eq!(log.to_csv().lines().count(), 6);
+    }
+
+    #[test]
+    fn interleaved_projects_do_not_contaminate_per_project_percentiles() {
+        // The isolation satellite: build two projects' traces, interleave
+        // them in one log, and require every per-project statistic to
+        // match the single-project log holding the same trace.
+        let trace_a: Vec<StalenessRecord> = (0..6)
+            .map(|i| rec_p(i * 2, 0, 1 + i % 2, 0, i, Some(0.1 * i as f64)))
+            .collect();
+        let trace_b: Vec<StalenessRecord> = (0..9)
+            .map(|i| rec_p(i * 2 + 1, 1, 1, 0, 2 * i + 1, Some(0.9)))
+            .collect();
+        let mut solo_a = StalenessLog::new();
+        let mut solo_b = StalenessLog::new();
+        let mut interleaved = StalenessLog::new();
+        let (mut ia, mut ib) = (trace_a.iter(), trace_b.iter());
+        // Deterministic unfair interleave: 1 of a, then 2 of b, repeat.
+        loop {
+            let a = ia.next();
+            let b1 = ib.next();
+            let b2 = ib.next();
+            if a.is_none() && b1.is_none() {
+                break;
+            }
+            for r in [a, b1, b2].into_iter().flatten() {
+                interleaved.push(r.clone());
+            }
+        }
+        for r in trace_a {
+            solo_a.push(r);
+        }
+        for r in trace_b {
+            solo_b.push(r);
+        }
+        assert_eq!(interleaved.len(), solo_a.len() + solo_b.len());
+        let view_a = interleaved.for_project(ProjectId::new(0));
+        let view_b = interleaved.for_project(ProjectId::new(1));
+        // Byte-identical per-project series…
+        assert_eq!(view_a.to_csv(), solo_a.to_csv());
+        assert_eq!(view_b.to_csv(), solo_b.to_csv());
+        // …and therefore identical percentiles on every axis.
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(
+                view_a.age_iters_summary().quantile(q),
+                solo_a.age_iters_summary().quantile(q)
+            );
+            assert_eq!(
+                view_b.age_iters_summary().quantile(q),
+                solo_b.age_iters_summary().quantile(q)
+            );
+            assert_eq!(
+                view_a.delta_summary().quantile(q),
+                solo_a.delta_summary().quantile(q)
+            );
+        }
+        assert_eq!(view_a.stale_class_rate(), solo_a.stale_class_rate());
+        assert_eq!(view_b.by_version(), solo_b.by_version());
+        // The interleaved aggregate differs from both (the views really
+        // restricted something).
+        assert_ne!(
+            interleaved.age_iters_summary().max(),
+            view_a.age_iters_summary().max()
+        );
     }
 }

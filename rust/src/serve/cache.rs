@@ -3,9 +3,11 @@
 //! "Prediction to the public at large" traffic has heavy-hitter inputs:
 //! the same image is submitted by many clients (and retried by the same
 //! one).  A hit skips admission, batching and execution entirely and is
-//! served at lookup cost.  Keys are exact-match: FNV-1a over the snapshot
-//! id and the input's f32 bit pattern — a new snapshot version invalidates
-//! the whole cache by construction, with no epoch bookkeeping.  Hashing
+//! served at lookup cost.  Keys are exact-match: FNV-1a over the typed
+//! [`ModelVersion`] (project **and** version) and the input's f32 bit
+//! pattern — a new snapshot version invalidates the whole cache by
+//! construction, with no epoch bookkeeping, and two projects can never
+//! collide on a shared shard cache even for identical inputs.  Hashing
 //! alone is not trusted: each entry keeps its input (a shared handle, not
 //! a copy) and a hit compares it, so a 64-bit collision degrades to a
 //! miss instead of silently serving another input's answer.
@@ -13,17 +15,21 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use super::control::ModelVersion;
 use super::executor::Prediction;
-use super::registry::SnapshotId;
 
 const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 const FNV_PRIME: u64 = 0x100000001b3;
 
-/// Cache key for (snapshot, input): FNV-1a over the version id and the
-/// pixel bit patterns (exact match; no float tolerance).
-pub fn input_key(snapshot: SnapshotId, pixels: &[f32]) -> u64 {
+/// Cache key for (version, input): FNV-1a over the project id, the
+/// version number and the pixel bit patterns (exact match; no float
+/// tolerance).
+pub fn input_key(version: ModelVersion, pixels: &[f32]) -> u64 {
     let mut h = FNV_OFFSET;
-    for b in snapshot.to_le_bytes() {
+    for b in version.project.as_u32().to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for b in version.version.to_le_bytes() {
         h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
     }
     for px in pixels {
@@ -165,14 +171,26 @@ mod tests {
         Arc::new(vec![v])
     }
 
+    fn v(project: u32, version: u64) -> ModelVersion {
+        ModelVersion {
+            project: crate::serve::ProjectId::new(project),
+            version,
+        }
+    }
+
     #[test]
-    fn key_is_exact_and_snapshot_scoped() {
-        let a = input_key(1, &[0.1, 0.2]);
-        assert_eq!(a, input_key(1, &[0.1, 0.2]));
-        assert_ne!(a, input_key(2, &[0.1, 0.2]), "new snapshot, new keyspace");
-        assert_ne!(a, input_key(1, &[0.2, 0.1]), "order matters");
+    fn key_is_exact_and_version_scoped() {
+        let a = input_key(v(0, 1), &[0.1, 0.2]);
+        assert_eq!(a, input_key(v(0, 1), &[0.1, 0.2]));
+        assert_ne!(a, input_key(v(0, 2), &[0.1, 0.2]), "new snapshot, new keyspace");
+        assert_ne!(
+            a,
+            input_key(v(1, 1), &[0.1, 0.2]),
+            "same version number, other project: distinct keyspace"
+        );
+        assert_ne!(a, input_key(v(0, 1), &[0.2, 0.1]), "order matters");
         // -0.0 and 0.0 have different bit patterns: exact-match semantics.
-        assert_ne!(input_key(1, &[0.0]), input_key(1, &[-0.0]));
+        assert_ne!(input_key(v(0, 1), &[0.0]), input_key(v(0, 1), &[-0.0]));
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! The multi-project control plane — §3.1's "one master hosts several
+//! projects" made typed.
+//!
+//! MLitB's master is explicitly multi-tenant: one master process hosts
+//! *several projects*, each with its own model, data and clients.  The
+//! serving tier used to hard-code a single anonymous model; this module
+//! is the ownership root that lifts it to N projects:
+//!
+//! * [`ProjectId`] — typed project identity.  Only the control plane
+//!   mints them (registration order), so an id always names a registered
+//!   project; raw integers no longer flow through the serving API.
+//! * [`ModelVersion`] — typed model handle `(project, version)` replacing
+//!   the bare `u64` snapshot ids end-to-end: requests, batches, cache
+//!   keys, logs and publication records all carry it, so a version can
+//!   never be confused across projects.
+//! * [`ControlPlane`] — owns one [`SnapshotRegistry`] (and a fair-share
+//!   weight) per project.  The serving engine routes every arrival
+//!   through it: active-version lookup, reader pins and GC are all
+//!   per-project, so one project's pinned versions never block another
+//!   project's eviction.
+//! * [`ControlPlane::queue_caps`] — weighted fair-share admission: each
+//!   project may occupy at most `weight_share × queue_depth` slots of a
+//!   shard's admission queue, so a hot project saturating the tier
+//!   cannot starve a cold one out of its share.
+
+use std::fmt;
+
+use crate::model::ModelSpec;
+
+use super::registry::{Snapshot, SnapshotRegistry};
+
+/// Typed identity of one hosted project (§3.1).  Minted by
+/// [`ControlPlane::register`] in registration order; `new` exists for
+/// tests and for decoding logs, not for inventing projects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ProjectId(u32);
+
+impl ProjectId {
+    pub const fn new(raw: u32) -> Self {
+        Self(raw)
+    }
+
+    /// Dense index (registration order) — what per-project tables and
+    /// queue caps are keyed by.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    pub fn as_u32(self) -> u32 {
+        self.0
+    }
+}
+
+impl fmt::Display for ProjectId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+
+/// Typed model-version handle: which project, which snapshot.  Replaces
+/// the old bare `u64` snapshot id everywhere a version crosses an API
+/// boundary — a `ModelVersion` from one project cannot silently index
+/// into another project's registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelVersion {
+    pub project: ProjectId,
+    /// 1-based version number within the project (0 is never assigned).
+    pub version: u64,
+}
+
+impl fmt::Display for ModelVersion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}v{}", self.project, self.version)
+    }
+}
+
+/// Per-project serving counters surfaced in [`super::ServeReport`].
+#[derive(Debug, Clone, Copy)]
+pub struct ProjectStats {
+    pub project: ProjectId,
+    pub offered: u64,
+    pub completed: u64,
+    pub rejected: u64,
+}
+
+impl ProjectStats {
+    /// Fraction of this project's offered requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.offered as f64
+    }
+}
+
+/// One hosted project: its registry plus its fair-share weight.
+#[derive(Debug, Clone)]
+struct ProjectEntry {
+    registry: SnapshotRegistry,
+    weight: f64,
+}
+
+/// The multi-project ownership root: one snapshot registry per project,
+/// fair-share weights, and cross-project version lookup.  See the module
+/// docs for the full story.
+#[derive(Debug, Clone, Default)]
+pub struct ControlPlane {
+    entries: Vec<ProjectEntry>,
+}
+
+impl ControlPlane {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Convenience: a plane hosting exactly one project (weight 1) — the
+    /// single-tenant shape benches and the `serve-sim` CLI use.
+    pub fn single(spec: ModelSpec) -> Self {
+        let mut plane = Self::new();
+        plane.register(spec, 1.0);
+        plane
+    }
+
+    /// Register a project; returns its minted id.  Non-positive weights
+    /// clamp to a tiny positive share (a zero-weight project would be
+    /// unservable, not merely deprioritized).
+    pub fn register(&mut self, spec: ModelSpec, weight: f64) -> ProjectId {
+        let id = ProjectId(self.entries.len() as u32);
+        self.entries.push(ProjectEntry {
+            registry: SnapshotRegistry::new(id, spec),
+            weight: if weight > 0.0 { weight } else { 1e-6 },
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered project ids, registration order.
+    pub fn ids(&self) -> Vec<ProjectId> {
+        (0..self.entries.len() as u32).map(ProjectId).collect()
+    }
+
+    /// Served model specs, one per project (registration order) — what
+    /// the engine builds its per-project executors from.
+    pub fn specs(&self) -> Vec<ModelSpec> {
+        self.entries
+            .iter()
+            .map(|e| e.registry.spec().clone())
+            .collect()
+    }
+
+    pub fn registry(&self, project: ProjectId) -> &SnapshotRegistry {
+        &self.entries[project.index()].registry
+    }
+
+    pub fn registry_mut(&mut self, project: ProjectId) -> &mut SnapshotRegistry {
+        &mut self.entries[project.index()].registry
+    }
+
+    pub fn weight(&self, project: ProjectId) -> f64 {
+        self.entries[project.index()].weight
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.entries.iter().map(|e| e.weight).sum()
+    }
+
+    /// The snapshot a version handle names, routed to its own project's
+    /// registry (`None` when evicted or never published).
+    pub fn get(&self, version: ModelVersion) -> Option<&Snapshot> {
+        self.entries
+            .get(version.project.index())?
+            .registry
+            .get(version)
+    }
+
+    /// The snapshot new requests of `project` are served from.
+    pub fn active(&self, project: ProjectId) -> Option<&Snapshot> {
+        self.entries.get(project.index())?.registry.active()
+    }
+
+    /// Pin a version against GC (routed to its project's registry).
+    pub fn pin_reader(&mut self, version: ModelVersion) -> Result<(), String> {
+        self.registry_mut(version.project).pin_reader(version)
+    }
+
+    /// Release a reader pin.
+    pub fn unpin_reader(&mut self, version: ModelVersion) {
+        self.registry_mut(version.project).unpin_reader(version);
+    }
+
+    /// Outstanding reader pins across every project (0 once traffic
+    /// drains).
+    pub fn total_readers(&self) -> u64 {
+        self.entries
+            .iter()
+            .map(|e| e.registry.total_readers())
+            .sum()
+    }
+
+    /// Snapshots resident across every project's registry.
+    pub fn resident(&self) -> usize {
+        self.entries.iter().map(|e| e.registry.len()).sum()
+    }
+
+    /// Weighted fair-share admission caps for a shard queue of `depth`
+    /// slots: project `p` may occupy at most
+    /// `max(1, floor(depth × weight_p / Σweights))` pending slots.
+    ///
+    /// The cap sum is kept ≤ `depth` whenever `depth` can seat every
+    /// project at all (each project's share is then a *real*
+    /// reservation: a hot project at its cap always leaves the cold
+    /// project's share admittable) — raising a zero floor to 1 shaves
+    /// the largest caps to compensate.  Only when `depth` is smaller
+    /// than the project count does the sum exceed it (everyone keeps one
+    /// admittable slot and races for the global depth).  A
+    /// single-project plane gets the whole queue; `depth == 0` stays a
+    /// closed endpoint for everyone.
+    pub fn queue_caps(&self, depth: usize) -> Vec<usize> {
+        let n = self.entries.len();
+        if depth == 0 {
+            return vec![0; n];
+        }
+        if n <= 1 {
+            return vec![depth; n];
+        }
+        let total = self.total_weight();
+        let mut caps: Vec<usize> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let share = (depth as f64 * e.weight / total).floor() as usize;
+                share.clamp(1, depth)
+            })
+            .collect();
+        // The max(1) floor can push the sum past `depth` under skewed
+        // weights; shave the largest caps (never below 1) so every cap
+        // stays a genuine reservation against the global bound.
+        if depth >= n {
+            let mut excess = caps.iter().sum::<usize>().saturating_sub(depth);
+            while excess > 0 {
+                let (i, &largest) = caps
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+                    .expect("n >= 2");
+                if largest <= 1 {
+                    break;
+                }
+                let shave = excess.min(largest - 1);
+                caps[i] -= shave;
+                excess -= shave;
+            }
+        }
+        caps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+
+    fn spec(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.into(),
+            param_count: 4,
+            batch_size: 2,
+            micro_batches: vec![2, 1],
+            input: vec![2, 1, 1],
+            classes: 2,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![4],
+                offset: 0,
+                size: 4,
+                fan_in: 2,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn two_project_plane() -> (ControlPlane, ProjectId, ProjectId) {
+        let mut plane = ControlPlane::new();
+        let a = plane.register(spec("a"), 1.0);
+        let b = plane.register(spec("b"), 1.0);
+        (plane, a, b)
+    }
+
+    #[test]
+    fn registration_mints_dense_ids() {
+        let (plane, a, b) = two_project_plane();
+        assert_eq!(plane.len(), 2);
+        assert_eq!((a.index(), b.index()), (0, 1));
+        assert_eq!(plane.ids(), vec![a, b]);
+        assert_eq!(plane.registry(a).spec().name, "a");
+        assert_eq!(plane.registry(b).spec().name, "b");
+        assert_eq!(a.to_string(), "p0");
+    }
+
+    #[test]
+    fn versions_are_project_scoped() {
+        let (mut plane, a, b) = two_project_plane();
+        let va = plane
+            .registry_mut(a)
+            .publish_params(vec![0.0; 4], 1, "a1".into(), 0.0)
+            .unwrap();
+        assert_eq!(va.project, a);
+        assert_eq!(va.version, 1);
+        assert_eq!(va.to_string(), "p0v1");
+        // The same version *number* under project b names nothing until b
+        // publishes — handles don't leak across projects.
+        let vb_handle = ModelVersion { project: b, version: 1 };
+        assert!(plane.get(vb_handle).is_none());
+        assert!(plane.get(va).is_some());
+        let vb = plane
+            .registry_mut(b)
+            .publish_params(vec![1.0; 4], 5, "b1".into(), 0.0)
+            .unwrap();
+        assert_eq!(plane.get(vb).unwrap().iteration, 5);
+        assert_eq!(plane.get(va).unwrap().iteration, 1);
+        assert_eq!(plane.active(a).unwrap().version, va);
+        assert_eq!(plane.active(b).unwrap().version, vb);
+    }
+
+    #[test]
+    fn one_projects_pins_never_block_anothers_eviction() {
+        // The cross-project GC satellite: reader pins are per-registry, so
+        // a pinned version in project a must not save project b's stale
+        // versions from retention.
+        let (mut plane, a, b) = two_project_plane();
+        for i in 0..4 {
+            plane
+                .registry_mut(a)
+                .publish_params(vec![i as f32; 4], i, String::new(), i as f64)
+                .unwrap();
+            plane
+                .registry_mut(b)
+                .publish_params(vec![i as f32; 4], i, String::new(), i as f64)
+                .unwrap();
+        }
+        let a1 = plane.registry(a).handle(1);
+        plane.pin_reader(a1).unwrap();
+        assert_eq!(plane.registry(a).reader_count(a1), 1);
+        // Project b GCs to 1 resident version: everything old goes, the
+        // pin in project a notwithstanding.
+        let evicted_b = plane.registry_mut(b).gc_keep_latest(1);
+        assert_eq!(
+            evicted_b,
+            (1..4)
+                .map(|v| ModelVersion { project: b, version: v })
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(plane.registry(b).len(), 1);
+        // Project a's GC keeps its pinned v1 (and active v4) only.
+        let evicted_a = plane.registry_mut(a).gc_keep_latest(1);
+        assert_eq!(
+            evicted_a,
+            (2..4)
+                .map(|v| ModelVersion { project: a, version: v })
+                .collect::<Vec<_>>()
+        );
+        assert!(plane.get(a1).is_some(), "pinned version survives");
+        plane.unpin_reader(a1);
+        assert_eq!(plane.total_readers(), 0);
+        assert_eq!(plane.registry_mut(a).gc_keep_latest(1), vec![a1]);
+        assert_eq!(plane.resident(), 2);
+    }
+
+    #[test]
+    fn fair_share_caps_reserve_each_projects_slice() {
+        let mut plane = ControlPlane::new();
+        plane.register(spec("hot"), 3.0);
+        plane.register(spec("cold"), 1.0);
+        assert_eq!(plane.queue_caps(64), vec![48, 16]);
+        // Floors keep the sum within the queue depth.
+        assert!(plane.queue_caps(7).iter().sum::<usize>() <= 7);
+        // Tiny queues: everyone stays admittable.
+        assert_eq!(plane.queue_caps(1), vec![1, 1]);
+        // Skewed weights + small depth: raising zero floors to 1 must
+        // shave the hot cap, not oversubscribe the queue — otherwise the
+        // "reserved" cold slices are not actually admittable under the
+        // global depth bound.
+        let mut skewed = ControlPlane::new();
+        skewed.register(spec("hot"), 10.0);
+        skewed.register(spec("c1"), 1.0);
+        skewed.register(spec("c2"), 1.0);
+        assert_eq!(skewed.queue_caps(4), vec![2, 1, 1]);
+        assert!(skewed.queue_caps(4).iter().sum::<usize>() <= 4);
+        // Depth below the project count: everyone keeps one slot and
+        // races for the global bound (the documented exception).
+        assert_eq!(skewed.queue_caps(2), vec![1, 1, 1]);
+        // Closed endpoint stays closed for all.
+        assert_eq!(plane.queue_caps(0), vec![0, 0]);
+        // Single project owns the whole queue.
+        let single = ControlPlane::single(spec("solo"));
+        assert_eq!(single.queue_caps(64), vec![64]);
+        assert_eq!(single.total_weight(), 1.0);
+    }
+
+    #[test]
+    fn nonpositive_weights_clamp_to_servable() {
+        let mut plane = ControlPlane::new();
+        let a = plane.register(spec("a"), 0.0);
+        let b = plane.register(spec("b"), -2.0);
+        assert!(plane.weight(a) > 0.0);
+        assert!(plane.weight(b) > 0.0);
+        // Both stay admittable under any depth.
+        assert!(plane.queue_caps(16).iter().all(|&c| c >= 1));
+    }
+}

@@ -16,6 +16,8 @@ use crate::model::ModelSpec;
 use crate::netsim::{LinkModel, LinkProfile};
 use crate::rng::{Exp, Pcg32};
 
+use super::control::ProjectId;
+
 /// A homogeneous group of simulated request clients.
 #[derive(Debug, Clone, Copy)]
 pub struct ClientSpec {
@@ -40,11 +42,15 @@ pub struct FleetConfig {
 }
 
 /// One request on the wire; the uplink (client → server) is resolved at
-/// generation time, the downlink at response time.
+/// generation time, the downlink at response time.  Requests carry their
+/// [`ProjectId`]: the multi-tenant tier routes, batches and answers them
+/// against that project's model only.
 #[derive(Debug, Clone)]
 pub struct RequestEvent {
     pub id: u64,
     pub client: u32,
+    /// The hosted project this request queries.
+    pub project: ProjectId,
     /// When the client sent it (virtual ms).
     pub sent_ms: f64,
     /// When it reaches the server: sent + uplink latency + transmission.
@@ -63,9 +69,11 @@ pub struct RequestFleet {
 }
 
 impl RequestFleet {
-    /// Build the fleet and its full arrival schedule, deterministically
-    /// from `cfg.seed`.
-    pub fn generate(cfg: &FleetConfig, spec: &ModelSpec) -> Self {
+    /// Build one project's fleet and its full arrival schedule,
+    /// deterministically from `cfg.seed`.  Ids and client indices are
+    /// fleet-local; [`RequestFleet::merge`] re-bases them when several
+    /// projects share a serving tier.
+    pub fn generate(project: ProjectId, cfg: &FleetConfig, spec: &ModelSpec) -> Self {
         let mut rng = Pcg32::new(cfg.seed ^ 0x5E47E);
         let pool = input_pool(cfg, spec, &mut rng);
         let input_bytes = (spec.input_len() * 4 + 64) as u64;
@@ -89,6 +97,7 @@ impl RequestFleet {
                         events.push(RequestEvent {
                             id,
                             client,
+                            project,
                             sent_ms: t,
                             arrival_ms: t + uplink,
                             input,
@@ -100,6 +109,40 @@ impl RequestFleet {
                 links.push(link);
                 client += 1;
             }
+        }
+        events.sort_by(|a, b| {
+            a.arrival_ms
+                .partial_cmp(&b.arrival_ms)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        Self {
+            links,
+            events,
+            input_bytes,
+        }
+    }
+
+    /// Interleave several projects' fleets into one time-ordered arrival
+    /// schedule for the shared tier.  Request ids and client indices are
+    /// offset per fleet so both stay globally unique (links concatenate in
+    /// fleet order; response timing indexes the merged table).
+    pub fn merge(fleets: Vec<RequestFleet>) -> Self {
+        let mut links = Vec::new();
+        let mut events: Vec<RequestEvent> = Vec::new();
+        let mut id_base = 0u64;
+        let mut input_bytes = 0u64;
+        for fleet in fleets {
+            let client_base = links.len() as u32;
+            let count = fleet.events.len() as u64;
+            for mut e in fleet.events {
+                e.id += id_base;
+                e.client += client_base;
+                events.push(e);
+            }
+            id_base += count;
+            links.extend(fleet.links);
+            input_bytes = input_bytes.max(fleet.input_bytes);
         }
         events.sort_by(|a, b| {
             a.arrival_ms
@@ -184,10 +227,14 @@ mod tests {
         }
     }
 
+    fn gen(cfg: &FleetConfig) -> RequestFleet {
+        RequestFleet::generate(ProjectId::new(0), cfg, &spec())
+    }
+
     #[test]
     fn event_count_tracks_offered_load() {
-        let fleet_lo = RequestFleet::generate(&cfg(2.0, 4, 10.0), &spec());
-        let fleet_hi = RequestFleet::generate(&cfg(20.0, 4, 10.0), &spec());
+        let fleet_lo = gen(&cfg(2.0, 4, 10.0));
+        let fleet_hi = gen(&cfg(20.0, 4, 10.0));
         // Poisson: expect ~80 vs ~800; allow wide slack.
         assert!(fleet_lo.offered() > 30 && fleet_lo.offered() < 200, "{}", fleet_lo.offered());
         assert!(
@@ -201,7 +248,7 @@ mod tests {
 
     #[test]
     fn events_sorted_by_arrival_and_after_send() {
-        let fleet = RequestFleet::generate(&cfg(10.0, 3, 5.0), &spec());
+        let fleet = gen(&cfg(10.0, 3, 5.0));
         for w in fleet.events.windows(2) {
             assert!(w[0].arrival_ms <= w[1].arrival_ms);
         }
@@ -209,13 +256,14 @@ mod tests {
             assert!(e.arrival_ms > e.sent_ms, "uplink takes time");
             assert!(e.sent_ms < 5_000.0, "sent within the horizon");
             assert_eq!(e.input.len(), 6);
+            assert_eq!(e.project, ProjectId::new(0));
         }
     }
 
     #[test]
     fn deterministic_per_seed() {
-        let a = RequestFleet::generate(&cfg(5.0, 2, 5.0), &spec());
-        let b = RequestFleet::generate(&cfg(5.0, 2, 5.0), &spec());
+        let a = gen(&cfg(5.0, 2, 5.0));
+        let b = gen(&cfg(5.0, 2, 5.0));
         assert_eq!(a.offered(), b.offered());
         for (x, y) in a.events.iter().zip(&b.events) {
             assert_eq!(x.id, y.id);
@@ -223,7 +271,7 @@ mod tests {
         }
         let mut other = cfg(5.0, 2, 5.0);
         other.seed = 4;
-        let c = RequestFleet::generate(&other, &spec());
+        let c = gen(&other);
         assert!(
             a.events.len() != c.events.len()
                 || a.events
@@ -248,26 +296,56 @@ mod tests {
                 .sum::<f64>()
                 / fleet.events.len() as f64
         };
-        let lan = mean_uplink(&RequestFleet::generate(&lan_cfg, &spec()));
-        let cell = mean_uplink(&RequestFleet::generate(&cell_cfg, &spec()));
+        let lan = mean_uplink(&gen(&lan_cfg));
+        let cell = mean_uplink(&gen(&cell_cfg));
         assert!(cell > 3.0 * lan, "cellular {cell} vs lan {lan}");
     }
 
     #[test]
     fn zero_rate_or_zero_clients_offer_nothing() {
-        let none = RequestFleet::generate(&cfg(0.0, 4, 10.0), &spec());
+        let none = gen(&cfg(0.0, 4, 10.0));
         assert_eq!(none.offered(), 0);
         assert_eq!(none.links.len(), 4);
-        let empty = RequestFleet::generate(&cfg(5.0, 0, 10.0), &spec());
+        let empty = gen(&cfg(5.0, 0, 10.0));
         assert_eq!(empty.offered(), 0);
         assert!(empty.links.is_empty());
+    }
+
+    #[test]
+    fn merge_interleaves_and_rebases_ids() {
+        // Two projects with their own fleets: the merged schedule stays
+        // time-ordered, ids and client indices are globally unique, and
+        // every event keeps its project tag.
+        let a = RequestFleet::generate(ProjectId::new(0), &cfg(10.0, 2, 5.0), &spec());
+        let mut bc = cfg(6.0, 3, 5.0);
+        bc.seed = 5;
+        let b = RequestFleet::generate(ProjectId::new(1), &bc, &spec());
+        let (na, nb) = (a.offered(), b.offered());
+        assert!(na > 0 && nb > 0);
+        let merged = RequestFleet::merge(vec![a, b]);
+        assert_eq!(merged.offered(), na + nb);
+        assert_eq!(merged.links.len(), 5);
+        for w in merged.events.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+        let mut ids: Vec<u64> = merged.events.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, na + nb, "ids stay unique after merge");
+        for e in &merged.events {
+            if e.project == ProjectId::new(0) {
+                assert!(e.id < na && e.client < 2);
+            } else {
+                assert!(e.id >= na && (2u32..5).contains(&e.client));
+            }
+        }
     }
 
     #[test]
     fn pool_inputs_repeat_across_requests() {
         let mut c = cfg(50.0, 2, 10.0);
         c.input_pool = 2;
-        let fleet = RequestFleet::generate(&c, &spec());
+        let fleet = gen(&c);
         let first = &fleet.events[0].input;
         assert!(
             fleet.events[1..].iter().any(|e| Arc::ptr_eq(&e.input, first)),

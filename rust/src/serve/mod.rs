@@ -6,11 +6,19 @@
 //! (research closures, §2.3/§3.6) and downloaded by any device for
 //! inference.  Where `coordinator`/`sim` reproduce the training side,
 //! this module opens the inference-under-load workload the ROADMAP's
-//! "heavy traffic from millions of users" north star demands:
+//! "heavy traffic from millions of users" north star demands — for the
+//! paper's §3.1 *multi-tenant* master: one serving tier hosts several
+//! projects, each with its own model, fleet and publication policy:
 //!
-//! * [`SnapshotRegistry`] — versioned parameter snapshots ingested from
-//!   research closures or live training masters, with activation/rollback
-//!   and retention GC.
+//! * [`ControlPlane`] — the multi-project ownership root: mints typed
+//!   [`ProjectId`]s, owns one registry (and a fair-share weight) per
+//!   project, and derives the weighted per-project admission caps a hot
+//!   project cannot starve a cold one through.  [`ModelVersion`] —
+//!   `(project, version)` — replaces bare `u64` snapshot ids end-to-end.
+//! * [`SnapshotRegistry`] — one project's versioned parameter snapshots
+//!   ingested from research closures or live training masters, with
+//!   staged (transfer-in-flight) publication, activation/rollback and
+//!   retention GC.
 //! * [`AdmissionQueue`] + [`BatchPolicy`] — bounded admission and
 //!   deadline-bounded micro-batching (flush on full batch or oldest-wait
 //!   deadline), the serving latency/throughput dial.
@@ -33,14 +41,15 @@
 //!   observed admission rate, the flush size snapped to a compiled
 //!   `predict_b{n}` variant).
 //! * [`ServeEngine`] + [`ServeSim`] — the discrete-event loop binding the
-//!   above.  The engine is incrementally pumpable to a virtual-time
-//!   horizon (what [`crate::cosim`] interleaves with training iterations;
-//!   requests are version-stamped at arrival, batches never mix
-//!   versions, and admitted requests hold registry reader pins so GC
-//!   can't evict a version with in-flight work); `ServeSim` wraps it for
-//!   serving-only runs and emits a [`ServeReport`] with per-request
-//!   latency percentiles, throughput, shed attribution and per-shard
-//!   stats via `metrics`.
+//!   above over the control plane.  The engine is incrementally pumpable
+//!   to a virtual-time horizon (what [`crate::cosim`] interleaves with
+//!   training iterations; requests are stamped with their project's
+//!   active [`ModelVersion`] at arrival, batches never mix versions —
+//!   and therefore never mix projects — and admitted requests hold
+//!   registry reader pins so GC can't evict a version with in-flight
+//!   work); `ServeSim` wraps it for serving-only runs and emits a
+//!   [`ServeReport`] with per-request latency percentiles, throughput,
+//!   shed attribution, per-shard and per-project stats via `metrics`.
 //!
 //! Entry points: the `mlitb serve-sim` and `mlitb cosim` CLI subcommands,
 //! `benches/fig_serving.rs` (throughput/latency vs offered load),
@@ -49,6 +58,7 @@
 //! `examples/serving.rs`.
 
 mod cache;
+mod control;
 mod executor;
 mod loadgen;
 mod queue;
@@ -57,10 +67,11 @@ mod router;
 mod sim;
 
 pub use cache::{input_key, PredictionCache};
+pub use control::{ControlPlane, ModelVersion, ProjectId, ProjectStats};
 pub use executor::{BatchExecutor, Prediction, ServerProfile};
 pub use loadgen::{ClientSpec, FleetConfig, RequestEvent, RequestFleet};
 pub use queue::{AdmissionQueue, BatchPolicy, PredictRequest};
-pub use registry::{Snapshot, SnapshotId, SnapshotMeta, SnapshotRegistry};
+pub use registry::{Snapshot, SnapshotMeta, SnapshotRegistry};
 pub use router::{
     failover_order, tuned_max_batch, tuned_wait_ms, RateWindow, RouterConfig, RoutingPolicy,
     Shard, ShardStats,

@@ -1,4 +1,5 @@
-//! Admission control + deadline-bounded micro-batching.
+//! Admission control + deadline-bounded micro-batching, fair-shared
+//! across projects.
 //!
 //! The serving analogue of the master's gradient-ingestion queue: requests
 //! arriving from the fleet are admitted into a bounded FIFO and coalesced
@@ -9,11 +10,23 @@
 //! is rejected (open-loop load shedding: the client sees a fast error
 //! rather than an unbounded tail, the counterpart of §3.3d work-shedding
 //! on the training side).
+//!
+//! **Fair share.**  On a multi-project tier the queue additionally
+//! enforces per-project caps ([`AdmissionQueue::set_project_caps`],
+//! derived from [`crate::serve::ControlPlane::queue_caps`] weights): a
+//! request is admitted only while its project is under both the global
+//! depth and its own cap, so a hot project saturating the tier cannot
+//! occupy the cold project's reserved slice.
+//!
+//! **Version purity.**  Requests carry the typed [`ModelVersion`] they
+//! were admitted under; [`AdmissionQueue::take_batch`] cuts at version
+//! boundaries, so a flushed batch is version-pure *and* project-pure by
+//! construction (a `ModelVersion` names both).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use super::registry::SnapshotId;
+use super::control::{ModelVersion, ProjectId};
 
 /// One admitted prediction request waiting for a batch slot.
 #[derive(Debug, Clone)]
@@ -29,11 +42,18 @@ pub struct PredictRequest {
     pub input: Arc<Vec<f32>>,
     /// Prediction-cache key (computed at admission).
     pub key: u64,
-    /// Snapshot version active when the request was admitted.  The
-    /// answer-consistency guarantee: the request is computed entirely
-    /// against this version, even if newer versions activate before its
-    /// batch flushes.
-    pub snapshot: SnapshotId,
+    /// Model version (project + snapshot) active when the request was
+    /// admitted.  The answer-consistency guarantee: the request is
+    /// computed entirely against this version, even if newer versions
+    /// activate before its batch flushes.
+    pub version: ModelVersion,
+}
+
+impl PredictRequest {
+    /// The project this request belongs to.
+    pub fn project(&self) -> ProjectId {
+        self.version.project
+    }
 }
 
 /// Batching/admission knobs.
@@ -62,11 +82,18 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Bounded FIFO of admitted requests with flush-time computation.
+/// Bounded FIFO of admitted requests with flush-time computation and
+/// per-project fair-share caps.
 #[derive(Debug, Clone)]
 pub struct AdmissionQueue {
     policy: BatchPolicy,
     pending: VecDeque<PredictRequest>,
+    /// Per-project admission caps (index = `ProjectId::index()`); empty —
+    /// or a missing entry — means "global depth only" (single-project
+    /// runs, fair share disabled).
+    project_caps: Vec<usize>,
+    /// Pending count per project (index = `ProjectId::index()`).
+    per_project: Vec<u64>,
     admitted: u64,
     rejected: u64,
 }
@@ -76,9 +103,31 @@ impl AdmissionQueue {
         Self {
             policy,
             pending: VecDeque::new(),
+            project_caps: Vec::new(),
+            per_project: Vec::new(),
             admitted: 0,
             rejected: 0,
         }
+    }
+
+    /// Install weighted fair-share caps (one per project, dense by
+    /// project index — see `ControlPlane::queue_caps`).
+    pub fn set_project_caps(&mut self, caps: Vec<usize>) {
+        self.project_caps = caps;
+    }
+
+    /// This project's admission cap: its fair share when caps are
+    /// installed, the whole queue otherwise.
+    fn cap(&self, project: ProjectId) -> usize {
+        self.project_caps
+            .get(project.index())
+            .copied()
+            .unwrap_or(self.policy.queue_depth)
+    }
+
+    /// Pending requests of one project.
+    pub fn project_pending(&self, project: ProjectId) -> u64 {
+        self.per_project.get(project.index()).copied().unwrap_or(0)
     }
 
     pub fn policy(&self) -> &BatchPolicy {
@@ -103,11 +152,13 @@ impl AdmissionQueue {
         self.policy.queue_depth = depth;
     }
 
-    /// Whether one more request would be admitted right now.  The router
-    /// probes this before committing an arrival to a shard, so failover
-    /// can try another endpoint instead of shedding.
-    pub fn can_admit(&self) -> bool {
+    /// Whether one more request of `project` would be admitted right now
+    /// (global depth *and* the project's fair-share cap both have room).
+    /// The router probes this before committing an arrival to a shard, so
+    /// failover can try another endpoint instead of shedding.
+    pub fn can_admit(&self, project: ProjectId) -> bool {
         self.pending.len() < self.policy.queue_depth
+            && self.project_pending(project) < self.cap(project) as u64
     }
 
     pub fn len(&self) -> usize {
@@ -127,15 +178,22 @@ impl AdmissionQueue {
         self.rejected += 1;
     }
 
-    /// Admit a request, or shed it when the queue is full.  Returns
-    /// whether it was admitted.  `queue_depth: 0` sheds everything — a
-    /// zero-capacity queue is closed, not depth-1 (the `.max(1)` rounding
-    /// this used to do silently admitted through a "closed" endpoint).
+    /// Admit a request, or shed it when the queue (or the request's
+    /// project fair share) is full.  Returns whether it was admitted.
+    /// `queue_depth: 0` sheds everything — a zero-capacity queue is
+    /// closed, not depth-1 (the `.max(1)` rounding this used to do
+    /// silently admitted through a "closed" endpoint).
     pub fn offer(&mut self, req: PredictRequest) -> bool {
-        if self.pending.len() >= self.policy.queue_depth {
+        let project = req.project();
+        if !self.can_admit(project) {
             self.rejected += 1;
             return false;
         }
+        let i = project.index();
+        if self.per_project.len() <= i {
+            self.per_project.resize(i + 1, 0);
+        }
+        self.per_project[i] += 1;
         self.pending.push_back(req);
         self.admitted += 1;
         true
@@ -162,24 +220,33 @@ impl AdmissionQueue {
         Some(ready.max(free_at))
     }
 
-    /// Pop up to `max_batch` requests, FIFO — stopping at a snapshot
-    /// boundary.  When a hot-swap lands mid-traffic the queue can hold
-    /// requests admitted under two versions; a flushed batch executes
-    /// against exactly one parameter vector, so the batch is cut where
-    /// the version changes (the newer requests flush next round).
+    /// Pop up to `max_batch` requests, FIFO — stopping at a version
+    /// boundary.  When a hot-swap lands mid-traffic (or two projects'
+    /// arrivals interleave) the queue can hold requests admitted under
+    /// several `ModelVersion`s; a flushed batch executes against exactly
+    /// one project's parameter vector, so the batch is cut where the
+    /// version changes (the newer — or other-project — requests flush
+    /// next round).  Version purity implies project purity: the handle
+    /// names both.
     pub fn take_batch(&mut self) -> Vec<PredictRequest> {
         let max = self.policy.max_batch.max(1);
         let Some(first) = self.pending.front() else {
             return Vec::new();
         };
-        let version = first.snapshot;
+        let version = first.version;
         let n = self
             .pending
             .iter()
             .take(max)
-            .take_while(|r| r.snapshot == version)
+            .take_while(|r| r.version == version)
             .count();
-        self.pending.drain(..n).collect()
+        let batch: Vec<PredictRequest> = self.pending.drain(..n).collect();
+        let i = version.project.index();
+        debug_assert!(self.per_project.len() > i, "admitted project untracked");
+        if let Some(count) = self.per_project.get_mut(i) {
+            *count -= batch.len() as u64;
+        }
+        batch
     }
 
     pub fn admitted(&self) -> u64 {
@@ -199,7 +266,11 @@ mod tests {
         req_v(id, arrival_ms, 1)
     }
 
-    fn req_v(id: u64, arrival_ms: f64, snapshot: SnapshotId) -> PredictRequest {
+    fn req_v(id: u64, arrival_ms: f64, version: u64) -> PredictRequest {
+        req_pv(id, arrival_ms, 0, version)
+    }
+
+    fn req_pv(id: u64, arrival_ms: f64, project: u32, version: u64) -> PredictRequest {
         PredictRequest {
             id,
             client: 0,
@@ -207,9 +278,14 @@ mod tests {
             arrival_ms,
             input: Arc::new(vec![0.0; 4]),
             key: id,
-            snapshot,
+            version: ModelVersion {
+                project: ProjectId::new(project),
+                version,
+            },
         }
     }
+
+    const P0: ProjectId = ProjectId::new(0);
 
     fn queue(max_batch: usize, max_wait_ms: f64, depth: usize) -> AdmissionQueue {
         AdmissionQueue::new(BatchPolicy {
@@ -298,11 +374,56 @@ mod tests {
         q.offer(req_v(4, 3.0, 2));
         let b1 = q.take_batch();
         assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
-        assert!(b1.iter().all(|r| r.snapshot == 1));
+        assert!(b1.iter().all(|r| r.version.version == 1));
         let b2 = q.take_batch();
         assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
-        assert!(b2.iter().all(|r| r.snapshot == 2));
+        assert!(b2.iter().all(|r| r.version.version == 2));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn take_batch_never_mixes_projects() {
+        // Two projects interleaved on one shard queue, both on their own
+        // v1: each flush must carry exactly one project, cut at every
+        // project boundary.
+        let mut q = queue(4, 5.0, 16);
+        q.offer(req_pv(1, 0.0, 0, 1));
+        q.offer(req_pv(2, 1.0, 1, 1));
+        q.offer(req_pv(3, 2.0, 1, 1));
+        q.offer(req_pv(4, 3.0, 0, 1));
+        let b1 = q.take_batch();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(b1[0].project(), ProjectId::new(0));
+        let b2 = q.take_batch();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert!(b2.iter().all(|r| r.project() == ProjectId::new(1)));
+        let b3 = q.take_batch();
+        assert_eq!(b3.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert!(q.is_empty());
+        assert_eq!(q.project_pending(ProjectId::new(0)), 0);
+        assert_eq!(q.project_pending(ProjectId::new(1)), 0);
+    }
+
+    #[test]
+    fn fair_share_caps_bound_each_project() {
+        // Depth 8, caps 2/6: the hot project (p0) is shed at its cap even
+        // though the global queue still has room, and the cold project's
+        // reserved slice stays admittable throughout.
+        let mut q = queue(8, 5.0, 8);
+        q.set_project_caps(vec![2, 6]);
+        assert!(q.offer(req_pv(1, 0.0, 0, 1)));
+        assert!(q.offer(req_pv(2, 0.0, 0, 1)));
+        assert!(!q.can_admit(ProjectId::new(0)), "hot project at its cap");
+        assert!(!q.offer(req_pv(3, 0.0, 0, 1)), "over-cap hot request sheds");
+        assert_eq!(q.rejected(), 1);
+        assert!(q.can_admit(ProjectId::new(1)), "cold share untouched");
+        assert!(q.offer(req_pv(4, 0.0, 1, 1)));
+        assert_eq!(q.project_pending(ProjectId::new(0)), 2);
+        assert_eq!(q.project_pending(ProjectId::new(1)), 1);
+        // Draining the hot project's batch reopens its share.
+        let batch = q.take_batch();
+        assert_eq!(batch.len(), 2);
+        assert!(q.can_admit(ProjectId::new(0)));
     }
 
     #[test]
@@ -318,14 +439,14 @@ mod tests {
     #[test]
     fn can_admit_mirrors_offer() {
         let mut q = queue(4, 5.0, 2);
-        assert!(q.can_admit());
+        assert!(q.can_admit(P0));
         q.offer(req(1, 0.0));
         q.offer(req(2, 0.0));
-        assert!(!q.can_admit(), "at depth: the probe must refuse");
+        assert!(!q.can_admit(P0), "at depth: the probe must refuse");
         q.take_batch();
-        assert!(q.can_admit());
+        assert!(q.can_admit(P0));
         q.set_queue_depth(0);
-        assert!(!q.can_admit(), "a drained endpoint admits nothing");
+        assert!(!q.can_admit(P0), "a drained endpoint admits nothing");
     }
 
     #[test]

@@ -1,14 +1,24 @@
-//! Snapshot registry — versioned parameter vectors behind the serving
-//! endpoint.
+//! Snapshot registry — versioned parameter vectors behind one project's
+//! serving endpoint.
 //!
 //! The paper's prediction story (§2.3, §3.6): trained models are saved in
 //! a universally readable format — the JSON research closure — and "any
 //! device" downloads them for inference.  The registry is the server side
-//! of that hand-off: it ingests closures (or live parameter vectors from a
-//! training master), validates them against the model's manifest spec,
-//! assigns monotonically increasing version ids, and designates the
-//! *active* snapshot new prediction requests are served from.  Publishing
-//! activates the new version; `set_active` rolls back.
+//! of that hand-off for **one project** of the multi-tenant master
+//! (§3.1): it ingests closures (or live parameter vectors from a training
+//! master), validates them against the project's manifest spec, assigns
+//! monotonically increasing [`ModelVersion`] handles, and designates the
+//! *active* snapshot new prediction requests are served from.  The
+//! [`super::ControlPlane`] owns one registry per project.
+//!
+//! **Staged publication.**  A live publication is no longer free: the
+//! snapshot's bytes must cross the master-egress link before the serving
+//! tier can switch to it.  [`SnapshotRegistry::stage_params`] makes a
+//! version resident without activating it; [`SnapshotRegistry::activate`]
+//! flips serving to it once the transfer completes (and doubles as
+//! rollback onto any resident version).  A staged version is GC-immune —
+//! evicting a snapshot whose transfer is still in flight would activate
+//! a hole.
 //!
 //! **Traffic-driven GC.**  Under the co-simulation a live master publishes
 //! mid-traffic, so a retention policy alone is unsafe: a request admitted
@@ -17,21 +27,22 @@
 //! pin* ([`SnapshotRegistry::pin_reader`]) released after its batch
 //! executes; [`SnapshotRegistry::gc_keep_latest`] evicts a version only
 //! when the retention policy *and* a zero reader count agree (the active
-//! snapshot is always kept too).
+//! snapshot and staged versions are always kept too).  Pins are
+//! per-project state: one project's pinned versions never block another
+//! project's eviction (pinned by `control` tests).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::model::{ModelSpec, ResearchClosure};
 
-/// Monotonic snapshot version (1-based; 0 is never assigned).
-pub type SnapshotId = u64;
+use super::control::{ModelVersion, ProjectId};
 
 /// Copyable identity/provenance of a snapshot — what the serving path
 /// threads through records without holding a registry borrow.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SnapshotMeta {
-    pub id: SnapshotId,
+    pub version: ModelVersion,
     /// Training iteration the parameters were captured at.
     pub iteration: u64,
     /// Virtual publish time (ms).
@@ -41,7 +52,7 @@ pub struct SnapshotMeta {
 /// One servable model version.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
-    pub id: SnapshotId,
+    pub version: ModelVersion,
     pub model: String,
     /// Training iteration the parameters were captured at.
     pub iteration: u64,
@@ -58,47 +69,66 @@ impl Snapshot {
     /// Copyable identity for records and observers.
     pub fn meta(&self) -> SnapshotMeta {
         SnapshotMeta {
-            id: self.id,
+            version: self.version,
             iteration: self.iteration,
             published_ms: self.published_ms,
         }
     }
 }
 
-/// Versioned snapshot store for one served model.
+/// Versioned snapshot store for one project's served model.
 #[derive(Debug, Clone)]
 pub struct SnapshotRegistry {
+    project: ProjectId,
     spec: ModelSpec,
-    next_id: SnapshotId,
-    snapshots: BTreeMap<SnapshotId, Snapshot>,
-    active: Option<SnapshotId>,
+    next: u64,
+    snapshots: BTreeMap<u64, Snapshot>,
+    active: Option<u64>,
     /// In-flight reader pins per version (admitted-but-not-yet-executed
     /// requests); a pinned version survives retention GC.
-    readers: BTreeMap<SnapshotId, u64>,
+    readers: BTreeMap<u64, u64>,
+    /// Versions staged but not yet activated (snapshot transfer still in
+    /// flight); GC-immune until activation.
+    staged: BTreeSet<u64>,
 }
 
 impl SnapshotRegistry {
-    pub fn new(spec: ModelSpec) -> Self {
+    pub fn new(project: ProjectId, spec: ModelSpec) -> Self {
         Self {
+            project,
             spec,
-            next_id: 1,
+            next: 1,
             snapshots: BTreeMap::new(),
             active: None,
             readers: BTreeMap::new(),
+            staged: BTreeSet::new(),
         }
+    }
+
+    pub fn project(&self) -> ProjectId {
+        self.project
     }
 
     pub fn spec(&self) -> &ModelSpec {
         &self.spec
     }
 
+    /// The typed handle for a raw version number of *this* project.
+    pub fn handle(&self, version: u64) -> ModelVersion {
+        ModelVersion {
+            project: self.project,
+            version,
+        }
+    }
+
     /// Ingest a research closure (the paper's download/upload object);
     /// validates model identity and parameter count before versioning.
+    /// The new snapshot becomes active.
     pub fn publish_closure(
         &mut self,
         closure: &ResearchClosure,
         now_ms: f64,
-    ) -> Result<SnapshotId, String> {
+    ) -> Result<ModelVersion, String> {
         closure.check_compatible(&self.spec)?;
         self.publish_params(
             closure.params.clone(),
@@ -108,15 +138,32 @@ impl SnapshotRegistry {
         )
     }
 
-    /// Publish a raw parameter vector (live hand-off from a training
-    /// master).  The new snapshot becomes active.
+    /// Publish a raw parameter vector and activate it immediately (the
+    /// zero-transfer-cost path: closures already on disk, test fixtures).
+    /// Live masters under the egress budget use [`Self::stage_params`] +
+    /// [`Self::activate`] instead.
     pub fn publish_params(
         &mut self,
         params: Vec<f32>,
         iteration: u64,
         notes: String,
         now_ms: f64,
-    ) -> Result<SnapshotId, String> {
+    ) -> Result<ModelVersion, String> {
+        let v = self.stage_params(params, iteration, notes, now_ms)?;
+        self.activate(v)?;
+        Ok(v)
+    }
+
+    /// Make a parameter vector resident *without* activating it — the
+    /// snapshot's bytes are still crossing the master-egress link.  The
+    /// staged version is GC-immune until [`Self::activate`] lands.
+    pub fn stage_params(
+        &mut self,
+        params: Vec<f32>,
+        iteration: u64,
+        notes: String,
+        now_ms: f64,
+    ) -> Result<ModelVersion, String> {
         if params.len() != self.spec.param_count {
             return Err(format!(
                 "snapshot has {} params, model '{}' expects {}",
@@ -128,12 +175,12 @@ impl SnapshotRegistry {
         if let Some(bad) = params.iter().position(|p| !p.is_finite()) {
             return Err(format!("snapshot param {bad} is not finite"));
         }
-        let id = self.next_id;
-        self.next_id += 1;
+        let v = self.next;
+        self.next += 1;
         self.snapshots.insert(
-            id,
+            v,
             Snapshot {
-                id,
+                version: self.handle(v),
                 model: self.spec.name.clone(),
                 iteration,
                 params: Arc::new(params),
@@ -141,26 +188,42 @@ impl SnapshotRegistry {
                 published_ms: now_ms,
             },
         );
-        self.active = Some(id);
-        Ok(id)
+        self.staged.insert(v);
+        Ok(self.handle(v))
     }
 
-    pub fn get(&self, id: SnapshotId) -> Option<&Snapshot> {
-        self.snapshots.get(&id)
+    /// Flip serving to a resident version: transfer completion for a
+    /// staged snapshot, or rollback / canary-undo onto an older one.
+    pub fn activate(&mut self, version: ModelVersion) -> Result<(), String> {
+        if version.project != self.project {
+            return Err(format!(
+                "version {version} belongs to another project (this registry serves {})",
+                self.project
+            ));
+        }
+        if !self.snapshots.contains_key(&version.version) {
+            return Err(format!("snapshot {version} not in registry"));
+        }
+        self.staged.remove(&version.version);
+        self.active = Some(version.version);
+        Ok(())
+    }
+
+    pub fn get(&self, version: ModelVersion) -> Option<&Snapshot> {
+        if version.project != self.project {
+            return None;
+        }
+        self.snapshots.get(&version.version)
     }
 
     /// The snapshot new requests are served from.
     pub fn active(&self) -> Option<&Snapshot> {
-        self.active.and_then(|id| self.snapshots.get(&id))
+        self.active.and_then(|v| self.snapshots.get(&v))
     }
 
-    /// Pin serving to an existing version (rollback / canary-undo).
-    pub fn set_active(&mut self, id: SnapshotId) -> Result<(), String> {
-        if !self.snapshots.contains_key(&id) {
-            return Err(format!("snapshot v{id} not in registry"));
-        }
-        self.active = Some(id);
-        Ok(())
+    /// Is this version resident but awaiting its transfer completion?
+    pub fn is_staged(&self, version: ModelVersion) -> bool {
+        version.project == self.project && self.staged.contains(&version.version)
     }
 
     pub fn len(&self) -> usize {
@@ -171,38 +234,45 @@ impl SnapshotRegistry {
         self.snapshots.is_empty()
     }
 
-    /// Version ids, oldest first.
-    pub fn ids(&self) -> Vec<SnapshotId> {
-        self.snapshots.keys().copied().collect()
+    /// Version handles, oldest first.
+    pub fn ids(&self) -> Vec<ModelVersion> {
+        self.snapshots.keys().map(|&v| self.handle(v)).collect()
     }
 
     // ------------------------------------------------- reader refcounts
 
     /// Take a reader pin on a version (a request was admitted under it and
     /// its batch has not executed yet).  A pinned version cannot be
-    /// GC-evicted.  Errors if the version is not resident.
-    pub fn pin_reader(&mut self, id: SnapshotId) -> Result<(), String> {
-        if !self.snapshots.contains_key(&id) {
-            return Err(format!("cannot pin snapshot v{id}: not in registry"));
+    /// GC-evicted.  Errors if the version is not resident here.
+    pub fn pin_reader(&mut self, version: ModelVersion) -> Result<(), String> {
+        if version.project != self.project || !self.snapshots.contains_key(&version.version) {
+            return Err(format!("cannot pin snapshot {version}: not in registry"));
         }
-        *self.readers.entry(id).or_insert(0) += 1;
+        *self.readers.entry(version.version).or_insert(0) += 1;
         Ok(())
     }
 
     /// Release a reader pin (the request's batch executed).
-    pub fn unpin_reader(&mut self, id: SnapshotId) {
-        match self.readers.get_mut(&id) {
+    pub fn unpin_reader(&mut self, version: ModelVersion) {
+        if version.project != self.project {
+            debug_assert!(false, "unpin of foreign version {version}");
+            return;
+        }
+        match self.readers.get_mut(&version.version) {
             Some(n) if *n > 1 => *n -= 1,
             Some(_) => {
-                self.readers.remove(&id);
+                self.readers.remove(&version.version);
             }
-            None => debug_assert!(false, "unpin without pin on v{id}"),
+            None => debug_assert!(false, "unpin without pin on {version}"),
         }
     }
 
     /// Outstanding reader pins on one version.
-    pub fn reader_count(&self, id: SnapshotId) -> u64 {
-        self.readers.get(&id).copied().unwrap_or(0)
+    pub fn reader_count(&self, version: ModelVersion) -> u64 {
+        if version.project != self.project {
+            return 0;
+        }
+        self.readers.get(&version.version).copied().unwrap_or(0)
     }
 
     /// Outstanding reader pins across all versions (0 once traffic drains).
@@ -210,20 +280,24 @@ impl SnapshotRegistry {
         self.readers.values().sum()
     }
 
-    /// Retention: keep the newest `keep` versions.  The active snapshot
-    /// and any version with outstanding reader pins are always kept — a
-    /// version is evicted only when the retention policy *and* zero
-    /// in-flight readers agree.  Returns the ids dropped.
-    pub fn gc_keep_latest(&mut self, keep: usize) -> Vec<SnapshotId> {
-        let ids = self.ids();
-        let cutoff = ids.len().saturating_sub(keep);
+    /// Retention: keep the newest `keep` versions.  The active snapshot,
+    /// staged (transfer-in-flight) versions and any version with
+    /// outstanding reader pins are always kept — a version is evicted
+    /// only when the retention policy *and* zero in-flight readers agree.
+    /// Returns the handles dropped.
+    pub fn gc_keep_latest(&mut self, keep: usize) -> Vec<ModelVersion> {
+        let versions: Vec<u64> = self.snapshots.keys().copied().collect();
+        let cutoff = versions.len().saturating_sub(keep);
         let mut dropped = Vec::new();
-        for id in &ids[..cutoff] {
-            if Some(*id) == self.active || self.reader_count(*id) > 0 {
+        for &v in &versions[..cutoff] {
+            if Some(v) == self.active
+                || self.staged.contains(&v)
+                || self.readers.get(&v).copied().unwrap_or(0) > 0
+            {
                 continue;
             }
-            self.snapshots.remove(id);
-            dropped.push(*id);
+            self.snapshots.remove(&v);
+            dropped.push(self.handle(v));
         }
         dropped
     }
@@ -233,6 +307,8 @@ impl SnapshotRegistry {
 mod tests {
     use super::*;
     use crate::model::TensorSpec;
+
+    const P: ProjectId = ProjectId::new(0);
 
     fn spec() -> ModelSpec {
         ModelSpec {
@@ -253,22 +329,29 @@ mod tests {
         }
     }
 
+    fn registry() -> SnapshotRegistry {
+        SnapshotRegistry::new(P, spec())
+    }
+
     #[test]
     fn publish_versions_and_activates_latest() {
-        let mut reg = SnapshotRegistry::new(spec());
+        let mut reg = registry();
         assert!(reg.active().is_none());
+        assert_eq!(reg.project(), P);
         let v1 = reg.publish_params(vec![0.0; 4], 10, "a".into(), 0.0).unwrap();
         let v2 = reg.publish_params(vec![1.0; 4], 20, "b".into(), 5.0).unwrap();
-        assert_eq!((v1, v2), (1, 2));
+        assert_eq!((v1.version, v2.version), (1, 2));
+        assert_eq!(v1.project, P);
         assert_eq!(reg.len(), 2);
-        assert_eq!(reg.active().unwrap().id, v2);
+        assert_eq!(reg.active().unwrap().version, v2);
         assert_eq!(reg.get(v1).unwrap().iteration, 10);
         assert_eq!(*reg.get(v2).unwrap().params, vec![1.0; 4]);
+        assert_eq!(reg.handle(2), v2);
     }
 
     #[test]
     fn publish_closure_validates_against_spec() {
-        let mut reg = SnapshotRegistry::new(spec());
+        let mut reg = registry();
         let mut c = ResearchClosure::new(&spec(), &[0.5; 4]);
         c.iteration = 7;
         let id = reg.publish_closure(&c, 1.0).unwrap();
@@ -284,7 +367,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_param_vectors() {
-        let mut reg = SnapshotRegistry::new(spec());
+        let mut reg = registry();
         assert!(reg.publish_params(vec![0.0; 3], 0, String::new(), 0.0).is_err());
         assert!(reg
             .publish_params(vec![0.0, f32::NAN, 0.0, 0.0], 0, String::new(), 0.0)
@@ -293,71 +376,131 @@ mod tests {
     }
 
     #[test]
-    fn rollback_pins_older_version() {
-        let mut reg = SnapshotRegistry::new(spec());
+    fn staged_versions_serve_nothing_until_activated() {
+        // The byte-accounted publication contract: staging makes the
+        // version resident, but the active pointer moves only on
+        // activation (when the transfer completes).
+        let mut reg = registry();
+        let v1 = reg.publish_params(vec![0.0; 4], 1, String::new(), 0.0).unwrap();
+        let v2 = reg
+            .stage_params(vec![1.0; 4], 5, "in flight".into(), 10.0)
+            .unwrap();
+        assert!(reg.is_staged(v2));
+        assert!(!reg.is_staged(v1));
+        assert_eq!(reg.active().unwrap().version, v1, "v2 not yet live");
+        assert!(reg.get(v2).is_some(), "staged versions are resident");
+        reg.activate(v2).unwrap();
+        assert!(!reg.is_staged(v2));
+        assert_eq!(reg.active().unwrap().version, v2);
+    }
+
+    #[test]
+    fn gc_never_evicts_a_staged_version() {
+        // Evicting a snapshot whose transfer is still in flight would
+        // activate a hole — staged versions are retention-immune.
+        let mut reg = registry();
+        for i in 0..3 {
+            reg.publish_params(vec![i as f32; 4], i, String::new(), i as f64)
+                .unwrap();
+        }
+        let staged = reg
+            .stage_params(vec![9.0; 4], 9, String::new(), 9.0)
+            .unwrap();
+        // keep=1 would normally evict everything but the newest; the
+        // staged newest and the active v3 both survive by rule.
+        let dropped = reg.gc_keep_latest(1);
+        assert_eq!(dropped, vec![reg.handle(1), reg.handle(2)]);
+        assert!(reg.get(staged).is_some());
+        assert_eq!(reg.active().unwrap().version.version, 3);
+        // Once activated, the *previous* active becomes evictable.
+        reg.activate(staged).unwrap();
+        assert_eq!(reg.gc_keep_latest(1), vec![reg.handle(3)]);
+        assert_eq!(reg.ids(), vec![staged]);
+    }
+
+    #[test]
+    fn rollback_activates_older_version() {
+        let mut reg = registry();
         let v1 = reg.publish_params(vec![0.0; 4], 1, String::new(), 0.0).unwrap();
         let v2 = reg.publish_params(vec![1.0; 4], 2, String::new(), 0.0).unwrap();
-        reg.set_active(v1).unwrap();
-        assert_eq!(reg.active().unwrap().id, v1);
-        assert!(reg.set_active(99).is_err());
-        assert_eq!(reg.active().unwrap().id, v1);
-        let _ = v2;
+        reg.activate(v1).unwrap();
+        assert_eq!(reg.active().unwrap().version, v1);
+        assert!(reg.activate(reg.handle(99)).is_err());
+        // A handle from another project is refused outright.
+        let foreign = ModelVersion {
+            project: ProjectId::new(7),
+            version: v2.version,
+        };
+        assert!(reg.activate(foreign).is_err());
+        assert!(reg.get(foreign).is_none());
+        assert_eq!(reg.active().unwrap().version, v1);
     }
 
     #[test]
     fn gc_keeps_newest_and_active() {
-        let mut reg = SnapshotRegistry::new(spec());
+        let mut reg = registry();
         for i in 0..5 {
             reg.publish_params(vec![i as f32; 4], i, String::new(), i as f64)
                 .unwrap();
         }
-        reg.set_active(1).unwrap(); // pin the oldest
+        reg.activate(reg.handle(1)).unwrap(); // pin the oldest
         let dropped = reg.gc_keep_latest(2);
-        assert_eq!(dropped, vec![2, 3]);
-        assert_eq!(reg.ids(), vec![1, 4, 5]);
-        assert_eq!(reg.active().unwrap().id, 1);
+        assert_eq!(dropped, vec![reg.handle(2), reg.handle(3)]);
+        assert_eq!(reg.ids(), vec![reg.handle(1), reg.handle(4), reg.handle(5)]);
+        assert_eq!(reg.active().unwrap().version.version, 1);
     }
 
     #[test]
     fn gc_never_evicts_a_snapshot_with_inflight_readers() {
         // The co-simulation acceptance criterion: hold a reader across a
         // GC call and the pinned version must survive retention.
-        let mut reg = SnapshotRegistry::new(spec());
+        let mut reg = registry();
         for i in 0..4 {
             reg.publish_params(vec![i as f32; 4], i, String::new(), i as f64)
                 .unwrap();
         }
-        reg.pin_reader(1).unwrap();
-        reg.pin_reader(1).unwrap();
-        assert_eq!(reg.reader_count(1), 2);
+        let v1 = reg.handle(1);
+        reg.pin_reader(v1).unwrap();
+        reg.pin_reader(v1).unwrap();
+        assert_eq!(reg.reader_count(v1), 2);
         let dropped = reg.gc_keep_latest(1);
-        assert_eq!(dropped, vec![2, 3], "pinned v1 and active v4 survive");
-        assert!(reg.get(1).is_some());
+        assert_eq!(
+            dropped,
+            vec![reg.handle(2), reg.handle(3)],
+            "pinned v1 and active v4 survive"
+        );
+        assert!(reg.get(v1).is_some());
         // One release is not enough — the second reader still holds it.
-        reg.unpin_reader(1);
+        reg.unpin_reader(v1);
         assert!(reg.gc_keep_latest(1).is_empty());
         // Last reader gone: retention finally wins.
-        reg.unpin_reader(1);
+        reg.unpin_reader(v1);
         assert_eq!(reg.total_readers(), 0);
-        assert_eq!(reg.gc_keep_latest(1), vec![1]);
-        assert_eq!(reg.ids(), vec![4]);
+        assert_eq!(reg.gc_keep_latest(1), vec![v1]);
+        assert_eq!(reg.ids(), vec![reg.handle(4)]);
     }
 
     #[test]
-    fn pin_requires_a_resident_version() {
-        let mut reg = SnapshotRegistry::new(spec());
-        assert!(reg.pin_reader(1).is_err());
+    fn pin_requires_a_resident_version_of_this_project() {
+        let mut reg = registry();
+        assert!(reg.pin_reader(reg.handle(1)).is_err());
         reg.publish_params(vec![0.0; 4], 0, String::new(), 0.0).unwrap();
-        assert!(reg.pin_reader(1).is_ok());
-        assert_eq!(reg.reader_count(2), 0);
+        assert!(reg.pin_reader(reg.handle(1)).is_ok());
+        assert_eq!(reg.reader_count(reg.handle(2)), 0);
+        let foreign = ModelVersion {
+            project: ProjectId::new(3),
+            version: 1,
+        };
+        assert!(reg.pin_reader(foreign).is_err());
+        assert_eq!(reg.reader_count(foreign), 0);
     }
 
     #[test]
     fn meta_mirrors_snapshot_identity() {
-        let mut reg = SnapshotRegistry::new(spec());
+        let mut reg = registry();
         reg.publish_params(vec![0.0; 4], 7, "m".into(), 3.5).unwrap();
         let m = reg.active().unwrap().meta();
-        assert_eq!(m.id, 1);
+        assert_eq!(m.version, reg.handle(1));
         assert_eq!(m.iteration, 7);
         assert_eq!(m.published_ms, 3.5);
     }

@@ -1,8 +1,11 @@
-//! Request routing across replicated serving endpoints.
+//! Request routing across replicated serving endpoints shared by every
+//! project.
 //!
 //! PR 1's serving tier was the paper's §3.5 single-master model: one
 //! serial endpoint.  This module turns it into a fleet: N [`Shard`]s —
-//! each its own [`AdmissionQueue`] + [`BatchExecutor`] + per-shard
+//! each its own fair-shared [`AdmissionQueue`], per-project
+//! [`BatchExecutor`]s (the control plane hosts several projects, each
+//! with its own model spec, behind the *same* shard fleet) + per-shard
 //! [`PredictionCache`] — behind a pluggable [`RoutingPolicy`]:
 //!
 //! * `rr` — round-robin: cyclic deal, oblivious to backlog.
@@ -37,6 +40,7 @@ use std::sync::Arc;
 use crate::model::ModelSpec;
 
 use super::cache::PredictionCache;
+use super::control::ProjectId;
 use super::executor::{BatchExecutor, Prediction, ServerProfile};
 use super::queue::{AdmissionQueue, BatchPolicy, PredictRequest};
 
@@ -85,10 +89,16 @@ pub struct RouterConfig {
     pub autotune: bool,
     /// Sliding window backing the arrival-rate estimate (ms).
     pub window_ms: f64,
+    /// Enforce weighted per-project admission caps on every shard queue
+    /// (`ControlPlane::queue_caps`).  Off reproduces the pre-control-plane
+    /// tier, where a hot project could occupy the whole queue and starve
+    /// a cold one.
+    pub fair_share: bool,
 }
 
 impl RouterConfig {
     /// PR-1 behavior: one endpoint, no coalescing, fixed deadline.
+    /// (Fair share is on but vacuous with a single project.)
     pub fn single() -> Self {
         Self {
             shards: 1,
@@ -96,6 +106,7 @@ impl RouterConfig {
             coalesce: false,
             autotune: false,
             window_ms: 1_000.0,
+            fair_share: true,
         }
     }
 }
@@ -294,15 +305,22 @@ struct PendingInsert {
     prediction: Prediction,
 }
 
-/// One replicated serving endpoint: bounded admission, per-shard cache,
-/// serial micro-batch executor, and the coalescing in-flight table.
+/// One replicated serving endpoint shared by every project: bounded
+/// fair-shared admission, per-shard cache (keys are project-scoped), one
+/// micro-batch executor *per project* (each project serves its own model
+/// spec) behind a single serial execution slot, and the coalescing
+/// in-flight table.
 #[derive(Debug)]
 pub struct Shard {
     /// Stable index; tags `RequestRecord.shard` and the stats row.
     pub id: u32,
     pub queue: AdmissionQueue,
     pub cache: PredictionCache,
-    pub executor: BatchExecutor,
+    /// One executor per project (index = `ProjectId::index()`) — batches
+    /// are project-pure, so each flush runs exactly one of these.
+    executors: Vec<BatchExecutor>,
+    /// Hardware model shared by every executor on this shard.
+    pub profile: ServerProfile,
     /// Virtual time this shard's serial executor frees up.
     pub free_at: f64,
     /// Requests in the batch currently executing (meaningful while
@@ -312,8 +330,8 @@ pub struct Shard {
     coalesced: u64,
     autotune: bool,
     base_policy: BatchPolicy,
-    /// Compiled micro-batch variants (ascending, deduped) — the sizes
-    /// `tuned_max_batch` may pick from.
+    /// Compiled micro-batch variants across every project's spec
+    /// (ascending, deduped) — the sizes `tuned_max_batch` may pick from.
     variants: Vec<usize>,
     window: RateWindow,
     /// Cache entries queued until their computation completes.
@@ -332,19 +350,26 @@ impl Shard {
         id: u32,
         policy: BatchPolicy,
         cache_capacity: usize,
-        spec: ModelSpec,
+        specs: &[ModelSpec],
         profile: ServerProfile,
         router: &RouterConfig,
     ) -> Self {
-        let mut variants: Vec<usize> =
-            spec.micro_batches.iter().copied().filter(|&b| b >= 1).collect();
+        let mut variants: Vec<usize> = specs
+            .iter()
+            .flat_map(|s| s.micro_batches.iter().copied())
+            .filter(|&b| b >= 1)
+            .collect();
         variants.sort_unstable();
         variants.dedup();
         Self {
             id,
             queue: AdmissionQueue::new(policy),
             cache: PredictionCache::new(cache_capacity),
-            executor: BatchExecutor::new(spec, profile),
+            executors: specs
+                .iter()
+                .map(|s| BatchExecutor::new(s.clone(), profile))
+                .collect(),
+            profile,
             free_at: 0.0,
             executing: 0,
             routed: 0,
@@ -357,6 +382,11 @@ impl Shard {
             inflight: HashMap::new(),
             resolved: VecDeque::new(),
         }
+    }
+
+    /// The executor serving one project's model on this shard.
+    pub fn executor_mut(&mut self, project: ProjectId) -> &mut BatchExecutor {
+        &mut self.executors[project.index()]
     }
 
     /// Close this shard's admission queue (drain mode): every subsequent
@@ -405,12 +435,11 @@ impl Shard {
         if pending == 0 {
             return busy_ms;
         }
-        let profile = self.executor.profile();
-        let per_example_ms = 1000.0 / profile.power_vps;
+        let per_example_ms = 1000.0 / self.profile.power_vps;
         let batches = pending.div_ceil(self.queue.policy().max_batch.max(1));
         busy_ms
             + pending as f64 * per_example_ms
-            + batches as f64 * profile.per_batch_overhead_ms
+            + batches as f64 * self.profile.per_batch_overhead_ms
     }
 
     /// Count a routed arrival (all of them: hits, waiters, admissions).
@@ -522,7 +551,8 @@ impl Shard {
         });
     }
 
-    /// End-of-run (or point-in-time) counters for the report.
+    /// End-of-run (or point-in-time) counters for the report (execution
+    /// counters summed across every project's executor).
     pub fn stats(&self) -> ShardStats {
         ShardStats {
             shard: self.id,
@@ -531,9 +561,9 @@ impl Shard {
             rejected: self.queue.rejected(),
             cache_hits: self.cache.hits(),
             coalesced: self.coalesced,
-            batches: self.executor.batches(),
-            batch_examples: self.executor.examples(),
-            padded_examples: self.executor.padded(),
+            batches: self.executors.iter().map(BatchExecutor::batches).sum(),
+            batch_examples: self.executors.iter().map(BatchExecutor::examples).sum(),
+            padded_examples: self.executors.iter().map(BatchExecutor::padded).sum(),
             max_wait_ms: self.queue.policy().max_wait_ms,
             max_batch: self.queue.policy().max_batch,
         }
@@ -614,7 +644,7 @@ mod tests {
             id,
             policy(),
             8,
-            spec(),
+            &[spec()],
             ServerProfile::default(),
             &RouterConfig::single(),
         )
@@ -628,7 +658,10 @@ mod tests {
             arrival_ms: 1.0,
             input,
             key,
-            snapshot: 1,
+            version: crate::serve::ModelVersion {
+                project: ProjectId::new(0),
+                version: 1,
+            },
         }
     }
 
@@ -706,7 +739,7 @@ mod tests {
             ..ServerProfile::default()
         };
         let mk = |id: u32, profile: ServerProfile| {
-            Shard::new(id, policy(), 0, spec(), profile, &RouterConfig::single())
+            Shard::new(id, policy(), 0, &[spec()], profile, &RouterConfig::single())
         };
         let mut shards = vec![mk(0, slow), mk(1, fast)];
         let input = Arc::new(vec![0.0; 2]);
@@ -753,10 +786,11 @@ mod tests {
 
     #[test]
     fn drained_shard_refuses_admission() {
+        let p0 = ProjectId::new(0);
         let mut s = shard(0);
-        assert!(s.queue.can_admit());
+        assert!(s.queue.can_admit(p0));
         s.drain();
-        assert!(!s.queue.can_admit());
+        assert!(!s.queue.can_admit(p0));
         let input = Arc::new(vec![0.0; 2]);
         assert!(!s.admit(req(1, 1, input), false));
         assert_eq!(s.stats().rejected, 1);
@@ -886,7 +920,7 @@ mod tests {
             0,
             policy(),
             0,
-            spec(),
+            &[spec()],
             ServerProfile::default(),
             &RouterConfig {
                 autotune: true,
@@ -906,6 +940,44 @@ mod tests {
         }
         let wait = s.queue.policy().max_wait_ms;
         assert!(wait > 0.0 && wait < 5.0, "fill-time wait, got {wait}");
+    }
+
+    #[test]
+    fn shard_keeps_one_executor_per_project() {
+        // Two projects with different specs behind one shard: each flush
+        // must run the owning project's executor, and the stats row sums
+        // both.
+        let mut other = spec();
+        other.name = "other".into();
+        other.input = vec![3, 1, 1];
+        other.param_count = 12;
+        other.tensors[0].size = 12;
+        other.tensors[0].shape = vec![12];
+        let mut s = Shard::new(
+            0,
+            policy(),
+            0,
+            &[spec(), other],
+            ServerProfile::default(),
+            &RouterConfig::single(),
+        );
+        let mut compute = crate::runtime::ModeledCompute { param_count: 12 };
+        let a_in = vec![0.1f32, 0.2];
+        let b_in = vec![0.1f32, 0.2, 0.3];
+        let a_params = vec![0.0f32; 8];
+        let b_params = vec![0.0f32; 12];
+        s.executor_mut(ProjectId::new(0))
+            .execute(&mut compute, &a_params, &[&a_in])
+            .unwrap();
+        s.executor_mut(ProjectId::new(1))
+            .execute(&mut compute, &b_params, &[&b_in])
+            .unwrap();
+        // Cross-project shapes are rejected by the owning executor.
+        assert!(s
+            .executor_mut(ProjectId::new(0))
+            .execute(&mut compute, &a_params, &[&b_in])
+            .is_err());
+        assert_eq!(s.stats().batches, 2);
     }
 
     #[test]

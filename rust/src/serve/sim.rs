@@ -1,33 +1,41 @@
 //! Discrete-event serving: route → admission → cache → coalesce →
-//! micro-batch → execute → respond, over a snapshot registry and a
-//! simulated request fleet.
+//! micro-batch → execute → respond, over the multi-project
+//! [`ControlPlane`] and a simulated request fleet.
 //!
 //! The core is [`ServeEngine`], an *incrementally pumpable* event loop:
 //! `pump(horizon)` processes every arrival and batch flush up to a
 //! virtual-time horizon and then returns, leaving queued work pending.
 //! That is what the serve × train co-simulation ([`crate::cosim`]) needs
-//! — the training master advances the shared clock one iteration at a
+//! — the training masters advance the shared clock one iteration at a
 //! time and the serving tier fills in the window between boundaries,
 //! with snapshot publications (hot swaps) landing at the boundaries.
 //! [`ServeSim`] is the closed-loop wrapper the serving-only paths use:
 //! one `pump(None)` to drain the whole schedule.
 //!
+//! Multi-tenancy: every request carries its [`ProjectId`]; the engine
+//! stamps it with the typed `ModelVersion` active for that project at
+//! arrival.  Batches are version-pure (and therefore project-pure — the
+//! handle names both), cache keys are project-scoped, each shard runs one
+//! executor per project, and admission is weighted fair-share: a hot
+//! project saturating the tier is shed at its own cap while the cold
+//! project's reserved slice stays admittable.
+//!
 //! Version consistency under hot swap: each request is stamped with the
-//! snapshot version active at its arrival, carries it through admission,
-//! and is computed entirely against that version — the queue cuts batches
-//! at version boundaries and the registry holds a reader pin per admitted
+//! version active at its arrival, carries it through admission, and is
+//! computed entirely against that version — the queue cuts batches at
+//! version boundaries and the registry holds a reader pin per admitted
 //! request so traffic-driven GC cannot evict a version with in-flight
 //! work.  Cache keys include the version, so a swap invalidates the cache
 //! by construction (and a rollback revalidates the old entries).
 //!
-//! Failover: when the routed shard refuses admission (queue full, or
-//! drained via `queue_depth: 0`), the arrival is re-offered to the other
-//! shards in least-outstanding-work order; it is shed only when every
-//! endpoint refuses.
+//! Failover: when the routed shard refuses admission (queue full, project
+//! cap reached, or drained via `queue_depth: 0`), the arrival is
+//! re-offered to the other shards in least-outstanding-work order; it is
+//! shed only when every endpoint refuses.
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::{RejectionRecord, RequestLog, RequestRecord, Summary};
 use crate::netsim::LinkModel;
@@ -35,21 +43,25 @@ use crate::rng::{Exp, Pcg32};
 use crate::runtime::Compute;
 
 use super::cache::input_key;
+use super::control::{ControlPlane, ProjectId, ProjectStats};
 use super::executor::{Prediction, ServerProfile};
 use super::loadgen::{FleetConfig, RequestEvent, RequestFleet};
 use super::queue::{BatchPolicy, PredictRequest};
-use super::registry::{SnapshotMeta, SnapshotRegistry};
+use super::registry::SnapshotMeta;
 use super::router::{
     failover_order, Join, Router, RouterConfig, RoutingPolicy, Shard, ShardStats, Waiter,
 };
 
-/// Everything one serving run needs besides the registry and compute.
+/// Everything one serving run needs besides the control plane and
+/// compute.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    pub fleet: FleetConfig,
+    /// One request fleet per registered project (index = project id).
+    pub fleets: Vec<FleetConfig>,
     pub policy: BatchPolicy,
     pub server: ServerProfile,
-    /// Fleet shape: shard count, routing policy, coalescing, autotune.
+    /// Fleet shape: shard count, routing policy, coalescing, autotune,
+    /// fair share.
     pub router: RouterConfig,
     /// Heterogeneous fleet: profile overrides per shard index (shorter
     /// than the shard count → remaining shards use `server`).
@@ -84,6 +96,8 @@ pub struct ServeReport {
     pub router: RouterConfig,
     /// Per-shard counters (one entry per endpoint, index order).
     pub per_shard: Vec<ShardStats>,
+    /// Per-project counters (one entry per registered project, id order).
+    pub per_project: Vec<ProjectStats>,
     /// Emission horizon (s) — offered-load normalizer.
     pub duration_s: f64,
     /// Virtual time of the last response (s).
@@ -124,6 +138,11 @@ impl ServeReport {
         self.batch_examples as f64 / self.batches as f64
     }
 
+    /// One project's counters.
+    pub fn project(&self, project: ProjectId) -> &ProjectStats {
+        &self.per_project[project.index()]
+    }
+
     /// One-line human summary.  Percentiles print as `-` when nothing
     /// completed (a closed endpoint sheds everything).
     pub fn summary(&self) -> String {
@@ -136,9 +155,10 @@ impl ServeReport {
             }
         };
         format!(
-            "shards={} router={} offered={} completed={} rejected={} coalesced={} \
-             failover={} hit_rate={:.2} mean_batch={:.1} p50={}ms p95={}ms p99={}ms \
-             throughput={:.1} rps",
+            "projects={} shards={} router={} offered={} completed={} rejected={} \
+             coalesced={} failover={} hit_rate={:.2} mean_batch={:.1} p50={}ms p95={}ms \
+             p99={}ms throughput={:.1} rps",
+            self.per_project.len(),
             self.per_shard.len(),
             self.router.policy.name(),
             self.offered,
@@ -205,6 +225,8 @@ pub struct ServeEngine {
     shards: Vec<Shard>,
     router: Router,
     fleet: RequestFleet,
+    /// Requests each project's fleet offered (index = project id).
+    offered_by_project: Vec<u64>,
     /// Arrival cursor into `fleet.events`.
     next: usize,
     now: f64,
@@ -219,19 +241,43 @@ pub struct ServeEngine {
 }
 
 impl ServeEngine {
-    /// Build shards, router and the full arrival schedule.  `spec` is the
-    /// served model (the registry's spec on the serving paths).
-    pub fn new(cfg: &ServeConfig, spec: &crate::model::ModelSpec) -> Self {
-        let fleet = RequestFleet::generate(&cfg.fleet, spec);
-        // Clamp the flush size to the largest compiled micro-batch so
-        // every flushed batch is exactly one execution — `batch_size` in
-        // the log then always names a real executed batch.
-        let largest = spec
-            .micro_batches
+    /// Build shards, router and the merged multi-project arrival
+    /// schedule.  `plane` supplies the served specs and the fair-share
+    /// weights; `cfg.fleets` must carry one fleet per registered project.
+    pub fn new(cfg: &ServeConfig, plane: &ControlPlane) -> Result<Self> {
+        let specs = plane.specs();
+        if specs.is_empty() {
+            bail!("control plane has no registered projects");
+        }
+        if cfg.fleets.len() != specs.len() {
+            bail!(
+                "{} fleet config(s) for {} registered project(s)",
+                cfg.fleets.len(),
+                specs.len()
+            );
+        }
+        let fleets: Vec<RequestFleet> = cfg
+            .fleets
             .iter()
-            .copied()
+            .zip(&specs)
+            .enumerate()
+            .map(|(i, (fleet, spec))| {
+                RequestFleet::generate(ProjectId::new(i as u32), fleet, spec)
+            })
+            .collect();
+        let offered_by_project: Vec<u64> = fleets.iter().map(RequestFleet::offered).collect();
+        let fleet = RequestFleet::merge(fleets);
+
+        // Clamp the flush size to the largest compiled micro-batch across
+        // the hosted specs so every flushed batch is exactly one
+        // execution — `batch_size` in the log then always names a real
+        // executed batch.  (Batches are project-pure, so a project with
+        // smaller variants simply chunks below the clamp.)
+        let largest = specs
+            .iter()
+            .flat_map(|s| s.micro_batches.iter().copied())
             .max()
-            .unwrap_or(spec.batch_size)
+            .unwrap_or_else(|| specs.iter().map(|s| s.batch_size).max().unwrap_or(1))
             .max(1);
         let mut policy = cfg.policy;
         policy.max_batch = policy.max_batch.clamp(1, largest);
@@ -244,17 +290,19 @@ impl ServeEngine {
         // consumes the key: a cache, the in-flight table, or the
         // affinity router.
         let need_key = caching || coalesce || affinity;
+        // Weighted fair-share admission caps, enforced per shard queue.
+        let caps = if router_cfg.fair_share {
+            plane.queue_caps(policy.queue_depth)
+        } else {
+            Vec::new()
+        };
         let mut shards: Vec<Shard> = (0..router_cfg.shards.max(1))
             .map(|i| {
                 let profile = cfg.shard_profiles.get(i).copied().unwrap_or(cfg.server);
-                Shard::new(
-                    i as u32,
-                    policy,
-                    cfg.cache_capacity,
-                    spec.clone(),
-                    profile,
-                    &router_cfg,
-                )
+                let mut shard =
+                    Shard::new(i as u32, policy, cfg.cache_capacity, &specs, profile, &router_cfg);
+                shard.queue.set_project_caps(caps.clone());
+                shard
             })
             .collect();
         for &i in &cfg.drained_shards {
@@ -262,23 +310,34 @@ impl ServeEngine {
                 s.drain();
             }
         }
-        Self {
+        // Mixing fold (not a plain XOR): two fleets sharing a seed must
+        // not cancel out of the engine's jitter stream.
+        let seed = cfg.fleets.iter().fold(0x5E12Eu64, |acc, f| {
+            acc.rotate_left(17) ^ f.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        });
+        let duration_s = cfg
+            .fleets
+            .iter()
+            .map(|f| f.duration_s)
+            .fold(0.0, f64::max);
+        Ok(Self {
             router_cfg,
             coalesce,
             caching,
             need_key,
             response_bytes: cfg.response_bytes,
-            duration_s: cfg.fleet.duration_s,
+            duration_s,
             router: Router::new(router_cfg.policy),
-            rng: Pcg32::new(cfg.fleet.seed ^ 0x5E12E),
+            rng: Pcg32::new(seed),
             straggler: Exp::new(1.0),
             shards,
             fleet,
+            offered_by_project,
             next: 0,
             now: 0.0,
             log: RequestLog::new(),
             failovers: 0,
-        }
+        })
     }
 
     /// The per-request log so far.
@@ -292,14 +351,14 @@ impl ServeEngine {
     }
 
     /// Process every arrival and flush with event time ≤ `horizon`
-    /// (`None` = drain the whole schedule).  The registry supplies the
-    /// active version for new arrivals and holds reader pins for admitted
-    /// ones; callers may publish / roll back / GC between pumps — never
-    /// during one.
+    /// (`None` = drain the whole schedule).  The control plane supplies
+    /// each project's active version for new arrivals and holds reader
+    /// pins for admitted ones; callers may publish / stage / activate /
+    /// roll back / GC between pumps — never during one.
     pub fn pump(
         &mut self,
         horizon: Option<f64>,
-        registry: &mut SnapshotRegistry,
+        plane: &mut ControlPlane,
         compute: &mut dyn Compute,
         observer: &mut dyn ServeObserver,
     ) -> Result<()> {
@@ -324,22 +383,26 @@ impl ServeEngine {
                 let ev = self.fleet.events[self.next].clone();
                 self.next += 1;
                 self.now = ev.arrival_ms;
-                let meta = registry
-                    .active()
-                    .ok_or_else(|| anyhow!("no snapshot published — registry is empty"))?
+                let meta = plane
+                    .active(ev.project)
+                    .ok_or_else(|| {
+                        anyhow!("project {} has no active snapshot", ev.project)
+                    })?
                     .meta();
                 let key = if self.need_key {
-                    input_key(meta.id, &ev.input)
+                    input_key(meta.version, &ev.input)
                 } else {
                     0
                 };
                 let si = self.router.route(key, &self.shards, self.now);
-                let mut outcome = self.offer_to_shard(si, &ev, key, meta, registry, compute, observer)?;
+                let mut outcome =
+                    self.offer_to_shard(si, &ev, key, meta, plane, compute, observer)?;
                 if matches!(outcome, ArrivalOutcome::Refused) && self.shards.len() > 1 {
                     // Router-level failover: re-offer to the other shards,
                     // least outstanding work first.
                     for j in failover_order(si, &self.shards, self.now) {
-                        outcome = self.offer_to_shard(j, &ev, key, meta, registry, compute, observer)?;
+                        outcome =
+                            self.offer_to_shard(j, &ev, key, meta, plane, compute, observer)?;
                         if matches!(outcome, ArrivalOutcome::Handled) {
                             self.failovers += 1;
                             break;
@@ -355,6 +418,7 @@ impl ServeEngine {
                     self.log.push_rejection(RejectionRecord {
                         id: ev.id,
                         client: ev.client,
+                        project: ev.project,
                         sent_ms: ev.sent_ms,
                         arrival_ms: self.now,
                         shard: si as u32,
@@ -366,27 +430,29 @@ impl ServeEngine {
                 let batch = self.shards[si].queue.take_batch();
                 let Some(first) = batch.first() else { continue };
                 // Answer consistency: a flushed batch carries exactly one
-                // version (the queue cuts at version boundaries) and is
-                // computed entirely against it.
-                let vid = first.snapshot;
+                // version — one project, one snapshot — (the queue cuts at
+                // version boundaries) and is computed entirely against it.
+                let vid = first.version;
                 debug_assert!(
-                    batch.iter().all(|r| r.snapshot == vid),
-                    "a flushed batch mixed snapshot versions"
+                    batch.iter().all(|r| r.version == vid),
+                    "a flushed batch mixed model versions"
                 );
-                let snap = registry.get(vid).ok_or_else(|| {
-                    anyhow!("snapshot v{vid} evicted with {} in-flight request(s)", batch.len())
+                let snap = plane.get(vid).ok_or_else(|| {
+                    anyhow!(
+                        "snapshot {vid} evicted with {} in-flight request(s)",
+                        batch.len()
+                    )
                 })?;
                 let meta = snap.meta();
                 let params = Arc::clone(&snap.params);
                 let inputs: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
-                let (preds, base_service_ms) =
-                    self.shards[si]
-                        .executor
-                        .execute(compute, &params, &inputs)?;
+                let (preds, base_service_ms) = self.shards[si]
+                    .executor_mut(vid.project)
+                    .execute(compute, &params, &inputs)?;
                 // Straggler batches: multiplicative spread on the modeled
                 // service time, per this shard's own profile.  Zero jitter
                 // draws nothing, so idealized runs keep exact timelines.
-                let jitter = self.shards[si].executor.profile().jitter;
+                let jitter = self.shards[si].profile.jitter;
                 let service_ms = if jitter > 0.0 {
                     base_service_ms * (1.0 + jitter * self.straggler.sample(&mut self.rng))
                 } else {
@@ -399,8 +465,7 @@ impl ServeEngine {
                     if self.coalesce {
                         // Fan the one computed answer out to every waiter
                         // that coalesced onto this leader.
-                        let waiters =
-                            self.shards[si].resolve_inflight(req, computed_at, pred);
+                        let waiters = self.shards[si].resolve_inflight(req, computed_at, pred);
                         for w in waiters {
                             let done = computed_at
                                 + respond_ms(
@@ -416,7 +481,7 @@ impl ServeEngine {
                                 done_ms: done,
                                 latency_ms: done - w.sent_ms,
                                 shard: si as u32,
-                                snapshot: vid,
+                                version: vid,
                                 batch_size: 0,
                                 cache_hit: false,
                                 coalesced: true,
@@ -450,7 +515,7 @@ impl ServeEngine {
                         done_ms: done,
                         latency_ms: done - req.sent_ms,
                         shard: si as u32,
-                        snapshot: vid,
+                        version: vid,
                         batch_size: batch.len() as u32,
                         cache_hit: false,
                         coalesced: false,
@@ -460,7 +525,7 @@ impl ServeEngine {
                     self.log.push(rec);
                     // The computation ran: release the admission-time
                     // reader pin so GC can reclaim the version.
-                    registry.unpin_reader(vid);
+                    plane.unpin_reader(vid);
                 }
             }
         }
@@ -468,8 +533,8 @@ impl ServeEngine {
 
     /// Offer one arrival to one shard: cache hit, coalesce join, or
     /// admission (with a reader pin on the admitted version).  Returns
-    /// `Refused` when the shard's queue has no room — the caller then
-    /// fails over or sheds.
+    /// `Refused` when the shard's queue — or the project's fair share of
+    /// it — has no room; the caller then fails over or sheds.
     #[allow(clippy::too_many_arguments)]
     fn offer_to_shard(
         &mut self,
@@ -477,7 +542,7 @@ impl ServeEngine {
         ev: &RequestEvent,
         key: u64,
         meta: SnapshotMeta,
-        registry: &mut SnapshotRegistry,
+        plane: &mut ControlPlane,
         compute: &mut dyn Compute,
         observer: &mut dyn ServeObserver,
     ) -> Result<ArrivalOutcome> {
@@ -487,7 +552,7 @@ impl ServeEngine {
             let hit = self.shards[si].cache.get(key, &ev.input);
             if let Some(pred) = hit {
                 let done = now
-                    + self.shards[si].executor.profile().cache_lookup_ms
+                    + self.shards[si].profile.cache_lookup_ms
                     + respond_ms(&self.fleet.links, ev.client, self.response_bytes, &mut self.rng);
                 let rec = RequestRecord {
                     id: ev.id,
@@ -496,7 +561,7 @@ impl ServeEngine {
                     done_ms: done,
                     latency_ms: done - ev.sent_ms,
                     shard: si as u32,
-                    snapshot: meta.id,
+                    version: meta.version,
                     batch_size: 0,
                     cache_hit: true,
                     coalesced: false,
@@ -527,7 +592,7 @@ impl ServeEngine {
                         done_ms: done,
                         latency_ms: done - ev.sent_ms,
                         shard: si as u32,
-                        snapshot: meta.id,
+                        version: meta.version,
                         batch_size: 0,
                         cache_hit: false,
                         coalesced: true,
@@ -547,7 +612,7 @@ impl ServeEngine {
                 Join::Admit => {}
             }
         }
-        if !self.shards[si].queue.can_admit() {
+        if !self.shards[si].queue.can_admit(ev.project) {
             return Ok(ArrivalOutcome::Refused);
         }
         let admitted = self.shards[si].admit(
@@ -558,14 +623,14 @@ impl ServeEngine {
                 arrival_ms: now,
                 input: Arc::clone(&ev.input),
                 key,
-                snapshot: meta.id,
+                version: meta.version,
             },
             self.coalesce,
         );
         debug_assert!(admitted, "can_admit probe and offer disagree");
         // The admitted request will execute against this version: pin it
         // so traffic-driven GC cannot evict it first.
-        registry.pin_reader(meta.id).map_err(|e| anyhow!(e))?;
+        plane.pin_reader(meta.version).map_err(|e| anyhow!(e))?;
         // Only arrivals that actually entered the queue drive the autotune
         // rate estimate — hits, waiters and sheds never fill a batch slot,
         // so counting them would mistune the deadline and flush size.
@@ -578,6 +643,26 @@ impl ServeEngine {
     pub fn into_report(self) -> ServeReport {
         let span_s = self.log.span_ms() / 1000.0;
         let per_shard: Vec<ShardStats> = self.shards.iter().map(Shard::stats).collect();
+        // One pass over each log stream, whatever the project count.
+        let mut completed_by = vec![0u64; self.offered_by_project.len()];
+        for r in self.log.records() {
+            completed_by[r.version.project.index()] += 1;
+        }
+        let mut rejected_by = vec![0u64; self.offered_by_project.len()];
+        for r in self.log.rejections() {
+            rejected_by[r.project.index()] += 1;
+        }
+        let per_project: Vec<ProjectStats> = self
+            .offered_by_project
+            .iter()
+            .enumerate()
+            .map(|(i, &offered)| ProjectStats {
+                project: ProjectId::new(i as u32),
+                offered,
+                completed: completed_by[i],
+                rejected: rejected_by[i],
+            })
+            .collect();
         ServeReport {
             offered: self.fleet.offered(),
             completed: self.log.len() as u64,
@@ -590,6 +675,7 @@ impl ServeEngine {
             padded_examples: per_shard.iter().map(|s| s.padded_examples).sum(),
             router: self.router_cfg,
             per_shard,
+            per_project,
             duration_s: self.duration_s,
             span_s,
             log: self.log,
@@ -597,34 +683,35 @@ impl ServeEngine {
     }
 }
 
-/// A configured serving run over one registry + compute backend.
+/// A configured serving run over one control plane + compute backend.
 pub struct ServeSim<'c> {
     cfg: ServeConfig,
-    registry: SnapshotRegistry,
+    plane: ControlPlane,
     compute: &'c mut dyn Compute,
 }
 
 impl<'c> ServeSim<'c> {
-    pub fn new(cfg: ServeConfig, registry: SnapshotRegistry, compute: &'c mut dyn Compute) -> Self {
+    pub fn new(cfg: ServeConfig, plane: ControlPlane, compute: &'c mut dyn Compute) -> Self {
         Self {
             cfg,
-            registry,
+            plane,
             compute,
         }
     }
 
-    pub fn registry(&self) -> &SnapshotRegistry {
-        &self.registry
+    pub fn plane(&self) -> &ControlPlane {
+        &self.plane
     }
 
     /// Run the full request schedule to completion.
     pub fn run(&mut self) -> Result<ServeReport> {
-        self.registry
-            .active()
-            .ok_or_else(|| anyhow!("no snapshot published — registry is empty"))?;
-        let spec = self.registry.spec().clone();
-        let mut engine = ServeEngine::new(&self.cfg, &spec);
-        engine.pump(None, &mut self.registry, &mut *self.compute, &mut NoopObserver)?;
+        for p in self.plane.ids() {
+            if self.plane.active(p).is_none() {
+                return Err(anyhow!("project {p} has no active snapshot"));
+            }
+        }
+        let mut engine = ServeEngine::new(&self.cfg, &self.plane)?;
+        engine.pump(None, &mut self.plane, &mut *self.compute, &mut NoopObserver)?;
         Ok(engine.into_report())
     }
 }
@@ -679,7 +766,7 @@ mod tests {
 
     fn config(rate: f64, clients: usize, cache: usize) -> ServeConfig {
         ServeConfig {
-            fleet: FleetConfig {
+            fleets: vec![FleetConfig {
                 groups: vec![ClientSpec {
                     link: LinkProfile::Lan,
                     rate_rps: rate,
@@ -688,7 +775,7 @@ mod tests {
                 duration_s: 5.0,
                 input_pool: 16,
                 seed: 11,
-            },
+            }],
             policy: BatchPolicy {
                 max_batch: 8,
                 max_wait_ms: 5.0,
@@ -703,16 +790,22 @@ mod tests {
         }
     }
 
-    fn registry() -> SnapshotRegistry {
-        let mut reg = SnapshotRegistry::new(spec());
-        let params: Vec<f32> = (0..24).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.2).collect();
-        reg.publish_params(params, 5, "test".into(), 0.0).unwrap();
-        reg
+    fn test_params() -> Vec<f32> {
+        (0..24).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.2).collect()
+    }
+
+    fn plane() -> ControlPlane {
+        let mut plane = ControlPlane::single(spec());
+        plane
+            .registry_mut(ProjectId::new(0))
+            .publish_params(test_params(), 5, "test".into(), 0.0)
+            .unwrap();
+        plane
     }
 
     fn run_cfg(cfg: ServeConfig) -> ServeReport {
         let mut compute = ModeledCompute { param_count: 24 };
-        let mut sim = ServeSim::new(cfg, registry(), &mut compute);
+        let mut sim = ServeSim::new(cfg, plane(), &mut compute);
         sim.run().unwrap()
     }
 
@@ -737,23 +830,40 @@ mod tests {
         for r in report.log.records() {
             assert!(r.latency_ms > 0.0, "{r:?}");
             assert!(r.done_ms > r.sent_ms);
-            assert_eq!(r.snapshot, 1, "single-version run");
+            assert_eq!(r.version.version, 1, "single-version run");
+            assert_eq!(r.version.project, ProjectId::new(0));
         }
+        // Per-project accounting mirrors the global one on a single
+        // project.
+        assert_eq!(report.per_project.len(), 1);
+        let p = report.project(ProjectId::new(0));
+        assert_eq!(p.offered, report.offered);
+        assert_eq!(p.completed, report.completed);
+        assert_eq!(p.rejected, report.rejected);
     }
 
     #[test]
     fn no_snapshot_is_an_error() {
         let mut compute = ModeledCompute { param_count: 24 };
-        let empty = SnapshotRegistry::new(spec());
+        let empty = ControlPlane::single(spec());
         let mut sim = ServeSim::new(config(5.0, 1, 0), empty, &mut compute);
         assert!(sim.run().is_err());
+    }
+
+    #[test]
+    fn fleet_count_must_match_project_count() {
+        let mut cfg = config(5.0, 1, 0);
+        cfg.fleets.push(cfg.fleets[0].clone());
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut sim = ServeSim::new(cfg, plane(), &mut compute);
+        assert!(sim.run().is_err(), "2 fleets for 1 project must refuse");
     }
 
     #[test]
     fn deterministic_per_seed() {
         let run = |seed: u64| {
             let mut cfg = config(10.0, 3, 32);
-            cfg.fleet.seed = seed;
+            cfg.fleets[0].seed = seed;
             run_cfg(cfg).log.to_csv()
         };
         assert_eq!(run(7), run(7));
@@ -763,7 +873,7 @@ mod tests {
     #[test]
     fn small_input_pool_drives_cache_hits() {
         let mut cfg = config(40.0, 4, 256);
-        cfg.fleet.input_pool = 4;
+        cfg.fleets[0].input_pool = 4;
         let report = run_cfg(cfg);
         assert!(
             report.hit_rate() > 0.5,
@@ -785,13 +895,14 @@ mod tests {
         assert_eq!(report.completed + report.rejected, report.offered);
         assert_eq!(report.failovers, 0, "one shard: nowhere to fail over");
         // Shedding is visible: one rejection record per shed request,
-        // each attributed to a client and a shard.
+        // each attributed to a client, a project and a shard.
         assert_eq!(report.log.rejections().len() as u64, report.rejected);
         let by_client: u64 = report.log.rejections_by_client().values().sum();
         assert_eq!(by_client, report.rejected);
         for r in report.log.rejections() {
             assert!(r.client < 8);
             assert_eq!(r.shard, 0);
+            assert_eq!(r.project, ProjectId::new(0));
             assert!(r.arrival_ms > r.sent_ms);
         }
     }
@@ -846,7 +957,8 @@ mod tests {
         // is still being computed must execute too (no answer can be
         // served before the computation that produced it finishes).
         let mut cfg = config(400.0, 4, 4096);
-        cfg.fleet.input_pool = 2;
+        cfg.fleets[0].input_pool = 2;
+        cfg.policy.queue_depth = 4096;
         let report = run_cfg(cfg);
         // A flush-time cache would serve ~2 misses total (one per distinct
         // input); completion-time visibility forces every duplicate that
@@ -862,7 +974,7 @@ mod tests {
         // executes; with it, in-flight duplicates ride along.  Answers
         // must be identical either way.
         let mut base = config(400.0, 4, 0);
-        base.fleet.input_pool = 2;
+        base.fleets[0].input_pool = 2;
         base.policy.queue_depth = 4096; // no shedding: compare full runs
         let off = run_cfg(base.clone());
         let mut on_cfg = base;
@@ -901,8 +1013,7 @@ mod tests {
             shards: 3,
             policy: RoutingPolicy::JoinShortestQueue,
             coalesce: true,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         };
         let report = run_cfg(cfg);
         assert_eq!(report.completed + report.rejected, report.offered);
@@ -931,13 +1042,11 @@ mod tests {
     #[test]
     fn affinity_pins_duplicate_inputs_to_one_shard() {
         let mut cfg = config(100.0, 4, 0);
-        cfg.fleet.input_pool = 1; // one distinct input → one key
+        cfg.fleets[0].input_pool = 1; // one distinct input → one key
         cfg.router = RouterConfig {
             shards: 4,
             policy: RoutingPolicy::InputAffinity,
-            coalesce: false,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         };
         let report = run_cfg(cfg);
         let active: Vec<&ShardStats> =
@@ -952,7 +1061,7 @@ mod tests {
         // expected extra arrivals within the budget are ~0.04.  Autotune
         // should flush (nearly) immediately once the rate estimate forms.
         let mut fixed_cfg = config(2.0, 4, 0);
-        fixed_cfg.fleet.duration_s = 10.0;
+        fixed_cfg.fleets[0].duration_s = 10.0;
         let fixed = run_cfg(fixed_cfg.clone());
         let mut auto_cfg = fixed_cfg;
         auto_cfg.router.autotune = true;
@@ -1000,10 +1109,7 @@ mod tests {
         let mut cfg = config(50.0, 4, 0);
         cfg.router = RouterConfig {
             shards: 2,
-            policy: RoutingPolicy::RoundRobin,
-            coalesce: false,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         };
         cfg.drained_shards = vec![0];
         let report = run_cfg(cfg);
@@ -1022,10 +1128,7 @@ mod tests {
         let mut cfg = config(50.0, 4, 0);
         cfg.router = RouterConfig {
             shards: 2,
-            policy: RoutingPolicy::RoundRobin,
-            coalesce: false,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         };
         cfg.drained_shards = vec![0, 1];
         let report = run_cfg(cfg);
@@ -1045,10 +1148,7 @@ mod tests {
         cfg.policy.queue_depth = 8;
         cfg.router = RouterConfig {
             shards: 2,
-            policy: RoutingPolicy::RoundRobin,
-            coalesce: false,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         };
         let report = run_cfg(cfg);
         assert!(report.failovers > 0, "{}", report.summary());
@@ -1075,9 +1175,7 @@ mod tests {
         cfg.router = RouterConfig {
             shards: 2,
             policy: RoutingPolicy::JoinShortestQueue,
-            coalesce: false,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         };
         cfg.shard_profiles = vec![
             ServerProfile::default(),
@@ -1112,13 +1210,11 @@ mod tests {
             let mut cfg = config(126.0, 16, 0);
             cfg.server.jitter = 0.5;
             cfg.policy.queue_depth = 8192;
-            cfg.fleet.input_pool = 4096;
+            cfg.fleets[0].input_pool = 4096;
             cfg.router = RouterConfig {
                 shards: 2,
                 policy,
-                coalesce: false,
-                autotune: false,
-                window_ms: 1_000.0,
+                ..RouterConfig::single()
             };
             let report = run_cfg(cfg);
             assert_eq!(report.rejected, 0, "{}", report.summary());
@@ -1151,5 +1247,110 @@ mod tests {
             single.summary()
         );
         assert!(batched.mean_batch() > 1.5, "{}", batched.summary());
+    }
+
+    // ───────────────────────── multi-project tier ─────────────────────
+
+    /// Two projects behind one tier: project 0 is the hot one (high
+    /// per-client rate), project 1 the cold one.
+    fn hot_cold_cfg(hot_rps: f64, cold_rps: f64, depth: usize) -> (ServeConfig, ControlPlane) {
+        let mut cfg = config(0.0, 0, 0);
+        cfg.fleets = vec![
+            FleetConfig {
+                groups: vec![ClientSpec {
+                    link: LinkProfile::Lan,
+                    rate_rps: hot_rps,
+                    count: 8,
+                }],
+                duration_s: 5.0,
+                input_pool: 64,
+                seed: 11,
+            },
+            FleetConfig {
+                groups: vec![ClientSpec {
+                    link: LinkProfile::Lan,
+                    rate_rps: cold_rps,
+                    count: 2,
+                }],
+                duration_s: 5.0,
+                input_pool: 64,
+                seed: 12,
+            },
+        ];
+        cfg.policy.queue_depth = depth;
+        let mut plane = ControlPlane::new();
+        let hot = plane.register(spec(), 1.0);
+        let cold = plane.register(spec(), 1.0);
+        for p in [hot, cold] {
+            plane
+                .registry_mut(p)
+                .publish_params(test_params(), 1, "init".into(), 0.0)
+                .unwrap();
+        }
+        (cfg, plane)
+    }
+
+    fn run_two(cfg: ServeConfig, plane: ControlPlane) -> ServeReport {
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut sim = ServeSim::new(cfg, plane, &mut compute);
+        sim.run().unwrap()
+    }
+
+    #[test]
+    fn two_project_run_reconciles_per_project() {
+        let (cfg, plane) = hot_cold_cfg(30.0, 10.0, 4096);
+        let report = run_two(cfg, plane);
+        assert_eq!(report.per_project.len(), 2);
+        let hot = report.project(ProjectId::new(0));
+        let cold = report.project(ProjectId::new(1));
+        assert!(hot.offered > 0 && cold.offered > 0);
+        assert_eq!(hot.offered + cold.offered, report.offered);
+        assert_eq!(hot.completed + cold.completed, report.completed);
+        assert_eq!(hot.rejected + cold.rejected, report.rejected);
+        assert_eq!(report.rejected, 0, "no shedding at this load");
+        // Every record's version names its own project, and the
+        // per-project log view reconciles.
+        for (i, p) in [hot, cold].into_iter().enumerate() {
+            let view = report.log.for_project(ProjectId::new(i as u32));
+            assert_eq!(view.len() as u64, p.completed);
+            for r in view.records() {
+                assert_eq!(r.version.project, ProjectId::new(i as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn fair_share_bounds_the_cold_projects_shed_rate() {
+        // The acceptance criterion: the hot project overloads the tier
+        // (~2× a single shard's service rate) while the cold project
+        // trickles.  With fair-share admission the cold project's
+        // reserved slice keeps it unshed; without it, the hot project's
+        // backlog fills the whole queue and the cold project sheds at
+        // nearly the hot rate.
+        let (cfg, plane) = hot_cold_cfg(400.0, 5.0, 32);
+        let fair = run_two(cfg.clone(), plane.clone());
+        let fair_hot = *fair.project(ProjectId::new(0));
+        let fair_cold = *fair.project(ProjectId::new(1));
+        assert!(
+            fair_hot.shed_rate() > 0.2,
+            "hot project must be overloaded: {}",
+            fair.summary()
+        );
+        assert_eq!(
+            fair_cold.rejected, 0,
+            "cold project's fair share keeps it unshed"
+        );
+
+        let mut unfair_cfg = cfg;
+        unfair_cfg.router.fair_share = false;
+        let unfair = run_two(unfair_cfg, plane);
+        let unfair_cold = *unfair.project(ProjectId::new(1));
+        assert!(
+            unfair_cold.shed_rate() > 0.1,
+            "without fair share the hot queue starves the cold project \
+             (cold shed {:.3})",
+            unfair_cold.shed_rate()
+        );
+        assert!(fair_cold.shed_rate() < unfair_cold.shed_rate());
     }
 }

@@ -1,30 +1,36 @@
 //! Integration: the serve × train co-simulation end-to-end — shared
-//! clock, live snapshot publication, hot-swap answer consistency,
-//! traffic-driven GC, and the staleness-vs-cadence relationship — on the
-//! modeled backends (no artifacts needed; the path is `Compute`-generic).
+//! clock, multi-project control plane, byte-accounted snapshot
+//! publication, hot-swap answer consistency, traffic-driven GC, and the
+//! staleness-vs-cadence relationship — on the modeled backends (no
+//! artifacts needed; the path is `Compute`-generic).
 
 use std::collections::BTreeMap;
 
-use mlitb::cosim::{run_cosim, CosimConfig, PublicationPolicy, PublishTrigger};
+use mlitb::cosim::{run_cosim, CosimConfig, CosimProject, PublicationPolicy, PublishTrigger};
+use mlitb::model::{ModelSpec, TensorSpec};
 use mlitb::netsim::LinkProfile;
-use mlitb::runtime::{DriftingCompute, ModeledCompute};
+use mlitb::runtime::{Compute, DriftingCompute, ModeledCompute};
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, NoopObserver, RouterConfig, RoutingPolicy,
-    ServeConfig, ServeEngine, ServerProfile, SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ModelVersion, NoopObserver,
+    ProjectId, RouterConfig, RoutingPolicy, ServeConfig, ServeEngine, ServerProfile,
 };
 use mlitb::sim::SimConfig;
 
+fn fleet(duration_s: f64, seed: u64) -> FleetConfig {
+    FleetConfig {
+        groups: vec![
+            ClientSpec { link: LinkProfile::Lan, rate_rps: 8.0, count: 3 },
+            ClientSpec { link: LinkProfile::Wifi, rate_rps: 5.0, count: 3 },
+        ],
+        duration_s,
+        input_pool: 32,
+        seed,
+    }
+}
+
 fn serve_config(duration_s: f64, seed: u64) -> ServeConfig {
     ServeConfig {
-        fleet: FleetConfig {
-            groups: vec![
-                ClientSpec { link: LinkProfile::Lan, rate_rps: 8.0, count: 3 },
-                ClientSpec { link: LinkProfile::Wifi, rate_rps: 5.0, count: 3 },
-            ],
-            duration_s,
-            input_pool: 32,
-            seed,
-        },
+        fleets: vec![fleet(duration_s, seed)],
         policy: BatchPolicy {
             max_batch: 32,
             max_wait_ms: 5.0,
@@ -35,8 +41,7 @@ fn serve_config(duration_s: f64, seed: u64) -> ServeConfig {
             shards: 2,
             policy: RoutingPolicy::JoinShortestQueue,
             coalesce: true,
-            autotune: false,
-            window_ms: 1_000.0,
+            ..RouterConfig::single()
         },
         shard_profiles: Vec::new(),
         drained_shards: Vec::new(),
@@ -45,29 +50,47 @@ fn serve_config(duration_s: f64, seed: u64) -> ServeConfig {
     }
 }
 
-fn cosim_config(iterations: u64, publish: PublicationPolicy, seed: u64) -> CosimConfig {
-    let spec = demo_spec();
-    let mut train = SimConfig::paper_scaling(2, &spec);
+fn train_config(spec: &ModelSpec, iterations: u64, seed: u64) -> SimConfig {
+    let mut train = SimConfig::paper_scaling(2, spec);
     train.iterations = iterations;
     train.train_size = 600;
     train.test_size = 128;
     train.track_every = 1;
     train.master.iter_duration_s = 2.0;
     train.seed = seed;
+    train
+}
+
+fn cosim_config(iterations: u64, publish: PublicationPolicy, seed: u64) -> CosimConfig {
+    let spec = demo_spec();
     CosimConfig {
+        projects: vec![CosimProject {
+            train: train_config(&spec, iterations, seed),
+            spec,
+            publish,
+            retain: 2,
+            weight: 1.0,
+        }],
         serve: serve_config(iterations as f64 * 2.0, seed ^ 0xC0517),
-        train,
-        publish,
-        retain: 2,
+        egress_bytes_per_min: 0.0,
         measure_delta: true,
     }
 }
 
 fn run(cfg: &CosimConfig) -> mlitb::cosim::CosimReport {
-    let spec = demo_spec();
-    let mut train_compute = DriftingCompute { param_count: spec.param_count };
-    let mut serve_compute = ModeledCompute { param_count: spec.param_count };
-    run_cosim(cfg, &spec, &mut train_compute, &mut serve_compute).expect("cosim run")
+    let mut train_computes: Vec<DriftingCompute> = cfg
+        .projects
+        .iter()
+        .map(|p| DriftingCompute { param_count: p.spec.param_count })
+        .collect();
+    let train_refs: Vec<&mut dyn Compute> = train_computes
+        .iter_mut()
+        .map(|c| c as &mut dyn Compute)
+        .collect();
+    let mut serve_compute = ModeledCompute {
+        param_count: cfg.projects[0].spec.param_count,
+    };
+    run_cosim(cfg, train_refs, &mut serve_compute).expect("cosim run")
 }
 
 #[test]
@@ -119,6 +142,7 @@ fn error_improvement_triggers_publication() {
         PublicationPolicy {
             every: 0,
             min_improvement: 1e-4,
+            hysteresis: 0,
         },
         13,
     );
@@ -134,8 +158,7 @@ fn error_improvement_triggers_publication() {
         .skip(1)
         .all(|p| p.trigger == PublishTrigger::ErrorImprovement));
     // The training error really decreased over the run.
-    let errs: Vec<f64> = report
-        .train
+    let errs: Vec<f64> = report.train[0]
         .timeline
         .records()
         .iter()
@@ -149,6 +172,40 @@ fn error_improvement_triggers_publication() {
 }
 
 #[test]
+fn hysteresis_publishes_fewer_versions_on_the_same_run() {
+    // The flap-throttling satellite end-to-end: same training trace, the
+    // m = 3 policy must publish strictly fewer versions than m = 0 (it
+    // waits for three consecutive improved evaluations), and every one
+    // of its publications is still error-attributed.
+    let trigger = |hysteresis: u64| {
+        cosim_config(
+            8,
+            PublicationPolicy {
+                every: 0,
+                min_improvement: 1e-4,
+                hysteresis,
+            },
+            13,
+        )
+    };
+    let eager = run(&trigger(0));
+    let steady = run(&trigger(3));
+    let live = |r: &mlitb::cosim::CosimReport| {
+        r.publications
+            .iter()
+            .filter(|p| p.trigger != PublishTrigger::Initial)
+            .count()
+    };
+    assert!(live(&eager) > 0);
+    assert!(
+        live(&steady) < live(&eager),
+        "hysteresis 3 must publish fewer versions: {} vs {}",
+        live(&steady),
+        live(&eager)
+    );
+}
+
+#[test]
 fn every_answer_names_a_published_version_and_reconciles() {
     let cfg = cosim_config(6, PublicationPolicy::every(2), 17);
     let report = run(&cfg);
@@ -157,17 +214,17 @@ fn every_answer_names_a_published_version_and_reconciles() {
         report.serve.offered
     );
     assert_eq!(report.staleness.len() as u64, report.serve.completed);
-    let published: Vec<u64> = report.publications.iter().map(|p| p.snapshot).collect();
+    let published: Vec<ModelVersion> = report.publications.iter().map(|p| p.version).collect();
     // The staleness log and the request log agree on the serving version.
-    let by_id: BTreeMap<u64, u64> = report
+    let by_id: BTreeMap<u64, ModelVersion> = report
         .staleness
         .records()
         .iter()
-        .map(|r| (r.id, r.snapshot))
+        .map(|r| (r.id, r.version))
         .collect();
     for r in report.serve.log.records() {
-        assert!(published.contains(&r.snapshot), "{r:?}");
-        assert_eq!(by_id.get(&r.id), Some(&r.snapshot), "{r:?}");
+        assert!(published.contains(&r.version), "{r:?}");
+        assert_eq!(by_id.get(&r.id), Some(&r.version), "{r:?}");
     }
     // Conservation: published = evicted + resident.
     assert_eq!(
@@ -176,14 +233,12 @@ fn every_answer_names_a_published_version_and_reconciles() {
     );
 }
 
-/// (id → class) for records served under `version`.
-fn classes_under(
-    log: &mlitb::metrics::RequestLog,
-    version: u64,
-) -> BTreeMap<u64, u32> {
+/// (id → class) for records served under version number `version` of
+/// project 0.
+fn classes_under(log: &mlitb::metrics::RequestLog, version: u64) -> BTreeMap<u64, u32> {
     log.records()
         .iter()
-        .filter(|r| r.snapshot == version)
+        .filter(|r| r.version.version == version)
         .map(|r| (r.id, r.class))
         .collect()
 }
@@ -200,6 +255,7 @@ fn hot_swap_is_answer_consistent_and_rollback_is_byte_identical() {
     // flush after the swap still execute against v1; the debug assert in
     // the engine checks no batch mixes versions).
     let spec = demo_spec();
+    let project = ProjectId::new(0);
     let mut cfg = serve_config(4.0, 31);
     cfg.cache_capacity = 0; // every answer executes: pure version identity
     cfg.router.coalesce = false;
@@ -208,28 +264,39 @@ fn hot_swap_is_answer_consistent_and_rollback_is_byte_identical() {
     let p2: Vec<f32> = p1.iter().map(|x| -x).collect();
 
     let full_run = |params: Vec<f32>| {
-        let mut reg = SnapshotRegistry::new(spec.clone());
-        reg.publish_params(params, 0, "ref".into(), 0.0).unwrap();
+        let mut plane = ControlPlane::single(spec.clone());
+        plane
+            .registry_mut(project)
+            .publish_params(params, 0, "ref".into(), 0.0)
+            .unwrap();
         let mut compute = ModeledCompute { param_count: spec.param_count };
-        let mut eng = ServeEngine::new(&cfg, &spec);
-        eng.pump(None, &mut reg, &mut compute, &mut NoopObserver).unwrap();
+        let mut eng = ServeEngine::new(&cfg, &plane).expect("engine");
+        eng.pump(None, &mut plane, &mut compute, &mut NoopObserver).unwrap();
         eng.into_report()
     };
     let ref_v1 = full_run(p1.clone());
     let ref_v2 = full_run(p2.clone());
 
-    let mut reg = SnapshotRegistry::new(spec.clone());
-    reg.publish_params(p1.clone(), 0, "v1".into(), 0.0).unwrap();
+    let mut plane = ControlPlane::single(spec.clone());
+    plane
+        .registry_mut(project)
+        .publish_params(p1.clone(), 0, "v1".into(), 0.0)
+        .unwrap();
     let mut compute = ModeledCompute { param_count: spec.param_count };
-    let mut eng = ServeEngine::new(&cfg, &spec);
+    let mut eng = ServeEngine::new(&cfg, &plane).expect("engine");
     // Phase 1: v1 traffic.
-    eng.pump(Some(1_500.0), &mut reg, &mut compute, &mut NoopObserver).unwrap();
-    // Hot swap to v2 mid-traffic (pending v1 admissions still drain as v1).
-    reg.publish_params(p2, 10, "v2".into(), 1_500.0).unwrap();
-    eng.pump(Some(3_000.0), &mut reg, &mut compute, &mut NoopObserver).unwrap();
+    eng.pump(Some(1_500.0), &mut plane, &mut compute, &mut NoopObserver).unwrap();
+    // Hot swap to v2 mid-traffic (pending v1 admissions still drain as
+    // v1; `publish_params` is the instant-activation path).
+    plane
+        .registry_mut(project)
+        .publish_params(p2, 10, "v2".into(), 1_500.0)
+        .unwrap();
+    eng.pump(Some(3_000.0), &mut plane, &mut compute, &mut NoopObserver).unwrap();
     // Rollback: pin serving back to v1.
-    reg.set_active(1).unwrap();
-    eng.pump(None, &mut reg, &mut compute, &mut NoopObserver).unwrap();
+    let v1_handle = plane.registry(project).handle(1);
+    plane.registry_mut(project).activate(v1_handle).unwrap();
+    eng.pump(None, &mut plane, &mut compute, &mut NoopObserver).unwrap();
     let swapped = eng.into_report();
 
     assert_eq!(swapped.completed, ref_v1.completed, "same schedule");
@@ -264,7 +331,7 @@ fn hot_swap_is_answer_consistent_and_rollback_is_byte_identical() {
         .log
         .records()
         .iter()
-        .filter(|r| r.snapshot == 2)
+        .filter(|r| r.version.version == 2)
         .map(|r| r.done_ms)
         .fold(0.0f64, f64::max);
     assert!(
@@ -272,7 +339,7 @@ fn hot_swap_is_answer_consistent_and_rollback_is_byte_identical() {
             .log
             .records()
             .iter()
-            .any(|r| r.snapshot == 1 && r.done_ms > last_v2_done),
+            .any(|r| r.version.version == 1 && r.done_ms > last_v2_done),
         "post-rollback traffic must serve v1 again"
     );
 }
@@ -283,9 +350,8 @@ fn gc_waits_for_inflight_readers_under_live_traffic() {
     // publication boundaries, so GC sees pinned versions.  The run must
     // complete (an evicted-while-pinned version would error the flush),
     // release every pin, and still reclaim old versions eventually.
-    let spec = demo_spec();
     let mut cfg = cosim_config(8, PublicationPolicy::every(1), 19);
-    cfg.retain = 1;
+    cfg.projects[0].retain = 1;
     cfg.serve.shard_profiles = vec![
         ServerProfile {
             power_vps: 800.0,
@@ -296,10 +362,7 @@ fn gc_waits_for_inflight_readers_under_live_traffic() {
             ..ServerProfile::default()
         },
     ];
-    let mut train_compute = DriftingCompute { param_count: spec.param_count };
-    let mut serve_compute = ModeledCompute { param_count: spec.param_count };
-    let report =
-        run_cosim(&cfg, &spec, &mut train_compute, &mut serve_compute).expect("cosim with GC");
+    let report = run(&cfg);
     assert!(report.evicted > 0, "retention 1 must reclaim versions");
     assert_eq!(
         report.publications.len() as u64,
@@ -309,4 +372,200 @@ fn gc_waits_for_inflight_readers_under_live_traffic() {
         report.serve.completed + report.serve.rejected,
         report.serve.offered
     );
+}
+
+// ─────────────────────── multi-project acceptance ─────────────────────
+
+/// A second, smaller hosted model with a *different input shape* than
+/// `demo_spec` — the sharpest project-purity probe there is: if any
+/// batch, cache entry or probe execution ever mixed the projects, the
+/// executor would reject the wrong-length input and the run would error.
+fn small_spec() -> ModelSpec {
+    ModelSpec {
+        name: "small_mlp".into(),
+        param_count: 12,
+        batch_size: 4,
+        micro_batches: vec![4, 1],
+        input: vec![3, 1, 1],
+        classes: 4,
+        tensors: vec![TensorSpec {
+            name: "w".into(),
+            shape: vec![12],
+            offset: 0,
+            size: 12,
+            fan_in: 3,
+        }],
+        artifacts: Default::default(),
+    }
+}
+
+/// Two projects — the big `demo_spec` and the tiny `small_spec` — behind
+/// one shared 2-shard tier, both training live, publication throttled to
+/// `egress_bytes_per_min`.
+fn two_project_config(iterations: u64, egress_bytes_per_min: f64) -> CosimConfig {
+    let demo = demo_spec();
+    let small = small_spec();
+    let duration_s = iterations as f64 * 2.0;
+    CosimConfig {
+        projects: vec![
+            CosimProject {
+                train: train_config(&demo, iterations, 3),
+                spec: demo,
+                publish: PublicationPolicy::every(2),
+                retain: 2,
+                weight: 1.0,
+            },
+            CosimProject {
+                train: {
+                    let mut t = train_config(&small, iterations, 4);
+                    t.train_size = 300;
+                    t.test_size = 64;
+                    t
+                },
+                spec: small,
+                publish: PublicationPolicy::every(2),
+                retain: 2,
+                weight: 1.0,
+            },
+        ],
+        serve: ServeConfig {
+            fleets: vec![fleet(duration_s, 37), fleet(duration_s, 38)],
+            policy: BatchPolicy {
+                max_batch: 32,
+                max_wait_ms: 5.0,
+                queue_depth: 512,
+            },
+            server: ServerProfile::default(),
+            router: RouterConfig {
+                shards: 2,
+                policy: RoutingPolicy::JoinShortestQueue,
+                coalesce: true,
+                ..RouterConfig::single()
+            },
+            shard_profiles: Vec::new(),
+            drained_shards: Vec::new(),
+            cache_capacity: 256,
+            response_bytes: 256,
+        },
+        egress_bytes_per_min,
+        measure_delta: true,
+    }
+}
+
+#[test]
+fn two_project_cosim_never_mixes_projects_and_reconciles_per_project() {
+    // Acceptance (a): batches are never mixed across projects or
+    // versions.  The two specs have different input lengths, so a mixed
+    // batch could not even execute — a completing run plus per-record
+    // version joins pin the property end-to-end.
+    let report = run(&two_project_config(6, 0.0));
+    let p0 = ProjectId::new(0);
+    let p1 = ProjectId::new(1);
+    assert!(report.serve.completed > 0);
+    assert_eq!(
+        report.serve.completed + report.serve.rejected,
+        report.serve.offered
+    );
+    // Both projects trained and served.
+    assert_eq!(report.train.len(), 2);
+    assert_eq!(report.train[0].timeline.len(), 6);
+    assert_eq!(report.train[1].timeline.len(), 6);
+    let s0 = report.serve.project(p0);
+    let s1 = report.serve.project(p1);
+    assert!(s0.completed > 0 && s1.completed > 0);
+    assert_eq!(s0.completed + s1.completed, report.serve.completed);
+    // Every record's version belongs to its own project's published set —
+    // never the other's.
+    let published_by: BTreeMap<ModelVersion, ProjectId> = report
+        .publications
+        .iter()
+        .map(|p| (p.version, p.project()))
+        .collect();
+    for r in report.serve.log.records() {
+        assert_eq!(published_by.get(&r.version), Some(&r.version.project), "{r:?}");
+    }
+    // Per-project staleness views partition the interleaved log exactly
+    // (the isolation property, end-to-end).
+    let v0 = report.staleness.for_project(p0);
+    let v1 = report.staleness.for_project(p1);
+    assert_eq!(v0.len() + v1.len(), report.staleness.len());
+    assert!(v0.records().iter().all(|r| r.version.project == p0));
+    assert!(v1.records().iter().all(|r| r.version.project == p1));
+    // Each project's staleness is bounded by its own run — a
+    // cross-project master_iteration leak would blow this bound.
+    for r in v0.records().iter().chain(v1.records()) {
+        assert!(r.age_iters() <= 6, "{r:?}");
+    }
+    // Publications interleave but stay project-scoped: initial + cadence
+    // at iterations 2, 4, 6 for each project.
+    for p in [p0, p1] {
+        let pubs = report.publications_for(p);
+        assert_eq!(pubs.len(), 4, "initial + 3 cadence for {p}");
+        assert_eq!(
+            pubs.iter().skip(1).map(|r| r.iteration).collect::<Vec<_>>(),
+            vec![2, 4, 6]
+        );
+    }
+}
+
+#[test]
+fn throttled_publication_charges_egress_and_delays_activation() {
+    // Acceptance (b): publication of a large model charges master-egress
+    // bytes and measurably delays its activation.  At 0.3 MB/min the
+    // demo project's ~51 KB snapshot needs ~10 s of link time (≥ 4
+    // iteration windows), and the small project's 48 B snapshots queue
+    // behind it on the *shared* budget.
+    let report = run(&two_project_config(6, 0.3e6));
+    let live: Vec<_> = report
+        .publications
+        .iter()
+        .filter(|p| p.trigger != PublishTrigger::Initial)
+        .collect();
+    assert!(!live.is_empty());
+    // Egress bytes: every live publication charged param_count × 4.
+    let expected: u64 = live.iter().map(|p| p.bytes).sum();
+    assert!(expected > 0);
+    assert_eq!(report.egress_bytes, expected);
+    for p in &live {
+        let param_bytes = if p.project() == ProjectId::new(0) {
+            demo_spec().param_count * 4
+        } else {
+            small_spec().param_count * 4
+        } as u64;
+        assert_eq!(p.bytes, param_bytes);
+        assert!(p.activated_ms >= p.t_ms, "{p:?}");
+    }
+    // The big model's first publication visibly outlives its window:
+    // activation lands iterations after the publish decision.
+    let first_demo = live
+        .iter()
+        .find(|p| p.project() == ProjectId::new(0))
+        .expect("demo project published");
+    assert!(
+        first_demo.transfer_ms() >= 9_000.0,
+        "~51 KB at 0.3 MB/min is ~10 s of link time: {first_demo:?}"
+    );
+    assert!(
+        first_demo.activated_iteration > first_demo.iteration,
+        "activation must trail publication by whole iterations: {first_demo:?}"
+    );
+    // Mid-transfer traffic kept serving the previous version: no answer
+    // may predate its own version's activation.
+    let activated_at: BTreeMap<ModelVersion, f64> = report
+        .publications
+        .iter()
+        .map(|p| (p.version, p.activated_ms))
+        .collect();
+    for r in report.serve.log.records() {
+        let act = activated_at.get(&r.version).copied().unwrap_or(0.0);
+        assert!(r.done_ms >= act, "{r:?}");
+    }
+    // Unthrottled twin run: same schedules, zero activation lag — the
+    // delay really came from the budget.
+    let instant = run(&two_project_config(6, 0.0));
+    assert!(instant
+        .publications
+        .iter()
+        .all(|p| p.activated_ms == p.t_ms));
+    assert!(instant.egress_bytes > 0, "bytes accounted even unthrottled");
 }

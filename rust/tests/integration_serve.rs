@@ -7,23 +7,26 @@ use mlitb::model::{init_params, ResearchClosure};
 use mlitb::netsim::LinkProfile;
 use mlitb::runtime::ModeledCompute;
 use mlitb::serve::{
-    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RequestFleet, RouterConfig, RoutingPolicy,
-    ServeConfig, ServeReport, ServeSim, ServerProfile, SnapshotRegistry,
+    demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId, RequestFleet,
+    RouterConfig, RoutingPolicy, ServeConfig, ServeReport, ServeSim, ServerProfile,
 };
 
-fn registry_from_closure() -> SnapshotRegistry {
+fn plane_from_closure() -> ControlPlane {
     let spec = demo_spec();
     let mut closure = ResearchClosure::new(&spec, &init_params(&spec, 3));
     closure.iteration = 500;
     closure.notes = "integration".into();
-    let mut registry = SnapshotRegistry::new(spec);
-    registry.publish_closure(&closure, 0.0).expect("publish");
-    registry
+    let mut plane = ControlPlane::single(spec);
+    plane
+        .registry_mut(ProjectId::new(0))
+        .publish_closure(&closure, 0.0)
+        .expect("publish");
+    plane
 }
 
 fn config(max_batch: usize, cache: usize) -> ServeConfig {
     ServeConfig {
-        fleet: FleetConfig {
+        fleets: vec![FleetConfig {
             groups: vec![
                 ClientSpec { link: LinkProfile::Lan, rate_rps: 6.0, count: 3 },
                 ClientSpec { link: LinkProfile::Wifi, rate_rps: 4.0, count: 3 },
@@ -32,7 +35,7 @@ fn config(max_batch: usize, cache: usize) -> ServeConfig {
             duration_s: 8.0,
             input_pool: 48,
             seed: 21,
-        },
+        }],
         policy: BatchPolicy {
             max_batch,
             max_wait_ms: if max_batch == 1 { 0.0 } else { 5.0 },
@@ -51,7 +54,7 @@ fn run(cfg: ServeConfig) -> ServeReport {
     let mut compute = ModeledCompute {
         param_count: demo_spec().param_count,
     };
-    let mut sim = ServeSim::new(cfg, registry_from_closure(), &mut compute);
+    let mut sim = ServeSim::new(cfg, plane_from_closure(), &mut compute);
     sim.run().expect("serve run")
 }
 
@@ -117,7 +120,7 @@ fn routed_and_coalesced_answers_match_single_shard_baseline() {
     // single-shard uncoalesced baseline — and completes the same request
     // set (no shedding at this load).
     let mut base_cfg = config(32, 0);
-    base_cfg.fleet.input_pool = 12; // duplicate-heavy: coalescing engages
+    base_cfg.fleets[0].input_pool = 12; // duplicate-heavy: coalescing engages
     let baseline = run(base_cfg.clone());
     assert_eq!(baseline.rejected, 0);
     let expect = classes(&baseline);
@@ -136,7 +139,7 @@ fn routed_and_coalesced_answers_match_single_shard_baseline() {
                     policy,
                     coalesce,
                     autotune: coalesce, // exercise autotune on half the grid
-                    window_ms: 1_000.0,
+                    ..RouterConfig::single()
                 };
                 let routed = run(cfg);
                 assert_eq!(routed.rejected, 0, "{}", routed.summary());
@@ -161,8 +164,8 @@ fn routed_and_coalesced_answers_match_single_shard_baseline() {
 #[test]
 fn coalescing_reduces_executed_examples_on_duplicates() {
     let mut cfg = config(32, 0);
-    cfg.fleet.input_pool = 4;
-    cfg.fleet.groups[0].rate_rps = 60.0; // push duplicates into flight
+    cfg.fleets[0].input_pool = 4;
+    cfg.fleets[0].groups[0].rate_rps = 60.0; // push duplicates into flight
     let off = run(cfg.clone());
     cfg.router.coalesce = true;
     let on = run(cfg);
@@ -184,12 +187,12 @@ fn shedding_reconciles_per_client() {
     // Overload a tiny queue and check the previously-invisible sheds are
     // fully attributed: per client, offered = completed + rejected.
     let mut cfg = config(32, 0);
-    for g in &mut cfg.fleet.groups {
+    for g in &mut cfg.fleets[0].groups {
         g.rate_rps = 400.0;
     }
     cfg.policy.queue_depth = 8;
-    cfg.fleet.duration_s = 1.5; // overload: keep the executed volume modest
-    let fleet = RequestFleet::generate(&cfg.fleet, &demo_spec());
+    cfg.fleets[0].duration_s = 1.5; // overload: keep the executed volume modest
+    let fleet = RequestFleet::generate(ProjectId::new(0), &cfg.fleets[0], &demo_spec());
     let report = run(cfg);
     assert!(report.rejected > 0, "{}", report.summary());
     assert_eq!(report.completed + report.rejected, report.offered);
