@@ -1,42 +1,188 @@
 //! Micro benchmarks over the L3 hot paths (and the PJRT execution costs
 //! that calibrate the simulation's device model):
 //!
-//!   * reduce-step kernels: gradient merge (axpy), weighted average,
-//!     AdaGrad step — the per-iteration master cost behind the Fig 4 knee
+//!   * reduce-step kernels: single-thread vs parameter-sharded gradient
+//!     merge, weighted average, AdaGrad step — the per-iteration master
+//!     cost behind the Fig 4 knee.  This section needs no artifacts and
+//!     writes `BENCH_reduce.json` (ns/param, sharded speedups, worker
+//!     sweep) — the `MasterModel.merge_ns_per_param` calibration source.
 //!   * payload sparsification (partial gradients)
 //!   * JSON closure serialize/parse (research-closure cost)
 //!   * zip archive build/read + data-server serve
 //!   * PJRT grad/eval execution per model (the real per-batch cost)
 //!
-//!     cargo bench --bench micro             # everything
-//!     cargo bench --bench micro -- --fast   # skip PJRT section
+//!     cargo bench --bench micro                    # everything
+//!     cargo bench --bench micro -- --fast          # skip PJRT section
+//!     cargo bench --bench micro -- --reduce-only   # reduce section only
+//!     cargo bench --bench micro -- --reduce-only --check
+//!                                                  # CI smoke (few iters)
+//!     cargo bench --bench micro -- --json out.json # BENCH_reduce.json path
+
+use std::sync::Arc;
 
 use mlitb::bench::{bench, black_box, fmt_ns};
+use mlitb::cli::Args;
 use mlitb::coordinator::Payload;
 use mlitb::data::{build_archive, read_archive, DataServer, SynthSpec, Synthesizer};
+use mlitb::json::{self, Value};
 use mlitb::model::{init_params, Manifest, ResearchClosure};
-use mlitb::params::{AdaGrad, GradAccumulator, Optimizer};
+use mlitb::params::{AdaGrad, GradAccumulator, GradView, Optimizer, ShardedAccumulator};
 use mlitb::rng::Pcg32;
 use mlitb::runtime::{BatchBuilder, Engine};
 
+/// Parameter count for the reduce section: ≥100k, power of two, roughly
+/// the paper's "small neural network" gradient (~0.5 MB of f32).
+const REDUCE_DIM: usize = 131_072;
+/// The paper's knee: 64 near-simultaneous gradient messages.
+const REDUCE_SUBS: usize = 64;
+
+fn gen_grads(n: usize, dim: usize, seed: u64) -> Vec<Arc<[f32]>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..dim)
+                .map(|_| rng.gen_f32() - 0.5)
+                .collect::<Vec<f32>>()
+                .into()
+        })
+        .collect()
+}
+
+/// The reduce-merge section: single-thread reference vs the sharded
+/// accumulator, plus a worker-count sweep; records `BENCH_reduce.json`.
+fn reduce_bench(check: bool, json_path: &str) {
+    let (warm, iters) = if check { (1, 4) } else { (5, 40) };
+    println!(
+        "== gradient merge ({REDUCE_SUBS} submissions x {REDUCE_DIM} params{}) ==",
+        if check { ", --check" } else { "" }
+    );
+    let grads = gen_grads(REDUCE_SUBS, REDUCE_DIM, 1);
+    let work = (REDUCE_DIM * REDUCE_SUBS) as f64;
+
+    let mut single = GradAccumulator::new(REDUCE_DIM);
+    let r = bench("merge: single-thread reference", warm, iters, || {
+        single.reset();
+        for g in &grads {
+            single.add(g, 32);
+        }
+    });
+    println!("{}", r.report());
+    let single_np = r.median_ns() / work;
+    println!(
+        "    -> {single_np:.3} ns/param (MasterModel.merge_ns_per_param calibration; \
+         inject with --merge-ns)"
+    );
+    let reference = single.weighted_average();
+
+    let mut sharded_rows: Vec<Value> = Vec::new();
+    let mut best_speedup = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let mut acc = ShardedAccumulator::new(REDUCE_DIM, shards);
+        let batch: Vec<(GradView<'_>, u64)> =
+            grads.iter().map(|g| (GradView::Dense(g.as_ref()), 32)).collect();
+        let r = bench(&format!("merge: sharded S={shards}"), warm, iters, || {
+            acc.reset();
+            acc.merge(&batch);
+        });
+        println!("{}", r.report());
+        let np = r.median_ns() / work;
+        let speedup = single_np / np;
+        best_speedup = best_speedup.max(speedup);
+        println!("    -> {np:.3} ns/param, {speedup:.2}x vs single");
+        assert_eq!(
+            acc.weighted_average(),
+            reference,
+            "sharded S={shards} must be bitwise-identical to the reference"
+        );
+        sharded_rows.push(json::object(vec![
+            ("shards", Value::Number(shards as f64)),
+            ("ns_per_param", Value::Number(np)),
+            ("speedup", Value::Number(speedup)),
+        ]));
+    }
+
+    // Worker-count sweep: how merge throughput scales with burst size
+    // (fixed S=4 vs single) — the Fig 4 x-axis seen from the reduce.
+    let mut worker_rows: Vec<Value> = Vec::new();
+    for workers in [8usize, 16, 32, 64] {
+        let sub = &grads[..workers];
+        let w_work = (REDUCE_DIM * workers) as f64;
+        let mut acc1 = GradAccumulator::new(REDUCE_DIM);
+        let r1 = bench(&format!("merge: {workers} workers, single"), warm, iters, || {
+            acc1.reset();
+            for g in sub {
+                acc1.add(g, 32);
+            }
+        });
+        let mut acc4 = ShardedAccumulator::new(REDUCE_DIM, 4);
+        let batch: Vec<(GradView<'_>, u64)> =
+            sub.iter().map(|g| (GradView::Dense(g.as_ref()), 32)).collect();
+        let r4 = bench(&format!("merge: {workers} workers, sharded S=4"), warm, iters, || {
+            acc4.reset();
+            acc4.merge(&batch);
+        });
+        println!("{}\n{}", r1.report(), r4.report());
+        let np1 = r1.median_ns() / w_work;
+        let np4 = r4.median_ns() / w_work;
+        worker_rows.push(json::object(vec![
+            ("workers", Value::Number(workers as f64)),
+            ("single_ns_per_param", Value::Number(np1)),
+            ("sharded4_ns_per_param", Value::Number(np4)),
+            ("speedup", Value::Number(np1 / np4)),
+        ]));
+    }
+
+    // Sparse routing: binary-search fan-out of a top-10% payload.
+    let Payload::Sparse(entries) = Payload::sparsify(&grads[0], 0.1) else {
+        unreachable!()
+    };
+    let mut acc = ShardedAccumulator::new(REDUCE_DIM, 4);
+    let batch: Vec<(GradView<'_>, u64)> = (0..REDUCE_SUBS)
+        .map(|_| (GradView::Sparse(&entries), 32))
+        .collect();
+    let r = bench("merge: sparse top-10% x64, sharded S=4", warm, iters, || {
+        acc.reset();
+        acc.merge(&batch);
+    });
+    println!("{}", r.report());
+
+    let doc = json::object(vec![
+        ("params", Value::Number(REDUCE_DIM as f64)),
+        ("submissions", Value::Number(REDUCE_SUBS as f64)),
+        ("check_mode", Value::Bool(check)),
+        ("single_ns_per_param", Value::Number(single_np)),
+        // What `--merge-ns` on the sweeps should be fed on this machine.
+        ("merge_ns_per_param_calibration", Value::Number(single_np)),
+        ("best_sharded_speedup", Value::Number(best_speedup)),
+        ("sharded", Value::Array(sharded_rows)),
+        ("worker_sweep", Value::Array(worker_rows)),
+    ]);
+    match std::fs::write(json_path, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("wrote {json_path} (best sharded speedup {best_speedup:.2}x)"),
+        Err(e) => eprintln!("warning: could not write {json_path}: {e}"),
+    }
+}
+
 fn main() {
-    let fast = std::env::args().any(|a| a == "--fast");
+    let args = Args::from_env();
+    let fast = args.flag("fast");
+    let check = args.flag("check");
+    let json_path = args.get_or("json", "BENCH_reduce.json");
+
+    reduce_bench(check, json_path);
+    if args.flag("reduce-only") {
+        return;
+    }
+
     let manifest = Manifest::load_default().expect("run `make artifacts`");
     let spec = manifest.model("mnist_conv").unwrap().clone();
     let p = spec.param_count;
 
-    println!("== reduce-step kernels ({p} params ≙ mnist_conv) ==");
+    println!("\n== reduce-step epilogue ({p} params ≙ mnist_conv) ==");
     let mut rng = Pcg32::new(1);
     let grad: Vec<f32> = (0..p).map(|_| rng.gen_f32() - 0.5).collect();
     let mut acc = GradAccumulator::new(p);
-    let r = bench("grad merge (add, 1 worker msg)", 10, 200, || {
-        acc.add(&grad, 32);
-    });
-    println!("{}", r.report());
-    println!(
-        "    -> {:.2} ns/param (MasterModel.merge_ns_per_param calibration)",
-        r.median_ns() / p as f64
-    );
+    acc.add(&grad, 32);
     let mut avg = vec![0.0f32; p];
     let r = bench("weighted average (into)", 10, 200, || {
         acc.weighted_average_into(&mut avg);

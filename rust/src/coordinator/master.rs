@@ -3,9 +3,9 @@
 use crate::allocation::{Allocator, Delta, WorkerId};
 use crate::metrics::{IterationRecord, Timeline};
 use crate::netsim::MasterModel;
-use crate::params::{GradAccumulator, Optimizer, OptimizerKind};
+use crate::params::{GradView, Optimizer, OptimizerKind, ShardedAccumulator};
 
-use super::{LatencyMonitor, Payload, ReducePolicy, Submission};
+use super::{LatencyMonitor, ReducePolicy, Submission};
 
 /// Master/project configuration (one project ≙ one NN being trained; the
 /// paper's master hosts several — see `sim::Simulation` which can run
@@ -81,7 +81,11 @@ pub struct Master {
     params: Vec<f32>,
     optimizer: Box<dyn Optimizer>,
     allocator: Allocator,
-    accumulator: GradAccumulator,
+    /// Sharded across `cfg.master_model.reduce_mode.shards()` threads —
+    /// the *real* merge matches what the ingestion model charges for.
+    accumulator: ShardedAccumulator,
+    /// Pooled weighted-average buffer (reused every iteration).
+    avg_scratch: Vec<f32>,
     latency: LatencyMonitor,
     iteration: u64,
     t_virtual_ms: f64,
@@ -98,7 +102,11 @@ impl Master {
         let optimizer = cfg.optimizer.build(cfg.param_count, cfg.learning_rate);
         Self {
             allocator: Allocator::new(cfg.capacity),
-            accumulator: GradAccumulator::new(cfg.param_count),
+            accumulator: ShardedAccumulator::new(
+                cfg.param_count,
+                cfg.master_model.reduce_mode.shards(),
+            ),
+            avg_scratch: vec![0.0; cfg.param_count],
             latency: LatencyMonitor::new(),
             optimizer,
             params: init_params,
@@ -230,26 +238,29 @@ impl Master {
             }
         }
 
-        // ---- reduce (step c)
+        // ---- reduce (step c): batch the merged submissions' gradient
+        // views (no copies — dense payloads stay behind their Arc) and
+        // merge them sharded across threads; bitwise-identical to the
+        // serial reference for any shard count.
         self.accumulator.reset();
         let mut vectors = 0u64;
         let mut loss_sum = 0.0f64;
         let mut loss_examples = 0u64;
         let mut bytes_up = 0u64;
+        let mut batch: Vec<(GradView<'_>, u64)> = Vec::with_capacity(merged_idx.len());
         for &i in &merged_idx {
             let s = &subs[i];
-            match &s.payload {
-                Payload::Dense(g) => self.accumulator.add(g, s.examples),
-                Payload::Sparse(e) => self.accumulator.add_sparse(e, s.examples),
-            }
+            batch.push((s.payload.as_view(), s.examples));
             vectors += s.vectors;
             loss_sum += s.loss_sum;
             loss_examples += s.examples;
             bytes_up += s.bytes;
         }
+        self.accumulator.merge(&batch);
+        drop(batch);
         if !self.accumulator.is_empty() {
-            let avg = self.accumulator.weighted_average();
-            self.optimizer.step(&mut self.params, &avg);
+            self.accumulator.weighted_average_into(&mut self.avg_scratch);
+            self.optimizer.step(&mut self.params, &self.avg_scratch);
         }
 
         // ---- latency estimates (step d).  The monitor learns the part
@@ -353,6 +364,8 @@ impl Master {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Payload;
+    use crate::netsim::ReduceMode;
 
     fn cfg(policy: ReducePolicy) -> MasterConfig {
         MasterConfig {
@@ -367,7 +380,7 @@ mod tests {
     fn sub(worker: WorkerId, offset: f64, g: Vec<f32>, n: u64) -> Submission {
         Submission {
             worker,
-            payload: Payload::Dense(g),
+            payload: Payload::dense(g),
             examples: n,
             vectors: n,
             loss_sum: n as f64,
@@ -469,6 +482,41 @@ mod tests {
         ]);
         let p = m.params();
         assert!((p[0] + 0.025).abs() < 1e-6 && (p[1] + 0.15).abs() < 1e-6, "{p:?}");
+    }
+
+    #[test]
+    fn sharded_reduce_mode_is_bitwise_identical_to_serial() {
+        // Same submissions (dense + sparse) through a serial master and a
+        // param-sharded one: every parameter must match bit for bit.
+        let run = |mode: ReduceMode| {
+            let mut c = cfg(ReducePolicy::Sync);
+            c.param_count = 11; // non-dividing for shards ∈ {3}
+            c.master_model.reduce_mode = mode;
+            let mut m = Master::new(c, vec![0.05; 11]);
+            m.register_data(10);
+            m.worker_join(1);
+            m.worker_join(2);
+            for it in 0..3 {
+                let g: Vec<f32> = (0..11).map(|i| (i as f32 + it as f32).sin()).collect();
+                let sparse = Payload::sparsify(&g, 0.4);
+                m.finish_iteration(vec![
+                    sub(1, 100.0, g.clone(), 2),
+                    Submission {
+                        worker: 2,
+                        payload: sparse,
+                        examples: 3,
+                        vectors: 3,
+                        loss_sum: 1.0,
+                        send_offset_ms: 200.0,
+                        bytes: 64,
+                    },
+                ]);
+            }
+            m.params().to_vec()
+        };
+        let serial = run(ReduceMode::MessageParallel);
+        let sharded = run(ReduceMode::Sharded { shards: 3 });
+        assert_eq!(serial, sharded);
     }
 
     #[test]

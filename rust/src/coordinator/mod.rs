@@ -44,7 +44,7 @@ mod tests {
         m.worker_join(1);
         let sub = Submission {
             worker: 1,
-            payload: Payload::Dense(vec![4.0, 4.0, 4.0, 4.0]),
+            payload: Payload::dense(vec![4.0, 4.0, 4.0, 4.0]),
             examples: 4,
             vectors: 4,
             loss_sum: 9.2,

@@ -1,23 +1,45 @@
 //! Reduce-step policies: the paper's synchronized reduce plus the §5
 //! mitigations (asynchronous updates, partial-gradient communication).
 
+use std::sync::Arc;
+
 use crate::allocation::WorkerId;
+use crate::params::GradView;
 
 /// Gradient payload from one trainer for one iteration.
+///
+/// Dense gradients are shared slices (`Arc<[f32]>`): requeueing a
+/// submission under the Async policy, cloning for tests, or fanning a
+/// payload out to shard threads bumps a refcount instead of copying
+/// ~100 KB of gradient — the ingest path is zero-copy end-to-end.
 #[derive(Debug, Clone)]
 pub enum Payload {
     /// Full Σ-gradient over the worker's processed examples.
-    Dense(Vec<f32>),
-    /// Top-k (index, Σ-value) pairs — partial-gradient communication.
+    Dense(Arc<[f32]>),
+    /// Top-k (index, Σ-value) pairs — partial-gradient communication —
+    /// sorted ascending by index (shards binary-search this ordering).
     Sparse(Vec<(u32, f32)>),
 }
 
 impl Payload {
+    /// Build a dense payload from an owned gradient (no copy).
+    pub fn dense(grad: Vec<f32>) -> Payload {
+        Payload::Dense(grad.into())
+    }
+
     /// Wire size of this payload (f32 values, u32 indices).
     pub fn bytes(&self) -> u64 {
         match self {
             Payload::Dense(v) => (v.len() * 4) as u64,
             Payload::Sparse(v) => (v.len() * 8) as u64,
+        }
+    }
+
+    /// Borrowed view for the reduce step (`params::ShardedAccumulator`).
+    pub fn as_view(&self) -> GradView<'_> {
+        match self {
+            Payload::Dense(v) => GradView::Dense(&v[..]),
+            Payload::Sparse(e) => GradView::Sparse(e),
         }
     }
 
@@ -28,12 +50,14 @@ impl Payload {
         let keep = ((dense.len() as f64 * keep_fraction).ceil() as usize)
             .clamp(1, dense.len());
         let mut idx: Vec<u32> = (0..dense.len() as u32).collect();
-        // Partial selection by |g| descending.
+        // Partial selection by |g| descending.  total_cmp: a NaN gradient
+        // coordinate (diverged training) sorts as the largest magnitude
+        // and gets *kept* — it must surface at the master, and the old
+        // `partial_cmp().unwrap()` panicked mid-comparison instead.
         idx.select_nth_unstable_by(keep - 1, |&a, &b| {
             dense[b as usize]
                 .abs()
-                .partial_cmp(&dense[a as usize].abs())
-                .unwrap()
+                .total_cmp(&dense[a as usize].abs())
         });
         let mut entries: Vec<(u32, f32)> = idx[..keep]
             .iter()
@@ -138,8 +162,32 @@ mod tests {
 
     #[test]
     fn payload_bytes() {
-        assert_eq!(Payload::Dense(vec![0.0; 10]).bytes(), 40);
+        assert_eq!(Payload::dense(vec![0.0; 10]).bytes(), 40);
         assert_eq!(Payload::Sparse(vec![(0, 1.0); 10]).bytes(), 80);
+    }
+
+    #[test]
+    fn dense_payload_clone_shares_the_gradient() {
+        let p = Payload::dense(vec![1.0; 64]);
+        let q = p.clone();
+        let (Payload::Dense(a), Payload::Dense(b)) = (&p, &q) else {
+            panic!()
+        };
+        assert!(Arc::ptr_eq(a, b), "clone must share, not copy");
+    }
+
+    #[test]
+    fn sparsify_with_nan_does_not_panic_and_keeps_the_nan() {
+        // A diverged gradient must reach the master, not kill the client.
+        let dense = vec![0.1, f32::NAN, 0.5, -2.0];
+        let Payload::Sparse(entries) = Payload::sparsify(&dense, 0.5) else {
+            panic!()
+        };
+        assert_eq!(entries.len(), 2);
+        assert!(
+            entries.iter().any(|&(i, v)| i == 1 && v.is_nan()),
+            "NaN sorts as largest magnitude: {entries:?}"
+        );
     }
 
     #[test]

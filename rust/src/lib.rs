@@ -30,7 +30,8 @@
 //! * L1/L2 — `python/compile/` (build time only; never on the run path).
 //! * L3 — this crate: [`coordinator`] (master server), [`client`]
 //!   (simulated fleet), [`data`] (data server), [`allocation`]
-//!   (pie-cutter), [`params`] (optimizers), [`runtime`] (PJRT engine),
+//!   (pie-cutter), [`params`] (optimizers + the parameter-sharded
+//!   multi-threaded reduce), [`runtime`] (PJRT engine),
 //!   [`serve`] (prediction serving), [`cosim`] (serve × train
 //!   co-simulation), plus the from-scratch substrates
 //!   [`json`], [`rng`], [`netsim`], [`metrics`], [`cli`], [`bench`],

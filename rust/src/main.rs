@@ -18,7 +18,7 @@ use mlitb::client::DeviceClass;
 use mlitb::coordinator::ReducePolicy;
 use mlitb::cosim::{run_cosim, CosimConfig, CosimProject, PublicationPolicy};
 use mlitb::model::{init_params, Manifest, ModelSpec, ResearchClosure};
-use mlitb::netsim::LinkProfile;
+use mlitb::netsim::{LinkProfile, ReduceMode};
 use mlitb::params::OptimizerKind;
 use mlitb::runtime::{Compute, DriftingCompute, Engine, ModeledCompute};
 use mlitb::serve::{
@@ -61,7 +61,10 @@ fn print_help() {
                   --optimizer sgd|momentum|adagrad|rmsprop --policy sync|async|partial:<f>\n\
                   --track-every N --train-size N --test-size N --power-scale F\n\
                   --capacity N --seed N --save-closure <path> --csv <path>\n\
+                  --master-processes N --reduce-mode message|sharded|sharded:<S>\n\
+                  --merge-ns F --fanin-ns F  (reduce calibration overrides)\n\
          scale:   --nodes-list 1,2,4,...  --iters N  (modeled compute)\n\
+                  --reduce-mode message|sharded:<S> --merge-ns F --fanin-ns F\n\
          serve-sim: --model <name> --closure <path> --clients N --rate F\n\
                   --duration F --link lan|wifi|cellular|mixed --batch N\n\
                   --max-wait F --queue-depth N --cache N --input-pool N\n\
@@ -94,6 +97,13 @@ fn build_sim_config(args: &Args, spec: &mlitb::model::ModelSpec) -> Result<SimCo
     cfg.master.optimizer = OptimizerKind::parse(args.get_or("optimizer", "adagrad"))?;
     cfg.master.policy = ReducePolicy::parse(args.get_or("policy", "sync"))?;
     cfg.master.master_model.processes = args.get_usize("master-processes", 1)?;
+    cfg.master.master_model.reduce_mode = ReduceMode::parse(args.get_or("reduce-mode", "message"))?;
+    // Calibration overrides: paste the ns/param the reduce micro-bench
+    // measured on this machine (`cargo bench --bench micro -- --reduce-only`).
+    cfg.master.master_model.merge_ns_per_param =
+        args.get_f64("merge-ns", cfg.master.master_model.merge_ns_per_param)?;
+    cfg.master.master_model.fanin_ns_per_shard =
+        args.get_f64("fanin-ns", cfg.master.master_model.fanin_ns_per_shard)?;
     let device = DeviceClass::parse(args.get_or("device", "workstation"))?;
     cfg.fleet = vec![device; nodes];
     Ok(cfg)
@@ -152,14 +162,20 @@ fn cmd_scale(args: &Args) -> Result<(), String> {
     let spec = manifest.model(&model)?.clone();
     let nodes_list = args.get_usize_list("nodes-list", &[1, 2, 4, 8, 16, 32, 64, 96])?;
     let iters = args.get_u64("iters", 20)?;
+    let reduce_mode = ReduceMode::parse(args.get_or("reduce-mode", "message"))?;
     let mut table = mlitb::metrics::Table::new(
-        "scaling (modeled compute)",
+        &format!("scaling (modeled compute, reduce={})", reduce_mode.name()),
         &["nodes", "power vec/s", "latency ms", "wall s/iter"],
     );
     for &n in &nodes_list {
         let mut cfg = SimConfig::paper_scaling(n, &spec);
         cfg.iterations = iters;
         cfg.seed = args.get_u64("seed", 1)?;
+        cfg.master.master_model.reduce_mode = reduce_mode;
+        cfg.master.master_model.merge_ns_per_param =
+            args.get_f64("merge-ns", cfg.master.master_model.merge_ns_per_param)?;
+        cfg.master.master_model.fanin_ns_per_shard =
+            args.get_f64("fanin-ns", cfg.master.master_model.fanin_ns_per_shard)?;
         let mut compute = ModeledCompute {
             param_count: spec.param_count,
         };

@@ -94,13 +94,66 @@ impl LinkModel {
     }
 }
 
+/// How the master parallelizes the reduce step (the paper's §5
+/// "multiple reduce processes" mitigation, in two shapes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReduceMode {
+    /// Message-parallel: whole gradient messages are load-balanced
+    /// round-robin over `MasterModel::processes` queues (the original
+    /// modeled mitigation).
+    MessageParallel,
+    /// Parameter-sharded: one reduce pipeline, but each message's merge
+    /// is split over `shards` threads (`params::ShardedAccumulator`), so
+    /// the per-message merge cost divides by S at the price of a
+    /// per-shard fan-in barrier term.
+    Sharded { shards: usize },
+}
+
+impl ReduceMode {
+    /// Shard count the accumulator should use (1 for message-parallel).
+    pub fn shards(&self) -> usize {
+        match self {
+            ReduceMode::MessageParallel => 1,
+            ReduceMode::Sharded { shards } => (*shards).max(1),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "message" {
+            Ok(ReduceMode::MessageParallel)
+        } else if s == "sharded" {
+            Ok(ReduceMode::Sharded { shards: 4 })
+        } else if let Some(n) = s.strip_prefix("sharded:") {
+            let shards: usize = n
+                .parse()
+                .map_err(|_| format!("bad shard count '{n}'"))?;
+            if shards == 0 {
+                return Err("shard count must be >= 1".into());
+            }
+            Ok(ReduceMode::Sharded { shards })
+        } else {
+            Err(format!(
+                "unknown reduce mode '{s}' (message|sharded|sharded:<S>)"
+            ))
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ReduceMode::MessageParallel => "message".into(),
+            ReduceMode::Sharded { shards } => format!("sharded:{shards}"),
+        }
+    }
+}
+
 /// The master's capacity to ingest gradient messages at the sync point.
 ///
 /// All trainers respond near-simultaneously at the end of an iteration
 /// (§3.5); the master serves messages serially per process: receive
 /// (bytes / ingest bandwidth) then merge (params × per-param cost).  With
 /// `processes > 1` (the paper's mitigation #1), messages are load-balanced
-/// round-robin across processes.
+/// round-robin across processes; with [`ReduceMode::Sharded`] the merge
+/// itself is split across shard threads instead.
 #[derive(Debug, Clone)]
 pub struct MasterModel {
     /// Master ingress bandwidth (bytes/ms): the shared switch/NIC all
@@ -109,11 +162,23 @@ pub struct MasterModel {
     /// Fixed per-message handling overhead (ms): websocket framing, JSON
     /// envelope, event dispatch in the single Node.js loop.
     pub per_msg_overhead_ms: f64,
-    /// Gradient-merge cost per parameter (ns) — calibrated from
-    /// `benches/micro.rs` (axpy over the flat vector).
+    /// Gradient-merge cost per parameter (ns).  Calibrate from the
+    /// measured kernel: `cargo bench --bench micro -- --reduce-only`
+    /// prints this value (and `BENCH_reduce.json` records it); inject it
+    /// via `--merge-ns` on the CLI sweeps.  The default stays at the
+    /// paper-era 1 ns/param (a JS-engine merge loop) so the §3.5 knee
+    /// calibration below is unchanged.
     pub merge_ns_per_param: f64,
-    /// Number of master reduce processes (paper mitigation: >1).
+    /// Number of master reduce processes (paper mitigation: >1).  Only
+    /// meaningful under [`ReduceMode::MessageParallel`].
     pub processes: usize,
+    /// How the reduce parallelizes (message-parallel vs param-sharded).
+    pub reduce_mode: ReduceMode,
+    /// Fan-in barrier cost per shard per message (ns) under
+    /// [`ReduceMode::Sharded`]: the scoped-thread wake/join overhead,
+    /// amortized over the burst.  Sets the knee where more shards stop
+    /// paying off.
+    pub fanin_ns_per_shard: f64,
     /// Saturation threshold: once the bytes arriving in one sync burst
     /// exceed this, per-message service degrades quadratically — the
     /// Node.js heap/GC pressure behind the paper's observation that "a
@@ -131,6 +196,8 @@ impl Default for MasterModel {
             per_msg_overhead_ms: 3.0,
             merge_ns_per_param: 1.0,
             processes: 1,
+            reduce_mode: ReduceMode::MessageParallel,
+            fanin_ns_per_shard: 2_000.0,
             // Calibrated just above 64 × ~94 KB (the mnist_conv gradient
             // burst): the knee lands at the paper's 64 nodes.
             congestion_bytes: 6_500_000,
@@ -140,11 +207,20 @@ impl Default for MasterModel {
 
 impl MasterModel {
     /// Service time for one gradient message of `bytes` covering `params`
-    /// parameters (ms), excluding queueing and congestion.
+    /// parameters (ms), excluding queueing and congestion.  Under
+    /// [`ReduceMode::Sharded`] the merge component divides by the shard
+    /// count and pays the per-shard fan-in barrier.
     pub fn service_ms(&self, bytes: u64, params: usize) -> f64 {
+        let merge_ns = match self.reduce_mode {
+            ReduceMode::MessageParallel => params as f64 * self.merge_ns_per_param,
+            ReduceMode::Sharded { shards } => {
+                let s = shards.max(1) as f64;
+                params as f64 * self.merge_ns_per_param / s + s * self.fanin_ns_per_shard
+            }
+        };
         self.per_msg_overhead_ms
             + bytes as f64 / self.ingest_bandwidth_bytes_per_ms
-            + params as f64 * self.merge_ns_per_param / 1.0e6
+            + merge_ns / 1.0e6
     }
 
     /// Service degradation multiplier for a sync burst totaling
@@ -169,13 +245,21 @@ impl MasterModel {
     /// experiences.
     pub fn drain_delays(&self, arrivals: &[(f64, u64, usize)]) -> Vec<f64> {
         let total_bytes: u64 = arrivals.iter().map(|a| a.1).sum();
-        // Each process sees 1/processes of the burst; congestion applies
-        // to the per-process share (paper mitigation #1 splits the heap
-        // pressure as well as the queue).
-        let factor = self.congestion_factor(total_bytes / self.processes.max(1) as u64);
+        // Message-parallel: round-robin over `processes` queues, each
+        // seeing 1/processes of the burst (paper mitigation #1 splits the
+        // heap pressure as well as the queue).  Sharded: one reduce
+        // pipeline — service is faster per message, but the full burst's
+        // congestion lands on it.
+        let queues = match self.reduce_mode {
+            ReduceMode::MessageParallel => self.processes.max(1),
+            ReduceMode::Sharded { .. } => 1,
+        };
+        let factor = self.congestion_factor(total_bytes / queues as u64);
         let mut order: Vec<usize> = (0..arrivals.len()).collect();
-        order.sort_by(|&a, &b| arrivals[a].0.partial_cmp(&arrivals[b].0).unwrap());
-        let mut free_at = vec![0.0f64; self.processes.max(1)];
+        // total_cmp: a NaN offset (corrupt clock math upstream) must not
+        // panic the master's drain — it sorts deterministically instead.
+        order.sort_by(|&a, &b| arrivals[a].0.total_cmp(&arrivals[b].0));
+        let mut free_at = vec![0.0f64; queues];
         let mut completion = vec![0.0f64; arrivals.len()];
         for (k, &i) in order.iter().enumerate() {
             let (arrival, bytes, params) = arrivals[i];
@@ -283,6 +367,91 @@ mod tests {
         let d = m.drain_delays(&[(0.0, 1000, 10), (1000.0, 1000, 10)]);
         assert!((d[0] - svc).abs() < 1e-9);
         assert!((d[1] - (1000.0 + svc)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduce_mode_parse_roundtrip() {
+        for m in [
+            ReduceMode::MessageParallel,
+            ReduceMode::Sharded { shards: 4 },
+            ReduceMode::Sharded { shards: 7 },
+        ] {
+            assert_eq!(ReduceMode::parse(&m.name()).unwrap(), m);
+        }
+        assert_eq!(
+            ReduceMode::parse("sharded").unwrap(),
+            ReduceMode::Sharded { shards: 4 }
+        );
+        assert!(ReduceMode::parse("sharded:0").is_err());
+        assert!(ReduceMode::parse("threads").is_err());
+        assert_eq!(ReduceMode::MessageParallel.shards(), 1);
+        assert_eq!(ReduceMode::Sharded { shards: 6 }.shards(), 6);
+    }
+
+    #[test]
+    fn sharded_mode_divides_merge_cost() {
+        let base = MasterModel::default();
+        let sharded = MasterModel {
+            reduce_mode: ReduceMode::Sharded { shards: 4 },
+            ..Default::default()
+        };
+        // Big message so the merge term dominates the comparison.
+        let params = 1_000_000;
+        let s1 = base.service_ms(0, params) - base.per_msg_overhead_ms;
+        let s4 = sharded.service_ms(0, params) - sharded.per_msg_overhead_ms;
+        let expected = s1 / 4.0 + 4.0 * sharded.fanin_ns_per_shard / 1.0e6;
+        assert!((s4 - expected).abs() < 1e-9, "{s4} vs {expected}");
+        assert!(s4 < s1);
+    }
+
+    #[test]
+    fn sharded_fanin_barrier_has_a_knee() {
+        // More shards than the merge can amortize must cost more, not
+        // less: the fan-in term caps useful S.
+        let svc = |shards| {
+            MasterModel {
+                reduce_mode: ReduceMode::Sharded { shards },
+                ..Default::default()
+            }
+            .service_ms(0, 1_000)
+        };
+        assert!(svc(4) < svc(1024), "barrier term must dominate eventually");
+    }
+
+    #[test]
+    fn sharded_mode_single_queue_beats_serial_on_merge_bound_bursts() {
+        // A burst of merge-heavy messages: the sharded pipeline drains
+        // close to S× faster than the single-process message queue.
+        let serial = MasterModel {
+            per_msg_overhead_ms: 0.0,
+            ..Default::default()
+        };
+        let sharded = MasterModel {
+            per_msg_overhead_ms: 0.0,
+            reduce_mode: ReduceMode::Sharded { shards: 4 },
+            ..Default::default()
+        };
+        let arrivals = vec![(0.0, 0, 1_000_000); 8];
+        let worst = |m: &MasterModel| {
+            m.drain_delays(&arrivals)
+                .into_iter()
+                .fold(0.0f64, f64::max)
+        };
+        let speedup = worst(&serial) / worst(&sharded);
+        assert!(speedup > 3.5 && speedup < 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn nan_arrival_offset_does_not_panic_drain() {
+        let m = MasterModel::default();
+        let d = m.drain_delays(&[
+            (0.0, 1000, 10),
+            (f64::NAN, 1000, 10),
+            (5.0, 1000, 10),
+        ]);
+        assert_eq!(d.len(), 3);
+        // The well-formed messages still complete at finite times.
+        assert!(d[0].is_finite() && d[2].is_finite());
     }
 
     #[test]

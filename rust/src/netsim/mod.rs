@@ -14,7 +14,7 @@ mod clock;
 mod link;
 
 pub use clock::VirtualClock;
-pub use link::{LinkModel, LinkProfile, MasterModel};
+pub use link::{LinkModel, LinkProfile, MasterModel, ReduceMode};
 
 #[cfg(test)]
 mod tests {

@@ -5,13 +5,18 @@
 //! workers and takes a gradient step using AdaGrad" (§3.6).  The L2 JAX
 //! models pack all parameters into a single flat f32 vector, so the entire
 //! reduce/update path is dense vector arithmetic over `&[f32]` — this
-//! module is the L3 hot path measured in `benches/micro.rs`.
+//! module is the L3 hot path measured in `benches/micro.rs`.  The
+//! production merge is [`ShardedAccumulator`] (parameter-sharded across
+//! scoped threads, bitwise-identical to the serial [`GradAccumulator`]);
+//! see DESIGN.md's reduce-layer section.
 
 mod optimizer;
+mod sharded;
 mod vecmath;
 
 pub use optimizer::{AdaGrad, Momentum, Optimizer, OptimizerKind, RmsProp, Sgd};
-pub use vecmath::{add_assign, axpy, dot, l2_norm, scale, GradAccumulator};
+pub use sharded::{GradView, ShardedAccumulator};
+pub use vecmath::{add_assign, axpy, dot, l2_norm, scale, scaled_copy, GradAccumulator};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,308 @@
+//! Parameter-sharded, multi-threaded gradient reduce.
+//!
+//! The paper's scaling knee at 64 nodes is the master serially merging
+//! gradient messages (§3.5); its proposed mitigation — multiple reduce
+//! processes — existed here only as a *modeled* parameter
+//! (`netsim::MasterModel`).  [`ShardedAccumulator`] makes the reduce
+//! actually parallel: the flat parameter vector is partitioned into `S`
+//! contiguous shards with fixed boundaries, and one iteration's worth of
+//! submissions is merged with each shard's slice on its own thread
+//! (scoped threads over the persistent shard arena — the `sum` buffer is
+//! reused across iterations, so the hot path allocates nothing per
+//! gradient).
+//!
+//! **Determinism.**  Results are bitwise-identical to the single-threaded
+//! [`GradAccumulator`](super::GradAccumulator) given the same submission
+//! order: every kernel is elementwise, shard boundaries are fixed, and
+//! each shard applies submissions in batch order — so each parameter
+//! element sees exactly the same f32 additions in exactly the same order,
+//! just on a different thread.  `tests/prop_reduce.rs` pins this for
+//! S ∈ {1, 2, 4, 7}, including non-dividing shard counts.
+//!
+//! Sparse (partial-gradient) payloads arrive sorted by index; each shard
+//! binary-searches the entry list against its boundary (`partition_point`)
+//! and merges only its sub-range.
+
+use super::vecmath::{add_assign, scaled_copy};
+
+/// A borrowed view of one submission's gradient for the reduce step.
+///
+/// Dense payloads are full Σ-gradients; sparse payloads are (index,
+/// Σ-value) pairs **sorted by index** (what `Payload::sparsify` emits) —
+/// sortedness is what lets shards binary-search their sub-range.
+#[derive(Debug, Clone, Copy)]
+pub enum GradView<'a> {
+    Dense(&'a [f32]),
+    Sparse(&'a [(u32, f32)]),
+}
+
+/// Parameter-sharded accumulator: the production reduce path.
+#[derive(Debug, Clone)]
+pub struct ShardedAccumulator {
+    /// The shard arena: one flat buffer, threads write disjoint slices.
+    sum: Vec<f32>,
+    /// `shards + 1` ascending split points; shard `s` owns
+    /// `sum[bounds[s]..bounds[s + 1]]`.
+    bounds: Vec<usize>,
+    count: u64,
+    contributions: u32,
+}
+
+impl ShardedAccumulator {
+    /// `shards` is clamped to `[1, max(dim, 1)]` — more shards than
+    /// parameters would only spawn idle threads.
+    pub fn new(dim: usize, shards: usize) -> Self {
+        let s = shards.clamp(1, dim.max(1));
+        // Even partition; the first `dim % s` shards take one extra
+        // element, so boundaries are fixed functions of (dim, s).
+        let (base, rem) = (dim / s, dim % s);
+        let bounds: Vec<usize> = (0..=s).map(|k| k * base + k.min(rem)).collect();
+        Self {
+            sum: vec![0.0; dim],
+            bounds,
+            count: 0,
+            contributions: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sum.len()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// The fixed split points (`n_shards() + 1` ascending values).
+    pub fn shard_bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    pub fn examples(&self) -> u64 {
+        self.count
+    }
+
+    pub fn contributions(&self) -> u32 {
+        self.contributions
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Merge one iteration's submissions (gradient view + example count
+    /// each), sharded across threads.
+    ///
+    /// All payloads are validated *before* any merge work starts (dense
+    /// dimension, sparse index bounds and sortedness), so a corrupt
+    /// message panics descriptively with the accumulator untouched.
+    pub fn merge(&mut self, batch: &[(GradView<'_>, u64)]) {
+        let dim = self.sum.len();
+        for (view, _) in batch {
+            match view {
+                GradView::Dense(g) => {
+                    assert_eq!(g.len(), dim, "gradient dim mismatch");
+                }
+                GradView::Sparse(entries) => {
+                    let mut prev: Option<u32> = None;
+                    for &(i, _) in *entries {
+                        if i as usize >= dim {
+                            panic!("sparse gradient index {i} out of bounds for dim {dim}");
+                        }
+                        if let Some(p) = prev {
+                            if i <= p {
+                                panic!(
+                                    "sparse gradient entries not sorted by index \
+                                     ({i} after {p})"
+                                );
+                            }
+                        }
+                        prev = Some(i);
+                    }
+                }
+            }
+        }
+        for &(_, examples) in batch {
+            self.count += examples;
+            self.contributions += 1;
+        }
+        if batch.is_empty() || dim == 0 {
+            return;
+        }
+
+        if self.n_shards() == 1 {
+            merge_shard(&mut self.sum, 0, batch);
+            return;
+        }
+
+        // Split the arena at the fixed boundaries and merge each shard's
+        // slice on its own thread; shard 0 runs on the calling thread so
+        // S shards cost S − 1 spawns.
+        let mut slices: Vec<(usize, &mut [f32])> = Vec::with_capacity(self.n_shards());
+        let mut rest: &mut [f32] = &mut self.sum;
+        let mut start = 0;
+        for w in self.bounds.windows(2) {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(w[1] - w[0]);
+            slices.push((start, head));
+            rest = tail;
+            start = w[1];
+        }
+        std::thread::scope(|scope| {
+            let mut it = slices.into_iter();
+            let first = it.next().expect("at least one shard");
+            for (lo, slice) in it {
+                scope.spawn(move || merge_shard(slice, lo, batch));
+            }
+            merge_shard(first.1, first.0, batch);
+        });
+    }
+
+    /// The weighted-average gradient; empty accumulator yields zeros.
+    pub fn weighted_average(&self) -> Vec<f32> {
+        let mut avg = vec![0.0; self.sum.len()];
+        self.weighted_average_into(&mut avg);
+        avg
+    }
+
+    /// In-place variant writing into a caller-provided buffer (hot path —
+    /// the master reuses one scratch buffer across iterations).
+    pub fn weighted_average_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.sum.len());
+        let inv = if self.count > 0 {
+            1.0 / self.count as f32
+        } else {
+            0.0
+        };
+        scaled_copy(out, inv, &self.sum);
+    }
+
+    /// Reset for the next iteration without freeing the arena.
+    pub fn reset(&mut self) {
+        self.sum.fill(0.0);
+        self.count = 0;
+        self.contributions = 0;
+    }
+}
+
+/// Merge every submission's `[lo, lo + slice.len())` range into one
+/// shard's slice, in batch order (the determinism contract).
+fn merge_shard(slice: &mut [f32], lo: usize, batch: &[(GradView<'_>, u64)]) {
+    let hi = lo + slice.len();
+    for (view, _) in batch {
+        match view {
+            GradView::Dense(g) => add_assign(slice, &g[lo..hi]),
+            GradView::Sparse(entries) => {
+                let a = entries.partition_point(|&(i, _)| (i as usize) < lo);
+                let b = entries.partition_point(|&(i, _)| (i as usize) < hi);
+                for &(i, v) in &entries[a..b] {
+                    slice[i as usize - lo] += v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::GradAccumulator;
+
+    #[test]
+    fn bounds_partition_evenly_with_remainder_up_front() {
+        let acc = ShardedAccumulator::new(10, 4);
+        assert_eq!(acc.shard_bounds(), &[0, 3, 6, 8, 10]);
+        assert_eq!(acc.n_shards(), 4);
+        let acc = ShardedAccumulator::new(8, 4);
+        assert_eq!(acc.shard_bounds(), &[0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_dim() {
+        assert_eq!(ShardedAccumulator::new(3, 16).n_shards(), 3);
+        assert_eq!(ShardedAccumulator::new(0, 4).n_shards(), 1);
+        assert_eq!(ShardedAccumulator::new(5, 0).n_shards(), 1);
+    }
+
+    #[test]
+    fn matches_reference_accumulator_dense_and_sparse() {
+        let g1: Vec<f32> = (0..10).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let g2: Vec<f32> = (0..10).map(|i| (i as f32).sin()).collect();
+        let sparse: Vec<(u32, f32)> = vec![(0, 1.5), (4, -2.0), (9, 0.125)];
+        let mut reference = GradAccumulator::new(10);
+        reference.add(&g1, 2);
+        reference.add_sparse(&sparse, 1);
+        reference.add(&g2, 3);
+        for shards in [1, 2, 4, 7] {
+            let mut acc = ShardedAccumulator::new(10, shards);
+            acc.merge(&[
+                (GradView::Dense(&g1), 2),
+                (GradView::Sparse(&sparse), 1),
+                (GradView::Dense(&g2), 3),
+            ]);
+            assert_eq!(
+                acc.weighted_average(),
+                reference.weighted_average(),
+                "shards={shards}"
+            );
+            assert_eq!(acc.examples(), 6);
+            assert_eq!(acc.contributions(), 3);
+        }
+    }
+
+    #[test]
+    fn incremental_merges_accumulate() {
+        let mut acc = ShardedAccumulator::new(4, 2);
+        acc.merge(&[(GradView::Dense(&[1.0, 0.0, 0.0, 0.0]), 1)]);
+        acc.merge(&[(GradView::Dense(&[0.0, 6.0, 0.0, 0.0]), 3)]);
+        assert_eq!(acc.weighted_average(), vec![0.25, 1.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_batch_and_empty_accumulator() {
+        let mut acc = ShardedAccumulator::new(5, 2);
+        acc.merge(&[]);
+        assert!(acc.is_empty());
+        assert_eq!(acc.weighted_average(), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn reset_reuses_arena() {
+        let mut acc = ShardedAccumulator::new(4, 2);
+        acc.merge(&[(GradView::Dense(&[1.0; 4]), 1)]);
+        acc.reset();
+        assert!(acc.is_empty());
+        assert_eq!(acc.weighted_average(), vec![0.0; 4]);
+        assert_eq!(acc.n_shards(), 2, "reset keeps the shard layout");
+    }
+
+    #[test]
+    #[should_panic(expected = "sparse gradient index 8 out of bounds for dim 4")]
+    fn corrupt_sparse_index_panics_before_merge() {
+        let mut acc = ShardedAccumulator::new(4, 2);
+        acc.merge(&[(GradView::Sparse(&[(0, 1.0), (8, 1.0)]), 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not sorted by index")]
+    fn unsorted_sparse_entries_panic() {
+        let mut acc = ShardedAccumulator::new(4, 2);
+        acc.merge(&[(GradView::Sparse(&[(2, 1.0), (1, 1.0)]), 1)]);
+    }
+
+    #[test]
+    fn validation_happens_before_any_state_change() {
+        let mut acc = ShardedAccumulator::new(4, 2);
+        acc.merge(&[(GradView::Dense(&[1.0; 4]), 2)]);
+        let before = acc.weighted_average();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            acc.merge(&[
+                (GradView::Dense(&[2.0; 4]), 1),
+                (GradView::Sparse(&[(100, 1.0)]), 1),
+            ]);
+        }));
+        assert!(res.is_err());
+        assert_eq!(acc.weighted_average(), before);
+        assert_eq!(acc.examples(), 2);
+        assert_eq!(acc.contributions(), 1);
+    }
+}

@@ -2,14 +2,33 @@
 //!
 //! These loops are the master's per-iteration cost (the paper's latency
 //! knee at 64 nodes comes from the master serially processing gradient
-//! messages, §3.5).  They are written as straight slices-of-f32 loops that
-//! LLVM auto-vectorizes; `benches/micro.rs` tracks ns/param.
+//! messages, §3.5).  The elementwise kernels are written over fixed-width
+//! chunks (`LANES` f32 per step) so the inner loop has a compile-time trip
+//! count — LLVM turns each chunk into straight-line SIMD with no
+//! per-element bounds checks, where the old `zip` loops vectorized only
+//! when the optimizer could prove the slices disjoint.  `benches/micro.rs`
+//! tracks ns/param and emits the `MasterModel.merge_ns_per_param`
+//! calibration (`BENCH_reduce.json`).
+//!
+//! All kernels are elementwise, so chunking never reorders any individual
+//! float operation: results are bitwise-identical to the naive loops (the
+//! `dot` reduction keeps a single f64 accumulator for the same reason).
+
+/// Unroll width for the elementwise kernels (one AVX2 f32 register).
+const LANES: usize = 8;
 
 /// y += a * x  (the gradient-merge kernel).
 #[inline]
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in yc.by_ref().zip(xc.by_ref()) {
+        for (yi, xi) in yb.iter_mut().zip(xb) {
+            *yi += a * *xi;
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yi += a * *xi;
     }
 }
@@ -18,7 +37,14 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
 #[inline]
 pub fn add_assign(y: &mut [f32], x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yb, xb) in yc.by_ref().zip(xc.by_ref()) {
+        for (yi, xi) in yb.iter_mut().zip(xb) {
+            *yi += *xi;
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yi += *xi;
     }
 }
@@ -26,8 +52,30 @@ pub fn add_assign(y: &mut [f32], x: &[f32]) {
 /// x *= a.
 #[inline]
 pub fn scale(x: &mut [f32], a: f32) {
-    for xi in x.iter_mut() {
+    let mut xc = x.chunks_exact_mut(LANES);
+    for xb in xc.by_ref() {
+        for xi in xb.iter_mut() {
+            *xi *= a;
+        }
+    }
+    for xi in xc.into_remainder() {
         *xi *= a;
+    }
+}
+
+/// out = a * x  (scaled copy — the weighted-average write-out kernel).
+#[inline]
+pub fn scaled_copy(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ob, xb) in oc.by_ref().zip(xc.by_ref()) {
+        for (oi, xi) in ob.iter_mut().zip(xb) {
+            *oi = a * *xi;
+        }
+    }
+    for (oi, xi) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *oi = a * *xi;
     }
 }
 
@@ -55,6 +103,10 @@ pub fn l2_norm(x: &[f32]) -> f64 {
 /// (Σ_k g_k) / (Σ_k n_k) — heterogeneous batch counts are weighted
 /// correctly for free.  The buffer is reused across iterations (zero
 /// allocation on the hot path).
+///
+/// This is the single-threaded reference merge; the production reduce path
+/// is [`super::ShardedAccumulator`], which is bitwise-equivalent given the
+/// same submission order (pinned by `tests/prop_reduce.rs`).
 #[derive(Debug, Clone)]
 pub struct GradAccumulator {
     sum: Vec<f32>,
@@ -86,7 +138,16 @@ impl GradAccumulator {
     /// Merge a *sparse* partial gradient (index, value) pairs — the paper's
     /// §5 "partial communication of gradients" mitigation.  Values are sums
     /// over the worker's examples, same convention as `add`.
+    ///
+    /// Indices are validated against `dim()` *before* any entry is merged:
+    /// a corrupt message panics with a descriptive error and leaves the
+    /// accumulator untouched instead of dying half-merged on a bare
+    /// index-out-of-bounds.
     pub fn add_sparse(&mut self, entries: &[(u32, f32)], examples: u64) {
+        let dim = self.sum.len();
+        if let Some(&(i, _)) = entries.iter().find(|&&(i, _)| i as usize >= dim) {
+            panic!("sparse gradient index {i} out of bounds for dim {dim}");
+        }
         for &(i, v) in entries {
             self.sum[i as usize] += v;
         }
@@ -108,10 +169,8 @@ impl GradAccumulator {
 
     /// The weighted-average gradient; empty accumulator yields zeros.
     pub fn weighted_average(&self) -> Vec<f32> {
-        let mut avg = self.sum.clone();
-        if self.count > 0 {
-            scale(&mut avg, 1.0 / self.count as f32);
-        }
+        let mut avg = vec![0.0; self.sum.len()];
+        self.weighted_average_into(&mut avg);
         avg
     }
 
@@ -123,14 +182,12 @@ impl GradAccumulator {
         } else {
             0.0
         };
-        for (o, s) in out.iter_mut().zip(self.sum.iter()) {
-            *o = *s * inv;
-        }
+        scaled_copy(out, inv, &self.sum);
     }
 
     /// Reset for the next iteration without freeing the buffer.
     pub fn reset(&mut self) {
-        self.sum.iter_mut().for_each(|x| *x = 0.0);
+        self.sum.fill(0.0);
         self.count = 0;
         self.contributions = 0;
     }
@@ -145,6 +202,29 @@ mod tests {
         let mut y = vec![1.0, 2.0];
         axpy(&mut y, 2.0, &[10.0, 20.0]);
         assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn kernels_cover_chunk_and_remainder() {
+        // Lengths straddling the unroll width: chunk body + remainder tail.
+        for n in [0, 1, 7, 8, 9, 16, 27] {
+            let x: Vec<f32> = (0..n).map(|i| i as f32 + 0.5).collect();
+            let mut y = vec![1.0f32; n];
+            axpy(&mut y, 2.0, &x);
+            for (i, yi) in y.iter().enumerate() {
+                assert_eq!(*yi, 1.0 + 2.0 * (i as f32 + 0.5), "axpy n={n} i={i}");
+            }
+            let mut y = vec![1.0f32; n];
+            add_assign(&mut y, &x);
+            for (i, yi) in y.iter().enumerate() {
+                assert_eq!(*yi, 1.0 + i as f32 + 0.5, "add_assign n={n} i={i}");
+            }
+            let mut s = x.clone();
+            scale(&mut s, 3.0);
+            let mut c = vec![0.0f32; n];
+            scaled_copy(&mut c, 3.0, &x);
+            assert_eq!(s, c, "scale vs scaled_copy n={n}");
+        }
     }
 
     #[test]
@@ -203,5 +283,28 @@ mod tests {
     fn dim_mismatch_panics() {
         let mut acc = GradAccumulator::new(2);
         acc.add(&[1.0], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "sparse gradient index 9 out of bounds for dim 4")]
+    fn corrupt_sparse_index_panics_descriptively() {
+        let mut acc = GradAccumulator::new(4);
+        acc.add_sparse(&[(1, 2.0), (9, 1.0)], 1);
+    }
+
+    #[test]
+    fn corrupt_sparse_message_leaves_accumulator_untouched() {
+        // Validation happens before any entry is merged: catching the
+        // panic must find the accumulator exactly as it was.
+        let mut acc = GradAccumulator::new(4);
+        acc.add(&[1.0, 2.0, 3.0, 4.0], 2);
+        let before = acc.weighted_average();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            acc.add_sparse(&[(0, 5.0), (100, 1.0)], 1);
+        }));
+        assert!(res.is_err());
+        assert_eq!(acc.weighted_average(), before);
+        assert_eq!(acc.examples(), 2);
+        assert_eq!(acc.contributions(), 1);
     }
 }

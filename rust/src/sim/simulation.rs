@@ -7,7 +7,7 @@ use anyhow::Result;
 use crate::allocation::WorkerId;
 use crate::client::{DeviceClass, SimClient};
 use crate::coordinator::{Master, MasterConfig, Payload, ReducePolicy, Submission};
-use crate::data::{DataServer, Sample, SynthSpec, Synthesizer};
+use crate::data::{DataServer, SharedSample, SynthSpec, Synthesizer};
 use crate::model::ModelSpec;
 use crate::rng::Pcg32;
 use crate::runtime::{BatchBuilder, Compute};
@@ -81,7 +81,9 @@ pub struct Simulation<'c> {
     master: Master,
     clients: BTreeMap<WorkerId, SimClient>,
     server: DataServer,
-    test_set: Vec<Sample>,
+    /// Tracker-mode test corpus, pre-shared for batch assembly (built
+    /// once — evaluations never re-clone samples).
+    test_set: Vec<SharedSample>,
     batch: BatchBuilder,
     rng: Pcg32,
     next_worker_id: WorkerId,
@@ -104,12 +106,12 @@ impl<'c> Simulation<'c> {
         let mut server = DataServer::new();
         server.upload_samples(synth.corpus(cfg.train_size));
         // Test corpus: disjoint sample indices (offset stream).
-        let test_set: Vec<Sample> = (0..cfg.test_size)
+        let test_set: Vec<SharedSample> = (0..cfg.test_size)
             .map(|i| {
-                synth.sample(
+                std::sync::Arc::new(synth.sample(
                     (i % synth_spec.classes as usize) as u8,
                     (cfg.train_size + i) as u64,
-                )
+                ))
             })
             .collect();
 
@@ -232,20 +234,24 @@ impl<'c> Simulation<'c> {
             }
         }
 
-        // -- map step: every trainer computes under its scheduled budget
-        let params = self.master.params().to_vec();
+        // -- map step: every trainer computes under its scheduled budget.
+        //    The broadcast parameters are borrowed straight from the
+        //    master (no per-iteration copy), and dense gradients move
+        //    into Arc payloads unchanged — the ingest path never clones
+        //    a gradient.
+        let params = self.master.params();
         let policy = self.master.config().policy;
         let mut submissions = Vec::with_capacity(self.clients.len());
         for (id, client) in self.clients.iter_mut() {
             let budget_ms = self.master.work_budget_ms(*id);
-            let Some(out) = client.train(self.compute, &self.spec, &params, budget_ms)? else {
+            let Some(out) = client.train(self.compute, &self.spec, params, budget_ms)? else {
                 continue;
             };
             let payload = match policy {
                 ReducePolicy::PartialSync { keep_fraction } => {
                     Payload::sparsify(&out.grad_sum, keep_fraction)
                 }
-                _ => Payload::Dense(out.grad_sum),
+                _ => Payload::dense(out.grad_sum),
             };
             let bytes = payload.bytes() + 96; // envelope: ids, counts, framing
             let uplink = client.link.sample_latency_ms(&mut client.rng)
@@ -289,13 +295,8 @@ impl<'c> Simulation<'c> {
     /// Tracker-mode evaluation: full pass over the test set (wrap-around
     /// padding to whole microbatches).
     pub fn evaluate_test_error(&mut self) -> Result<f64> {
-        let params = self.master.params().to_vec();
-        let shared: Vec<crate::data::SharedSample> = self
-            .test_set
-            .iter()
-            .map(|s| std::sync::Arc::new(s.clone()))
-            .collect();
-        if shared.is_empty() {
+        let params = self.master.params();
+        if self.test_set.is_empty() {
             return Ok(f64::NAN);
         }
         let bsz = self.batch.batch_size();
@@ -304,11 +305,11 @@ impl<'c> Simulation<'c> {
         let mut total = 0usize;
         let mut cursor = 0usize;
         for _ in 0..n_batches {
-            cursor = self.batch.fill_cyclic(&shared, cursor);
+            cursor = self.batch.fill_cyclic(&self.test_set, cursor);
             let out = self.compute.eval_batch(
                 &self.spec.name,
                 bsz,
-                &params,
+                params,
                 self.batch.images(),
                 self.batch.labels(),
             )?;

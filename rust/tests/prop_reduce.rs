@@ -1,0 +1,172 @@
+//! Reduce-equivalence property tests: the parameter-sharded merge must be
+//! *bitwise-identical* to the single-threaded reference for any shard
+//! count, payload kind, and submission order — determinism is what makes
+//! the multi-threaded reduce a pure perf change (DESIGN.md).
+
+use mlitb::coordinator::Payload;
+use mlitb::params::{GradAccumulator, GradView, ShardedAccumulator};
+use mlitb::rng::Pcg32;
+use mlitb::testing::{check, gen};
+
+/// One random iteration's worth of submissions: (gradient, examples).
+fn gen_submissions(rng: &mut Pcg32, dim: usize, n: usize) -> Vec<(Vec<f32>, u64)> {
+    (0..n)
+        .map(|_| {
+            let g = gen::f32_vec(rng, dim);
+            let examples = gen::usize_in(rng, 0, 40) as u64;
+            (g, examples)
+        })
+        .collect()
+}
+
+/// Single-threaded reference: dense adds in submission order.
+fn reference_average(dim: usize, subs: &[(Vec<f32>, u64)]) -> Vec<f32> {
+    let mut acc = GradAccumulator::new(dim);
+    for (g, n) in subs {
+        acc.add(g, *n);
+    }
+    acc.weighted_average()
+}
+
+#[test]
+fn dense_sparse_and_sharded_averages_are_bitwise_identical() {
+    check("reduce dense/sparse/sharded equivalence", |rng| {
+        let dim = gen::usize_in(rng, 1, 257);
+        let n = gen::usize_in(rng, 0, 7);
+        let subs = gen_submissions(rng, dim, n);
+        let want = reference_average(dim, &subs);
+
+        // Sparse with keep-everything carries all coordinates in index
+        // order — the add order per element matches the dense reference.
+        let sparse_payloads: Vec<Payload> = subs
+            .iter()
+            .map(|(g, _)| Payload::sparsify(g, 1.0))
+            .collect();
+        let mut sparse_acc = GradAccumulator::new(dim);
+        for (p, (_, examples)) in sparse_payloads.iter().zip(&subs) {
+            let Payload::Sparse(entries) = p else { panic!() };
+            sparse_acc.add_sparse(entries, *examples);
+        }
+        if sparse_acc.weighted_average() != want {
+            return Err("sparse(keep=1.0) differs from dense reference".into());
+        }
+
+        for shards in [1usize, 2, 4, 7] {
+            let mut acc = ShardedAccumulator::new(dim, shards);
+            let batch: Vec<(GradView<'_>, u64)> = subs
+                .iter()
+                .map(|(g, examples)| (GradView::Dense(g.as_slice()), *examples))
+                .collect();
+            acc.merge(&batch);
+            if acc.weighted_average() != want {
+                return Err(format!("sharded S={shards} dense differs (dim={dim}, n={n})"));
+            }
+
+            let mut acc = ShardedAccumulator::new(dim, shards);
+            let batch: Vec<(GradView<'_>, u64)> = sparse_payloads
+                .iter()
+                .zip(&subs)
+                .map(|(p, (_, examples))| (p.as_view(), *examples))
+                .collect();
+            acc.merge(&batch);
+            if acc.weighted_average() != want {
+                return Err(format!("sharded S={shards} sparse differs (dim={dim}, n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partial_sparse_payloads_route_identically_across_shard_counts() {
+    // Top-k payloads (keep < 1) aren't equal to the dense reduce, but all
+    // shard counts must agree with the single-threaded sparse reference.
+    check("partial sparse shard-routing equivalence", |rng| {
+        let dim = gen::usize_in(rng, 2, 300);
+        let n = gen::usize_in(rng, 1, 6);
+        let subs = gen_submissions(rng, dim, n);
+        let keep = 0.05 + 0.9 * rng.gen_f64();
+        let payloads: Vec<Payload> = subs
+            .iter()
+            .map(|(g, _)| Payload::sparsify(g, keep))
+            .collect();
+
+        let mut reference = GradAccumulator::new(dim);
+        for (p, (_, examples)) in payloads.iter().zip(&subs) {
+            let Payload::Sparse(entries) = p else { panic!() };
+            reference.add_sparse(entries, *examples);
+        }
+        let want = reference.weighted_average();
+
+        for shards in [1usize, 2, 4, 7] {
+            let mut acc = ShardedAccumulator::new(dim, shards);
+            let batch: Vec<(GradView<'_>, u64)> = payloads
+                .iter()
+                .zip(&subs)
+                .map(|(p, (_, examples))| (p.as_view(), *examples))
+                .collect();
+            acc.merge(&batch);
+            if acc.weighted_average() != want {
+                return Err(format!(
+                    "S={shards} disagrees with sparse reference (dim={dim}, keep={keep:.3})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_and_single_worker_cases() {
+    for shards in [1usize, 2, 4, 7] {
+        // Empty iteration: zeros, no contributions.
+        let mut acc = ShardedAccumulator::new(10, shards);
+        acc.merge(&[]);
+        assert!(acc.is_empty());
+        assert_eq!(acc.weighted_average(), vec![0.0; 10]);
+
+        // Single worker: average = grad / examples.
+        let g: Vec<f32> = (0..10).map(|i| i as f32 - 4.5).collect();
+        let mut acc = ShardedAccumulator::new(10, shards);
+        acc.merge(&[(GradView::Dense(&g), 2)]);
+        let want: Vec<f32> = g.iter().map(|x| x * 0.5).collect();
+        assert_eq!(acc.weighted_average(), want, "S={shards}");
+    }
+}
+
+#[test]
+fn non_dividing_shard_counts_cover_every_parameter() {
+    // dim not divisible by S: boundaries still partition exactly.
+    for (dim, shards) in [(11usize, 4usize), (13, 7), (5, 2), (7, 7), (6, 4)] {
+        let g = vec![1.0f32; dim];
+        let mut acc = ShardedAccumulator::new(dim, shards);
+        acc.merge(&[(GradView::Dense(&g), 1)]);
+        assert_eq!(
+            acc.weighted_average(),
+            vec![1.0; dim],
+            "dim={dim} S={shards}"
+        );
+        let bounds = acc.shard_bounds();
+        assert_eq!(*bounds.first().unwrap(), 0);
+        assert_eq!(*bounds.last().unwrap(), dim);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "{bounds:?}");
+    }
+}
+
+#[test]
+fn nan_gradients_flow_through_sparsify_and_merge_without_panicking() {
+    // A diverged worker (NaN coordinates) must not kill the reduce path:
+    // sparsify selects without panicking and the merge propagates the NaN.
+    let mut g = vec![0.5f32; 64];
+    g[7] = f32::NAN;
+    g[33] = f32::INFINITY;
+    let payload = Payload::sparsify(&g, 0.25);
+    let Payload::Sparse(entries) = &payload else {
+        panic!()
+    };
+    assert!(entries.iter().any(|(_, v)| v.is_nan()));
+    let mut acc = ShardedAccumulator::new(64, 4);
+    acc.merge(&[(payload.as_view(), 1)]);
+    let avg = acc.weighted_average();
+    assert!(avg[7].is_nan(), "NaN must surface at the master");
+}
