@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Validate a Chrome/Perfetto trace-event JSON file emitted by `mlitb --trace`.
+
+Stdlib-only schema + invariant checker, used as the CI gate on the cosim
+smoke's trace artifact:
+
+  python3 python/tools/check_trace.py cosim_trace.json
+
+Checks, in order:
+  * document shape: ``displayTimeUnit == "ms"``, non-empty ``traceEvents``
+  * per event: known phase, integer pid/tid, numeric ts >= 0 (except
+    metadata), spans carry a non-negative ``dur``
+  * nestable-async balance: every ``b`` has a matching ``e`` per
+    (pid, cat, id), ids open at most once at a time
+  * flows: every ``f`` names an earlier ``s`` with the same (cat, id) and
+    carries binding point ``bp == "e"``
+  * plane coverage: at least one train-iteration span, one request
+    lifecycle, and one publication span are present (the cosim smoke
+    exercises all three planes)
+
+Exit code 0 on success; prints the first failure and exits 1 otherwise.
+"""
+
+import json
+import sys
+
+PHASES = {"X", "b", "e", "i", "s", "f", "M"}
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"displayTimeUnit must be 'ms', got {doc.get('displayTimeUnit')!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty array")
+
+    open_async = {}  # (pid, cat, id) -> open count
+    flow_started = set()  # (cat, id)
+    seen = {"train_iteration": False, "request": False, "publish": False}
+
+    for i, e in enumerate(events):
+        where = f"event {i}"
+        ph = e.get("ph")
+        if ph not in PHASES:
+            fail(f"{where}: unknown phase {ph!r}")
+        if not isinstance(e.get("pid"), (int, float)) or e["pid"] != int(e["pid"]):
+            fail(f"{where}: pid must be an integer, got {e.get('pid')!r}")
+        if not isinstance(e.get("tid"), (int, float)) or e["tid"] != int(e["tid"]):
+            fail(f"{where}: tid must be an integer, got {e.get('tid')!r}")
+        if ph == "M":
+            if e.get("name") not in ("process_name", "thread_name"):
+                fail(f"{where}: unexpected metadata {e.get('name')!r}")
+            continue
+
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"{where}: ts must be a number >= 0, got {ts!r}")
+        cat, name = e.get("cat"), e.get("name")
+        if not cat or not name:
+            fail(f"{where}: data events need cat and name")
+
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"{where}: span dur must be a number >= 0, got {dur!r}")
+            if cat == "train" and name == "iteration":
+                seen["train_iteration"] = True
+            if cat == "publish" and name == "publish":
+                seen["publish"] = True
+        elif ph in ("b", "e"):
+            key = (int(e["pid"]), cat, e.get("id"))
+            if key[2] is None:
+                fail(f"{where}: async event without id")
+            if ph == "b":
+                if open_async.get(key, 0) != 0:
+                    fail(f"{where}: async id {key} opened twice")
+                open_async[key] = 1
+            else:
+                if open_async.get(key, 0) != 1:
+                    fail(f"{where}: async end without open begin for {key}")
+                open_async[key] = 0
+            if name == "request":
+                seen["request"] = True
+        elif ph == "s":
+            flow_started.add((cat, e.get("id")))
+        elif ph == "f":
+            if e.get("bp") != "e":
+                fail(f"{where}: flow finish must bind with bp='e'")
+            if (cat, e.get("id")) not in flow_started:
+                fail(f"{where}: flow finish without a start for (cat={cat}, id={e.get('id')})")
+        elif ph == "i":
+            if e.get("s") != "t":
+                fail(f"{where}: instant scope must be 't'")
+
+    dangling = [k for k, n in open_async.items() if n != 0]
+    if dangling:
+        fail(f"{len(dangling)} async span(s) never closed, e.g. {dangling[0]}")
+    for plane, ok in seen.items():
+        if not ok:
+            fail(f"no {plane} events — a cosim trace must cover all planes")
+
+    n = len(events)
+    print(f"check_trace: OK: {path} ({n} events, {len(flow_started)} flow(s))")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print("usage: check_trace.py <trace.json>", file=sys.stderr)
+        sys.exit(2)
+    check(sys.argv[1])

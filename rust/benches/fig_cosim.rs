@@ -64,6 +64,7 @@ fn config(iters: u64, shards: usize, publish_every: u64) -> CosimConfig {
         drained_shards: Vec::new(),
         cache_capacity: 2_048,
         response_bytes: 256,
+        keep_log: false,
     };
     CosimConfig {
         projects: vec![CosimProject {

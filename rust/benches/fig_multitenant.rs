@@ -67,6 +67,7 @@ fn serve_cfg(hot_rps: f64, cold_rps: f64, duration_s: f64, fair_share: bool) -> 
         drained_shards: Vec::new(),
         cache_capacity: 0,
         response_bytes: 256,
+        keep_log: false,
     }
 }
 
@@ -126,6 +127,7 @@ fn cosim_cfg(iters: u64, egress_bytes_per_min: f64) -> CosimConfig {
             drained_shards: Vec::new(),
             cache_capacity: 1_024,
             response_bytes: 256,
+            keep_log: false,
         },
         egress_bytes_per_min,
         measure_delta: true,

@@ -75,6 +75,7 @@ fn run(
         drained_shards: Vec::new(),
         cache_capacity: cache,
         response_bytes: 256,
+        keep_log: true,
     };
     let mut plane = ControlPlane::single(spec.clone());
     plane

@@ -82,6 +82,7 @@ fn main() {
                 drained_shards: Vec::new(),
                 cache_capacity: 2048,
                 response_bytes: 256,
+                keep_log: false,
             };
             let mut plane = ControlPlane::single(spec.clone());
             plane

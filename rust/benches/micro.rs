@@ -29,6 +29,7 @@ use mlitb::model::{init_params, Manifest, ResearchClosure};
 use mlitb::params::{AdaGrad, GradAccumulator, GradView, Optimizer, ShardedAccumulator};
 use mlitb::rng::Pcg32;
 use mlitb::runtime::{BatchBuilder, Engine};
+use mlitb::trace::{ArgValue, TraceHandle, Track};
 
 /// Parameter count for the reduce section: ≥100k, power of two, roughly
 /// the paper's "small neural network" gradient (~0.5 MB of f32).
@@ -146,6 +147,59 @@ fn reduce_bench(check: bool, json_path: &str) {
     });
     println!("{}", r.report());
 
+    // Tracer on the merge hot path: the master emits one ingest span per
+    // merged submission, so the realistic density is REDUCE_SUBS span
+    // attempts per merge.  The disabled handle must be within noise; the
+    // recording handle's per-event cost is reported for context.
+    let mut acc_t = ShardedAccumulator::new(REDUCE_DIM, 4);
+    let batch_t: Vec<(GradView<'_>, u64)> =
+        grads.iter().map(|g| (GradView::Dense(g.as_ref()), 32)).collect();
+    // Check mode still needs enough iterations for a stable median here —
+    // the assertion below compares two timings of the same kernel.
+    let (t_warm, t_iters) = if check { (2, 12) } else { (warm, iters) };
+    let emit = |trace: &TraceHandle| {
+        let track = Track::master(0);
+        for k in 0..REDUCE_SUBS as u64 {
+            trace.span(
+                track,
+                "train",
+                "ingest",
+                k as f64,
+                (k + 1) as f64,
+                &[("bytes", ArgValue::U64(64))],
+            );
+        }
+    };
+    let r_plain = bench("merge: S=4, no tracer", t_warm, t_iters, || {
+        acc_t.reset();
+        acc_t.merge(&batch_t);
+    });
+    let off = TraceHandle::off();
+    let r_off = bench("merge: S=4, tracer disabled", t_warm, t_iters, || {
+        acc_t.reset();
+        acc_t.merge(&batch_t);
+        emit(&off);
+    });
+    let on = TraceHandle::with_capacity(1 << 16);
+    let r_on = bench("merge: S=4, tracer recording", t_warm, t_iters, || {
+        acc_t.reset();
+        acc_t.merge(&batch_t);
+        emit(&on);
+    });
+    println!("{}\n{}\n{}", r_plain.report(), r_off.report(), r_on.report());
+    let tracer_off_overhead_pct = (r_off.median_ns() / r_plain.median_ns() - 1.0) * 100.0;
+    let tracer_on_overhead_pct = (r_on.median_ns() / r_plain.median_ns() - 1.0) * 100.0;
+    println!(
+        "    -> tracer disabled: {tracer_off_overhead_pct:+.2}% vs plain; \
+         recording: {tracer_on_overhead_pct:+.2}%"
+    );
+    if check {
+        assert!(
+            tracer_off_overhead_pct < 2.0,
+            "disabled tracer must be within noise (<2%), saw {tracer_off_overhead_pct:.2}%"
+        );
+    }
+
     let doc = json::object(vec![
         ("params", Value::Number(REDUCE_DIM as f64)),
         ("submissions", Value::Number(REDUCE_SUBS as f64)),
@@ -154,6 +208,8 @@ fn reduce_bench(check: bool, json_path: &str) {
         // What `--merge-ns` on the sweeps should be fed on this machine.
         ("merge_ns_per_param_calibration", Value::Number(single_np)),
         ("best_sharded_speedup", Value::Number(best_speedup)),
+        ("tracer_off_overhead_pct", Value::Number(tracer_off_overhead_pct)),
+        ("tracer_on_overhead_pct", Value::Number(tracer_on_overhead_pct)),
         ("sharded", Value::Array(sharded_rows)),
         ("worker_sweep", Value::Array(worker_rows)),
     ]);

@@ -69,6 +69,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             drained_shards: Vec::new(),
             cache_capacity: 512,
             response_bytes: 256,
+            keep_log: false,
         },
         // ~51 KB per snapshot at 2 MB/min: transfers take ~1.5 s of the
         // 2 s iteration window — activation visibly trails publication.

@@ -73,6 +73,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         drained_shards: Vec::new(),
         cache_capacity: 512,
         response_bytes: 256,
+        keep_log: false,
     };
     let mut sim = ServeSim::new(cfg.clone(), plane.clone(), &mut compute as &mut dyn Compute);
     let report = sim.run()?;

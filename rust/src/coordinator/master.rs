@@ -4,6 +4,7 @@ use crate::allocation::{Allocator, Delta, WorkerId};
 use crate::metrics::{IterationRecord, Timeline};
 use crate::netsim::MasterModel;
 use crate::params::{GradView, Optimizer, OptimizerKind, ShardedAccumulator};
+use crate::trace::{ArgValue, TraceHandle, Track};
 
 use super::{LatencyMonitor, ReducePolicy, Submission};
 
@@ -94,6 +95,10 @@ pub struct Master {
     carryover: Vec<Submission>,
     /// Test error reported by trackers since the last iteration record.
     pending_test_error: Option<f64>,
+    /// Trace plane (off by default); `trace_pid` keys this master's
+    /// tracks — the cosim assigns each project its own pid.
+    trace: TraceHandle,
+    trace_pid: u32,
 }
 
 impl Master {
@@ -115,8 +120,17 @@ impl Master {
             timeline: Timeline::new(),
             carryover: Vec::new(),
             pending_test_error: None,
+            trace: TraceHandle::off(),
+            trace_pid: 0,
             cfg,
         }
+    }
+
+    /// Attach a trace handle; `pid` names this master's project on the
+    /// shared timeline.
+    pub fn set_trace(&mut self, trace: TraceHandle, pid: u32) {
+        self.trace = trace;
+        self.trace_pid = pid;
     }
 
     // ------------------------------------------------------------ access
@@ -212,6 +226,7 @@ impl Master {
     /// advances virtual time.
     pub fn finish_iteration(&mut self, submissions: Vec<Submission>) -> IterationOutcome {
         let iter_ms = self.iter_ms();
+        let t0 = self.t_virtual_ms;
 
         // ---- ingest: compute completion time per submission (step c)
         let mut subs = std::mem::take(&mut self.carryover);
@@ -238,6 +253,32 @@ impl Master {
             }
         }
 
+        // Ingest spans: master-side drain of each merged submission, on
+        // the submitting worker's track (emitted before the late-requeue
+        // below mutates `subs`).
+        if self.trace.is_on() {
+            for &i in &merged_idx {
+                let (overhead_ms, ingest_ms, merge_ms) = self
+                    .cfg
+                    .master_model
+                    .service_breakdown(subs[i].bytes, self.cfg.param_count);
+                self.trace.span(
+                    Track::worker(self.trace_pid, subs[i].worker as u32),
+                    "train",
+                    "ingest",
+                    t0 + arrivals[i].0,
+                    t0 + completions[i],
+                    &[
+                        ("bytes", ArgValue::U64(subs[i].bytes)),
+                        ("carried", ArgValue::U64(u64::from(i < carried))),
+                        ("overhead_ms", ArgValue::F64(overhead_ms)),
+                        ("wire_ms", ArgValue::F64(ingest_ms)),
+                        ("merge_ms", ArgValue::F64(merge_ms)),
+                    ],
+                );
+            }
+        }
+
         // ---- reduce (step c): batch the merged submissions' gradient
         // views (no copies — dense payloads stay behind their Arc) and
         // merge them sharded across threads; bitwise-identical to the
@@ -258,7 +299,8 @@ impl Master {
         }
         self.accumulator.merge(&batch);
         drop(batch);
-        if !self.accumulator.is_empty() {
+        let stepped = !self.accumulator.is_empty();
+        if stepped {
             self.accumulator.weighted_average_into(&mut self.avg_scratch);
             self.optimizer.step(&mut self.params, &self.avg_scratch);
         }
@@ -322,6 +364,59 @@ impl Master {
         };
         self.t_virtual_ms += wall_ms;
         self.iteration += 1;
+
+        // Master-track spans for the iteration: the barrier itself, the
+        // sharded reduce (bounded by the slowest merged drain), the
+        // optimizer step, and the parameter broadcast.
+        if self.trace.is_on() {
+            let master = Track::master(self.trace_pid);
+            self.trace.span(
+                master,
+                "train",
+                "iteration",
+                t0,
+                t0 + wall_ms,
+                &[
+                    ("iteration", ArgValue::U64(self.iteration - 1)),
+                    ("workers", ArgValue::U64(merged_idx.len() as u64)),
+                    ("vectors", ArgValue::U64(vectors)),
+                ],
+            );
+            if slowest > 0.0 {
+                self.trace.span(
+                    master,
+                    "train",
+                    "reduce",
+                    t0,
+                    t0 + slowest,
+                    &[
+                        ("messages", ArgValue::U64(merged_idx.len() as u64)),
+                        ("bytes_up", ArgValue::U64(bytes_up)),
+                    ],
+                );
+            }
+            if stepped {
+                self.trace.instant(
+                    master,
+                    "train",
+                    "optimizer-step",
+                    t0 + slowest,
+                    &[("params", ArgValue::U64(self.cfg.param_count as u64))],
+                );
+            }
+            if bytes_down > 0 {
+                self.trace.instant(
+                    master,
+                    "train",
+                    "broadcast",
+                    t0 + wall_ms,
+                    &[
+                        ("bytes", ArgValue::U64(bytes_down)),
+                        ("clients", ArgValue::U64(n_clients)),
+                    ],
+                );
+            }
+        }
 
         let mean_latency_ms = if latencies.is_empty() {
             0.0
@@ -416,6 +511,35 @@ mod tests {
         // late gradient merges next iteration even with no new submissions
         let out2 = m.finish_iteration(vec![]);
         assert_eq!(out2.vectors, 1);
+    }
+
+    #[test]
+    fn traced_iteration_emits_master_and_worker_spans() {
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]);
+        let trace = TraceHandle::recording();
+        m.set_trace(trace.clone(), 7);
+        m.register_data(10);
+        m.worker_join(1);
+        m.finish_iteration(vec![sub(1, 1000.0, vec![1.0, 1.0], 1)]);
+        let evs = trace.snapshot();
+        assert!(evs
+            .iter()
+            .any(|e| e.name == "iteration" && e.track == Track::master(7)));
+        assert!(evs
+            .iter()
+            .any(|e| e.name == "ingest" && e.track == Track::worker(7, 1)));
+        assert!(evs.iter().any(|e| e.name == "reduce"));
+        assert!(evs.iter().any(|e| e.name == "optimizer-step"));
+        assert!(evs.iter().any(|e| e.name == "broadcast"));
+        // Second iteration starts where the first ended: spans never
+        // run backwards on the virtual clock.
+        let t_end = m.now_ms();
+        m.finish_iteration(vec![sub(1, 500.0, vec![1.0, 1.0], 1)]);
+        assert!(trace
+            .snapshot()
+            .iter()
+            .filter(|e| e.seq >= evs.len() as u64)
+            .all(|e| e.ts_ms >= t_end - 1e-9));
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::model::ModelSpec;
 use crate::runtime::Compute;
 use crate::serve::{ControlPlane, ModelVersion, ProjectId, ServeConfig, ServeEngine, ServeReport};
 use crate::sim::{RunReport, SimConfig, Simulation};
+use crate::trace::{ArgValue, TraceHandle, Track};
 
 use super::probe::StalenessProbe;
 use super::publish::{
@@ -165,6 +166,7 @@ fn pump_through(
     horizon: Option<f64>,
     compute: &mut dyn Compute,
     probe: &mut StalenessProbe,
+    trace: &TraceHandle,
 ) -> Result<()> {
     while pending
         .first()
@@ -178,6 +180,17 @@ fn pump_through(
             .map_err(|e| anyhow!(e))?;
         publications[t.record].activated_ms = t.done_ms;
         publications[t.record].activated_iteration = live_iter[t.version.project.index()];
+        // Activation instant + the causal flow arrow picked up by the
+        // first batch served on this version (see ServeEngine's flush).
+        let track = Track::publisher(t.version.project.as_u32());
+        trace.instant(
+            track,
+            "publish",
+            "activate",
+            t.done_ms,
+            &[("version", ArgValue::U64(t.version.version))],
+        );
+        trace.flow_start(track, "publish", "first-serve", t.version.flow_id(), t.done_ms);
     }
     engine.pump(horizon, plane, compute, probe)?;
     Ok(())
@@ -206,6 +219,19 @@ pub fn run_cosim<'c>(
     cfg: &CosimConfig,
     train_computes: Vec<&'c mut dyn Compute>,
     serve_compute: &mut dyn Compute,
+) -> Result<CosimReport> {
+    run_cosim_traced(cfg, train_computes, serve_compute, TraceHandle::off())
+}
+
+/// [`run_cosim`] with a trace plane attached: every project's training
+/// spans, the shared tier's request spans, and publication lifecycle
+/// spans (stage → egress → activate, with a flow arrow to the first
+/// batch served on the new version) land on one virtual-clock timeline.
+pub fn run_cosim_traced<'c>(
+    cfg: &CosimConfig,
+    train_computes: Vec<&'c mut dyn Compute>,
+    serve_compute: &mut dyn Compute,
+    trace: TraceHandle,
 ) -> Result<CosimReport> {
     let n = cfg.projects.len();
     if n == 0 {
@@ -243,6 +269,10 @@ pub fn run_cosim<'c>(
         .zip(train_computes)
         .map(|(p, compute)| Simulation::new(p.train.clone(), p.spec.clone(), compute))
         .collect();
+    engine.set_trace(trace.clone());
+    for (i, sim) in sims.iter_mut().enumerate() {
+        sim.set_trace(trace.clone(), pids[i].as_u32());
+    }
     let mut states: Vec<PublicationState> = vec![PublicationState::default(); n];
     let mut publications: Vec<PublicationRecord> = Vec::new();
     let mut pending: Vec<PendingTransfer> = Vec::new();
@@ -275,6 +305,21 @@ pub fn run_cosim<'c>(
             trigger: PublishTrigger::Initial,
             evicted: Vec::new(),
         });
+        // Initial snapshots activate instantly at t = 0; they still get
+        // a (zero-duration) publication span and a first-serve flow.
+        let track = Track::publisher(pid.as_u32());
+        trace.span(
+            track,
+            "publish",
+            "publish",
+            0.0,
+            0.0,
+            &[
+                ("version", ArgValue::U64(version.version)),
+                ("trigger", ArgValue::Str(PublishTrigger::Initial.name())),
+            ],
+        );
+        trace.flow_start(track, "publish", "first-serve", version.flow_id(), 0.0);
     }
 
     // Seed: one step per project establishes its first boundary.
@@ -301,6 +346,7 @@ pub fn run_cosim<'c>(
             Some(boundary_ms),
             serve_compute,
             &mut probe,
+            &trace,
         )?;
         boundaries[i] = None;
         let pid = pids[i];
@@ -331,6 +377,21 @@ pub fn run_cosim<'c>(
                 record: publications.len(),
             });
             pending.sort_by(|a, b| a.done_ms.total_cmp(&b.done_ms).then(a.version.cmp(&b.version)));
+            // Publication span: staging decision through egress transfer
+            // (activation is the instant pump_through emits at done_ms).
+            trace.span(
+                Track::publisher(pid.as_u32()),
+                "publish",
+                "publish",
+                boundary_ms,
+                done_ms,
+                &[
+                    ("version", ArgValue::U64(version.version)),
+                    ("bytes", ArgValue::U64(bytes)),
+                    ("iteration", ArgValue::U64(iteration)),
+                    ("trigger", ArgValue::Str(trigger.name())),
+                ],
+            );
             publications.push(PublicationRecord {
                 version,
                 iteration,
@@ -364,6 +425,7 @@ pub fn run_cosim<'c>(
         None,
         serve_compute,
         &mut probe,
+        &trace,
     )?;
     debug_assert_eq!(
         plane.total_readers(),
@@ -447,6 +509,7 @@ mod tests {
             drained_shards: Vec::new(),
             cache_capacity: 0,
             response_bytes: 256,
+            keep_log: true,
         };
         CosimConfig {
             projects: vec![CosimProject {
@@ -612,6 +675,52 @@ mod tests {
                 "request finished before its version activated: {r:?}"
             );
         }
+    }
+
+    #[test]
+    fn traced_cosim_links_publications_to_first_serve() {
+        use crate::trace::EventKind;
+        let config = cfg(4, 2);
+        let mut train_compute = ModeledCompute { param_count: 8 };
+        let mut serve_compute = ModeledCompute { param_count: 8 };
+        let trace = TraceHandle::recording();
+        let report = run_cosim_traced(
+            &config,
+            vec![&mut train_compute],
+            &mut serve_compute,
+            trace.clone(),
+        )
+        .unwrap();
+        assert!(report.serve.completed > 0);
+        let evs = trace.snapshot();
+        // All three planes landed on the one timeline.
+        assert!(evs.iter().any(|e| e.cat == "train" && e.name == "iteration"));
+        assert!(evs.iter().any(|e| e.cat == "serve" && e.name == "request"));
+        assert!(evs.iter().any(|e| e.cat == "publish" && e.name == "publish"));
+        assert!(evs.iter().any(|e| e.name == "activate"));
+        // Every flow arrow that started also finished (a batch really was
+        // served on each published version), and each id fires once.
+        let starts: Vec<u64> = evs
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::FlowStart { id } => Some(id),
+                _ => None,
+            })
+            .collect();
+        let finishes: Vec<u64> = evs
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::FlowFinish { id } => Some(id),
+                _ => None,
+            })
+            .collect();
+        assert!(!starts.is_empty());
+        assert!(!finishes.is_empty(), "no batch picked up a publication flow");
+        for id in &finishes {
+            assert!(starts.contains(id), "finish without start: {id}");
+        }
+        // Request spans are balanced after the tail drain.
+        assert_eq!(trace.open_async(), 0);
     }
 
     #[test]

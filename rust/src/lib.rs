@@ -34,8 +34,8 @@
 //!   multi-threaded reduce), [`runtime`] (PJRT engine),
 //!   [`serve`] (prediction serving), [`cosim`] (serve × train
 //!   co-simulation), plus the from-scratch substrates
-//!   [`json`], [`rng`], [`netsim`], [`metrics`], [`cli`], [`bench`],
-//!   [`testing`].
+//!   [`json`], [`rng`], [`netsim`], [`metrics`], [`trace`] (virtual-clock
+//!   span tracer with Perfetto export), [`cli`], [`bench`], [`testing`].
 
 pub mod allocation;
 pub mod bench;
@@ -54,6 +54,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod testing;
+pub mod trace;
 
 /// Crate version string used in research closures and CLI output.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

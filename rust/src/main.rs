@@ -12,11 +12,12 @@
 //!   mlitb train --model mnist_conv --nodes 4 --iters 50 --track-every 10
 //!   mlitb serve-sim --clients 16 --rate 8 --duration 20 --link mixed
 //!   mlitb cosim --publish-every 5 --shards 2
+//!   mlitb cosim --trace cosim_trace.json   # Perfetto timeline (+ .csv)
 
 use mlitb::cli::Args;
 use mlitb::client::DeviceClass;
 use mlitb::coordinator::ReducePolicy;
-use mlitb::cosim::{run_cosim, CosimConfig, CosimProject, PublicationPolicy};
+use mlitb::cosim::{run_cosim_traced, CosimConfig, CosimProject, PublicationPolicy};
 use mlitb::model::{init_params, Manifest, ModelSpec, ResearchClosure};
 use mlitb::netsim::{LinkProfile, ReduceMode};
 use mlitb::params::OptimizerKind;
@@ -27,6 +28,7 @@ use mlitb::serve::{
 };
 use mlitb::sim::SimConfig;
 use mlitb::sim::Simulation;
+use mlitb::trace::TraceHandle;
 
 fn main() {
     let args = Args::from_env();
@@ -63,23 +65,45 @@ fn print_help() {
                   --capacity N --seed N --save-closure <path> --csv <path>\n\
                   --master-processes N --reduce-mode message|sharded|sharded:<S>\n\
                   --merge-ns F --fanin-ns F  (reduce calibration overrides)\n\
+                  --trace <path>  (Perfetto trace-event JSON + <path>.csv)\n\
          scale:   --nodes-list 1,2,4,...  --iters N  (modeled compute)\n\
                   --reduce-mode message|sharded:<S> --merge-ns F --fanin-ns F\n\
          serve-sim: --model <name> --closure <path> --clients N --rate F\n\
                   --duration F --link lan|wifi|cellular|mixed --batch N\n\
                   --max-wait F --queue-depth N --cache N --input-pool N\n\
                   --shards N --router rr|jsq|affinity --no-coalesce\n\
-                  --autotune --jitter F --seed N --csv <path>\n\
+                  --autotune --jitter F --seed N --csv <path> --trace <path>\n\
          cosim:   --model <name> --projects N --nodes N --iters N --t-secs F\n\
                   --track-every N --train-size N --test-size N --publish-every K\n\
                   --publish-delta F --publish-hysteresis M --egress-mb-min F\n\
                   --retain N --no-delta --clients N --rate F --hot-rate F\n\
                   --link <profile> --shards N --router rr|jsq|affinity --batch N\n\
                   --queue-depth N --cache N --input-pool N --seed N --csv <path>\n\
+                  --trace <path>  (spans from all three planes on one timeline)\n\
          inspect: [--model <name>]\n\
          closure: --model <name> --out <path>",
         mlitb::VERSION
     );
+}
+
+/// Recording handle when `--trace <path>` was given, no-op handle
+/// otherwise (the disabled path costs one `Option` check per event).
+fn trace_for(args: &Args) -> TraceHandle {
+    if args.get("trace").is_some() {
+        TraceHandle::recording()
+    } else {
+        TraceHandle::off()
+    }
+}
+
+/// Write the trace where `--trace` pointed: Perfetto/Chrome trace-event
+/// JSON at the path itself, the flat CSV beside it at `<path>.csv`.
+fn write_trace(args: &Args, trace: &TraceHandle) -> Result<(), String> {
+    if let Some(path) = args.get("trace") {
+        trace.write(path)?;
+        println!("wrote trace to {path} (Perfetto JSON; CSV at {path}.csv)");
+    }
+    Ok(())
 }
 
 fn build_sim_config(args: &Args, spec: &mlitb::model::ModelSpec) -> Result<SimConfig, String> {
@@ -123,8 +147,11 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         spec.param_count,
         cfg.master.policy.name()
     );
+    let trace = trace_for(args);
     let mut sim = Simulation::new(cfg, spec.clone(), &mut engine);
+    sim.set_trace(trace.clone(), 0);
     let report = sim.run().map_err(|e| e.to_string())?;
+    write_trace(args, &trace)?;
     for r in report.timeline.records() {
         if r.iteration % 10 == 0 || r.test_error.is_some() {
             println!(
@@ -307,6 +334,9 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         drained_shards: Vec::new(),
         cache_capacity: args.get_usize("cache", 1024)?,
         response_bytes: 256,
+        // Per-request log retention only pays off when someone exports
+        // it; percentiles come from the bounded histograms either way.
+        keep_log: args.get("csv").is_some(),
     };
     println!(
         "serving {}: {} clients, {:.1} rps each, {}s horizon, batch ≤{}, wait ≤{} ms, \
@@ -328,11 +358,12 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     // serving modeled predictions that look plausible but are fake.
     // Without the feature (or without artifacts) the deterministic
     // modeled predictor is the expected configuration.
+    let trace = trace_for(args);
     let report = if cfg!(feature = "pjrt") && manifest_on_disk().is_some() {
         let mut engine = Engine::from_default_artifacts().map_err(|e| e.to_string())?;
         engine.load_model(&spec.name).map_err(|e| e.to_string())?;
         println!("compute: PJRT engine over AOT artifacts");
-        run_serve(cfg, plane, &mut engine)?
+        run_serve(cfg, plane, &mut engine, trace.clone())?
     } else {
         let why = if cfg!(feature = "pjrt") {
             "no AOT artifacts on disk"
@@ -341,8 +372,9 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         };
         println!("compute: modeled predictor ({why}; deterministic linear-softmax)");
         let mut modeled = ModeledCompute { param_count: spec.param_count };
-        run_serve(cfg, plane, &mut modeled)?
+        run_serve(cfg, plane, &mut modeled, trace.clone())?
     };
+    write_trace(args, &trace)?;
 
     let lat = report.latency();
     let mut table = mlitb::metrics::Table::new(
@@ -412,9 +444,10 @@ fn run_serve(
     cfg: ServeConfig,
     plane: ControlPlane,
     compute: &mut dyn Compute,
+    trace: TraceHandle,
 ) -> Result<ServeReport, String> {
     ServeSim::new(cfg, plane, compute)
-        .run()
+        .run_traced(trace)
         .map_err(|e| e.to_string())
 }
 
@@ -496,6 +529,7 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         drained_shards: Vec::new(),
         cache_capacity: args.get_usize("cache", 1024)?,
         response_bytes: 256,
+        keep_log: args.get("csv").is_some(),
     };
     let cfg = CosimConfig {
         projects: (0..projects)
@@ -551,7 +585,10 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         .map(|c| c as &mut dyn Compute)
         .collect();
     let mut serve_compute = ModeledCompute { param_count: spec.param_count };
-    let report = run_cosim(&cfg, train_refs, &mut serve_compute).map_err(|e| e.to_string())?;
+    let trace = trace_for(args);
+    let report = run_cosim_traced(&cfg, train_refs, &mut serve_compute, trace.clone())
+        .map_err(|e| e.to_string())?;
+    write_trace(args, &trace)?;
 
     let mut pub_table = mlitb::metrics::Table::new(
         "publications",
@@ -631,7 +668,7 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         &["project", "offered", "completed", "shed", "shed rate", "p50 ms"],
     );
     for stats in &report.serve.per_project {
-        let lat = report.serve.log.for_project(stats.project).latency_summary();
+        let lat = &report.serve.latency_by_project[stats.project.index()];
         per_project.row(vec![
             stats.project.to_string(),
             stats.offered.to_string(),

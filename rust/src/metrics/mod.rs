@@ -2,11 +2,13 @@
 //! staleness logs, summary stats and CSV/markdown table output — the
 //! instrumentation behind Figs 4/5/8 and the serving/cosim frontiers.
 
+mod histogram;
 mod series;
 mod staleness;
 mod stats;
 mod table;
 
+pub use histogram::Histogram;
 pub use series::{IterationRecord, RejectionRecord, RequestLog, RequestRecord, Timeline};
 pub use staleness::{StalenessLog, StalenessRecord};
 pub use stats::Summary;

@@ -10,7 +10,10 @@ pub struct Summary {
 impl Summary {
     pub fn from(mut xs: Vec<f64>) -> Self {
         xs.retain(|x| x.is_finite());
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): the retain above keeps
+        // NaN out today, but ordering must not be a panic away from any
+        // future caller handing us raw measurements.
+        xs.sort_by(f64::total_cmp);
         let sum = xs.iter().sum();
         Self { sorted: xs, sum }
     }
@@ -61,6 +64,14 @@ impl Summary {
 
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
     }
 
     pub fn std(&self) -> f64 {
@@ -114,5 +125,37 @@ mod tests {
         let s = Summary::from(vec![5.0, 1.0, 3.0]);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.median(), 3.0);
+    }
+
+    #[test]
+    fn tail_quantiles_interpolate_at_small_n() {
+        // p99 of ten samples must interpolate between the 9th and 10th
+        // order statistics, not snap to either endpoint.
+        let s = Summary::from((1..=10).map(|i| i as f64).collect());
+        assert!((s.p99() - 9.91).abs() < 1e-9);
+        assert!((s.p999() - 9.991).abs() < 1e-9);
+        assert!((s.quantile(0.95) - 9.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_every_quantile() {
+        let s = Summary::from(vec![7.0]);
+        for q in [0.0, 0.5, 0.95, 0.99, 0.999, 1.0] {
+            assert_eq!(s.quantile(q), 7.0);
+        }
+    }
+
+    #[test]
+    fn quantile_clamps_out_of_range() {
+        let s = Summary::from(vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.quantile(-0.5), 1.0);
+        assert_eq!(s.quantile(1.5), 3.0);
+    }
+
+    #[test]
+    fn empty_tail_quantiles_are_nan() {
+        let s = Summary::from(vec![]);
+        assert!(s.p99().is_nan());
+        assert!(s.p999().is_nan());
     }
 }

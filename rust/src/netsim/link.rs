@@ -211,6 +211,15 @@ impl MasterModel {
     /// [`ReduceMode::Sharded`] the merge component divides by the shard
     /// count and pays the per-shard fan-in barrier.
     pub fn service_ms(&self, bytes: u64, params: usize) -> f64 {
+        let (overhead, ingest, merge) = self.service_breakdown(bytes, params);
+        overhead + ingest + merge
+    }
+
+    /// The three components of [`service_ms`](Self::service_ms), in ms:
+    /// `(per-message overhead, ingest transfer, merge)`.  The trace plane
+    /// attaches these to ingest spans so a timeline shows *where* a
+    /// gradient's drain time went (framing vs wire vs reduce).
+    pub fn service_breakdown(&self, bytes: u64, params: usize) -> (f64, f64, f64) {
         let merge_ns = match self.reduce_mode {
             ReduceMode::MessageParallel => params as f64 * self.merge_ns_per_param,
             ReduceMode::Sharded { shards } => {
@@ -218,9 +227,11 @@ impl MasterModel {
                 params as f64 * self.merge_ns_per_param / s + s * self.fanin_ns_per_shard
             }
         };
-        self.per_msg_overhead_ms
-            + bytes as f64 / self.ingest_bandwidth_bytes_per_ms
-            + merge_ns / 1.0e6
+        (
+            self.per_msg_overhead_ms,
+            bytes as f64 / self.ingest_bandwidth_bytes_per_ms,
+            merge_ns / 1.0e6,
+        )
     }
 
     /// Service degradation multiplier for a sync burst totaling
@@ -301,6 +312,12 @@ mod tests {
         let s = m.service_ms(104_860, 23_466);
         // 3 + 104860/12000 + 0.023 ms
         assert!((s - 11.76).abs() < 0.2, "{s}");
+        // The breakdown sums exactly to the total and splits as modeled.
+        let (overhead, ingest, merge) = m.service_breakdown(104_860, 23_466);
+        assert_eq!(overhead + ingest + merge, s);
+        assert_eq!(overhead, 3.0);
+        assert!((ingest - 104_860.0 / 12_000.0).abs() < 1e-12);
+        assert!((merge - 0.023_466).abs() < 1e-9);
     }
 
     #[test]

@@ -68,6 +68,17 @@ pub struct ModelVersion {
     pub version: u64,
 }
 
+impl ModelVersion {
+    /// Globally unique flow-edge id for the trace plane: the publication
+    /// of this version and the first batch served on it share this id.
+    /// Project in the high 32 bits, version in the low 32 — well inside
+    /// f64's exact-integer range for any realistic run, so the id
+    /// round-trips through JSON untouched.
+    pub fn flow_id(&self) -> u64 {
+        ((self.project.as_u32() as u64) << 32) | (self.version & 0xFFFF_FFFF)
+    }
+}
+
 impl fmt::Display for ModelVersion {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}v{}", self.project, self.version)

@@ -87,6 +87,10 @@ pub struct BatchExecutor {
     batches: u64,
     examples: u64,
     padded: u64,
+    /// Padding rows of the most recent `execute` call only — the trace
+    /// plane stamps each batch span with its own padding, not the
+    /// cumulative total.
+    last_padded: u64,
     /// Flush-assembly buffer, reused across flushes: once grown to the
     /// largest compiled batch it never reallocates (ROADMAP perf item —
     /// this used to be a fresh `Vec` per flush on the serving hot path).
@@ -101,6 +105,7 @@ impl BatchExecutor {
             batches: 0,
             examples: 0,
             padded: 0,
+            last_padded: 0,
             scratch: Vec::new(),
         }
     }
@@ -126,6 +131,11 @@ impl BatchExecutor {
     /// Padding examples executed so far.
     pub fn padded(&self) -> u64 {
         self.padded
+    }
+
+    /// Padding rows of the most recent `execute` call.
+    pub fn last_padded(&self) -> u64 {
+        self.last_padded
     }
 
     /// Fraction of executed rows that were real requests (1.0 = perfectly
@@ -201,6 +211,7 @@ impl BatchExecutor {
         let largest = self.largest_batch().max(1);
         let mut preds = Vec::with_capacity(inputs.len());
         let mut service_ms = 0.0;
+        self.last_padded = 0;
         for chunk in inputs.chunks(largest) {
             let b = self.pick_batch(chunk.len());
             self.scratch.clear();
@@ -226,6 +237,7 @@ impl BatchExecutor {
             self.batches += 1;
             self.examples += chunk.len() as u64;
             self.padded += (b - chunk.len()) as u64;
+            self.last_padded += (b - chunk.len()) as u64;
             service_ms +=
                 self.profile.per_batch_overhead_ms + b as f64 / self.profile.power_vps * 1000.0;
         }
@@ -294,7 +306,14 @@ mod tests {
         assert_eq!(ex.batches(), 1);
         assert_eq!(ex.examples(), 5);
         assert_eq!(ex.padded(), 3);
+        assert_eq!(ex.last_padded(), 3);
         assert!((ex.occupancy() - 5.0 / 8.0).abs() < 1e-12);
+        // A second, full flush resets the per-flush padding readout.
+        let xs8 = inputs(8);
+        let full8: Vec<&[f32]> = xs8.iter().map(Vec::as_slice).collect();
+        ex.execute(&mut compute, &params(), &full8).unwrap();
+        assert_eq!(ex.last_padded(), 0);
+        assert_eq!(ex.padded(), 3);
     }
 
     #[test]

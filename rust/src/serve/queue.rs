@@ -96,6 +96,9 @@ pub struct AdmissionQueue {
     per_project: Vec<u64>,
     admitted: u64,
     rejected: u64,
+    /// Why the most recent `take_batch` cut where it did — stamped onto
+    /// the trace plane's batch spans.
+    last_cut: &'static str,
 }
 
 impl AdmissionQueue {
@@ -107,6 +110,7 @@ impl AdmissionQueue {
             per_project: Vec::new(),
             admitted: 0,
             rejected: 0,
+            last_cut: "",
         }
     }
 
@@ -240,6 +244,15 @@ impl AdmissionQueue {
             .take(max)
             .take_while(|r| r.version == version)
             .count();
+        self.last_cut = if n == max {
+            "full"
+        } else if n < self.pending.len() {
+            // Stopped early with more pending: the next request carries a
+            // different version (or project).
+            "version-boundary"
+        } else {
+            "deadline"
+        };
         let batch: Vec<PredictRequest> = self.pending.drain(..n).collect();
         let i = version.project.index();
         debug_assert!(self.per_project.len() > i, "admitted project untracked");
@@ -255,6 +268,13 @@ impl AdmissionQueue {
 
     pub fn rejected(&self) -> u64 {
         self.rejected
+    }
+
+    /// Why the most recent `take_batch` cut: `"full"` (hit `max_batch`),
+    /// `"version-boundary"` (a newer version / other project was next) or
+    /// `"deadline"` (partial batch, wait expired).  Empty before any cut.
+    pub fn last_cut(&self) -> &'static str {
+        self.last_cut
     }
 }
 
@@ -336,6 +356,23 @@ mod tests {
         assert_eq!(b2[0].id, 2);
         assert_eq!(q.take_batch().len(), 1);
         assert!(q.take_batch().is_empty());
+    }
+
+    #[test]
+    fn take_batch_records_its_cut_reason() {
+        let mut q = queue(2, 5.0, 16);
+        assert_eq!(q.last_cut(), "", "no cut yet");
+        q.offer(req(1, 0.0));
+        q.offer(req(2, 1.0));
+        q.offer(req_v(3, 2.0, 2));
+        q.take_batch();
+        assert_eq!(q.last_cut(), "full");
+        q.take_batch();
+        assert_eq!(q.last_cut(), "deadline", "partial batch, nothing behind it");
+        q.offer(req(4, 3.0));
+        q.offer(req_v(5, 4.0, 2));
+        q.take_batch();
+        assert_eq!(q.last_cut(), "version-boundary");
     }
 
     #[test]

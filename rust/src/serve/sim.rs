@@ -37,10 +37,11 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::metrics::{RejectionRecord, RequestLog, RequestRecord, Summary};
+use crate::metrics::{Histogram, RejectionRecord, RequestLog, RequestRecord};
 use crate::netsim::LinkModel;
 use crate::rng::{Exp, Pcg32};
 use crate::runtime::Compute;
+use crate::trace::{ArgValue, TraceHandle, Track};
 
 use super::cache::input_key;
 use super::control::{ControlPlane, ProjectId, ProjectStats};
@@ -73,12 +74,24 @@ pub struct ServeConfig {
     pub cache_capacity: usize,
     /// Response payload on the downlink (class + confidence + envelope).
     pub response_bytes: u64,
+    /// Retain the full per-request [`RequestLog`]?  Percentiles come from
+    /// the constant-memory [`Histogram`] either way; the log exists for
+    /// explicit CSV export and per-record assertions, and at 10⁵+
+    /// requests it is the report's only unbounded allocation — turn it
+    /// off when only aggregates are consumed.
+    pub keep_log: bool,
 }
 
 /// Outcome of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Per-request records — empty when `ServeConfig::keep_log` is off.
     pub log: RequestLog,
+    /// End-to-end latency distribution of every completed request,
+    /// accumulated online (constant memory, independent of `keep_log`).
+    pub latency_hist: Histogram,
+    /// Per-project latency distributions (index = project id).
+    pub latency_by_project: Vec<Histogram>,
     pub offered: u64,
     pub completed: u64,
     pub rejected: u64,
@@ -105,14 +118,19 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Completed requests per second of emission horizon.
+    /// Completed requests per second of emission horizon.  Counter-based,
+    /// not log-based — correct with `keep_log` off.
     pub fn throughput_rps(&self) -> f64 {
-        self.log.throughput_rps(self.duration_s.max(self.span_s))
+        let horizon = self.duration_s.max(self.span_s);
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / horizon
     }
 
-    /// End-to-end latency distribution.
-    pub fn latency(&self) -> Summary {
-        self.log.latency_summary()
+    /// End-to-end latency distribution (p50/p95/p99/p999, min/max, mean).
+    pub fn latency(&self) -> &Histogram {
+        &self.latency_hist
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -238,6 +256,17 @@ pub struct ServeEngine {
     /// standard exponential scaled by each shard's `ServerProfile::jitter`.
     straggler: Exp,
     failovers: u64,
+    keep_log: bool,
+    /// Counter/histogram accounting mirrors what the log used to derive,
+    /// so reports stay exact with the log off.
+    completed: u64,
+    completed_by: Vec<u64>,
+    rejected_by: Vec<u64>,
+    hist: Histogram,
+    hist_by_project: Vec<Histogram>,
+    /// Latest response time seen (ms) — the report's span.
+    last_done_ms: f64,
+    trace: TraceHandle,
 }
 
 impl ServeEngine {
@@ -320,6 +349,7 @@ impl ServeEngine {
             .iter()
             .map(|f| f.duration_s)
             .fold(0.0, f64::max);
+        let projects = offered_by_project.len();
         Ok(Self {
             router_cfg,
             coalesce,
@@ -337,7 +367,53 @@ impl ServeEngine {
             now: 0.0,
             log: RequestLog::new(),
             failovers: 0,
+            keep_log: cfg.keep_log,
+            completed: 0,
+            completed_by: vec![0; projects],
+            rejected_by: vec![0; projects],
+            hist: Histogram::new(),
+            hist_by_project: vec![Histogram::new(); projects],
+            last_done_ms: 0.0,
+            trace: TraceHandle::off(),
         })
+    }
+
+    /// Attach a trace handle (share one across planes for a unified
+    /// timeline).  The engine emits per-request lifecycle spans, batch
+    /// execution spans, and the publication→first-serve flow edges.
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = trace;
+    }
+
+    /// One completed response, whatever the path (executed, cache hit,
+    /// coalesced waiter): counters, histograms, the request span's end,
+    /// and — when retained — the log record.
+    fn finish_request(&mut self, rec: RequestRecord) {
+        self.completed += 1;
+        let pi = rec.version.project.index();
+        self.completed_by[pi] += 1;
+        self.hist.observe(rec.latency_ms);
+        self.hist_by_project[pi].observe(rec.latency_ms);
+        if rec.done_ms > self.last_done_ms {
+            self.last_done_ms = rec.done_ms;
+        }
+        let outcome = if rec.coalesced { "coalesced" } else { "served" };
+        self.trace.async_end(
+            Track::shard(rec.version.project.as_u32(), rec.shard),
+            "serve",
+            "request",
+            rec.id,
+            rec.done_ms,
+            &[
+                ("outcome", ArgValue::Str(outcome)),
+                ("cache_hit", ArgValue::U64(rec.cache_hit as u64)),
+                ("latency_ms", ArgValue::F64(rec.latency_ms)),
+                ("version", ArgValue::U64(rec.version.version)),
+            ],
+        );
+        if self.keep_log {
+            self.log.push(rec);
+        }
     }
 
     /// The per-request log so far.
@@ -395,6 +471,17 @@ impl ServeEngine {
                     0
                 };
                 let si = self.router.route(key, &self.shards, self.now);
+                // One request-lifecycle span per arrival, opened on the
+                // originally routed shard's track; exactly one matching
+                // end (served / coalesced / shed) closes it.
+                self.trace.async_begin(
+                    Track::shard(ev.project.as_u32(), si as u32),
+                    "serve",
+                    "request",
+                    ev.id,
+                    self.now,
+                    &[("client", ArgValue::U64(ev.client as u64))],
+                );
                 let mut outcome =
                     self.offer_to_shard(si, &ev, key, meta, plane, compute, observer)?;
                 if matches!(outcome, ArrivalOutcome::Refused) && self.shards.len() > 1 {
@@ -415,14 +502,25 @@ impl ServeEngine {
                     let shard = &mut self.shards[si];
                     shard.note_routed();
                     shard.queue.note_shed();
-                    self.log.push_rejection(RejectionRecord {
-                        id: ev.id,
-                        client: ev.client,
-                        project: ev.project,
-                        sent_ms: ev.sent_ms,
-                        arrival_ms: self.now,
-                        shard: si as u32,
-                    });
+                    self.rejected_by[ev.project.index()] += 1;
+                    self.trace.async_end(
+                        Track::shard(ev.project.as_u32(), si as u32),
+                        "serve",
+                        "request",
+                        ev.id,
+                        self.now,
+                        &[("outcome", ArgValue::Str("shed"))],
+                    );
+                    if self.keep_log {
+                        self.log.push_rejection(RejectionRecord {
+                            id: ev.id,
+                            client: ev.client,
+                            project: ev.project,
+                            sent_ms: ev.sent_ms,
+                            arrival_ms: self.now,
+                            shard: si as u32,
+                        });
+                    }
                 }
             } else if let Some((f, si)) = flush {
                 self.now = f;
@@ -461,6 +559,32 @@ impl ServeEngine {
                 let computed_at = self.now + service_ms;
                 self.shards[si].free_at = computed_at;
                 self.shards[si].executing = batch.len();
+                let padded = self.shards[si].executor_mut(vid.project).last_padded();
+                self.trace.span(
+                    Track::shard(vid.project.as_u32(), si as u32),
+                    "serve",
+                    "batch",
+                    self.now,
+                    computed_at,
+                    &[
+                        ("size", ArgValue::U64(batch.len() as u64)),
+                        ("padded", ArgValue::U64(padded)),
+                        ("version", ArgValue::U64(vid.version)),
+                        ("cut", ArgValue::Str(self.shards[si].queue.last_cut())),
+                    ],
+                );
+                // First batch executed on a freshly published version:
+                // close that publication's flow edge here.  No-op unless
+                // a publication opened the edge (plain serving runs emit
+                // nothing), and only the first execution per version
+                // binds the arrow.
+                self.trace.flow_end(
+                    Track::shard(vid.project.as_u32(), si as u32),
+                    "publish",
+                    "first-serve",
+                    vid.flow_id(),
+                    self.now,
+                );
                 for (req, pred) in batch.iter().zip(&preds) {
                     if self.coalesce {
                         // Fan the one computed answer out to every waiter
@@ -488,7 +612,7 @@ impl ServeEngine {
                                 class: pred.class as u32,
                             };
                             observer.on_response(&rec, &req.input, pred, meta, compute)?;
-                            self.log.push(rec);
+                            self.finish_request(rec);
                         }
                     }
                     if self.caching {
@@ -522,7 +646,7 @@ impl ServeEngine {
                         class: pred.class as u32,
                     };
                     observer.on_response(&rec, &req.input, pred, meta, compute)?;
-                    self.log.push(rec);
+                    self.finish_request(rec);
                     // The computation ran: release the admission-time
                     // reader pin so GC can reclaim the version.
                     plane.unpin_reader(vid);
@@ -568,7 +692,7 @@ impl ServeEngine {
                     class: pred.class as u32,
                 };
                 observer.on_response(&rec, &ev.input, &pred, meta, compute)?;
-                self.log.push(rec);
+                self.finish_request(rec);
                 self.shards[si].note_routed();
                 return Ok(ArrivalOutcome::Handled);
             }
@@ -599,7 +723,7 @@ impl ServeEngine {
                         class: pred.class as u32,
                     };
                     observer.on_response(&rec, &ev.input, &pred, meta, compute)?;
-                    self.log.push(rec);
+                    self.finish_request(rec);
                     self.shards[si].note_routed();
                     return Ok(ArrivalOutcome::Handled);
                 }
@@ -639,19 +763,12 @@ impl ServeEngine {
         Ok(ArrivalOutcome::Handled)
     }
 
-    /// End-of-run accounting.
+    /// End-of-run accounting.  Everything here comes from online
+    /// counters/histograms, never the log — identical reports with
+    /// `keep_log` off.
     pub fn into_report(self) -> ServeReport {
-        let span_s = self.log.span_ms() / 1000.0;
+        let span_s = self.last_done_ms / 1000.0;
         let per_shard: Vec<ShardStats> = self.shards.iter().map(Shard::stats).collect();
-        // One pass over each log stream, whatever the project count.
-        let mut completed_by = vec![0u64; self.offered_by_project.len()];
-        for r in self.log.records() {
-            completed_by[r.version.project.index()] += 1;
-        }
-        let mut rejected_by = vec![0u64; self.offered_by_project.len()];
-        for r in self.log.rejections() {
-            rejected_by[r.project.index()] += 1;
-        }
         let per_project: Vec<ProjectStats> = self
             .offered_by_project
             .iter()
@@ -659,13 +776,13 @@ impl ServeEngine {
             .map(|(i, &offered)| ProjectStats {
                 project: ProjectId::new(i as u32),
                 offered,
-                completed: completed_by[i],
-                rejected: rejected_by[i],
+                completed: self.completed_by[i],
+                rejected: self.rejected_by[i],
             })
             .collect();
         ServeReport {
             offered: self.fleet.offered(),
-            completed: self.log.len() as u64,
+            completed: self.completed,
             rejected: per_shard.iter().map(|s| s.rejected).sum(),
             cache_hits: per_shard.iter().map(|s| s.cache_hits).sum(),
             coalesced: per_shard.iter().map(|s| s.coalesced).sum(),
@@ -678,6 +795,8 @@ impl ServeEngine {
             per_project,
             duration_s: self.duration_s,
             span_s,
+            latency_hist: self.hist,
+            latency_by_project: self.hist_by_project,
             log: self.log,
         }
     }
@@ -705,12 +824,19 @@ impl<'c> ServeSim<'c> {
 
     /// Run the full request schedule to completion.
     pub fn run(&mut self) -> Result<ServeReport> {
+        self.run_traced(TraceHandle::off())
+    }
+
+    /// Run with a trace handle attached — per-request lifecycle and batch
+    /// spans land on the shared timeline.
+    pub fn run_traced(&mut self, trace: TraceHandle) -> Result<ServeReport> {
         for p in self.plane.ids() {
             if self.plane.active(p).is_none() {
                 return Err(anyhow!("project {p} has no active snapshot"));
             }
         }
         let mut engine = ServeEngine::new(&self.cfg, &self.plane)?;
+        engine.set_trace(trace);
         engine.pump(None, &mut self.plane, &mut *self.compute, &mut NoopObserver)?;
         Ok(engine.into_report())
     }
@@ -787,6 +913,7 @@ mod tests {
             drained_shards: Vec::new(),
             cache_capacity: cache,
             response_bytes: 256,
+            keep_log: true,
         }
     }
 
@@ -840,6 +967,15 @@ mod tests {
         assert_eq!(p.offered, report.offered);
         assert_eq!(p.completed, report.completed);
         assert_eq!(p.rejected, report.rejected);
+        // The online histogram saw exactly the completions the log did,
+        // and its percentiles track the exact (log-derived) ones.
+        assert_eq!(report.latency().count(), report.completed);
+        assert_eq!(report.latency_by_project[0].count(), report.completed);
+        let exact = report.log.latency_summary();
+        assert_eq!(report.latency().min(), exact.min());
+        assert_eq!(report.latency().max(), exact.max());
+        let rel = (report.latency().median() - exact.median()).abs() / exact.median();
+        assert!(rel < 0.015, "histogram p50 drifted {rel} from exact");
     }
 
     #[test]
@@ -1247,6 +1383,101 @@ mod tests {
             single.summary()
         );
         assert!(batched.mean_batch() > 1.5, "{}", batched.summary());
+    }
+
+    #[test]
+    fn histogram_report_is_memory_bounded_at_1e5_requests() {
+        // Satellite: with the log off, a 10⁵-request run retains no
+        // per-request state — the histogram (fixed ~2k buckets) carries
+        // the percentiles and every aggregate still reconciles.
+        let mut cfg = config(2_500.0, 8, 0);
+        cfg.policy.queue_depth = 64;
+        cfg.keep_log = false;
+        let report = run_cfg(cfg);
+        assert!(report.offered >= 90_000, "offered {}", report.offered);
+        assert_eq!(report.log.len(), 0, "no per-request records retained");
+        assert!(report.log.rejections().is_empty());
+        assert_eq!(report.completed + report.rejected, report.offered);
+        assert!(report.completed > 0 && report.rejected > 0);
+        let lat = report.latency();
+        assert_eq!(lat.count(), report.completed);
+        assert!(lat.median().is_finite() && lat.median() > 0.0);
+        assert!(lat.p999() >= lat.p99() && lat.p99() >= lat.median());
+        assert!(report.throughput_rps() > 0.0);
+        assert!(report.span_s > 0.0);
+        // Per-project mirrors stay counter-backed.
+        let p = report.project(ProjectId::new(0));
+        assert_eq!(p.completed, report.completed);
+        assert_eq!(p.rejected, report.rejected);
+    }
+
+    #[test]
+    fn keep_log_off_matches_keep_log_on_aggregates() {
+        let on = run_cfg(config(40.0, 4, 16));
+        let mut cfg = config(40.0, 4, 16);
+        cfg.keep_log = false;
+        let off = run_cfg(cfg);
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.rejected, off.rejected);
+        assert_eq!(on.cache_hits, off.cache_hits);
+        assert_eq!(on.batches, off.batches);
+        assert_eq!(on.latency().count(), off.latency().count());
+        assert_eq!(on.latency().median(), off.latency().median());
+        assert_eq!(on.span_s, off.span_s);
+        assert_eq!(on.throughput_rps(), off.throughput_rps());
+        assert_eq!(off.log.len(), 0);
+    }
+
+    #[test]
+    fn trace_spans_balance_across_outcomes() {
+        use crate::trace::EventKind;
+        // Overloaded single shard: served, shed and (with coalescing)
+        // coalesced outcomes all occur; every request span must close
+        // with exactly one of them.
+        let mut cfg = config(700.0, 4, 0);
+        cfg.policy.queue_depth = 32;
+        cfg.router.coalesce = true;
+        cfg.fleets[0].input_pool = 64;
+        let trace = TraceHandle::recording();
+        let mut compute = ModeledCompute { param_count: 24 };
+        let mut sim = ServeSim::new(cfg, plane(), &mut compute);
+        let report = sim.run_traced(trace.clone()).unwrap();
+        assert!(report.rejected > 0, "{}", report.summary());
+        assert_eq!(trace.open_async(), 0, "every begin must have an end");
+        let mut begins = std::collections::BTreeMap::new();
+        let mut outcomes = std::collections::BTreeMap::new();
+        for e in trace.snapshot() {
+            match e.kind {
+                EventKind::AsyncBegin { id } => *begins.entry(id).or_insert(0u32) += 1,
+                EventKind::AsyncEnd { id } => {
+                    let outcome = e
+                        .args
+                        .iter()
+                        .find(|(k, _)| *k == "outcome")
+                        .map(|(_, v)| format!("{v}"))
+                        .expect("request end carries an outcome");
+                    outcomes.entry(id).or_insert_with(Vec::new).push(outcome);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(begins.len() as u64, report.offered);
+        for (id, n) in &begins {
+            assert_eq!(*n, 1, "request {id} began twice");
+            let o = &outcomes[id];
+            assert_eq!(o.len(), 1, "request {id} ended {} times", o.len());
+            assert!(
+                ["served", "shed", "coalesced"].contains(&o[0].as_str()),
+                "request {id}: unknown outcome {}",
+                o[0]
+            );
+        }
+        let count = |what: &str| {
+            outcomes.values().filter(|o| o[0] == what).count() as u64
+        };
+        assert_eq!(count("shed"), report.rejected);
+        assert_eq!(count("coalesced"), report.coalesced);
+        assert_eq!(count("served"), report.completed - report.coalesced);
     }
 
     // ───────────────────────── multi-project tier ─────────────────────

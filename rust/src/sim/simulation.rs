@@ -11,6 +11,7 @@ use crate::data::{DataServer, SharedSample, SynthSpec, Synthesizer};
 use crate::model::ModelSpec;
 use crate::rng::Pcg32;
 use crate::runtime::{BatchBuilder, Compute};
+use crate::trace::{ArgValue, TraceHandle, Track};
 
 use super::RunReport;
 
@@ -87,6 +88,10 @@ pub struct Simulation<'c> {
     batch: BatchBuilder,
     rng: Pcg32,
     next_worker_id: WorkerId,
+    /// Trace plane (off by default); client-side compute/upload spans are
+    /// emitted here, master-side spans by the master itself.
+    trace: TraceHandle,
+    trace_pid: u32,
 }
 
 impl<'c> Simulation<'c> {
@@ -131,6 +136,8 @@ impl<'c> Simulation<'c> {
             batch,
             rng,
             next_worker_id: 1,
+            trace: TraceHandle::off(),
+            trace_pid: 0,
         };
         let fleet = sim.cfg.fleet.clone();
         for class in fleet {
@@ -142,6 +149,14 @@ impl<'c> Simulation<'c> {
 
     pub fn master(&self) -> &Master {
         &self.master
+    }
+
+    /// Attach a trace handle for this run; `pid` names the project on the
+    /// shared timeline (the cosim passes each training sim its ProjectId).
+    pub fn set_trace(&mut self, trace: TraceHandle, pid: u32) {
+        self.master.set_trace(trace.clone(), pid);
+        self.trace = trace;
+        self.trace_pid = pid;
     }
 
     /// Mutable master access (closure-resume paths and tests).
@@ -256,6 +271,29 @@ impl<'c> Simulation<'c> {
             let bytes = payload.bytes() + 96; // envelope: ids, counts, framing
             let uplink = client.link.sample_latency_ms(&mut client.rng)
                 + client.link.transmit_ms(bytes);
+            if self.trace.is_on() {
+                let t0 = self.master.now_ms();
+                let track = Track::worker(self.trace_pid, *id as u32);
+                self.trace.span(
+                    track,
+                    "train",
+                    "compute",
+                    t0,
+                    t0 + out.compute_ms,
+                    &[
+                        ("examples", ArgValue::U64(out.examples)),
+                        ("budget_ms", ArgValue::F64(budget_ms)),
+                    ],
+                );
+                self.trace.span(
+                    track,
+                    "train",
+                    "upload",
+                    t0 + out.compute_ms,
+                    t0 + out.compute_ms + uplink,
+                    &[("bytes", ArgValue::U64(bytes))],
+                );
+            }
             submissions.push(Submission {
                 worker: *id,
                 payload,
@@ -437,6 +475,23 @@ mod tests {
         // modeled compute: 10% correct → 0.9 error
         let err = report.final_test_error.unwrap();
         assert!((err - 0.9).abs() < 1e-6, "{err}");
+    }
+
+    #[test]
+    fn traced_run_emits_client_and_master_spans() {
+        let spec = toy_spec(16);
+        let cfg = base_cfg(2, &spec);
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let trace = TraceHandle::recording();
+        sim.set_trace(trace.clone(), 3);
+        sim.run().unwrap();
+        let evs = trace.snapshot();
+        assert!(evs.iter().any(|e| e.name == "compute"));
+        assert!(evs.iter().any(|e| e.name == "upload"));
+        assert!(evs.iter().any(|e| e.name == "iteration"));
+        assert!(evs.iter().all(|e| e.track.pid == 3));
+        assert_eq!(trace.open_async(), 0, "training emits no async spans");
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Trace exporters: Chrome/Perfetto trace-event JSON and flat CSV.
+//!
+//! Both exports are deterministic: events are written in emission order,
+//! JSON object keys are sorted (the `json` module's `Object` is a
+//! `BTreeMap`), and all timestamps are virtual-clock values — no wall
+//! time anywhere.  Chrome's trace-event format wants microseconds; the
+//! simulation runs in milliseconds, so `ts`/`dur` are `ms * 1000`.
+
+use crate::json::{object, to_string, Value};
+
+use super::{ArgValue, Event, EventKind, Track, Tracer};
+
+fn num_u64(v: u64) -> Value {
+    Value::Number(v as f64)
+}
+
+fn arg_value(v: ArgValue) -> Value {
+    match v {
+        ArgValue::U64(x) => num_u64(x),
+        ArgValue::F64(x) => Value::Number(x),
+        ArgValue::Str(s) => Value::String(s.to_string()),
+    }
+}
+
+fn args_object(args: &[(&'static str, ArgValue)]) -> Value {
+    object(args.iter().map(|(k, v)| (*k, arg_value(*v))).collect())
+}
+
+fn base_fields(e: &Event, ph: &str) -> Vec<(&'static str, Value)> {
+    vec![
+        ("ph", Value::String(ph.to_string())),
+        ("pid", num_u64(e.track.pid as u64)),
+        ("tid", num_u64(e.track.tid as u64)),
+        ("ts", Value::Number(e.ts_ms * 1000.0)),
+        ("cat", Value::String(e.cat.to_string())),
+        ("name", Value::String(e.name.to_string())),
+    ]
+}
+
+fn event_json(e: &Event) -> Value {
+    match e.kind {
+        EventKind::Span { dur_ms } => {
+            let mut fields = base_fields(e, "X");
+            fields.push(("dur", Value::Number(dur_ms * 1000.0)));
+            fields.push(("args", args_object(&e.args)));
+            object(fields)
+        }
+        EventKind::AsyncBegin { id } => {
+            let mut fields = base_fields(e, "b");
+            fields.push(("id", num_u64(id)));
+            fields.push(("args", args_object(&e.args)));
+            object(fields)
+        }
+        EventKind::AsyncEnd { id } => {
+            let mut fields = base_fields(e, "e");
+            fields.push(("id", num_u64(id)));
+            fields.push(("args", args_object(&e.args)));
+            object(fields)
+        }
+        EventKind::Instant => {
+            let mut fields = base_fields(e, "i");
+            fields.push(("s", Value::String("t".to_string())));
+            fields.push(("args", args_object(&e.args)));
+            object(fields)
+        }
+        EventKind::FlowStart { id } => {
+            let mut fields = base_fields(e, "s");
+            fields.push(("id", num_u64(id)));
+            object(fields)
+        }
+        EventKind::FlowFinish { id } => {
+            let mut fields = base_fields(e, "f");
+            fields.push(("id", num_u64(id)));
+            // Bind the arrow head to the *enclosing* slice at this
+            // timestamp rather than the next one to begin.
+            fields.push(("bp", Value::String("e".to_string())));
+            object(fields)
+        }
+    }
+}
+
+fn metadata_event(pid: u32, tid: u32, name: &str, value: String) -> Value {
+    object(vec![
+        ("ph", Value::String("M".to_string())),
+        ("pid", num_u64(pid as u64)),
+        ("tid", num_u64(tid as u64)),
+        ("name", Value::String(name.to_string())),
+        ("args", object(vec![("name", Value::String(value))])),
+    ])
+}
+
+/// Full Chrome trace-event document.
+pub fn chrome_json(tracer: &Tracer) -> String {
+    let mut events: Vec<Value> = Vec::with_capacity(tracer.events().len() + 16);
+    // Name processes (projects) and threads (tracks) first so viewers
+    // label rows before any data event references them.
+    let tracks: std::collections::BTreeSet<Track> =
+        tracer.events().iter().map(|e| e.track).collect();
+    let pids: std::collections::BTreeSet<u32> = tracks.iter().map(|t| t.pid).collect();
+    for pid in &pids {
+        events.push(metadata_event(*pid, 0, "process_name", format!("project p{pid}")));
+    }
+    for track in &tracks {
+        events.push(metadata_event(
+            track.pid,
+            track.tid,
+            "thread_name",
+            Track::thread_name(track.tid),
+        ));
+    }
+    events.extend(tracer.events().iter().map(event_json));
+    let doc = object(vec![
+        ("displayTimeUnit", Value::String("ms".to_string())),
+        ("traceEvents", Value::Array(events)),
+    ]);
+    to_string(&doc)
+}
+
+fn phase_code(kind: &EventKind) -> &'static str {
+    match kind {
+        EventKind::Span { .. } => "X",
+        EventKind::AsyncBegin { .. } => "b",
+        EventKind::AsyncEnd { .. } => "e",
+        EventKind::Instant => "i",
+        EventKind::FlowStart { .. } => "s",
+        EventKind::FlowFinish { .. } => "f",
+    }
+}
+
+/// Flat CSV (one row per event) for spreadsheet / pandas analysis.
+pub fn csv(tracer: &Tracer) -> String {
+    let mut out = String::from("seq,ph,ts_ms,pid,tid,cat,name,id,dur_ms,args\n");
+    for e in tracer.events() {
+        let (id, dur) = match e.kind {
+            EventKind::Span { dur_ms } => (String::new(), format!("{dur_ms}")),
+            EventKind::AsyncBegin { id }
+            | EventKind::AsyncEnd { id }
+            | EventKind::FlowStart { id }
+            | EventKind::FlowFinish { id } => (format!("{id}"), String::new()),
+            EventKind::Instant => (String::new(), String::new()),
+        };
+        let args = e
+            .args
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(";");
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{}\n",
+            e.seq,
+            phase_code(&e.kind),
+            e.ts_ms,
+            e.track.pid,
+            e.track.tid,
+            e.cat,
+            e.name,
+            id,
+            dur,
+            args
+        ));
+    }
+    out
+}

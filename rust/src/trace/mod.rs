@@ -1,0 +1,462 @@
+//! Unified virtual-clock trace plane: spans, instants, async request
+//! lifecycles and cross-plane flow edges over the simulation's virtual
+//! clock, exported as Chrome/Perfetto trace-event JSON and CSV.
+//!
+//! The paper's whole argument rests on *measuring* a heterogeneous fleet
+//! (§3.3's latency-adaptive budgets, Fig 4's latency axis), yet aggregate
+//! end-of-run CSVs cannot attribute virtual time to phases or link events
+//! across planes.  This module is the causal, per-event view: training
+//! emits per-iteration spans (client compute → gradient upload → master
+//! ingest/reduce → optimizer step → broadcast), serving emits per-request
+//! lifecycle spans (begin at arrival, end at response with a
+//! served/shed/coalesced outcome tag, batch-execution spans between), and
+//! the co-simulation emits publication spans whose activation is causally
+//! linked — a Perfetto *flow* arrow — to the first batch served on the
+//! new version: the cross-plane edge nothing else can see.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled must be free.**  [`TraceHandle`] is an
+//!    `Option<Rc<RefCell<Tracer>>>`; every emission on a disabled handle
+//!    is one `Option` discriminant check — no allocation, no `RefCell`
+//!    traffic, no argument formatting (args are `Copy` stack values).
+//!    The reduce micro-bench pins this (<2% on the merge hot loop).
+//! 2. **Deterministic.**  Events carry virtual-clock milliseconds and a
+//!    monotone sequence number; emission order is the single-threaded
+//!    simulation's execution order, exports iterate only ordered
+//!    structures — the same seed and config produce *byte-identical*
+//!    exports (pinned by `tests/integration_trace.rs`).
+//! 3. **Bounded.**  Events land in a ring buffer; at capacity the oldest
+//!    event is dropped and counted, so tracing a huge run degrades to a
+//!    suffix window instead of unbounded memory.
+//!
+//! Track convention: `pid` is the [`crate::serve::ProjectId`] (0 for
+//! single-project training runs), `tid` 0 is the project's master, 1 its
+//! publication pipeline, 1000+w training worker `w`, 2000+s serving
+//! shard `s`.
+
+mod export;
+
+use std::cell::RefCell;
+use std::collections::{BTreeSet, VecDeque};
+use std::rc::Rc;
+
+/// Default ring-buffer capacity (events).
+pub const DEFAULT_CAPACITY: usize = 1 << 20;
+
+/// One timeline row: a (process, thread) pair in the Chrome trace model.
+/// `pid` names the project, `tid` the actor within it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Track {
+    pub pid: u32,
+    pub tid: u32,
+}
+
+impl Track {
+    /// The project's training master (tid 0).
+    pub fn master(pid: u32) -> Self {
+        Self { pid, tid: 0 }
+    }
+
+    /// The project's snapshot-publication pipeline (tid 1).
+    pub fn publisher(pid: u32) -> Self {
+        Self { pid, tid: 1 }
+    }
+
+    /// Training worker `w` of the project (tid 1000+w).
+    pub fn worker(pid: u32, w: u32) -> Self {
+        Self { pid, tid: 1000 + w }
+    }
+
+    /// Serving shard `s` handling the project's traffic (tid 2000+s).
+    pub fn shard(pid: u32, s: u32) -> Self {
+        Self { pid, tid: 2000 + s }
+    }
+
+    /// Human thread name for exports (`M` metadata / CSV).
+    pub fn thread_name(tid: u32) -> String {
+        match tid {
+            0 => "master".into(),
+            1 => "publications".into(),
+            t if t >= 2000 => format!("shard {}", t - 2000),
+            t if t >= 1000 => format!("worker {}", t - 1000),
+            t => format!("track {t}"),
+        }
+    }
+}
+
+/// A span/instant argument value.  All-`Copy` so disabled call sites
+/// build their argument slices on the stack for free.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+impl std::fmt::Display for ArgValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgValue::U64(v) => write!(f, "{v}"),
+            ArgValue::F64(v) => write!(f, "{v}"),
+            ArgValue::Str(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Event shape, mapping 1:1 onto Chrome trace-event phases.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Complete span (`ph: "X"`): starts at `ts`, lasts `dur_ms`.
+    Span { dur_ms: f64 },
+    /// Nestable async begin (`ph: "b"`), matched by (pid, cat, id).
+    AsyncBegin { id: u64 },
+    /// Nestable async end (`ph: "e"`).
+    AsyncEnd { id: u64 },
+    /// Instant (`ph: "i"`, thread scope).
+    Instant,
+    /// Flow start (`ph: "s"`), matched to its finish by (cat, id).
+    FlowStart { id: u64 },
+    /// Flow finish (`ph: "f"`, binding point `"e"`).
+    FlowFinish { id: u64 },
+}
+
+/// One trace event on the virtual clock.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Monotone emission sequence (survives ring-buffer drops: the first
+    /// retained event's `seq` equals the drop count).
+    pub seq: u64,
+    /// Virtual-clock timestamp (ms).
+    pub ts_ms: f64,
+    pub track: Track,
+    /// Category: `train`, `serve` or `publish`.
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub kind: EventKind,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// The recording state behind an enabled [`TraceHandle`].
+#[derive(Debug)]
+pub struct Tracer {
+    events: VecDeque<Event>,
+    capacity: usize,
+    dropped: u64,
+    seq: u64,
+    /// Async begins minus ends — 0 once every request span closed.
+    open_async: i64,
+    /// Flow ids started but not yet finished.  `flow_end` on an id not in
+    /// this set is a no-op, so serve code can emit finishes
+    /// unconditionally: runs without publications produce no flow noise,
+    /// and only the *first* finish per id emits (the causal edge is
+    /// "publication → first service on that version").
+    flows: BTreeSet<u64>,
+}
+
+impl Tracer {
+    fn new(capacity: usize) -> Self {
+        Self {
+            events: VecDeque::new(),
+            capacity: capacity.max(1),
+            dropped: 0,
+            seq: 0,
+            open_async: 0,
+            flows: BTreeSet::new(),
+        }
+    }
+
+    fn push(&mut self, ts_ms: f64, track: Track, cat: &'static str, name: &'static str, kind: EventKind, args: &[(&'static str, ArgValue)]) {
+        if self.events.len() >= self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        match kind {
+            EventKind::AsyncBegin { .. } => self.open_async += 1,
+            EventKind::AsyncEnd { .. } => self.open_async -= 1,
+            _ => {}
+        }
+        self.events.push_back(Event {
+            seq: self.seq,
+            ts_ms,
+            track,
+            cat,
+            name,
+            kind,
+            args: args.to_vec(),
+        });
+        self.seq += 1;
+    }
+
+    fn events(&self) -> &VecDeque<Event> {
+        &self.events
+    }
+}
+
+/// A cheap, cloneable handle to one shared tracer — or to nothing.
+///
+/// Every plane (training masters, the serving engine, the cosim driver)
+/// holds a clone; `off()` handles make every emission a no-op behind a
+/// single `Option` check.  Single-threaded by design (the discrete-event
+/// simulation is), hence `Rc`.
+#[derive(Debug, Clone)]
+pub struct TraceHandle(Option<Rc<RefCell<Tracer>>>);
+
+impl Default for TraceHandle {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl TraceHandle {
+    /// The disabled handle: every emission is a no-op.
+    pub fn off() -> Self {
+        Self(None)
+    }
+
+    /// A recording handle with the default ring capacity.
+    pub fn recording() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// A recording handle with an explicit ring capacity (events).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self(Some(Rc::new(RefCell::new(Tracer::new(capacity)))))
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Complete span `[t0_ms, t1_ms]` on `track`.
+    pub fn span(&self, track: Track, cat: &'static str, name: &'static str, t0_ms: f64, t1_ms: f64, args: &[(&'static str, ArgValue)]) {
+        if let Some(t) = &self.0 {
+            t.borrow_mut().push(
+                t0_ms,
+                track,
+                cat,
+                name,
+                EventKind::Span { dur_ms: (t1_ms - t0_ms).max(0.0) },
+                args,
+            );
+        }
+    }
+
+    /// Instant event at `ts_ms`.
+    pub fn instant(&self, track: Track, cat: &'static str, name: &'static str, ts_ms: f64, args: &[(&'static str, ArgValue)]) {
+        if let Some(t) = &self.0 {
+            t.borrow_mut().push(ts_ms, track, cat, name, EventKind::Instant, args);
+        }
+    }
+
+    /// Open an async lifecycle (e.g. a request), matched by (pid, cat, id).
+    pub fn async_begin(&self, track: Track, cat: &'static str, name: &'static str, id: u64, ts_ms: f64, args: &[(&'static str, ArgValue)]) {
+        if let Some(t) = &self.0 {
+            t.borrow_mut().push(ts_ms, track, cat, name, EventKind::AsyncBegin { id }, args);
+        }
+    }
+
+    /// Close an async lifecycle.  The outcome tag rides in `args`.
+    pub fn async_end(&self, track: Track, cat: &'static str, name: &'static str, id: u64, ts_ms: f64, args: &[(&'static str, ArgValue)]) {
+        if let Some(t) = &self.0 {
+            t.borrow_mut().push(ts_ms, track, cat, name, EventKind::AsyncEnd { id }, args);
+        }
+    }
+
+    /// Start a flow edge (arrow source).  A second start on a live id is
+    /// ignored.
+    pub fn flow_start(&self, track: Track, cat: &'static str, name: &'static str, id: u64, ts_ms: f64) {
+        if let Some(t) = &self.0 {
+            let mut t = t.borrow_mut();
+            if t.flows.insert(id) {
+                t.push(ts_ms, track, cat, name, EventKind::FlowStart { id }, &[]);
+            }
+        }
+    }
+
+    /// Finish a flow edge (arrow target).  No-op unless `id` has a live
+    /// start; only the first finish per id emits.
+    pub fn flow_end(&self, track: Track, cat: &'static str, name: &'static str, id: u64, ts_ms: f64) {
+        if let Some(t) = &self.0 {
+            let mut t = t.borrow_mut();
+            if t.flows.remove(&id) {
+                t.push(ts_ms, track, cat, name, EventKind::FlowFinish { id }, &[]);
+            }
+        }
+    }
+
+    /// Retained events (0 when disabled).
+    pub fn len(&self) -> usize {
+        self.0.as_ref().map_or(0, |t| t.borrow().events().len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events dropped by the ring bound.
+    pub fn dropped(&self) -> u64 {
+        self.0.as_ref().map_or(0, |t| t.borrow().dropped)
+    }
+
+    /// Async begins minus ends — 0 once every request lifecycle closed.
+    pub fn open_async(&self) -> i64 {
+        self.0.as_ref().map_or(0, |t| t.borrow().open_async)
+    }
+
+    /// Clone out the retained events (tests, custom exporters).
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.0
+            .as_ref()
+            .map_or_else(Vec::new, |t| t.borrow().events().iter().cloned().collect())
+    }
+
+    /// Chrome/Perfetto trace-event JSON (load via `chrome://tracing` or
+    /// <https://ui.perfetto.dev>).  Deterministic: object keys are sorted,
+    /// events are in emission order, timestamps are virtual-clock µs.
+    pub fn export_chrome_json(&self) -> String {
+        match &self.0 {
+            Some(t) => export::chrome_json(&t.borrow()),
+            None => export::chrome_json(&Tracer::new(1)),
+        }
+    }
+
+    /// Flat CSV export (one row per event) for ad-hoc analysis.
+    pub fn export_csv(&self) -> String {
+        match &self.0 {
+            Some(t) => export::csv(&t.borrow()),
+            None => export::csv(&Tracer::new(1)),
+        }
+    }
+
+    /// Write both exports: Chrome JSON at `path`, CSV at `{path}.csv`.
+    pub fn write(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.export_chrome_json())
+            .map_err(|e| format!("write {path}: {e}"))?;
+        let csv_path = format!("{path}.csv");
+        std::fs::write(&csv_path, self.export_csv())
+            .map_err(|e| format!("write {csv_path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let t = TraceHandle::off();
+        t.span(Track::master(0), "train", "iteration", 0.0, 4.0, &[]);
+        t.async_begin(Track::shard(0, 0), "serve", "request", 1, 0.0, &[]);
+        t.flow_start(Track::publisher(0), "publish", "first-serve", 7, 0.0);
+        t.flow_end(Track::publisher(0), "publish", "first-serve", 7, 1.0);
+        assert!(!t.is_on());
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.dropped(), 0);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn ring_bound_drops_oldest_and_counts() {
+        let t = TraceHandle::with_capacity(3);
+        for i in 0..5u64 {
+            t.instant(Track::master(0), "train", "tick", i as f64, &[("i", ArgValue::U64(i))]);
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        let events = t.snapshot();
+        // Oldest two dropped; first retained seq equals the drop count.
+        assert_eq!(events[0].seq, 2);
+        assert_eq!(events.last().unwrap().seq, 4);
+    }
+
+    #[test]
+    fn flow_end_without_start_is_a_no_op_and_first_finish_wins() {
+        let t = TraceHandle::recording();
+        t.flow_end(Track::shard(0, 0), "publish", "first-serve", 42, 1.0);
+        assert_eq!(t.len(), 0, "finish without start must not emit");
+        t.flow_start(Track::publisher(0), "publish", "first-serve", 42, 2.0);
+        t.flow_start(Track::publisher(0), "publish", "first-serve", 42, 2.5);
+        t.flow_end(Track::shard(0, 0), "publish", "first-serve", 42, 3.0);
+        t.flow_end(Track::shard(0, 1), "publish", "first-serve", 42, 4.0);
+        let kinds: Vec<EventKind> = t.snapshot().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::FlowStart { id: 42 }, EventKind::FlowFinish { id: 42 }],
+            "exactly one start and one finish per id"
+        );
+    }
+
+    #[test]
+    fn async_balance_is_tracked() {
+        let t = TraceHandle::recording();
+        t.async_begin(Track::shard(0, 0), "serve", "request", 1, 0.0, &[]);
+        t.async_begin(Track::shard(0, 0), "serve", "request", 2, 0.5, &[]);
+        assert_eq!(t.open_async(), 2);
+        t.async_end(Track::shard(0, 0), "serve", "request", 1, 1.0, &[("outcome", ArgValue::Str("served"))]);
+        assert_eq!(t.open_async(), 1);
+        t.async_end(Track::shard(0, 0), "serve", "request", 2, 1.5, &[("outcome", ArgValue::Str("shed"))]);
+        assert_eq!(t.open_async(), 0);
+    }
+
+    #[test]
+    fn chrome_export_shape_and_determinism() {
+        let build = || {
+            let t = TraceHandle::recording();
+            t.span(
+                Track::master(0),
+                "train",
+                "iteration",
+                0.0,
+                4000.0,
+                &[("iteration", ArgValue::U64(0)), ("vectors", ArgValue::U64(128))],
+            );
+            t.async_begin(Track::shard(1, 2), "serve", "request", 9, 10.0, &[]);
+            t.async_end(
+                Track::shard(1, 2),
+                "serve",
+                "request",
+                9,
+                12.5,
+                &[("outcome", ArgValue::Str("served"))],
+            );
+            t.flow_start(Track::publisher(1), "publish", "first-serve", 7, 11.0);
+            t.flow_end(Track::shard(1, 2), "publish", "first-serve", 7, 12.0);
+            t.export_chrome_json()
+        };
+        let json = build();
+        assert_eq!(json, build(), "same emissions → byte-identical export");
+        let doc = crate::json::parse(&json).unwrap();
+        let events = doc.req_array("traceEvents").unwrap();
+        // 5 emissions + metadata (2 processes + 3 tracks).
+        assert_eq!(events.len(), 10);
+        let phases: Vec<&str> = events
+            .iter()
+            .map(|e| e.req_str("ph").unwrap())
+            .collect();
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 5);
+        for ph in ["X", "b", "e", "s", "f"] {
+            assert!(phases.contains(&ph), "missing phase {ph}");
+        }
+        // Span timestamps are µs: 4000 ms → 4_000_000 µs.
+        let span = events.iter().find(|e| e.req_str("ph").unwrap() == "X").unwrap();
+        assert_eq!(span.req_f64("dur").unwrap(), 4_000_000.0);
+        assert_eq!(span.get("args").unwrap().req_f64("vectors").unwrap(), 128.0);
+        // Flow finish carries the binding point.
+        let f = events.iter().find(|e| e.req_str("ph").unwrap() == "f").unwrap();
+        assert_eq!(f.req_str("bp").unwrap(), "e");
+        assert_eq!(doc.req_str("displayTimeUnit").unwrap(), "ms");
+    }
+
+    #[test]
+    fn csv_export_has_one_row_per_event() {
+        let t = TraceHandle::recording();
+        t.span(Track::worker(0, 3), "train", "compute", 1.0, 2.0, &[("examples", ArgValue::U64(5))]);
+        t.instant(Track::master(0), "train", "broadcast", 2.0, &[]);
+        let csv = t.export_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 events");
+        assert_eq!(lines[0], "seq,ph,ts_ms,pid,tid,cat,name,id,dur_ms,args");
+        assert!(lines[1].contains("compute") && lines[1].contains("examples=5"));
+    }
+}

@@ -47,6 +47,7 @@ fn serve_config(duration_s: f64, seed: u64) -> ServeConfig {
         drained_shards: Vec::new(),
         cache_capacity: 256,
         response_bytes: 256,
+        keep_log: true,
     }
 }
 
@@ -446,6 +447,7 @@ fn two_project_config(iterations: u64, egress_bytes_per_min: f64) -> CosimConfig
             drained_shards: Vec::new(),
             cache_capacity: 256,
             response_bytes: 256,
+            keep_log: true,
         },
         egress_bytes_per_min,
         measure_delta: true,

@@ -47,6 +47,7 @@ fn config(max_batch: usize, cache: usize) -> ServeConfig {
         drained_shards: Vec::new(),
         cache_capacity: cache,
         response_bytes: 256,
+        keep_log: true,
     }
 }
 

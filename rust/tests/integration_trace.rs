@@ -1,0 +1,238 @@
+//! Integration: the unified virtual-clock trace plane over a full
+//! co-simulation — determinism (same seed+config ⇒ byte-identical
+//! exports), span-balance invariants, the publication → first-serve
+//! causal flow, and the Perfetto/Chrome trace-event JSON shape.
+
+use std::collections::BTreeMap;
+
+use mlitb::cosim::{run_cosim_traced, CosimConfig, CosimProject, PublicationPolicy};
+use mlitb::json;
+use mlitb::model::ModelSpec;
+use mlitb::netsim::LinkProfile;
+use mlitb::runtime::{Compute, DriftingCompute, ModeledCompute};
+use mlitb::serve::{
+    demo_spec, BatchPolicy, ClientSpec, FleetConfig, RouterConfig, RoutingPolicy, ServeConfig,
+    ServerProfile,
+};
+use mlitb::sim::SimConfig;
+use mlitb::trace::{Event, EventKind, TraceHandle};
+
+fn serve_config(duration_s: f64, seed: u64) -> ServeConfig {
+    ServeConfig {
+        fleets: vec![FleetConfig {
+            groups: vec![
+                ClientSpec { link: LinkProfile::Lan, rate_rps: 8.0, count: 3 },
+                ClientSpec { link: LinkProfile::Wifi, rate_rps: 5.0, count: 3 },
+            ],
+            duration_s,
+            input_pool: 32,
+            seed,
+        }],
+        policy: BatchPolicy {
+            max_batch: 32,
+            max_wait_ms: 5.0,
+            queue_depth: 512,
+        },
+        server: ServerProfile::default(),
+        router: RouterConfig {
+            shards: 2,
+            policy: RoutingPolicy::JoinShortestQueue,
+            coalesce: true,
+            ..RouterConfig::single()
+        },
+        shard_profiles: Vec::new(),
+        drained_shards: Vec::new(),
+        cache_capacity: 256,
+        response_bytes: 256,
+        keep_log: false,
+    }
+}
+
+fn train_config(spec: &ModelSpec, iterations: u64, seed: u64) -> SimConfig {
+    let mut train = SimConfig::paper_scaling(2, spec);
+    train.iterations = iterations;
+    train.train_size = 600;
+    train.test_size = 128;
+    train.track_every = 1;
+    train.master.iter_duration_s = 2.0;
+    train.seed = seed;
+    train
+}
+
+fn cosim_config(iterations: u64, seed: u64) -> CosimConfig {
+    let spec = demo_spec();
+    CosimConfig {
+        projects: vec![CosimProject {
+            train: train_config(&spec, iterations, seed),
+            spec,
+            publish: PublicationPolicy::every(2),
+            retain: 2,
+            weight: 1.0,
+        }],
+        serve: serve_config(iterations as f64 * 2.0, seed ^ 0xC0517),
+        egress_bytes_per_min: 0.0,
+        measure_delta: false,
+    }
+}
+
+/// Run a traced co-simulation, returning the trace handle.
+fn run_traced(cfg: &CosimConfig) -> TraceHandle {
+    let mut train_computes: Vec<DriftingCompute> = cfg
+        .projects
+        .iter()
+        .map(|p| DriftingCompute { param_count: p.spec.param_count })
+        .collect();
+    let train_refs: Vec<&mut dyn Compute> = train_computes
+        .iter_mut()
+        .map(|c| c as &mut dyn Compute)
+        .collect();
+    let mut serve_compute = ModeledCompute {
+        param_count: cfg.projects[0].spec.param_count,
+    };
+    let trace = TraceHandle::recording();
+    run_cosim_traced(cfg, train_refs, &mut serve_compute, trace.clone()).expect("cosim run");
+    trace
+}
+
+#[test]
+fn trace_export_is_byte_identical_across_seeded_runs() {
+    let cfg = cosim_config(6, 7);
+    let a = run_traced(&cfg);
+    let b = run_traced(&cfg);
+    assert!(!a.is_empty());
+    assert_eq!(a.export_chrome_json(), b.export_chrome_json());
+    assert_eq!(a.export_csv(), b.export_csv());
+    // A different seed must actually diverge — the determinism assertion
+    // above is vacuous if the export ignores the run.
+    let c = run_traced(&cosim_config(6, 8));
+    assert_ne!(a.export_chrome_json(), c.export_chrome_json());
+}
+
+#[test]
+fn spans_balance_and_all_planes_are_present() {
+    let trace = run_traced(&cosim_config(6, 7));
+    let evs = trace.snapshot();
+    assert_eq!(trace.dropped(), 0, "test run must fit the ring");
+    assert_eq!(trace.open_async(), 0, "every request span must close");
+
+    // All three planes landed on the one timeline.
+    for (cat, name) in [
+        ("train", "iteration"),
+        ("train", "compute"),
+        ("train", "ingest"),
+        ("serve", "request"),
+        ("serve", "batch"),
+        ("publish", "publish"),
+        ("publish", "activate"),
+    ] {
+        assert!(
+            evs.iter().any(|e| e.cat == cat && e.name == name),
+            "missing {cat}/{name} events"
+        );
+    }
+
+    // Every request id opens exactly once and closes exactly once, with
+    // exactly one terminal outcome tag.
+    let mut begins: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut ends: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in evs.iter().filter(|e| e.name == "request") {
+        match e.kind {
+            EventKind::AsyncBegin { id } => *begins.entry(id).or_default() += 1,
+            EventKind::AsyncEnd { id } => {
+                *ends.entry(id).or_default() += 1;
+                let outcome = e
+                    .args
+                    .iter()
+                    .find(|(k, _)| *k == "outcome")
+                    .map(|(_, v)| v.to_string())
+                    .expect("request end carries an outcome");
+                assert!(
+                    ["served", "shed", "coalesced"].contains(&outcome.as_str()),
+                    "unexpected outcome {outcome}"
+                );
+            }
+            _ => panic!("request events are async begin/end only"),
+        }
+    }
+    assert!(!begins.is_empty());
+    assert_eq!(begins, ends, "unbalanced request spans");
+    assert!(begins.values().all(|&n| n == 1), "request id reused");
+
+    // Span timestamps never run backwards within a track's seq order is
+    // not required (multiple tracks interleave), but no event may sit at
+    // a negative virtual time.
+    assert!(evs.iter().all(|e| e.ts_ms >= 0.0));
+}
+
+#[test]
+fn publication_flow_reaches_a_served_batch() {
+    let trace = run_traced(&cosim_config(6, 7));
+    let evs = trace.snapshot();
+    let start_of = |id: u64| -> Option<&Event> {
+        evs.iter().find(|e| e.kind == EventKind::FlowStart { id })
+    };
+    let finishes: Vec<&Event> = evs
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::FlowFinish { .. }))
+        .collect();
+    assert!(
+        !finishes.is_empty(),
+        "at least one publication must be picked up by a served batch"
+    );
+    for f in finishes {
+        let EventKind::FlowFinish { id } = f.kind else { unreachable!() };
+        let s = start_of(id).expect("flow finish without start");
+        assert!(f.ts_ms >= s.ts_ms, "flow arrow runs backwards in time");
+        assert_eq!(s.cat, "publish");
+        assert_eq!(f.cat, "publish");
+        // The arrow lands on a serving-shard track (tid 2000+s), i.e. the
+        // publication is causally linked to request service, not to
+        // another publisher event.
+        assert!(f.track.tid >= 2000, "flow must finish on a shard track");
+        assert_eq!(s.track.tid, 1, "flow must start on the publisher track");
+    }
+}
+
+#[test]
+fn chrome_export_is_valid_trace_event_json() {
+    let trace = run_traced(&cosim_config(4, 7));
+    let doc = json::parse(&trace.export_chrome_json()).expect("export must parse");
+    assert_eq!(doc.req_str("displayTimeUnit").unwrap(), "ms");
+    let events = doc.req_array("traceEvents").unwrap();
+    assert!(!events.is_empty());
+
+    // Nestable-async begin/end balance per (pid, cat, id), as Perfetto
+    // matches them; flow finishes must carry the binding point.
+    let mut open: BTreeMap<(f64, String, f64), i64> = BTreeMap::new();
+    let mut flow_starts = 0u64;
+    for e in events {
+        let ph = e.req_str("ph").unwrap();
+        assert!(
+            ["X", "b", "e", "i", "s", "f", "M"].contains(&ph),
+            "unexpected phase {ph}"
+        );
+        if ph == "M" {
+            let meta = e.req_str("name").unwrap();
+            assert!(["process_name", "thread_name"].contains(&meta));
+            continue;
+        }
+        assert!(e.req_f64("ts").unwrap() >= 0.0);
+        assert!(e.req_f64("pid").is_ok() && e.req_f64("tid").is_ok());
+        match ph {
+            "X" => assert!(e.req_f64("dur").unwrap() >= 0.0),
+            "b" | "e" => {
+                let key = (
+                    e.req_f64("pid").unwrap(),
+                    e.req_str("cat").unwrap().to_string(),
+                    e.req_f64("id").unwrap(),
+                );
+                *open.entry(key).or_default() += if ph == "b" { 1 } else { -1 };
+            }
+            "s" => flow_starts += 1,
+            "f" => assert_eq!(e.req_str("bp").unwrap(), "e"),
+            _ => {}
+        }
+    }
+    assert!(open.values().all(|&n| n == 0), "unbalanced async events");
+    assert!(flow_starts > 0);
+}
