@@ -77,7 +77,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let probs = engine.predict(model, &loaded.params, batch.images())?;
     let row = &probs[..spec.classes];
     let mut ranked: Vec<(usize, f32)> = row.iter().copied().enumerate().collect();
-    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
     println!("\nphase 4: tracking mode — Fig 7 table (true class: {true_label})");
     println!("  Index  Label     Probability");
     for (idx, p) in ranked.iter().take(4) {

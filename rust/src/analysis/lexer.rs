@@ -1,0 +1,536 @@
+//! Token-level lexer for the determinism linter.
+//!
+//! Hand-rolled in the same spirit as `crate::json`: zero dependencies,
+//! byte-indexed scanning, no allocation beyond the output vectors.  The
+//! lexer is deliberately *not* a full Rust lexer — it only needs to be
+//! precise about the constructs that would otherwise produce false
+//! positives in a token-pattern matcher:
+//!
+//! - string literals (plain, raw `r#"…"#` with any hash count, byte)
+//! - char literals vs lifetimes (`'x'` vs `'a`)
+//! - line comments and *nested* block comments
+//! - raw identifiers (`r#match`)
+//!
+//! Comments are captured separately (with their line numbers) so the
+//! rule layer can resolve `// lint: allow(<rule>) — <reason>`
+//! suppressions without re-scanning the source.
+
+/// Classification of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`HashMap`, `for`, `iter`, …).
+    Ident,
+    /// Lifetime marker such as `'a` (the leading `'` is included).
+    Lifetime,
+    /// String literal of any flavour (plain, raw, byte, byte-raw).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Numeric literal (integers and floats, lexed conservatively).
+    Num,
+    /// Any single punctuation byte (`.`, `:`, `(`, `!`, …).
+    Punct,
+}
+
+/// One lexed token with its source position (1-based line and column).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A comment captured during lexing, used for suppression lookup.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Comment text without the `//` / `/*` delimiters, trimmed.
+    pub text: String,
+    /// Line the comment *starts* on (1-based).
+    pub line: u32,
+    /// Line the comment ends on (same as `line` for `//` comments).
+    pub end_line: u32,
+}
+
+/// Lexer output: the token stream plus the captured comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(src: &'a str) -> Self {
+        Cursor {
+            bytes: src.as_bytes(),
+            pos: 0,
+            line: 1,
+            col: 1,
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<u8> {
+        self.bytes.get(self.pos + off).copied()
+    }
+
+    /// Advance one byte, tracking line/column.  Multi-byte UTF-8
+    /// continuation bytes do not bump the column, so columns count
+    /// characters, not bytes.
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else if b & 0xc0 != 0x80 {
+            self.col += 1;
+        }
+        Some(b)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Lex `src` into tokens and comments.  Never panics: malformed input
+/// (unterminated strings, stray bytes) degrades to best-effort tokens
+/// rather than an error, because the linter must not crash on the code
+/// it is trying to check.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor::new(src);
+    let mut out = Lexed::default();
+
+    while let Some(b) = cur.peek() {
+        let (line, col) = (cur.line, cur.col);
+        match b {
+            b' ' | b'\t' | b'\r' | b'\n' => {
+                cur.bump();
+            }
+            b'/' if cur.peek_at(1) == Some(b'/') => {
+                let start = cur.pos + 2;
+                while let Some(c) = cur.peek() {
+                    if c == b'\n' {
+                        break;
+                    }
+                    cur.bump();
+                }
+                let text = std::str::from_utf8(&cur.bytes[start..cur.pos])
+                    .unwrap_or("")
+                    .trim()
+                    .to_string();
+                out.comments.push(Comment {
+                    text,
+                    line,
+                    end_line: line,
+                });
+            }
+            b'/' if cur.peek_at(1) == Some(b'*') => {
+                cur.bump();
+                cur.bump();
+                let start = cur.pos;
+                let mut depth = 1usize;
+                let mut end = cur.pos;
+                while depth > 0 {
+                    match (cur.peek(), cur.peek_at(1)) {
+                        (Some(b'/'), Some(b'*')) => {
+                            depth += 1;
+                            cur.bump();
+                            cur.bump();
+                        }
+                        (Some(b'*'), Some(b'/')) => {
+                            depth -= 1;
+                            end = cur.pos;
+                            cur.bump();
+                            cur.bump();
+                        }
+                        (Some(_), _) => {
+                            cur.bump();
+                        }
+                        (None, _) => break,
+                    }
+                }
+                let end = end.max(start);
+                let text = std::str::from_utf8(&cur.bytes[start..end])
+                    .unwrap_or("")
+                    .trim()
+                    .to_string();
+                out.comments.push(Comment {
+                    text,
+                    line,
+                    end_line: cur.line,
+                });
+            }
+            b'r' | b'b' if starts_raw_or_byte_literal(&cur) => {
+                let text = lex_raw_or_byte(&mut cur);
+                out.tokens.push(Token {
+                    kind: TokenKind::Str,
+                    text,
+                    line,
+                    col,
+                });
+            }
+            _ if is_ident_start(b) => {
+                let start = cur.pos;
+                while let Some(c) = cur.peek() {
+                    if is_ident_continue(c) {
+                        cur.bump();
+                    } else {
+                        break;
+                    }
+                }
+                // b'x' byte-char literal: `b` directly followed by `'`.
+                let text = String::from_utf8_lossy(&cur.bytes[start..cur.pos]).into_owned();
+                if text == "b" && cur.peek() == Some(b'\'') {
+                    let ch = lex_char_body(&mut cur);
+                    out.tokens.push(Token {
+                        kind: TokenKind::Char,
+                        text: format!("b{ch}"),
+                        line,
+                        col,
+                    });
+                } else {
+                    out.tokens.push(Token {
+                        kind: TokenKind::Ident,
+                        text,
+                        line,
+                        col,
+                    });
+                }
+            }
+            b'"' => {
+                let text = lex_plain_string(&mut cur);
+                out.tokens.push(Token {
+                    kind: TokenKind::Str,
+                    text,
+                    line,
+                    col,
+                });
+            }
+            b'\'' => {
+                // Disambiguate char literal from lifetime.  After the
+                // quote: a backslash always means a char escape; an
+                // ident char followed by a closing quote is a char
+                // (`'x'`); otherwise it is a lifetime (`'a`, `'static`).
+                let kind = classify_quote(&cur);
+                match kind {
+                    QuoteKind::Char => {
+                        let text = lex_char_body(&mut cur);
+                        out.tokens.push(Token {
+                            kind: TokenKind::Char,
+                            text,
+                            line,
+                            col,
+                        });
+                    }
+                    QuoteKind::Lifetime => {
+                        let start = cur.pos;
+                        cur.bump(); // '
+                        while let Some(c) = cur.peek() {
+                            if is_ident_continue(c) {
+                                cur.bump();
+                            } else {
+                                break;
+                            }
+                        }
+                        let text =
+                            String::from_utf8_lossy(&cur.bytes[start..cur.pos]).into_owned();
+                        out.tokens.push(Token {
+                            kind: TokenKind::Lifetime,
+                            text,
+                            line,
+                            col,
+                        });
+                    }
+                }
+            }
+            _ if b.is_ascii_digit() => {
+                let start = cur.pos;
+                cur.bump();
+                while let Some(c) = cur.peek() {
+                    if c.is_ascii_alphanumeric() || c == b'_' {
+                        cur.bump();
+                    } else if c == b'.' && cur.peek_at(1).is_some_and(|d| d.is_ascii_digit()) {
+                        // `1.5` continues the number; `0..n` does not.
+                        cur.bump();
+                    } else {
+                        break;
+                    }
+                }
+                let text = String::from_utf8_lossy(&cur.bytes[start..cur.pos]).into_owned();
+                out.tokens.push(Token {
+                    kind: TokenKind::Num,
+                    text,
+                    line,
+                    col,
+                });
+            }
+            _ => {
+                cur.bump();
+                out.tokens.push(Token {
+                    kind: TokenKind::Punct,
+                    text: (b as char).to_string(),
+                    line,
+                    col,
+                });
+            }
+        }
+    }
+    out
+}
+
+enum QuoteKind {
+    Char,
+    Lifetime,
+}
+
+/// Look past a `'` and decide char-literal vs lifetime without
+/// consuming anything.
+fn classify_quote(cur: &Cursor<'_>) -> QuoteKind {
+    match cur.peek_at(1) {
+        Some(b'\\') => QuoteKind::Char,
+        Some(c) if is_ident_start(c) => {
+            // `'x'` is a char, `'x` (no closing quote after one ident
+            // char run) is a lifetime.  Scan the ident run.
+            let mut off = 2;
+            while cur.peek_at(off).is_some_and(is_ident_continue) {
+                off += 1;
+            }
+            if cur.peek_at(off) == Some(b'\'') {
+                QuoteKind::Char
+            } else {
+                QuoteKind::Lifetime
+            }
+        }
+        Some(_) => QuoteKind::Char, // '1', ' ' etc.
+        None => QuoteKind::Lifetime,
+    }
+}
+
+/// Consume a char literal starting at `'`.  Returns its full text.
+fn lex_char_body(cur: &mut Cursor<'_>) -> String {
+    let start = cur.pos;
+    cur.bump(); // opening '
+    if cur.peek() == Some(b'\\') {
+        cur.bump();
+        cur.bump(); // escaped byte (enough for \n, \', \\, and the x of \x7f)
+        while let Some(c) = cur.peek() {
+            if c == b'\'' {
+                break;
+            }
+            cur.bump();
+        }
+    } else {
+        // one char, possibly multi-byte
+        cur.bump();
+        while cur.peek().is_some_and(|c| c & 0xc0 == 0x80) {
+            cur.bump();
+        }
+    }
+    cur.bump(); // closing '
+    String::from_utf8_lossy(&cur.bytes[start..cur.pos]).into_owned()
+}
+
+/// True if the cursor sits on `r"`, `r#`-string, `r#ident`, `b"`,
+/// `br"`, or `br#` — anything needing raw/byte-literal handling.
+/// (`r#ident` is handled here too: we return false and let the ident
+/// path deal with it only if it is *not* followed by `"` or more `#`s
+/// that lead to a quote.)
+fn starts_raw_or_byte_literal(cur: &Cursor<'_>) -> bool {
+    let b0 = cur.peek();
+    let mut off = 1;
+    if b0 == Some(b'b') && cur.peek_at(1) == Some(b'r') {
+        off = 2;
+    } else if b0 == Some(b'b') {
+        // b"…" byte string; b'…' handled by the ident path.
+        return cur.peek_at(1) == Some(b'"');
+    }
+    // here: r… or br…
+    match cur.peek_at(off) {
+        Some(b'"') => true,
+        Some(b'#') => {
+            // skip hashes; raw string iff they end in a quote
+            let mut k = off;
+            while cur.peek_at(k) == Some(b'#') {
+                k += 1;
+            }
+            cur.peek_at(k) == Some(b'"')
+        }
+        _ => false,
+    }
+}
+
+/// Consume a raw string `r#*"…"#*`, byte string `b"…"`, or byte-raw
+/// string `br#*"…"#*`.  Returns the full literal text.
+fn lex_plain_string(cur: &mut Cursor<'_>) -> String {
+    let start = cur.pos;
+    cur.bump(); // opening "
+    while let Some(c) = cur.peek() {
+        match c {
+            b'\\' => {
+                cur.bump();
+                cur.bump();
+            }
+            b'"' => {
+                cur.bump();
+                break;
+            }
+            _ => {
+                cur.bump();
+            }
+        }
+    }
+    String::from_utf8_lossy(&cur.bytes[start..cur.pos]).into_owned()
+}
+
+fn lex_raw_or_byte(cur: &mut Cursor<'_>) -> String {
+    let start = cur.pos;
+    if cur.peek() == Some(b'b') {
+        cur.bump();
+    }
+    if cur.peek() == Some(b'r') {
+        cur.bump();
+        let mut hashes = 0usize;
+        while cur.peek() == Some(b'#') {
+            hashes += 1;
+            cur.bump();
+        }
+        cur.bump(); // opening "
+        // scan for `"` followed by `hashes` hashes
+        'outer: while let Some(c) = cur.peek() {
+            if c == b'"' {
+                for k in 1..=hashes {
+                    if cur.peek_at(k) != Some(b'#') {
+                        cur.bump();
+                        continue 'outer;
+                    }
+                }
+                cur.bump(); // closing "
+                for _ in 0..hashes {
+                    cur.bump();
+                }
+                break;
+            }
+            cur.bump();
+        }
+        String::from_utf8_lossy(&cur.bytes[start..cur.pos]).into_owned()
+    } else {
+        // plain byte string b"…": escapes behave like a normal string
+        let tail = lex_plain_string(cur);
+        let mut text = String::from_utf8_lossy(&cur.bytes[start..start + 1]).into_owned();
+        text.push_str(&tail);
+        text
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn by_kind(l: &Lexed, kind: TokenKind) -> Vec<String> {
+        let mut v = Vec::new();
+        for t in &l.tokens {
+            if t.kind == kind {
+                v.push(t.text.clone());
+            }
+        }
+        v
+    }
+
+    fn idents(src: &str) -> Vec<String> {
+        by_kind(&lex(src), TokenKind::Ident)
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        use TokenKind::{Ident, Punct};
+        let l = lex("m.iter()");
+        let kinds: Vec<_> = l.tokens.iter().map(|t| t.kind).collect();
+        assert_eq!(kinds, vec![Ident, Punct, Ident, Punct, Punct]);
+        assert_eq!(l.tokens[0].line, 1);
+        assert_eq!(l.tokens[0].col, 1);
+        assert_eq!(l.tokens[2].col, 3);
+    }
+
+    #[test]
+    fn string_contents_are_not_idents() {
+        assert_eq!(idents("let s = \"partial_cmp unwrap\";"), vec!["let", "s"]);
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_quotes() {
+        let src = r####"let s = r#"inner "quote" and partial_cmp"#; x"####;
+        assert_eq!(idents(src), vec!["let", "s", "x"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        assert_eq!(idents(src), vec!["a", "b"]);
+        let l = lex(src);
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("inner"));
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        assert_eq!(by_kind(&l, TokenKind::Lifetime), vec!["'a", "'a"]);
+        assert_eq!(by_kind(&l, TokenKind::Char), vec!["'x'", "'\\n'"]);
+    }
+
+    #[test]
+    fn static_lifetime_is_lifetime() {
+        let l = lex("&'static str");
+        assert_eq!(l.tokens[1].kind, TokenKind::Lifetime);
+        assert_eq!(l.tokens[1].text, "'static");
+    }
+
+    #[test]
+    fn byte_string_and_byte_char() {
+        let l = lex("let a = b\"bytes\"; let c = b'x';");
+        assert_eq!(by_kind(&l, TokenKind::Str), vec!["b\"bytes\""]);
+        assert_eq!(by_kind(&l, TokenKind::Char), vec!["b'x'"]);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let l = lex("for i in 0..n { let x = 1.5f64; }");
+        assert_eq!(by_kind(&l, TokenKind::Num), vec!["0", "1.5f64"]);
+    }
+
+    #[test]
+    fn line_comment_captured_with_line() {
+        let l = lex("let a = 1;\n// lint: allow(wall-clock) — bench only\nlet b = 2;");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].line, 2);
+        assert!(l.comments[0].text.starts_with("lint:"));
+    }
+
+    #[test]
+    fn unterminated_string_does_not_panic() {
+        let l = lex("let s = \"never closed");
+        assert_eq!(l.tokens.last().unwrap().kind, TokenKind::Str);
+    }
+
+    #[test]
+    fn raw_ident_is_ident() {
+        // `r#match` — the `r` path must fall through to ident lexing.
+        assert_eq!(idents("let r#match = 1;"), vec!["let", "r", "match"]);
+    }
+}

@@ -1,0 +1,124 @@
+//! `mlitb lint` — zero-dependency static analyzer for the crate's own
+//! determinism invariants.
+//!
+//! The repo's headline claims — equal seeds give bitwise-identical
+//! params and byte-identical trace exports — rest on conventions a
+//! compiler never checks: no unordered-map iteration on deterministic
+//! paths, `total_cmp` instead of `partial_cmp().unwrap()`, no
+//! wall-clock reads outside `bench/`, all randomness through `rng::`,
+//! no unscoped threads, no printing from library planes.  This module
+//! turns those conventions into a checker, hand-rolled in the same
+//! zero-dep spirit as `crate::json`:
+//!
+//! - [`lexer`] — a small Rust lexer (strings, raw strings, char vs
+//!   lifetime, nested block comments) producing tokens + comments;
+//! - [`rules`] — six token-pattern rule passes scoped by module path;
+//! - [`report`] — stable-ordered diagnostics, rendered to `String`.
+//!
+//! Suppression: `// lint: allow(<rule>) — <reason>` on the offending
+//! line or the line above; the reason is mandatory.  See DESIGN.md
+//! "Determinism discipline" for every rule and its rationale.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use report::{Diagnostic, Report};
+pub use rules::RuleId;
+
+/// Analyze one file's source text.  `rel_path` is used both for rule
+/// scoping (module path) and for diagnostic positions.
+pub fn analyze_source(rel_path: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lexer::lex(src);
+    let mut diags = rules::run_rules(rel_path, &lexed);
+    let sups = rules::parse_suppressions(&lexed.comments);
+    if !sups.is_empty() {
+        apply_suppressions(&mut diags, &sups, &lexed);
+    }
+    for s in &sups {
+        if s.rule.is_none() {
+            diags.push(Diagnostic {
+                path: rel_path.to_string(),
+                line: s.line,
+                col: 1,
+                rule: RuleId::BadSuppression,
+                message: format!(
+                    "unknown rule `{}` in lint: allow(…) — known rules: {}",
+                    s.raw_rule,
+                    RuleId::ALL.map(|r| r.id()).join(", ")
+                ),
+                snippet: format!("lint: allow({})", s.raw_rule),
+                suppressed: false,
+                missing_reason: false,
+            });
+        }
+    }
+    diags
+}
+
+/// A suppression covers findings on the comment's own line(s) — the
+/// trailing-comment case — and on the first token-bearing line after
+/// it — the comment-above case.
+fn apply_suppressions(
+    diags: &mut [Diagnostic],
+    suppressions: &[rules::Suppression],
+    lexed: &lexer::Lexed,
+) {
+    for s in suppressions {
+        let Some(rule) = s.rule else { continue };
+        let next_line = lexed
+            .tokens
+            .iter()
+            .map(|t| t.line)
+            .filter(|&l| l > s.end_line)
+            .min();
+        for d in diags.iter_mut() {
+            if d.rule != rule {
+                continue;
+            }
+            let covered = (d.line >= s.line && d.line <= s.end_line) || Some(d.line) == next_line;
+            if covered {
+                if s.has_reason {
+                    d.suppressed = true;
+                } else {
+                    d.missing_reason = true;
+                }
+            }
+        }
+    }
+}
+
+/// Analyze a file on disk, using its path string for scoping.
+pub fn analyze_file(path: &Path) -> io::Result<Vec<Diagnostic>> {
+    let src = fs::read_to_string(path)?;
+    Ok(analyze_source(&path.to_string_lossy(), &src))
+}
+
+/// Recursively lint every `.rs` file under `root` (which may itself be
+/// a single file).  Files are visited in sorted path order, so the
+/// report is deterministic regardless of directory-entry order.
+pub fn analyze_tree(root: &Path, report: &mut Report) -> io::Result<()> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    for f in &files {
+        report.extend(analyze_file(f)?);
+    }
+    report.sort();
+    Ok(())
+}
+
+fn collect_rs_files(path: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if path.is_dir() {
+        for entry in fs::read_dir(path)? {
+            collect_rs_files(&entry?.path(), out)?;
+        }
+    } else if path.extension().is_some_and(|e| e == "rs") {
+        out.push(path.to_path_buf());
+    }
+    Ok(())
+}

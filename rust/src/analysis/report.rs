@@ -1,0 +1,98 @@
+//! Diagnostic collection and rendering for `mlitb lint`.
+//!
+//! Nothing in this module (or anywhere under `analysis/`) prints:
+//! [`Report::render`] returns a `String` and the CLI decides where it
+//! goes — which also keeps the analyzer clean under its own
+//! stray-print rule.
+
+use super::rules::RuleId;
+
+/// One finding, positioned and classified.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Path as given on the command line (slash-normalized).
+    pub path: String,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// 1-based column of the offending token.
+    pub col: u32,
+    pub rule: RuleId,
+    /// Human explanation of why this pattern is banned.
+    pub message: String,
+    /// Compact reconstruction of the offending tokens.
+    pub snippet: String,
+    /// Covered by a well-formed `lint: allow` with a reason.
+    pub suppressed: bool,
+    /// A `lint: allow` matched but carried no reason — the finding
+    /// stays live and the render says why.
+    pub missing_reason: bool,
+}
+
+/// All findings for a lint run, in stable (path, line, col) order.
+#[derive(Debug, Default)]
+pub struct Report {
+    diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn extend(&mut self, diags: Vec<Diagnostic>) {
+        self.diags.extend(diags);
+    }
+
+    /// Every finding, suppressed or not.
+    pub fn all(&self) -> &[Diagnostic] {
+        &self.diags
+    }
+
+    /// Findings that gate CI: not suppressed, or suppressed without a
+    /// reason.
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diags.iter().filter(|d| !d.suppressed)
+    }
+
+    pub fn unsuppressed_count(&self) -> usize {
+        self.unsuppressed().count()
+    }
+
+    pub fn suppressed_count(&self) -> usize {
+        self.diags.len() - self.unsuppressed_count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.unsuppressed_count() == 0
+    }
+
+    /// Stable ordering: path, then line, then column, then rule.
+    pub fn sort(&mut self) {
+        self.diags.sort_by(|a, b| {
+            (&a.path, a.line, a.col, a.rule).cmp(&(&b.path, b.line, b.col, b.rule))
+        });
+    }
+
+    /// Render the gating findings plus a one-line summary.  Returns an
+    /// empty string when the tree is clean and nothing was suppressed.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in self.unsuppressed() {
+            out.push_str(&format!(
+                "{}:{}:{}: [{}] {} — `{}`",
+                d.path,
+                d.line,
+                d.col,
+                d.rule.id(),
+                d.message,
+                d.snippet
+            ));
+            if d.missing_reason {
+                out.push_str("  (lint: allow present but the reason is missing)");
+            }
+            out.push('\n');
+        }
+        let live = self.unsuppressed_count();
+        let quiet = self.suppressed_count();
+        if live > 0 || quiet > 0 {
+            out.push_str(&format!("lint: {live} finding(s), {quiet} suppressed with reason\n"));
+        }
+        out
+    }
+}

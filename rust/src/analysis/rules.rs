@@ -1,0 +1,538 @@
+//! Determinism rule passes over the token stream.
+//!
+//! Every rule is a token-pattern matcher scoped by module path — no
+//! type inference, so the matchers are deliberately conservative and
+//! anchored on qualified paths (`std :: time`, `thread :: spawn`) or
+//! on receivers *declared in the same file* as `HashMap`/`HashSet`
+//! (the unordered-iteration rule).  False-positive escape hatch:
+//! `// lint: allow(<rule>) — <reason>` on or directly above the
+//! offending line, reason mandatory (see [`parse_suppressions`]).
+
+use super::lexer::{Comment, Lexed, Token, TokenKind};
+use super::report::Diagnostic;
+
+/// The six determinism rules plus the meta-diagnostic for malformed
+/// suppression comments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// `.iter()/.keys()/.values()/.drain()/for … in &` on a
+    /// `HashMap`/`HashSet` receiver inside an order-sensitive plane.
+    UnorderedIteration,
+    /// `partial_cmp` chained with `.unwrap()` or used inside a sort/
+    /// min/max comparator — NaN panics; use `total_cmp`.
+    FloatOrdUnwrap,
+    /// `std::time::{Instant,SystemTime}` or `thread::sleep` outside
+    /// `bench/` — wall-clock reads break virtual-clock determinism.
+    WallClock,
+    /// RNG construction outside `rng::` — all randomness must flow
+    /// from an explicitly seeded `Pcg32`.
+    UnseededRandomness,
+    /// `thread::spawn` outside `params/sharded.rs` — unscoped threads
+    /// make completion order a scheduler artifact.
+    RawSpawn,
+    /// `println!`/`eprintln!`/`dbg!` outside `cli/`, `main.rs` and
+    /// benches — library planes must return data, not print it.
+    StrayPrint,
+    /// A `lint: allow(…)` comment naming an unknown rule.
+    BadSuppression,
+}
+
+impl RuleId {
+    /// The six user-facing rules (excludes [`RuleId::BadSuppression`]).
+    pub const ALL: [RuleId; 6] = [
+        RuleId::UnorderedIteration,
+        RuleId::FloatOrdUnwrap,
+        RuleId::WallClock,
+        RuleId::UnseededRandomness,
+        RuleId::RawSpawn,
+        RuleId::StrayPrint,
+    ];
+
+    /// Stable diagnostic / suppression id.
+    pub fn id(self) -> &'static str {
+        match self {
+            RuleId::UnorderedIteration => "unordered-iteration",
+            RuleId::FloatOrdUnwrap => "float-ord-unwrap",
+            RuleId::WallClock => "wall-clock",
+            RuleId::UnseededRandomness => "unseeded-randomness",
+            RuleId::RawSpawn => "raw-spawn",
+            RuleId::StrayPrint => "stray-print",
+            RuleId::BadSuppression => "bad-suppression",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<RuleId> {
+        RuleId::ALL.iter().copied().find(|r| r.id() == s)
+    }
+}
+
+/// Module scope derived from the (slash-normalized) relative path.
+#[derive(Debug)]
+struct Scope {
+    /// Path components after the last `src` component (empty when the
+    /// path has no `src`, e.g. `benches/micro.rs`).
+    module: Vec<String>,
+    /// Under `benches/`, `examples/` or `tests/` — measurement and
+    /// harness code where wall-clock and printing are the point.
+    bench_like: bool,
+    is_main: bool,
+}
+
+impl Scope {
+    fn new(rel_path: &str) -> Self {
+        let norm = rel_path.replace('\\', "/");
+        let mut parts: Vec<&str> = norm.split('/').collect();
+        parts.retain(|p| !p.is_empty() && *p != ".");
+        let after_src = match parts.iter().rposition(|p| *p == "src") {
+            Some(i) => &parts[i + 1..],
+            None => &parts[..],
+        };
+        let mut bench_like = after_src.first() == Some(&"bench");
+        for p in &parts {
+            if matches!(*p, "benches" | "examples" | "tests") {
+                bench_like = true;
+            }
+        }
+        Scope {
+            module: after_src.iter().map(|s| s.to_string()).collect(),
+            bench_like,
+            is_main: after_src == ["main.rs"],
+        }
+    }
+
+    fn top(&self) -> &str {
+        self.module.first().map(String::as_str).unwrap_or("")
+    }
+
+    /// Order-sensitive planes: anywhere map iteration order could leak
+    /// into params, schedules, logs or exports.
+    fn ordered_plane(&self) -> bool {
+        const PLANES: [&str; 10] = [
+            "sim",
+            "serve",
+            "cosim",
+            "coordinator",
+            "params",
+            "netsim",
+            "trace",
+            "metrics",
+            "data",
+            "client",
+        ];
+        PLANES.contains(&self.top())
+    }
+
+    fn wall_clock_exempt(&self) -> bool {
+        self.bench_like || self.top() == "bench"
+    }
+
+    fn rng_exempt(&self) -> bool {
+        self.top() == "rng"
+    }
+
+    fn spawn_exempt(&self) -> bool {
+        self.module == ["params", "sharded.rs"]
+    }
+
+    fn print_exempt(&self) -> bool {
+        self.bench_like || self.is_main || self.top() == "cli" || self.top() == "bench"
+    }
+}
+
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+const SORT_FNS: [&str; 9] = [
+    "sort_by",
+    "sort_unstable_by",
+    "sort_by_key",
+    "sort_unstable_by_key",
+    "min_by",
+    "max_by",
+    "min_by_key",
+    "max_by_key",
+    "binary_search_by",
+];
+
+const RNG_IDENTS: [&str; 5] = ["thread_rng", "from_entropy", "OsRng", "getrandom", "RandomState"];
+
+/// Run every rule over one lexed file.  `rel_path` scopes the rules;
+/// suppressions are applied by the caller (`analysis::analyze_source`).
+pub fn run_rules(rel_path: &str, lexed: &Lexed) -> Vec<Diagnostic> {
+    let scope = Scope::new(rel_path);
+    let toks = &lexed.tokens;
+    let mut out = Vec::new();
+
+    let map_names = if scope.ordered_plane() {
+        collect_map_names(toks)
+    } else {
+        Vec::new()
+    };
+
+    // Sort-comparator context for float-ord-unwrap: stack of paren
+    // depths at which a sort/min/max call opened.
+    let mut depth = 0usize;
+    let mut sort_depths: Vec<usize> = Vec::new();
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        match t.kind {
+            TokenKind::Punct if t.text == "(" => {
+                depth += 1;
+                if i > 0
+                    && toks[i - 1].kind == TokenKind::Ident
+                    && SORT_FNS.contains(&toks[i - 1].text.as_str())
+                {
+                    sort_depths.push(depth);
+                }
+                continue;
+            }
+            TokenKind::Punct if t.text == ")" => {
+                if sort_depths.last() == Some(&depth) {
+                    sort_depths.pop();
+                }
+                depth = depth.saturating_sub(1);
+                continue;
+            }
+            TokenKind::Ident => {}
+            _ => continue,
+        }
+
+        // --- unordered-iteration -------------------------------------
+        if !map_names.is_empty() {
+            if ITER_METHODS.contains(&t.text.as_str())
+                && tok_is(toks, i + 1, "(")
+                && tok_is(toks, i.wrapping_sub(1), ".")
+                && i >= 2
+                && toks[i - 2].kind == TokenKind::Ident
+                && map_names.contains(&toks[i - 2].text)
+            {
+                out.push(diag(
+                    RuleId::UnorderedIteration,
+                    rel_path,
+                    &toks[i - 2],
+                    format!("`{}.{}()` iterates a HashMap/HashSet", toks[i - 2].text, t.text),
+                    snippet(toks, i - 2, 5),
+                ));
+            }
+            if t.text == "for" {
+                if let Some(d) = for_loop_over_map(toks, i, &map_names, rel_path) {
+                    out.push(d);
+                }
+            }
+        }
+
+        // --- float-ord-unwrap ----------------------------------------
+        if t.text == "partial_cmp" {
+            let in_sort = !sort_depths.is_empty();
+            let unwrapped = call_then_unwrap(toks, i);
+            if in_sort || unwrapped {
+                let why = if unwrapped {
+                    "`partial_cmp(..).unwrap()` panics on NaN"
+                } else {
+                    "`partial_cmp` inside a comparator panics on NaN"
+                };
+                out.push(diag(
+                    RuleId::FloatOrdUnwrap,
+                    rel_path,
+                    t,
+                    format!("{why}; use `total_cmp`"),
+                    snippet(toks, i, 6),
+                ));
+            }
+        }
+
+        // --- wall-clock ----------------------------------------------
+        if !scope.wall_clock_exempt() {
+            let hit = (t.text == "std" && path_next(toks, i, "time"))
+                || ((t.text == "Instant" || t.text == "SystemTime") && path_next(toks, i, "now"))
+                || (t.text == "thread" && path_next(toks, i, "sleep"));
+            if hit {
+                out.push(diag(
+                    RuleId::WallClock,
+                    rel_path,
+                    t,
+                    "wall-clock access outside bench/ breaks virtual-clock determinism",
+                    snippet(toks, i, 6),
+                ));
+            }
+        }
+
+        // --- unseeded-randomness -------------------------------------
+        if !scope.rng_exempt() {
+            let hit = RNG_IDENTS.contains(&t.text.as_str())
+                || (t.text == "rand" && tok_is(toks, i + 1, ":") && tok_is(toks, i + 2, ":"));
+            if hit {
+                out.push(diag(
+                    RuleId::UnseededRandomness,
+                    rel_path,
+                    t,
+                    "RNG construction outside rng:: — all randomness must be seeded Pcg32",
+                    snippet(toks, i, 6),
+                ));
+            }
+        }
+
+        // --- raw-spawn -----------------------------------------------
+        if !scope.spawn_exempt() && t.text == "thread" && path_next(toks, i, "spawn") {
+            out.push(diag(
+                RuleId::RawSpawn,
+                rel_path,
+                t,
+                "thread::spawn outside params/sharded.rs — use the scoped reduce pool",
+                snippet(toks, i, 6),
+            ));
+        }
+
+        // --- stray-print ---------------------------------------------
+        if !scope.print_exempt()
+            && matches!(t.text.as_str(), "println" | "print" | "eprintln" | "eprint" | "dbg")
+            && tok_is(toks, i + 1, "!")
+        {
+            out.push(diag(
+                RuleId::StrayPrint,
+                rel_path,
+                t,
+                "printing from a library plane — return data and print in cli/ or main.rs",
+                snippet(toks, i, 4),
+            ));
+        }
+    }
+
+    out.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    out.dedup_by(|a, b| a.line == b.line && a.col == b.col && a.rule == b.rule);
+    out
+}
+
+/// Pass 1 of unordered-iteration: names declared in this file with a
+/// `HashMap`/`HashSet` type annotation or `= HashMap::new()`-style
+/// initializer (`name : [path ::] HashMap` or `name = [path ::]
+/// HashMap`).
+fn collect_map_names(toks: &[Token]) -> Vec<String> {
+    let mut names = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokenKind::Ident
+            || (toks[i].text != "HashMap" && toks[i].text != "HashSet")
+        {
+            continue;
+        }
+        // Walk left over `ident ::` path qualifiers.
+        let mut j = i;
+        while j >= 3
+            && tok_is(toks, j - 1, ":")
+            && tok_is(toks, j - 2, ":")
+            && toks[j - 3].kind == TokenKind::Ident
+        {
+            j -= 3;
+        }
+        // Before the path: a single `:` (type annotation) or `=`
+        // (initializer), preceded by the binding name.
+        if j >= 2 {
+            let sep_single_colon = tok_is(toks, j - 1, ":") && !tok_is(toks, j - 2, ":");
+            let sep = if sep_single_colon {
+                j - 1
+            } else if tok_is(toks, j - 1, "=") {
+                j - 1
+            } else {
+                continue;
+            };
+            if sep >= 1 && toks[sep - 1].kind == TokenKind::Ident {
+                let name = &toks[sep - 1].text;
+                if !names.contains(name) {
+                    names.push(name.clone());
+                }
+            }
+        }
+    }
+    names
+}
+
+/// `for … in [&][mut] [self.]name {` where `name` is a known map.
+fn for_loop_over_map(
+    toks: &[Token],
+    for_idx: usize,
+    map_names: &[String],
+    rel_path: &str,
+) -> Option<Diagnostic> {
+    // Find the `in` keyword (bounded scan: patterns are destructuring
+    // only, never long).
+    let in_idx = (for_idx + 1..toks.len().min(for_idx + 16))
+        .find(|&k| toks[k].kind == TokenKind::Ident && toks[k].text == "in")?;
+    // Collect the iterated expression up to the body `{` at depth 0.
+    let mut depth = 0i32;
+    let mut last: Option<usize> = None;
+    for k in in_idx + 1..toks.len().min(in_idx + 24) {
+        let t = &toks[k];
+        if t.kind == TokenKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    // Flag only when the loop iterates the map value
+                    // itself: the last expression token is the name.
+                    let l = last?;
+                    if toks[l].kind == TokenKind::Ident && map_names.contains(&toks[l].text) {
+                        return Some(diag(
+                            RuleId::UnorderedIteration,
+                            rel_path,
+                            &toks[l],
+                            format!("`for … in {}` iterates a HashMap/HashSet", toks[l].text),
+                            snippet(toks, for_idx, (l - for_idx).min(10) + 1),
+                        ));
+                    }
+                    return None;
+                }
+                _ => {}
+            }
+        }
+        last = Some(k);
+    }
+    None
+}
+
+/// True when `toks[i]` opens a call whose balanced close is followed
+/// by `.unwrap(` / `.expect(`.
+fn call_then_unwrap(toks: &[Token], i: usize) -> bool {
+    if !tok_is(toks, i + 1, "(") {
+        return false;
+    }
+    let mut depth = 0i32;
+    let mut k = i + 1;
+    while k < toks.len() {
+        match (toks[k].kind, toks[k].text.as_str()) {
+            (TokenKind::Punct, "(") => depth += 1,
+            (TokenKind::Punct, ")") => {
+                depth -= 1;
+                if depth == 0 {
+                    if !tok_is(toks, k + 1, ".") || !tok_is(toks, k + 3, "(") {
+                        return false;
+                    }
+                    return ident_at(toks, k + 2, "unwrap") || ident_at(toks, k + 2, "expect");
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    false
+}
+
+/// `toks[i] :: next` — the qualified-path successor check that keeps
+/// `EventKind::Instant` (an enum variant) from tripping wall-clock.
+fn path_next(toks: &[Token], i: usize, next: &str) -> bool {
+    tok_is(toks, i + 1, ":") && tok_is(toks, i + 2, ":") && ident_at(toks, i + 3, next)
+}
+
+fn tok_is(toks: &[Token], i: usize, text: &str) -> bool {
+    match toks.get(i) {
+        Some(t) => t.kind == TokenKind::Punct && t.text == text,
+        None => false,
+    }
+}
+
+fn ident_at(toks: &[Token], i: usize, text: &str) -> bool {
+    match toks.get(i) {
+        Some(t) => t.kind == TokenKind::Ident && t.text == text,
+        None => false,
+    }
+}
+
+/// Compact source-ish snippet from up to `n` tokens starting at `i`.
+fn snippet(toks: &[Token], i: usize, n: usize) -> String {
+    let mut s = String::new();
+    let mut prev_wordy = false;
+    for t in toks.iter().skip(i).take(n) {
+        let wordy = matches!(t.kind, TokenKind::Ident | TokenKind::Num | TokenKind::Lifetime);
+        if prev_wordy && wordy {
+            s.push(' ');
+        }
+        s.push_str(&t.text);
+        prev_wordy = wordy;
+    }
+    s
+}
+
+fn diag(
+    rule: RuleId,
+    path: &str,
+    at: &Token,
+    message: impl Into<String>,
+    snippet: String,
+) -> Diagnostic {
+    Diagnostic {
+        path: path.to_string(),
+        line: at.line,
+        col: at.col,
+        rule,
+        message: message.into(),
+        snippet,
+        suppressed: false,
+        missing_reason: false,
+    }
+}
+
+/// A parsed `lint: allow(<rule>) — <reason>` comment.
+#[derive(Debug)]
+pub struct Suppression {
+    /// `None` when the named rule id is unknown (→ bad-suppression).
+    pub rule: Option<RuleId>,
+    /// Raw rule name as written (for the bad-suppression message).
+    pub raw_rule: String,
+    /// True when a non-empty reason follows the closing paren.
+    pub has_reason: bool,
+    pub line: u32,
+    pub end_line: u32,
+}
+
+/// Extract every `lint: allow(<rule>) — <reason>` marker from the captured
+/// comments.  The reason is mandatory: anything after the closing
+/// paren containing at least one alphanumeric character counts.
+///
+/// A marker only counts as a suppression *attempt* when the rule name
+/// is shaped like a rule id (lowercase, digits, dashes) — prose such
+/// as documentation writing out the `allow(<rule>)` syntax is ignored
+/// rather than reported as a bad suppression.
+pub fn parse_suppressions(comments: &[Comment]) -> Vec<Suppression> {
+    let mut out = Vec::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(pos) = rest.find("lint: allow(") {
+            rest = &rest[pos + "lint: allow(".len()..];
+            let Some(close) = rest.find(')') else { break };
+            let raw_rule = rest[..close].trim().to_string();
+            let tail = &rest[close + 1..];
+            let id_shaped = !raw_rule.is_empty()
+                && raw_rule
+                    .chars()
+                    .all(|ch| ch.is_ascii_lowercase() || ch.is_ascii_digit() || ch == '-');
+            if !id_shaped {
+                rest = tail;
+                continue;
+            }
+            let has_reason = tail
+                .split("lint: allow(")
+                .next()
+                .unwrap_or("")
+                .chars()
+                .any(|ch| ch.is_alphanumeric());
+            out.push(Suppression {
+                rule: RuleId::from_id(&raw_rule),
+                raw_rule,
+                has_reason,
+                line: c.line,
+                end_line: c.end_line,
+            });
+            rest = tail;
+        }
+    }
+    out
+}

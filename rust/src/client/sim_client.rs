@@ -41,6 +41,8 @@ pub struct SimClient {
     /// Reused gradient-accumulation buffer.
     grad_buf: Vec<f32>,
     /// Batch builders per microbatch size (lazily created).
+    /// Determinism audit: point access only (entry by size key) —
+    /// never iterated, so map order cannot reach observable state.
     builders: HashMap<usize, BatchBuilder>,
 }
 

@@ -29,7 +29,8 @@ struct ProjectProbe {
     master_iteration: u64,
     master_params: Vec<f32>,
     /// input-Arc pointer → (fresh probability row, fresh argmax); cleared
-    /// whenever this project's master window advances.
+    /// whenever this project's master window advances.  Determinism
+    /// audit: point access only (get/insert/clear) — never iterated.
     memo: HashMap<usize, (Vec<f32>, u32)>,
     /// Smallest compiled micro-batch — the probe's execution shape
     /// (padded by repeating the input).

@@ -5,8 +5,15 @@
 //! (§3.7).  Eviction is LRU over *non-allocated* entries first — evicting
 //! an id the worker is currently allocated would force an immediate
 //! re-download.
+//!
+//! Eviction order is driven by a `BTreeMap` recency index (tick → id,
+//! ticks strictly increasing, hence unique keys), the same pattern as
+//! `serve::cache`: the LRU victim is the first unpinned entry in tick
+//! order, an O(log n) ordered walk instead of an O(n) scan over an
+//! unordered map — and it keeps eviction order independent of
+//! `HashMap` internals (determinism discipline, see DESIGN.md).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use super::SharedSample;
 
@@ -15,7 +22,12 @@ use super::SharedSample;
 pub struct ClientCache {
     budget_bytes: u64,
     used_bytes: u64,
+    // Point access only (get/insert/remove by id) — never iterated, so
+    // map order cannot reach observable state.
     entries: HashMap<u32, Entry>,
+    /// Recency index: last-used tick → sample id.  Ticks are unique, so
+    /// this is a total order; the front is always the LRU candidate.
+    recency: BTreeMap<u64, u32>,
     tick: u64,
 }
 
@@ -35,6 +47,7 @@ impl ClientCache {
             budget_bytes,
             used_bytes: 0,
             entries: HashMap::new(),
+            recency: BTreeMap::new(),
             tick: 0,
         }
     }
@@ -72,7 +85,9 @@ impl ClientCache {
             },
         ) {
             self.used_bytes -= prev.sample.byte_size();
+            self.recency.remove(&prev.last_used);
         }
+        self.recency.insert(self.tick, id);
         self.used_bytes += size;
         self.evict_over_budget();
         true
@@ -82,13 +97,17 @@ impl ClientCache {
     pub fn get(&mut self, id: u32) -> Option<SharedSample> {
         self.tick += 1;
         let tick = self.tick;
-        self.entries.get_mut(&id).map(|e| {
-            e.last_used = tick;
-            SharedSample::clone(&e.sample)
-        })
+        let e = self.entries.get_mut(&id)?;
+        let prev_tick = e.last_used;
+        e.last_used = tick;
+        let out = SharedSample::clone(&e.sample);
+        self.recency.remove(&prev_tick);
+        self.recency.insert(tick, id);
+        Some(out)
     }
 
     /// Update pin status when the allocation changes (§3.3b revokes).
+    /// No index maintenance needed: pins are consulted at eviction time.
     pub fn set_pinned(&mut self, id: u32, pinned: bool) {
         if let Some(e) = self.entries.get_mut(&id) {
             e.pinned = pinned;
@@ -97,16 +116,17 @@ impl ClientCache {
 
     fn evict_over_budget(&mut self) {
         while self.used_bytes > self.budget_bytes {
-            // LRU among unpinned
+            // LRU among unpinned: first tick in the ordered recency
+            // index whose entry is not pinned.
             let victim = self
-                .entries
+                .recency
                 .iter()
-                .filter(|(_, e)| !e.pinned)
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(id, _)| *id);
+                .map(|(_, id)| *id)
+                .find(|id| self.entries.get(id).is_some_and(|e| !e.pinned));
             match victim {
                 Some(id) => {
                     let e = self.entries.remove(&id).unwrap();
+                    self.recency.remove(&e.last_used);
                     self.used_bytes -= e.sample.byte_size();
                 }
                 None => break, // everything pinned: allow overshoot
@@ -144,8 +164,9 @@ mod tests {
         c.insert(1, sample(100), false);
         c.insert(2, sample(100), true);
         c.get(1); // refresh 1
-        c.insert(3, sample(100), false); // must evict... 1 is fresher, but 2 pinned → evict 1? No: LRU unpinned is 1 (refreshed) vs 3 (new). Oldest unpinned = 1? After refresh, 1 is newer than nothing; the only unpinned are 1 and 3.
-        // After inserting 3 we are at 3*401=1203 > 900: evict LRU unpinned (id 1, refreshed before 3's insert)
+        // Inserting 3 overshoots the budget; the pinned 2 must survive,
+        // so the LRU unpinned entry (1, refreshed before 3 arrived) goes.
+        c.insert(3, sample(100), false);
         assert!(!c.contains(1));
         assert!(c.contains(2), "pinned entry must survive");
         assert!(c.contains(3));
@@ -185,5 +206,19 @@ mod tests {
         c.insert(3, sample(100), true);
         assert!(!c.contains(1));
         assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn recency_index_stays_consistent_across_refresh_and_evict() {
+        let mut c = ClientCache::new(900);
+        c.insert(1, sample(100), false);
+        c.insert(2, sample(100), false);
+        c.get(1); // 2 is now LRU
+        c.insert(3, sample(100), false); // evicts 2
+        assert!(c.contains(1) && !c.contains(2) && c.contains(3));
+        // reinsert 2: must not resurrect a stale recency slot for it
+        c.insert(2, sample(100), false); // evicts 1 (LRU after 3)
+        assert!(!c.contains(1) && c.contains(2) && c.contains(3));
+        assert_eq!(c.len(), 2);
     }
 }

@@ -35,9 +35,12 @@
 //!   [`serve`] (prediction serving), [`cosim`] (serve × train
 //!   co-simulation), plus the from-scratch substrates
 //!   [`json`], [`rng`], [`netsim`], [`metrics`], [`trace`] (virtual-clock
-//!   span tracer with Perfetto export), [`cli`], [`bench`], [`testing`].
+//!   span tracer with Perfetto export), [`cli`], [`bench`], [`testing`],
+//!   and [`analysis`] (the `mlitb lint` determinism analyzer that keeps
+//!   all of the above honest — see DESIGN.md "Determinism discipline").
 
 pub mod allocation;
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod client;

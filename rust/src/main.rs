@@ -7,6 +7,7 @@
 //!   cosim      co-simulate training + serving on one shared clock
 //!   inspect    print manifest/model info
 //!   closure    save/load round-trip check on a research closure
+//!   lint       run the determinism static analyzer over Rust sources
 //!
 //! Example:
 //!   mlitb train --model mnist_conv --nodes 4 --iters 50 --track-every 10
@@ -44,6 +45,7 @@ fn main() {
         "cosim" => cmd_cosim(&args),
         "inspect" => cmd_inspect(&args),
         "closure" => cmd_closure(&args),
+        "lint" => cmd_lint(&args),
         _ => {
             print_help();
             Ok(())
@@ -58,7 +60,7 @@ fn main() {
 fn print_help() {
     println!(
         "mlitb {} — Machine Learning in the Browser, reproduced in Rust+JAX\n\n\
-         USAGE: mlitb <train|scale|serve-sim|cosim|inspect|closure> [options]\n\n\
+         USAGE: mlitb <train|scale|serve-sim|cosim|inspect|closure|lint> [options]\n\n\
          train:   --model <name> --nodes N --iters N --t-secs F --lr F\n\
                   --optimizer sgd|momentum|adagrad|rmsprop --policy sync|async|partial:<f>\n\
                   --track-every N --train-size N --test-size N --power-scale F\n\
@@ -81,7 +83,9 @@ fn print_help() {
                   --queue-depth N --cache N --input-pool N --seed N --csv <path>\n\
                   --trace <path>  (spans from all three planes on one timeline)\n\
          inspect: [--model <name>]\n\
-         closure: --model <name> --out <path>",
+         closure: --model <name> --out <path>\n\
+         lint:    [paths...]  (default rust/src; exits 1 on any\n\
+                  unsuppressed determinism finding — see DESIGN.md)",
         mlitb::VERSION
     );
 }
@@ -746,4 +750,38 @@ fn cmd_closure(args: &Args) -> Result<(), String> {
         back.model_name, back.param_count
     );
     Ok(())
+}
+
+/// `mlitb lint [paths...]` — run the determinism analyzer and exit
+/// nonzero on any unsuppressed finding, so CI can gate on it.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    let positional = args.positional();
+    let given: Vec<String> = positional[1..].to_vec();
+    let paths = if given.is_empty() {
+        // Default to the crate sources whichever directory we run from.
+        let root = if std::path::Path::new("rust/src").is_dir() {
+            "rust/src"
+        } else {
+            "src"
+        };
+        vec![root.to_string()]
+    } else {
+        given
+    };
+    let mut report = mlitb::analysis::Report::default();
+    for p in &paths {
+        mlitb::analysis::analyze_tree(std::path::Path::new(p), &mut report)
+            .map_err(|e| format!("lint {p}: {e}"))?;
+    }
+    print!("{}", report.render());
+    if report.is_clean() {
+        println!(
+            "lint: {} path(s) clean ({} suppression(s) carry reasons)",
+            paths.len(),
+            report.suppressed_count()
+        );
+        Ok(())
+    } else {
+        Err(format!("{} unsuppressed determinism finding(s)", report.unsuppressed_count()))
+    }
 }

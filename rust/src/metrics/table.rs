@@ -76,6 +76,8 @@ impl Table {
     }
 
     pub fn print(&self) {
+        // lint: allow(stray-print) — Table::print is the benches' and
+        // CLI's shared stdout sink; the table itself renders to String.
         println!("{}", self.render());
     }
 }

@@ -345,7 +345,7 @@ mod tests {
         let d = m.drain_delays(&arrivals);
         let svc = m.service_ms(10_486, 1000);
         let mut sorted = d.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         for (k, v) in sorted.iter().enumerate() {
             assert!((v - svc * (k + 1) as f64).abs() < 1e-9, "{d:?}");
         }

@@ -138,9 +138,27 @@ mod tests {
         let d = LogNormal::from_median(50.0, 0.5);
         let mut rng = Pcg32::new(5);
         let mut xs: Vec<f64> = (0..50_001).map(|_| d.sample(&mut rng)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         let median = xs[25_000];
         assert!((median - 50.0).abs() < 2.0, "median={median}");
+    }
+
+    #[test]
+    fn total_cmp_sort_survives_nan_samples() {
+        // The determinism discipline bans partial_cmp().unwrap() on
+        // floats: a single NaN in the slice panics it mid-sort.  Pin
+        // the total_cmp replacement: NaNs sort to the back, finite
+        // values stay ordered, nothing panics.
+        let d = LogNormal::from_median(50.0, 0.5);
+        let mut rng = Pcg32::new(5);
+        let mut xs: Vec<f64> = (0..1_000).map(|_| d.sample(&mut rng)).collect();
+        xs[137] = f64::NAN;
+        xs[842] = f64::NAN;
+        xs.sort_by(|a, b| a.total_cmp(b));
+        assert!(xs[998].is_nan() && xs[999].is_nan());
+        for w in xs[..998].windows(2) {
+            assert!(w[0] <= w[1]);
+        }
     }
 
     #[test]

@@ -16,6 +16,8 @@ use crate::model::{Manifest, ModelSpec};
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
+    /// Determinism audit: point access only (contains_key/insert/get);
+    /// compile order comes from the manifest's `BTreeMap` keys.
     execs: HashMap<(String, String), xla::PjRtLoadedExecutable>,
     /// Cumulative executions, for metrics/EXPERIMENTS.md.
     exec_count: u64,

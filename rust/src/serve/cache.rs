@@ -57,6 +57,8 @@ struct Entry {
 #[derive(Debug, Clone)]
 pub struct PredictionCache {
     capacity: usize,
+    /// Determinism audit: point access only — eviction order comes from
+    /// the ordered `recency` index below, never from map iteration.
     entries: HashMap<u64, Entry>,
     /// last_used tick → key (ticks are unique; first entry is the LRU).
     recency: std::collections::BTreeMap<u64, u64>,

@@ -110,12 +110,7 @@ impl RequestFleet {
                 client += 1;
             }
         }
-        events.sort_by(|a, b| {
-            a.arrival_ms
-                .partial_cmp(&b.arrival_ms)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        events.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms).then(a.id.cmp(&b.id)));
         Self {
             links,
             events,
@@ -144,12 +139,7 @@ impl RequestFleet {
             links.extend(fleet.links);
             input_bytes = input_bytes.max(fleet.input_bytes);
         }
-        events.sort_by(|a, b| {
-            a.arrival_ms
-                .partial_cmp(&b.arrival_ms)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        events.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms).then(a.id.cmp(&b.id)));
         Self {
             links,
             events,
@@ -339,6 +329,23 @@ mod tests {
                 assert!(e.id >= na && (2u32..5).contains(&e.client));
             }
         }
+    }
+
+    #[test]
+    fn merge_with_nan_arrival_does_not_panic() {
+        // A hand-corrupted arrival must not panic the merge sort
+        // (total_cmp, not partial_cmp().unwrap()): NaN sorts last and
+        // every event survives.
+        let mut a = RequestFleet::generate(ProjectId::new(0), &cfg(10.0, 2, 2.0), &spec());
+        let n = a.offered();
+        assert!(n > 0);
+        a.events[0].arrival_ms = f64::NAN;
+        let merged = RequestFleet::merge(vec![a]);
+        assert_eq!(merged.offered(), n);
+        assert!(
+            merged.events.last().unwrap().arrival_ms.is_nan(),
+            "NaN arrival sorts after every finite arrival"
+        );
     }
 
     #[test]

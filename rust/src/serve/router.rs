@@ -337,7 +337,9 @@ pub struct Shard {
     /// Cache entries queued until their computation completes.
     pending_inserts: VecDeque<PendingInsert>,
     /// key → in-flight entry (leader queued/executing, or resolved and
-    /// awaiting its completion instant).
+    /// awaiting its completion instant).  Determinism audit: point
+    /// access only (entry/get_mut/remove by key) — never iterated, so
+    /// map order cannot reach observable state.
     inflight: HashMap<u64, Inflight>,
     /// (completion time, key) of resolved entries — completions are
     /// monotone per shard (serial executor), so a front-drain retires

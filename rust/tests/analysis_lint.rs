@@ -1,0 +1,345 @@
+//! Fixture tests for the `mlitb lint` determinism analyzer: every rule
+//! firing on a bad snippet and silent on a good one, suppression with
+//! and without a reason, lexer torture cases, and a self-lint asserting
+//! the crate's own `src/` is clean.
+
+use mlitb::analysis::{analyze_source, analyze_tree, Diagnostic, Report, RuleId};
+
+fn live(path: &str, src: &str) -> Vec<Diagnostic> {
+    analyze_source(path, src).into_iter().filter(|d| !d.suppressed).collect()
+}
+
+fn fires(path: &str, src: &str, rule: RuleId) -> bool {
+    live(path, src).iter().any(|d| d.rule == rule)
+}
+
+// ---------------------------------------------------------------- rules
+
+#[test]
+fn unordered_iteration_fires_on_map_iter_in_scoped_plane() {
+    let src = r#"
+        use std::collections::HashMap;
+        struct S { map: HashMap<u32, f32> }
+        impl S {
+            fn all(&self) -> Vec<f32> {
+                self.map.values().copied().collect()
+            }
+        }
+    "#;
+    assert!(fires("src/sim/fx.rs", src, RuleId::UnorderedIteration));
+    let found = live("src/sim/fx.rs", src);
+    let d = &found[0];
+    assert_eq!(d.rule, RuleId::UnorderedIteration);
+    assert!(d.snippet.contains("map"), "snippet: {}", d.snippet);
+    assert!(d.line >= 6, "position points at the iteration site");
+}
+
+#[test]
+fn unordered_iteration_fires_on_for_loop_over_map_ref() {
+    let src = r#"
+        fn f() {
+            let mut seen = std::collections::HashSet::new();
+            seen.insert(1u32);
+            for v in &seen {
+                let _ = v;
+            }
+        }
+    "#;
+    assert!(fires("src/serve/fx.rs", src, RuleId::UnorderedIteration));
+}
+
+#[test]
+fn unordered_iteration_silent_outside_scope_and_on_ordered_maps() {
+    let src = r#"
+        use std::collections::HashMap;
+        fn f(map: &HashMap<u32, f32>) {
+            let mut map2: HashMap<u32, f32> = HashMap::new();
+            map2.insert(1, 2.0);
+            let _ = map2.get(&1);
+        }
+    "#;
+    // point access only → silent even in a scoped plane
+    assert!(live("src/sim/fx.rs", src).is_empty());
+    let btree = r#"
+        fn f() {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert(1u32, 2.0f32);
+            for (k, v) in m.iter() {
+                let _ = (k, v);
+            }
+        }
+    "#;
+    assert!(live("src/sim/fx.rs", btree).is_empty(), "BTreeMap iteration is ordered");
+    let hash_elsewhere = r#"
+        use std::collections::HashMap;
+        fn f() {
+            let mut m: HashMap<u32, u32> = HashMap::new();
+            for (k, v) in m.iter() { let _ = (k, v); }
+        }
+    "#;
+    assert!(
+        live("src/model/fx.rs", hash_elsewhere).is_empty(),
+        "model/ is not an order-sensitive plane"
+    );
+}
+
+#[test]
+fn unordered_iteration_does_not_flag_len_bounded_loops() {
+    let src = r#"
+        use std::collections::HashMap;
+        fn f(m: &HashMap<u32, u32>) {
+            let mut m2: HashMap<u32, u32> = HashMap::new();
+            for i in 0..m2.len() {
+                let _ = i;
+            }
+        }
+    "#;
+    assert!(live("src/sim/fx.rs", src).is_empty());
+}
+
+#[test]
+fn float_ord_unwrap_fires_in_sort_and_on_unwrap_chain() {
+    let sorted = r#"
+        fn f(v: &mut Vec<f64>) {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+    "#;
+    assert!(fires("src/model/fx.rs", sorted, RuleId::FloatOrdUnwrap));
+    let min = r#"
+        fn f(v: &[f64]) -> Option<&f64> {
+            v.iter().min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+        }
+    "#;
+    assert!(fires("src/model/fx.rs", min, RuleId::FloatOrdUnwrap));
+    let bare_unwrap = r#"
+        fn f(a: f64, b: f64) -> std::cmp::Ordering {
+            a.partial_cmp(&b).unwrap()
+        }
+    "#;
+    assert!(fires("src/model/fx.rs", bare_unwrap, RuleId::FloatOrdUnwrap));
+}
+
+#[test]
+fn float_ord_silent_on_total_cmp_and_bare_partial_cmp() {
+    let good = r#"
+        fn f(v: &mut Vec<f64>) {
+            v.sort_by(|a, b| a.total_cmp(b));
+        }
+        fn g(a: f64, b: f64) -> bool {
+            a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)
+        }
+    "#;
+    assert!(live("src/model/fx.rs", good).is_empty());
+}
+
+#[test]
+fn wall_clock_fires_outside_bench_and_is_exempt_inside() {
+    let src = r#"
+        fn f() -> u64 {
+            let t0 = std::time::Instant::now();
+            t0.elapsed().as_nanos() as u64
+        }
+    "#;
+    assert!(fires("src/sim/fx.rs", src, RuleId::WallClock));
+    assert!(live("src/bench/fx.rs", src).is_empty(), "bench/ is exempt");
+    assert!(live("rust/benches/fig_x.rs", src).is_empty(), "benches/ dir is exempt");
+    let sleep = "fn f() { std::thread::sleep(std::time::Duration::from_millis(1)); }";
+    assert!(fires("src/serve/fx.rs", sleep, RuleId::WallClock));
+}
+
+#[test]
+fn wall_clock_silent_on_instant_enum_variant() {
+    // `EventKind::Instant` (the trace plane's enum variant) must not
+    // trip the rule: only qualified `Instant::now` / `std::time` do.
+    let src = r#"
+        enum EventKind { Span, Instant }
+        fn f(k: &EventKind) -> &'static str {
+            match k {
+                EventKind::Instant => "i",
+                EventKind::Span => "x",
+            }
+        }
+    "#;
+    assert!(live("src/trace/fx.rs", src).is_empty());
+}
+
+#[test]
+fn unseeded_randomness_fires_outside_rng_module() {
+    let src = "fn f() -> u64 { let mut r = rand::thread_rng(); 4 }";
+    assert!(fires("src/sim/fx.rs", src, RuleId::UnseededRandomness));
+    assert!(live("src/rng/fx.rs", src).is_empty(), "rng/ may construct RNGs");
+    let good = "fn f() { let mut r = crate::rng::Pcg32::new(7); let _ = r.gen_f32(); }";
+    assert!(live("src/sim/fx.rs", good).is_empty());
+}
+
+#[test]
+fn raw_spawn_fires_outside_sharded_and_scoped_spawn_is_fine() {
+    let src = "fn f() { std::thread::spawn(move || {}); }";
+    assert!(fires("src/coordinator/fx.rs", src, RuleId::RawSpawn));
+    assert!(
+        live("src/params/sharded.rs", src).is_empty(),
+        "params/sharded.rs owns thread management"
+    );
+    let scoped = r#"
+        fn f() {
+            std::thread::scope(|scope| {
+                scope.spawn(|| {});
+            });
+        }
+    "#;
+    assert!(live("src/coordinator/fx.rs", scoped).is_empty(), "scoped spawn is deterministic");
+}
+
+#[test]
+fn stray_print_fires_in_library_planes_only() {
+    let src = "fn f() { println!(\"dbg\"); eprintln!(\"warn\"); }";
+    let found = live("src/serve/fx.rs", src);
+    assert_eq!(found.iter().filter(|d| d.rule == RuleId::StrayPrint).count(), 2);
+    assert!(live("src/cli/fx.rs", src).is_empty(), "cli/ prints by design");
+    assert!(live("src/main.rs", src).is_empty(), "main.rs prints by design");
+    assert!(live("rust/examples/demo.rs", src).is_empty(), "examples print by design");
+}
+
+// --------------------------------------------------------- suppressions
+
+#[test]
+fn suppression_with_reason_above_the_line() {
+    let src = r#"
+        fn f() {
+            // lint: allow(stray-print) — operator-facing progress line
+            println!("progress");
+        }
+    "#;
+    let all = analyze_source("src/serve/fx.rs", src);
+    assert_eq!(all.len(), 1);
+    assert!(all[0].suppressed, "reasoned allow suppresses the finding");
+    assert!(live("src/serve/fx.rs", src).is_empty());
+}
+
+#[test]
+fn suppression_with_reason_trailing_the_line() {
+    let src = "fn f() { println!(\"x\"); } // lint: allow(stray-print) — demo output";
+    assert!(live("src/serve/fx.rs", src).is_empty());
+}
+
+#[test]
+fn suppression_without_reason_keeps_the_finding_live() {
+    let src = r#"
+        fn f() {
+            // lint: allow(stray-print)
+            println!("progress");
+        }
+    "#;
+    let found = live("src/serve/fx.rs", src);
+    assert_eq!(found.len(), 1);
+    assert!(found[0].missing_reason, "reasonless allow is flagged, not honored");
+    let rendered = {
+        let mut r = Report::default();
+        r.extend(found);
+        r.sort();
+        r.render()
+    };
+    assert!(rendered.contains("reason is missing"), "{rendered}");
+}
+
+#[test]
+fn suppression_for_a_different_rule_does_not_cover() {
+    let src = r#"
+        fn f() {
+            // lint: allow(wall-clock) — wrong rule on purpose
+            println!("progress");
+        }
+    "#;
+    assert!(fires("src/serve/fx.rs", src, RuleId::StrayPrint));
+}
+
+#[test]
+fn unknown_rule_in_allow_is_itself_a_finding() {
+    let src = r#"
+        fn f() {
+            // lint: allow(no-such-rule) — typo
+            let x = 1;
+            let _ = x;
+        }
+    "#;
+    assert!(fires("src/serve/fx.rs", src, RuleId::BadSuppression));
+}
+
+// -------------------------------------------------------- lexer torture
+
+#[test]
+fn patterns_inside_strings_and_comments_never_fire() {
+    let src = r####"
+        fn f() -> String {
+            let a = "std::time::Instant::now() and partial_cmp().unwrap()";
+            let b = r#"println!("x"); thread::spawn; rand::thread_rng()"#;
+            /* std::time::Instant::now();
+               /* nested: println!("y"); */
+               still inside the outer comment */
+            format!("{a}{b}")
+        }
+    "####;
+    assert!(live("src/sim/fx.rs", src).is_empty());
+}
+
+#[test]
+fn lifetimes_do_not_confuse_the_lexer() {
+    // `'a` (lifetime) vs `'x'` (char): a broken lexer would swallow
+    // everything after a lifetime as a char literal and miss the real
+    // finding on the next line.
+    let src = r#"
+        fn first<'a>(s: &'a str) -> char {
+            let marker = 'x';
+            println!("{marker}");
+            s.chars().next().unwrap_or(marker)
+        }
+    "#;
+    let found = live("src/serve/fx.rs", src);
+    assert_eq!(found.len(), 1);
+    assert_eq!(found[0].rule, RuleId::StrayPrint);
+}
+
+#[test]
+fn raw_string_with_hashes_hides_a_fake_suppression() {
+    // A `lint: allow` *inside a string literal* is not a comment and
+    // must not suppress anything.
+    let src = r##"
+        fn f() {
+            let fake = r#"lint: allow(stray-print) — not a real comment"#;
+            println!("{fake}");
+        }
+    "##;
+    assert!(fires("src/serve/fx.rs", src, RuleId::StrayPrint));
+}
+
+// ------------------------------------------------------------ self-lint
+
+#[test]
+fn self_lint_crate_src_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut report = Report::default();
+    analyze_tree(&root, &mut report).expect("walk src");
+    assert!(report.is_clean(), "rust/src must lint clean:\n{}", report.render());
+    // Every suppression in the tree carries a reason (reasonless ones
+    // surface as live findings above), and at least the Table::print
+    // exemption exists — the discipline is exercised, not vacuous.
+    assert!(report.suppressed_count() >= 1, "expected at least one reasoned allow");
+    assert!(!report.all().is_empty());
+}
+
+#[test]
+fn report_orders_findings_deterministically() {
+    let src_b = "fn f() { println!(\"b\"); }";
+    let src_a = "fn g() { std::thread::spawn(move || {}); }";
+    let mut r = Report::default();
+    // insert in reverse path order; render must come out sorted
+    r.extend(analyze_source("src/serve/zz.rs", src_b));
+    r.extend(analyze_source("src/serve/aa.rs", src_a));
+    r.sort();
+    let rendered = r.render();
+    let a_pos = rendered.find("aa.rs").expect("aa finding rendered");
+    let b_pos = rendered.find("zz.rs").expect("zz finding rendered");
+    assert!(a_pos < b_pos, "stable path order:\n{rendered}");
+    assert_eq!(r.unsuppressed_count(), 2);
+    assert!(!r.is_clean());
+}
