@@ -14,9 +14,12 @@ Checks, in order:
     (pid, cat, id), ids open at most once at a time
   * flows: every ``f`` names an earlier ``s`` with the same (cat, id) and
     carries binding point ``bp == "e"``
+  * counters: every ``C`` carries a non-empty numeric ``args`` series, and
+    per (pid, tid, name) the sample timestamps are monotone non-decreasing
   * plane coverage: at least one train-iteration span, one request
     lifecycle, and one publication span are present (the cosim smoke
-    exercises all three planes)
+    exercises all three planes), plus counter tracks from every plane
+    (``serve/``, ``train/``, ``publish/`` name prefixes)
 
 Exit code 0 on success; prints the first failure and exits 1 otherwise.
 """
@@ -24,7 +27,8 @@ Exit code 0 on success; prints the first failure and exits 1 otherwise.
 import json
 import sys
 
-PHASES = {"X", "b", "e", "i", "s", "f", "M"}
+PHASES = {"X", "b", "e", "i", "s", "f", "M", "C"}
+COUNTER_PLANES = ("serve/", "train/", "publish/")
 
 
 def fail(msg):
@@ -44,6 +48,8 @@ def check(path):
 
     open_async = {}  # (pid, cat, id) -> open count
     flow_started = set()  # (cat, id)
+    counter_last = {}  # (pid, tid, name) -> last ts
+    counter_planes = set()  # name prefixes seen on counter tracks
     seen = {"train_iteration": False, "request": False, "publish": False}
 
     for i, e in enumerate(events):
@@ -99,6 +105,20 @@ def check(path):
         elif ph == "i":
             if e.get("s") != "t":
                 fail(f"{where}: instant scope must be 't'")
+        elif ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args:
+                fail(f"{where}: counter must carry a non-empty args object")
+            for k, v in args.items():
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    fail(f"{where}: counter series {k!r} must be numeric, got {v!r}")
+            key = (int(e["pid"]), int(e["tid"]), name)
+            if ts < counter_last.get(key, float("-inf")):
+                fail(f"{where}: counter {name!r} timestamps run backwards on {key}")
+            counter_last[key] = ts
+            for prefix in COUNTER_PLANES:
+                if name.startswith(prefix):
+                    counter_planes.add(prefix)
 
     dangling = [k for k, n in open_async.items() if n != 0]
     if dangling:
@@ -106,9 +126,16 @@ def check(path):
     for plane, ok in seen.items():
         if not ok:
             fail(f"no {plane} events — a cosim trace must cover all planes")
+    if counter_last:  # counter coverage only binds when counters exist
+        missing = [p for p in COUNTER_PLANES if p not in counter_planes]
+        if missing:
+            fail(f"counter tracks missing for plane prefix(es): {missing}")
 
     n = len(events)
-    print(f"check_trace: OK: {path} ({n} events, {len(flow_started)} flow(s))")
+    print(
+        f"check_trace: OK: {path} ({n} events, {len(flow_started)} flow(s), "
+        f"{len(counter_last)} counter track(s))"
+    )
 
 
 if __name__ == "__main__":

@@ -416,6 +416,20 @@ impl Master {
                     ],
                 );
             }
+            // Gauges at the iteration boundary: gradients carried into the
+            // next iteration and stragglers that missed this one's merge.
+            self.trace.counter(
+                master,
+                "train/pending-gradients",
+                t0 + wall_ms,
+                &[("pending", self.carryover.len() as f64)],
+            );
+            self.trace.counter(
+                master,
+                "train/stragglers",
+                t0 + wall_ms,
+                &[("late", late_idx.len() as f64)],
+            );
         }
 
         let mean_latency_ms = if latencies.is_empty() {

@@ -365,6 +365,19 @@ pub fn run_cosim_traced<'c>(
                 )
                 .map_err(|e| anyhow!(e))?;
             let done_ms = egress.schedule(boundary_ms, bytes);
+            // Egress gauge right after the charge: how far behind the
+            // shared link is and the cumulative bytes it carried.  The
+            // budget serializes across projects, so `backlog_ms` on any
+            // one publisher track reads the *shared* queue depth.
+            trace.counter(
+                Track::publisher(pid.as_u32()),
+                "publish/egress",
+                boundary_ms,
+                &[
+                    ("backlog_ms", egress.backlog_ms(boundary_ms)),
+                    ("bytes_sent", egress.bytes_sent() as f64),
+                ],
+            );
             // Traffic-driven GC at publication time: retention, reader
             // pins and staged-transfer immunity must all agree.
             let evicted = plane

@@ -191,6 +191,13 @@ impl EgressBudget {
     pub fn bytes_sent(&self) -> u64 {
         self.bytes_sent
     }
+
+    /// How far behind the link is at `now_ms`: milliseconds of queued
+    /// transfer still to drain (0 when idle) — the `publish/egress`
+    /// counter's occupancy series.
+    pub fn backlog_ms(&self, now_ms: f64) -> f64 {
+        (self.free_at_ms - now_ms).max(0.0)
+    }
 }
 
 /// One publication event in a co-simulation run.
@@ -398,6 +405,10 @@ mod tests {
         let third = budget.schedule(10_000.0, 10_000);
         assert!((third - 11_000.0).abs() < 1e-6, "{third}");
         assert_eq!(budget.bytes_sent(), 50_000);
+        // Backlog drains linearly and clamps at 0 once the link idles.
+        assert!((budget.backlog_ms(10_500.0) - 500.0).abs() < 1e-6);
+        assert_eq!(budget.backlog_ms(11_000.0), 0.0);
+        assert_eq!(budget.backlog_ms(20_000.0), 0.0);
     }
 
     #[test]

@@ -1,19 +1,22 @@
 //! `mlitb` — leader entrypoint for the MLitB reproduction.
 //!
 //! Subcommands:
-//!   train      run a distributed-SGD training simulation (real gradients)
-//!   scale      run the Fig-4 style coordination sweep (modeled compute)
-//!   serve-sim  run a prediction-serving simulation under request load
-//!   cosim      co-simulate training + serving on one shared clock
-//!   inspect    print manifest/model info
-//!   closure    save/load round-trip check on a research closure
-//!   lint       run the determinism static analyzer over Rust sources
+//!   train        run a distributed-SGD training simulation (real gradients)
+//!   scale        run the Fig-4 style coordination sweep (modeled compute)
+//!   serve-sim    run a prediction-serving simulation under request load
+//!   cosim        co-simulate training + serving on one shared clock
+//!   trace-report analyze an exported trace CSV: flame rollup, critical
+//!                paths, counter stats, saturation verdicts
+//!   inspect      print manifest/model info
+//!   closure      save/load round-trip check on a research closure
+//!   lint         run the determinism static analyzer over Rust sources
 //!
 //! Example:
 //!   mlitb train --model mnist_conv --nodes 4 --iters 50 --track-every 10
 //!   mlitb serve-sim --clients 16 --rate 8 --duration 20 --link mixed
 //!   mlitb cosim --publish-every 5 --shards 2
-//!   mlitb cosim --trace cosim_trace.json   # Perfetto timeline (+ .csv)
+//!   mlitb cosim --trace cosim_trace.json --report   # timeline + rollup
+//!   mlitb trace-report cosim_trace.json.csv         # analyze later
 
 use mlitb::cli::Args;
 use mlitb::client::DeviceClass;
@@ -43,6 +46,7 @@ fn main() {
         "scale" => cmd_scale(&args),
         "serve-sim" => cmd_serve_sim(&args),
         "cosim" => cmd_cosim(&args),
+        "trace-report" => cmd_trace_report(&args),
         "inspect" => cmd_inspect(&args),
         "closure" => cmd_closure(&args),
         "lint" => cmd_lint(&args),
@@ -60,7 +64,7 @@ fn main() {
 fn print_help() {
     println!(
         "mlitb {} — Machine Learning in the Browser, reproduced in Rust+JAX\n\n\
-         USAGE: mlitb <train|scale|serve-sim|cosim|inspect|closure|lint> [options]\n\n\
+         USAGE: mlitb <train|scale|serve-sim|cosim|trace-report|inspect|closure|lint> [options]\n\n\
          train:   --model <name> --nodes N --iters N --t-secs F --lr F\n\
                   --optimizer sgd|momentum|adagrad|rmsprop --policy sync|async|partial:<f>\n\
                   --track-every N --train-size N --test-size N --power-scale F\n\
@@ -68,6 +72,8 @@ fn print_help() {
                   --master-processes N --reduce-mode message|sharded|sharded:<S>\n\
                   --merge-ns F --fanin-ns F  (reduce calibration overrides)\n\
                   --trace <path>  (Perfetto trace-event JSON + <path>.csv)\n\
+                  --report  (print flame/critical-path rollup after the run)\n\
+                  --trace-capacity N  (trace ring size in events)\n\
          scale:   --nodes-list 1,2,4,...  --iters N  (modeled compute)\n\
                   --reduce-mode message|sharded:<S> --merge-ns F --fanin-ns F\n\
          serve-sim: --model <name> --closure <path> --clients N --rate F\n\
@@ -75,6 +81,7 @@ fn print_help() {
                   --max-wait F --queue-depth N --cache N --input-pool N\n\
                   --shards N --router rr|jsq|affinity --no-coalesce\n\
                   --autotune --jitter F --seed N --csv <path> --trace <path>\n\
+                  --report --trace-capacity N\n\
          cosim:   --model <name> --projects N --nodes N --iters N --t-secs F\n\
                   --track-every N --train-size N --test-size N --publish-every K\n\
                   --publish-delta F --publish-hysteresis M --egress-mb-min F\n\
@@ -82,6 +89,9 @@ fn print_help() {
                   --link <profile> --shards N --router rr|jsq|affinity --batch N\n\
                   --queue-depth N --cache N --input-pool N --seed N --csv <path>\n\
                   --trace <path>  (spans from all three planes on one timeline)\n\
+                  --report --trace-capacity N\n\
+         trace-report: <trace.json.csv> [--json <path>]  (flame rollup,\n\
+                  critical paths, counter stats, saturation verdicts)\n\
          inspect: [--model <name>]\n\
          closure: --model <name> --out <path>\n\
          lint:    [paths...]  (default rust/src; exits 1 on any\n\
@@ -90,22 +100,64 @@ fn print_help() {
     );
 }
 
-/// Recording handle when `--trace <path>` was given, no-op handle
-/// otherwise (the disabled path costs one `Option` check per event).
-fn trace_for(args: &Args) -> TraceHandle {
-    if args.get("trace").is_some() {
-        TraceHandle::recording()
+/// Recording handle when `--trace <path>` or `--report` was given, no-op
+/// handle otherwise (the disabled path costs one `Option` check per
+/// event).  `--trace-capacity` sizes the ring buffer.
+fn trace_for(args: &Args) -> Result<TraceHandle, String> {
+    if args.get("trace").is_some() || args.flag("report") {
+        let capacity = args.get_usize("trace-capacity", mlitb::trace::DEFAULT_CAPACITY)?;
+        Ok(TraceHandle::with_capacity(capacity.max(1)))
     } else {
-        TraceHandle::off()
+        Ok(TraceHandle::off())
     }
 }
 
-/// Write the trace where `--trace` pointed: Perfetto/Chrome trace-event
-/// JSON at the path itself, the flat CSV beside it at `<path>.csv`.
-fn write_trace(args: &Args, trace: &TraceHandle) -> Result<(), String> {
+/// Post-run trace handling: surface ring-buffer drops (a truncated trace
+/// must never look complete), write the exports where `--trace` pointed
+/// (Perfetto JSON at the path, flat CSV at `<path>.csv`), and print the
+/// analyzer rollup when `--report` asked for it.
+fn finish_trace(args: &Args, trace: &TraceHandle) -> Result<(), String> {
+    if trace.dropped() > 0 {
+        let needed = trace.len() as u64 + trace.dropped();
+        eprintln!(
+            "warning: trace ring dropped {} oldest event(s) — the export is a suffix \
+             window; rerun with --trace-capacity {needed} for the full timeline",
+            trace.dropped()
+        );
+    }
     if let Some(path) = args.get("trace") {
         trace.write(path)?;
         println!("wrote trace to {path} (Perfetto JSON; CSV at {path}.csv)");
+    }
+    if args.flag("report") {
+        let analysis = mlitb::trace::analyze::TraceAnalysis::from_events(&trace.snapshot());
+        print!("{}", mlitb::trace::report::render_text(&analysis));
+    }
+    Ok(())
+}
+
+/// `mlitb trace-report <trace.json.csv>` — analyze a previously exported
+/// trace CSV: flame rollup, per-iteration and per-request critical paths,
+/// counter statistics, saturation verdicts.
+fn cmd_trace_report(args: &Args) -> Result<(), String> {
+    let positional = args.positional();
+    let Some(path) = positional.get(1) else {
+        return Err("usage: mlitb trace-report <trace.json.csv> [--json <path>]".into());
+    };
+    let csv = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    if csv.starts_with('{') {
+        return Err(format!(
+            "{path} looks like the Perfetto JSON export — pass the CSV beside it \
+             (<trace>.csv)"
+        ));
+    }
+    let analysis = mlitb::trace::analyze::TraceAnalysis::from_csv(&csv)
+        .map_err(|e| format!("analyze {path}: {e}"))?;
+    print!("{}", mlitb::trace::report::render_text(&analysis));
+    if let Some(json_path) = args.get("json") {
+        std::fs::write(json_path, mlitb::trace::report::render_json(&analysis))
+            .map_err(|e| format!("write {json_path}: {e}"))?;
+        println!("wrote JSON report to {json_path}");
     }
     Ok(())
 }
@@ -151,11 +203,11 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         spec.param_count,
         cfg.master.policy.name()
     );
-    let trace = trace_for(args);
+    let trace = trace_for(args)?;
     let mut sim = Simulation::new(cfg, spec.clone(), &mut engine);
     sim.set_trace(trace.clone(), 0);
     let report = sim.run().map_err(|e| e.to_string())?;
-    write_trace(args, &trace)?;
+    finish_trace(args, &trace)?;
     for r in report.timeline.records() {
         if r.iteration % 10 == 0 || r.test_error.is_some() {
             println!(
@@ -362,7 +414,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     // serving modeled predictions that look plausible but are fake.
     // Without the feature (or without artifacts) the deterministic
     // modeled predictor is the expected configuration.
-    let trace = trace_for(args);
+    let trace = trace_for(args)?;
     let report = if cfg!(feature = "pjrt") && manifest_on_disk().is_some() {
         let mut engine = Engine::from_default_artifacts().map_err(|e| e.to_string())?;
         engine.load_model(&spec.name).map_err(|e| e.to_string())?;
@@ -378,7 +430,7 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         let mut modeled = ModeledCompute { param_count: spec.param_count };
         run_serve(cfg, plane, &mut modeled, trace.clone())?
     };
-    write_trace(args, &trace)?;
+    finish_trace(args, &trace)?;
 
     let lat = report.latency();
     let mut table = mlitb::metrics::Table::new(
@@ -589,10 +641,10 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         .map(|c| c as &mut dyn Compute)
         .collect();
     let mut serve_compute = ModeledCompute { param_count: spec.param_count };
-    let trace = trace_for(args);
+    let trace = trace_for(args)?;
     let report = run_cosim_traced(&cfg, train_refs, &mut serve_compute, trace.clone())
         .map_err(|e| e.to_string())?;
-    write_trace(args, &trace)?;
+    finish_trace(args, &trace)?;
 
     let mut pub_table = mlitb::metrics::Table::new(
         "publications",

@@ -86,9 +86,11 @@ impl Timeline {
     }
 
     /// Mean of per-iteration mean latencies — Fig 4's second axis.
+    /// 0.0 on an empty timeline (a run that never completed an iteration
+    /// has no latency to report; NaN would poison downstream summaries).
     pub fn mean_latency_ms(&self) -> f64 {
         if self.records.is_empty() {
-            return f64::NAN;
+            return 0.0;
         }
         self.records.iter().map(|r| r.mean_latency_ms).sum::<f64>()
             / self.records.len() as f64
@@ -336,6 +338,24 @@ mod tests {
         tl.push(rec(1, 8000.0, 400));
         // 800 vectors over 8 seconds
         assert!((tl.power_vectors_per_sec() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_degenerate_timelines_report_zero_not_nan() {
+        let tl = Timeline::new();
+        assert_eq!(tl.mean_latency_ms(), 0.0);
+        assert_eq!(tl.power_vectors_per_sec(), 0.0);
+        // A single record must still produce finite numbers.
+        let mut one = Timeline::new();
+        one.push(rec(0, 4000.0, 400));
+        assert!(one.mean_latency_ms().is_finite());
+        assert_eq!(one.mean_latency_ms(), 10.0);
+        assert!(one.power_vectors_per_sec().is_finite());
+        assert!((one.power_vectors_per_sec() - 100.0).abs() < 1e-9);
+        // A record pinned at t=0 (degenerate span) is zero, not inf/NaN.
+        let mut zero_t = Timeline::new();
+        zero_t.push(rec(0, 0.0, 400));
+        assert_eq!(zero_t.power_vectors_per_sec(), 0.0);
     }
 
     #[test]

@@ -155,6 +155,15 @@ impl PredictionCache {
         }
         self.hits as f64 / total as f64
     }
+
+    /// Fill fraction of the configured capacity (0 when caching is
+    /// disabled) — the `serve/cache` counter's `size` companion.
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity == 0 {
+            return 0.0;
+        }
+        self.entries.len() as f64 / self.capacity as f64
+    }
 }
 
 #[cfg(test)]

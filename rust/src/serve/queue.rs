@@ -120,6 +120,12 @@ impl AdmissionQueue {
         self.project_caps = caps;
     }
 
+    /// The installed fair-share caps (empty when fair share is off) —
+    /// surfaced as `serve/fair-share-cap` counter tracks.
+    pub fn project_caps(&self) -> &[usize] {
+        &self.project_caps
+    }
+
     /// This project's admission cap: its fair share when caps are
     /// installed, the whole queue otherwise.
     fn cap(&self, project: ProjectId) -> usize {

@@ -383,6 +383,19 @@ impl ServeEngine {
     /// execution spans, and the publication→first-serve flow edges.
     pub fn set_trace(&mut self, trace: TraceHandle) {
         self.trace = trace;
+        // Baseline gauges at t=0: each shard's installed fair-share caps
+        // (empty when fair share is off), one counter track per
+        // (project, shard) so cap vs observed depth read side by side.
+        for (si, shard) in self.shards.iter().enumerate() {
+            for (pi, &cap) in shard.queue.project_caps().iter().enumerate() {
+                self.trace.counter(
+                    Track::shard(pi as u32, si as u32),
+                    "serve/fair-share-cap",
+                    0.0,
+                    &[("cap", cap as f64)],
+                );
+            }
+        }
     }
 
     /// One completed response, whatever the path (executed, cache hit,
@@ -573,6 +586,17 @@ impl ServeEngine {
                         ("cut", ArgValue::Str(self.shards[si].queue.last_cut())),
                     ],
                 );
+                // Queue gauge at the cut: what stayed behind and what the
+                // shard is now executing.
+                self.trace.counter(
+                    Track::shard(vid.project.as_u32(), si as u32),
+                    "serve/queue",
+                    self.now,
+                    &[
+                        ("depth", self.shards[si].queue.len() as f64),
+                        ("in_flight", batch.len() as f64),
+                    ],
+                );
                 // First batch executed on a freshly published version:
                 // close that publication's flow edge here.  No-op unless
                 // a publication opened the edge (plain serving runs emit
@@ -651,6 +675,21 @@ impl ServeEngine {
                     // reader pin so GC can reclaim the version.
                     plane.unpin_reader(vid);
                 }
+                if self.caching {
+                    // Cache gauge after the batch's fills were scheduled
+                    // (`size` counts *visible* entries — fills mature at
+                    // `computed_at`, so this samples the pre-fill state).
+                    self.trace.counter(
+                        Track::shard(vid.project.as_u32(), si as u32),
+                        "serve/cache",
+                        self.now,
+                        &[
+                            ("hit_rate", self.shards[si].cache.hit_rate()),
+                            ("occupancy", self.shards[si].cache.occupancy()),
+                            ("size", self.shards[si].cache.len() as f64),
+                        ],
+                    );
+                }
             }
         }
     }
@@ -694,6 +733,16 @@ impl ServeEngine {
                 observer.on_response(&rec, &ev.input, &pred, meta, compute)?;
                 self.finish_request(rec);
                 self.shards[si].note_routed();
+                self.trace.counter(
+                    Track::shard(meta.version.project.as_u32(), si as u32),
+                    "serve/cache",
+                    now,
+                    &[
+                        ("hit_rate", self.shards[si].cache.hit_rate()),
+                        ("occupancy", self.shards[si].cache.occupancy()),
+                        ("size", self.shards[si].cache.len() as f64),
+                    ],
+                );
                 return Ok(ArrivalOutcome::Handled);
             }
         }
@@ -760,6 +809,16 @@ impl ServeEngine {
         // so counting them would mistune the deadline and flush size.
         self.shards[si].observe_admission(now);
         self.shards[si].note_routed();
+        // Queue gauge after admission: the depth the next arrival sees.
+        self.trace.counter(
+            Track::shard(ev.project.as_u32(), si as u32),
+            "serve/queue",
+            now,
+            &[
+                ("depth", self.shards[si].queue.len() as f64),
+                ("in_flight", self.shards[si].executing as f64),
+            ],
+        );
         Ok(ArrivalOutcome::Handled)
     }
 

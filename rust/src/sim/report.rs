@@ -12,6 +12,8 @@ pub struct RunReport {
     pub mean_latency_ms: f64,
     /// Final fleet size.
     pub workers: usize,
+    /// Completed master-loop iterations (timeline records).
+    pub iterations: usize,
     /// Final test error (if tracking ran).
     pub final_test_error: Option<f64>,
     /// Total master ingress/egress bytes.
@@ -36,11 +38,13 @@ impl RunReport {
         let bytes_down = timeline.records().iter().map(|r| r.bytes_down).sum();
         let virtual_secs = timeline.last().map(|r| r.t_virtual_ms / 1000.0).unwrap_or(0.0);
         let total_vectors = timeline.records().iter().map(|r| r.vectors).sum();
+        let iterations = timeline.len();
         Self {
             timeline,
             power_vps,
             mean_latency_ms,
             workers,
+            iterations,
             final_test_error,
             bytes_up,
             bytes_down,
@@ -57,8 +61,9 @@ impl RunReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "workers={} power={:.1} vec/s latency={:.1} ms vectors={} virtual={:.0}s{}",
+            "workers={} iters={} power={:.1} vec/s latency={:.1} ms vectors={} virtual={:.0}s{}",
             self.workers,
+            self.iterations,
             self.power_vps,
             self.mean_latency_ms,
             self.total_vectors,

@@ -238,6 +238,17 @@ impl<'c> Simulation<'c> {
             }
         }
 
+        // Fleet-size gauge after churn settles — the counter track that
+        // makes join/leave storms visible next to the iteration spans.
+        if self.trace.is_on() {
+            self.trace.counter(
+                Track::master(self.trace_pid),
+                "train/fleet",
+                self.master.now_ms(),
+                &[("clients", self.clients.len() as f64)],
+            );
+        }
+
         // -- step a: background data downloads (one iteration's worth of
         //    XHR at each client's downlink rate)
         let iter_ms = self.master.iter_ms();

@@ -1,0 +1,860 @@
+//! Trace analysis: flame rollups, critical paths and counter statistics
+//! over a recorded trace — the "where did the virtual time go" half of
+//! the observability plane.
+//!
+//! The tracer (PR 6) records *events*; this module turns them into
+//! *attribution*:
+//!
+//! - **Flame rollup** — per (pid, tid, cat, name) wall-time vs self-time
+//!   over the `X` spans, children subtracted from their enclosing span
+//!   (the master's `reduce` span is self-time carved out of `iteration`).
+//! - **Iteration critical path** — for each training iteration span, the
+//!   longest causally-ordered chain that bounds it: the slowest merged
+//!   worker's `compute → upload → ingest`, plus the sync-barrier
+//!   remainder to the iteration's end.  By construction the segment sum
+//!   equals the iteration's wall-time (the barrier closes the gap), so
+//!   `coverage ≈ 1.0` is an internal consistency check, not an accident.
+//! - **Request critical path** — for each served request lifecycle
+//!   (async `b`/`e` pair), `queued → execute → reply` around the batch
+//!   span that answered it; cache hits and coalesced waiters (no batch of
+//!   their own) collapse to a single `direct` segment.
+//! - **Counter statistics** — per (pid, tid, name, series key):
+//!   min / mean / max and the *time-weighted* average (a queue that
+//!   spikes to 50 for 1 ms and sits at 2 for a second is not "mean 26").
+//! - **Saturation verdicts** — per plane and project, which resource
+//!   dominates the critical path ("merge-bound", "queue-bound", …) and
+//!   whether the egress budget carried a backlog.
+//!
+//! Input is either an in-memory [`super::Tracer`] snapshot
+//! ([`TraceAnalysis::from_events`]) or a previously exported CSV
+//! ([`TraceAnalysis::from_csv`]) — the CLI's `trace-report` subcommand
+//! uses the latter, `--report` after a run the former.  Everything is
+//! ordered (`BTreeMap`, explicit sorts with `total_cmp`): equal traces
+//! produce byte-identical reports.
+
+use std::collections::BTreeMap;
+
+use super::{Event, EventKind};
+
+/// Timestamp slop when chaining spans whose boundaries were computed by
+/// the same f64 arithmetic (ms).
+const EPS_MS: f64 = 1e-6;
+
+/// A trace event normalized away from the emission-side types: owned
+/// strings, explicit phase code — the common shape of a `Tracer`
+/// snapshot and a parsed CSV row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormEvent {
+    /// Chrome phase code: `X b e i s f C`.
+    pub ph: char,
+    pub ts_ms: f64,
+    pub pid: u32,
+    pub tid: u32,
+    pub cat: String,
+    pub name: String,
+    pub id: Option<u64>,
+    pub dur_ms: Option<f64>,
+    /// `key=value` argument pairs (values kept as strings; counter series
+    /// parse them as f64).
+    pub args: Vec<(String, String)>,
+}
+
+impl NormEvent {
+    fn end_ms(&self) -> f64 {
+        self.ts_ms + self.dur_ms.unwrap_or(0.0)
+    }
+
+    fn arg_f64(&self, key: &str) -> Option<f64> {
+        self.args
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.parse::<f64>().ok())
+    }
+}
+
+/// One flame-rollup row: how much wall time a (track, cat, name) family
+/// of spans covered, and how much of it was *self* time (nested child
+/// spans on the same track subtracted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlameRow {
+    pub pid: u32,
+    pub tid: u32,
+    pub cat: String,
+    pub name: String,
+    pub count: u64,
+    pub wall_ms: f64,
+    pub self_ms: f64,
+}
+
+/// One named segment of a critical path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    pub name: &'static str,
+    pub dur_ms: f64,
+}
+
+/// The critical path of one training iteration: the slowest merged
+/// worker's chain plus the barrier remainder.  `segments` sum to
+/// `wall_ms` by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationPath {
+    pub pid: u32,
+    /// Iteration index when the span carried it as an arg.
+    pub iteration: Option<u64>,
+    pub t0_ms: f64,
+    pub wall_ms: f64,
+    pub segments: Vec<Segment>,
+}
+
+impl IterationPath {
+    /// Sum of the path's segment durations (≈ `wall_ms`).
+    pub fn path_ms(&self) -> f64 {
+        self.segments.iter().map(|s| s.dur_ms).sum()
+    }
+}
+
+/// The critical path of one served request lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestPath {
+    pub pid: u32,
+    pub id: u64,
+    pub begin_ms: f64,
+    pub end_ms: f64,
+    pub segments: Vec<Segment>,
+}
+
+/// Statistics over one counter series: (pid, tid, counter name, key).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterStat {
+    pub pid: u32,
+    pub tid: u32,
+    pub name: String,
+    pub key: String,
+    pub n: u64,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Time-weighted average: each sample holds until the next one
+    /// (step interpolation); a single sample is its own average.
+    pub twa: f64,
+}
+
+/// A per-resource saturation verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Verdict {
+    /// `train p0`, `serve p1`, `publish p0` — plane + project.
+    pub scope: String,
+    /// The short verdict: `merge-bound`, `queue-bound`, `egress idle`, …
+    pub verdict: String,
+    /// Supporting shares / numbers.
+    pub detail: String,
+}
+
+/// The full analysis of one trace.
+#[derive(Debug, Clone, Default)]
+pub struct TraceAnalysis {
+    pub flame: Vec<FlameRow>,
+    pub iterations: Vec<IterationPath>,
+    pub requests: Vec<RequestPath>,
+    pub counters: Vec<CounterStat>,
+    pub verdicts: Vec<Verdict>,
+}
+
+impl TraceAnalysis {
+    /// Analyze an in-memory tracer snapshot (`TraceHandle::snapshot()`).
+    pub fn from_events(events: &[Event]) -> Self {
+        let norm: Vec<NormEvent> = events.iter().map(normalize).collect();
+        analyze(&norm)
+    }
+
+    /// Analyze a previously exported CSV (`<trace>.csv`,
+    /// `seq,ph,ts_ms,pid,tid,cat,name,id,dur_ms,args`).
+    pub fn from_csv(csv: &str) -> Result<Self, String> {
+        let mut norm = Vec::new();
+        for (lineno, line) in csv.lines().enumerate() {
+            if lineno == 0 || line.is_empty() {
+                continue; // header
+            }
+            norm.push(parse_csv_row(line).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+        }
+        Ok(analyze(&norm))
+    }
+}
+
+fn normalize(e: &Event) -> NormEvent {
+    let (ph, id, dur_ms) = match e.kind {
+        EventKind::Span { dur_ms } => ('X', None, Some(dur_ms)),
+        EventKind::AsyncBegin { id } => ('b', Some(id), None),
+        EventKind::AsyncEnd { id } => ('e', Some(id), None),
+        EventKind::Instant => ('i', None, None),
+        EventKind::FlowStart { id } => ('s', Some(id), None),
+        EventKind::FlowFinish { id } => ('f', Some(id), None),
+        EventKind::Counter => ('C', None, None),
+    };
+    NormEvent {
+        ph,
+        ts_ms: e.ts_ms,
+        pid: e.track.pid,
+        tid: e.track.tid,
+        cat: e.cat.to_string(),
+        name: e.name.to_string(),
+        id,
+        dur_ms,
+        args: e
+            .args
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect(),
+    }
+}
+
+fn parse_csv_row(line: &str) -> Result<NormEvent, String> {
+    // No exported field contains a comma (names/cats are static idents,
+    // args join with ';'), so a bounded split is a full parse.
+    let cols: Vec<&str> = line.splitn(10, ',').collect();
+    if cols.len() != 10 {
+        return Err(format!("expected 10 columns, got {}", cols.len()));
+    }
+    let ph = cols[1]
+        .chars()
+        .next()
+        .ok_or_else(|| "empty phase".to_string())?;
+    let ts_ms: f64 = cols[2].parse().map_err(|e| format!("ts_ms: {e}"))?;
+    let pid: u32 = cols[3].parse().map_err(|e| format!("pid: {e}"))?;
+    let tid: u32 = cols[4].parse().map_err(|e| format!("tid: {e}"))?;
+    let id = if cols[7].is_empty() {
+        None
+    } else {
+        Some(cols[7].parse::<u64>().map_err(|e| format!("id: {e}"))?)
+    };
+    let dur_ms = if cols[8].is_empty() {
+        None
+    } else {
+        Some(cols[8].parse::<f64>().map_err(|e| format!("dur_ms: {e}"))?)
+    };
+    let args = if cols[9].is_empty() {
+        Vec::new()
+    } else {
+        cols[9]
+            .split(';')
+            .map(|kv| match kv.split_once('=') {
+                Some((k, v)) => Ok((k.to_string(), v.to_string())),
+                None => Err(format!("malformed arg '{kv}'")),
+            })
+            .collect::<Result<Vec<_>, String>>()?
+    };
+    Ok(NormEvent {
+        ph,
+        ts_ms,
+        pid,
+        tid,
+        cat: cols[5].to_string(),
+        name: cols[6].to_string(),
+        id,
+        dur_ms,
+        args,
+    })
+}
+
+fn analyze(events: &[NormEvent]) -> TraceAnalysis {
+    let flame = flame_rollup(events);
+    let iterations = iteration_paths(events);
+    let requests = request_paths(events);
+    let counters = counter_stats(events);
+    let verdicts = verdicts(&iterations, &requests, &counters);
+    TraceAnalysis {
+        flame,
+        iterations,
+        requests,
+        counters,
+        verdicts,
+    }
+}
+
+// ---------------------------------------------------------------- flame
+
+fn flame_rollup(events: &[NormEvent]) -> Vec<FlameRow> {
+    // Group X spans per track, then walk each track's spans in
+    // (start asc, end desc) order with a nesting stack: a span fully
+    // inside the stack top is its child, and its duration comes out of
+    // the parent's self-time.
+    let mut by_track: BTreeMap<(u32, u32), Vec<&NormEvent>> = BTreeMap::new();
+    for e in events.iter().filter(|e| e.ph == 'X') {
+        by_track.entry((e.pid, e.tid)).or_default().push(e);
+    }
+    let mut rows: BTreeMap<(u32, u32, String, String), FlameRow> = BTreeMap::new();
+    for ((pid, tid), mut spans) in by_track {
+        spans.sort_by(|a, b| {
+            a.ts_ms
+                .total_cmp(&b.ts_ms)
+                .then(b.end_ms().total_cmp(&a.end_ms()))
+        });
+        // Stack of (end_ms, row key) for open ancestors.
+        let mut stack: Vec<(f64, (u32, u32, String, String))> = Vec::new();
+        for s in spans {
+            let dur = s.dur_ms.unwrap_or(0.0);
+            while let Some((end, _)) = stack.last() {
+                if *end <= s.ts_ms + EPS_MS {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some((_, parent_key)) = stack.last() {
+                if let Some(parent) = rows.get_mut(parent_key) {
+                    parent.self_ms -= dur;
+                }
+            }
+            let key = (pid, tid, s.cat.clone(), s.name.clone());
+            let row = rows.entry(key.clone()).or_insert_with(|| FlameRow {
+                pid,
+                tid,
+                cat: s.cat.clone(),
+                name: s.name.clone(),
+                count: 0,
+                wall_ms: 0.0,
+                self_ms: 0.0,
+            });
+            row.count += 1;
+            row.wall_ms += dur;
+            row.self_ms += dur;
+            stack.push((s.end_ms(), key));
+        }
+    }
+    rows.into_values().collect()
+}
+
+// ------------------------------------------------- iteration critical path
+
+fn iteration_paths(events: &[NormEvent]) -> Vec<IterationPath> {
+    let mut paths = Vec::new();
+    // Worker-plane spans per pid, pre-sorted by start time.
+    let mut worker_spans: BTreeMap<u32, Vec<&NormEvent>> = BTreeMap::new();
+    for e in events.iter().filter(|e| {
+        e.ph == 'X' && e.cat == "train" && (1000..2000).contains(&e.tid)
+    }) {
+        worker_spans.entry(e.pid).or_default().push(e);
+    }
+    for e in events
+        .iter()
+        .filter(|e| e.ph == 'X' && e.cat == "train" && e.name == "iteration")
+    {
+        let t0 = e.ts_ms;
+        let wall = e.dur_ms.unwrap_or(0.0);
+        let t1 = t0 + wall;
+        let empty = Vec::new();
+        let workers = worker_spans.get(&e.pid).unwrap_or(&empty);
+        // The chain that bounds the iteration ends at the *latest-ending*
+        // ingest inside the window (the slowest merged submission — the
+        // §3.3d barrier waits exactly for it).
+        let ingest = workers
+            .iter()
+            .filter(|w| {
+                w.name == "ingest" && w.ts_ms >= t0 - EPS_MS && w.end_ms() <= t1 + EPS_MS
+            })
+            .max_by(|a, b| {
+                a.end_ms()
+                    .total_cmp(&b.end_ms())
+                    .then(a.ts_ms.total_cmp(&b.ts_ms))
+            });
+        let mut segments = Vec::new();
+        if let Some(ing) = ingest {
+            // Walk the chain backwards on the same worker track:
+            // upload ends where ingest starts, compute ends where upload
+            // starts.  A carryover ingest (started at t0) has no chain.
+            let upload = workers.iter().find(|w| {
+                w.name == "upload"
+                    && w.tid == ing.tid
+                    && (w.end_ms() - ing.ts_ms).abs() <= EPS_MS
+            });
+            let compute = upload.and_then(|u| {
+                workers.iter().find(|w| {
+                    w.name == "compute"
+                        && w.tid == u.tid
+                        && (w.end_ms() - u.ts_ms).abs() <= EPS_MS
+                })
+            });
+            if let Some(c) = compute {
+                segments.push(Segment {
+                    name: "compute",
+                    dur_ms: c.dur_ms.unwrap_or(0.0),
+                });
+            }
+            if let Some(u) = upload {
+                segments.push(Segment {
+                    name: "upload",
+                    dur_ms: u.dur_ms.unwrap_or(0.0),
+                });
+            }
+            // Lead-in the chain does not explain (e.g. an upload with no
+            // matching compute span): charge it explicitly so the path
+            // still sums to the wall-time.
+            let chain_start = compute
+                .or(upload)
+                .map_or(ing.ts_ms, |first| first.ts_ms);
+            if chain_start > t0 + EPS_MS {
+                segments.insert(
+                    0,
+                    Segment {
+                        name: "pre-chain",
+                        dur_ms: chain_start - t0,
+                    },
+                );
+            }
+            segments.push(Segment {
+                name: "ingest",
+                dur_ms: ing.dur_ms.unwrap_or(0.0),
+            });
+            let barrier = t1 - ing.end_ms();
+            if barrier > EPS_MS {
+                segments.push(Segment {
+                    name: "barrier",
+                    dur_ms: barrier,
+                });
+            }
+        } else if wall > 0.0 {
+            // No merged work this iteration: the whole window is the
+            // iteration floor / barrier.
+            segments.push(Segment {
+                name: "barrier",
+                dur_ms: wall,
+            });
+        }
+        paths.push(IterationPath {
+            pid: e.pid,
+            iteration: e.arg_f64("iteration").map(|v| v as u64),
+            t0_ms: t0,
+            wall_ms: wall,
+            segments,
+        });
+    }
+    paths.sort_by(|a, b| a.pid.cmp(&b.pid).then(a.t0_ms.total_cmp(&b.t0_ms)));
+    paths
+}
+
+// -------------------------------------------------- request critical path
+
+fn request_paths(events: &[NormEvent]) -> Vec<RequestPath> {
+    // Pair async begins/ends by (pid, id) — the tracer's matching rule.
+    let mut begins: BTreeMap<(u32, u64), &NormEvent> = BTreeMap::new();
+    let mut batch_spans: BTreeMap<(u32, u32), Vec<&NormEvent>> = BTreeMap::new();
+    for e in events
+        .iter()
+        .filter(|e| e.ph == 'X' && e.cat == "serve" && e.name == "batch")
+    {
+        batch_spans.entry((e.pid, e.tid)).or_default().push(e);
+    }
+    let mut paths = Vec::new();
+    for e in events.iter().filter(|e| e.cat == "serve" && e.name == "request") {
+        match e.ph {
+            'b' => {
+                if let Some(id) = e.id {
+                    begins.entry((e.pid, id)).or_insert(e);
+                }
+            }
+            'e' => {
+                let Some(id) = e.id else { continue };
+                let Some(begin) = begins.remove(&(e.pid, id)) else {
+                    continue;
+                };
+                let empty = Vec::new();
+                let batches = batch_spans.get(&(e.pid, e.tid)).unwrap_or(&empty);
+                // The batch that answered: latest-ending batch span on
+                // this shard track inside the request's lifetime.
+                let batch = batches
+                    .iter()
+                    .filter(|b| {
+                        b.ts_ms >= begin.ts_ms - EPS_MS && b.end_ms() <= e.ts_ms + EPS_MS
+                    })
+                    .max_by(|a, b| a.end_ms().total_cmp(&b.end_ms()));
+                let segments = match batch {
+                    Some(b) => vec![
+                        Segment {
+                            name: "queued",
+                            dur_ms: (b.ts_ms - begin.ts_ms).max(0.0),
+                        },
+                        Segment {
+                            name: "execute",
+                            dur_ms: b.dur_ms.unwrap_or(0.0),
+                        },
+                        Segment {
+                            name: "reply",
+                            dur_ms: (e.ts_ms - b.end_ms()).max(0.0),
+                        },
+                    ],
+                    // Cache hit / coalesced / shed: no batch of its own.
+                    None => vec![Segment {
+                        name: "direct",
+                        dur_ms: e.ts_ms - begin.ts_ms,
+                    }],
+                };
+                paths.push(RequestPath {
+                    pid: e.pid,
+                    id,
+                    begin_ms: begin.ts_ms,
+                    end_ms: e.ts_ms,
+                    segments,
+                });
+            }
+            _ => {}
+        }
+    }
+    paths.sort_by(|a, b| {
+        a.pid
+            .cmp(&b.pid)
+            .then(a.begin_ms.total_cmp(&b.begin_ms))
+            .then(a.id.cmp(&b.id))
+    });
+    paths
+}
+
+// ------------------------------------------------------------- counters
+
+fn counter_stats(events: &[NormEvent]) -> Vec<CounterStat> {
+    // Samples per (pid, tid, name, key), in emission (= time) order.
+    let mut series: BTreeMap<(u32, u32, String, String), Vec<(f64, f64)>> = BTreeMap::new();
+    for e in events.iter().filter(|e| e.ph == 'C') {
+        for (k, v) in &e.args {
+            if let Ok(val) = v.parse::<f64>() {
+                series
+                    .entry((e.pid, e.tid, e.name.clone(), k.clone()))
+                    .or_default()
+                    .push((e.ts_ms, val));
+            }
+        }
+    }
+    series
+        .into_iter()
+        .map(|((pid, tid, name, key), samples)| {
+            let n = samples.len() as u64;
+            let mut min = f64::INFINITY;
+            let mut max = f64::NEG_INFINITY;
+            let mut sum = 0.0;
+            for &(_, v) in &samples {
+                min = min.min(v);
+                max = max.max(v);
+                sum += v;
+            }
+            let mean = sum / n as f64;
+            // Step-interpolated time-weighted average: each value holds
+            // until the next sample.  Degenerate spans (one sample, or
+            // all samples at one instant) fall back to the plain mean.
+            let span = samples.last().unwrap().0 - samples[0].0;
+            let twa = if span > 0.0 {
+                let mut acc = 0.0;
+                for w in samples.windows(2) {
+                    acc += w[0].1 * (w[1].0 - w[0].0);
+                }
+                acc / span
+            } else {
+                mean
+            };
+            CounterStat {
+                pid,
+                tid,
+                name,
+                key,
+                n,
+                min,
+                max,
+                mean,
+                twa,
+            }
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------- verdicts
+
+fn segment_totals(paths: &[&[Segment]]) -> BTreeMap<&'static str, f64> {
+    let mut totals = BTreeMap::new();
+    for segs in paths {
+        for s in *segs {
+            *totals.entry(s.name).or_insert(0.0) += s.dur_ms;
+        }
+    }
+    totals
+}
+
+fn dominant(totals: &BTreeMap<&'static str, f64>) -> Option<(&'static str, f64, f64)> {
+    let sum: f64 = totals.values().sum();
+    if sum <= 0.0 {
+        return None;
+    }
+    totals
+        .iter()
+        .max_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(b.0)))
+        .map(|(name, ms)| (*name, *ms, ms / sum))
+}
+
+fn share_detail(totals: &BTreeMap<&'static str, f64>) -> String {
+    let sum: f64 = totals.values().sum();
+    totals
+        .iter()
+        .map(|(name, ms)| format!("{name} {:.1}%", 100.0 * ms / sum.max(1e-12)))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn verdicts(
+    iterations: &[IterationPath],
+    requests: &[RequestPath],
+    counters: &[CounterStat],
+) -> Vec<Verdict> {
+    let mut out = Vec::new();
+    // Training: which chain segment dominates each project's iterations.
+    let mut train_pids: Vec<u32> = iterations.iter().map(|p| p.pid).collect();
+    train_pids.dedup();
+    for pid in train_pids {
+        let paths: Vec<&[Segment]> = iterations
+            .iter()
+            .filter(|p| p.pid == pid)
+            .map(|p| p.segments.as_slice())
+            .collect();
+        let totals = segment_totals(&paths);
+        if let Some((name, _, share)) = dominant(&totals) {
+            let verdict = match name {
+                "compute" => "compute-bound",
+                "upload" => "wire-bound",
+                "ingest" => "merge-bound",
+                "barrier" => "clock-bound",
+                _ => "mixed",
+            };
+            out.push(Verdict {
+                scope: format!("train p{pid}"),
+                verdict: format!("{verdict} ({:.1}% of critical path)", 100.0 * share),
+                detail: share_detail(&totals),
+            });
+        }
+    }
+    // Serving: queued vs execute vs reply across each project's requests,
+    // cross-checked against the queue-depth counter and its fair-share cap.
+    let mut serve_pids: Vec<u32> = requests.iter().map(|p| p.pid).collect();
+    serve_pids.dedup();
+    for pid in serve_pids {
+        let paths: Vec<&[Segment]> = requests
+            .iter()
+            .filter(|p| p.pid == pid)
+            .map(|p| p.segments.as_slice())
+            .collect();
+        let totals = segment_totals(&paths);
+        if let Some((name, _, share)) = dominant(&totals) {
+            let verdict = match name {
+                "queued" => "queue-bound",
+                "execute" => "compute-bound",
+                "reply" => "wire-bound",
+                "direct" => "cache-served",
+                _ => "mixed",
+            };
+            let depth_max = counters
+                .iter()
+                .filter(|c| c.pid == pid && c.name == "serve/queue" && c.key == "depth")
+                .map(|c| c.max)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let cap_min = counters
+                .iter()
+                .filter(|c| c.pid == pid && c.name == "serve/fair-share-cap" && c.key == "cap")
+                .map(|c| c.min)
+                .fold(f64::INFINITY, f64::min);
+            let mut detail = share_detail(&totals);
+            if depth_max.is_finite() {
+                detail.push_str(&format!("; queue depth max {depth_max:.0}"));
+                if cap_min.is_finite() && depth_max + 1.0 >= cap_min {
+                    detail.push_str(&format!(" (saturates fair-share cap {cap_min:.0})"));
+                }
+            }
+            out.push(Verdict {
+                scope: format!("serve p{pid}"),
+                verdict: format!("{verdict} ({:.1}% of request time)", 100.0 * share),
+                detail,
+            });
+        }
+    }
+    // Publication: did the shared egress link ever carry a backlog?
+    for c in counters
+        .iter()
+        .filter(|c| c.name == "publish/egress" && c.key == "backlog_ms")
+    {
+        let (verdict, detail) = if c.max > EPS_MS {
+            (
+                format!("egress-backlogged (peak {:.1} ms)", c.max),
+                format!(
+                    "backlog twa {:.1} ms over {} publications",
+                    c.twa, c.n
+                ),
+            )
+        } else {
+            (
+                "egress idle".to_string(),
+                format!("{} publications, no queued transfer", c.n),
+            )
+        };
+        out.push(Verdict {
+            scope: format!("publish p{}", c.pid),
+            verdict,
+            detail,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TraceHandle, Track};
+
+    /// Hand-built synthetic trace with a known critical path:
+    /// iteration [0, 100]; worker 3's chain compute [0,30] → upload
+    /// [30,50] → ingest [50,90]; reduce [0,90] nested in the iteration;
+    /// barrier remainder 10.
+    fn synthetic() -> TraceHandle {
+        let t = TraceHandle::recording();
+        let m = Track::master(0);
+        let w = Track::worker(0, 3);
+        t.span(m, "train", "iteration", 0.0, 100.0, &[]);
+        t.span(m, "train", "reduce", 0.0, 90.0, &[]);
+        t.span(w, "train", "compute", 0.0, 30.0, &[]);
+        t.span(w, "train", "upload", 30.0, 50.0, &[]);
+        t.span(w, "train", "ingest", 50.0, 90.0, &[]);
+        // A faster worker that is NOT the critical chain.
+        let w2 = Track::worker(0, 4);
+        t.span(w2, "train", "compute", 0.0, 10.0, &[]);
+        t.span(w2, "train", "upload", 10.0, 15.0, &[]);
+        t.span(w2, "train", "ingest", 15.0, 40.0, &[]);
+        t
+    }
+
+    #[test]
+    fn iteration_critical_path_sums_to_wall_time() {
+        let t = synthetic();
+        let a = TraceAnalysis::from_events(&t.snapshot());
+        assert_eq!(a.iterations.len(), 1);
+        let p = &a.iterations[0];
+        assert_eq!(p.wall_ms, 100.0);
+        let names: Vec<&str> = p.segments.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["compute", "upload", "ingest", "barrier"]);
+        let durs: Vec<f64> = p.segments.iter().map(|s| s.dur_ms).collect();
+        assert_eq!(durs, vec![30.0, 20.0, 40.0, 10.0]);
+        assert!((p.path_ms() - p.wall_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn carryover_ingest_has_no_chain_but_still_covers() {
+        // Ingest starting at t0 (offset 0 = carried-over gradient): the
+        // path is ingest + barrier and still sums to the wall time.
+        let t = TraceHandle::recording();
+        t.span(Track::master(0), "train", "iteration", 0.0, 50.0, &[]);
+        t.span(Track::worker(0, 1), "train", "ingest", 0.0, 35.0, &[]);
+        let a = TraceAnalysis::from_events(&t.snapshot());
+        let p = &a.iterations[0];
+        let names: Vec<&str> = p.segments.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["ingest", "barrier"]);
+        assert!((p.path_ms() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_iteration_is_all_barrier() {
+        let t = TraceHandle::recording();
+        t.span(Track::master(2), "train", "iteration", 10.0, 14.0, &[]);
+        let a = TraceAnalysis::from_events(&t.snapshot());
+        let p = &a.iterations[0];
+        assert_eq!(p.pid, 2);
+        assert_eq!(p.segments.len(), 1);
+        assert_eq!(p.segments[0].name, "barrier");
+        assert!((p.path_ms() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flame_subtracts_children_from_self_time() {
+        let t = synthetic();
+        let a = TraceAnalysis::from_events(&t.snapshot());
+        let iter_row = a
+            .flame
+            .iter()
+            .find(|r| r.name == "iteration")
+            .expect("iteration row");
+        assert_eq!(iter_row.count, 1);
+        assert_eq!(iter_row.wall_ms, 100.0);
+        // reduce [0,90] is nested: 100 − 90 self.
+        assert!((iter_row.self_ms - 10.0).abs() < 1e-9);
+        let reduce_row = a.flame.iter().find(|r| r.name == "reduce").unwrap();
+        assert!((reduce_row.self_ms - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn request_path_decomposes_around_the_batch() {
+        let t = TraceHandle::recording();
+        let s = Track::shard(0, 1);
+        t.async_begin(s, "serve", "request", 7, 10.0, &[]);
+        t.span(s, "serve", "batch", 20.0, 35.0, &[]);
+        t.async_end(s, "serve", "request", 7, 40.0, &[]);
+        // A cache hit with no batch span of its own.
+        t.async_begin(s, "serve", "request", 8, 41.0, &[]);
+        t.async_end(s, "serve", "request", 8, 43.5, &[]);
+        let a = TraceAnalysis::from_events(&t.snapshot());
+        assert_eq!(a.requests.len(), 2);
+        let p = &a.requests[0];
+        assert_eq!(p.id, 7);
+        let segs: Vec<(&str, f64)> = p.segments.iter().map(|s| (s.name, s.dur_ms)).collect();
+        assert_eq!(segs, vec![("queued", 10.0), ("execute", 15.0), ("reply", 5.0)]);
+        let hit = &a.requests[1];
+        assert_eq!(hit.segments.len(), 1);
+        assert_eq!(hit.segments[0].name, "direct");
+        assert!((hit.segments[0].dur_ms - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counter_stats_are_time_weighted() {
+        let t = TraceHandle::recording();
+        let s = Track::shard(0, 0);
+        t.counter(s, "serve/queue", 0.0, &[("depth", 0.0)]);
+        t.counter(s, "serve/queue", 10.0, &[("depth", 4.0)]);
+        t.counter(s, "serve/queue", 20.0, &[("depth", 2.0)]);
+        let a = TraceAnalysis::from_events(&t.snapshot());
+        assert_eq!(a.counters.len(), 1);
+        let c = &a.counters[0];
+        assert_eq!((c.n, c.min, c.max), (3, 0.0, 4.0));
+        assert!((c.mean - 2.0).abs() < 1e-9);
+        // Step twa over [0,20]: 0·10 + 4·10 = 40 / 20 = 2.
+        assert!((c.twa - 2.0).abs() < 1e-9);
+        // Single-sample series fall back to the value itself.
+        let t2 = TraceHandle::recording();
+        t2.counter(s, "serve/cache", 5.0, &[("size", 7.0)]);
+        let a2 = TraceAnalysis::from_events(&t2.snapshot());
+        assert_eq!(a2.counters[0].twa, 7.0);
+    }
+
+    #[test]
+    fn csv_round_trip_matches_in_memory_analysis() {
+        let t = synthetic();
+        t.counter(Track::shard(0, 0), "serve/queue", 1.0, &[("depth", 3.0)]);
+        let from_mem = TraceAnalysis::from_events(&t.snapshot());
+        let from_csv = TraceAnalysis::from_csv(&t.export_csv()).expect("csv parses");
+        assert_eq!(from_mem.iterations, from_csv.iterations);
+        assert_eq!(from_mem.flame, from_csv.flame);
+        assert_eq!(from_mem.counters, from_csv.counters);
+        assert_eq!(from_mem.verdicts, from_csv.verdicts);
+    }
+
+    #[test]
+    fn verdict_names_the_dominant_segment() {
+        let t = synthetic();
+        let a = TraceAnalysis::from_events(&t.snapshot());
+        let v = a
+            .verdicts
+            .iter()
+            .find(|v| v.scope == "train p0")
+            .expect("train verdict");
+        // ingest (40 ms) dominates the 100 ms path.
+        assert!(v.verdict.starts_with("merge-bound"), "{}", v.verdict);
+        assert!(v.detail.contains("ingest 40.0%"), "{}", v.detail);
+    }
+
+    #[test]
+    fn malformed_csv_is_an_error_not_a_panic() {
+        assert!(TraceAnalysis::from_csv("seq,ph\n1,X\n").is_err());
+        let ok = TraceAnalysis::from_csv("seq,ph,ts_ms,pid,tid,cat,name,id,dur_ms,args\n");
+        assert!(ok.is_ok(), "header-only CSV is an empty trace");
+        assert!(ok.unwrap().iterations.is_empty());
+    }
+}

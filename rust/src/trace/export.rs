@@ -76,6 +76,13 @@ fn event_json(e: &Event) -> Value {
             fields.push(("bp", Value::String("e".to_string())));
             object(fields)
         }
+        EventKind::Counter => {
+            // Perfetto draws one counter track per (pid, name); each args
+            // key is a series line within it.
+            let mut fields = base_fields(e, "C");
+            fields.push(("args", args_object(&e.args)));
+            object(fields)
+        }
     }
 }
 
@@ -124,6 +131,7 @@ fn phase_code(kind: &EventKind) -> &'static str {
         EventKind::Instant => "i",
         EventKind::FlowStart { .. } => "s",
         EventKind::FlowFinish { .. } => "f",
+        EventKind::Counter => "C",
     }
 }
 
@@ -137,7 +145,7 @@ pub fn csv(tracer: &Tracer) -> String {
             | EventKind::AsyncEnd { id }
             | EventKind::FlowStart { id }
             | EventKind::FlowFinish { id } => (format!("{id}"), String::new()),
-            EventKind::Instant => (String::new(), String::new()),
+            EventKind::Instant | EventKind::Counter => (String::new(), String::new()),
         };
         let args = e
             .args

@@ -35,7 +35,9 @@
 //! publication pipeline, 1000+w training worker `w`, 2000+s serving
 //! shard `s`.
 
+pub mod analyze;
 mod export;
+pub mod report;
 
 use std::cell::RefCell;
 use std::collections::{BTreeSet, VecDeque};
@@ -119,6 +121,10 @@ pub enum EventKind {
     FlowStart { id: u64 },
     /// Flow finish (`ph: "f"`, binding point `"e"`).
     FlowFinish { id: u64 },
+    /// Counter sample (`ph: "C"`): the series values ride in `args`, one
+    /// `F64` entry per series key — Perfetto renders each (track, name)
+    /// as a stacked counter track.
+    Counter,
 }
 
 /// One trace event on the virtual clock.
@@ -285,6 +291,20 @@ impl TraceHandle {
         }
     }
 
+    /// Sample a counter series at `ts_ms`.  `name` follows the
+    /// `<plane>/<resource>` convention (e.g. `serve/queue`,
+    /// `publish/egress`); each `(key, value)` pair in `series` becomes one
+    /// line of the Perfetto counter track.  Keys should arrive in a fixed
+    /// order per name — the export sorts them anyway, so equal-seed runs
+    /// stay byte-identical.
+    pub fn counter(&self, track: Track, name: &'static str, ts_ms: f64, series: &[(&'static str, f64)]) {
+        if let Some(t) = &self.0 {
+            let args: Vec<(&'static str, ArgValue)> =
+                series.iter().map(|&(k, v)| (k, ArgValue::F64(v))).collect();
+            t.borrow_mut().push(ts_ms, track, "counter", name, EventKind::Counter, &args);
+        }
+    }
+
     /// Retained events (0 when disabled).
     pub fn len(&self) -> usize {
         self.0.as_ref().map_or(0, |t| t.borrow().events().len())
@@ -446,6 +466,53 @@ mod tests {
         let f = events.iter().find(|e| e.req_str("ph").unwrap() == "f").unwrap();
         assert_eq!(f.req_str("bp").unwrap(), "e");
         assert_eq!(doc.req_str("displayTimeUnit").unwrap(), "ms");
+    }
+
+    #[test]
+    fn counter_exports_as_c_phase_and_is_deterministic() {
+        let build = || {
+            let t = TraceHandle::recording();
+            t.counter(Track::shard(0, 1), "serve/queue", 5.0, &[("depth", 3.0), ("in_flight", 8.0)]);
+            t.counter(Track::publisher(0), "publish/egress", 6.5, &[("backlog_ms", 120.25)]);
+            t.export_chrome_json()
+        };
+        let json = build();
+        assert_eq!(json, build(), "same emissions → byte-identical export");
+        let doc = crate::json::parse(&json).unwrap();
+        let events = doc.req_array("traceEvents").unwrap();
+        let counters: Vec<_> = events
+            .iter()
+            .filter(|e| e.req_str("ph").unwrap() == "C")
+            .collect();
+        assert_eq!(counters.len(), 2);
+        let q = counters
+            .iter()
+            .find(|e| e.req_str("name").unwrap() == "serve/queue")
+            .unwrap();
+        // Counter timestamps are µs like every other phase.
+        assert_eq!(q.req_f64("ts").unwrap(), 5_000.0);
+        let args = q.get("args").unwrap();
+        assert_eq!(args.req_f64("depth").unwrap(), 3.0);
+        assert_eq!(args.req_f64("in_flight").unwrap(), 8.0);
+    }
+
+    #[test]
+    fn counter_rides_the_csv_export() {
+        let t = TraceHandle::recording();
+        t.counter(Track::master(2), "train/pending-gradients", 8.0, &[("pending", 4.0)]);
+        let csv = t.export_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2, "header + 1 counter row");
+        assert!(lines[1].contains(",C,"), "phase column must be C: {}", lines[1]);
+        assert!(lines[1].contains("train/pending-gradients"));
+        assert!(lines[1].contains("pending=4"));
+    }
+
+    #[test]
+    fn disabled_handle_ignores_counters() {
+        let t = TraceHandle::off();
+        t.counter(Track::master(0), "train/fleet", 0.0, &[("clients", 3.0)]);
+        assert_eq!(t.len(), 0);
     }
 
     #[test]

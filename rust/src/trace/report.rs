@@ -1,0 +1,284 @@
+//! Rendering for [`super::analyze::TraceAnalysis`]: a stable-ordered
+//! text report (the `trace-report` / `--report` CLI output) and a JSON
+//! document for downstream tooling.
+//!
+//! This module only *builds* strings/values — it never prints (the
+//! determinism lint bans stray prints outside the CLI layer; `main.rs`
+//! owns the terminal).  Ordering is inherited from the analyzer's sorted
+//! outputs, so equal traces render byte-identical reports.
+
+use std::collections::BTreeMap;
+
+use crate::json::{object, to_string_pretty, Value};
+
+use super::analyze::{IterationPath, RequestPath, Segment, TraceAnalysis};
+use super::Track;
+
+/// Per-(pid, segment-name) aggregate used by both renderers.
+fn aggregate_segments<'a, I>(paths: I) -> BTreeMap<(u32, &'static str), (u64, f64)>
+where
+    I: Iterator<Item = (u32, &'a [Segment])>,
+{
+    let mut agg: BTreeMap<(u32, &'static str), (u64, f64)> = BTreeMap::new();
+    for (pid, segs) in paths {
+        for s in segs {
+            let e = agg.entry((pid, s.name)).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.dur_ms;
+        }
+    }
+    agg
+}
+
+/// The human-readable report.
+pub fn render_text(a: &TraceAnalysis) -> String {
+    let mut out = String::new();
+    out.push_str("== trace report ==\n");
+
+    // -- verdicts first: the "so what" line per resource.
+    out.push_str("\n-- saturation verdicts --\n");
+    if a.verdicts.is_empty() {
+        out.push_str("(no spans to attribute)\n");
+    }
+    for v in &a.verdicts {
+        out.push_str(&format!("{:<12} {}  [{}]\n", v.scope, v.verdict, v.detail));
+    }
+
+    // -- training critical paths.
+    if !a.iterations.is_empty() {
+        out.push_str("\n-- training critical paths (per iteration) --\n");
+        out.push_str("pid iter t0_ms wall_ms path_ms coverage segments\n");
+        for p in &a.iterations {
+            let segs = p
+                .segments
+                .iter()
+                .map(|s| format!("{}={:.3}", s.name, s.dur_ms))
+                .collect::<Vec<_>>()
+                .join(" ");
+            out.push_str(&format!(
+                "{} {} {:.3} {:.3} {:.3} {:.1}% {}\n",
+                p.pid,
+                p.iteration.map_or("-".to_string(), |i| i.to_string()),
+                p.t0_ms,
+                p.wall_ms,
+                p.path_ms(),
+                coverage_pct(p),
+                segs,
+            ));
+        }
+        let agg = aggregate_segments(
+            a.iterations.iter().map(|p| (p.pid, p.segments.as_slice())),
+        );
+        out.push_str("training totals: ");
+        out.push_str(&render_agg(&agg));
+        out.push('\n');
+    }
+
+    // -- request critical paths, aggregated (one line per request would
+    // drown the report at serving rates).
+    if !a.requests.is_empty() {
+        out.push_str("\n-- request critical paths (aggregate) --\n");
+        let agg = aggregate_segments(
+            a.requests.iter().map(|p| (p.pid, p.segments.as_slice())),
+        );
+        out.push_str(&format!("requests analyzed: {}\n", a.requests.len()));
+        out.push_str("serving totals: ");
+        out.push_str(&render_agg(&agg));
+        out.push('\n');
+    }
+
+    // -- flame rollup.
+    if !a.flame.is_empty() {
+        out.push_str("\n-- flame rollup (X spans; self = children subtracted) --\n");
+        out.push_str("pid tid(track) cat name count wall_ms self_ms\n");
+        for r in &a.flame {
+            out.push_str(&format!(
+                "{} {}({}) {} {} {} {:.3} {:.3}\n",
+                r.pid,
+                r.tid,
+                Track::thread_name(r.tid),
+                r.cat,
+                r.name,
+                r.count,
+                r.wall_ms,
+                r.self_ms,
+            ));
+        }
+    }
+
+    // -- counter statistics.
+    if !a.counters.is_empty() {
+        out.push_str("\n-- counters (min/mean/max, twa = time-weighted avg) --\n");
+        out.push_str("pid tid(track) name key n min mean max twa\n");
+        for c in &a.counters {
+            out.push_str(&format!(
+                "{} {}({}) {} {} {} {:.3} {:.3} {:.3} {:.3}\n",
+                c.pid,
+                c.tid,
+                Track::thread_name(c.tid),
+                c.name,
+                c.key,
+                c.n,
+                c.min,
+                c.mean,
+                c.max,
+                c.twa,
+            ));
+        }
+    }
+    out
+}
+
+fn coverage_pct(p: &IterationPath) -> f64 {
+    if p.wall_ms <= 0.0 {
+        return 100.0;
+    }
+    100.0 * p.path_ms() / p.wall_ms
+}
+
+fn render_agg(agg: &BTreeMap<(u32, &'static str), (u64, f64)>) -> String {
+    agg.iter()
+        .map(|((pid, name), (n, ms))| format!("p{pid}/{name} n={n} total={ms:.3}ms"))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// The machine-readable report (pretty-printed; keys sorted by the
+/// `json` module's `BTreeMap` backing).
+pub fn render_json(a: &TraceAnalysis) -> String {
+    let iterations: Vec<Value> = a
+        .iterations
+        .iter()
+        .map(|p| {
+            object(vec![
+                ("pid", Value::Number(p.pid as f64)),
+                (
+                    "iteration",
+                    p.iteration.map_or(Value::Null, |i| Value::Number(i as f64)),
+                ),
+                ("t0_ms", Value::Number(p.t0_ms)),
+                ("wall_ms", Value::Number(p.wall_ms)),
+                ("path_ms", Value::Number(p.path_ms())),
+                ("segments", segments_value(&p.segments)),
+            ])
+        })
+        .collect();
+    let requests: Vec<Value> = a
+        .requests
+        .iter()
+        .map(|p: &RequestPath| {
+            object(vec![
+                ("pid", Value::Number(p.pid as f64)),
+                ("id", Value::Number(p.id as f64)),
+                ("begin_ms", Value::Number(p.begin_ms)),
+                ("end_ms", Value::Number(p.end_ms)),
+                ("segments", segments_value(&p.segments)),
+            ])
+        })
+        .collect();
+    let flame: Vec<Value> = a
+        .flame
+        .iter()
+        .map(|r| {
+            object(vec![
+                ("pid", Value::Number(r.pid as f64)),
+                ("tid", Value::Number(r.tid as f64)),
+                ("cat", Value::String(r.cat.clone())),
+                ("name", Value::String(r.name.clone())),
+                ("count", Value::Number(r.count as f64)),
+                ("wall_ms", Value::Number(r.wall_ms)),
+                ("self_ms", Value::Number(r.self_ms)),
+            ])
+        })
+        .collect();
+    let counters: Vec<Value> = a
+        .counters
+        .iter()
+        .map(|c| {
+            object(vec![
+                ("pid", Value::Number(c.pid as f64)),
+                ("tid", Value::Number(c.tid as f64)),
+                ("name", Value::String(c.name.clone())),
+                ("key", Value::String(c.key.clone())),
+                ("n", Value::Number(c.n as f64)),
+                ("min", Value::Number(c.min)),
+                ("mean", Value::Number(c.mean)),
+                ("max", Value::Number(c.max)),
+                ("twa", Value::Number(c.twa)),
+            ])
+        })
+        .collect();
+    let verdicts: Vec<Value> = a
+        .verdicts
+        .iter()
+        .map(|v| {
+            object(vec![
+                ("scope", Value::String(v.scope.clone())),
+                ("verdict", Value::String(v.verdict.clone())),
+                ("detail", Value::String(v.detail.clone())),
+            ])
+        })
+        .collect();
+    let doc = object(vec![
+        ("iterations", Value::Array(iterations)),
+        ("requests", Value::Array(requests)),
+        ("flame", Value::Array(flame)),
+        ("counters", Value::Array(counters)),
+        ("verdicts", Value::Array(verdicts)),
+    ]);
+    to_string_pretty(&doc)
+}
+
+fn segments_value(segments: &[Segment]) -> Value {
+    Value::Array(
+        segments
+            .iter()
+            .map(|s| {
+                object(vec![
+                    ("name", Value::String(s.name.to_string())),
+                    ("dur_ms", Value::Number(s.dur_ms)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::analyze::TraceAnalysis;
+    use crate::trace::{TraceHandle, Track};
+
+    fn sample() -> TraceAnalysis {
+        let t = TraceHandle::recording();
+        t.span(Track::master(0), "train", "iteration", 0.0, 100.0, &[]);
+        t.span(Track::worker(0, 1), "train", "ingest", 40.0, 90.0, &[]);
+        t.counter(Track::shard(0, 0), "serve/queue", 0.0, &[("depth", 2.0)]);
+        TraceAnalysis::from_events(&t.snapshot())
+    }
+
+    #[test]
+    fn text_report_is_deterministic_and_covers_sections() {
+        let a = sample();
+        let text = render_text(&a);
+        assert_eq!(text, render_text(&a), "same analysis → identical text");
+        assert!(text.contains("== trace report =="));
+        assert!(text.contains("training critical paths"));
+        assert!(text.contains("serve/queue"));
+        assert!(text.contains("100.0%"), "full coverage by construction:\n{text}");
+    }
+
+    #[test]
+    fn json_report_parses_and_round_trips_key_numbers() {
+        let a = sample();
+        let json = render_json(&a);
+        assert_eq!(json, render_json(&a));
+        let doc = crate::json::parse(&json).unwrap();
+        let iters = doc.req_array("iterations").unwrap();
+        assert_eq!(iters.len(), 1);
+        assert_eq!(iters[0].req_f64("wall_ms").unwrap(), 100.0);
+        assert_eq!(iters[0].req_f64("path_ms").unwrap(), 100.0);
+        let counters = doc.req_array("counters").unwrap();
+        assert_eq!(counters[0].req_str("name").unwrap(), "serve/queue");
+    }
+}
