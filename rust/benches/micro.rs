@@ -219,6 +219,86 @@ fn reduce_bench(check: bool, json_path: &str) {
     }
 }
 
+/// The durable-plane section: the WAL append must stay a buffered write
+/// — the training hot path never fsyncs (syncs happen only at checkpoint
+/// boundaries).  Records ns/record for the buffered append beside a
+/// per-record-fsync strawman; writes `BENCH_storage.json`.
+fn storage_bench(check: bool, json_path: &str) {
+    use mlitb::storage::{RunIdentity, WalRecord, WalWriter};
+    let (warm, iters) = if check { (1, 4) } else { (3, 20) };
+    const BATCH: usize = 256;
+    println!(
+        "\n== storage (WAL append, {BATCH} records/iter{}) ==",
+        if check { ", --check" } else { "" }
+    );
+    let dir = std::env::temp_dir().join(format!("mlitb-bench-storage-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let identity = RunIdentity { seed: 1, config_digest: 0xBE9C };
+    let record = |i: u64| WalRecord {
+        iteration: i,
+        t_virtual_ms: i as f64 * 4_000.0,
+        seed: 1,
+        workers: 8,
+        worker_set_digest: 0x1234_5678,
+        stepped: true,
+        grad_digest: 0x9ABC_DEF0,
+        params_digest: 0x0FED_CBA9,
+    };
+
+    let mut buffered = WalWriter::open(&dir.join("buffered.log"), identity).unwrap();
+    let mut n = 0u64;
+    let r_buf = bench("wal: buffered append", warm, iters, || {
+        for _ in 0..BATCH {
+            buffered.append(&record(n)).unwrap();
+            n += 1;
+        }
+    });
+    println!("{}", r_buf.report());
+    let buf_ns = r_buf.median_ns() / BATCH as f64;
+    println!("    -> {buf_ns:.0} ns/record (hot path: no fsync)");
+
+    // The strawman the design rejects: fsync every record.
+    let sync_batch = if check { 4usize } else { 32 };
+    let mut synced = WalWriter::open(&dir.join("synced.log"), identity).unwrap();
+    let mut m = 0u64;
+    let r_sync = bench("wal: per-record fsync strawman", warm, iters, || {
+        for _ in 0..sync_batch {
+            synced.append(&record(m)).unwrap();
+            synced.sync().unwrap();
+            m += 1;
+        }
+    });
+    println!("{}", r_sync.report());
+    let sync_ns = r_sync.median_ns() / sync_batch as f64;
+    println!(
+        "    -> {sync_ns:.0} ns/record ({:.1}x the buffered append)",
+        sync_ns / buf_ns
+    );
+    if check {
+        assert!(
+            buf_ns * 3.0 < sync_ns,
+            "buffered WAL append must be far cheaper than per-record fsync \
+             ({buf_ns:.0} vs {sync_ns:.0} ns/record)"
+        );
+    }
+
+    let doc = json::object(vec![
+        ("records_per_iter", Value::Number(BATCH as f64)),
+        ("check_mode", Value::Bool(check)),
+        ("append_ns_per_record", Value::Number(buf_ns)),
+        ("fsync_ns_per_record", Value::Number(sync_ns)),
+        ("fsync_penalty_x", Value::Number(sync_ns / buf_ns)),
+    ]);
+    match std::fs::write(json_path, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("wrote {json_path} (fsync penalty {:.1}x)", sync_ns / buf_ns),
+        Err(e) => eprintln!("warning: could not write {json_path}: {e}"),
+    }
+    drop(buffered);
+    drop(synced);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let args = Args::from_env();
     let fast = args.flag("fast");
@@ -226,6 +306,7 @@ fn main() {
     let json_path = args.get_or("json", "BENCH_reduce.json");
 
     reduce_bench(check, json_path);
+    storage_bench(check, args.get_or("storage-json", "BENCH_storage.json"));
     if args.flag("reduce-only") {
         return;
     }

@@ -16,7 +16,7 @@
 
 mod pie;
 
-pub use pie::Allocator;
+pub use pie::{Allocator, AllocatorState, WorkerAllocState};
 
 /// Worker identity within one project.
 pub type WorkerId = u64;

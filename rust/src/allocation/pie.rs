@@ -25,6 +25,25 @@ struct WorkerState {
     cached: Vec<bool>, // indexed by DataId; lazily grown
 }
 
+/// Serializable allocator snapshot — see [`Allocator::export_state`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllocatorState {
+    pub capacity: usize,
+    pub total_data: u64,
+    pub workers: Vec<WorkerAllocState>,
+    pub unallocated: Vec<DataId>,
+    pub transfers: u64,
+}
+
+/// One worker's slice of the allocation (owned ids in allocation order,
+/// cached ids ascending).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerAllocState {
+    pub id: WorkerId,
+    pub owned: Vec<DataId>,
+    pub cached: Vec<DataId>,
+}
+
 impl WorkerState {
     fn is_cached(&self, id: DataId) -> bool {
         self.cached.get(id as usize).copied().unwrap_or(false)
@@ -339,6 +358,59 @@ impl Allocator {
         delta
     }
 
+    // ------------------------------------------------------- checkpointing
+
+    /// Full allocation state in worker-id order — for checkpointing.
+    /// The `owner` map is derivable from the owned lists, so it is not
+    /// exported; `cached` flags are exported as id lists (they survive
+    /// revokes, so they are *not* derivable from current ownership).
+    pub fn export_state(&self) -> AllocatorState {
+        AllocatorState {
+            capacity: self.capacity,
+            total_data: self.owner.len() as u64,
+            workers: self
+                .workers
+                .iter()
+                .map(|(&id, s)| WorkerAllocState {
+                    id,
+                    owned: s.owned.clone(),
+                    cached: (0..s.cached.len() as DataId)
+                        .filter(|&i| s.cached[i as usize])
+                        .collect(),
+                })
+                .collect(),
+            unallocated: self.unallocated.clone(),
+            transfers: self.transfers,
+        }
+    }
+
+    /// Rebuild an allocator from a captured export; panics (via the
+    /// invariant check) on structurally inconsistent state rather than
+    /// training on a corrupt allocation.
+    pub fn from_state(state: &AllocatorState) -> Self {
+        let mut alloc = Self::new(state.capacity);
+        alloc.owner = vec![None; state.total_data as usize];
+        alloc.transfers = state.transfers;
+        alloc.unallocated = state.unallocated.clone();
+        for w in &state.workers {
+            let mut ws = WorkerState {
+                owned: w.owned.clone(),
+                cached: Vec::new(),
+            };
+            for &id in &w.cached {
+                ws.set_cached(id);
+            }
+            for &id in &w.owned {
+                alloc.owner[id as usize] = Some(w.id);
+            }
+            alloc.workers.insert(w.id, ws);
+        }
+        if let Err(e) = alloc.check_invariants() {
+            panic!("restored allocator state is inconsistent: {e}");
+        }
+        alloc
+    }
+
     // --------------------------------------------------------- invariants
 
     /// Structural invariants — called by tests after every event.
@@ -548,6 +620,59 @@ mod tests {
         a.check_invariants().unwrap();
         assert!(a.imbalance() <= 1);
         assert!(d.moved() >= t_pie, "naive {} < pie {}", d.moved(), t_pie);
+    }
+
+    #[test]
+    fn export_from_state_roundtrip_preserves_behavior() {
+        let mut a = Allocator::new(40);
+        a.add_data(100);
+        a.worker_join(1);
+        a.worker_join(2);
+        for id in 0..10 {
+            a.mark_cached(1, id);
+        }
+        a.shed_load(1, 5);
+        checked(&a);
+
+        let state = a.export_state();
+        let mut b = Allocator::from_state(&state);
+        checked(&b);
+        assert_eq!(b.export_state(), state);
+        assert_eq!(b.transfer_count(), a.transfer_count());
+
+        // Post-restore events make identical decisions (owned-list order
+        // drives take_from/fair-share, so it must have survived exactly).
+        let da = a.worker_join(3);
+        let db = b.worker_join(3);
+        assert_eq!(da, db);
+        assert_eq!(a.export_state(), b.export_state());
+        // Cached flags survived: re-assigning a cached id costs no transfer.
+        let ta = a.transfer_count();
+        assert_eq!(ta, b.transfer_count());
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent")]
+    fn from_state_rejects_double_ownership() {
+        let state = AllocatorState {
+            capacity: 10,
+            total_data: 2,
+            workers: vec![
+                WorkerAllocState {
+                    id: 1,
+                    owned: vec![0, 1],
+                    cached: vec![],
+                },
+                WorkerAllocState {
+                    id: 2,
+                    owned: vec![1],
+                    cached: vec![],
+                },
+            ],
+            unallocated: vec![],
+            transfers: 0,
+        };
+        Allocator::from_state(&state);
     }
 
     #[test]

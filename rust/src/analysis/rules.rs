@@ -107,7 +107,7 @@ impl Scope {
     /// Order-sensitive planes: anywhere map iteration order could leak
     /// into params, schedules, logs or exports.
     fn ordered_plane(&self) -> bool {
-        const PLANES: [&str; 10] = [
+        const PLANES: [&str; 11] = [
             "sim",
             "serve",
             "cosim",
@@ -118,6 +118,7 @@ impl Scope {
             "metrics",
             "data",
             "client",
+            "storage",
         ];
         PLANES.contains(&self.top())
     }

@@ -40,6 +40,17 @@ impl DeviceClass {
         }
     }
 
+    /// Stable name — the inverse of [`parse`](Self::parse), used by the
+    /// CLI tables and the checkpoint codec.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Workstation => "workstation",
+            Self::Desktop => "desktop",
+            Self::Laptop => "laptop",
+            Self::Mobile => "mobile",
+        }
+    }
+
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "workstation" => Ok(Self::Workstation),

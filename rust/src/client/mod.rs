@@ -12,4 +12,4 @@ mod device;
 mod sim_client;
 
 pub use device::{DeviceClass, DeviceProfile};
-pub use sim_client::{SimClient, TrainOutput};
+pub use sim_client::{ClientState, SimClient, TrainOutput};

@@ -26,6 +26,25 @@ pub struct TrainOutput {
     pub compute_ms: f64,
 }
 
+/// Serializable client snapshot — see [`SimClient::export_state`]. The
+/// device profile is stored by (class, sampled power, link placement);
+/// the link's jitter distribution is derivable from those, so restore
+/// reconstructs a bitwise-identical [`LinkModel`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientState {
+    pub id: WorkerId,
+    pub class: super::DeviceClass,
+    pub power_vps: f64,
+    pub link_profile: crate::netsim::LinkProfile,
+    pub link_base_ms: f64,
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    pub owned: Vec<DataId>,
+    pub pending: Vec<DataId>,
+    pub cursor: u64,
+    pub cache: crate::data::CacheState,
+}
+
 /// One simulated browser client.
 pub struct SimClient {
     pub id: WorkerId,
@@ -64,6 +83,58 @@ impl SimClient {
             pending: VecDeque::new(),
             cursor: 0,
             rng,
+            grad_buf: Vec::new(),
+            builders: HashMap::new(),
+        }
+    }
+
+    // ----------------------------------------------------- checkpointing
+
+    /// Everything needed to rebuild this client bitwise: identity, the
+    /// sampled device/link placement, the rng stream position, the
+    /// allocation view and the cache structure. Sample pixels and the
+    /// gradient/batch scratch buffers are rebuilt on restore (pixels from
+    /// the deterministic corpus, scratch lazily on first use — neither
+    /// affects observable behavior).
+    pub fn export_state(&self) -> ClientState {
+        let (rng_state, rng_inc) = self.rng.state();
+        ClientState {
+            id: self.id,
+            class: self.profile.class,
+            power_vps: self.profile.power_vps,
+            link_profile: self.profile.link,
+            link_base_ms: self.link.base_ms(),
+            rng_state,
+            rng_inc,
+            owned: self.owned.clone(),
+            pending: self.pending.iter().copied().collect(),
+            cursor: self.cursor as u64,
+            cache: self.cache.export_state(),
+        }
+    }
+
+    /// Rebuild a client from a captured export, refetching cached sample
+    /// bytes from the data server.
+    pub fn from_state(state: &ClientState, cache_budget_bytes: u64, server: &DataServer) -> Self {
+        Self {
+            id: state.id,
+            profile: DeviceProfile {
+                class: state.class,
+                power_vps: state.power_vps,
+                link: state.link_profile,
+            },
+            link: LinkModel::from_base(state.link_profile, state.link_base_ms),
+            cache: ClientCache::restore(cache_budget_bytes, &state.cache, |id| {
+                SharedSample::clone(
+                    server
+                        .get(id)
+                        .unwrap_or_else(|| panic!("cached id {id} missing from data server")),
+                )
+            }),
+            owned: state.owned.clone(),
+            pending: state.pending.iter().copied().collect(),
+            cursor: state.cursor as usize,
+            rng: Pcg32::from_state(state.rng_state, state.rng_inc),
             grad_buf: Vec::new(),
             builders: HashMap::new(),
         }
@@ -252,6 +323,39 @@ mod tests {
         assert!(out.examples >= 8);
         assert!(out.compute_ms > 0.0);
         assert_eq!(out.grad_sum.len(), 4);
+    }
+
+    #[test]
+    fn export_from_state_roundtrip_is_bitwise() {
+        let mut c = client(11);
+        let ds = server(40);
+        c.assign(&(0..40).collect::<Vec<_>>());
+        c.download_step(&ds, 50_000); // partial download: pending survives
+        c.revoke(&[0, 1]);
+        // consume some rng so the stream position is non-trivial
+        c.link.sample_latency_ms(&mut c.rng);
+
+        let state = c.export_state();
+        let mut r = SimClient::from_state(&state, 100 << 20, &ds);
+        assert_eq!(r.export_state(), state);
+
+        // Behavior after restore is bitwise-identical: same downloads,
+        // same training output bits, same jitter samples.
+        let (got_a, bytes_a) = c.download_step(&ds, 20_000);
+        let (got_b, bytes_b) = r.download_step(&ds, 20_000);
+        assert_eq!(got_a, got_b);
+        assert_eq!(bytes_a, bytes_b);
+        let mut compute = ModeledCompute { param_count: 4 };
+        let sp = spec(4, vec![8]);
+        let out_a = c.train(&mut compute, &sp, &[0.1; 4], 800.0).unwrap().unwrap();
+        let out_b = r.train(&mut compute, &sp, &[0.1; 4], 800.0).unwrap().unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&out_a.grad_sum), bits(&out_b.grad_sum));
+        assert_eq!(out_a.examples, out_b.examples);
+        assert_eq!(
+            c.link.sample_latency_ms(&mut c.rng).to_bits(),
+            r.link.sample_latency_ms(&mut r.rng).to_bits()
+        );
     }
 
     #[test]

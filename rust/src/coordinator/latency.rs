@@ -62,6 +62,17 @@ impl LatencyMonitor {
         self.estimate(worker) > frac * iter_ms
     }
 
+    /// Estimates as sorted (worker, estimate) pairs — for checkpointing.
+    pub fn export_state(&self) -> Vec<(WorkerId, f64)> {
+        self.estimates.iter().map(|(&w, &e)| (w, e)).collect()
+    }
+
+    /// Rebuild the monitor from a captured export. EWMA continuation is
+    /// exact: the estimate is the whole observable state.
+    pub fn import_state(&mut self, state: Vec<(WorkerId, f64)>) {
+        self.estimates = state.into_iter().collect();
+    }
+
     /// Mean estimate over known workers (Fig 4's latency axis).
     pub fn mean_estimate(&self) -> f64 {
         if self.estimates.is_empty() {

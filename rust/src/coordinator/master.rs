@@ -1,12 +1,13 @@
 //! The master state machine: projects, the five-step event loop, reduce.
 
-use crate::allocation::{Allocator, Delta, WorkerId};
+use crate::allocation::{Allocator, AllocatorState, Delta, WorkerId};
 use crate::metrics::{IterationRecord, Timeline};
 use crate::netsim::MasterModel;
 use crate::params::{GradView, Optimizer, OptimizerKind, ShardedAccumulator};
+use crate::storage::{digest_f32s, Fnv64, WalRecord, WalWriter};
 use crate::trace::{ArgValue, TraceHandle, Track};
 
-use super::{LatencyMonitor, ReducePolicy, Submission};
+use super::{LatencyMonitor, Payload, ReducePolicy, Submission};
 
 /// Master/project configuration (one project ≙ one NN being trained; the
 /// paper's master hosts several — see `sim::Simulation` which can run
@@ -76,6 +77,80 @@ pub struct IterationOutcome {
     pub mean_loss: Option<f64>,
 }
 
+/// Serializable form of a carryover [`Submission`] payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PayloadState {
+    Dense(Vec<f32>),
+    Sparse(Vec<(u32, f32)>),
+}
+
+/// Serializable form of a carryover [`Submission`] (async policy: gradients
+/// that missed an iteration close survive a checkpoint/restore).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmissionState {
+    pub worker: WorkerId,
+    pub payload: PayloadState,
+    pub examples: u64,
+    pub vectors: u64,
+    pub loss_sum: f64,
+    pub send_offset_ms: f64,
+    pub bytes: u64,
+}
+
+impl SubmissionState {
+    fn from_submission(s: &Submission) -> Self {
+        Self {
+            worker: s.worker,
+            payload: match &s.payload {
+                Payload::Dense(v) => PayloadState::Dense(v.to_vec()),
+                Payload::Sparse(e) => PayloadState::Sparse(e.clone()),
+            },
+            examples: s.examples,
+            vectors: s.vectors,
+            loss_sum: s.loss_sum,
+            send_offset_ms: s.send_offset_ms,
+            bytes: s.bytes,
+        }
+    }
+
+    fn into_submission(self) -> Submission {
+        Submission {
+            worker: self.worker,
+            payload: match self.payload {
+                PayloadState::Dense(v) => Payload::dense(v),
+                PayloadState::Sparse(e) => Payload::Sparse(e),
+            },
+            examples: self.examples,
+            vectors: self.vectors,
+            loss_sum: self.loss_sum,
+            send_offset_ms: self.send_offset_ms,
+            bytes: self.bytes,
+        }
+    }
+}
+
+/// Complete deterministic training state of one master, as captured into a
+/// checkpoint frame by the storage plane.  Everything `finish_iteration`
+/// reads across iterations is here; transient per-iteration buffers
+/// (accumulator shards, `avg_scratch`) are rebuilt empty on restore.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MasterState {
+    pub iteration: u64,
+    pub t_virtual_ms: f64,
+    pub params: Vec<f32>,
+    /// Optimizer kind name — restore refuses a checkpoint taken under a
+    /// different optimizer (its state vectors would be meaningless).
+    pub optimizer: String,
+    /// Flattened optimizer accumulators (AdaGrad/RmsProp history,
+    /// momentum velocity); empty for stateless SGD.
+    pub opt_state: Vec<f32>,
+    pub allocator: AllocatorState,
+    pub latency: Vec<(WorkerId, f64)>,
+    pub timeline: Vec<IterationRecord>,
+    pub carryover: Vec<SubmissionState>,
+    pub pending_test_error: Option<f64>,
+}
+
 /// One training project's master state.
 pub struct Master {
     cfg: MasterConfig,
@@ -99,6 +174,14 @@ pub struct Master {
     /// tracks — the cosim assigns each project its own pid.
     trace: TraceHandle,
     trace_pid: u32,
+    /// Storage plane: when set, every `finish_iteration` fingerprints its
+    /// reduce (worker set, averaged gradient, post-step params) into a
+    /// [`WalRecord`] — replay runs digest-only (no writer) and verifies.
+    wal_seed: Option<u64>,
+    /// Durable iteration log (buffered appends; synced by the checkpoint
+    /// cadence via [`Master::wal_mut`]).
+    wal: Option<WalWriter>,
+    last_record: Option<WalRecord>,
 }
 
 impl Master {
@@ -122,6 +205,9 @@ impl Master {
             pending_test_error: None,
             trace: TraceHandle::off(),
             trace_pid: 0,
+            wal_seed: None,
+            wal: None,
+            last_record: None,
             cfg,
         }
     }
@@ -131,6 +217,90 @@ impl Master {
     pub fn set_trace(&mut self, trace: TraceHandle, pid: u32) {
         self.trace = trace;
         self.trace_pid = pid;
+    }
+
+    // ------------------------------------------------- storage plane
+
+    /// Turn on per-iteration digest records without a durable log —
+    /// recovery replays in this mode and checks each record against the
+    /// WAL it read from disk.
+    pub fn enable_wal_digests(&mut self, seed: u64) {
+        self.wal_seed = Some(seed);
+    }
+
+    /// Attach a durable iteration log: digests on, every iteration
+    /// appended (buffered).  The caller owns the sync cadence.
+    pub fn attach_wal(&mut self, writer: WalWriter, seed: u64) {
+        self.wal = Some(writer);
+        self.wal_seed = Some(seed);
+    }
+
+    /// The record produced by the most recent `finish_iteration`
+    /// (None until digests are enabled and an iteration closes).
+    pub fn last_wal_record(&self) -> Option<&WalRecord> {
+        self.last_record.as_ref()
+    }
+
+    /// Mutable handle on the attached log — checkpoint boundaries call
+    /// `sync()` through this.
+    pub fn wal_mut(&mut self) -> Option<&mut WalWriter> {
+        self.wal.as_mut()
+    }
+
+    /// Capture the complete cross-iteration training state (checkpoint
+    /// payload).  Restoring it with [`Master::import_state`] on a master
+    /// built from the same config resumes bitwise-identically.
+    pub fn export_state(&self) -> MasterState {
+        MasterState {
+            iteration: self.iteration,
+            t_virtual_ms: self.t_virtual_ms,
+            params: self.params.clone(),
+            optimizer: self.cfg.optimizer_name(),
+            opt_state: self.optimizer.state(),
+            allocator: self.allocator.export_state(),
+            latency: self.latency.export_state(),
+            timeline: self.timeline.records().to_vec(),
+            carryover: self
+                .carryover
+                .iter()
+                .map(SubmissionState::from_submission)
+                .collect(),
+            pending_test_error: self.pending_test_error,
+        }
+    }
+
+    /// Restore a state captured by [`Master::export_state`].  Panics on a
+    /// checkpoint that cannot belong to this config (wrong parameter
+    /// dimension or optimizer kind) — recovery treats that as corruption.
+    pub fn import_state(&mut self, st: MasterState) {
+        assert_eq!(
+            st.params.len(),
+            self.cfg.param_count,
+            "checkpoint param dim mismatch"
+        );
+        assert_eq!(
+            st.optimizer,
+            self.cfg.optimizer_name(),
+            "checkpoint optimizer kind mismatch"
+        );
+        self.params = st.params;
+        self.optimizer = self
+            .cfg
+            .optimizer
+            .build(self.cfg.param_count, self.cfg.learning_rate);
+        self.optimizer.restore_state(&st.opt_state);
+        self.allocator = Allocator::from_state(&st.allocator);
+        self.latency.import_state(st.latency);
+        self.timeline = Timeline::from_records(st.timeline);
+        self.carryover = st
+            .carryover
+            .into_iter()
+            .map(SubmissionState::into_submission)
+            .collect();
+        self.pending_test_error = st.pending_test_error;
+        self.iteration = st.iteration;
+        self.t_virtual_ms = st.t_virtual_ms;
+        self.last_record = None;
     }
 
     // ------------------------------------------------------------ access
@@ -305,6 +475,21 @@ impl Master {
             self.optimizer.step(&mut self.params, &self.avg_scratch);
         }
 
+        // ---- storage plane: fingerprint the reduce while its inputs are
+        // still intact (the late-requeue below reorders `subs`).  Worker
+        // ids hash in merge order; the gradient digest covers the weighted
+        // average actually fed to the optimizer; the params digest is
+        // post-step.  All bitwise (FNV over LE bytes), so replay equality
+        // means bit-for-bit reproduction.
+        let wal_digests = self.wal_seed.map(|seed| {
+            let mut ws = Fnv64::new();
+            for &i in &merged_idx {
+                ws.write_u64(subs[i].worker);
+            }
+            let grad_digest = if stepped { digest_f32s(&self.avg_scratch) } else { 0 };
+            (seed, ws.finish(), grad_digest, digest_f32s(&self.params))
+        });
+
         // ---- latency estimates (step d).  The monitor learns the part
         // the client is responsible for (compute overrun + network:
         // arrival − scheduled end) — the master's own queue/merge delay is
@@ -364,6 +549,39 @@ impl Master {
         };
         self.t_virtual_ms += wall_ms;
         self.iteration += 1;
+
+        // ---- storage plane: one WAL record per closed iteration.
+        if let Some((seed, worker_set_digest, grad_digest, params_digest)) = wal_digests {
+            let record = WalRecord {
+                iteration: self.iteration - 1,
+                t_virtual_ms: self.t_virtual_ms,
+                seed,
+                workers: merged_idx.len() as u32,
+                worker_set_digest,
+                stepped,
+                grad_digest,
+                params_digest,
+            };
+            if let Some(wal) = self.wal.as_mut() {
+                if let Err(e) = wal.append(&record) {
+                    // A durable run that cannot log cannot recover; fail
+                    // loudly rather than silently dropping durability.
+                    panic!("wal append failed at iteration {}: {e}", record.iteration);
+                }
+                if self.trace.is_on() {
+                    self.trace.counter(
+                        Track::master(self.trace_pid),
+                        "storage/wal",
+                        self.t_virtual_ms,
+                        &[
+                            ("bytes_appended", wal.bytes_appended() as f64),
+                            ("records_since_checkpoint", wal.records_since_sync() as f64),
+                        ],
+                    );
+                }
+            }
+            self.last_record = Some(record);
+        }
 
         // Master-track spans for the iteration: the barrier itself, the
         // sharded reduce (bounded by the slowest merged drain), the
@@ -702,6 +920,103 @@ mod tests {
         assert!(!delta.is_empty());
         assert_eq!(m.allocator().owned_by(2).len(), 60);
         m.allocator().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn export_import_resumes_bitwise_with_carryover() {
+        // Async + AdaGrad: carryover submissions and optimizer history are
+        // both live state.  A restored master must continue bit-for-bit.
+        let mk = || {
+            let mut c = cfg(ReducePolicy::Async);
+            c.param_count = 5;
+            Master::new(c, vec![0.1; 5])
+        };
+        let mut a = mk();
+        a.register_data(20);
+        a.worker_join(1);
+        a.worker_join(2);
+        a.report_test_error(0.9);
+        for it in 0..4 {
+            let g: Vec<f32> = (0..5).map(|i| ((i + it) as f32).cos()).collect();
+            a.finish_iteration(vec![
+                sub(1, 500.0, g.clone(), 2),
+                sub(2, 7000.0, g, 1), // late → carryover
+            ]);
+        }
+        assert!(!a.export_state().carryover.is_empty(), "test needs carryover");
+
+        let mut b = mk();
+        b.import_state(a.export_state());
+        assert_eq!(b.iteration(), a.iteration());
+        assert_eq!(b.now_ms(), a.now_ms());
+        assert_eq!(b.timeline().records(), a.timeline().records());
+
+        a.enable_wal_digests(42);
+        b.enable_wal_digests(42);
+        for it in 0..3 {
+            let g: Vec<f32> = (0..5).map(|i| ((i * it) as f32).sin()).collect();
+            let subs = vec![sub(1, 600.0, g.clone(), 1), sub(2, 800.0, g, 3)];
+            a.finish_iteration(subs.clone());
+            b.finish_iteration(subs);
+            assert_eq!(
+                a.params()
+                    .iter()
+                    .map(|p| p.to_bits())
+                    .collect::<Vec<_>>(),
+                b.params()
+                    .iter()
+                    .map(|p| p.to_bits())
+                    .collect::<Vec<_>>()
+            );
+            assert_eq!(a.last_wal_record(), b.last_wal_record());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "optimizer kind mismatch")]
+    fn import_rejects_foreign_optimizer_state() {
+        let mut src = cfg(ReducePolicy::Sync);
+        src.optimizer = OptimizerKind::Sgd;
+        let st = Master::new(src, vec![0.0; 2]).export_state();
+        let mut dst = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]); // adagrad
+        dst.import_state(st);
+    }
+
+    #[test]
+    fn wal_records_append_and_read_back() {
+        let dir = std::env::temp_dir().join(format!(
+            "mlitb-master-wal-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = crate::storage::wal_path(&dir);
+        let identity = crate::storage::RunIdentity {
+            seed: 7,
+            config_digest: 11,
+        };
+        let writer = WalWriter::open(&path, identity).unwrap();
+
+        let mut m = Master::new(cfg(ReducePolicy::Sync), vec![0.0; 2]);
+        m.register_data(10);
+        m.worker_join(1);
+        m.attach_wal(writer, 7);
+        m.finish_iteration(vec![sub(1, 100.0, vec![1.0, -1.0], 1)]);
+        m.finish_iteration(vec![]);
+        let last = *m.last_wal_record().unwrap();
+        assert_eq!(last.iteration, 1);
+        assert!(!last.stepped, "empty iteration must not claim a step");
+        m.wal_mut().unwrap().sync().unwrap();
+
+        let (id, records, tail) = crate::storage::read_wal(&path).unwrap();
+        assert_eq!(id, identity);
+        assert_eq!(tail, crate::storage::TailStatus::Clean);
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].iteration, 0);
+        assert!(records[0].stepped);
+        assert_ne!(records[0].params_digest, 0);
+        assert_eq!(records[1], last);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

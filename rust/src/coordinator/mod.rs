@@ -18,7 +18,9 @@ mod master;
 mod reduce;
 
 pub use latency::{LatencyMonitor, DEFAULT_PRIOR_MS};
-pub use master::{IterationOutcome, Master, MasterConfig};
+pub use master::{
+    IterationOutcome, Master, MasterConfig, MasterState, PayloadState, SubmissionState,
+};
 pub use reduce::{Payload, ReducePolicy, Submission};
 
 #[cfg(test)]

@@ -33,6 +33,8 @@
 //! schedule and any in-flight transfers (open-loop arrivals may outlast
 //! training).
 
+use std::path::PathBuf;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::StalenessLog;
@@ -40,6 +42,7 @@ use crate::model::ModelSpec;
 use crate::runtime::Compute;
 use crate::serve::{ControlPlane, ModelVersion, ProjectId, ServeConfig, ServeEngine, ServeReport};
 use crate::sim::{RunReport, SimConfig, Simulation};
+use crate::storage::{recover, RecoverMode, RunStore};
 use crate::trace::{ArgValue, TraceHandle, Track};
 
 use super::probe::StalenessProbe;
@@ -78,6 +81,24 @@ pub struct CosimConfig {
     pub measure_delta: bool,
 }
 
+/// Durable-state options for a co-simulation run (see
+/// [`crate::storage`]).  Project `i`'s training WAL and checkpoints land
+/// under `data_dir/p{i}/train`; its snapshot registry segments under
+/// `data_dir/p{i}`.
+#[derive(Debug, Clone)]
+pub struct CosimDurability {
+    pub data_dir: PathBuf,
+    /// Checkpoint every N training iterations per project (0 = WAL only).
+    pub checkpoint_every: u64,
+    /// Warm-start from `data_dir`: replay each project's training log and
+    /// restore the persisted registries instead of publishing fresh
+    /// initial snapshots.
+    pub resume: bool,
+    /// Fault injection: abort the run (leaving `data_dir` as a crash
+    /// would) once project 0 completes this iteration (0 = never).
+    pub kill_at: u64,
+}
+
 /// Outcome of one co-simulation run.
 #[derive(Debug, Clone)]
 pub struct CosimReport {
@@ -94,6 +115,11 @@ pub struct CosimReport {
     pub evicted: u64,
     /// Versions resident across every registry at end of run.
     pub resident: usize,
+    /// Recovery cost per project when the run resumed from a data dir:
+    /// iterations recomputed from the last checkpoint to the WAL tip
+    /// (the durable plane's "recovery time" in virtual-work units).
+    /// All zeros for fresh or non-durable runs.
+    pub replayed: Vec<u64>,
 }
 
 impl CosimReport {
@@ -233,6 +259,22 @@ pub fn run_cosim_traced<'c>(
     serve_compute: &mut dyn Compute,
     trace: TraceHandle,
 ) -> Result<CosimReport> {
+    run_cosim_durable(cfg, None, train_computes, serve_compute, trace)
+}
+
+/// [`run_cosim_traced`] with an optional durable state plane: per-project
+/// training WALs + checkpoints and persisted snapshot registries under
+/// `durability.data_dir`.  With `resume`, each project's master is
+/// recovered (checkpoint + deterministic replay, digest-verified) and the
+/// serving tier warms from the persisted registries — the active version,
+/// staged candidates and rollback history all survive the restart.
+pub fn run_cosim_durable<'c>(
+    cfg: &CosimConfig,
+    durability: Option<&CosimDurability>,
+    train_computes: Vec<&'c mut dyn Compute>,
+    serve_compute: &mut dyn Compute,
+    trace: TraceHandle,
+) -> Result<CosimReport> {
     let n = cfg.projects.len();
     if n == 0 {
         bail!("cosim needs at least one project");
@@ -273,19 +315,65 @@ pub fn run_cosim_traced<'c>(
     for (i, sim) in sims.iter_mut().enumerate() {
         sim.set_trace(trace.clone(), pids[i].as_u32());
     }
+
+    // Durable plane: open each project's run store, recover on resume
+    // (checkpoint + digest-verified replay through the ordinary step
+    // path), then attach the WAL so every further iteration is logged.
+    let mut stores: Vec<Option<RunStore>> = vec![None; n];
+    let mut replayed: Vec<u64> = vec![0; n];
+    // Projects whose registry warmed from persisted segments skip the
+    // initial publication — their active version survived the restart.
+    let mut warm: Vec<bool> = vec![false; n];
+    if let Some(d) = durability {
+        for i in 0..n {
+            let dir = d.data_dir.join(format!("p{i}")).join("train");
+            let store = RunStore::open_for_config(&dir, &cfg.projects[i].train)?;
+            if d.resume {
+                let rec = recover(
+                    &mut sims[i],
+                    &store,
+                    RecoverMode::Resume,
+                    &trace,
+                    pids[i].as_u32(),
+                )?;
+                replayed[i] = rec.replayed;
+            } else if store.wal_path().exists() {
+                bail!(
+                    "{} already holds a run — resume it instead of overwriting",
+                    store.dir().display()
+                );
+            }
+            let wal = store.open_wal_for_append()?;
+            sims[i].master_mut().attach_wal(wal, store.identity().seed);
+            stores[i] = Some(store);
+        }
+        if d.resume {
+            plane.restore_registries(&d.data_dir)?;
+            for (i, &pid) in pids.iter().enumerate() {
+                warm[i] = !plane.registry(pid).is_empty();
+            }
+        }
+    }
+    let checkpoint_every = durability.map_or(0, |d| d.checkpoint_every);
+
     let mut states: Vec<PublicationState> = vec![PublicationState::default(); n];
     let mut publications: Vec<PublicationRecord> = Vec::new();
     let mut pending: Vec<PendingTransfer> = Vec::new();
     // The master iteration live for each project's current serving
     // window (what activation records stamp as their landing iteration).
-    let mut live_iter: Vec<u64> = vec![0; n];
+    // Resumed masters open their window at the recovered tip.
+    let mut live_iter: Vec<u64> = sims.iter().map(|s| s.master().iteration()).collect();
     let mut evicted_total = 0u64;
 
     // Initial snapshots: the run serves every project's iteration-0
     // parameters from t=0.  Free and instant — egress accounting begins
-    // with the first live publication.
+    // with the first live publication.  Warm-restored registries keep
+    // serving their persisted active version instead.
     for (i, &pid) in pids.iter().enumerate() {
-        probe.set_master(pid, 0, sims[i].master().params());
+        probe.set_master(pid, live_iter[i], sims[i].master().params());
+        if warm[i] {
+            continue;
+        }
         let version = plane
             .registry_mut(pid)
             .publish_params(
@@ -322,13 +410,20 @@ pub fn run_cosim_traced<'c>(
         trace.flow_start(track, "publish", "first-serve", version.flow_id(), 0.0);
     }
 
-    // Seed: one step per project establishes its first boundary.
-    let mut remaining: Vec<u64> = cfg.projects.iter().map(|p| p.train.iterations).collect();
+    // Seed: one step per project establishes its first boundary.  A
+    // resumed project owes only the iterations past its recovered tip.
+    let mut remaining: Vec<u64> = cfg
+        .projects
+        .iter()
+        .zip(&live_iter)
+        .map(|(p, &done)| p.train.iterations.saturating_sub(done))
+        .collect();
     let mut boundaries: Vec<Option<f64>> = vec![None; n];
     for i in 0..n {
         if remaining[i] > 0 {
             sims[i].step()?;
             remaining[i] -= 1;
+            checkpoint_after_step(&mut sims[i], stores[i].as_ref(), checkpoint_every)?;
             boundaries[i] = Some(sims[i].master().now_ms());
         }
     }
@@ -351,6 +446,17 @@ pub fn run_cosim_traced<'c>(
         boundaries[i] = None;
         let pid = pids[i];
         let iteration = sims[i].master().iteration();
+        // Fault injection: die at this boundary exactly as a crash would —
+        // checkpoints/WAL syncs through the cadence exist, nothing else.
+        if let Some(d) = durability {
+            if d.kill_at > 0 && i == 0 && iteration >= d.kill_at {
+                bail!(
+                    "fault injection: cosim killed at project 0 iteration {iteration} \
+                     (data dir {} holds the crash state)",
+                    d.data_dir.display()
+                );
+            }
+        }
         let test_error = sims[i].master().timeline().last().and_then(|r| r.test_error);
         if let Some(trigger) = cfg.projects[i].publish.decide(&mut states[i], iteration, test_error)
         {
@@ -415,6 +521,12 @@ pub fn run_cosim_traced<'c>(
                 trigger,
                 evicted,
             });
+            // Registry durability rides publication boundaries: segments
+            // are immutable, so each save only writes the new version
+            // plus a fresh manifest (and sweeps what GC just evicted).
+            if let Some(d) = durability {
+                plane.persist(&d.data_dir)?;
+            }
         }
         // Open the project's next window: its live params and iteration
         // for the traffic between this boundary and the next.
@@ -423,6 +535,7 @@ pub fn run_cosim_traced<'c>(
         if remaining[i] > 0 {
             sims[i].step()?;
             remaining[i] -= 1;
+            checkpoint_after_step(&mut sims[i], stores[i].as_ref(), checkpoint_every)?;
             boundaries[i] = Some(sims[i].master().now_ms());
         }
     }
@@ -446,6 +559,17 @@ pub fn run_cosim_traced<'c>(
         "drained run must release every reader pin"
     );
 
+    // End-of-run durability: a final WAL sync per project and a last
+    // registry persist (late activations from the drain land here).
+    if let Some(d) = durability {
+        for sim in &mut sims {
+            if let Some(wal) = sim.master_mut().wal_mut() {
+                wal.sync()?;
+            }
+        }
+        plane.persist(&d.data_dir)?;
+    }
+
     let train: Vec<RunReport> = sims
         .iter()
         .map(|s| RunReport::from_timeline(s.master().timeline().clone(), s.n_clients()))
@@ -458,7 +582,29 @@ pub fn run_cosim_traced<'c>(
         egress_bytes: egress.bytes_sent(),
         evicted: evicted_total,
         resident: plane.resident(),
+        replayed,
     })
+}
+
+/// Durable-plane hook after one training step: at the checkpoint cadence,
+/// snapshot the full deterministic state and fsync the WAL — the only
+/// sync points; every other iteration is a buffered append.
+fn checkpoint_after_step(
+    sim: &mut Simulation<'_>,
+    store: Option<&RunStore>,
+    checkpoint_every: u64,
+) -> Result<()> {
+    let Some(store) = store else {
+        return Ok(());
+    };
+    let iteration = sim.master().iteration();
+    if checkpoint_every > 0 && iteration % checkpoint_every == 0 {
+        store.write_checkpoint(&sim.capture_state())?;
+        if let Some(wal) = sim.master_mut().wal_mut() {
+            wal.sync()?;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -734,6 +880,73 @@ mod tests {
         }
         // Request spans are balanced after the tail drain.
         assert_eq!(trace.open_async(), 0);
+    }
+
+    fn run_durable(cfg: &CosimConfig, d: Option<&CosimDurability>) -> Result<CosimReport> {
+        // Drifting training compute: parameters actually move, so the
+        // bitwise-resume assertions below are meaningful.
+        let mut train_compute = crate::runtime::DriftingCompute { param_count: 8 };
+        let mut serve_compute = ModeledCompute { param_count: 8 };
+        run_cosim_durable(
+            cfg,
+            d,
+            vec![&mut train_compute],
+            &mut serve_compute,
+            TraceHandle::off(),
+        )
+    }
+
+    fn durable_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("mlitb-cosim-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn killed_cosim_resumes_bitwise_and_registry_warm() {
+        let dir = durable_dir("kill-resume");
+        let config = cfg(6, 2);
+        // Uninterrupted reference on the same drifting backend.
+        let reference = run_durable(&config, None).unwrap();
+
+        // Cadence 3 with a kill at boundary 4: the crash state holds a
+        // checkpoint at iteration 3 plus WAL records through 4.
+        let killed = CosimDurability {
+            data_dir: dir.clone(),
+            checkpoint_every: 3,
+            resume: false,
+            kill_at: 4,
+        };
+        let err = run_durable(&config, Some(&killed)).unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "{err}");
+        // A second fresh run must refuse the populated data dir.
+        let refused = run_durable(&config, Some(&killed)).unwrap_err();
+        assert!(refused.to_string().contains("already holds a run"), "{refused}");
+
+        let resume = CosimDurability {
+            data_dir: dir.clone(),
+            checkpoint_every: 3,
+            resume: true,
+            kill_at: 0,
+        };
+        let resumed = run_durable(&config, Some(&resume)).unwrap();
+        // Recovery cost: one iteration recomputed (checkpoint 3 → tip 4).
+        assert_eq!(resumed.replayed, vec![1]);
+        // The resumed training trajectory is the uninterrupted one.
+        assert_eq!(
+            resumed.train[0].timeline.to_csv(),
+            reference.train[0].timeline.to_csv()
+        );
+        // The registry warmed from persisted segments: no fresh initial
+        // publication, and the version counter continues where it left
+        // off (v1 initial + v2 published pre-kill ⇒ next mint is v3).
+        assert!(resumed
+            .publications
+            .iter()
+            .all(|p| p.trigger != PublishTrigger::Initial));
+        assert_eq!(resumed.publications[0].version.version, 3);
+        assert!(resumed.serve.completed > 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -44,7 +44,10 @@ mod driver;
 mod probe;
 mod publish;
 
-pub use driver::{run_cosim, run_cosim_traced, CosimConfig, CosimProject, CosimReport};
+pub use driver::{
+    run_cosim, run_cosim_durable, run_cosim_traced, CosimConfig, CosimDurability, CosimProject,
+    CosimReport,
+};
 pub use probe::StalenessProbe;
 pub use publish::{
     EgressBudget, PublicationPolicy, PublicationRecord, PublicationState, PublishTrigger,

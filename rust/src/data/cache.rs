@@ -41,6 +41,22 @@ struct Entry {
 /// The paper's practical browser memory limit (§3.7).
 pub const PRACTICAL_BUDGET: u64 = 100 * 1024 * 1024;
 
+/// Serializable cache structure (no pixel bytes): tick counter plus
+/// entries in recency order — see [`ClientCache::export_state`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheState {
+    pub tick: u64,
+    pub entries: Vec<CacheEntryState>,
+}
+
+/// One cached sample's bookkeeping (recency tick, id, pin status).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheEntryState {
+    pub last_used: u64,
+    pub id: u32,
+    pub pinned: bool,
+}
+
 impl ClientCache {
     pub fn new(budget_bytes: u64) -> Self {
         Self {
@@ -112,6 +128,56 @@ impl ClientCache {
         if let Some(e) = self.entries.get_mut(&id) {
             e.pinned = pinned;
         }
+    }
+
+    /// Cache state for checkpointing: the logical tick plus every entry
+    /// as `(last_used, id, pinned)` in recency order. Sample bytes are
+    /// *not* exported — the corpus is deterministic from the run seed, so
+    /// restore refetches pixels by id and only the recency/pin structure
+    /// (which drives observable eviction order) needs to survive.
+    pub fn export_state(&self) -> CacheState {
+        CacheState {
+            tick: self.tick,
+            entries: self
+                .recency
+                .iter()
+                .map(|(&tick, &id)| {
+                    let e = &self.entries[&id];
+                    CacheEntryState {
+                        last_used: tick,
+                        id,
+                        pinned: e.pinned,
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Rebuild a cache from a captured export, refetching sample bytes
+    /// through `fetch` (backed by the run's `DataServer`). Restores the
+    /// exact tick counter and recency order, so post-restore eviction
+    /// decisions are bitwise-identical to the uninterrupted run's.
+    pub fn restore(
+        budget_bytes: u64,
+        state: &CacheState,
+        mut fetch: impl FnMut(u32) -> SharedSample,
+    ) -> Self {
+        let mut cache = Self::new(budget_bytes);
+        cache.tick = state.tick;
+        for e in &state.entries {
+            let sample = fetch(e.id);
+            cache.used_bytes += sample.byte_size();
+            cache.entries.insert(
+                e.id,
+                Entry {
+                    sample,
+                    last_used: e.last_used,
+                    pinned: e.pinned,
+                },
+            );
+            cache.recency.insert(e.last_used, e.id);
+        }
+        cache
     }
 
     fn evict_over_budget(&mut self) {
@@ -206,6 +272,29 @@ mod tests {
         c.insert(3, sample(100), true);
         assert!(!c.contains(1));
         assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn export_restore_preserves_recency_and_pins() {
+        let mut c = ClientCache::new(900);
+        c.insert(1, sample(100), false);
+        c.insert(2, sample(100), true);
+        c.get(1); // 2's tick is now older than 1's
+        let state = c.export_state();
+        assert_eq!(state.entries.len(), 2);
+
+        let mut r = ClientCache::restore(900, &state, |_| sample(100));
+        assert_eq!(r.export_state(), state);
+        assert_eq!(r.used_bytes(), c.used_bytes());
+        // Same eviction decision as the original would make: insert 3,
+        // the unpinned LRU — which is 1? No: 1 was refreshed, 2 is pinned,
+        // so 1 is the only unpinned entry and must be the victim.
+        r.insert(3, sample(100), false);
+        c.insert(3, sample(100), false);
+        assert_eq!(r.contains(1), c.contains(1));
+        assert_eq!(r.contains(2), c.contains(2));
+        assert_eq!(r.contains(3), c.contains(3));
+        assert_eq!(r.export_state(), c.export_state());
     }
 
     #[test]

@@ -18,7 +18,7 @@ mod server;
 mod synth;
 
 pub use archive::{build_archive, read_archive, ArchiveError};
-pub use cache::{ClientCache, PRACTICAL_BUDGET};
+pub use cache::{CacheEntryState, CacheState, ClientCache, PRACTICAL_BUDGET};
 pub use server::{DataServer, ServeStats};
 pub use synth::{SynthSpec, Synthesizer};
 

@@ -33,7 +33,9 @@
 //!   (pie-cutter), [`params`] (optimizers + the parameter-sharded
 //!   multi-threaded reduce), [`runtime`] (PJRT engine),
 //!   [`serve`] (prediction serving), [`cosim`] (serve × train
-//!   co-simulation), plus the from-scratch substrates
+//!   co-simulation), [`storage`] (durable state plane: iteration WAL,
+//!   checkpoint/replay recovery, persistent snapshot registry), plus the
+//!   from-scratch substrates
 //!   [`json`], [`rng`], [`netsim`], [`metrics`], [`trace`] (virtual-clock
 //!   span tracer with Perfetto export), [`cli`], [`bench`], [`testing`],
 //!   and [`analysis`] (the `mlitb lint` determinism analyzer that keeps
@@ -56,6 +58,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod storage;
 pub mod testing;
 pub mod trace;
 

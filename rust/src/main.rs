@@ -21,7 +21,9 @@
 use mlitb::cli::Args;
 use mlitb::client::DeviceClass;
 use mlitb::coordinator::ReducePolicy;
-use mlitb::cosim::{run_cosim_traced, CosimConfig, CosimProject, PublicationPolicy};
+use mlitb::cosim::{
+    run_cosim_durable, CosimConfig, CosimDurability, CosimProject, PublicationPolicy,
+};
 use mlitb::model::{init_params, Manifest, ModelSpec, ResearchClosure};
 use mlitb::netsim::{LinkProfile, ReduceMode};
 use mlitb::params::OptimizerKind;
@@ -30,8 +32,8 @@ use mlitb::serve::{
     demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId, RouterConfig,
     RoutingPolicy, ServeConfig, ServeReport, ServeSim, ServerProfile,
 };
-use mlitb::sim::SimConfig;
-use mlitb::sim::Simulation;
+use mlitb::sim::{RunReport, SimConfig, Simulation};
+use mlitb::storage::{digest_f32s, recover, RecoverMode, RunStore};
 use mlitb::trace::TraceHandle;
 
 fn main() {
@@ -43,6 +45,7 @@ fn main() {
         .unwrap_or("help");
     let result = match cmd {
         "train" => cmd_train(&args),
+        "recover" => cmd_recover(&args),
         "scale" => cmd_scale(&args),
         "serve-sim" => cmd_serve_sim(&args),
         "cosim" => cmd_cosim(&args),
@@ -64,16 +67,21 @@ fn main() {
 fn print_help() {
     println!(
         "mlitb {} — Machine Learning in the Browser, reproduced in Rust+JAX\n\n\
-         USAGE: mlitb <train|scale|serve-sim|cosim|trace-report|inspect|closure|lint> [options]\n\n\
+         USAGE: mlitb <train|recover|scale|serve-sim|cosim|trace-report|inspect|closure|lint> [options]\n\n\
          train:   --model <name> --nodes N --iters N --t-secs F --lr F\n\
                   --optimizer sgd|momentum|adagrad|rmsprop --policy sync|async|partial:<f>\n\
                   --track-every N --train-size N --test-size N --power-scale F\n\
                   --capacity N --seed N --save-closure <path> --csv <path>\n\
                   --master-processes N --reduce-mode message|sharded|sharded:<S>\n\
                   --merge-ns F --fanin-ns F  (reduce calibration overrides)\n\
+                  --data-dir <dir> --checkpoint-every N --resume\n\
+                  --kill-at N  (durable WAL+checkpoints; fault injection)\n\
                   --trace <path>  (Perfetto trace-event JSON + <path>.csv)\n\
                   --report  (print flame/critical-path rollup after the run)\n\
                   --trace-capacity N  (trace ring size in events)\n\
+         recover: --data-dir <dir> [--verify] + the run's train flags\n\
+                  (rebuilds the world, loads the newest checkpoint, replays\n\
+                  the WAL; --verify only checks, never repairs a torn tail)\n\
          scale:   --nodes-list 1,2,4,...  --iters N  (modeled compute)\n\
                   --reduce-mode message|sharded:<S> --merge-ns F --fanin-ns F\n\
          serve-sim: --model <name> --closure <path> --clients N --rate F\n\
@@ -88,6 +96,7 @@ fn print_help() {
                   --retain N --no-delta --clients N --rate F --hot-rate F\n\
                   --link <profile> --shards N --router rr|jsq|affinity --batch N\n\
                   --queue-depth N --cache N --input-pool N --seed N --csv <path>\n\
+                  --data-dir <dir> --checkpoint-every N --resume --kill-at N\n\
                   --trace <path>  (spans from all three planes on one timeline)\n\
                   --report --trace-capacity N\n\
          trace-report: <trace.json.csv> [--json <path>]  (flame rollup,\n\
@@ -189,14 +198,49 @@ fn build_sim_config(args: &Args, spec: &mlitb::model::ModelSpec) -> Result<SimCo
     Ok(cfg)
 }
 
+/// Training compute backend: the PJRT engine over AOT artifacts when both
+/// exist, else the deterministic drifting scorer over the built-in demo
+/// spec — parameters still move, so durable training and crash-recovery
+/// drills run anywhere (only gradient realism needs the artifacts).
+enum TrainCompute {
+    Engine(Box<Engine>),
+    Drifting(DriftingCompute),
+}
+
+impl TrainCompute {
+    fn as_dyn(&mut self) -> &mut dyn Compute {
+        match self {
+            TrainCompute::Engine(e) => e.as_mut(),
+            TrainCompute::Drifting(d) => d,
+        }
+    }
+}
+
+fn train_backend(args: &Args) -> Result<(ModelSpec, TrainCompute), String> {
+    if cfg!(feature = "pjrt") && manifest_on_disk().is_some() {
+        let model = args.get_or("model", "mnist_conv").to_string();
+        let mut engine = Engine::from_default_artifacts().map_err(|e| e.to_string())?;
+        engine.load_model(&model).map_err(|e| e.to_string())?;
+        let spec = engine.spec(&model).map_err(|e| e.to_string())?.clone();
+        Ok((spec, TrainCompute::Engine(Box::new(engine))))
+    } else {
+        let spec = demo_spec();
+        let param_count = spec.param_count;
+        println!(
+            "note: no PJRT artifacts — training the built-in '{}' spec on the \
+             deterministic drifting backend",
+            spec.name
+        );
+        Ok((spec, TrainCompute::Drifting(DriftingCompute { param_count })))
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<(), String> {
-    let model = args.get_or("model", "mnist_conv").to_string();
-    let mut engine = Engine::from_default_artifacts().map_err(|e| e.to_string())?;
-    engine.load_model(&model).map_err(|e| e.to_string())?;
-    let spec = engine.spec(&model).map_err(|e| e.to_string())?.clone();
+    let (spec, mut backend) = train_backend(args)?;
     let cfg = build_sim_config(args, &spec)?;
     println!(
-        "training {model}: {} nodes, {} iters, T={}s, {} params, policy={}",
+        "training {}: {} nodes, {} iters, T={}s, {} params, policy={}",
+        spec.name,
         cfg.fleet.len(),
         cfg.iterations,
         cfg.master.iter_duration_s,
@@ -204,9 +248,24 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         cfg.master.policy.name()
     );
     let trace = trace_for(args)?;
-    let mut sim = Simulation::new(cfg, spec.clone(), &mut engine);
+    let checkpoint_every = args.get_u64("checkpoint-every", 25)?;
+    let kill_at = args.get_u64("kill-at", 0)?;
+    let resume = args.flag("resume");
+    let total = cfg.iterations;
+    let store = match args.get("data-dir") {
+        Some(dir) => Some(
+            RunStore::open_for_config(std::path::Path::new(dir), &cfg)
+                .map_err(|e| e.to_string())?,
+        ),
+        None => None,
+    };
+    let mut sim = Simulation::new(cfg, spec.clone(), backend.as_dyn());
     sim.set_trace(trace.clone(), 0);
-    let report = sim.run().map_err(|e| e.to_string())?;
+    let report = if let Some(store) = &store {
+        run_train_durable(store, &mut sim, total, checkpoint_every, kill_at, resume, &trace)?
+    } else {
+        sim.run().map_err(|e| e.to_string())?
+    };
     finish_trace(args, &trace)?;
     for r in report.timeline.records() {
         if r.iteration % 10 == 0 || r.test_error.is_some() {
@@ -236,6 +295,104 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         closure.save(std::path::Path::new(path))?;
         println!("saved research closure to {path}");
     }
+    Ok(())
+}
+
+/// The durable training loop: WAL every iteration (buffered append),
+/// checkpoint + fsync at the cadence, `DIGEST` written at completion so
+/// crash-recovery drills can compare runs bitwise.  `--kill-at N` dies
+/// *without* flushing — exactly what a crash leaves behind.
+fn run_train_durable(
+    store: &RunStore,
+    sim: &mut Simulation<'_>,
+    total: u64,
+    checkpoint_every: u64,
+    kill_at: u64,
+    resume: bool,
+    trace: &TraceHandle,
+) -> Result<RunReport, String> {
+    let start = if resume {
+        let rec = recover(sim, store, RecoverMode::Resume, trace, 0).map_err(|e| e.to_string())?;
+        println!("recovery: {}", rec.summary());
+        rec.tip
+    } else {
+        if store.wal_path().exists() {
+            return Err(format!(
+                "{} already holds a run — pass --resume to continue it, or point \
+                 --data-dir elsewhere",
+                store.dir().display()
+            ));
+        }
+        0
+    };
+    let wal = store.open_wal_for_append().map_err(|e| e.to_string())?;
+    sim.master_mut().attach_wal(wal, store.identity().seed);
+    for done in start..total {
+        sim.step().map_err(|e| e.to_string())?;
+        let iteration = done + 1;
+        if kill_at > 0 && iteration >= kill_at {
+            eprintln!(
+                "fault injection: killed at iteration {iteration} ({} holds the crash state)",
+                store.dir().display()
+            );
+            // No destructors: buffered WAL records since the last
+            // checkpoint sync are lost, as in a real crash.
+            std::process::exit(3);
+        }
+        if checkpoint_every > 0 && iteration % checkpoint_every == 0 {
+            store
+                .write_checkpoint(&sim.capture_state())
+                .map_err(|e| e.to_string())?;
+            if let Some(w) = sim.master_mut().wal_mut() {
+                w.sync().map_err(|e| e.to_string())?;
+            }
+        }
+    }
+    if let Some(w) = sim.master_mut().wal_mut() {
+        w.sync().map_err(|e| e.to_string())?;
+    }
+    let digest = digest_f32s(sim.master().params());
+    let line = format!("{digest:016x} iteration {}\n", sim.master().iteration());
+    std::fs::write(store.dir().join("DIGEST"), &line).map_err(|e| e.to_string())?;
+    println!(
+        "params digest {digest:016x} at iteration {} (DIGEST in {})",
+        sim.master().iteration(),
+        store.dir().display()
+    );
+    Ok(RunReport::from_timeline(
+        sim.master().timeline().clone(),
+        sim.n_clients(),
+    ))
+}
+
+/// `mlitb recover --data-dir <dir> [--verify]` — rebuild the run's world
+/// from the same train flags, load the newest valid checkpoint and replay
+/// the WAL through the deterministic step path, verifying every replayed
+/// iteration's digests.  `--verify` never mutates the data dir (a torn
+/// tail is reported, not repaired) and exits nonzero on any mismatch.
+fn cmd_recover(args: &Args) -> Result<(), String> {
+    let dir = args
+        .get("data-dir")
+        .ok_or("recover needs --data-dir <dir>")?
+        .to_string();
+    let (spec, mut backend) = train_backend(args)?;
+    let cfg = build_sim_config(args, &spec)?;
+    let store = RunStore::open_for_config(std::path::Path::new(&dir), &cfg)
+        .map_err(|e| e.to_string())?;
+    let mode = if args.flag("verify") {
+        RecoverMode::Verify
+    } else {
+        RecoverMode::Resume
+    };
+    let mut sim = Simulation::new(cfg, spec, backend.as_dyn());
+    let report = recover(&mut sim, &store, mode, &TraceHandle::off(), 0)
+        .map_err(|e| e.to_string())?;
+    println!("{}", report.summary());
+    println!(
+        "params digest {:016x} at iteration {}",
+        digest_f32s(sim.master().params()),
+        sim.master().iteration()
+    );
     Ok(())
 }
 
@@ -642,9 +799,30 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         .collect();
     let mut serve_compute = ModeledCompute { param_count: spec.param_count };
     let trace = trace_for(args)?;
-    let report = run_cosim_traced(&cfg, train_refs, &mut serve_compute, trace.clone())
-        .map_err(|e| e.to_string())?;
+    let checkpoint_every = args.get_u64("checkpoint-every", 25)?;
+    let kill_at = args.get_u64("kill-at", 0)?;
+    let durability = args.get("data-dir").map(|dir| CosimDurability {
+        data_dir: std::path::PathBuf::from(dir),
+        checkpoint_every,
+        resume: args.flag("resume"),
+        kill_at,
+    });
+    let report = run_cosim_durable(
+        &cfg,
+        durability.as_ref(),
+        train_refs,
+        &mut serve_compute,
+        trace.clone(),
+    )
+    .map_err(|e| e.to_string())?;
     finish_trace(args, &trace)?;
+    if report.replayed.iter().any(|&r| r > 0) {
+        for (i, &r) in report.replayed.iter().enumerate() {
+            if r > 0 {
+                println!("recovery p{i}: replayed {r} iteration(s) from the last checkpoint");
+            }
+        }
+    }
 
     let mut pub_table = mlitb::metrics::Table::new(
         "publications",

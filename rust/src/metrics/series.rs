@@ -44,6 +44,11 @@ impl Timeline {
         self.records.push(r);
     }
 
+    /// Rebuild a timeline from checkpointed records (restore path).
+    pub fn from_records(records: Vec<IterationRecord>) -> Self {
+        Self { records }
+    }
+
     pub fn len(&self) -> usize {
         self.records.len()
     }

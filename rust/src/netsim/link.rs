@@ -73,6 +73,20 @@ impl LinkModel {
         }
     }
 
+    /// Rebuild a link from its persisted placement. The jitter
+    /// distribution and bandwidth are pure functions of (profile,
+    /// base_ms), so a checkpoint only stores those two values and this
+    /// constructor yields a bitwise-identical model on restore.
+    pub fn from_base(profile: LinkProfile, base_ms: f64) -> Self {
+        let (_, sigma, bw) = profile.constants();
+        Self {
+            profile,
+            base_ms,
+            jitter: LogNormal::from_median(base_ms, sigma),
+            bandwidth_bytes_per_ms: bw,
+        }
+    }
+
     /// One-way message latency sample (ms), excluding transmission time.
     pub fn sample_latency_ms(&self, rng: &mut Pcg32) -> f64 {
         self.jitter.sample(rng)

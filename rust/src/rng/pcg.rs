@@ -29,6 +29,22 @@ impl Pcg32 {
         rng
     }
 
+    /// Raw generator state `(state, inc)` — for checkpointing. Together
+    /// with [`from_state`](Self::from_state) this restores the exact
+    /// position in the stream (no re-warmup), which the durable-state
+    /// plane relies on for bitwise-identical replay.
+    pub fn state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator at an exact stream position captured by
+    /// [`state`](Self::state). `inc` must be odd (every constructor
+    /// guarantees this invariant).
+    pub fn from_state(state: u64, inc: u64) -> Self {
+        debug_assert!(inc & 1 == 1, "pcg increment must be odd");
+        Self { state, inc }
+    }
+
     /// Derive an independent child generator (for per-client streams).
     pub fn fork(&mut self, tag: u64) -> Pcg32 {
         let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
@@ -143,6 +159,19 @@ mod tests {
         let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
         let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
         assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_exact_stream() {
+        let mut rng = Pcg32::new(77);
+        for _ in 0..13 {
+            rng.next_u32();
+        }
+        let (state, inc) = rng.state();
+        let mut resumed = Pcg32::from_state(state, inc);
+        let a: Vec<u32> = (0..16).map(|_| rng.next_u32()).collect();
+        let b: Vec<u32> = (0..16).map(|_| resumed.next_u32()).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -24,8 +24,10 @@
 //!   cannot starve a cold one out of its share.
 
 use std::fmt;
+use std::path::Path;
 
 use crate::model::ModelSpec;
+use crate::storage::registry_store;
 
 use super::registry::{Snapshot, SnapshotRegistry};
 
@@ -270,6 +272,37 @@ impl ControlPlane {
             }
         }
         caps
+    }
+
+    /// Persist every project's registry under `root` — project `p{i}`
+    /// lands in `root/p{i}` via [`crate::storage::registry_store::save`].
+    /// Reader pins are runtime state and are not persisted.
+    pub fn persist(&self, root: &Path) -> crate::storage::Result<()> {
+        for (i, entry) in self.entries.iter().enumerate() {
+            registry_store::save(&root.join(format!("p{i}")), &entry.registry)?;
+        }
+        Ok(())
+    }
+
+    /// Warm this plane's registries from a directory written by
+    /// [`Self::persist`].  Projects must already be registered (the specs
+    /// define what each directory may contain); a project with no
+    /// persisted state keeps its freshly-registered empty registry.
+    /// Returns how many registries were restored.
+    pub fn restore_registries(&mut self, root: &Path) -> crate::storage::Result<usize> {
+        let mut restored = 0;
+        for (i, entry) in self.entries.iter_mut().enumerate() {
+            let dir = root.join(format!("p{i}"));
+            if !dir.exists() {
+                continue;
+            }
+            let spec = entry.registry.spec().clone();
+            if let Some(reg) = registry_store::load(&dir, ProjectId(i as u32), &spec)? {
+                entry.registry = reg;
+                restored += 1;
+            }
+        }
+        Ok(restored)
     }
 }
 

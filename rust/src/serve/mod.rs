@@ -71,7 +71,7 @@ pub use control::{ControlPlane, ModelVersion, ProjectId, ProjectStats};
 pub use executor::{BatchExecutor, Prediction, ServerProfile};
 pub use loadgen::{ClientSpec, FleetConfig, RequestEvent, RequestFleet};
 pub use queue::{AdmissionQueue, BatchPolicy, PredictRequest};
-pub use registry::{Snapshot, SnapshotMeta, SnapshotRegistry};
+pub use registry::{RegistryState, Snapshot, SnapshotMeta, SnapshotRegistry, SnapshotRow};
 pub use router::{
     failover_order, tuned_max_batch, tuned_wait_ms, RateWindow, RouterConfig, RoutingPolicy,
     Shard, ShardStats,

@@ -76,6 +76,31 @@ impl Snapshot {
     }
 }
 
+/// Serializable row of one resident snapshot — what the storage plane
+/// writes as a segment file plus a manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotRow {
+    pub version: u64,
+    pub model: String,
+    pub iteration: u64,
+    pub params: Arc<Vec<f32>>,
+    pub notes: String,
+    pub published_ms: f64,
+}
+
+/// Serializable state of a whole registry.  Reader pins are deliberately
+/// absent: they track *in-flight* requests, which do not survive a
+/// restart — a recovered registry starts pin-free, so versions retired
+/// before the crash become compactable on the first GC after warm-up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistryState {
+    pub next: u64,
+    pub active: Option<u64>,
+    pub staged: Vec<u64>,
+    /// Resident snapshots, version-ascending.
+    pub rows: Vec<SnapshotRow>,
+}
+
 /// Versioned snapshot store for one project's served model.
 #[derive(Debug, Clone)]
 pub struct SnapshotRegistry {
@@ -111,6 +136,95 @@ impl SnapshotRegistry {
 
     pub fn spec(&self) -> &ModelSpec {
         &self.spec
+    }
+
+    /// Capture the persistable registry state (resident snapshots, active
+    /// pointer, staged set, version counter — not reader pins, see
+    /// [`RegistryState`]).
+    pub fn export_state(&self) -> RegistryState {
+        RegistryState {
+            next: self.next,
+            active: self.active,
+            staged: self.staged.iter().copied().collect(),
+            rows: self
+                .snapshots
+                .values()
+                .map(|s| SnapshotRow {
+                    version: s.version.version,
+                    model: s.model.clone(),
+                    iteration: s.iteration,
+                    params: Arc::clone(&s.params),
+                    notes: s.notes.clone(),
+                    published_ms: s.published_ms,
+                })
+                .collect(),
+        }
+    }
+
+    /// Rebuild a registry from persisted state, re-validating every
+    /// invariant the live path enforces (a manifest is attacker-grade
+    /// input compared to our own in-memory state).
+    pub fn from_state(
+        project: ProjectId,
+        spec: ModelSpec,
+        st: RegistryState,
+    ) -> Result<Self, String> {
+        let mut reg = Self::new(project, spec);
+        let versions: BTreeSet<u64> = st.rows.iter().map(|r| r.version).collect();
+        if versions.len() != st.rows.len() {
+            return Err("registry state has duplicate versions".into());
+        }
+        for row in &st.rows {
+            if row.version == 0 {
+                return Err("version 0 is never assigned".into());
+            }
+            if row.version >= st.next {
+                return Err(format!(
+                    "resident version {} not below next counter {}",
+                    row.version, st.next
+                ));
+            }
+            if row.model != reg.spec.name {
+                return Err(format!(
+                    "snapshot v{} is of model '{}', registry serves '{}'",
+                    row.version, row.model, reg.spec.name
+                ));
+            }
+            if row.params.len() != reg.spec.param_count {
+                return Err(format!(
+                    "snapshot v{} has {} params, model '{}' expects {}",
+                    row.version,
+                    row.params.len(),
+                    reg.spec.name,
+                    reg.spec.param_count
+                ));
+            }
+        }
+        if let Some(a) = st.active {
+            if !versions.contains(&a) {
+                return Err(format!("active version {a} is not resident"));
+            }
+        }
+        for &s in &st.staged {
+            if !versions.contains(&s) {
+                return Err(format!("staged version {s} is not resident"));
+            }
+        }
+        reg.next = st.next;
+        reg.active = st.active;
+        reg.staged = st.staged.into_iter().collect();
+        for row in st.rows {
+            let snapshot = Snapshot {
+                version: reg.handle(row.version),
+                model: row.model,
+                iteration: row.iteration,
+                params: row.params,
+                notes: row.notes,
+                published_ms: row.published_ms,
+            };
+            reg.snapshots.insert(row.version, snapshot);
+        }
+        Ok(reg)
     }
 
     /// The typed handle for a raw version number of *this* project.
@@ -493,6 +607,71 @@ mod tests {
         };
         assert!(reg.pin_reader(foreign).is_err());
         assert_eq!(reg.reader_count(foreign), 0);
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_active_staged_and_rollback() {
+        let mut reg = registry();
+        let v1 = reg.publish_params(vec![0.0; 4], 1, "first".into(), 0.0).unwrap();
+        reg.publish_params(vec![1.0; 4], 2, "second".into(), 1.0).unwrap();
+        let staged = reg
+            .stage_params(vec![2.0; 4], 3, "in flight".into(), 2.0)
+            .unwrap();
+        reg.activate(v1).unwrap(); // rolled back to v1
+        reg.pin_reader(v1).unwrap(); // pins must NOT survive the roundtrip
+
+        let st = reg.export_state();
+        let warm = SnapshotRegistry::from_state(P, spec(), st.clone()).unwrap();
+        assert_eq!(warm.active().unwrap().version, v1);
+        assert!(warm.is_staged(staged));
+        assert_eq!(warm.ids(), reg.ids());
+        assert_eq!(warm.total_readers(), 0, "pins are in-flight state");
+        assert_eq!(warm.get(v1).unwrap().notes, "first");
+        assert_eq!(*warm.get(staged).unwrap().params, vec![2.0; 4]);
+        // The version counter survives: the next publication does not
+        // reuse a retired number.
+        let mut warm = warm;
+        let v4 = warm.publish_params(vec![3.0; 4], 9, String::new(), 3.0).unwrap();
+        assert_eq!(v4.version, 4);
+        // Round-trip of the roundtrip is stable.
+        assert_eq!(st.rows.len(), 3);
+    }
+
+    #[test]
+    fn from_state_rejects_inconsistent_manifests() {
+        let mut reg = registry();
+        reg.publish_params(vec![0.0; 4], 1, String::new(), 0.0).unwrap();
+        let good = reg.export_state();
+
+        let mut active_missing = good.clone();
+        active_missing.active = Some(9);
+        assert!(SnapshotRegistry::from_state(P, spec(), active_missing)
+            .unwrap_err()
+            .contains("not resident"));
+
+        let mut staged_missing = good.clone();
+        staged_missing.staged = vec![9];
+        assert!(SnapshotRegistry::from_state(P, spec(), staged_missing)
+            .unwrap_err()
+            .contains("not resident"));
+
+        let mut counter_behind = good.clone();
+        counter_behind.next = 1;
+        assert!(SnapshotRegistry::from_state(P, spec(), counter_behind)
+            .unwrap_err()
+            .contains("next counter"));
+
+        let mut wrong_dim = good.clone();
+        wrong_dim.rows[0].params = Arc::new(vec![0.0; 3]);
+        assert!(SnapshotRegistry::from_state(P, spec(), wrong_dim)
+            .unwrap_err()
+            .contains("expects 4"));
+
+        let mut wrong_model = good;
+        wrong_model.rows[0].model = "other".into();
+        assert!(SnapshotRegistry::from_state(P, spec(), wrong_model)
+            .unwrap_err()
+            .contains("registry serves"));
     }
 
     #[test]

@@ -11,4 +11,4 @@ mod report;
 mod simulation;
 
 pub use report::RunReport;
-pub use simulation::{ChurnEvent, SimConfig, Simulation};
+pub use simulation::{ChurnEvent, SimConfig, SimState, Simulation};

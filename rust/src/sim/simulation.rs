@@ -5,8 +5,8 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::allocation::WorkerId;
-use crate::client::{DeviceClass, SimClient};
-use crate::coordinator::{Master, MasterConfig, Payload, ReducePolicy, Submission};
+use crate::client::{ClientState, DeviceClass, SimClient};
+use crate::coordinator::{Master, MasterConfig, MasterState, Payload, ReducePolicy, Submission};
 use crate::data::{DataServer, SharedSample, SynthSpec, Synthesizer};
 use crate::model::ModelSpec;
 use crate::rng::Pcg32;
@@ -72,6 +72,20 @@ impl SimConfig {
             churn: BTreeMap::new(),
         }
     }
+}
+
+/// Complete deterministic state of a running simulation at an iteration
+/// boundary — the storage plane's checkpoint payload.  Everything *not*
+/// here (corpus, test set, batch builder, compute backend) is rebuilt
+/// deterministically from `(SimConfig, ModelSpec)` by `Simulation::new`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimState {
+    pub master: MasterState,
+    pub clients: Vec<ClientState>,
+    pub next_worker_id: WorkerId,
+    /// Fleet RNG `(state, inc)` — device sampling and link jitter resume
+    /// mid-stream.
+    pub rng: (u64, u64),
 }
 
 /// A running simulation.
@@ -162,6 +176,47 @@ impl<'c> Simulation<'c> {
     /// Mutable master access (closure-resume paths and tests).
     pub fn master_mut_for_test(&mut self) -> &mut Master {
         &mut self.master
+    }
+
+    /// Mutable master access for the storage plane (attaching a WAL,
+    /// enabling replay digests, syncing at checkpoint boundaries).
+    pub fn master_mut(&mut self) -> &mut Master {
+        &mut self.master
+    }
+
+    /// Capture the full deterministic state at the current iteration
+    /// boundary (between `step` calls).
+    pub fn capture_state(&self) -> SimState {
+        SimState {
+            master: self.master.export_state(),
+            // BTreeMap order → client list is id-ascending and stable.
+            clients: self.clients.values().map(SimClient::export_state).collect(),
+            next_worker_id: self.next_worker_id,
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Restore a state captured by [`Simulation::capture_state`] onto a
+    /// freshly built simulation of the *same* `(SimConfig, ModelSpec)`.
+    /// Subsequent `step` calls are bitwise-identical to the original run.
+    pub fn restore_state(&mut self, st: SimState) {
+        let iteration = st.master.iteration;
+        self.master.import_state(st.master);
+        self.clients = st
+            .clients
+            .into_iter()
+            .map(|cs| {
+                (
+                    cs.id,
+                    SimClient::from_state(cs, self.cfg.cache_budget, &self.server),
+                )
+            })
+            .collect();
+        self.next_worker_id = st.next_worker_id;
+        self.rng = Pcg32::from_state(st.rng.0, st.rng.1);
+        // Churn scripted before the restore point already fired in the
+        // captured state; only boundary-or-later events may fire again.
+        self.cfg.churn.retain(|k, _| *k >= iteration);
     }
 
     /// Resume from a research closure: replace the parameter vector.
@@ -503,6 +558,51 @@ mod tests {
         assert!(evs.iter().any(|e| e.name == "iteration"));
         assert!(evs.iter().all(|e| e.track.pid == 3));
         assert_eq!(trace.open_async(), 0, "training emits no async spans");
+    }
+
+    #[test]
+    fn capture_restore_resumes_bitwise_mid_run() {
+        // Reference run: 8 iterations straight through, with churn and
+        // jittery links so every piece of state matters.
+        let spec = toy_spec(16);
+        let mk_cfg = || {
+            let mut cfg = base_cfg(3, &spec);
+            cfg.fleet = vec![DeviceClass::Mobile, DeviceClass::Laptop, DeviceClass::Mobile];
+            cfg.iterations = 8;
+            cfg.track_every = 2;
+            cfg.churn
+                .insert(2, vec![ChurnEvent::Join(DeviceClass::Desktop)]);
+            cfg.churn.insert(6, vec![ChurnEvent::Leave(1)]);
+            cfg
+        };
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut reference = Simulation::new(mk_cfg(), spec.clone(), &mut compute);
+        let mut mid_state = None;
+        for it in 0..8 {
+            if it == 4 {
+                mid_state = Some(reference.capture_state());
+            }
+            reference.step().unwrap();
+        }
+
+        // Resumed run: fresh world, restore at iteration 4, finish.
+        let mut compute2 = ModeledCompute { param_count: 8 };
+        let mut resumed = Simulation::new(mk_cfg(), spec, &mut compute2);
+        resumed.restore_state(mid_state.unwrap());
+        assert_eq!(resumed.master().iteration(), 4);
+        for _ in 4..8 {
+            resumed.step().unwrap();
+        }
+
+        let bits = |m: &Master| {
+            m.params().iter().map(|p| p.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(reference.master()), bits(resumed.master()));
+        assert_eq!(
+            reference.master().timeline().to_csv(),
+            resumed.master().timeline().to_csv()
+        );
+        assert_eq!(reference.n_clients(), resumed.n_clients());
     }
 
     #[test]

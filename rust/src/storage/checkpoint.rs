@@ -1,0 +1,653 @@
+//! Checkpoint frames: full [`SimState`] snapshots with atomic commit.
+//!
+//! A checkpoint is one file `ckpt-<iteration>.bin`:
+//!
+//! ```text
+//! MLCK | version:u32 | seed:u64 | config_digest:u64 | iteration:u64 |
+//! len:u32 | crc32:u32 | encoded SimState
+//! ```
+//!
+//! Commit protocol: write to `<name>.tmp`, `sync_data`, rename onto the
+//! final name, then best-effort sync the directory.  A crash mid-write
+//! leaves only a `.tmp` the loader ignores; a bit-flip fails the CRC and
+//! the loader falls back to the next-older checkpoint.  Files are never
+//! modified after the rename.
+
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::allocation::{AllocatorState, WorkerAllocState};
+use crate::client::ClientState;
+use crate::coordinator::{MasterState, PayloadState, SubmissionState};
+use crate::data::{CacheEntryState, CacheState};
+use crate::metrics::IterationRecord;
+use crate::sim::SimState;
+
+use super::frame::{frame, read_frame, ByteReader, ByteWriter, FrameRead, Result, StorageError};
+use super::wal::RunIdentity;
+
+pub const CKPT_MAGIC: &[u8; 4] = b"MLCK";
+pub const CKPT_VERSION: u32 = 1;
+/// magic + version + seed + config_digest + iteration
+const HEADER_LEN: usize = 4 + 4 + 8 + 8 + 8;
+
+/// File name for the checkpoint taken at `iteration` (zero-padded so the
+/// lexicographic and numeric orders agree).
+pub fn checkpoint_file_name(iteration: u64) -> String {
+    format!("ckpt-{iteration:010}.bin")
+}
+
+// ------------------------------------------------------------- encoding
+
+fn encode_allocator(w: &mut ByteWriter, a: &AllocatorState) {
+    w.put_u64(a.capacity as u64);
+    w.put_u64(a.total_data);
+    w.put_u32(a.workers.len() as u32);
+    for ws in &a.workers {
+        w.put_u64(ws.id);
+        w.put_u32s(&ws.owned);
+        w.put_u32s(&ws.cached);
+    }
+    w.put_u32s(&a.unallocated);
+    w.put_u64(a.transfers);
+}
+
+fn decode_allocator(r: &mut ByteReader<'_>) -> Result<AllocatorState> {
+    let capacity = r.get_u64()? as usize;
+    let total_data = r.get_u64()?;
+    let n = r.get_u32()?;
+    let mut workers = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        workers.push(WorkerAllocState {
+            id: r.get_u64()?,
+            owned: r.get_u32s()?,
+            cached: r.get_u32s()?,
+        });
+    }
+    Ok(AllocatorState {
+        capacity,
+        total_data,
+        workers,
+        unallocated: r.get_u32s()?,
+        transfers: r.get_u64()?,
+    })
+}
+
+fn encode_record(w: &mut ByteWriter, rec: &IterationRecord) {
+    w.put_u64(rec.iteration);
+    w.put_f64(rec.t_virtual_ms);
+    w.put_u64(rec.vectors);
+    w.put_u32(rec.workers);
+    w.put_f64(rec.mean_latency_ms);
+    w.put_f64(rec.max_latency_ms);
+    w.put_opt_f64(rec.loss);
+    w.put_opt_f64(rec.test_error);
+    w.put_u64(rec.bytes_up);
+    w.put_u64(rec.bytes_down);
+}
+
+fn decode_record(r: &mut ByteReader<'_>) -> Result<IterationRecord> {
+    Ok(IterationRecord {
+        iteration: r.get_u64()?,
+        t_virtual_ms: r.get_f64()?,
+        vectors: r.get_u64()?,
+        workers: r.get_u32()?,
+        mean_latency_ms: r.get_f64()?,
+        max_latency_ms: r.get_f64()?,
+        loss: r.get_opt_f64()?,
+        test_error: r.get_opt_f64()?,
+        bytes_up: r.get_u64()?,
+        bytes_down: r.get_u64()?,
+    })
+}
+
+fn encode_submission(w: &mut ByteWriter, s: &SubmissionState) {
+    w.put_u64(s.worker);
+    match &s.payload {
+        PayloadState::Dense(g) => {
+            w.put_u8(0);
+            w.put_f32s(g);
+        }
+        PayloadState::Sparse(entries) => {
+            w.put_u8(1);
+            w.put_u32(entries.len() as u32);
+            for &(i, v) in entries {
+                w.put_u32(i);
+                w.put_f32(v);
+            }
+        }
+    }
+    w.put_u64(s.examples);
+    w.put_u64(s.vectors);
+    w.put_f64(s.loss_sum);
+    w.put_f64(s.send_offset_ms);
+    w.put_u64(s.bytes);
+}
+
+fn decode_submission(r: &mut ByteReader<'_>) -> Result<SubmissionState> {
+    let worker = r.get_u64()?;
+    let payload = match r.get_u8()? {
+        0 => PayloadState::Dense(r.get_f32s()?),
+        1 => {
+            let n = r.get_u32()? as usize;
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                entries.push((r.get_u32()?, r.get_f32()?));
+            }
+            PayloadState::Sparse(entries)
+        }
+        t => {
+            return Err(StorageError::Corrupt(format!("bad payload tag {t}")));
+        }
+    };
+    Ok(SubmissionState {
+        worker,
+        payload,
+        examples: r.get_u64()?,
+        vectors: r.get_u64()?,
+        loss_sum: r.get_f64()?,
+        send_offset_ms: r.get_f64()?,
+        bytes: r.get_u64()?,
+    })
+}
+
+fn encode_master(w: &mut ByteWriter, m: &MasterState) {
+    w.put_u64(m.iteration);
+    w.put_f64(m.t_virtual_ms);
+    w.put_f32s(&m.params);
+    w.put_str(&m.optimizer);
+    w.put_f32s(&m.opt_state);
+    encode_allocator(w, &m.allocator);
+    w.put_u32(m.latency.len() as u32);
+    for &(worker, est) in &m.latency {
+        w.put_u64(worker);
+        w.put_f64(est);
+    }
+    w.put_u32(m.timeline.len() as u32);
+    for rec in &m.timeline {
+        encode_record(w, rec);
+    }
+    w.put_u32(m.carryover.len() as u32);
+    for s in &m.carryover {
+        encode_submission(w, s);
+    }
+    w.put_opt_f64(m.pending_test_error);
+}
+
+fn decode_master(r: &mut ByteReader<'_>) -> Result<MasterState> {
+    let iteration = r.get_u64()?;
+    let t_virtual_ms = r.get_f64()?;
+    let params = r.get_f32s()?;
+    let optimizer = r.get_str()?;
+    let opt_state = r.get_f32s()?;
+    let allocator = decode_allocator(r)?;
+    let n = r.get_u32()?;
+    let mut latency = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        latency.push((r.get_u64()?, r.get_f64()?));
+    }
+    let n = r.get_u32()?;
+    let mut timeline = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        timeline.push(decode_record(r)?);
+    }
+    let n = r.get_u32()?;
+    let mut carryover = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        carryover.push(decode_submission(r)?);
+    }
+    Ok(MasterState {
+        iteration,
+        t_virtual_ms,
+        params,
+        optimizer,
+        opt_state,
+        allocator,
+        latency,
+        timeline,
+        carryover,
+        pending_test_error: r.get_opt_f64()?,
+    })
+}
+
+fn encode_client(w: &mut ByteWriter, c: &ClientState) {
+    w.put_u64(c.id);
+    w.put_str(c.class.name());
+    w.put_f64(c.power_vps);
+    w.put_str(c.link_profile.name());
+    w.put_f64(c.link_base_ms);
+    w.put_u64(c.rng_state);
+    w.put_u64(c.rng_inc);
+    w.put_u32s(&c.owned);
+    w.put_u32s(&c.pending);
+    w.put_u64(c.cursor);
+    w.put_u64(c.cache.tick);
+    w.put_u32(c.cache.entries.len() as u32);
+    for e in &c.cache.entries {
+        w.put_u64(e.last_used);
+        w.put_u32(e.id);
+        w.put_u8(u8::from(e.pinned));
+    }
+}
+
+fn decode_client(r: &mut ByteReader<'_>) -> Result<ClientState> {
+    let id = r.get_u64()?;
+    let class = crate::client::DeviceClass::parse(&r.get_str()?)
+        .map_err(StorageError::Corrupt)?;
+    let power_vps = r.get_f64()?;
+    let link_profile = crate::netsim::LinkProfile::parse(&r.get_str()?)
+        .map_err(StorageError::Corrupt)?;
+    let link_base_ms = r.get_f64()?;
+    let rng_state = r.get_u64()?;
+    let rng_inc = r.get_u64()?;
+    let owned = r.get_u32s()?;
+    let pending = r.get_u32s()?;
+    let cursor = r.get_u64()?;
+    let tick = r.get_u64()?;
+    let n = r.get_u32()?;
+    let mut entries = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        entries.push(CacheEntryState {
+            last_used: r.get_u64()?,
+            id: r.get_u32()?,
+            pinned: match r.get_u8()? {
+                0 => false,
+                1 => true,
+                t => {
+                    return Err(StorageError::Corrupt(format!("bad pin flag {t}")));
+                }
+            },
+        });
+    }
+    Ok(ClientState {
+        id,
+        class,
+        power_vps,
+        link_profile,
+        link_base_ms,
+        rng_state,
+        rng_inc,
+        owned,
+        pending,
+        cursor,
+        cache: CacheState { tick, entries },
+    })
+}
+
+/// Encode a full [`SimState`] into a flat payload (what the CRC frame
+/// wraps).
+pub fn encode_state(st: &SimState) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    encode_master(&mut w, &st.master);
+    w.put_u32(st.clients.len() as u32);
+    for c in &st.clients {
+        encode_client(&mut w, c);
+    }
+    w.put_u64(st.next_worker_id);
+    w.put_u64(st.rng.0);
+    w.put_u64(st.rng.1);
+    w.finish()
+}
+
+/// Decode a payload produced by [`encode_state`].
+pub fn decode_state(payload: &[u8]) -> Result<SimState> {
+    let mut r = ByteReader::new(payload);
+    let master = decode_master(&mut r)?;
+    let n = r.get_u32()?;
+    let mut clients = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        clients.push(decode_client(&mut r)?);
+    }
+    let st = SimState {
+        master,
+        clients,
+        next_worker_id: r.get_u64()?,
+        rng: (r.get_u64()?, r.get_u64()?),
+    };
+    r.expect_end()?;
+    Ok(st)
+}
+
+// ------------------------------------------------------------- file I/O
+
+/// Write the checkpoint for `st` into `dir` atomically; returns the final
+/// path.  Safe against crashes at any point: the final name appears only
+/// complete and CRC-valid.
+pub fn write_checkpoint(dir: &Path, identity: RunIdentity, st: &SimState) -> Result<PathBuf> {
+    let name = checkpoint_file_name(st.master.iteration);
+    let final_path = dir.join(&name);
+    let tmp_path = dir.join(format!("{name}.tmp"));
+
+    let mut bytes = Vec::with_capacity(HEADER_LEN);
+    bytes.extend_from_slice(CKPT_MAGIC);
+    bytes.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&identity.seed.to_le_bytes());
+    bytes.extend_from_slice(&identity.config_digest.to_le_bytes());
+    bytes.extend_from_slice(&st.master.iteration.to_le_bytes());
+    bytes.extend_from_slice(&frame(&encode_state(st)));
+
+    let mut f = File::create(&tmp_path)?;
+    f.write_all(&bytes)?;
+    f.sync_data()?;
+    drop(f);
+    fs::rename(&tmp_path, &final_path)?;
+    // Directory-entry durability for the rename; not supported on every
+    // filesystem, and the checkpoint is still valid without it.
+    let _ = File::open(dir).and_then(|d| d.sync_all());
+    Ok(final_path)
+}
+
+/// Read and validate one checkpoint file.
+pub fn read_checkpoint(path: &Path) -> Result<(RunIdentity, SimState)> {
+    let bytes = fs::read(path)?;
+    if bytes.len() < HEADER_LEN {
+        return Err(StorageError::Corrupt(format!(
+            "checkpoint too short ({} bytes)",
+            bytes.len()
+        )));
+    }
+    if &bytes[..4] != CKPT_MAGIC {
+        return Err(StorageError::Corrupt("bad checkpoint magic".into()));
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != CKPT_VERSION {
+        return Err(StorageError::Corrupt(format!(
+            "unsupported checkpoint version {version}"
+        )));
+    }
+    let mut r = ByteReader::new(&bytes[8..HEADER_LEN]);
+    let identity = RunIdentity {
+        seed: r.get_u64()?,
+        config_digest: r.get_u64()?,
+    };
+    let iteration = r.get_u64()?;
+
+    match read_frame(&bytes, HEADER_LEN) {
+        FrameRead::Ok { payload, consumed } => {
+            if HEADER_LEN + consumed != bytes.len() {
+                return Err(StorageError::Corrupt(format!(
+                    "{} trailing bytes after checkpoint frame",
+                    bytes.len() - HEADER_LEN - consumed
+                )));
+            }
+            let st = decode_state(payload)?;
+            if st.master.iteration != iteration {
+                return Err(StorageError::Corrupt(format!(
+                    "header says iteration {iteration}, payload says {}",
+                    st.master.iteration
+                )));
+            }
+            Ok((identity, st))
+        }
+        FrameRead::End => Err(StorageError::Corrupt("checkpoint has no frame".into())),
+        FrameRead::Torn { reason, .. } => Err(StorageError::Corrupt(reason)),
+    }
+}
+
+/// Iterations with a committed checkpoint file in `dir`, ascending.
+/// `.tmp` leftovers and foreign files are ignored.  Determinism audit:
+/// `read_dir` order is OS-dependent; the result is sorted before it can
+/// reach recovery decisions or any observable state.
+pub fn checkpoint_iterations(dir: &Path) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(digits) = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".bin"))
+        {
+            if let Ok(it) = digits.parse::<u64>() {
+                out.push(it);
+            }
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Load the newest checkpoint that validates and matches `identity`.
+/// Corrupt or foreign files are skipped with a warning (newest-first
+/// fallback), not treated as fatal: an older good checkpoint plus a
+/// longer replay still recovers the run.
+pub fn load_latest_checkpoint(
+    dir: &Path,
+    identity: RunIdentity,
+) -> Result<(Option<SimState>, Vec<String>)> {
+    let mut warnings = Vec::new();
+    for it in checkpoint_iterations(dir)?.into_iter().rev() {
+        let path = dir.join(checkpoint_file_name(it));
+        match read_checkpoint(&path) {
+            Ok((id, st)) if id == identity => return Ok((Some(st), warnings)),
+            Ok((id, _)) => warnings.push(format!(
+                "{}: belongs to a different run (seed {} config {:#x})",
+                path.display(),
+                id.seed,
+                id.config_digest
+            )),
+            Err(e) => warnings.push(format!("{}: {e}", path.display())),
+        }
+    }
+    Ok((None, warnings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::DeviceClass;
+    use crate::netsim::LinkProfile;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mlitb-ckpt-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_state(iteration: u64) -> SimState {
+        SimState {
+            master: MasterState {
+                iteration,
+                t_virtual_ms: iteration as f64 * 4000.0 + 0.125,
+                params: vec![0.5, -0.0, 3.25e-7],
+                optimizer: "adagrad".into(),
+                opt_state: vec![0.01, 0.02, 0.03],
+                allocator: AllocatorState {
+                    capacity: 100,
+                    total_data: 7,
+                    workers: vec![
+                        WorkerAllocState {
+                            id: 1,
+                            owned: vec![0, 2, 4],
+                            cached: vec![0, 4],
+                        },
+                        WorkerAllocState {
+                            id: 3,
+                            owned: vec![1, 3],
+                            cached: vec![],
+                        },
+                    ],
+                    unallocated: vec![5, 6],
+                    transfers: 9,
+                },
+                latency: vec![(1, 52.5), (3, 461.0)],
+                timeline: vec![IterationRecord {
+                    iteration: 0,
+                    t_virtual_ms: 4000.0,
+                    vectors: 31,
+                    workers: 2,
+                    mean_latency_ms: 12.0,
+                    max_latency_ms: 30.0,
+                    loss: Some(2.3),
+                    test_error: None,
+                    bytes_up: 4096,
+                    bytes_down: 8192,
+                }],
+                carryover: vec![
+                    SubmissionState {
+                        worker: 3,
+                        payload: PayloadState::Dense(vec![1.0, -1.0, 0.5]),
+                        examples: 4,
+                        vectors: 4,
+                        loss_sum: 3.2,
+                        send_offset_ms: 6100.0,
+                        bytes: 108,
+                    },
+                    SubmissionState {
+                        worker: 1,
+                        payload: PayloadState::Sparse(vec![(0, 0.25), (2, -4.0)]),
+                        examples: 2,
+                        vectors: 2,
+                        loss_sum: 1.1,
+                        send_offset_ms: 7000.0,
+                        bytes: 112,
+                    },
+                ],
+                pending_test_error: Some(0.87),
+            },
+            clients: vec![ClientState {
+                id: 1,
+                class: DeviceClass::Mobile,
+                power_vps: 218.75,
+                link_profile: LinkProfile::Cellular,
+                link_base_ms: 81.5,
+                rng_state: 0xDEAD_BEEF_0123_4567,
+                rng_inc: 0x9E37_79B9_7F4A_7C15 | 1,
+                owned: vec![0, 2, 4],
+                pending: vec![4],
+                cursor: 11,
+                cache: CacheState {
+                    tick: 14,
+                    entries: vec![
+                        CacheEntryState {
+                            last_used: 12,
+                            id: 0,
+                            pinned: true,
+                        },
+                        CacheEntryState {
+                            last_used: 14,
+                            id: 2,
+                            pinned: false,
+                        },
+                    ],
+                },
+            }],
+            next_worker_id: 4,
+            rng: (0x1234_5678_9ABC_DEF0, 0xFEDC_BA98_7654_3211),
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_lossless() {
+        let st = sample_state(2);
+        let payload = encode_state(&st);
+        assert_eq!(decode_state(&payload).unwrap(), st);
+    }
+
+    #[test]
+    fn zero_everything_state_roundtrips() {
+        // Zero-param spec, no clients, empty allocator: the degenerate
+        // project must still checkpoint and load.
+        let st = SimState {
+            master: MasterState {
+                iteration: 0,
+                t_virtual_ms: 0.0,
+                params: vec![],
+                optimizer: "sgd".into(),
+                opt_state: vec![],
+                allocator: AllocatorState {
+                    capacity: 10,
+                    total_data: 0,
+                    workers: vec![],
+                    unallocated: vec![],
+                    transfers: 0,
+                },
+                latency: vec![],
+                timeline: vec![],
+                carryover: vec![],
+                pending_test_error: None,
+            },
+            clients: vec![],
+            next_worker_id: 1,
+            rng: (1, 3),
+        };
+        let payload = encode_state(&st);
+        assert_eq!(decode_state(&payload).unwrap(), st);
+    }
+
+    #[test]
+    fn write_load_roundtrip_and_newest_wins() {
+        let dir = test_dir("roundtrip");
+        let id = RunIdentity {
+            seed: 5,
+            config_digest: 77,
+        };
+        write_checkpoint(&dir, id, &sample_state(2)).unwrap();
+        write_checkpoint(&dir, id, &sample_state(6)).unwrap();
+        assert_eq!(checkpoint_iterations(&dir).unwrap(), vec![2, 6]);
+        let (st, warnings) = load_latest_checkpoint(&dir, id).unwrap();
+        assert_eq!(st.unwrap().master.iteration, 6);
+        assert!(warnings.is_empty(), "{warnings:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_older() {
+        let dir = test_dir("fallback");
+        let id = RunIdentity {
+            seed: 5,
+            config_digest: 77,
+        };
+        write_checkpoint(&dir, id, &sample_state(2)).unwrap();
+        let newest = write_checkpoint(&dir, id, &sample_state(6)).unwrap();
+        // Flip one payload byte in the newest file: CRC must catch it.
+        let mut bytes = fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        fs::write(&newest, bytes).unwrap();
+        let (st, warnings) = load_latest_checkpoint(&dir, id).unwrap();
+        assert_eq!(st.unwrap().master.iteration, 2);
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("ckpt-0000000006"), "{warnings:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_identity_is_skipped_and_tmp_ignored() {
+        let dir = test_dir("identity");
+        let ours = RunIdentity {
+            seed: 5,
+            config_digest: 77,
+        };
+        let theirs = RunIdentity {
+            seed: 6,
+            config_digest: 77,
+        };
+        write_checkpoint(&dir, theirs, &sample_state(9)).unwrap();
+        fs::write(dir.join("ckpt-0000000099.bin.tmp"), b"partial").unwrap();
+        assert_eq!(checkpoint_iterations(&dir).unwrap(), vec![9]);
+        let (st, warnings) = load_latest_checkpoint(&dir, ours).unwrap();
+        assert!(st.is_none());
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("different run"), "{warnings:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_reported_corrupt() {
+        let dir = test_dir("torn");
+        let id = RunIdentity {
+            seed: 5,
+            config_digest: 77,
+        };
+        let path = write_checkpoint(&dir, id, &sample_state(3)).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        let (st, warnings) = load_latest_checkpoint(&dir, id).unwrap();
+        assert!(st.is_none());
+        assert_eq!(warnings.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

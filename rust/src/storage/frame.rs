@@ -1,0 +1,530 @@
+//! Byte-level codec for the durable state plane: little-endian
+//! reader/writer, CRC-32 framing, and the FNV-1a content digests the WAL
+//! uses to pin replay to bitwise-identical state.
+//!
+//! Everything here is dependency-free and deterministic: the same state
+//! encodes to the same bytes on every platform (explicit little-endian,
+//! no hashes over pointer-order collections), which is what lets a WAL
+//! written on one run verify a replay on another.
+
+use std::fmt;
+
+/// Errors from the storage plane. I/O errors carry the OS error;
+/// `Corrupt` means bytes were read but failed structural or CRC checks.
+#[derive(Debug)]
+pub enum StorageError {
+    Io(std::io::Error),
+    Corrupt(String),
+}
+
+impl fmt::Display for StorageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StorageError::Io(e) => write!(f, "storage i/o error: {e}"),
+            StorageError::Corrupt(msg) => write!(f, "corrupt storage: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+impl From<std::io::Error> for StorageError {
+    fn from(e: std::io::Error) -> Self {
+        StorageError::Io(e)
+    }
+}
+
+/// Shorthand used across the storage modules.
+pub type Result<T> = std::result::Result<T, StorageError>;
+
+// ---------------------------------------------------------------- CRC-32
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE reflected polynomial) — the per-frame integrity check on
+/// WAL records, checkpoints and registry segments.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ------------------------------------------------------------- FNV-1a 64
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a 64-bit digest — the content fingerprint the WAL
+/// records for merged gradients, worker sets and parameter vectors.
+/// Not cryptographic; it only needs to make a replay divergence loud.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self { h: FNV_OFFSET }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_f32s(&mut self, vs: &[f32]) {
+        for v in vs {
+            self.write(&v.to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot digest over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Digest of a flat f32 vector (LE byte order) — bitwise, so two vectors
+/// digest equal iff every element is bit-identical (NaN payloads included).
+pub fn digest_f32s(vs: &[f32]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_f32s(vs);
+    h.finish()
+}
+
+// ------------------------------------------------------------ ByteWriter
+
+/// Append-only little-endian encoder backing every on-disk payload.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 vector.
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u32(vs.len() as u32);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed u32 vector.
+    pub fn put_u32s(&mut self, vs: &[u32]) {
+        self.put_u32(vs.len() as u32);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed u64 vector.
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.put_u32(vs.len() as u32);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.put_u8(1);
+                self.put_f64(x);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    pub fn put_opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.put_u8(1);
+                self.put_u64(x);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+// ------------------------------------------------------------ ByteReader
+
+/// Cursor-based decoder over an in-memory payload; every read is
+/// bounds-checked and returns `Corrupt` instead of panicking, so a torn
+/// or bit-flipped frame degrades to a recoverable error.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(StorageError::Corrupt(format!(
+                "payload truncated: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| StorageError::Corrupt("invalid utf-8 in string field".into()))
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            StorageError::Corrupt("f32 vector length overflow".into())
+        })?)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            StorageError::Corrupt("u32 vector length overflow".into())
+        })?)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| {
+            StorageError::Corrupt("u64 vector length overflow".into())
+        })?)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(8) {
+            out.push(u64::from_le_bytes([
+                c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+            ]));
+        }
+        Ok(out)
+    }
+
+    pub fn get_opt_f64(&mut self) -> Result<Option<f64>> {
+        match self.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.get_f64()?)),
+            t => Err(StorageError::Corrupt(format!("bad option tag {t}"))),
+        }
+    }
+
+    pub fn get_opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.get_u64()?)),
+            t => Err(StorageError::Corrupt(format!("bad option tag {t}"))),
+        }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Decoders call this last: trailing bytes mean a format mismatch.
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(StorageError::Corrupt(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- frames
+
+/// Wrap a payload in the on-disk frame: `len:u32 | crc32:u32 | payload`.
+/// The CRC covers the payload only; the length prefix is what lets a
+/// reader detect a torn tail (fewer bytes on disk than the header claims).
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Outcome of pulling one frame off a byte stream.
+#[derive(Debug)]
+pub enum FrameRead<'a> {
+    /// A complete, CRC-clean payload (and the bytes consumed).
+    Ok { payload: &'a [u8], consumed: usize },
+    /// Stream ended exactly on a frame boundary.
+    End,
+    /// Bytes remain but do not form a whole valid frame — a torn or
+    /// corrupt tail. `valid_up_to` is the offset the stream is good to.
+    Torn { valid_up_to: usize, reason: String },
+}
+
+/// Read the frame starting at `offset`; never panics on short input.
+pub fn read_frame(buf: &[u8], offset: usize) -> FrameRead<'_> {
+    let rest = &buf[offset..];
+    if rest.is_empty() {
+        return FrameRead::End;
+    }
+    if rest.len() < 8 {
+        return FrameRead::Torn {
+            valid_up_to: offset,
+            reason: format!("{} bytes of partial frame header", rest.len()),
+        };
+    }
+    let len = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+    let want_crc = u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]);
+    if rest.len() < 8 + len {
+        return FrameRead::Torn {
+            valid_up_to: offset,
+            reason: format!(
+                "frame claims {} payload bytes, only {} on disk",
+                len,
+                rest.len() - 8
+            ),
+        };
+    }
+    let payload = &rest[8..8 + len];
+    let got_crc = crc32(payload);
+    if got_crc != want_crc {
+        return FrameRead::Torn {
+            valid_up_to: offset,
+            reason: format!("crc mismatch: stored {want_crc:#010x}, computed {got_crc:#010x}"),
+        };
+    }
+    FrameRead::Ok {
+        payload,
+        consumed: 8 + len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic check value for "123456789" under CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn fnv_is_order_sensitive_and_stable() {
+        assert_eq!(fnv1a64(b""), FNV_OFFSET);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+        let a = digest_f32s(&[1.0, 2.0, 3.0]);
+        let b = digest_f32s(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, b);
+        assert_ne!(a, digest_f32s(&[1.0, 2.0, 3.0000001]));
+        // Bitwise: -0.0 and 0.0 are different bytes, so different digests.
+        assert_ne!(digest_f32s(&[0.0]), digest_f32s(&[-0.0]));
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX);
+        w.put_f64(-1.5);
+        w.put_str("hello");
+        w.put_f32s(&[1.0, f32::NAN, -0.0]);
+        w.put_u32s(&[1, 2, 3]);
+        w.put_u64s(&[9, 8]);
+        w.put_opt_f64(Some(2.5));
+        w.put_opt_f64(None);
+        w.put_opt_u64(Some(42));
+        let bytes = w.finish();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_f64().unwrap(), -1.5);
+        assert_eq!(r.get_str().unwrap(), "hello");
+        let fs = r.get_f32s().unwrap();
+        assert_eq!(fs[0], 1.0);
+        assert!(fs[1].is_nan());
+        assert_eq!(fs[2].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.get_u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_u64s().unwrap(), vec![9, 8]);
+        assert_eq!(r.get_opt_f64().unwrap(), Some(2.5));
+        assert_eq!(r.get_opt_f64().unwrap(), None);
+        assert_eq!(r.get_opt_u64().unwrap(), Some(42));
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn reader_truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.put_u64(1);
+        let bytes = w.finish();
+        let mut r = ByteReader::new(&bytes[..4]);
+        assert!(r.get_u64().is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_torn_detection() {
+        let f1 = frame(b"first");
+        let f2 = frame(b"second");
+        let mut stream = f1.clone();
+        stream.extend_from_slice(&f2);
+
+        match read_frame(&stream, 0) {
+            FrameRead::Ok { payload, consumed } => {
+                assert_eq!(payload, b"first");
+                assert_eq!(consumed, f1.len());
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        match read_frame(&stream, f1.len()) {
+            FrameRead::Ok { payload, .. } => assert_eq!(payload, b"second"),
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        match read_frame(&stream, stream.len()) {
+            FrameRead::End => {}
+            other => panic!("expected End, got {other:?}"),
+        }
+
+        // Chop the second frame mid-payload: torn, valid up to frame 1.
+        let torn = &stream[..f1.len() + 6];
+        match read_frame(torn, f1.len()) {
+            FrameRead::Torn { valid_up_to, .. } => assert_eq!(valid_up_to, f1.len()),
+            other => panic!("expected Torn, got {other:?}"),
+        }
+
+        // Flip a payload bit: CRC catches it.
+        let mut flipped = stream.clone();
+        let bit = f1.len() + 9;
+        flipped[bit] ^= 0x01;
+        match read_frame(&flipped, f1.len()) {
+            FrameRead::Torn { reason, .. } => assert!(reason.contains("crc")),
+            other => panic!("expected Torn, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Durable state plane: iteration WAL + checkpoint/replay + registry store.
+//!
+//! The paper's master keeps all project state in memory; a crashed master
+//! loses the run.  This plane makes the simulated master durable without
+//! touching the hot path:
+//!
+//! - [`wal`] — an append-only iteration log.  `Master::finish_iteration`
+//!   appends one ~70-byte record per iteration (virtual clock, merged
+//!   worker set, gradient/parameter digests) through a buffered writer;
+//!   no fsync per record.
+//! - [`checkpoint`] — periodic full snapshots of the deterministic
+//!   training state (parameters, optimizer accumulators, allocator,
+//!   latency estimates, per-client state, sim RNG), CRC-framed and
+//!   committed by atomic rename.  The WAL is fsynced only at these
+//!   boundaries.
+//! - [`recover`] — load the newest valid checkpoint and *recompute* the
+//!   iterations after it through the ordinary `Simulation::step` path,
+//!   verifying each replayed iteration against its WAL record.  Because
+//!   the simulation is bitwise-deterministic, replay reproduces the
+//!   pre-crash parameters exactly; a torn tail record is truncated (with
+//!   a report), never trusted.
+//! - [`registry_store`] — segment-file persistence for the serving
+//!   plane's `SnapshotRegistry`, so restarts warm with the active
+//!   version, staged candidates, and rollback history intact.
+//!
+//! Everything here is deterministic given the directory contents: ordered
+//! iteration only (`BTreeMap`), no wall-clock reads, and all integers
+//! little-endian on disk.
+
+pub mod checkpoint;
+mod frame;
+pub mod recover;
+pub mod registry_store;
+pub mod wal;
+
+use std::path::{Path, PathBuf};
+
+use crate::sim::{ChurnEvent, SimConfig, SimState};
+
+pub use checkpoint::{checkpoint_iterations, load_latest_checkpoint, read_checkpoint};
+pub use frame::{
+    crc32, digest_f32s, fnv1a64, ByteReader, ByteWriter, Fnv64, Result, StorageError,
+};
+pub use recover::{recover, RecoverMode, RecoveryReport};
+pub use wal::{
+    read_wal, repair_tail, wal_path, RunIdentity, TailStatus, WalRecord, WalWriter, WAL_FILE,
+};
+
+/// Digest of the simulation config fields that determine the run's
+/// trajectory.  Stamped into the WAL header and every checkpoint so a
+/// data dir can never be resumed under a different world: same digest ⇒
+/// `Simulation::new` rebuilds the identical corpus, fleet and schedule.
+pub fn config_digest(cfg: &SimConfig) -> u64 {
+    let mut w = ByteWriter::new();
+    w.put_str(&cfg.model);
+    w.put_u32(cfg.fleet.len() as u32);
+    for class in &cfg.fleet {
+        w.put_str(class.name());
+    }
+    w.put_u64(cfg.train_size as u64);
+    w.put_u64(cfg.test_size as u64);
+    w.put_u64(cfg.iterations);
+    w.put_u64(cfg.track_every);
+    w.put_f64(cfg.power_scale);
+    w.put_u64(cfg.cache_budget);
+    w.put_u64(cfg.seed);
+    let m = &cfg.master;
+    w.put_u64(m.param_count as u64);
+    w.put_f64(m.iter_duration_s);
+    w.put_str(&m.optimizer_name());
+    w.put_f32(m.learning_rate);
+    w.put_u64(m.capacity as u64);
+    w.put_f64(m.shed_threshold);
+    match m.policy {
+        crate::coordinator::ReducePolicy::Sync => w.put_u8(0),
+        crate::coordinator::ReducePolicy::Async => w.put_u8(1),
+        crate::coordinator::ReducePolicy::PartialSync { keep_fraction } => {
+            w.put_u8(2);
+            w.put_f64(keep_fraction);
+        }
+    }
+    let mm = &m.master_model;
+    w.put_f64(mm.ingest_bandwidth_bytes_per_ms);
+    w.put_f64(mm.per_msg_overhead_ms);
+    w.put_f64(mm.merge_ns_per_param);
+    w.put_u64(mm.processes as u64);
+    w.put_str(&mm.reduce_mode.name());
+    w.put_f64(mm.fanin_ns_per_shard);
+    w.put_u64(mm.congestion_bytes);
+    w.put_u32(cfg.churn.len() as u32);
+    for (iter, events) in &cfg.churn {
+        w.put_u64(*iter);
+        w.put_u32(events.len() as u32);
+        for ev in events {
+            match ev {
+                ChurnEvent::Join(class) => {
+                    w.put_u8(0);
+                    w.put_str(class.name());
+                }
+                ChurnEvent::Leave(worker) => {
+                    w.put_u8(1);
+                    w.put_u64(*worker);
+                }
+            }
+        }
+    }
+    fnv1a64(&w.finish())
+}
+
+/// One training run's data directory: `wal.log` + `ckpt-*.bin` files,
+/// all stamped with the run's [`RunIdentity`].
+#[derive(Debug, Clone)]
+pub struct RunStore {
+    dir: PathBuf,
+    identity: RunIdentity,
+}
+
+impl RunStore {
+    /// Open (creating if needed) the data dir for a run with this
+    /// identity.  Existing files are validated lazily, at read time.
+    pub fn open(dir: &Path, identity: RunIdentity) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            identity,
+        })
+    }
+
+    /// Convenience: identity derived from the config.
+    pub fn open_for_config(dir: &Path, cfg: &SimConfig) -> Result<Self> {
+        Self::open(
+            dir,
+            RunIdentity {
+                seed: cfg.seed,
+                config_digest: config_digest(cfg),
+            },
+        )
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn identity(&self) -> RunIdentity {
+        self.identity
+    }
+
+    pub fn wal_path(&self) -> PathBuf {
+        wal::wal_path(&self.dir)
+    }
+
+    /// Open the WAL for appending (creates it with this run's header).
+    /// Refuses a foreign identity or a torn tail — repair first.
+    pub fn open_wal_for_append(&self) -> Result<WalWriter> {
+        WalWriter::open(&self.wal_path(), self.identity)
+    }
+
+    /// All valid WAL records plus the tail status.  A missing WAL reads
+    /// as empty-and-clean (a run that never started logging).
+    pub fn read_wal(&self) -> Result<(Vec<WalRecord>, TailStatus)> {
+        let path = self.wal_path();
+        if !path.exists() {
+            return Ok((Vec::new(), TailStatus::Clean));
+        }
+        let (identity, records, tail) = wal::read_wal(&path)?;
+        if identity != self.identity {
+            return Err(StorageError::Corrupt(format!(
+                "{} belongs to a different run (seed {} config {:#x}; this run is seed {} config {:#x})",
+                path.display(),
+                identity.seed,
+                identity.config_digest,
+                self.identity.seed,
+                self.identity.config_digest
+            )));
+        }
+        Ok((records, tail))
+    }
+
+    /// Truncate a torn WAL tail in place (no-op when the WAL is absent).
+    pub fn repair_wal_tail(&self) -> Result<()> {
+        let path = self.wal_path();
+        if path.exists() {
+            repair_tail(&path)?;
+        }
+        Ok(())
+    }
+
+    pub fn write_checkpoint(&self, st: &SimState) -> Result<PathBuf> {
+        checkpoint::write_checkpoint(&self.dir, self.identity, st)
+    }
+
+    pub fn load_latest_checkpoint(&self) -> Result<(Option<SimState>, Vec<String>)> {
+        checkpoint::load_latest_checkpoint(&self.dir, self.identity)
+    }
+
+    pub fn checkpoint_iterations(&self) -> Result<Vec<u64>> {
+        checkpoint::checkpoint_iterations(&self.dir)
+    }
+}

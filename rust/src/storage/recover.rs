@@ -1,0 +1,461 @@
+//! Recovery: newest valid checkpoint + deterministic replay to the WAL tip.
+//!
+//! There is no redo-log of parameter bytes to apply — the simulation is
+//! bitwise-deterministic, so recovery *recomputes*: restore the
+//! checkpoint state onto a freshly built world and drive the ordinary
+//! `Simulation::step` path once per WAL record past the checkpoint.
+//! Every replayed iteration's digests (merged worker set, averaged
+//! gradient, post-step parameters) must match the record written by the
+//! original run; a mismatch means the data dir does not belong to this
+//! config/binary and recovery refuses to continue.  Replay cost is
+//! proportional to `tip − checkpoint` — the checkpoint cadence is the
+//! knob trading write amplification against recovery time.
+
+use crate::sim::Simulation;
+use crate::trace::{ArgValue, TraceHandle, Track};
+
+use super::frame::{Result, StorageError};
+use super::wal::{TailStatus, WalRecord};
+use super::RunStore;
+
+/// What `recover` is allowed to do to the data dir.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoverMode {
+    /// Read-only: report and verify, never write (``mlitb recover --verify``).
+    Verify,
+    /// Prepare the dir for continued training: a torn WAL tail is
+    /// truncated so the writer can reopen it.
+    Resume,
+}
+
+/// Outcome of a recovery pass.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Iteration of the checkpoint restored (None: no usable checkpoint,
+    /// replay started from a fresh world at iteration 0).
+    pub checkpoint_iteration: Option<u64>,
+    /// Iterations re-stepped after the restore point.
+    pub replayed: u64,
+    /// Replayed iterations whose digests matched their WAL record
+    /// (always equals `replayed` — a mismatch aborts recovery).
+    pub verified: u64,
+    /// First iteration the resumed run will execute.
+    pub tip: u64,
+    /// Description of a torn tail record, if one was found.
+    pub torn: Option<String>,
+    /// Whether the torn tail was truncated in place (Resume mode only).
+    pub repaired: bool,
+    /// Non-fatal oddities (skipped corrupt checkpoints, short WAL).
+    pub warnings: Vec<String>,
+}
+
+impl RecoveryReport {
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        let base = match self.checkpoint_iteration {
+            Some(c) => format!("checkpoint @{c}"),
+            None => "no checkpoint (fresh world)".to_string(),
+        };
+        let mut s = format!(
+            "{base}, replayed {} iteration(s), verified {}, tip {}",
+            self.replayed, self.verified, self.tip
+        );
+        if let Some(torn) = &self.torn {
+            s.push_str(&format!(
+                ", torn tail {} ({torn})",
+                if self.repaired { "truncated" } else { "found" }
+            ));
+        }
+        s
+    }
+}
+
+fn mismatch(field: &str, replayed: &WalRecord, logged: &WalRecord) -> StorageError {
+    StorageError::Corrupt(format!(
+        "replay diverged at iteration {}: {field} differs (replayed {replayed:?}, log {logged:?}) \
+         — the data dir was not produced by this config/binary",
+        logged.iteration
+    ))
+}
+
+fn verify_record(replayed: &WalRecord, logged: &WalRecord) -> Result<()> {
+    if replayed.iteration != logged.iteration {
+        return Err(mismatch("iteration", replayed, logged));
+    }
+    if replayed.t_virtual_ms.to_bits() != logged.t_virtual_ms.to_bits() {
+        return Err(mismatch("t_virtual_ms", replayed, logged));
+    }
+    if replayed.seed != logged.seed {
+        return Err(mismatch("seed", replayed, logged));
+    }
+    if replayed.workers != logged.workers {
+        return Err(mismatch("workers", replayed, logged));
+    }
+    if replayed.worker_set_digest != logged.worker_set_digest {
+        return Err(mismatch("worker_set_digest", replayed, logged));
+    }
+    if replayed.stepped != logged.stepped {
+        return Err(mismatch("stepped", replayed, logged));
+    }
+    if replayed.grad_digest != logged.grad_digest {
+        return Err(mismatch("grad_digest", replayed, logged));
+    }
+    if replayed.params_digest != logged.params_digest {
+        return Err(mismatch("params_digest", replayed, logged));
+    }
+    Ok(())
+}
+
+/// Recover `sim` (freshly built from the same `(SimConfig, ModelSpec)`
+/// the data dir was written under) to the WAL tip.  On return the
+/// simulation sits at iteration `report.tip` with digest records enabled;
+/// a Resume caller attaches `store.open_wal_for_append()` and keeps
+/// stepping.  `trace`/`pid` feed the recovery `replay` span (pass
+/// `TraceHandle::off()` when not tracing).
+pub fn recover(
+    sim: &mut Simulation<'_>,
+    store: &RunStore,
+    mode: RecoverMode,
+    trace: &TraceHandle,
+    pid: u32,
+) -> Result<RecoveryReport> {
+    let (records, tail) = store.read_wal()?;
+    let mut report = RecoveryReport {
+        checkpoint_iteration: None,
+        replayed: 0,
+        verified: 0,
+        tip: 0,
+        torn: None,
+        repaired: false,
+        warnings: Vec::new(),
+    };
+    if let TailStatus::Truncated {
+        valid_bytes,
+        dropped_bytes,
+        reason,
+    } = &tail
+    {
+        report.torn = Some(format!(
+            "{reason} ({dropped_bytes} bytes dropped after offset {valid_bytes})"
+        ));
+        if mode == RecoverMode::Resume {
+            store.repair_wal_tail()?;
+            report.repaired = true;
+        }
+    }
+    // The log must be one contiguous run of iterations starting at 0 —
+    // anything else is not a WAL this plane wrote.
+    for (i, rec) in records.iter().enumerate() {
+        if rec.iteration != i as u64 {
+            return Err(StorageError::Corrupt(format!(
+                "wal record {} carries iteration {} (log is not contiguous)",
+                i, rec.iteration
+            )));
+        }
+    }
+
+    let (ckpt, warnings) = store.load_latest_checkpoint()?;
+    report.warnings = warnings;
+    let replay_from = match ckpt {
+        Some(st) => {
+            let c = st.master.iteration;
+            report.checkpoint_iteration = Some(c);
+            sim.restore_state(st);
+            if c as usize > records.len() {
+                report.warnings.push(format!(
+                    "wal ends at iteration {} but the checkpoint is at {c}; \
+                     nothing to replay (log lost after the last sync)",
+                    records.len()
+                ));
+            }
+            c
+        }
+        // No checkpoint: a fresh world at iteration 0 *is* the restore
+        // point, so an empty or missing checkpoint set still recovers by
+        // replaying the whole log.
+        None => 0,
+    };
+
+    sim.master_mut().enable_wal_digests(store.identity().seed);
+    let t_replay_start = sim.master().now_ms();
+    for logged in records.iter().skip(replay_from as usize) {
+        sim.step().map_err(|e| {
+            StorageError::Corrupt(format!(
+                "replay failed at iteration {}: {e}",
+                logged.iteration
+            ))
+        })?;
+        let replayed = *sim.master().last_wal_record().ok_or_else(|| {
+            StorageError::Corrupt("replay produced no wal record".into())
+        })?;
+        verify_record(&replayed, logged)?;
+        report.replayed += 1;
+        report.verified += 1;
+    }
+    report.tip = (records.len() as u64).max(replay_from);
+    if report.replayed > 0 && trace.is_on() {
+        trace.span(
+            Track::master(pid),
+            "storage",
+            "replay",
+            t_replay_start,
+            sim.master().now_ms(),
+            &[
+                ("from", ArgValue::U64(replay_from)),
+                ("replayed", ArgValue::U64(report.replayed)),
+                ("verified", ArgValue::U64(report.verified)),
+            ],
+        );
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::DeviceClass;
+    use crate::model::{ModelSpec, TensorSpec};
+    use crate::runtime::ModeledCompute;
+    use crate::sim::SimConfig;
+    use std::path::PathBuf;
+
+    fn toy_spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 8,
+            batch_size: 16,
+            micro_batches: vec![16],
+            input: vec![28, 28, 1],
+            classes: 10,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![8],
+                offset: 0,
+                size: 8,
+                fan_in: 4,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn toy_cfg(spec: &ModelSpec, seed: u64) -> SimConfig {
+        let mut cfg = SimConfig::paper_scaling(3, spec);
+        cfg.fleet = vec![DeviceClass::Mobile, DeviceClass::Laptop, DeviceClass::Mobile];
+        cfg.train_size = 300;
+        cfg.test_size = 32;
+        cfg.iterations = 10;
+        cfg.master.capacity = 100;
+        cfg.seed = seed;
+        cfg
+    }
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("mlitb-recover-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Run `iterations` durably: WAL every iteration, checkpoint at the
+    /// given cadence; returns the final param bits.
+    fn run_durable(
+        dir: &std::path::Path,
+        seed: u64,
+        iterations: u64,
+        checkpoint_every: u64,
+    ) -> Vec<u32> {
+        let spec = toy_spec();
+        let cfg = toy_cfg(&spec, seed);
+        let store = RunStore::open_for_config(dir, &cfg).unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let wal = store.open_wal_for_append().unwrap();
+        sim.master_mut().attach_wal(wal, seed);
+        for it in 0..iterations {
+            sim.step().unwrap();
+            if checkpoint_every > 0 && (it + 1) % checkpoint_every == 0 {
+                sim.master_mut().wal_mut().unwrap().sync().unwrap();
+                store.write_checkpoint(&sim.capture_state()).unwrap();
+            }
+        }
+        sim.master_mut().wal_mut().unwrap().sync().unwrap();
+        sim.master().params().iter().map(|p| p.to_bits()).collect()
+    }
+
+    fn recover_and_finish(dir: &std::path::Path, seed: u64, total: u64) -> (RecoveryReport, Vec<u32>) {
+        let spec = toy_spec();
+        let cfg = toy_cfg(&spec, seed);
+        let store = RunStore::open_for_config(dir, &cfg).unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let report = recover(
+            &mut sim,
+            &store,
+            RecoverMode::Resume,
+            &TraceHandle::off(),
+            0,
+        )
+        .unwrap();
+        let wal = store.open_wal_for_append().unwrap();
+        sim.master_mut().attach_wal(wal, seed);
+        for _ in report.tip..total {
+            sim.step().unwrap();
+        }
+        sim.master_mut().wal_mut().unwrap().sync().unwrap();
+        (
+            report,
+            sim.master().params().iter().map(|p| p.to_bits()).collect(),
+        )
+    }
+
+    #[test]
+    fn kill_and_recover_is_bitwise_identical() {
+        // Reference: 10 uninterrupted iterations.  Crashed run: killed
+        // after 7, checkpoint cadence 3 (checkpoints at 3 and 6, so one
+        // replayed iteration).  Two seeds × two cadences, one of which
+        // does not divide the kill point.
+        for seed in [11u64, 29] {
+            let ref_dir = test_dir(&format!("ref-{seed}"));
+            let reference = run_durable(&ref_dir, seed, 10, 4);
+            for cadence in [3u64, 4] {
+                let dir = test_dir(&format!("kill-{seed}-{cadence}"));
+                let _killed = run_durable(&dir, seed, 7, cadence);
+                let (report, resumed) = recover_and_finish(&dir, seed, 10);
+                assert_eq!(report.tip, 7);
+                assert_eq!(
+                    report.checkpoint_iteration,
+                    Some(7 / cadence * cadence),
+                    "cadence {cadence}"
+                );
+                assert_eq!(report.replayed, 7 - 7 / cadence * cadence);
+                assert_eq!(report.verified, report.replayed);
+                assert_eq!(resumed, reference, "seed {seed} cadence {cadence}");
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+            let _ = std::fs::remove_dir_all(&ref_dir);
+        }
+    }
+
+    #[test]
+    fn missing_wal_recovers_to_fresh_world() {
+        let dir = test_dir("fresh");
+        let spec = toy_spec();
+        let cfg = toy_cfg(&spec, 5);
+        let store = RunStore::open_for_config(&dir, &cfg).unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let report = recover(
+            &mut sim,
+            &store,
+            RecoverMode::Verify,
+            &TraceHandle::off(),
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.tip, 0);
+        assert_eq!(report.replayed, 0);
+        assert!(report.checkpoint_iteration.is_none());
+        assert_eq!(sim.master().iteration(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_with_no_tail_replays_nothing() {
+        let dir = test_dir("no-tail");
+        run_durable(&dir, 7, 6, 6); // checkpoint exactly at the end
+        let (report, _) = recover_and_finish(&dir, 7, 6);
+        assert_eq!(report.checkpoint_iteration, Some(6));
+        assert_eq!(report.replayed, 0);
+        assert_eq!(report.tip, 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_replay_continues() {
+        let dir = test_dir("torn");
+        let reference = run_durable(&test_dir("torn-ref"), 13, 10, 3);
+        run_durable(&dir, 13, 7, 3);
+        // Tear the last record: drop its final 3 bytes.
+        let wal = dir.join(super::super::WAL_FILE);
+        let bytes = std::fs::read(&wal).unwrap();
+        std::fs::write(&wal, &bytes[..bytes.len() - 3]).unwrap();
+        let (report, resumed) = recover_and_finish(&dir, 13, 10);
+        assert!(report.torn.is_some());
+        assert!(report.repaired);
+        // Record 6 was torn away: tip falls back to 6, the resumed run
+        // re-executes 6..10 and still lands bitwise on the reference.
+        assert_eq!(report.tip, 6);
+        assert_eq!(resumed, reference);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&test_dir("torn-ref"));
+    }
+
+    #[test]
+    fn verify_mode_does_not_touch_the_torn_tail() {
+        let dir = test_dir("verify-ro");
+        run_durable(&dir, 17, 5, 2);
+        let wal = dir.join(super::super::WAL_FILE);
+        let bytes = std::fs::read(&wal).unwrap();
+        std::fs::write(&wal, &bytes[..bytes.len() - 2]).unwrap();
+        let len_before = std::fs::metadata(&wal).unwrap().len();
+
+        let spec = toy_spec();
+        let cfg = toy_cfg(&spec, 17);
+        let store = RunStore::open_for_config(&dir, &cfg).unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let report = recover(
+            &mut sim,
+            &store,
+            RecoverMode::Verify,
+            &TraceHandle::off(),
+            0,
+        )
+        .unwrap();
+        assert!(report.torn.is_some());
+        assert!(!report.repaired);
+        assert_eq!(std::fs::metadata(&wal).unwrap().len(), len_before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_data_dir_is_refused() {
+        let dir = test_dir("foreign");
+        run_durable(&dir, 3, 4, 2);
+        // Same dir, different seed → different identity.
+        let spec = toy_spec();
+        let cfg = toy_cfg(&spec, 4);
+        let store = RunStore::open_for_config(&dir, &cfg).unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let err = recover(
+            &mut sim,
+            &store,
+            RecoverMode::Verify,
+            &TraceHandle::off(),
+            0,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("different run"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_emits_storage_span() {
+        let dir = test_dir("span");
+        run_durable(&dir, 21, 5, 2);
+        let spec = toy_spec();
+        let cfg = toy_cfg(&spec, 21);
+        let store = RunStore::open_for_config(&dir, &cfg).unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let trace = TraceHandle::recording();
+        let report = recover(&mut sim, &store, RecoverMode::Resume, &trace, 2).unwrap();
+        assert_eq!(report.replayed, 1);
+        assert!(trace
+            .snapshot()
+            .iter()
+            .any(|e| e.name == "replay" && e.track == Track::master(2)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

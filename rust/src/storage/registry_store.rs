@@ -1,0 +1,406 @@
+//! Segment-file persistence for the serving plane's snapshot registry.
+//!
+//! Layout of one registry's directory:
+//!
+//! ```text
+//! MANIFEST          MLMF | version:u32 | frame(registry state sans params)
+//! seg-0000000001.bin   MLSG | frame(version + parameter vector)
+//! seg-0000000004.bin   ...
+//! ```
+//!
+//! Segments are **immutable**: a version's parameters never change, so a
+//! segment is written once (atomically) and only ever deleted.  The
+//! manifest is the commit point — it is replaced by rename after the
+//! segments it references exist, and every load cross-checks each
+//! segment's CRC, version and parameter digest against its manifest row.
+//! [`save`] sweeps segment files the manifest no longer references, so
+//! retention GC folds into persistence: drop versions in memory, save,
+//! and their bytes are gone — no orphaned segments.
+
+use std::collections::BTreeSet;
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::model::ModelSpec;
+use crate::serve::{ProjectId, RegistryState, SnapshotRegistry, SnapshotRow};
+
+use super::frame::{
+    digest_f32s, frame, read_frame, ByteReader, ByteWriter, FrameRead, Result, StorageError,
+};
+
+pub const MANIFEST_FILE: &str = "MANIFEST";
+const MANIFEST_MAGIC: &[u8; 4] = b"MLMF";
+const SEGMENT_MAGIC: &[u8; 4] = b"MLSG";
+const FORMAT_VERSION: u32 = 1;
+
+/// File name of the segment holding `version`'s parameters.
+pub fn segment_file_name(version: u64) -> String {
+    format!("seg-{version:010}.bin")
+}
+
+fn parse_segment_name(name: &str) -> Option<u64> {
+    name.strip_prefix("seg-")
+        .and_then(|s| s.strip_suffix(".bin"))
+        .and_then(|d| d.parse().ok())
+}
+
+fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_data()?;
+    drop(f);
+    fs::rename(&tmp, dir.join(name))?;
+    let _ = File::open(dir).and_then(|d| d.sync_all());
+    Ok(())
+}
+
+fn framed_file(magic: &[u8; 4], payload: &[u8]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(8 + 8 + payload.len());
+    bytes.extend_from_slice(magic);
+    bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&frame(payload));
+    bytes
+}
+
+fn read_framed_file(path: &Path, magic: &[u8; 4]) -> Result<Vec<u8>> {
+    let bytes = fs::read(path)?;
+    if bytes.len() < 8 || &bytes[..4] != magic {
+        return Err(StorageError::Corrupt(format!(
+            "{}: bad magic",
+            path.display()
+        )));
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != FORMAT_VERSION {
+        return Err(StorageError::Corrupt(format!(
+            "{}: unsupported format version {version}",
+            path.display()
+        )));
+    }
+    match read_frame(&bytes, 8) {
+        FrameRead::Ok { payload, consumed } if 8 + consumed == bytes.len() => {
+            Ok(payload.to_vec())
+        }
+        FrameRead::Ok { .. } => Err(StorageError::Corrupt(format!(
+            "{}: trailing bytes after frame",
+            path.display()
+        ))),
+        FrameRead::End => Err(StorageError::Corrupt(format!(
+            "{}: empty file",
+            path.display()
+        ))),
+        FrameRead::Torn { reason, .. } => Err(StorageError::Corrupt(format!(
+            "{}: {reason}",
+            path.display()
+        ))),
+    }
+}
+
+fn encode_manifest(st: &RegistryState) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(st.next);
+    w.put_opt_u64(st.active);
+    w.put_u64s(&st.staged);
+    w.put_u32(st.rows.len() as u32);
+    for row in &st.rows {
+        w.put_u64(row.version);
+        w.put_str(&row.model);
+        w.put_u64(row.iteration);
+        w.put_str(&row.notes);
+        w.put_f64(row.published_ms);
+        w.put_u32(row.params.len() as u32);
+        w.put_u64(digest_f32s(&row.params));
+    }
+    w.finish()
+}
+
+/// A manifest row before its segment has been read back.
+struct ManifestRow {
+    version: u64,
+    model: String,
+    iteration: u64,
+    notes: String,
+    published_ms: f64,
+    param_count: u32,
+    params_digest: u64,
+}
+
+fn decode_manifest(payload: &[u8]) -> Result<(u64, Option<u64>, Vec<u64>, Vec<ManifestRow>)> {
+    let mut r = ByteReader::new(payload);
+    let next = r.get_u64()?;
+    let active = r.get_opt_u64()?;
+    let staged = r.get_u64s()?;
+    let n = r.get_u32()?;
+    let mut rows = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        rows.push(ManifestRow {
+            version: r.get_u64()?,
+            model: r.get_str()?,
+            iteration: r.get_u64()?,
+            notes: r.get_str()?,
+            published_ms: r.get_f64()?,
+            param_count: r.get_u32()?,
+            params_digest: r.get_u64()?,
+        });
+    }
+    r.expect_end()?;
+    Ok((next, active, staged, rows))
+}
+
+/// Persist a registry into `dir`: write any missing segments, commit the
+/// manifest atomically, then sweep segments the manifest no longer
+/// references.  Idempotent, and safe to call mid-traffic — reader pins
+/// are runtime state and are not persisted.
+pub fn save(dir: &Path, reg: &SnapshotRegistry) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let st = reg.export_state();
+    for row in &st.rows {
+        let name = segment_file_name(row.version);
+        if dir.join(&name).exists() {
+            continue; // segments are immutable per version
+        }
+        let mut w = ByteWriter::new();
+        w.put_u64(row.version);
+        w.put_f32s(&row.params);
+        write_atomic(dir, &name, &framed_file(SEGMENT_MAGIC, &w.finish()))?;
+    }
+    write_atomic(
+        dir,
+        MANIFEST_FILE,
+        &framed_file(MANIFEST_MAGIC, &encode_manifest(&st)),
+    )?;
+    sweep_orphans(dir, &st.rows.iter().map(|r| r.version).collect())?;
+    Ok(())
+}
+
+/// Determinism audit: `read_dir` order is OS-dependent, but deletion is
+/// a per-file predicate (name not in `keep`) — the surviving set is the
+/// same whatever order the entries arrive in.
+fn sweep_orphans(dir: &Path, keep: &BTreeSet<u64>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let is_stale_tmp = name.ends_with(".tmp");
+        let is_orphan_segment =
+            parse_segment_name(name).is_some_and(|v| !keep.contains(&v));
+        if is_stale_tmp || is_orphan_segment {
+            fs::remove_file(dir.join(name))?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a registry persisted by [`save`].  `Ok(None)` when `dir` has no
+/// manifest (nothing was ever persisted); `Err` when the manifest exists
+/// but cannot be honored — including a manifest row whose segment file
+/// was deleted out from under it.
+pub fn load(dir: &Path, project: ProjectId, spec: &ModelSpec) -> Result<Option<SnapshotRegistry>> {
+    let manifest_path = dir.join(MANIFEST_FILE);
+    if !manifest_path.exists() {
+        return Ok(None);
+    }
+    let (next, active, staged, manifest_rows) =
+        decode_manifest(&read_framed_file(&manifest_path, MANIFEST_MAGIC)?)?;
+    let mut rows = Vec::with_capacity(manifest_rows.len());
+    for m in manifest_rows {
+        let seg_path = dir.join(segment_file_name(m.version));
+        if !seg_path.exists() {
+            return Err(StorageError::Corrupt(format!(
+                "manifest references v{} but {} is missing",
+                m.version,
+                seg_path.display()
+            )));
+        }
+        let payload = read_framed_file(&seg_path, SEGMENT_MAGIC)?;
+        let mut r = ByteReader::new(&payload);
+        let seg_version = r.get_u64()?;
+        let params = r.get_f32s()?;
+        r.expect_end()?;
+        if seg_version != m.version {
+            return Err(StorageError::Corrupt(format!(
+                "{} claims v{seg_version}, manifest says v{}",
+                seg_path.display(),
+                m.version
+            )));
+        }
+        if params.len() != m.param_count as usize || digest_f32s(&params) != m.params_digest {
+            return Err(StorageError::Corrupt(format!(
+                "{}: parameters do not match their manifest row",
+                seg_path.display()
+            )));
+        }
+        rows.push(SnapshotRow {
+            version: m.version,
+            model: m.model,
+            iteration: m.iteration,
+            params: Arc::new(params),
+            notes: m.notes,
+            published_ms: m.published_ms,
+        });
+    }
+    let state = RegistryState {
+        next,
+        active,
+        staged,
+        rows,
+    };
+    SnapshotRegistry::from_state(project, spec.clone(), state)
+        .map(Some)
+        .map_err(StorageError::Corrupt)
+}
+
+/// Retention GC with durability folded in: evict in memory via
+/// `gc_keep_latest`, then persist — the dropped versions' segment files
+/// are swept by the save.  Returns the dropped handles.
+pub fn gc(
+    dir: &Path,
+    reg: &mut SnapshotRegistry,
+    keep: usize,
+) -> Result<Vec<crate::serve::ModelVersion>> {
+    let dropped = reg.gc_keep_latest(keep);
+    save(dir, reg)?;
+    Ok(dropped)
+}
+
+/// Segment versions currently on disk (ascending) — test/inspection aid.
+/// Determinism audit: `read_dir` order is OS-dependent; the result is
+/// sorted before it can reach any observable state.
+pub fn segment_versions(dir: &Path) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        if let Some(v) = entry?.file_name().to_str().and_then(parse_segment_name) {
+            out.push(v);
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+    use std::path::PathBuf;
+
+    const P: ProjectId = ProjectId::new(0);
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            param_count: 4,
+            batch_size: 2,
+            micro_batches: vec![2, 1],
+            input: vec![2, 1, 1],
+            classes: 2,
+            tensors: vec![TensorSpec {
+                name: "w".into(),
+                shape: vec![4],
+                offset: 0,
+                size: 4,
+                fan_in: 2,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mlitb-regstore-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn populated_registry() -> SnapshotRegistry {
+        let mut reg = SnapshotRegistry::new(P, spec());
+        for i in 0..3u64 {
+            reg.publish_params(vec![i as f32; 4], i * 10, format!("v{}", i + 1), i as f64)
+                .unwrap();
+        }
+        reg.stage_params(vec![9.0; 4], 40, "in flight".into(), 9.0)
+            .unwrap();
+        reg.activate(reg.handle(2)).unwrap(); // rollback to v2
+        reg
+    }
+
+    #[test]
+    fn save_load_roundtrip_restores_warm() {
+        let dir = test_dir("roundtrip");
+        let reg = populated_registry();
+        save(&dir, &reg).unwrap();
+        assert_eq!(segment_versions(&dir).unwrap(), vec![1, 2, 3, 4]);
+        let warm = load(&dir, P, &spec()).unwrap().unwrap();
+        assert_eq!(warm.export_state(), reg.export_state());
+        assert_eq!(warm.active().unwrap().version, reg.handle(2));
+        assert!(warm.is_staged(warm.handle(4)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_loads_none_and_empty_registry_saves() {
+        let dir = test_dir("empty");
+        assert!(load(&dir, P, &spec()).is_err(), "missing dir is an io error");
+        fs::create_dir_all(&dir).unwrap();
+        assert!(load(&dir, P, &spec()).unwrap().is_none());
+        let reg = SnapshotRegistry::new(P, spec());
+        save(&dir, &reg).unwrap();
+        let warm = load(&dir, P, &spec()).unwrap().unwrap();
+        assert!(warm.is_empty());
+        assert!(warm.active().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_deletes_segment_files_with_no_orphans() {
+        let dir = test_dir("gc");
+        let mut reg = populated_registry();
+        save(&dir, &reg).unwrap();
+        // keep=1 → v1 and v3 evictable; v2 (active) and v4 (staged,
+        // newest) survive.  The dropped versions' segments vanish.
+        let dropped = gc(&dir, &mut reg, 1).unwrap();
+        assert_eq!(dropped, vec![reg.handle(1), reg.handle(3)]);
+        assert_eq!(segment_versions(&dir).unwrap(), vec![2, 4]);
+        let warm = load(&dir, P, &spec()).unwrap().unwrap();
+        assert_eq!(warm.export_state(), reg.export_state());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_pointing_at_deleted_segment_errors() {
+        let dir = test_dir("missing-seg");
+        let reg = populated_registry();
+        save(&dir, &reg).unwrap();
+        fs::remove_file(dir.join(segment_file_name(2))).unwrap();
+        let err = load(&dir, P, &spec()).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_segment_fails_its_digest_check() {
+        let dir = test_dir("bitflip");
+        let reg = populated_registry();
+        save(&dir, &reg).unwrap();
+        let seg = dir.join(segment_file_name(3));
+        let mut bytes = fs::read(&seg).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        fs::write(&seg, bytes).unwrap();
+        assert!(load(&dir, P, &spec()).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resave_after_new_publications_is_incremental() {
+        let dir = test_dir("incremental");
+        let mut reg = populated_registry();
+        save(&dir, &reg).unwrap();
+        reg.publish_params(vec![7.0; 4], 50, String::new(), 12.0).unwrap();
+        save(&dir, &reg).unwrap();
+        assert_eq!(segment_versions(&dir).unwrap(), vec![1, 2, 3, 4, 5]);
+        let warm = load(&dir, P, &spec()).unwrap().unwrap();
+        assert_eq!(warm.export_state(), reg.export_state());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

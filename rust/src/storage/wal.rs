@@ -1,0 +1,422 @@
+//! The iteration write-ahead log: one length-prefixed, CRC-framed binary
+//! record per master iteration.
+//!
+//! The WAL does not store gradients — the simulation is deterministic
+//! given (config, seed), so recovery *recomputes* iterations from the
+//! last checkpoint through the normal reduce/step path and uses the
+//! logged digests to verify each replayed iteration is bitwise-identical
+//! to the one that originally ran. The log is therefore tiny (~70 bytes
+//! per iteration) and append cost stays off the hot path: records go
+//! through a `BufWriter` with **no per-record sync**; the file is synced
+//! only at checkpoint boundaries (`WalWriter::sync`), where losing the
+//! buffered tail costs at most `checkpoint_every` iterations of replay.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use super::frame::{frame, read_frame, ByteReader, ByteWriter, FrameRead, Result, StorageError};
+
+/// File name of the log inside a run's data dir.
+pub const WAL_FILE: &str = "wal.log";
+
+const WAL_MAGIC: &[u8; 4] = b"MLWL";
+const WAL_VERSION: u32 = 1;
+/// magic + version + seed + config digest.
+const HEADER_LEN: usize = 4 + 4 + 8 + 8;
+
+/// Identity of the run a WAL (or checkpoint) belongs to: the seed and a
+/// digest of the simulation config. Recovery refuses to replay a log
+/// against a differently-configured simulation — the replay would
+/// silently diverge instead of failing loudly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunIdentity {
+    pub seed: u64,
+    pub config_digest: u64,
+}
+
+/// One iteration's log entry. Digests are FNV-1a 64 over little-endian
+/// bytes; `grad_digest` covers the merged weighted-average gradient the
+/// optimizer consumed (`stepped == false` means no work arrived and the
+/// digest field is meaningless), `params_digest` covers the parameter
+/// vector *after* the optimizer step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalRecord {
+    pub iteration: u64,
+    /// Virtual clock at the end of the iteration (ms).
+    pub t_virtual_ms: f64,
+    pub seed: u64,
+    /// Number of submissions merged into the reduce step.
+    pub workers: u32,
+    /// Digest over the merged worker ids, in merge order.
+    pub worker_set_digest: u64,
+    /// Whether the optimizer stepped this iteration.
+    pub stepped: bool,
+    pub grad_digest: u64,
+    pub params_digest: u64,
+}
+
+impl WalRecord {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.iteration);
+        w.put_f64(self.t_virtual_ms);
+        w.put_u64(self.seed);
+        w.put_u32(self.workers);
+        w.put_u64(self.worker_set_digest);
+        w.put_u8(self.stepped as u8);
+        w.put_u64(self.grad_digest);
+        w.put_u64(self.params_digest);
+        w.finish()
+    }
+
+    fn decode(payload: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(payload);
+        let rec = Self {
+            iteration: r.get_u64()?,
+            t_virtual_ms: r.get_f64()?,
+            seed: r.get_u64()?,
+            workers: r.get_u32()?,
+            worker_set_digest: r.get_u64()?,
+            stepped: r.get_u8()? != 0,
+            grad_digest: r.get_u64()?,
+            params_digest: r.get_u64()?,
+        };
+        r.expect_end()?;
+        Ok(rec)
+    }
+}
+
+/// What the reader found at the end of the log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TailStatus {
+    Clean,
+    /// The final record was torn (partial write or CRC mismatch): the
+    /// log is valid up to `valid_bytes`; `dropped_bytes` were discarded.
+    /// Recovery truncates to `valid_bytes` and replays from there — a
+    /// crash mid-append costs one iteration of replay, never the run.
+    Truncated {
+        valid_bytes: u64,
+        dropped_bytes: u64,
+        reason: String,
+    },
+}
+
+fn encode_header(id: RunIdentity) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN);
+    out.extend_from_slice(WAL_MAGIC);
+    out.extend_from_slice(&WAL_VERSION.to_le_bytes());
+    out.extend_from_slice(&id.seed.to_le_bytes());
+    out.extend_from_slice(&id.config_digest.to_le_bytes());
+    out
+}
+
+fn decode_header(bytes: &[u8]) -> Result<RunIdentity> {
+    if bytes.len() < HEADER_LEN {
+        return Err(StorageError::Corrupt(format!(
+            "wal header truncated: {} of {HEADER_LEN} bytes",
+            bytes.len()
+        )));
+    }
+    if &bytes[0..4] != WAL_MAGIC {
+        return Err(StorageError::Corrupt("bad wal magic".into()));
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != WAL_VERSION {
+        return Err(StorageError::Corrupt(format!(
+            "unsupported wal version {version}"
+        )));
+    }
+    let mut r = ByteReader::new(&bytes[8..HEADER_LEN]);
+    Ok(RunIdentity {
+        seed: r.get_u64()?,
+        config_digest: r.get_u64()?,
+    })
+}
+
+/// Buffered appender. Creating one on a fresh file writes the header; on
+/// an existing file the header is verified against `identity` and appends
+/// continue at the end (the caller repairs a torn tail first — see
+/// [`read_wal`] / [`repair_tail`]).
+#[derive(Debug)]
+pub struct WalWriter {
+    out: BufWriter<File>,
+    bytes_appended: u64,
+    records_appended: u64,
+    records_since_sync: u64,
+}
+
+impl WalWriter {
+    pub fn open(path: &Path, identity: RunIdentity) -> Result<Self> {
+        let exists = path.exists();
+        if exists {
+            // Verify we are appending to the same run's log, and refuse
+            // to append after a torn tail (repair_tail first).
+            let (found, _, tail) = read_wal(path)?;
+            if let TailStatus::Truncated { reason, .. } = tail {
+                return Err(StorageError::Corrupt(format!(
+                    "wal at {} has a torn tail ({reason}); run recovery to repair it first",
+                    path.display()
+                )));
+            }
+            if found != identity {
+                return Err(StorageError::Corrupt(format!(
+                    "wal at {} belongs to a different run (seed {} config {:#018x}, expected seed {} config {:#018x})",
+                    path.display(),
+                    found.seed,
+                    found.config_digest,
+                    identity.seed,
+                    identity.config_digest,
+                )));
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        let mut w = Self {
+            out: BufWriter::new(file),
+            bytes_appended: 0,
+            records_appended: 0,
+            records_since_sync: 0,
+        };
+        if !exists {
+            let header = encode_header(identity);
+            w.out.write_all(&header)?;
+            w.bytes_appended += header.len() as u64;
+        }
+        Ok(w)
+    }
+
+    /// Append one record. Buffered only — no flush, no sync; the bytes
+    /// reach the page cache when the `BufWriter` fills or at the next
+    /// checkpoint-boundary [`sync`](Self::sync).
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let framed = frame(&rec.encode());
+        self.out.write_all(&framed)?;
+        self.bytes_appended += framed.len() as u64;
+        self.records_appended += 1;
+        self.records_since_sync += 1;
+        Ok(())
+    }
+
+    /// Flush and fsync — called at checkpoint boundaries only, so the
+    /// sync cost amortizes over `checkpoint_every` iterations.
+    pub fn sync(&mut self) -> Result<()> {
+        self.out.flush()?;
+        self.out.get_ref().sync_data()?;
+        self.records_since_sync = 0;
+        Ok(())
+    }
+
+    /// Total bytes this writer has appended (header included on create).
+    pub fn bytes_appended(&self) -> u64 {
+        self.bytes_appended
+    }
+
+    pub fn records_appended(&self) -> u64 {
+        self.records_appended
+    }
+
+    /// Records appended since the last checkpoint-boundary sync — the
+    /// replay distance a crash right now would cost.
+    pub fn records_since_sync(&self) -> u64 {
+        self.records_since_sync
+    }
+}
+
+/// Read a whole WAL: header identity, every valid record, and the tail
+/// status. A torn tail is *reported*, not repaired — call [`repair_tail`]
+/// to truncate before reopening for append.
+pub fn read_wal(path: &Path) -> Result<(RunIdentity, Vec<WalRecord>, TailStatus)> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let identity = decode_header(&bytes)?;
+    let mut records = Vec::new();
+    let mut offset = HEADER_LEN;
+    loop {
+        match read_frame(&bytes, offset) {
+            FrameRead::End => return Ok((identity, records, TailStatus::Clean)),
+            FrameRead::Ok { payload, consumed } => {
+                records.push(WalRecord::decode(payload)?);
+                offset += consumed;
+            }
+            FrameRead::Torn {
+                valid_up_to,
+                reason,
+            } => {
+                return Ok((
+                    identity,
+                    records,
+                    TailStatus::Truncated {
+                        valid_bytes: valid_up_to as u64,
+                        dropped_bytes: (bytes.len() - valid_up_to) as u64,
+                        reason,
+                    },
+                ));
+            }
+        }
+    }
+}
+
+/// Truncate a torn tail in place (no-op on a clean log). Returns the
+/// tail status that was found, so callers can surface the warning.
+pub fn repair_tail(path: &Path) -> Result<TailStatus> {
+    let (_, _, tail) = read_wal(path)?;
+    if let TailStatus::Truncated { valid_bytes, .. } = &tail {
+        let file = OpenOptions::new().write(true).open(path)?;
+        file.set_len(*valid_bytes)?;
+        file.sync_data()?;
+    }
+    Ok(tail)
+}
+
+/// Path of the WAL inside a data dir.
+pub fn wal_path(dir: &Path) -> PathBuf {
+    dir.join(WAL_FILE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mlitb-wal-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rec(i: u64) -> WalRecord {
+        WalRecord {
+            iteration: i,
+            t_virtual_ms: i as f64 * 4000.0,
+            seed: 7,
+            workers: 4,
+            worker_set_digest: 0x1234 + i,
+            stepped: true,
+            grad_digest: 0xAAAA + i,
+            params_digest: 0xBBBB + i,
+        }
+    }
+
+    const ID: RunIdentity = RunIdentity {
+        seed: 7,
+        config_digest: 0xC0FFEE,
+    };
+
+    #[test]
+    fn append_read_roundtrip() {
+        let dir = tmp("roundtrip");
+        let path = wal_path(&dir);
+        let mut w = WalWriter::open(&path, ID).unwrap();
+        for i in 0..5 {
+            w.append(&rec(i)).unwrap();
+        }
+        assert_eq!(w.records_appended(), 5);
+        assert_eq!(w.records_since_sync(), 5);
+        w.sync().unwrap();
+        assert_eq!(w.records_since_sync(), 0);
+        drop(w);
+
+        let (id, records, tail) = read_wal(&path).unwrap();
+        assert_eq!(id, ID);
+        assert_eq!(tail, TailStatus::Clean);
+        assert_eq!(records.len(), 5);
+        assert_eq!(records[3], rec(3));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_appends_and_rejects_wrong_identity() {
+        let dir = tmp("reopen");
+        let path = wal_path(&dir);
+        let mut w = WalWriter::open(&path, ID).unwrap();
+        w.append(&rec(0)).unwrap();
+        w.sync().unwrap();
+        drop(w);
+
+        let mut w2 = WalWriter::open(&path, ID).unwrap();
+        w2.append(&rec(1)).unwrap();
+        w2.sync().unwrap();
+        drop(w2);
+        let (_, records, tail) = read_wal(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(tail, TailStatus::Clean);
+
+        let other = RunIdentity {
+            seed: 8,
+            ..ID
+        };
+        assert!(WalWriter::open(&path, other).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_reported_and_repairable() {
+        let dir = tmp("torn");
+        let path = wal_path(&dir);
+        let mut w = WalWriter::open(&path, ID).unwrap();
+        for i in 0..3 {
+            w.append(&rec(i)).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+
+        // Simulate a crash mid-append: chop 5 bytes off the last record.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+
+        let (_, records, tail) = read_wal(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        let valid = match &tail {
+            TailStatus::Truncated { valid_bytes, dropped_bytes, .. } => {
+                assert!(*dropped_bytes > 0);
+                *valid_bytes
+            }
+            TailStatus::Clean => panic!("expected torn tail"),
+        };
+
+        let repaired = repair_tail(&path).unwrap();
+        assert_eq!(repaired, tail);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), valid);
+        // After repair the log is clean and appendable again.
+        let (_, records, tail) = read_wal(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(tail, TailStatus::Clean);
+        let mut w = WalWriter::open(&path, ID).unwrap();
+        w.append(&rec(2)).unwrap();
+        w.sync().unwrap();
+        drop(w);
+        let (_, records, _) = read_wal(&path).unwrap();
+        assert_eq!(records.len(), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn crc_flip_inside_tail_record_truncates_it() {
+        let dir = tmp("crcflip");
+        let path = wal_path(&dir);
+        let mut w = WalWriter::open(&path, ID).unwrap();
+        w.append(&rec(0)).unwrap();
+        w.append(&rec(1)).unwrap();
+        w.sync().unwrap();
+        drop(w);
+
+        // Flip one payload byte in the last record.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (_, records, tail) = read_wal(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        match tail {
+            TailStatus::Truncated { reason, .. } => assert!(reason.contains("crc")),
+            TailStatus::Clean => panic!("expected crc-torn tail"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

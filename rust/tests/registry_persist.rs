@@ -1,0 +1,142 @@
+//! Integration: the durable snapshot registry — a multi-project
+//! `ControlPlane` persists its registries as segment files + manifests,
+//! a fresh plane restarts warm (active pointer, staged versions and the
+//! rollback target all survive), restored registries stay compactable
+//! (`gc` deletes the retired versions' segment files with no orphans),
+//! and a manifest pointing at a deleted segment surfaces as corruption
+//! instead of silently serving a cold registry.
+
+use std::path::PathBuf;
+
+use mlitb::model::init_params;
+use mlitb::serve::{demo_spec, ControlPlane, ProjectId};
+use mlitb::storage::registry_store;
+
+fn temp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "mlitb-registry-persist-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Two projects behind one plane; project 0 carries the interesting
+/// lifecycle: three published versions, a staged fourth, and a rollback
+/// onto v2 (so v3 is retired, neither active nor staged).
+fn populated_plane() -> ControlPlane {
+    let spec = demo_spec();
+    let mut plane = ControlPlane::new();
+    let p0 = plane.register(spec.clone(), 2.0);
+    let p1 = plane.register(spec.clone(), 1.0);
+
+    let reg0 = plane.registry_mut(p0);
+    for (i, at) in [(100u64, 1_000.0f64), (200, 2_000.0), (300, 3_000.0)] {
+        reg0.publish_params(init_params(&spec, i), i, format!("iter {i}"), at)
+            .expect("publish");
+    }
+    reg0.stage_params(init_params(&spec, 9), 400, "in flight".into(), 4_000.0)
+        .expect("stage");
+    let v2 = reg0.handle(2);
+    reg0.activate(v2).expect("rollback to v2");
+
+    plane
+        .registry_mut(p1)
+        .publish_params(init_params(&spec, 77), 50, "p1 v1".into(), 500.0)
+        .expect("publish p1");
+    plane
+}
+
+/// A cold plane with the same project layout, as a restarting server
+/// would build from its static config before restoring state.
+fn cold_plane() -> ControlPlane {
+    let mut plane = ControlPlane::new();
+    plane.register(demo_spec(), 2.0);
+    plane.register(demo_spec(), 1.0);
+    plane
+}
+
+#[test]
+fn serving_restart_warms_from_persisted_segments() {
+    let root = temp_root("warm");
+    let plane = populated_plane();
+    let p0 = ProjectId::new(0);
+    let p1 = ProjectId::new(1);
+    plane.persist(&root).expect("persist");
+
+    let mut fresh = cold_plane();
+    assert!(fresh.registry(p0).is_empty(), "cold plane starts empty");
+    let restored = fresh.restore_registries(&root).expect("restore");
+    assert_eq!(restored, 2, "both project registries restored");
+
+    // Full-state equality: versions, params, notes, timestamps.
+    assert_eq!(
+        fresh.registry(p0).export_state(),
+        plane.registry(p0).export_state()
+    );
+    assert_eq!(
+        fresh.registry(p1).export_state(),
+        plane.registry(p1).export_state()
+    );
+
+    // The lifecycle details a restarting server actually depends on.
+    let reg0 = fresh.registry(p0);
+    assert_eq!(
+        reg0.active().map(|s| s.version),
+        Some(reg0.handle(2)),
+        "rollback target is the active version after restart"
+    );
+    assert!(reg0.is_staged(reg0.handle(4)), "in-flight stage survives");
+    assert_eq!(reg0.len(), 4);
+    assert_eq!(fresh.registry(p1).len(), 1);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn restored_registry_stays_compactable_without_orphans() {
+    let root = temp_root("gc");
+    populated_plane().persist(&root).expect("persist");
+
+    let mut fresh = cold_plane();
+    fresh.restore_registries(&root).expect("restore");
+
+    // Restored pin-free retired versions are compactable: keep=1 over
+    // [v1, v2, v3] retires v1 and v3 (v2 is active, v4 is staged — both
+    // protected), and their segment files go with them.
+    let p0_dir = root.join("p0");
+    let reg0 = fresh.registry_mut(ProjectId::new(0));
+    assert_eq!(registry_store::segment_versions(&p0_dir).unwrap(), [1, 2, 3, 4]);
+    let dropped = registry_store::gc(&p0_dir, reg0, 1).expect("gc");
+    let dropped_versions: Vec<u64> = dropped.iter().map(|v| v.version).collect();
+    assert_eq!(dropped_versions, [1, 3]);
+    assert_eq!(
+        registry_store::segment_versions(&p0_dir).unwrap(),
+        [2, 4],
+        "retired versions' segment files are deleted, no orphans"
+    );
+
+    // The compacted store still restarts warm.
+    let mut again = cold_plane();
+    again.restore_registries(&root).expect("restore after gc");
+    let reg0 = again.registry(ProjectId::new(0));
+    assert_eq!(reg0.len(), 2);
+    assert_eq!(reg0.active().map(|s| s.version), Some(reg0.handle(2)));
+    assert!(reg0.is_staged(reg0.handle(4)));
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn manifest_pointing_at_deleted_segment_fails_restore() {
+    let root = temp_root("torn");
+    populated_plane().persist(&root).expect("persist");
+    let victim = root.join("p0").join(registry_store::segment_file_name(2));
+    std::fs::remove_file(&victim).expect("delete segment");
+
+    let err = cold_plane().restore_registries(&root).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("missing"), "corruption is loud: {msg}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
