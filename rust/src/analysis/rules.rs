@@ -107,7 +107,7 @@ impl Scope {
     /// Order-sensitive planes: anywhere map iteration order could leak
     /// into params, schedules, logs or exports.
     fn ordered_plane(&self) -> bool {
-        const PLANES: [&str; 11] = [
+        const PLANES: [&str; 12] = [
             "sim",
             "serve",
             "cosim",
@@ -119,6 +119,7 @@ impl Scope {
             "data",
             "client",
             "storage",
+            "faults",
         ];
         PLANES.contains(&self.top())
     }

@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::allocation::{DataId, WorkerId};
 use crate::data::{ClientCache, DataServer, SharedSample};
+use crate::faults::FaultPlan;
 use crate::model::ModelSpec;
 use crate::netsim::LinkModel;
 use crate::rng::Pcg32;
@@ -269,6 +270,39 @@ impl SimClient {
             compute_ms: n_batches as f64 * ms_per_batch,
         }))
     }
+
+    // ------------------------------------------------------------- uplink
+
+    /// Uplink delay for a gradient message of `bytes`, with fault-plane
+    /// drop + retry/backoff: each lost attempt costs its wire time plus a
+    /// seeded exponential backoff, and the client gives up once the next
+    /// send would start past `deadline_ms` (the submission is lost —
+    /// quorum/carryover at the master absorb the gap).  `start_ms` is the
+    /// send start within the iteration (compute end).  With an inactive
+    /// plan this draws exactly one jitter sample — bitwise-identical to
+    /// the pre-fault-plane upload path.
+    pub fn upload_ms(
+        &mut self,
+        bytes: u64,
+        start_ms: f64,
+        deadline_ms: f64,
+        plan: &FaultPlan,
+        iteration: u64,
+    ) -> Option<f64> {
+        let mut elapsed = 0.0;
+        let mut attempt = 0u32;
+        loop {
+            let send = self.link.sample_latency_ms(&mut self.rng) + self.link.transmit_ms(bytes);
+            if !plan.upload_dropped(self.id, iteration, attempt) {
+                return Some(elapsed + send);
+            }
+            elapsed += send + self.link.retry_backoff_ms(attempt, &mut self.rng);
+            attempt += 1;
+            if start_ms + elapsed > deadline_ms {
+                return None;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -356,6 +390,55 @@ mod tests {
             c.link.sample_latency_ms(&mut c.rng).to_bits(),
             r.link.sample_latency_ms(&mut r.rng).to_bits()
         );
+    }
+
+    #[test]
+    fn upload_with_inactive_faults_is_the_plain_path() {
+        // The fault-plane hook must be invisible when off: exactly one
+        // jitter sample, bitwise-equal to latency + transmit.
+        let mut a = client(9);
+        let mut b = client(9);
+        let plan = FaultPlan::new(crate::faults::FaultProfile::none(), 1);
+        let up = a.upload_ms(4096, 100.0, 8000.0, &plan, 3).unwrap();
+        let want = b.link.sample_latency_ms(&mut b.rng) + b.link.transmit_ms(4096);
+        assert_eq!(up.to_bits(), want.to_bits());
+        // And the rng streams stay aligned afterwards.
+        assert_eq!(
+            a.link.sample_latency_ms(&mut a.rng).to_bits(),
+            b.link.sample_latency_ms(&mut b.rng).to_bits()
+        );
+    }
+
+    #[test]
+    fn dropped_uploads_retry_with_backoff_then_give_up() {
+        let mut c = client(10);
+        let mut profile = crate::faults::FaultProfile::parse("flaky").unwrap();
+        profile.drop_prob = 1.0; // every attempt lost
+        let plan = FaultPlan::new(profile, 5);
+        assert!(
+            c.upload_ms(4096, 0.0, 2000.0, &plan, 0).is_none(),
+            "all-drop link must miss the deadline"
+        );
+
+        // With a moderate drop rate the retry loop eventually delivers,
+        // and the delivered delay includes the lost attempts' backoff.
+        let mut c2 = client(10);
+        let mut some_retried = false;
+        let mut profile = crate::faults::FaultProfile::parse("flaky").unwrap();
+        profile.drop_prob = 0.5;
+        let plan = FaultPlan::new(profile, 5);
+        let plain = {
+            let mut d = client(10);
+            d.link.sample_latency_ms(&mut d.rng) + d.link.transmit_ms(4096)
+        };
+        for it in 0..32 {
+            if let Some(up) = c2.upload_ms(4096, 0.0, 60_000.0, &plan, it) {
+                if up > plain * 3.0 {
+                    some_retried = true;
+                }
+            }
+        }
+        assert!(some_retried, "0.5 drop over 32 iterations never retried");
     }
 
     #[test]

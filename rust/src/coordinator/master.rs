@@ -1,9 +1,11 @@
 //! The master state machine: projects, the five-step event loop, reduce.
 
+use std::collections::BTreeMap;
+
 use crate::allocation::{Allocator, AllocatorState, Delta, WorkerId};
 use crate::metrics::{IterationRecord, Timeline};
 use crate::netsim::MasterModel;
-use crate::params::{GradView, Optimizer, OptimizerKind, ShardedAccumulator};
+use crate::params::{AggregationMode, GradView, Optimizer, OptimizerKind, ShardedAccumulator};
 use crate::storage::{digest_f32s, Fnv64, WalRecord, WalWriter};
 use crate::trace::{ArgValue, TraceHandle, Track};
 
@@ -26,6 +28,18 @@ pub struct MasterConfig {
     pub master_model: MasterModel,
     /// Latency fraction of T above which a worker sheds data (§3.3d).
     pub shed_threshold: f64,
+    /// How merged gradients combine into the optimizer input.  `Mean` is
+    /// the paper's weighted average through the bitwise-pinned
+    /// [`ShardedAccumulator`] path; the robust modes defend against
+    /// hostile submissions (see `params::robust`).
+    pub aggregation: AggregationMode,
+    /// Graceful degradation: with `quorum` ∈ (0, 1] under a synchronous
+    /// policy, the barrier releases once ⌈quorum·workers⌉ fresh valid
+    /// submissions have drained; stragglers flow into carryover.  0
+    /// disables (strict barrier).
+    pub quorum: f64,
+    /// Quarantined (non-finite) submissions before a worker is evicted.
+    pub strike_limit: u32,
 }
 
 impl MasterConfig {
@@ -51,6 +65,9 @@ impl Default for MasterConfig {
             policy: ReducePolicy::Sync,
             master_model: MasterModel::default(),
             shed_threshold: 0.5,
+            aggregation: AggregationMode::Mean,
+            quorum: 0.0,
+            strike_limit: 3,
         }
     }
 }
@@ -75,6 +92,12 @@ pub struct IterationOutcome {
     pub bytes_down: u64,
     /// Weighted mean training loss of merged work (None if nothing came).
     pub mean_loss: Option<f64>,
+    /// Submissions rejected by the sanitation gate this iteration
+    /// (non-finite payloads + duplicate deliveries).
+    pub quarantined: u64,
+    /// Workers evicted for exceeding the strike limit, with the
+    /// reallocation delta the sim must apply (like a forced leave).
+    pub evicted: Vec<(WorkerId, Delta)>,
 }
 
 /// Serializable form of a carryover [`Submission`] payload.
@@ -149,6 +172,8 @@ pub struct MasterState {
     pub timeline: Vec<IterationRecord>,
     pub carryover: Vec<SubmissionState>,
     pub pending_test_error: Option<f64>,
+    /// Sanitation strike counters (sorted by worker id).
+    pub strikes: Vec<(WorkerId, u32)>,
 }
 
 /// One training project's master state.
@@ -168,6 +193,10 @@ pub struct Master {
     timeline: Timeline,
     /// Async policy: submissions that missed this iteration's close.
     carryover: Vec<Submission>,
+    /// Sanitation strikes per worker (non-finite payloads); reaching
+    /// `cfg.strike_limit` evicts the worker.  Evicted workers keep their
+    /// count so a duplicate late delivery cannot reset them.
+    strikes: BTreeMap<WorkerId, u32>,
     /// Test error reported by trackers since the last iteration record.
     pending_test_error: Option<f64>,
     /// Trace plane (off by default); `trace_pid` keys this master's
@@ -202,6 +231,7 @@ impl Master {
             t_virtual_ms: 0.0,
             timeline: Timeline::new(),
             carryover: Vec::new(),
+            strikes: BTreeMap::new(),
             pending_test_error: None,
             trace: TraceHandle::off(),
             trace_pid: 0,
@@ -266,6 +296,7 @@ impl Master {
                 .map(SubmissionState::from_submission)
                 .collect(),
             pending_test_error: self.pending_test_error,
+            strikes: self.strikes.iter().map(|(&w, &n)| (w, n)).collect(),
         }
     }
 
@@ -297,6 +328,7 @@ impl Master {
             .into_iter()
             .map(SubmissionState::into_submission)
             .collect();
+        self.strikes = st.strikes.into_iter().collect();
         self.pending_test_error = st.pending_test_error;
         self.iteration = st.iteration;
         self.t_virtual_ms = st.t_virtual_ms;
@@ -402,6 +434,50 @@ impl Master {
         let mut subs = std::mem::take(&mut self.carryover);
         let carried = subs.len();
         subs.extend(submissions);
+
+        // ---- sanitation gate (robustness plane).  Before anything can
+        // reach the reduce: a non-finite payload is quarantined (it still
+        // drains — the bytes were sent — but never merges and never enters
+        // carryover) and strikes its worker; repeated uploads of the same
+        // worker within one iteration keep only the first copy.  Carryover
+        // was screened when it arrived but is re-checked — cheap, and it
+        // keeps the invariant local.
+        let mut quarantine = vec![false; subs.len()];
+        let mut quarantined = 0u64;
+        let mut duplicates = 0u64;
+        let mut to_evict: Vec<WorkerId> = Vec::new();
+        let mut seen_new: Vec<WorkerId> = Vec::new();
+        for (i, s) in subs.iter().enumerate() {
+            if !s.payload.is_finite() {
+                quarantine[i] = true;
+                quarantined += 1;
+                let strikes = self.strikes.entry(s.worker).or_insert(0);
+                *strikes += 1;
+                if *strikes >= self.cfg.strike_limit && !to_evict.contains(&s.worker) {
+                    to_evict.push(s.worker);
+                }
+            } else if i >= carried {
+                if seen_new.contains(&s.worker) {
+                    // Duplicate delivery (fault plane replays the upload):
+                    // merging it would double-count the worker's examples.
+                    quarantine[i] = true;
+                    duplicates += 1;
+                } else {
+                    seen_new.push(s.worker);
+                }
+            }
+        }
+        let mut evicted: Vec<(WorkerId, Delta)> = Vec::new();
+        for w in to_evict {
+            if self.allocator.worker_ids().contains(&w) {
+                // `worker_leave` also purges carryover — already taken
+                // above, so only this iteration's `subs` still reference
+                // the evicted worker, and those are quarantined.
+                let delta = self.worker_leave(w);
+                evicted.push((w, delta));
+            }
+        }
+
         let arrivals: Vec<(f64, u64, usize)> = subs
             .iter()
             .enumerate()
@@ -413,13 +489,48 @@ impl Master {
             .collect();
         let completions = self.cfg.master_model.drain_delays(&arrivals);
 
-        // ---- split on-time vs late under the async policy
+        // ---- quorum close (graceful degradation).  Under a synchronous
+        // policy with quorum q > 0 the barrier releases once ⌈q·workers⌉
+        // fresh valid submissions have drained: later ones become
+        // carryover (bounded staleness 1, like Async stragglers) instead
+        // of extending the wall.  Below quorum the barrier stalls — the
+        // strict Sync semantics, waiting for everything.
+        let quorum_stat: Option<(usize, usize, f64)> = if self.cfg.quorum > 0.0
+            && !matches!(self.cfg.policy, ReducePolicy::Async)
+        {
+            let workers = self.allocator.n_workers();
+            let needed = ((self.cfg.quorum * workers as f64).ceil() as usize).max(1);
+            let mut times: Vec<f64> = completions
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i >= carried && !quarantine[i])
+                .map(|(_, &d)| d)
+                .collect();
+            times.sort_unstable_by(f64::total_cmp);
+            let reported = times.len();
+            let close = if reported >= needed {
+                times[needed - 1].max(iter_ms)
+            } else {
+                times.last().copied().unwrap_or(0.0).max(iter_ms)
+            };
+            Some((needed, reported, close))
+        } else {
+            None
+        };
+
+        // ---- split on-time vs late under the async policy / quorum close
         let mut merged_idx: Vec<usize> = Vec::new();
         let mut late_idx: Vec<usize> = Vec::new();
         for (i, &done) in completions.iter().enumerate() {
+            if quarantine[i] {
+                continue; // neither merged nor carried
+            }
             match self.cfg.policy {
                 ReducePolicy::Async if done > iter_ms && i >= carried => late_idx.push(i),
-                _ => merged_idx.push(i),
+                _ => match quorum_stat {
+                    Some((_, _, close)) if done > close && i >= carried => late_idx.push(i),
+                    _ => merged_idx.push(i),
+                },
             }
         }
 
@@ -467,12 +578,30 @@ impl Master {
             loss_examples += s.examples;
             bytes_up += s.bytes;
         }
-        self.accumulator.merge(&batch);
-        drop(batch);
-        let stepped = !self.accumulator.is_empty();
-        if stepped {
-            self.accumulator.weighted_average_into(&mut self.avg_scratch);
-            self.optimizer.step(&mut self.params, &self.avg_scratch);
+        let stepped;
+        if self.cfg.aggregation.is_robust() {
+            // Robust modes need the per-worker rows, not a running sum —
+            // they combine over the same shard bounds on the same scoped
+            // threads, writing the aggregate straight into `avg_scratch`.
+            // The Mean branch below stays bitwise-untouched.
+            stepped = batch.iter().any(|&(_, n)| n > 0);
+            if stepped {
+                self.accumulator.robust_aggregate_into(
+                    self.cfg.aggregation,
+                    &batch,
+                    &mut self.avg_scratch,
+                );
+                self.optimizer.step(&mut self.params, &self.avg_scratch);
+            }
+            drop(batch);
+        } else {
+            self.accumulator.merge(&batch);
+            drop(batch);
+            stepped = !self.accumulator.is_empty();
+            if stepped {
+                self.accumulator.weighted_average_into(&mut self.avg_scratch);
+                self.optimizer.step(&mut self.params, &self.avg_scratch);
+            }
         }
 
         // ---- storage plane: fingerprint the reduce while its inputs are
@@ -499,6 +628,12 @@ impl Master {
         let mut latencies: Vec<f64> = Vec::new();
         for (i, &done) in completions.iter().enumerate() {
             if i < carried {
+                continue;
+            }
+            if quarantine[i] {
+                // A quarantined submission must not feed the latency
+                // monitor: `observe` would re-register a worker the
+                // eviction above just forgot.
                 continue;
             }
             let s = &subs[i];
@@ -648,6 +783,31 @@ impl Master {
                 t0 + wall_ms,
                 &[("late", late_idx.len() as f64)],
             );
+            // Robustness plane: what the sanitation gate rejected and
+            // whether the quorum barrier released early.
+            self.trace.counter(
+                master,
+                "train/quarantined",
+                t0 + wall_ms,
+                &[
+                    ("quarantined", quarantined as f64),
+                    ("duplicates", duplicates as f64),
+                    ("evicted", evicted.len() as f64),
+                ],
+            );
+            if let Some((needed, reported, close)) = quorum_stat {
+                self.trace.counter(
+                    master,
+                    "train/quorum",
+                    t0 + wall_ms,
+                    &[
+                        ("needed", needed as f64),
+                        ("reported", reported as f64),
+                        ("met", f64::from(u8::from(reported >= needed))),
+                        ("close_ms", close),
+                    ],
+                );
+            }
         }
 
         let mean_latency_ms = if latencies.is_empty() {
@@ -684,6 +844,8 @@ impl Master {
             bytes_up,
             bytes_down,
             mean_loss,
+            quarantined: quarantined + duplicates,
+            evicted,
         }
     }
 }
@@ -763,6 +925,7 @@ mod tests {
         assert!(evs.iter().any(|e| e.name == "reduce"));
         assert!(evs.iter().any(|e| e.name == "optimizer-step"));
         assert!(evs.iter().any(|e| e.name == "broadcast"));
+        assert!(evs.iter().any(|e| e.name == "train/quarantined"));
         // Second iteration starts where the first ended: spans never
         // run backwards on the virtual clock.
         let t_end = m.now_ms();
@@ -1027,5 +1190,134 @@ mod tests {
         assert_eq!(m.timeline().last().unwrap().test_error, Some(0.42));
         m.finish_iteration(vec![]);
         assert_eq!(m.timeline().last().unwrap().test_error, None);
+    }
+
+    #[test]
+    fn poisoned_worker_is_quarantined_then_evicted() {
+        // Regression for the sanitation gate: before it existed a single
+        // NaN payload flowed through `avg_scratch` into the parameters
+        // even under plain Mean aggregation.
+        let mut c = cfg(ReducePolicy::Sync);
+        c.optimizer = OptimizerKind::Sgd;
+        let mut m = Master::new(c, vec![0.0; 2]);
+        m.register_data(40);
+        m.worker_join(1);
+        m.worker_join(2);
+        for it in 0..3 {
+            let out = m.finish_iteration(vec![
+                sub(1, 100.0, vec![f32::NAN, 1.0], 1),
+                sub(2, 100.0, vec![1.0, 1.0], 1),
+            ]);
+            assert_eq!(out.quarantined, 1, "iteration {it}");
+            assert!(
+                m.params().iter().all(|p| p.is_finite()),
+                "NaN reached the params at iteration {it}"
+            );
+            if it < 2 {
+                assert!(out.evicted.is_empty(), "evicted before the strike limit");
+            } else {
+                assert_eq!(out.evicted.len(), 1, "third strike must evict");
+                assert_eq!(out.evicted[0].0, 1);
+            }
+        }
+        // The evicted worker's data went back to the honest one, and only
+        // the honest gradient stepped the parameters.
+        assert_eq!(m.allocator().owned_by(2).len(), 40);
+        m.allocator().check_invariants().unwrap();
+        assert!(m.params()[0] < 0.0);
+        // Strike history survives an export/import round trip.
+        let st = m.export_state();
+        assert_eq!(st.strikes, vec![(1, 3)]);
+        let mut b = {
+            let mut c = cfg(ReducePolicy::Sync);
+            c.optimizer = OptimizerKind::Sgd;
+            Master::new(c, vec![0.0; 2])
+        };
+        b.import_state(st.clone());
+        assert_eq!(b.export_state().strikes, st.strikes);
+    }
+
+    #[test]
+    fn duplicate_deliveries_merge_once() {
+        let mut c = cfg(ReducePolicy::Sync);
+        c.optimizer = OptimizerKind::Sgd;
+        let mut m = Master::new(c, vec![0.0; 2]);
+        m.register_data(10);
+        m.worker_join(1);
+        // The fault plane can replay an upload: only the first copy may
+        // count, or the worker's examples double-weight the reduce.
+        let out = m.finish_iteration(vec![
+            sub(1, 100.0, vec![1.0, 1.0], 1),
+            sub(1, 150.0, vec![1.0, 1.0], 1),
+        ]);
+        assert_eq!(out.quarantined, 1, "duplicate counts as rejected");
+        assert_eq!(out.vectors, 1);
+        let p = m.params();
+        assert!((p[0] + 0.1).abs() < 1e-6, "double-merged duplicate: {p:?}");
+        // Duplicates are not strikes — the worker keeps a clean record.
+        assert!(m.export_state().strikes.is_empty());
+    }
+
+    #[test]
+    fn quorum_releases_the_barrier_and_carries_stragglers() {
+        let mut c = cfg(ReducePolicy::Sync);
+        c.quorum = 0.5;
+        let mut m = Master::new(c, vec![0.0; 2]);
+        m.register_data(10);
+        for w in 1..=4 {
+            m.worker_join(w);
+        }
+        let out = m.finish_iteration(vec![
+            sub(1, 1000.0, vec![1.0, 1.0], 1),
+            sub(2, 2000.0, vec![1.0, 1.0], 1),
+            sub(3, 9000.0, vec![1.0, 1.0], 1),
+            sub(4, 12000.0, vec![1.0, 1.0], 1),
+        ]);
+        // ⌈0.5·4⌉ = 2: the barrier releases once worker 2 drains; the
+        // two stragglers become carryover instead of stretching the wall.
+        assert_eq!(out.vectors, 2);
+        assert!(out.wall_ms < 9000.0, "{}", out.wall_ms);
+        let out2 = m.finish_iteration(vec![]);
+        assert_eq!(out2.vectors, 2, "stragglers merge next iteration");
+    }
+
+    #[test]
+    fn quorum_unmet_stalls_like_strict_sync() {
+        let mut c = cfg(ReducePolicy::Sync);
+        c.quorum = 0.75;
+        let mut m = Master::new(c, vec![0.0; 2]);
+        m.register_data(10);
+        for w in 1..=4 {
+            m.worker_join(w);
+        }
+        // Only 2 of the needed ⌈0.75·4⌉ = 3 report: the barrier waits for
+        // everything it did get (strict Sync degradation, no lost work).
+        let out = m.finish_iteration(vec![
+            sub(1, 1000.0, vec![1.0, 1.0], 1),
+            sub(2, 8000.0, vec![1.0, 1.0], 1),
+        ]);
+        assert_eq!(out.vectors, 2);
+        assert!(out.wall_ms > 8000.0, "{}", out.wall_ms);
+    }
+
+    #[test]
+    fn trimmed_mean_shrugs_off_a_hostile_gradient() {
+        let mut c = cfg(ReducePolicy::Sync);
+        c.optimizer = OptimizerKind::Sgd;
+        c.aggregation = AggregationMode::TrimmedMean { k: 1 };
+        let mut m = Master::new(c, vec![0.0; 2]);
+        m.register_data(10);
+        for w in 1..=3 {
+            m.worker_join(w);
+        }
+        m.finish_iteration(vec![
+            sub(1, 100.0, vec![1.0, 1.0], 1),
+            sub(2, 100.0, vec![1.0, 1.0], 1),
+            sub(3, 100.0, vec![-1000.0, 1000.0], 1), // hostile outlier
+        ]);
+        // Trimming 1 from each end leaves the honest 1.0 per coordinate;
+        // SGD lr=0.1 steps both params by exactly −0.1.
+        let p = m.params();
+        assert!((p[0] + 0.1).abs() < 1e-6 && (p[1] + 0.1).abs() < 1e-6, "{p:?}");
     }
 }

@@ -43,6 +43,16 @@ impl Payload {
         }
     }
 
+    /// True when every carried value is finite — the master's sanitation
+    /// gate: a NaN/Inf payload is quarantined (strike against the worker)
+    /// instead of poisoning the shared parameters through the reduce.
+    pub fn is_finite(&self) -> bool {
+        match self {
+            Payload::Dense(v) => v.iter().all(|x| x.is_finite()),
+            Payload::Sparse(e) => e.iter().all(|(_, x)| x.is_finite()),
+        }
+    }
+
     /// Build a sparse payload keeping the `keep_fraction` largest-|g|
     /// coordinates ("send the most informative", §5 Communication
     /// Overhead).
@@ -188,6 +198,15 @@ mod tests {
             entries.iter().any(|&(i, v)| i == 1 && v.is_nan()),
             "NaN sorts as largest magnitude: {entries:?}"
         );
+    }
+
+    #[test]
+    fn payload_finiteness_gate() {
+        assert!(Payload::dense(vec![1.0, -2.0]).is_finite());
+        assert!(!Payload::dense(vec![1.0, f32::NAN]).is_finite());
+        assert!(!Payload::dense(vec![f32::INFINITY]).is_finite());
+        assert!(Payload::Sparse(vec![(0, 1.0)]).is_finite());
+        assert!(!Payload::Sparse(vec![(0, 1.0), (3, f32::NEG_INFINITY)]).is_finite());
     }
 
     #[test]

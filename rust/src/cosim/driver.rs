@@ -97,6 +97,11 @@ pub struct CosimDurability {
     /// Fault injection: abort the run (leaving `data_dir` as a crash
     /// would) once project 0 completes this iteration (0 = never).
     pub kill_at: u64,
+    /// With `kill_at`, die *mid-window*: pump the serving tier only
+    /// partway into the final window (between serve pumps, mid-traffic)
+    /// instead of cleanly at the iteration boundary.  Exercises the
+    /// crash surface PR-9's boundary-aligned kill could never reach.
+    pub kill_mid: bool,
 }
 
 /// Outcome of one co-simulation run.
@@ -431,7 +436,36 @@ pub fn run_cosim_durable<'c>(
     // Process boundaries in global time order; each project's
     // publications land at its own boundaries, activations at their
     // transfer-completion instants.
+    let mut pumped_ms = 0.0f64;
     while let Some((i, boundary_ms)) = next_boundary(&boundaries) {
+        let kill_here = durability.is_some_and(|d| {
+            d.kill_at > 0 && i == 0 && sims[i].master().iteration() >= d.kill_at
+        });
+        // Fault injection, mid-window flavor: pump the serving tier only
+        // halfway from the last processed horizon to this boundary, then
+        // die with the window's remaining traffic (and the boundary
+        // itself) unprocessed — the crash lands between serve pumps, not
+        // at the clean iteration edge the boundary-aligned kill hits.
+        if kill_here && durability.is_some_and(|d| d.kill_mid) {
+            let mid = pumped_ms + 0.5 * (boundary_ms - pumped_ms);
+            pump_through(
+                &mut engine,
+                &mut plane,
+                &mut pending,
+                &mut publications,
+                &live_iter,
+                Some(mid),
+                serve_compute,
+                &mut probe,
+                &trace,
+            )?;
+            let iteration = sims[i].master().iteration();
+            bail!(
+                "fault injection: cosim killed mid-window before project 0 iteration \
+                 {iteration} boundary (data dir {} holds the crash state)",
+                durability.expect("kill_mid requires durability").data_dir.display()
+            );
+        }
         pump_through(
             &mut engine,
             &mut plane,
@@ -443,19 +477,18 @@ pub fn run_cosim_durable<'c>(
             &mut probe,
             &trace,
         )?;
+        pumped_ms = boundary_ms;
         boundaries[i] = None;
         let pid = pids[i];
         let iteration = sims[i].master().iteration();
         // Fault injection: die at this boundary exactly as a crash would —
         // checkpoints/WAL syncs through the cadence exist, nothing else.
-        if let Some(d) = durability {
-            if d.kill_at > 0 && i == 0 && iteration >= d.kill_at {
-                bail!(
-                    "fault injection: cosim killed at project 0 iteration {iteration} \
-                     (data dir {} holds the crash state)",
-                    d.data_dir.display()
-                );
-            }
+        if kill_here {
+            bail!(
+                "fault injection: cosim killed at project 0 iteration {iteration} \
+                 (data dir {} holds the crash state)",
+                durability.expect("kill_at requires durability").data_dir.display()
+            );
         }
         let test_error = sims[i].master().timeline().last().and_then(|r| r.test_error);
         if let Some(trigger) = cfg.projects[i].publish.decide(&mut states[i], iteration, test_error)
@@ -916,6 +949,7 @@ mod tests {
             checkpoint_every: 3,
             resume: false,
             kill_at: 4,
+            kill_mid: false,
         };
         let err = run_durable(&config, Some(&killed)).unwrap_err();
         assert!(err.to_string().contains("fault injection"), "{err}");
@@ -928,6 +962,7 @@ mod tests {
             checkpoint_every: 3,
             resume: true,
             kill_at: 0,
+            kill_mid: false,
         };
         let resumed = run_durable(&config, Some(&resume)).unwrap();
         // Recovery cost: one iteration recomputed (checkpoint 3 → tip 4).
@@ -945,6 +980,49 @@ mod tests {
             .iter()
             .all(|p| p.trigger != PublishTrigger::Initial));
         assert_eq!(resumed.publications[0].version.version, 3);
+        assert!(resumed.serve.completed > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mid_window_kill_resumes_bitwise() {
+        // The PR-9 follow-on: the kill must also be able to land *between*
+        // serve pumps inside a window — the serving tier has processed part
+        // of the window's traffic, the boundary publication never happened.
+        // Durable training state is identical to the boundary-aligned crash
+        // (serving progress is not persisted), so resume must still replay
+        // to the uninterrupted trajectory.
+        let dir = durable_dir("kill-mid-resume");
+        let config = cfg(6, 2);
+        let reference = run_durable(&config, None).unwrap();
+
+        let killed = CosimDurability {
+            data_dir: dir.clone(),
+            checkpoint_every: 3,
+            resume: false,
+            kill_at: 4,
+            kill_mid: true,
+        };
+        let err = run_durable(&config, Some(&killed)).unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "{err}");
+        assert!(err.to_string().contains("mid-window"), "{err}");
+
+        let resume = CosimDurability {
+            data_dir: dir.clone(),
+            checkpoint_every: 3,
+            resume: true,
+            kill_at: 0,
+            kill_mid: false,
+        };
+        let resumed = run_durable(&config, Some(&resume)).unwrap();
+        // Same durable crash state as the boundary-aligned kill: one
+        // iteration recomputed (checkpoint 3 → WAL tip 4), bitwise-equal
+        // resumed trajectory.
+        assert_eq!(resumed.replayed, vec![1]);
+        assert_eq!(
+            resumed.train[0].timeline.to_csv(),
+            reference.train[0].timeline.to_csv()
+        );
         assert!(resumed.serve.completed > 0);
         let _ = std::fs::remove_dir_all(&dir);
     }

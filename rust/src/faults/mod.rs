@@ -1,0 +1,451 @@
+//! Fault-injection plane: seeded, virtual-clock-deterministic adversity.
+//!
+//! The paper's defining operating condition — browsers that join, leave,
+//! stall, and misbehave mid-training (§3.2/§3.3b) — is injected here as a
+//! pure function of `(profile, seed, worker, iteration, attempt)`.  A
+//! [`FaultPlan`] keeps *no* mutable state: every decision builds a fresh
+//! [`Pcg32`] on its own stream, so the plan is identical however many
+//! times (or in whatever order) it is consulted — equal seeds produce
+//! byte-identical fault schedules, and checkpoint/replay never drifts.
+//!
+//! Fault taxonomy (all optional, all composable):
+//! * **disconnect storms** — correlated bursts: every `storm_every`
+//!   iterations, a `storm_fraction` slice of the fleet drops for
+//!   `storm_duration` iterations (the same workers stay down for the
+//!   whole burst — decisions are keyed by storm epoch, not iteration).
+//! * **stragglers** — a per-worker slowdown factor scaled by
+//!   [`DeviceClass`] (phones stall harder than workstations).
+//! * **upload drop / duplicate** — a submission vanishes in flight (the
+//!   client retries with seeded-jitter backoff until its deadline) or
+//!   arrives twice (the master must deduplicate).
+//! * **hostile gradients** — an `adversary_fraction` slice of the fleet
+//!   corrupts every upload: `NaN | Inf | scaled:<k> | sign-flip`
+//!   ([`CorruptionMode`]).  Non-finite modes are caught by master-side
+//!   quarantine; finite ones only by robust aggregation
+//!   (`params::AggregationMode`).
+
+use crate::client::DeviceClass;
+use crate::rng::Pcg32;
+
+const SALT_ADVERSARY: u64 = 0xFA01;
+const SALT_STRAGGLER: u64 = 0xFA02;
+const SALT_STORM: u64 = 0xFA03;
+const SALT_DROP: u64 = 0xFA04;
+const SALT_DUP: u64 = 0xFA05;
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// How a hostile client mangles its gradient before upload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CorruptionMode {
+    /// Every coordinate becomes NaN (diverged or malicious worker).
+    NaN,
+    /// Every coordinate becomes +∞.
+    Inf,
+    /// Gradient multiplied by a constant (e.g. `scaled:-8` — a finite,
+    /// quarantine-proof attack that only robust aggregation survives).
+    Scaled(f32),
+    /// Gradient negated: the classic sign-flip poisoning attack.
+    SignFlip,
+}
+
+impl CorruptionMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "nan" {
+            Ok(CorruptionMode::NaN)
+        } else if s == "inf" {
+            Ok(CorruptionMode::Inf)
+        } else if s == "sign-flip" {
+            Ok(CorruptionMode::SignFlip)
+        } else if let Some(k) = s.strip_prefix("scaled:") {
+            let k: f32 = k.parse().map_err(|_| format!("bad scale '{k}'"))?;
+            if !k.is_finite() {
+                return Err(format!("scale {k} must be finite"));
+            }
+            Ok(CorruptionMode::Scaled(k))
+        } else {
+            Err(format!(
+                "unknown corruption '{s}' (nan|inf|scaled:<k>|sign-flip)"
+            ))
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CorruptionMode::NaN => "nan".into(),
+            CorruptionMode::Inf => "inf".into(),
+            CorruptionMode::Scaled(k) => format!("scaled:{k}"),
+            CorruptionMode::SignFlip => "sign-flip".into(),
+        }
+    }
+}
+
+/// Declarative fault configuration; compiled against a seed into a
+/// [`FaultPlan`].  `FaultProfile::none()` (the default) injects nothing
+/// and leaves every existing run bitwise-unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultProfile {
+    /// Fraction of the fleet that uploads corrupted gradients.
+    pub adversary_fraction: f64,
+    /// What the adversaries upload.
+    pub corruption: CorruptionMode,
+    /// Per-attempt probability that an upload is lost in flight.
+    pub drop_prob: f64,
+    /// Probability that a delivered upload arrives twice.
+    pub duplicate_prob: f64,
+    /// Disconnect-storm cadence in iterations (0 = no storms).
+    pub storm_every: u64,
+    /// Storm length in iterations.
+    pub storm_duration: u64,
+    /// Fraction of the fleet taken down by each storm.
+    pub storm_fraction: f64,
+    /// Fraction of the fleet that runs slow.
+    pub straggler_fraction: f64,
+    /// Base compute-slowdown factor for stragglers (scaled per device
+    /// class — see [`FaultPlan::slowdown_for`]).
+    pub slowdown: f64,
+    /// The spec string this profile was parsed from (for display).
+    spec: String,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile::none()
+    }
+}
+
+impl FaultProfile {
+    /// The inert profile: nothing is injected, every decision is `false`.
+    pub fn none() -> Self {
+        FaultProfile {
+            adversary_fraction: 0.0,
+            corruption: CorruptionMode::SignFlip,
+            drop_prob: 0.0,
+            duplicate_prob: 0.0,
+            storm_every: 0,
+            storm_duration: 0,
+            storm_fraction: 0.0,
+            straggler_fraction: 0.0,
+            slowdown: 1.0,
+            spec: "none".into(),
+        }
+    }
+
+    /// Parse a profile spec:
+    /// * `none` — inert
+    /// * `flaky` — drops, duplicates, stragglers (an unreliable but
+    ///   honest volunteer fleet)
+    /// * `storm` — flaky plus correlated disconnect storms
+    /// * `hostile:<frac>[:<mode>]` — an adversary fraction uploading
+    ///   corrupted gradients (mode defaults to `sign-flip`; `scaled:-8`
+    ///   style modes keep their own `:`)
+    /// * `mixed:<frac>` — storms + flakiness + hostile fraction
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let flaky = || FaultProfile {
+            drop_prob: 0.15,
+            duplicate_prob: 0.05,
+            straggler_fraction: 0.2,
+            slowdown: 3.0,
+            spec: s.to_string(),
+            ..FaultProfile::none()
+        };
+        if s == "none" {
+            Ok(FaultProfile::none())
+        } else if s == "flaky" {
+            Ok(flaky())
+        } else if s == "storm" {
+            Ok(FaultProfile {
+                storm_every: 8,
+                storm_duration: 2,
+                storm_fraction: 0.5,
+                ..flaky()
+            })
+        } else if let Some(rest) = s.strip_prefix("hostile:") {
+            let (frac, mode) = match rest.split_once(':') {
+                Some((f, m)) => (f, CorruptionMode::parse(m)?),
+                None => (rest, CorruptionMode::SignFlip),
+            };
+            Ok(FaultProfile {
+                adversary_fraction: parse_fraction(frac)?,
+                corruption: mode,
+                spec: s.to_string(),
+                ..FaultProfile::none()
+            })
+        } else if let Some(frac) = s.strip_prefix("mixed:") {
+            Ok(FaultProfile {
+                adversary_fraction: parse_fraction(frac)?,
+                storm_every: 8,
+                storm_duration: 2,
+                storm_fraction: 0.5,
+                ..flaky()
+            })
+        } else {
+            Err(format!(
+                "unknown fault profile '{s}' \
+                 (none|flaky|storm|hostile:<f>[:<mode>]|mixed:<f>)"
+            ))
+        }
+    }
+
+    /// The spec string this profile was parsed from.
+    pub fn name(&self) -> &str {
+        &self.spec
+    }
+
+    /// True when any fault class can fire.
+    pub fn is_active(&self) -> bool {
+        self.adversary_fraction > 0.0
+            || self.drop_prob > 0.0
+            || self.duplicate_prob > 0.0
+            || self.storm_every > 0
+            || self.straggler_fraction > 0.0
+    }
+}
+
+fn parse_fraction(s: &str) -> Result<f64, String> {
+    let f: f64 = s.parse().map_err(|_| format!("bad fraction '{s}'"))?;
+    if !(0.0..=1.0).contains(&f) {
+        return Err(format!("fraction {f} out of [0, 1]"));
+    }
+    Ok(f)
+}
+
+/// A profile compiled against a seed: the complete, stateless fault
+/// schedule.  Every decision derives a fresh generator from
+/// `(seed, salt, worker, key)` — consulting the plan never mutates it,
+/// so injection sites can be added or reordered without shifting any
+/// other decision (the property the equal-seed digest test pins).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    profile: FaultProfile,
+    seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(profile: FaultProfile, seed: u64) -> Self {
+        FaultPlan { profile, seed }
+    }
+
+    pub fn profile(&self) -> &FaultProfile {
+        &self.profile
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.profile.is_active()
+    }
+
+    /// One decision generator, keyed by salt (fault class) and `(a, b)`
+    /// (worker / epoch / attempt).  One `gen_bool` per decision.
+    fn decision(&self, salt: u64, a: u64, b: u64) -> Pcg32 {
+        Pcg32::with_stream(self.seed ^ salt, a.wrapping_mul(GOLDEN) ^ b)
+    }
+
+    /// Is this worker hostile for the whole run?
+    pub fn is_adversary(&self, worker: u64) -> bool {
+        self.profile.adversary_fraction > 0.0
+            && self
+                .decision(SALT_ADVERSARY, worker, 0)
+                .gen_bool(self.profile.adversary_fraction)
+    }
+
+    /// Is this worker a straggler for the whole run?
+    pub fn is_straggler(&self, worker: u64) -> bool {
+        self.profile.straggler_fraction > 0.0
+            && self
+                .decision(SALT_STRAGGLER, worker, 0)
+                .gen_bool(self.profile.straggler_fraction)
+    }
+
+    /// Compute-slowdown factor for a straggler of this device class
+    /// (1.0 for non-stragglers).  Weaker devices stall harder: a phone
+    /// in a background tab degrades worse than a workstation.
+    pub fn slowdown_for(&self, class: DeviceClass, worker: u64) -> f64 {
+        if !self.is_straggler(worker) {
+            return 1.0;
+        }
+        let class_factor = match class {
+            DeviceClass::Workstation => 1.0,
+            DeviceClass::Desktop => 1.2,
+            DeviceClass::Laptop => 1.5,
+            DeviceClass::Mobile => 2.5,
+        };
+        (self.profile.slowdown * class_factor).max(1.0)
+    }
+
+    /// Is a disconnect storm in progress at this iteration?  The first
+    /// epoch (iterations `0..storm_every`) is always clean so runs start
+    /// from a healthy fleet.
+    pub fn storm_active(&self, iteration: u64) -> bool {
+        let every = self.profile.storm_every;
+        every > 0 && iteration >= every && iteration % every < self.profile.storm_duration
+    }
+
+    /// Is this worker disconnected at this iteration?  Keyed by storm
+    /// *epoch*, not iteration: the same workers stay down for the whole
+    /// burst — a correlated storm, not independent coin flips per tick.
+    pub fn disconnected(&self, worker: u64, iteration: u64) -> bool {
+        self.storm_active(iteration)
+            && self
+                .decision(SALT_STORM, worker, iteration / self.profile.storm_every)
+                .gen_bool(self.profile.storm_fraction)
+    }
+
+    /// Is this upload attempt lost in flight?
+    pub fn upload_dropped(&self, worker: u64, iteration: u64, attempt: u32) -> bool {
+        self.profile.drop_prob > 0.0
+            && self
+                .decision(
+                    SALT_DROP,
+                    worker,
+                    iteration.wrapping_mul(GOLDEN) ^ attempt as u64,
+                )
+                .gen_bool(self.profile.drop_prob)
+    }
+
+    /// Does this delivered upload arrive twice?
+    pub fn duplicated(&self, worker: u64, iteration: u64) -> bool {
+        self.profile.duplicate_prob > 0.0
+            && self
+                .decision(SALT_DUP, worker, iteration)
+                .gen_bool(self.profile.duplicate_prob)
+    }
+
+    /// Corrupt a gradient in place if this worker is an adversary.
+    /// Returns whether corruption was applied.
+    pub fn corrupt(&self, grad: &mut [f32], worker: u64) -> bool {
+        if !self.is_adversary(worker) {
+            return false;
+        }
+        match self.profile.corruption {
+            CorruptionMode::NaN => grad.fill(f32::NAN),
+            CorruptionMode::Inf => grad.fill(f32::INFINITY),
+            CorruptionMode::Scaled(k) => grad.iter_mut().for_each(|g| *g *= k),
+            CorruptionMode::SignFlip => grad.iter_mut().for_each(|g| *g = -*g),
+        }
+        true
+    }
+
+    /// FNV-1a digest over every decision the plan would make for
+    /// `workers × iterations` — the equal-seed determinism witness
+    /// (equal seeds ⇒ equal digests; the plan itself is the schedule).
+    pub fn digest(&self, workers: &[u64], iterations: u64) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |bit: bool| {
+            h = (h ^ bit as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for &w in workers {
+            mix(self.is_adversary(w));
+            mix(self.is_straggler(w));
+            for it in 0..iterations {
+                mix(self.disconnected(w, it));
+                mix(self.upload_dropped(w, it, 0));
+                mix(self.duplicated(w, it));
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_parse_round_trips() {
+        for spec in ["none", "flaky", "storm", "hostile:0.3", "mixed:0.2"] {
+            let p = FaultProfile::parse(spec).unwrap();
+            assert_eq!(p.name(), spec);
+        }
+        let p = FaultProfile::parse("hostile:0.3:scaled:-8").unwrap();
+        assert_eq!(p.adversary_fraction, 0.3);
+        assert_eq!(p.corruption, CorruptionMode::Scaled(-8.0));
+        let p = FaultProfile::parse("hostile:0.5:nan").unwrap();
+        assert_eq!(p.corruption, CorruptionMode::NaN);
+        assert!(FaultProfile::parse("hostile:1.5").is_err());
+        assert!(FaultProfile::parse("hostile:0.3:wat").is_err());
+        assert!(FaultProfile::parse("wat").is_err());
+    }
+
+    #[test]
+    fn none_profile_is_inert() {
+        let plan = FaultPlan::new(FaultProfile::none(), 7);
+        assert!(!plan.is_active());
+        for w in 0..32 {
+            assert!(!plan.is_adversary(w));
+            assert!(!plan.is_straggler(w));
+            assert_eq!(plan.slowdown_for(DeviceClass::Mobile, w), 1.0);
+            for it in 0..16 {
+                assert!(!plan.disconnected(w, it));
+                assert!(!plan.upload_dropped(w, it, 0));
+                assert!(!plan.duplicated(w, it));
+            }
+            let mut g = vec![1.0f32; 4];
+            assert!(!plan.corrupt(&mut g, w));
+            assert_eq!(g, vec![1.0; 4]);
+        }
+    }
+
+    #[test]
+    fn equal_seed_equal_plan_digest() {
+        let workers: Vec<u64> = (1..=12).collect();
+        let mk = |seed| FaultPlan::new(FaultProfile::parse("mixed:0.3").unwrap(), seed);
+        assert_eq!(mk(5).digest(&workers, 40), mk(5).digest(&workers, 40));
+        assert_ne!(mk(5).digest(&workers, 40), mk(6).digest(&workers, 40));
+    }
+
+    #[test]
+    fn decisions_are_stateless_and_order_free() {
+        let plan = FaultPlan::new(FaultProfile::parse("mixed:0.3").unwrap(), 11);
+        let a = plan.upload_dropped(3, 9, 0);
+        // Interleave unrelated queries; the original answer must not move.
+        for w in 0..20 {
+            plan.is_adversary(w);
+            plan.duplicated(w, 5);
+        }
+        assert_eq!(plan.upload_dropped(3, 9, 0), a);
+    }
+
+    #[test]
+    fn storms_are_correlated_bursts() {
+        let plan = FaultPlan::new(FaultProfile::parse("storm").unwrap(), 3);
+        // First epoch is clean.
+        for it in 0..8 {
+            assert!(!plan.storm_active(it), "iteration {it}");
+        }
+        // Inside one storm window a worker's fate is constant.
+        for w in 0..16u64 {
+            assert_eq!(plan.disconnected(w, 8), plan.disconnected(w, 9));
+        }
+        // Some worker is down in some storm (fraction 0.5, 16 workers).
+        assert!((0..16u64).any(|w| plan.disconnected(w, 8) || plan.disconnected(w, 16)));
+        // Storm windows end.
+        assert!(!plan.storm_active(10));
+    }
+
+    #[test]
+    fn adversary_fraction_selects_a_minority_not_everyone() {
+        let plan = FaultPlan::new(FaultProfile::parse("hostile:0.3").unwrap(), 1);
+        let adv: Vec<u64> = (1..=10).filter(|&w| plan.is_adversary(w)).collect();
+        // Pinned for seed 1: the convergence-under-attack test (10
+        // workstations, fraction 0.3) relies on exactly these three.
+        assert_eq!(adv, vec![1, 6, 7]);
+    }
+
+    #[test]
+    fn corruption_modes_apply() {
+        let base = vec![1.0f32, -2.0, 0.5];
+        let mut profile = FaultProfile::parse("hostile:1.0:nan").unwrap();
+        let check = |profile: &FaultProfile, want: &dyn Fn(&[f32]) -> bool| {
+            let plan = FaultPlan::new(profile.clone(), 2);
+            let mut g = base.clone();
+            assert!(plan.corrupt(&mut g, 4));
+            assert!(want(&g), "{:?} -> {g:?}", profile.corruption);
+        };
+        check(&profile, &|g| g.iter().all(|x| x.is_nan()));
+        profile.corruption = CorruptionMode::Inf;
+        check(&profile, &|g| g.iter().all(|x| *x == f32::INFINITY));
+        profile.corruption = CorruptionMode::Scaled(-8.0);
+        check(&profile, &|g| g == [-8.0, 16.0, -4.0]);
+        profile.corruption = CorruptionMode::SignFlip;
+        check(&profile, &|g| g == [-1.0, 2.0, -0.5]);
+    }
+}

@@ -36,6 +36,8 @@
 //!   co-simulation), [`storage`] (durable state plane: iteration WAL,
 //!   checkpoint/replay recovery, persistent snapshot registry), plus the
 //!   from-scratch substrates
+//!   [`faults`] (seeded fault-injection plane: disconnect storms,
+//!   stragglers, upload loss, hostile gradients),
 //!   [`json`], [`rng`], [`netsim`], [`metrics`], [`trace`] (virtual-clock
 //!   span tracer with Perfetto export), [`cli`], [`bench`], [`testing`],
 //!   and [`analysis`] (the `mlitb lint` determinism analyzer that keeps
@@ -49,6 +51,7 @@ pub mod client;
 pub mod coordinator;
 pub mod cosim;
 pub mod data;
+pub mod faults;
 pub mod json;
 pub mod metrics;
 pub mod model;

@@ -24,9 +24,10 @@ use mlitb::coordinator::ReducePolicy;
 use mlitb::cosim::{
     run_cosim_durable, CosimConfig, CosimDurability, CosimProject, PublicationPolicy,
 };
+use mlitb::faults::FaultProfile;
 use mlitb::model::{init_params, Manifest, ModelSpec, ResearchClosure};
 use mlitb::netsim::{LinkProfile, ReduceMode};
-use mlitb::params::OptimizerKind;
+use mlitb::params::{AggregationMode, OptimizerKind};
 use mlitb::runtime::{Compute, DriftingCompute, Engine, ModeledCompute};
 use mlitb::serve::{
     demo_spec, BatchPolicy, ClientSpec, ControlPlane, FleetConfig, ProjectId, RouterConfig,
@@ -76,6 +77,9 @@ fn print_help() {
                   --merge-ns F --fanin-ns F  (reduce calibration overrides)\n\
                   --data-dir <dir> --checkpoint-every N --resume\n\
                   --kill-at N  (durable WAL+checkpoints; fault injection)\n\
+                  --fault-profile none|flaky|storm|hostile:<f>[:<mode>]|mixed:<f>\n\
+                  (mode: nan|inf|scaled:<k>|sign-flip — seeded adversity)\n\
+                  --aggregation mean|trimmed:<k>|median|clip:<c> --quorum F\n\
                   --trace <path>  (Perfetto trace-event JSON + <path>.csv)\n\
                   --report  (print flame/critical-path rollup after the run)\n\
                   --trace-capacity N  (trace ring size in events)\n\
@@ -97,6 +101,8 @@ fn print_help() {
                   --link <profile> --shards N --router rr|jsq|affinity --batch N\n\
                   --queue-depth N --cache N --input-pool N --seed N --csv <path>\n\
                   --data-dir <dir> --checkpoint-every N --resume --kill-at N\n\
+                  --kill-mid  (with --kill-at: die mid-window, between pumps)\n\
+                  --fault-profile <p> --aggregation <m> --quorum F  (as train)\n\
                   --trace <path>  (spans from all three planes on one timeline)\n\
                   --report --trace-capacity N\n\
          trace-report: <trace.json.csv> [--json <path>]  (flame rollup,\n\
@@ -193,6 +199,10 @@ fn build_sim_config(args: &Args, spec: &mlitb::model::ModelSpec) -> Result<SimCo
         args.get_f64("merge-ns", cfg.master.master_model.merge_ns_per_param)?;
     cfg.master.master_model.fanin_ns_per_shard =
         args.get_f64("fanin-ns", cfg.master.master_model.fanin_ns_per_shard)?;
+    // Robustness plane: seeded adversity and the defenses against it.
+    cfg.faults = FaultProfile::parse(args.get_or("fault-profile", "none"))?;
+    cfg.master.aggregation = AggregationMode::parse(args.get_or("aggregation", "mean"))?;
+    cfg.master.quorum = args.get_f64("quorum", 0.0)?;
     let device = DeviceClass::parse(args.get_or("device", "workstation"))?;
     cfg.fleet = vec![device; nodes];
     Ok(cfg)
@@ -688,6 +698,9 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
     train.seed = seed;
     train.master.iter_duration_s = args.get_f64("t-secs", 4.0)?;
     train.master.capacity = args.get_usize("capacity", 3000)?;
+    train.faults = FaultProfile::parse(args.get_or("fault-profile", "none"))?;
+    train.master.aggregation = AggregationMode::parse(args.get_or("aggregation", "mean"))?;
+    train.master.quorum = args.get_f64("quorum", 0.0)?;
 
     let clients = args.get_usize("clients", 8)?;
     let rate = args.get_f64("rate", 4.0)?;
@@ -806,6 +819,7 @@ fn cmd_cosim(args: &Args) -> Result<(), String> {
         checkpoint_every,
         resume: args.flag("resume"),
         kill_at,
+        kill_mid: args.flag("kill-mid"),
     });
     let report = run_cosim_durable(
         &cfg,

@@ -102,6 +102,15 @@ impl LinkModel {
         self.base_ms
     }
 
+    /// Backoff before retry `attempt + 1` after a dropped upload (ms):
+    /// binary exponential in the link's base latency, capped at 2⁶, with
+    /// seeded ±50% jitter so a correlated storm's retries desynchronize
+    /// deterministically.
+    pub fn retry_backoff_ms(&self, attempt: u32, rng: &mut Pcg32) -> f64 {
+        let exp = (1u64 << attempt.min(6)) as f64;
+        self.base_ms * exp * (0.5 + rng.gen_f64())
+    }
+
     /// Link bandwidth (bytes/ms) — sizing the background-download budget.
     pub fn bandwidth_bytes_per_ms(&self) -> f64 {
         self.bandwidth_bytes_per_ms
@@ -318,6 +327,27 @@ mod tests {
         let t1 = link.transmit_ms(1_048_600); // ~1 MB at 1 MB/s ≈ 1000 ms
         assert!((t1 - 1000.0).abs() < 50.0, "{t1}");
         assert_eq!(link.transmit_ms(0), 0.0);
+    }
+
+    #[test]
+    fn retry_backoff_grows_exponentially_then_caps() {
+        let link = LinkModel::from_base(LinkProfile::Wifi, 10.0);
+        let mut rng = Pcg32::new(9);
+        for attempt in 0..12 {
+            let b = link.retry_backoff_ms(attempt, &mut rng);
+            let exp = (1u64 << attempt.min(6)) as f64;
+            assert!(
+                b >= 10.0 * exp * 0.5 && b < 10.0 * exp * 1.5,
+                "attempt {attempt}: {b}"
+            );
+        }
+        // Deterministic given equal rng state.
+        let mut a = Pcg32::new(3);
+        let mut b = Pcg32::new(3);
+        assert_eq!(
+            link.retry_backoff_ms(2, &mut a).to_bits(),
+            link.retry_backoff_ms(2, &mut b).to_bits()
+        );
     }
 
     #[test]

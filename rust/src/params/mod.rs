@@ -11,10 +11,12 @@
 //! see DESIGN.md's reduce-layer section.
 
 mod optimizer;
+mod robust;
 mod sharded;
 mod vecmath;
 
 pub use optimizer::{AdaGrad, Momentum, Optimizer, OptimizerKind, RmsProp, Sgd};
+pub use robust::{AggregationMode, RobustCombiner};
 pub use sharded::{GradView, ShardedAccumulator};
 pub use vecmath::{add_assign, axpy, dot, l2_norm, scale, scaled_copy, GradAccumulator};
 

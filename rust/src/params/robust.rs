@@ -1,0 +1,352 @@
+//! Robust aggregation modes: surviving hostile gradients at the reduce.
+//!
+//! The paper's master computes a weighted average of worker gradients
+//! (§3.6) — one adversarial submission steers the shared parameters
+//! arbitrarily.  [`AggregationMode`] adds the standard byzantine-tolerant
+//! estimators over the *same* shard arena as the mean reduce:
+//!
+//! * **`Mean`** — the paper baseline.  At the master this stays on the
+//!   untouched `ShardedAccumulator::merge` path (bitwise-pinned since
+//!   PR 5); the combiner here implements the equivalent weighted mean
+//!   only so the serial-vs-sharded property tests can cover one shape.
+//! * **`TrimmedMean(k)`** — per coordinate, drop the `k` smallest and
+//!   `k` largest worker values and average the rest (unweighted over
+//!   contributors; tolerant to `k` arbitrary outliers per side).  `k` is
+//!   clamped to `(W − 1) / 2` so at least one value always survives.
+//! * **`CoordinateMedian`** — per coordinate, the median worker value
+//!   (even counts average the two middle values).
+//! * **`ClipByNorm(c)`** — each worker's mean gradient is scaled down to
+//!   L2 norm ≤ `c`, then example-weight averaged: bounds any single
+//!   worker's pull without discarding honest mass.
+//!
+//! **Determinism.**  Per-coordinate combination reads worker values in
+//! batch order, sorts them with `total_cmp`, and reduces in sorted order
+//! — a fixed f32 operation sequence per coordinate, independent of the
+//! shard that computes it.  `ShardedAccumulator::robust_aggregate_into`
+//! is therefore bitwise-identical to the serial reference for any shard
+//! count, pinned by `tests/prop_reduce.rs` alongside the mean reduce.
+
+use super::sharded::GradView;
+
+/// How one iteration's worker gradients combine into the step gradient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggregationMode {
+    /// Example-weighted mean (the paper's reduce; no robustness).
+    Mean,
+    /// Per-coordinate trimmed mean dropping `k` values per side.
+    TrimmedMean { k: usize },
+    /// Per-coordinate median.
+    CoordinateMedian,
+    /// Per-worker L2 clip to `max_norm`, then weighted mean.
+    ClipByNorm { max_norm: f32 },
+}
+
+impl AggregationMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "mean" {
+            Ok(AggregationMode::Mean)
+        } else if s == "median" {
+            Ok(AggregationMode::CoordinateMedian)
+        } else if let Some(k) = s.strip_prefix("trimmed:") {
+            let k: usize = k.parse().map_err(|_| format!("bad trim count '{k}'"))?;
+            Ok(AggregationMode::TrimmedMean { k })
+        } else if let Some(c) = s.strip_prefix("clip:") {
+            let c: f32 = c.parse().map_err(|_| format!("bad clip norm '{c}'"))?;
+            if !(c.is_finite() && c > 0.0) {
+                return Err(format!("clip norm {c} must be finite and positive"));
+            }
+            Ok(AggregationMode::ClipByNorm { max_norm: c })
+        } else {
+            Err(format!(
+                "unknown aggregation '{s}' (mean|trimmed:<k>|median|clip:<c>)"
+            ))
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AggregationMode::Mean => "mean".into(),
+            AggregationMode::TrimmedMean { k } => format!("trimmed:{k}"),
+            AggregationMode::CoordinateMedian => "median".into(),
+            AggregationMode::ClipByNorm { max_norm } => format!("clip:{max_norm}"),
+        }
+    }
+
+    /// True for the modes that need the per-row combiner (everything but
+    /// the accumulator-path mean).
+    pub fn is_robust(&self) -> bool {
+        !matches!(self, AggregationMode::Mean)
+    }
+}
+
+/// One iteration's robust combiner: per-row state that must be computed
+/// over *full* rows before per-shard combination can start (the clip
+/// factors — a row's L2 norm spans every shard).  Rows with zero
+/// examples carry no mean gradient and are skipped everywhere.
+pub struct RobustCombiner {
+    mode: AggregationMode,
+    /// For `ClipByNorm`: `(per-valid-row weight, Σ example weights)`,
+    /// aligned with the valid-row order `combine_range` walks.
+    clip: Option<(Vec<f32>, f32)>,
+}
+
+impl RobustCombiner {
+    /// Build the combiner; for `ClipByNorm` this walks every row once
+    /// serially (row norms are global across shards, so they cannot be
+    /// computed inside the per-shard pass).
+    pub fn new(mode: AggregationMode, batch: &[(GradView<'_>, u64)]) -> Self {
+        let clip = match mode {
+            AggregationMode::ClipByNorm { max_norm } => {
+                let mut factors = Vec::new();
+                let mut denom = 0.0f32;
+                for &(view, examples) in batch {
+                    if examples == 0 {
+                        continue;
+                    }
+                    let inv = 1.0 / examples as f32;
+                    // Σ mean² in coordinate order — sparse rows only
+                    // carry their stored coordinates (zeros add nothing).
+                    let norm_sq: f32 = match view {
+                        GradView::Dense(g) => {
+                            g.iter().map(|&v| (v * inv) * (v * inv)).sum()
+                        }
+                        GradView::Sparse(entries) => {
+                            entries.iter().map(|&(_, v)| (v * inv) * (v * inv)).sum()
+                        }
+                    };
+                    let norm = norm_sq.sqrt();
+                    let scale = if norm > max_norm { max_norm / norm } else { 1.0 };
+                    factors.push(examples as f32 * scale);
+                    denom += examples as f32;
+                }
+                Some((factors, denom))
+            }
+            _ => None,
+        };
+        RobustCombiner { mode, clip }
+    }
+
+    /// Combine the batch over parameter range `[lo, lo + out.len())`,
+    /// writing the step gradient into `out`.  Safe to call concurrently
+    /// for disjoint ranges (`&self`; no interior mutability).
+    pub fn combine_range(&self, batch: &[(GradView<'_>, u64)], lo: usize, out: &mut [f32]) {
+        let cols = out.len();
+        if cols == 0 {
+            return;
+        }
+        // Materialize each valid row's mean gradient over this range —
+        // rows × cols dense matrix, filled in batch order.
+        let mut rows: Vec<f32> = Vec::new();
+        let mut n_rows = 0usize;
+        for &(view, examples) in batch {
+            if examples == 0 {
+                continue;
+            }
+            let inv = 1.0 / examples as f32;
+            let base = rows.len();
+            rows.resize(base + cols, 0.0);
+            let row = &mut rows[base..];
+            match view {
+                GradView::Dense(g) => {
+                    for (j, slot) in row.iter_mut().enumerate() {
+                        *slot = g[lo + j] * inv;
+                    }
+                }
+                GradView::Sparse(entries) => {
+                    let hi = lo + cols;
+                    let a = entries.partition_point(|&(i, _)| (i as usize) < lo);
+                    let b = entries.partition_point(|&(i, _)| (i as usize) < hi);
+                    for &(i, v) in &entries[a..b] {
+                        row[i as usize - lo] = v * inv;
+                    }
+                }
+            }
+            n_rows += 1;
+        }
+        if n_rows == 0 {
+            out.fill(0.0);
+            return;
+        }
+
+        let mut col: Vec<f32> = Vec::with_capacity(n_rows);
+        for (j, slot) in out.iter_mut().enumerate() {
+            col.clear();
+            col.extend((0..n_rows).map(|r| rows[r * cols + j]));
+            *slot = match self.mode {
+                AggregationMode::Mean => {
+                    // Weighted mean over valid rows (test reference only;
+                    // the master's Mean path is the accumulator).
+                    let mut num = 0.0f32;
+                    let mut den = 0.0f32;
+                    let mut r = 0;
+                    for &(_, examples) in batch {
+                        if examples == 0 {
+                            continue;
+                        }
+                        num += col[r] * examples as f32;
+                        den += examples as f32;
+                        r += 1;
+                    }
+                    num / den
+                }
+                AggregationMode::TrimmedMean { k } => {
+                    col.sort_unstable_by(f32::total_cmp);
+                    let k_eff = k.min((n_rows - 1) / 2);
+                    let kept = &col[k_eff..n_rows - k_eff];
+                    kept.iter().sum::<f32>() / kept.len() as f32
+                }
+                AggregationMode::CoordinateMedian => {
+                    col.sort_unstable_by(f32::total_cmp);
+                    let mid = n_rows / 2;
+                    if n_rows % 2 == 1 {
+                        col[mid]
+                    } else {
+                        0.5 * (col[mid - 1] + col[mid])
+                    }
+                }
+                AggregationMode::ClipByNorm { .. } => {
+                    let (factors, denom) =
+                        self.clip.as_ref().expect("clip weights precomputed");
+                    let mut num = 0.0f32;
+                    for (r, &w) in factors.iter().enumerate() {
+                        num += col[r] * w;
+                    }
+                    num / denom
+                }
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn combine(mode: AggregationMode, batch: &[(GradView<'_>, u64)], dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0; dim];
+        RobustCombiner::new(mode, batch).combine_range(batch, 0, &mut out);
+        out
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["mean", "trimmed:3", "median", "clip:5"] {
+            assert_eq!(AggregationMode::parse(s).unwrap().name(), s);
+        }
+        assert!(AggregationMode::parse("clip:0").is_err());
+        assert!(AggregationMode::parse("clip:-1").is_err());
+        assert!(AggregationMode::parse("trimmed:x").is_err());
+        assert!(AggregationMode::parse("wat").is_err());
+    }
+
+    #[test]
+    fn trimmed_mean_discards_outliers() {
+        // Five workers, one hostile (×100): trim 1 per side recovers the
+        // honest value exactly (honest rows are identical).
+        let honest = vec![1.0f32, -2.0];
+        let hostile = vec![100.0f32, -200.0];
+        let batch: Vec<(GradView<'_>, u64)> = vec![
+            (GradView::Dense(&honest), 1),
+            (GradView::Dense(&honest), 1),
+            (GradView::Dense(&hostile), 1),
+            (GradView::Dense(&honest), 1),
+            (GradView::Dense(&honest), 1),
+        ];
+        let out = combine(AggregationMode::TrimmedMean { k: 1 }, &batch, 2);
+        assert_eq!(out, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn trim_clamps_so_a_value_survives() {
+        let g = vec![3.0f32];
+        let batch: Vec<(GradView<'_>, u64)> = vec![(GradView::Dense(&g), 1)];
+        // k=5 over one row: k_eff = 0, result is the row itself.
+        assert_eq!(combine(AggregationMode::TrimmedMean { k: 5 }, &batch, 1), vec![3.0]);
+    }
+
+    #[test]
+    fn median_odd_and_even() {
+        let rows = [vec![1.0f32], vec![5.0f32], vec![9.0f32], vec![100.0f32]];
+        let odd: Vec<(GradView<'_>, u64)> =
+            rows[..3].iter().map(|r| (GradView::Dense(r.as_slice()), 1)).collect();
+        assert_eq!(combine(AggregationMode::CoordinateMedian, &odd, 1), vec![5.0]);
+        let even: Vec<(GradView<'_>, u64)> =
+            rows.iter().map(|r| (GradView::Dense(r.as_slice()), 1)).collect();
+        assert_eq!(combine(AggregationMode::CoordinateMedian, &even, 1), vec![7.0]);
+    }
+
+    #[test]
+    fn clip_bounds_a_hostile_worker_and_passes_honest_mass() {
+        // Honest row has norm 1 (< c): untouched.  Hostile row norm 100:
+        // scaled to norm 2.  Weighted mean with equal examples.
+        let honest = vec![1.0f32, 0.0];
+        let hostile = vec![100.0f32, 0.0];
+        let batch: Vec<(GradView<'_>, u64)> =
+            vec![(GradView::Dense(&honest), 1), (GradView::Dense(&hostile), 1)];
+        let out = combine(AggregationMode::ClipByNorm { max_norm: 2.0 }, &batch, 2);
+        assert_eq!(out, vec![(1.0 + 2.0) / 2.0, 0.0]);
+    }
+
+    #[test]
+    fn clip_without_outliers_equals_weighted_mean() {
+        let a = vec![0.5f32, -0.25];
+        let b = vec![0.1f32, 0.3];
+        let batch: Vec<(GradView<'_>, u64)> =
+            vec![(GradView::Dense(&a), 3), (GradView::Dense(&b), 1)];
+        let clipped = combine(AggregationMode::ClipByNorm { max_norm: 1e6 }, &batch, 2);
+        let mean = combine(AggregationMode::Mean, &batch, 2);
+        assert_eq!(clipped, mean);
+    }
+
+    #[test]
+    fn sparse_rows_contribute_zeros_off_support() {
+        let dense = vec![4.0f32, 4.0, 4.0];
+        let sparse: Vec<(u32, f32)> = vec![(1, 8.0)];
+        let batch: Vec<(GradView<'_>, u64)> = vec![
+            (GradView::Dense(&dense), 2),
+            (GradView::Sparse(&sparse), 2),
+            (GradView::Dense(&dense), 2),
+        ];
+        // Medians per coordinate: [2, 2, 2] vs sparse row [0, 4, 0].
+        assert_eq!(combine(AggregationMode::CoordinateMedian, &batch, 3), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn zero_example_rows_are_skipped() {
+        let g = vec![1.0f32];
+        let junk = vec![999.0f32];
+        let batch: Vec<(GradView<'_>, u64)> =
+            vec![(GradView::Dense(&g), 2), (GradView::Dense(&junk), 0)];
+        assert_eq!(combine(AggregationMode::CoordinateMedian, &batch, 1), vec![0.5]);
+        let empty: Vec<(GradView<'_>, u64)> = vec![(GradView::Dense(&junk), 0)];
+        assert_eq!(combine(AggregationMode::CoordinateMedian, &empty, 1), vec![0.0]);
+    }
+
+    #[test]
+    fn range_combination_is_independent_of_split() {
+        // Combining [0,5) in one call equals combining [0,2)+[2,5).
+        let a: Vec<f32> = (0..5).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let b: Vec<f32> = (0..5).map(|i| (i as f32).cos()).collect();
+        let c: Vec<f32> = (0..5).map(|i| -(i as f32) * 0.7).collect();
+        let batch: Vec<(GradView<'_>, u64)> = vec![
+            (GradView::Dense(&a), 2),
+            (GradView::Dense(&b), 3),
+            (GradView::Dense(&c), 1),
+        ];
+        for mode in [
+            AggregationMode::TrimmedMean { k: 1 },
+            AggregationMode::CoordinateMedian,
+            AggregationMode::ClipByNorm { max_norm: 0.5 },
+        ] {
+            let combiner = RobustCombiner::new(mode, &batch);
+            let mut whole = vec![0.0; 5];
+            combiner.combine_range(&batch, 0, &mut whole);
+            let mut split = vec![0.0; 5];
+            let (head, tail) = split.split_at_mut(2);
+            combiner.combine_range(&batch, 0, head);
+            combiner.combine_range(&batch, 2, tail);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&whole), bits(&split), "{}", mode.name());
+        }
+    }
+}

@@ -98,30 +98,7 @@ impl ShardedAccumulator {
     /// message panics descriptively with the accumulator untouched.
     pub fn merge(&mut self, batch: &[(GradView<'_>, u64)]) {
         let dim = self.sum.len();
-        for (view, _) in batch {
-            match view {
-                GradView::Dense(g) => {
-                    assert_eq!(g.len(), dim, "gradient dim mismatch");
-                }
-                GradView::Sparse(entries) => {
-                    let mut prev: Option<u32> = None;
-                    for &(i, _) in *entries {
-                        if i as usize >= dim {
-                            panic!("sparse gradient index {i} out of bounds for dim {dim}");
-                        }
-                        if let Some(p) = prev {
-                            if i <= p {
-                                panic!(
-                                    "sparse gradient entries not sorted by index \
-                                     ({i} after {p})"
-                                );
-                            }
-                        }
-                        prev = Some(i);
-                    }
-                }
-            }
-        }
+        validate_batch(dim, batch);
         for &(_, examples) in batch {
             self.count += examples;
             self.contributions += 1;
@@ -181,6 +158,87 @@ impl ShardedAccumulator {
         self.sum.fill(0.0);
         self.count = 0;
         self.contributions = 0;
+    }
+
+    /// Robust aggregation over the same shard layout as [`merge`]
+    /// (`params::AggregationMode` — trimmed mean / coordinate median /
+    /// clip-by-norm): each shard combines its parameter range on its own
+    /// thread, writing the step gradient straight into `out`.  Unlike
+    /// `merge` this reads per-row views directly (robust estimators need
+    /// every worker's value per coordinate, not just the running sum), so
+    /// the arena's `sum`/`count` state is untouched.
+    ///
+    /// Bitwise-identical to the serial `RobustCombiner` reference for any
+    /// shard count — per-coordinate work is independent of the shard that
+    /// runs it (pinned in `tests/prop_reduce.rs`).
+    ///
+    /// [`merge`]: Self::merge
+    pub fn robust_aggregate_into(
+        &self,
+        mode: super::AggregationMode,
+        batch: &[(GradView<'_>, u64)],
+        out: &mut [f32],
+    ) {
+        let dim = self.sum.len();
+        assert_eq!(out.len(), dim, "output dim mismatch");
+        validate_batch(dim, batch);
+        if dim == 0 {
+            return;
+        }
+        let combiner = super::RobustCombiner::new(mode, batch);
+        if self.n_shards() == 1 {
+            combiner.combine_range(batch, 0, out);
+            return;
+        }
+        let mut slices: Vec<(usize, &mut [f32])> = Vec::with_capacity(self.n_shards());
+        let mut rest: &mut [f32] = out;
+        let mut start = 0;
+        for w in self.bounds.windows(2) {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(w[1] - w[0]);
+            slices.push((start, head));
+            rest = tail;
+            start = w[1];
+        }
+        let combiner = &combiner;
+        std::thread::scope(|scope| {
+            let mut it = slices.into_iter();
+            let first = it.next().expect("at least one shard");
+            for (lo, slice) in it {
+                scope.spawn(move || combiner.combine_range(batch, lo, slice));
+            }
+            combiner.combine_range(batch, first.0, first.1);
+        });
+    }
+}
+
+/// Shared payload validation: all submissions are checked *before* any
+/// merge or combine work starts (dense dimension, sparse index bounds and
+/// sortedness), so a corrupt message panics descriptively with the
+/// accumulator untouched.
+fn validate_batch(dim: usize, batch: &[(GradView<'_>, u64)]) {
+    for (view, _) in batch {
+        match view {
+            GradView::Dense(g) => {
+                assert_eq!(g.len(), dim, "gradient dim mismatch");
+            }
+            GradView::Sparse(entries) => {
+                let mut prev: Option<u32> = None;
+                for &(i, _) in *entries {
+                    if i as usize >= dim {
+                        panic!("sparse gradient index {i} out of bounds for dim {dim}");
+                    }
+                    if let Some(p) = prev {
+                        if i <= p {
+                            panic!(
+                                "sparse gradient entries not sorted by index \
+                                 ({i} after {p})"
+                            );
+                        }
+                    }
+                    prev = Some(i);
+                }
+            }
+        }
     }
 }
 

@@ -8,6 +8,7 @@ use crate::allocation::WorkerId;
 use crate::client::{ClientState, DeviceClass, SimClient};
 use crate::coordinator::{Master, MasterConfig, MasterState, Payload, ReducePolicy, Submission};
 use crate::data::{DataServer, SharedSample, SynthSpec, Synthesizer};
+use crate::faults::{FaultPlan, FaultProfile};
 use crate::model::ModelSpec;
 use crate::rng::Pcg32;
 use crate::runtime::{BatchBuilder, Compute};
@@ -48,6 +49,9 @@ pub struct SimConfig {
     pub seed: u64,
     /// Scripted churn: iteration → events applied at its start.
     pub churn: BTreeMap<u64, Vec<ChurnEvent>>,
+    /// Fault-injection profile, compiled against `seed` into a
+    /// [`FaultPlan`] (inert by default — see `faults::FaultProfile`).
+    pub faults: FaultProfile,
 }
 
 impl SimConfig {
@@ -70,6 +74,7 @@ impl SimConfig {
             cache_budget: 100 << 20,
             seed: 1,
             churn: BTreeMap::new(),
+            faults: FaultProfile::none(),
         }
     }
 }
@@ -102,6 +107,9 @@ pub struct Simulation<'c> {
     batch: BatchBuilder,
     rng: Pcg32,
     next_worker_id: WorkerId,
+    /// Fault schedule compiled from `cfg.faults` against `cfg.seed` —
+    /// stateless, so capture/restore needs no extra fields.
+    faults: FaultPlan,
     /// Trace plane (off by default); client-side compute/upload spans are
     /// emitted here, master-side spans by the master itself.
     trace: TraceHandle,
@@ -139,7 +147,9 @@ impl<'c> Simulation<'c> {
         master.register_data(cfg.train_size);
 
         let batch = BatchBuilder::new(spec.batch_size, spec.input_len());
+        let faults = FaultPlan::new(cfg.faults.clone(), cfg.seed);
         let mut sim = Self {
+            faults,
             cfg,
             spec,
             compute,
@@ -163,6 +173,12 @@ impl<'c> Simulation<'c> {
 
     pub fn master(&self) -> &Master {
         &self.master
+    }
+
+    /// The compiled fault schedule (tests pin its digest for equal-seed
+    /// determinism).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.faults
     }
 
     /// Attach a trace handle for this run; `pid` names the project on the
@@ -305,9 +321,15 @@ impl<'c> Simulation<'c> {
         }
 
         // -- step a: background data downloads (one iteration's worth of
-        //    XHR at each client's downlink rate)
+        //    XHR at each client's downlink rate).  A storm-disconnected
+        //    client does nothing this iteration — no downloads, no
+        //    training, no upload; it reappears when the burst ends.
         let iter_ms = self.master.iter_ms();
+        let mut disconnected = 0u64;
         for (id, client) in self.clients.iter_mut() {
+            if self.faults.disconnected(*id, iter) {
+                continue;
+            }
             let budget = (client.link.bandwidth_bytes_per_ms() * iter_ms) as u64;
             let (got, _bytes) = client.download_step(&self.server, budget);
             for data_id in got {
@@ -323,11 +345,30 @@ impl<'c> Simulation<'c> {
         let params = self.master.params();
         let policy = self.master.config().policy;
         let mut submissions = Vec::with_capacity(self.clients.len());
+        let (mut corrupted, mut dropped, mut duplicated, mut slowed) = (0u64, 0u64, 0u64, 0u64);
         for (id, client) in self.clients.iter_mut() {
+            if self.faults.disconnected(*id, iter) {
+                disconnected += 1;
+                continue;
+            }
             let budget_ms = self.master.work_budget_ms(*id);
-            let Some(out) = client.train(self.compute, &self.spec, params, budget_ms)? else {
+            let Some(mut out) = client.train(self.compute, &self.spec, params, budget_ms)?
+            else {
                 continue;
             };
+            // Straggler injection: same work, stretched wall time (a
+            // backgrounded tab / thermally throttled device) — the barrier
+            // and the latency monitor see the overrun.
+            let slowdown = self.faults.slowdown_for(client.profile.class, *id);
+            if slowdown > 1.0 {
+                out.compute_ms *= slowdown;
+                slowed += 1;
+            }
+            // Hostile-gradient injection, before the payload is built so
+            // sparsification carries the corrupted coordinates too.
+            if self.faults.corrupt(&mut out.grad_sum, *id) {
+                corrupted += 1;
+            }
             let payload = match policy {
                 ReducePolicy::PartialSync { keep_fraction } => {
                     Payload::sparsify(&out.grad_sum, keep_fraction)
@@ -335,8 +376,16 @@ impl<'c> Simulation<'c> {
                 _ => Payload::dense(out.grad_sum),
             };
             let bytes = payload.bytes() + 96; // envelope: ids, counts, framing
-            let uplink = client.link.sample_latency_ms(&mut client.rng)
-                + client.link.transmit_ms(bytes);
+            // Upload with fault-plane drop + retry/backoff: give up once a
+            // resend would start beyond the next iteration boundary (the
+            // submission is lost; quorum/carryover absorb the gap).
+            let deadline_ms = out.compute_ms + 2.0 * iter_ms;
+            let Some(uplink) =
+                client.upload_ms(bytes, out.compute_ms, deadline_ms, &self.faults, iter)
+            else {
+                dropped += 1;
+                continue;
+            };
             if self.trace.is_on() {
                 let t0 = self.master.now_ms();
                 let track = Track::worker(self.trace_pid, *id as u32);
@@ -360,6 +409,11 @@ impl<'c> Simulation<'c> {
                     &[("bytes", ArgValue::U64(bytes))],
                 );
             }
+            // Duplicate delivery: the same payload arrives again on its
+            // own jitter draw (dense payloads share the Arc).  The
+            // master's sanitation gate keeps exactly one.
+            let dup = self.faults.duplicated(*id, iter);
+            let dup_payload = dup.then(|| payload.clone());
             submissions.push(Submission {
                 worker: *id,
                 payload,
@@ -369,10 +423,49 @@ impl<'c> Simulation<'c> {
                 send_offset_ms: out.compute_ms + uplink,
                 bytes,
             });
+            if let Some(payload) = dup_payload {
+                duplicated += 1;
+                let extra = client.link.sample_latency_ms(&mut client.rng)
+                    + client.link.transmit_ms(bytes);
+                submissions.push(Submission {
+                    worker: *id,
+                    payload,
+                    examples: out.examples,
+                    vectors: out.examples,
+                    loss_sum: out.loss_sum,
+                    send_offset_ms: out.compute_ms + extra,
+                    bytes,
+                });
+            }
+        }
+
+        if self.trace.is_on() && self.faults.is_active() {
+            self.trace.counter(
+                Track::master(self.trace_pid),
+                "train/faults-injected",
+                self.master.now_ms(),
+                &[
+                    ("disconnected", disconnected as f64),
+                    ("corrupted", corrupted as f64),
+                    ("dropped", dropped as f64),
+                    ("duplicated", duplicated as f64),
+                    ("stragglers", slowed as f64),
+                ],
+            );
         }
 
         // -- steps c/d/e at the master
         let outcome = self.master.finish_iteration(submissions);
+        for (w, delta) in &outcome.evicted {
+            // The master already reallocated the evicted worker's data;
+            // mirror it fleet-side like a forced tab close.
+            self.clients.remove(w);
+            for (aw, ids) in &delta.assigned {
+                if let Some(c) = self.clients.get_mut(aw) {
+                    c.assign(ids);
+                }
+            }
+        }
         for (w, delta) in &outcome.shed_deltas {
             if let Some(c) = self.clients.get_mut(w) {
                 for (dw, ids) in &delta.revoked {
@@ -621,5 +714,43 @@ mod tests {
         };
         assert_eq!(run(7), run(7));
         assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn hostile_nan_worker_is_quarantined_and_evicted_mid_sim() {
+        // Seed 1 at fraction 0.5 over workers 1..=4 marks worker 1
+        // hostile (pinned in faults::tests).  Its NaN uploads must never
+        // reach the parameters, and three strikes must remove it from the
+        // fleet with its data reallocated.
+        let spec = toy_spec(16);
+        let mut cfg = base_cfg(4, &spec);
+        cfg.iterations = 6;
+        cfg.seed = 1;
+        cfg.faults = FaultProfile::parse("hostile:0.5:nan").unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        sim.run().unwrap();
+        assert!(sim.master().params().iter().all(|p| p.is_finite()));
+        assert!(sim.n_clients() < 4, "adversary was never evicted");
+        sim.master().allocator().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn storm_profile_completes_with_invariants_and_fault_counters() {
+        let spec = toy_spec(16);
+        let mut cfg = base_cfg(4, &spec);
+        cfg.iterations = 12; // crosses the storm window at iteration 8
+        cfg.faults = FaultProfile::parse("storm").unwrap();
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec, &mut compute);
+        let trace = TraceHandle::recording();
+        sim.set_trace(trace.clone(), 1);
+        let report = sim.run().unwrap();
+        assert_eq!(report.timeline.len(), 12);
+        assert!(sim.master().params().iter().all(|p| p.is_finite()));
+        sim.master().allocator().check_invariants().unwrap();
+        let evs = trace.snapshot();
+        assert!(evs.iter().any(|e| e.name == "train/faults-injected"));
+        assert!(evs.iter().any(|e| e.name == "train/quarantined"));
     }
 }

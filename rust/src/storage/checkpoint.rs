@@ -28,7 +28,8 @@ use super::frame::{frame, read_frame, ByteReader, ByteWriter, FrameRead, Result,
 use super::wal::RunIdentity;
 
 pub const CKPT_MAGIC: &[u8; 4] = b"MLCK";
-pub const CKPT_VERSION: u32 = 1;
+/// v2: master frame carries sanitation strike counters (robustness plane).
+pub const CKPT_VERSION: u32 = 2;
 /// magic + version + seed + config_digest + iteration
 const HEADER_LEN: usize = 4 + 4 + 8 + 8 + 8;
 
@@ -173,6 +174,11 @@ fn encode_master(w: &mut ByteWriter, m: &MasterState) {
         encode_submission(w, s);
     }
     w.put_opt_f64(m.pending_test_error);
+    w.put_u32(m.strikes.len() as u32);
+    for &(worker, n) in &m.strikes {
+        w.put_u64(worker);
+        w.put_u32(n);
+    }
 }
 
 fn decode_master(r: &mut ByteReader<'_>) -> Result<MasterState> {
@@ -197,6 +203,12 @@ fn decode_master(r: &mut ByteReader<'_>) -> Result<MasterState> {
     for _ in 0..n {
         carryover.push(decode_submission(r)?);
     }
+    let pending_test_error = r.get_opt_f64()?;
+    let n = r.get_u32()?;
+    let mut strikes = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        strikes.push((r.get_u64()?, r.get_u32()?));
+    }
     Ok(MasterState {
         iteration,
         t_virtual_ms,
@@ -207,7 +219,8 @@ fn decode_master(r: &mut ByteReader<'_>) -> Result<MasterState> {
         latency,
         timeline,
         carryover,
-        pending_test_error: r.get_opt_f64()?,
+        pending_test_error,
+        strikes,
     })
 }
 
@@ -505,6 +518,7 @@ mod tests {
                     },
                 ],
                 pending_test_error: Some(0.87),
+                strikes: vec![(3, 2)],
             },
             clients: vec![ClientState {
                 id: 1,
@@ -567,6 +581,7 @@ mod tests {
                 timeline: vec![],
                 carryover: vec![],
                 pending_test_error: None,
+                strikes: vec![],
             },
             clients: vec![],
             next_worker_id: 1,

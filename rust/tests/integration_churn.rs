@@ -1,0 +1,228 @@
+//! Fleet-churn and robustness integration drills (paper §3.2/§3.3b plus
+//! the fault-injection plane): clients join and leave while training
+//! runs, storms disconnect half the fleet, adversaries upload poison —
+//! and the allocation invariants, quorum barrier and robust aggregation
+//! must hold through all of it.  Promoted from `examples/churn.rs` so CI
+//! actually executes the schedules instead of shipping them as prose.
+
+use mlitb::client::DeviceClass;
+use mlitb::faults::FaultProfile;
+use mlitb::model::{ModelSpec, TensorSpec};
+use mlitb::params::{AggregationMode, OptimizerKind};
+use mlitb::runtime::{DriftingCompute, ModeledCompute};
+use mlitb::sim::{ChurnEvent, SimConfig, Simulation};
+
+fn toy_spec(param_count: usize) -> ModelSpec {
+    ModelSpec {
+        name: "toy".into(),
+        param_count,
+        batch_size: 16,
+        micro_batches: vec![16],
+        input: vec![28, 28, 1],
+        classes: 10,
+        tensors: vec![TensorSpec {
+            name: "w".into(),
+            shape: vec![param_count],
+            offset: 0,
+            size: param_count,
+            fan_in: 4,
+        }],
+        artifacts: Default::default(),
+    }
+}
+
+fn base_cfg(n: usize, spec: &ModelSpec) -> SimConfig {
+    let mut cfg = SimConfig::paper_scaling(n, spec);
+    cfg.train_size = 800;
+    cfg.test_size = 64;
+    cfg.iterations = 8;
+    cfg.master.capacity = 200;
+    cfg
+}
+
+/// Step the sim to completion, checking the allocation invariants and
+/// the no-data-loss identity after *every* iteration (not just at the
+/// end — a transient violation mid-churn must fail the run).
+fn run_checked(sim: &mut Simulation<'_>, iterations: u64) {
+    for i in 0..iterations {
+        sim.step().unwrap();
+        let alloc = sim.master().allocator();
+        alloc
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("iteration {i}: {e}"));
+        assert_eq!(
+            alloc.allocated_count() + alloc.unallocated().len(),
+            alloc.total_data(),
+            "iteration {i}: data ids lost or duplicated across churn"
+        );
+    }
+}
+
+#[test]
+fn scripted_churn_preserves_allocation_invariants() {
+    // The example's schedule: phones join at 4 and 8, a workstation dies
+    // at 12, two more devices join at 16 — 24 iterations of churn with
+    // the pie-cutter reacting each time.
+    let spec = toy_spec(8);
+    let mut cfg = base_cfg(2, &spec);
+    cfg.train_size = 2_000;
+    cfg.iterations = 24;
+    cfg.master.capacity = 600;
+    cfg.seed = 3;
+    cfg.churn.insert(4, vec![ChurnEvent::Join(DeviceClass::Mobile)]);
+    cfg.churn.insert(8, vec![ChurnEvent::Join(DeviceClass::Mobile)]);
+    cfg.churn.insert(12, vec![ChurnEvent::Leave(1)]);
+    cfg.churn.insert(
+        16,
+        vec![
+            ChurnEvent::Join(DeviceClass::Laptop),
+            ChurnEvent::Join(DeviceClass::Workstation),
+        ],
+    );
+    let mut compute = ModeledCompute { param_count: 8 };
+    let mut sim = Simulation::new(cfg, spec, &mut compute);
+    assert_eq!(sim.n_clients(), 2);
+    run_checked(&mut sim, 24);
+    // 2 start + 2 phones − 1 dead + 2 late joiners.
+    assert_eq!(sim.n_clients(), 5);
+    assert_eq!(sim.master().timeline().len(), 24);
+    // The dead workstation's shard was redistributed, not dropped.
+    assert!(sim.master().allocator().transfer_count() > 0);
+}
+
+#[test]
+fn storm_profile_with_churn_completes_and_keeps_data() {
+    // Correlated disconnect storms on top of scripted churn: workers that
+    // are down contribute nothing for the burst, but their data ownership
+    // (and the fleet bookkeeping) must survive untouched.
+    let spec = toy_spec(8);
+    let mut cfg = base_cfg(6, &spec);
+    cfg.iterations = 18; // crosses storms at 8..10 and 16..18
+    cfg.seed = 2;
+    cfg.faults = FaultProfile::parse("storm").unwrap();
+    cfg.churn.insert(5, vec![ChurnEvent::Join(DeviceClass::Laptop)]);
+    cfg.churn.insert(11, vec![ChurnEvent::Leave(2)]);
+    let mut compute = DriftingCompute { param_count: 8 };
+    let mut sim = Simulation::new(cfg, spec, &mut compute);
+    run_checked(&mut sim, 18);
+    assert_eq!(sim.master().timeline().len(), 18);
+    assert!(sim.master().params().iter().all(|p| p.is_finite()));
+    // Honest-but-flaky fleet: nobody gets evicted, training progresses.
+    assert_eq!(sim.n_clients(), 6);
+}
+
+#[test]
+fn quorum_beats_strict_sync_under_stragglers() {
+    // flaky @ seed 2 makes workers {1, 6} of the 6-worker fleet 3×
+    // stragglers (pinned by the seeded plan).  Strict sync waits for
+    // them every iteration; quorum 0.5 closes the barrier at the 3rd
+    // completion and carries the stragglers over — same schedules, same
+    // fleet, strictly less virtual wall time.
+    let spec = toy_spec(8);
+    let run = |quorum: f64| {
+        let mut cfg = base_cfg(6, &spec);
+        cfg.seed = 2;
+        cfg.faults = FaultProfile::parse("flaky").unwrap();
+        cfg.master.quorum = quorum;
+        let mut compute = ModeledCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec.clone(), &mut compute);
+        let report = sim.run().unwrap();
+        sim.master().allocator().check_invariants().unwrap();
+        report
+    };
+    let strict = run(0.0);
+    let quorum = run(0.5);
+    assert_eq!(strict.timeline.len(), 8);
+    assert_eq!(quorum.timeline.len(), 8);
+    assert!(
+        quorum.virtual_secs < strict.virtual_secs,
+        "quorum 0.5 must release the barrier early: {:.1}s !< {:.1}s",
+        quorum.virtual_secs,
+        strict.virtual_secs
+    );
+}
+
+/// One attack run: 10 workstations, seed 1 (adversaries pinned to
+/// workers {1, 6, 7} — exactly 3 of 10), SGD so the trajectory algebra
+/// is transparent.  Returns the final test error.
+fn attack_run(profile: &str, aggregation: AggregationMode) -> f64 {
+    let spec = toy_spec(8);
+    let mut cfg = base_cfg(10, &spec);
+    cfg.iterations = 20;
+    cfg.seed = 1;
+    cfg.master.optimizer = OptimizerKind::Sgd;
+    cfg.master.learning_rate = 0.1;
+    cfg.master.aggregation = aggregation;
+    cfg.faults = FaultProfile::parse(profile).unwrap();
+    let mut compute = DriftingCompute { param_count: 8 };
+    let mut sim = Simulation::new(cfg, spec, &mut compute);
+    for _ in 0..20 {
+        sim.step().unwrap();
+    }
+    sim.master().allocator().check_invariants().unwrap();
+    sim.evaluate_test_error().unwrap()
+}
+
+#[test]
+fn robust_aggregation_survives_a_30_percent_hostile_fleet() {
+    // The paper's Fig-5-style headline for this PR: 3 of 10 workers
+    // upload gradients scaled by −8.  Under the paper's plain mean the
+    // effective step gradient flips sign (×−1.7) and training diverges;
+    // trimmed mean (k = 3) and coordinate-median discard the poison per
+    // coordinate and track the clean trajectory.
+    let clean = attack_run("none", AggregationMode::Mean);
+    let mean_attacked = attack_run("hostile:0.3:scaled:-8", AggregationMode::Mean);
+    let trimmed = attack_run("hostile:0.3:scaled:-8", AggregationMode::TrimmedMean { k: 3 });
+    let median = attack_run("hostile:0.3:scaled:-8", AggregationMode::CoordinateMedian);
+
+    assert!(clean < 0.2, "clean baseline failed to converge: {clean}");
+    assert!(
+        mean_attacked > 0.6,
+        "mean under attack should diverge: {mean_attacked}"
+    );
+    // Honest workers all see the same broadcast parameters, so trimming
+    // the 3 poisoned rows recovers the clean per-coordinate gradient
+    // (up to f32 rounding in a different summation order).
+    assert!(
+        (trimmed - clean).abs() < 0.02,
+        "trimmed mean should track clean: {trimmed} vs {clean}"
+    );
+    assert!(
+        (median - clean).abs() < 0.02,
+        "median should track clean: {median} vs {clean}"
+    );
+}
+
+#[test]
+fn equal_seeds_mean_identical_fault_plans_and_parameters() {
+    // The determinism acceptance gate: the fault plan is a pure function
+    // of (profile, seed), and the whole attacked run — injection,
+    // quarantine, aggregation — replays bit-for-bit under an equal seed.
+    let spec = toy_spec(8);
+    let run = |seed: u64| {
+        let mut cfg = base_cfg(10, &spec);
+        cfg.iterations = 10;
+        cfg.seed = seed;
+        cfg.master.optimizer = OptimizerKind::Sgd;
+        cfg.master.learning_rate = 0.1;
+        cfg.master.aggregation = AggregationMode::TrimmedMean { k: 3 };
+        cfg.faults = FaultProfile::parse("hostile:0.3:scaled:-8").unwrap();
+        let mut compute = DriftingCompute { param_count: 8 };
+        let mut sim = Simulation::new(cfg, spec.clone(), &mut compute);
+        let workers: Vec<u64> = (1..=10).collect();
+        let plan_digest = sim.fault_plan().digest(&workers, 10);
+        for _ in 0..10 {
+            sim.step().unwrap();
+        }
+        let bits: Vec<u32> = sim.master().params().iter().map(|p| p.to_bits()).collect();
+        (plan_digest, bits)
+    };
+    let (plan_a, params_a) = run(1);
+    let (plan_b, params_b) = run(1);
+    assert_eq!(plan_a, plan_b, "equal seed must mean an equal fault plan");
+    assert_eq!(params_a, params_b, "equal seed must mean identical params");
+    // Seed 2 draws a different adversary set ({8} vs {1, 6, 7}), so the
+    // plan digest — and with it the trajectory — must move.
+    let (plan_c, _) = run(2);
+    assert_ne!(plan_a, plan_c, "different seeds must diverge the plan");
+}

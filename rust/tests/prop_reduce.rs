@@ -4,7 +4,9 @@
 //! the multi-threaded reduce a pure perf change (DESIGN.md).
 
 use mlitb::coordinator::Payload;
-use mlitb::params::{GradAccumulator, GradView, ShardedAccumulator};
+use mlitb::params::{
+    AggregationMode, GradAccumulator, GradView, RobustCombiner, ShardedAccumulator,
+};
 use mlitb::rng::Pcg32;
 use mlitb::testing::{check, gen};
 
@@ -157,6 +159,11 @@ fn non_dividing_shard_counts_cover_every_parameter() {
 fn nan_gradients_flow_through_sparsify_and_merge_without_panicking() {
     // A diverged worker (NaN coordinates) must not kill the reduce path:
     // sparsify selects without panicking and the merge propagates the NaN.
+    // This pins the *raw accumulator* behavior — the master never lets a
+    // non-finite payload reach it (the sanitation gate quarantines the
+    // submission and strikes the worker before the merge; see
+    // coordinator::master and DESIGN.md "Robustness"), so NaN surfacing
+    // here is the substrate contract, not the production outcome.
     let mut g = vec![0.5f32; 64];
     g[7] = f32::NAN;
     g[33] = f32::INFINITY;
@@ -168,5 +175,58 @@ fn nan_gradients_flow_through_sparsify_and_merge_without_panicking() {
     let mut acc = ShardedAccumulator::new(64, 4);
     acc.merge(&[(payload.as_view(), 1)]);
     let avg = acc.weighted_average();
-    assert!(avg[7].is_nan(), "NaN must surface at the master");
+    assert!(avg[7].is_nan(), "NaN must surface at the raw accumulator");
+}
+
+#[test]
+fn robust_aggregation_is_bitwise_identical_across_shard_counts() {
+    // The robust estimators must be a pure perf change too: for any mode,
+    // shard count, payload mix and dimension, the sharded per-range
+    // combination equals the serial single-range reference bit for bit.
+    check("robust sharded/serial equivalence", |rng| {
+        let dim = gen::usize_in(rng, 1, 200);
+        let n = gen::usize_in(rng, 1, 6);
+        let subs = gen_submissions(rng, dim, n);
+        let keep = 0.05 + 0.9 * rng.gen_f64();
+        let payloads: Vec<Payload> = subs
+            .iter()
+            .enumerate()
+            .map(|(i, (g, _))| {
+                // Mix dense and top-k sparse rows in one batch.
+                if i % 2 == 0 {
+                    Payload::dense(g.clone())
+                } else {
+                    Payload::sparsify(g, keep)
+                }
+            })
+            .collect();
+        let batch: Vec<(GradView<'_>, u64)> = payloads
+            .iter()
+            .zip(&subs)
+            .map(|(p, (_, examples))| (p.as_view(), *examples))
+            .collect();
+
+        let modes = [
+            AggregationMode::TrimmedMean { k: 1 },
+            AggregationMode::CoordinateMedian,
+            AggregationMode::ClipByNorm { max_norm: 0.75 },
+        ];
+        for mode in modes {
+            let mut want = vec![0.0f32; dim];
+            RobustCombiner::new(mode, &batch).combine_range(&batch, 0, &mut want);
+            for shards in [1usize, 2, 4, 7] {
+                let acc = ShardedAccumulator::new(dim, shards);
+                let mut got = vec![0.0f32; dim];
+                acc.robust_aggregate_into(mode, &batch, &mut got);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                if bits(&got) != bits(&want) {
+                    return Err(format!(
+                        "{} S={shards} differs from serial (dim={dim}, n={n})",
+                        mode.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
